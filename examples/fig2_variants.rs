@@ -1,0 +1,175 @@
+//! Figure 2 reproduction: EER vs training iteration for the six
+//! extractor variants (standard ±min-div ±Σ-update; augmented
+//! ±Σ-update), each averaged over random restarts.
+//!
+//!     cargo run --release --example fig2_variants -- \
+//!         [--seeds N] [--iters N] [--eval-every N] [--full] [--long]
+//!
+//! Defaults are budget-scaled (3 seeds × 14 iters, eval every 2);
+//! `--full` matches the paper protocol shape (5 seeds × 25 iters,
+//! eval every iteration); `--long` adds the 200-iteration single-run
+//! convergence check of §4.3.
+
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::ensemble::{mean_curve, run_curve_shared, SharedAlignment};
+use ivector_tv::coordinator::{align_archive_cpu, run_alignment, stats_from_posts, ComputePath, TrainSetup};
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::train_ubm;
+use ivector_tv::ivector::{AccelTvm, TrainVariant};
+use ivector_tv::metrics::Stopwatch;
+
+fn arg(name: &str, default: usize) -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == name)
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let long = std::env::args().any(|a| a == "--long");
+    let seeds = arg("--seeds", if full { 5 } else { 3 });
+    let iters = arg("--iters", if full { 25 } else { 14 });
+    let eval_every = arg("--eval-every", if full { 1 } else { 2 });
+
+    let mut cfg = Config::default_scaled();
+    if !full {
+        // budget-scaled corpus (single-core testbed)
+        cfg.corpus.n_train_speakers = 100;
+        cfg.corpus.utts_per_train_speaker = 8;
+        cfg.corpus.n_eval_speakers = 30;
+        cfg.corpus.utts_per_eval_speaker = 6;
+    }
+    println!("== Fig. 2: variant comparison ({seeds} seeds × {iters} iters, eval every {eval_every}) ==");
+
+    let sw = Stopwatch::start();
+    let corpus = generate_corpus(&cfg.corpus)?;
+    let (ubm, _) = train_ubm(&corpus.train, &cfg.ubm, cfg.corpus.seed)?;
+    println!("setup: corpus + UBM in {:.0}s", sw.elapsed_s());
+
+    let mut accel = AccelTvm::new("artifacts")?.with_alignment()?;
+
+    // fig2 never realigns, so one alignment round serves all runs
+    let sw = Stopwatch::start();
+    let shared = {
+        let setup = TrainSetup {
+            cfg: &cfg,
+            feats: &corpus.train,
+            diag: ubm.diag.clone(),
+            full: ubm.full.clone(),
+        };
+        let train_stats = run_alignment(&setup, ComputePath::Accel, Some(&accel), 1)?;
+        let stats_of = |arch: &ivector_tv::io::FeatArchive| {
+            let posts = align_archive_cpu(&ubm.diag, &ubm.full, arch, cfg.tvm.top_k, cfg.tvm.min_post, 1);
+            stats_from_posts(arch, &posts, cfg.ubm.components, 1).0
+        };
+        SharedAlignment {
+            train_stats,
+            harness_stats: (stats_of(&corpus.train), stats_of(&corpus.eval)),
+        }
+    };
+    println!("shared alignment in {:.0}s", sw.elapsed_s());
+    let mut results: Vec<(String, Vec<f64>)> = Vec::new();
+
+    for (label, variant) in TrainVariant::fig2_set() {
+        let sw = Stopwatch::start();
+        let mut curves = Vec::new();
+        for seed in 0..seeds as u64 {
+            let (_m, curve) = run_curve_shared(
+                &cfg,
+                &corpus.train,
+                &corpus.eval,
+                &ubm.diag,
+                &ubm.full,
+                variant,
+                iters,
+                1000 + seed,
+                eval_every,
+                ComputePath::Accel,
+                Some(&mut accel),
+                Some(&shared),
+            )?;
+            curves.push(curve);
+        }
+        let mean = mean_curve(&curves);
+        println!(
+            "{label:<24} final EER {:.2}%  best {:.2}%  ({:.0}s)",
+            mean.last().copied().unwrap_or(f64::NAN),
+            mean.iter().cloned().fold(f64::INFINITY, f64::min),
+            sw.elapsed_s()
+        );
+        results.push((label, mean));
+    }
+
+    // the figure: one row per evaluated iteration, one column per variant
+    println!("\n-- Fig. 2 series (EER %, mean of {seeds} seeds; rows = evaluated iterations) --");
+    print!("{:>6}", "iter");
+    for (label, _) in &results {
+        print!(" {:>22}", label);
+    }
+    println!();
+    let n_points = results.iter().map(|(_, m)| m.len()).min().unwrap_or(0);
+    for k in 0..n_points {
+        print!("{:>6}", (k + 1) * eval_every);
+        for (_, mean) in &results {
+            print!(" {:>22.2}", mean[k]);
+        }
+        println!();
+    }
+
+    // paper's qualitative claims, asserted on our data
+    let final_of = |id: &str| {
+        results
+            .iter()
+            .find(|(l, _)| l == id)
+            .and_then(|(_, m)| m.last())
+            .copied()
+            .unwrap_or(f64::NAN)
+    };
+    let std_plain = final_of("standard");
+    let std_md = final_of("standard+mindiv");
+    let aug_sig = final_of("augmented+sigma");
+    println!("\nchecks vs paper §4.3:");
+    println!(
+        "  min-div helps (std {std_plain:.2}% -> {std_md:.2}%): {}",
+        if std_md < std_plain { "REPRODUCED" } else { "NOT REPRODUCED (noise?)" }
+    );
+    println!(
+        "  best variant is augmented+sigma ({aug_sig:.2}%): {}",
+        if results.iter().all(|(l, m)| l == "augmented+sigma" || m.last() >= Some(&aug_sig)) {
+            "REPRODUCED"
+        } else {
+            "PARTIAL (see table)"
+        }
+    );
+
+    if long {
+        println!("\n-- §4.3 long-run check: augmented+sigma, 1 seed, 200 iterations --");
+        let variant = TrainVariant {
+            formulation: ivector_tv::ivector::Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: true,
+            realign_every: None,
+        };
+        let (_m, curve) = run_curve_shared(
+            &cfg,
+            &corpus.train,
+            &corpus.eval,
+            &ubm.diag,
+            &ubm.full,
+            variant,
+            200,
+            7,
+            10,
+            ComputePath::Accel,
+            Some(&mut accel),
+            Some(&shared),
+        )?;
+        for (k, eer) in curve.eer_by_iter.iter().enumerate() {
+            println!("  iter {:>3}: EER {eer:.2}%", (k + 1) * 10);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! §4.2 speed table reproduction: real-time factors for frame
+//! alignment and i-vector extraction, plus the extractor-training
+//! speed-up of the accelerated path over the scalar CPU baseline
+//! (the paper: 3000× RT alignment, 10 000× RT extraction, 25×
+//! training speed-up of GPU over the 22-core Kaldi CPU baseline).
+//!
+//!     cargo run --release --example speed_report [-- --utts N]
+
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::{
+    align_archive_accel, align_archive_cpu, stats_from_posts, ComputePath, TrainSetup,
+};
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::train_ubm;
+use ivector_tv::ivector::{
+    estep_utterance, extract_cpu, AccelTvm, EstepAccum, Formulation, TrainVariant, TvModel,
+    UttStats,
+};
+use ivector_tv::metrics::{markdown_table, rt_factor, StageReport, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let n_utts: usize = argv
+        .iter()
+        .position(|a| a == "--utts")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = n_utts.div_ceil(8);
+    cfg.corpus.utts_per_train_speaker = 8;
+    println!("== §4.2 speed report ({n_utts} utts target) ==");
+
+    let corpus = generate_corpus(&cfg.corpus)?;
+    let train = &corpus.train;
+    let frames = train.total_frames();
+    println!("corpus: {} utts, {frames} frames (= {:.0}s of nominal audio)", train.utts.len(), frames as f64 * 0.01);
+    let (ubm, _) = train_ubm(train, &cfg.ubm, 1)?;
+    let mut accel = AccelTvm::new("artifacts")?.with_alignment()?;
+    let workers = ivector_tv::exec::default_workers();
+    let mut rows = Vec::new();
+
+    // ---- frame alignment (paper: 3000× RT on Titan V) ----
+    let sw = Stopwatch::start();
+    let posts_cpu =
+        align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers);
+    let cpu_s = sw.elapsed_s();
+    rows.push(StageReport::new("align (cpu-ref)", cpu_s, frames, "frames").with_rt(frames));
+
+    let sw = Stopwatch::start();
+    let _posts_dev = align_archive_accel(&accel, &ubm.diag, &ubm.full, train)?;
+    let dev_s = sw.elapsed_s();
+    rows.push(StageReport::new("align (accel)", dev_s, frames, "frames").with_rt(frames));
+    let align_speedup = cpu_s / dev_s;
+
+    // ---- stats + model ----
+    let (bw, _global) = stats_from_posts(train, &posts_cpu, cfg.ubm.components, workers);
+    let model = TvModel::init(Formulation::Augmented, &ubm.full, cfg.tvm.rank, 100.0, 3);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &model)).collect();
+
+    // ---- i-vector extraction (paper: 10 000× RT) ----
+    let sw = Stopwatch::start();
+    let _iv = extract_cpu(&model, &utts, workers);
+    let cpu_s = sw.elapsed_s();
+    rows.push(StageReport::new("extract (cpu-ref)", cpu_s, utts.len(), "utts").with_rt(frames));
+
+    accel.set_model(&model)?;
+    let sw = Stopwatch::start();
+    for chunk in utts.chunks(accel.dims.bu) {
+        let refs: Vec<&UttStats> = chunk.iter().collect();
+        let _ = accel.extract_batch(&refs, &model.prior_mean)?;
+    }
+    let dev_s = sw.elapsed_s();
+    rows.push(StageReport::new("extract (accel)", dev_s, utts.len(), "utts").with_rt(frames));
+    let extract_speedup = cpu_s / dev_s;
+
+    // ---- one full training E-step (the per-iteration hot loop;
+    //      paper: 25× training speed-up over the CPU baseline) ----
+    let sw = Stopwatch::start();
+    {
+        // scalar single-thread baseline — the honest "Kaldi CPU" analogue
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+        for s in &utts {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+    }
+    let scalar_s = sw.elapsed_s();
+    rows.push(StageReport::new("estep (cpu 1-thread)", scalar_s, utts.len(), "utts"));
+
+    let sw = Stopwatch::start();
+    {
+        let mut acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+        for chunk in utts.chunks(accel.dims.bu) {
+            let refs: Vec<&UttStats> = chunk.iter().collect();
+            let (a, _) = accel.estep_batch(&refs)?;
+            acc.merge(&a);
+        }
+    }
+    let accel_s = sw.elapsed_s();
+    rows.push(StageReport::new("estep (accel)", accel_s, utts.len(), "utts"));
+    let estep_speedup = scalar_s / accel_s;
+
+    // ---- one end-to-end training iteration both paths ----
+    let variant = TrainVariant {
+        formulation: Formulation::Augmented,
+        min_divergence: true,
+        sigma_update: true,
+        realign_every: None,
+    };
+    let mut t_cpu = TrainSetup { cfg: &cfg, feats: train, diag: ubm.diag.clone(), full: ubm.full.clone() };
+    let sw = Stopwatch::start();
+    ivector_tv::coordinator::train_tvm(&mut t_cpu, variant, 1, 3, ComputePath::CpuRef, None, &mut |_| None)?;
+    let iter_cpu = sw.elapsed_s();
+    rows.push(StageReport::new("train-iter (cpu multi-thread)", iter_cpu, 1, "iter"));
+
+    let mut t_dev = TrainSetup { cfg: &cfg, feats: train, diag: ubm.diag.clone(), full: ubm.full.clone() };
+    let sw = Stopwatch::start();
+    ivector_tv::coordinator::train_tvm(&mut t_dev, variant, 1, 3, ComputePath::Accel, Some(&mut accel), &mut |_| None)?;
+    let iter_dev = sw.elapsed_s();
+    rows.push(StageReport::new("train-iter (accel)", iter_dev, 1, "iter"));
+
+    println!("\n{}", markdown_table(&rows));
+    println!("| metric | paper (Titan V vs 22-core Xeon) | this testbed (XLA-CPU vs scalar rust) |");
+    println!("|---|---|---|");
+    println!(
+        "| alignment ×RT (accel) | ~3000× | {:.0}× |",
+        rt_factor(frames, rows[1].wall_s)
+    );
+    println!(
+        "| extraction ×RT (accel) | ~10000× | {:.0}× |",
+        rt_factor(frames, rows[3].wall_s)
+    );
+    println!("| align speed-up accel/cpu-ref | — | {align_speedup:.1}× |");
+    println!("| extract speed-up accel/cpu-ref | — | {extract_speedup:.1}× |");
+    println!("| E-step speed-up accel/scalar | 25× (training) | {estep_speedup:.1}× |");
+    println!("| full-iteration speed-up | 25× | {:.1}× |", iter_cpu / iter_dev);
+    Ok(())
+}

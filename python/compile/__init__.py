@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 jax graphs + L1 pallas kernels → HLO text.
+
+Never imported at runtime — the rust binary consumes only the emitted
+``artifacts/*.hlo.txt``.
+"""

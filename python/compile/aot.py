@@ -1,0 +1,98 @@
+"""AOT export: lower every L2 graph to HLO text under artifacts/.
+
+Run once via `make artifacts` (python never executes at runtime):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits HLO *text* per graph (jax ≥ 0.5 serialized protos carry 64-bit
+instruction ids that xla_extension 0.5.1 rejects; text re-parses
+cleanly) plus `manifest.toml` recording the static dims so the rust
+side can validate its config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .dims import DIMS, write_manifest
+from .hlo_export import export
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def graph_specs(d=DIMS):
+    """(name, builder(), example-arg specs) for every exported graph."""
+    return [
+        (
+            "align_topk",
+            model.build_align_topk(d.K, d.min_post),
+            (f32(d.BF, d.F), f32(d.C, 2 * d.F), f32(d.C), f32(d.C, d.Q), f32(d.C)),
+        ),
+        (
+            "precompute",
+            model.build_precompute(),
+            (f32(d.C, d.F, d.R), f32(d.C, d.F, d.F)),
+        ),
+        (
+            "estep",
+            model.build_estep(),
+            (
+                f32(d.BU, d.C),
+                f32(d.BU, d.C, d.F),
+                f32(d.BU),
+                f32(d.C, d.R, d.F),
+                f32(d.C, d.R, d.R),
+                f32(d.R),
+            ),
+        ),
+        (
+            "extract",
+            model.build_extract(),
+            (
+                f32(d.BU, d.C),
+                f32(d.BU, d.C, d.F),
+                f32(d.C, d.R, d.F),
+                f32(d.C, d.R, d.R),
+                f32(d.R),
+            ),
+        ),
+        (
+            "ubm_acc",
+            model.build_ubm_acc(),
+            (f32(d.BF, d.F), f32(d.BF), f32(d.C, d.Q), f32(d.C)),
+        ),
+        (
+            "plda_score",
+            model.build_plda_score(),
+            (f32(d.NE, d.D), f32(d.NT, d.D), f32(d.D, d.D), f32(d.D, d.D)),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="export a single graph by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, fn, specs in graph_specs():
+        if args.only and name != args.only:
+            continue
+        out = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = export(fn, specs, out)
+        print(f"  {name:<12} {len(text):>9} chars -> {out}")
+
+    write_manifest(DIMS, os.path.join(args.out_dir, "manifest.toml"))
+    print(f"  manifest     -> {os.path.join(args.out_dir, 'manifest.toml')}")
+
+
+if __name__ == "__main__":
+    main()

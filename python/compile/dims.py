@@ -1,0 +1,47 @@
+"""Canonical static shapes shared by the AOT graphs and the rust side.
+
+XLA executables are shape-specialized, so every graph is exported at
+these dimensions; the rust coordinator pads final partial batches and
+masks the padding. `write_manifest` records the dims next to the
+artifacts so the rust runtime can validate its config against them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    # model dims (DESIGN.md scaled recipe)
+    C: int = 64            # UBM components        (paper: 2048)
+    F: int = 24            # feature dim           (paper: 72)
+    R: int = 64            # i-vector dim          (paper: 400)
+    K: int = 20            # top-K gaussians       (paper: 20)
+    # batch shapes
+    BF: int = 4096         # frames per align/ubm_acc dispatch
+    BU: int = 64           # utterances per estep/extract dispatch
+    # scoring shapes
+    D: int = 32            # backend (post-LDA) dim (paper: 200)
+    NE: int = 256          # enroll vectors per plda_score dispatch
+    NT: int = 256          # test vectors per plda_score dispatch
+    # constants baked into graphs
+    min_post: float = 0.025
+
+    @property
+    def Q(self) -> int:
+        """Expanded quadratic-feature dim for full-cov loglikes."""
+        return self.F + self.F * self.F
+
+
+DIMS = Dims()
+
+
+def write_manifest(dims: Dims, path: str) -> None:
+    """TOML-subset manifest the rust Config can check at load time."""
+    lines = ["[dims]"] + [
+        f"{name} = {getattr(dims, name)}"
+        for name in ("C", "F", "R", "K", "BF", "BU", "D", "NE", "NT")
+    ] + [f"min_post = {dims.min_post}"]
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")

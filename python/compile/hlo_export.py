@@ -1,0 +1,30 @@
+"""Shared HLO-text export helper.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format with
+the rust side: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowered computation to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, out_path: str) -> str:
+    """jit + lower `fn` at `example_args` and write HLO text to `out_path`."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text

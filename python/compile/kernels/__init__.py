@@ -1,0 +1,19 @@
+"""L1 Pallas kernels — the hot spots inside the L2 graphs.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot run
+real-TPU Mosaic custom-calls, so interpret mode lowers them to plain HLO
+that any backend (including the rust-side CPU client) executes. The
+BlockSpec structure is still authored for TPU (VMEM-sized tiles hitting
+the MXU as matmuls) — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .loglikes import gmm_loglikes
+from .precision import precision_matrices
+from .chol import chol_solve, chol_solve_and_inverse
+
+__all__ = [
+    "gmm_loglikes",
+    "precision_matrices",
+    "chol_solve",
+    "chol_solve_and_inverse",
+]

@@ -1,0 +1,93 @@
+"""Batched Cholesky + solves in pure `lax` ops.
+
+jax's `jnp.linalg.{cholesky,solve}` lower to LAPACK custom-calls whose
+registration names differ between jax 0.8 and the xla_extension 0.5.1
+runtime behind the rust `xla` crate — they would fail to load. These
+hand-rolled versions lower to plain HLO (fori_loop + dynamic slicing)
+and round-trip cleanly. R ≤ 64 keeps the sequential factor loop cheap
+relative to the batched O(B·R²) work per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def batched_cholesky(a):
+    """Lower-triangular L with A = L Lᵀ for a batch of SPD matrices.
+
+    a: (..., R, R) — assumed symmetric positive definite (the E-step
+    precision L(u) = I + Σ n_c M_c always is).
+    """
+    r = a.shape[-1]
+
+    def body(j, l):
+        # pivot
+        d = jnp.sqrt(jnp.maximum(a[..., j, j] - jnp.sum(l[..., j, :] ** 2, axis=-1), 1e-20))
+        # column below the pivot: (A[:, j] - L @ L[j, :]) / d
+        col = (a[..., :, j] - jnp.einsum("...ik,...k->...i", l, l[..., j, :])) / d[..., None]
+        mask = (jnp.arange(r) > j).astype(a.dtype)
+        col = col * mask
+        l = l.at[..., :, j].set(col)
+        l = l.at[..., j, j].set(d)
+        return l
+
+    return lax.fori_loop(0, r, body, jnp.zeros_like(a))
+
+
+def forward_solve(l, b):
+    """Solve L y = b (lower-triangular), batched.
+
+    l: (..., R, R), b: (..., R, N) or (..., R). Returns same shape as b.
+    """
+    vec = b.ndim == l.ndim - 1
+    if vec:
+        b = b[..., None]
+    r = l.shape[-1]
+
+    def body(i, y):
+        # y[i] = (b[i] - L[i, :] @ y) / L[i, i]
+        acc = jnp.einsum("...k,...kn->...n", l[..., i, :], y)
+        yi = (b[..., i, :] - acc) / l[..., i, i][..., None]
+        return y.at[..., i, :].set(yi)
+
+    y = lax.fori_loop(0, r, body, jnp.zeros_like(b))
+    return y[..., 0] if vec else y
+
+
+def backward_solve(l, y):
+    """Solve Lᵀ x = y (upper-triangular via the lower factor), batched."""
+    vec = y.ndim == l.ndim - 1
+    if vec:
+        y = y[..., None]
+    r = l.shape[-1]
+
+    def body(k, x):
+        i = r - 1 - k
+        acc = jnp.einsum("...k,...kn->...n", l[..., :, i], x)
+        xi = (y[..., i, :] - acc) / l[..., i, i][..., None]
+        return x.at[..., i, :].set(xi)
+
+    x = lax.fori_loop(0, r, body, jnp.zeros_like(y))
+    return x[..., 0] if vec else x
+
+
+def chol_solve(a, b):
+    """x = A⁻¹ b for batched SPD A (via Cholesky)."""
+    l = batched_cholesky(a)
+    return backward_solve(l, forward_solve(l, b))
+
+
+def chol_solve_and_inverse(a, b):
+    """(A⁻¹ b, A⁻¹) for batched SPD A — the E-step needs both the
+    posterior mean φ = L(u)⁻¹ rhs and covariance Φ = L(u)⁻¹."""
+    r = a.shape[-1]
+    l = batched_cholesky(a)
+    x = backward_solve(l, forward_solve(l, b))
+    eye = jnp.broadcast_to(jnp.eye(r, dtype=a.dtype), a.shape)
+    inv = backward_solve(l, forward_solve(l, eye))
+    # symmetrize against fp accumulation drift
+    inv = 0.5 * (inv + jnp.swapaxes(inv, -1, -2))
+    return x, inv

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the L1 kernels and L2 graph pieces.
+
+Everything here is written in the most direct (unoptimized, obviously
+correct) form; pytest asserts the kernels and graphs against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gmm_loglikes_ref(q, w, const):
+    """Direct einsum version of the loglikes kernel."""
+    return jnp.einsum("bd,cd->bc", q, w) + const[None, :]
+
+
+def diag_loglikes_direct(x, means, variances, weights):
+    """Textbook diagonal GMM log w_c N(x | m_c, diag v_c) — numpy."""
+    x = np.asarray(x)
+    b, f = x.shape
+    c = means.shape[0]
+    out = np.zeros((b, c))
+    for ci in range(c):
+        d = x - means[ci]
+        out[:, ci] = (
+            np.log(weights[ci])
+            - 0.5 * (f * np.log(2 * np.pi)
+                     + np.sum(np.log(variances[ci]))
+                     + np.sum(d * d / variances[ci], axis=1))
+        )
+    return out
+
+
+def full_loglikes_direct(x, means, covs, weights):
+    """Textbook full-covariance GMM loglikes — numpy."""
+    x = np.asarray(x)
+    b, f = x.shape
+    c = means.shape[0]
+    out = np.zeros((b, c))
+    for ci in range(c):
+        d = x - means[ci]
+        inv = np.linalg.inv(covs[ci])
+        _, logdet = np.linalg.slogdet(covs[ci])
+        quad = np.einsum("bf,fg,bg->b", d, inv, d)
+        out[:, ci] = np.log(weights[ci]) - 0.5 * (f * np.log(2 * np.pi) + logdet + quad)
+    return out
+
+
+def precision_ref(n, tt_si_t):
+    """Direct version of the precision kernel."""
+    r = tt_si_t.shape[1]
+    return jnp.eye(r) + jnp.einsum("bc,crs->brs", n, tt_si_t)
+
+
+def estep_ref(n, f, t_mat, sigma_inv, prior_mean):
+    """Per-utterance E-step, fully direct (numpy):
+
+    L(u)  = I + Σ_c n_c TᵀΣ⁻¹T
+    φ(u)  = L⁻¹ (p + Σ_c TᵀΣ⁻¹ f_c)
+    Φ(u)  = L⁻¹
+
+    n: (B, C), f: (B, C, F), t_mat: (C, F, R), sigma_inv: (C, F, F),
+    prior_mean: (R,). Returns (phi (B,R), cov (B,R,R)).
+    """
+    n = np.asarray(n)
+    f = np.asarray(f)
+    b, c = n.shape
+    r = t_mat.shape[2]
+    tt_si = np.einsum("cfr,cfg->crg", t_mat, sigma_inv)   # TᵀΣ⁻¹ (C,R,F)
+    tt_si_t = np.einsum("crf,cfs->crs", tt_si, t_mat)     # TᵀΣ⁻¹T (C,R,R)
+    phi = np.zeros((b, r))
+    cov = np.zeros((b, r, r))
+    for u in range(b):
+        l_mat = np.eye(r) + np.einsum("c,crs->rs", n[u], tt_si_t)
+        rhs = prior_mean + np.einsum("crf,cf->r", tt_si, f[u])
+        cov[u] = np.linalg.inv(l_mat)
+        phi[u] = cov[u] @ rhs
+    return phi, cov
+
+
+def align_ref(x, diag_means, diag_vars, diag_weights,
+              full_means, full_covs, full_weights, k, min_post):
+    """Reference two-stage alignment (numpy): diag top-K → full-cov
+    refinement → softmax over selected → prune → renormalize.
+
+    Returns (posts (B, K), idx (B, K)): entries beyond the surviving
+    count are zero-posterior (idx still valid).
+    """
+    dll = diag_loglikes_direct(x, diag_means, diag_vars, diag_weights)
+    fll = full_loglikes_direct(x, full_means, full_covs, full_weights)
+    b = dll.shape[0]
+    posts = np.zeros((b, k), dtype=np.float32)
+    idx = np.zeros((b, k), dtype=np.int32)
+    for t in range(b):
+        sel = np.argsort(-dll[t])[:k]
+        ll = fll[t, sel]
+        p = np.exp(ll - ll.max())
+        p /= p.sum()
+        keep = p >= min_post
+        if not keep.any():
+            keep = p == p.max()
+        p = np.where(keep, p, 0.0)
+        p /= p.sum()
+        order = np.argsort(-p, kind="stable")
+        posts[t] = p[order]
+        idx[t] = sel[order]
+    return posts, idx
+
+
+def plda_score_ref(enroll, test, p_mat, q_mat):
+    """Two-covariance PLDA LLR reference:
+    score(e, t) = ½ eᵀQe + ½ tᵀQt + eᵀPt   (constants dropped —
+    detection metrics are threshold-invariant)."""
+    e_q = 0.5 * np.einsum("nd,de,ne->n", enroll, q_mat, enroll)
+    t_q = 0.5 * np.einsum("md,de,me->m", test, q_mat, test)
+    cross = enroll @ p_mat @ test.T
+    return e_q[:, None] + t_q[None, :] + cross

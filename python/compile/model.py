@@ -1,0 +1,181 @@
+"""L2 JAX compute graphs — the device side of the stack.
+
+Each builder returns a tuple-output jax function that `aot.py` lowers to
+HLO text at the static shapes in `dims.py`. Constraints imposed by the
+rust-side runtime (xla_extension 0.5.1):
+
+* no `lax.top_k` (lowers to an unsupported `topk` instruction) —
+  top-K is an iterative-argmax scan;
+* no `jnp.linalg.*` (LAPACK custom-calls) — Cholesky/solves come from
+  `kernels.chol` (pure lax);
+* f32/i32 IO only.
+
+Padding: batches are shape-specialized, so partial batches are padded
+and a `mask` input (1.0 for real rows) zeroes padded contributions to
+every accumulator output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import chol, loglikes, precision
+
+
+def manual_top_k(x, k):
+    """(values, indices) of the k largest entries per row.
+
+    Iterative argmax — `lax.top_k` emits a `topk` HLO instruction that
+    the 0.5.1 text parser rejects. k passes over a (B, C) array is
+    cheap for k=20, C=64 (and on TPU stays in VMEM).
+    """
+    b = x.shape[0]
+    rows = jnp.arange(b)
+
+    def body(cur, _):
+        idx = jnp.argmax(cur, axis=-1)
+        val = jnp.take_along_axis(cur, idx[:, None], axis=-1)[:, 0]
+        cur = cur.at[rows, idx].set(-jnp.inf)
+        return cur, (val, idx.astype(jnp.int32))
+
+    _, (vals, idx) = lax.scan(body, x, None, length=k)
+    return jnp.moveaxis(vals, 0, -1), jnp.moveaxis(idx, 0, -1)
+
+
+def build_align_topk(k: int, min_post: float):
+    """Frame alignment graph (paper §4.2, the 3000×-RT hot path).
+
+    inputs:  frames (BF, F), diag_w (C, 2F), diag_const (C,),
+             full_w (C, F+F²), full_const (C,)
+    outputs: posts (BF, K) f32, idx (BF, K) i32
+    """
+
+    def align(frames, diag_w, diag_const, full_w, full_const):
+        qd = loglikes.expand_diag(frames)
+        dll = loglikes.gmm_loglikes(qd, diag_w, diag_const)
+        _, idx = manual_top_k(dll, k)
+
+        qf = loglikes.expand_full(frames)
+        fll = loglikes.gmm_loglikes(qf, full_w, full_const)
+        sel = jnp.take_along_axis(fll, idx, axis=-1)            # (BF, K)
+
+        # softmax over the selected components only
+        m = jnp.max(sel, axis=-1, keepdims=True)
+        p = jnp.exp(sel - m)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        # prune + keep-at-least-the-best + renormalize (Kaldi semantics)
+        best = p >= jnp.max(p, axis=-1, keepdims=True)
+        keep = (p >= min_post) | best
+        p = jnp.where(keep, p, 0.0)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        return p, idx
+
+    return align
+
+
+def build_precompute():
+    """Per-EM-iteration constants (paper eq. 3–4 inner terms).
+
+    inputs:  t_mat (C, F, R), sigma_inv (C, F, F)
+    outputs: tt_si (C, R, F) = TᵀΣ⁻¹,  tt_si_t (C, R, R) = TᵀΣ⁻¹T
+    """
+
+    def precompute(t_mat, sigma_inv):
+        tt_si = jnp.einsum("cfr,cfg->crg", t_mat, sigma_inv)
+        tt_si_t = jnp.einsum("crf,cfs->crs", tt_si, t_mat)
+        # enforce exact symmetry (downstream cholesky assumes it)
+        tt_si_t = 0.5 * (tt_si_t + jnp.swapaxes(tt_si_t, -1, -2))
+        return tt_si, tt_si_t
+
+    return precompute
+
+
+def build_estep():
+    """TVM training E-step over one utterance batch (paper §3, step 2).
+
+    inputs:  n (BU, C), f (BU, C, F), mask (BU,),
+             tt_si (C, R, F), tt_si_t (C, R, R), prior_mean (R,)
+    outputs: acc_a (C, R, R)   Σ_u n_c(u)(Φ+φφᵀ)      [T-update lhs]
+             acc_b (C, F, R)   Σ_u f_c(u) φ(u)ᵀ        [T-update rhs]
+             acc_h (R,)        Σ_u φ(u)                [min-div, eq. 6]
+             acc_hh (R, R)     Σ_u (Φ+φφᵀ)            [min-div, eq. 7]
+             count ()          Σ_u mask
+             phi (BU, R)       posterior means (masked)
+    """
+
+    def estep(n, f, mask, tt_si, tt_si_t, prior_mean):
+        l_mat = precision.precision_matrices(n, tt_si_t)            # (B,R,R)
+        rhs = prior_mean[None, :] + jnp.einsum("crf,bcf->br", tt_si, f)
+        phi, cov = chol.chol_solve_and_inverse(l_mat, rhs)
+        msk = mask[:, None]
+        second = cov + phi[:, :, None] * phi[:, None, :]            # Φ+φφᵀ
+        second_m = second * mask[:, None, None]
+        n_m = n * msk
+        acc_a = jnp.einsum("bc,brs->crs", n_m, second_m)
+        acc_b = jnp.einsum("bcf,br->cfr", f * mask[:, None, None], phi)
+        acc_h = jnp.sum(phi * msk, axis=0)
+        acc_hh = jnp.sum(second_m, axis=0)
+        count = jnp.sum(mask)
+        return acc_a, acc_b, acc_h, acc_hh, count, phi * msk
+
+    return estep
+
+
+def build_extract():
+    """I-vector extraction (paper §4.2, the 10 000×-RT path): posterior
+    means only — no covariance, no accumulators.
+
+    inputs:  n (BU, C), f (BU, C, F), tt_si (C,R,F), tt_si_t (C,R,R),
+             prior_mean (R,)
+    outputs: phi (BU, R)
+    """
+
+    def extract(n, f, tt_si, tt_si_t, prior_mean):
+        l_mat = precision.precision_matrices(n, tt_si_t)
+        rhs = prior_mean[None, :] + jnp.einsum("crf,bcf->br", tt_si, f)
+        phi = chol.chol_solve(l_mat, rhs)
+        return (phi,)
+
+    return extract
+
+
+def build_ubm_acc():
+    """Full-covariance UBM EM accumulator over one frame batch.
+
+    inputs:  frames (BF, F), mask (BF,), full_w (C, F+F²), full_const (C,)
+    outputs: acc_n (C,), acc_f (C, F), acc_s (C, F, F), loglike ()
+    """
+
+    def ubm_acc(frames, mask, full_w, full_const):
+        qf = loglikes.expand_full(frames)
+        fll = loglikes.gmm_loglikes(qf, full_w, full_const)       # (BF, C)
+        m = jnp.max(fll, axis=-1, keepdims=True)
+        p = jnp.exp(fll - m)
+        s = jnp.sum(p, axis=-1, keepdims=True)
+        gamma = (p / s) * mask[:, None]
+        acc_n = jnp.sum(gamma, axis=0)
+        acc_f = jnp.einsum("bc,bf->cf", gamma, frames)
+        acc_s = jnp.einsum("bc,bf,bg->cfg", gamma, frames, frames)
+        loglike = jnp.sum((jnp.log(s[:, 0]) + m[:, 0]) * mask)
+        return acc_n, acc_f, acc_s, loglike
+
+    return ubm_acc
+
+
+def build_plda_score():
+    """Batch PLDA trial scoring.
+
+    inputs:  enroll (NE, D), test (NT, D), p_mat (D, D), q_mat (D, D)
+    outputs: scores (NE, NT) with
+             score(e,t) = ½eᵀQe + ½tᵀQt + eᵀPt
+    """
+
+    def score(enroll, test, p_mat, q_mat):
+        e_q = 0.5 * jnp.einsum("nd,de,ne->n", enroll, q_mat, enroll)
+        t_q = 0.5 * jnp.einsum("md,de,me->m", test, q_mat, test)
+        cross = enroll @ p_mat @ test.T
+        return (e_q[:, None] + t_q[None, :] + cross,)
+
+    return score

@@ -1,0 +1,153 @@
+"""L1 kernel correctness: pallas kernels vs pure-jnp/numpy oracles,
+with hypothesis sweeping shapes and seeds."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chol, loglikes, precision, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- loglikes
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([4, 16, 64, 128, 256]),
+    c=st.integers(2, 40),
+    d=st.integers(1, 50),
+    seed=st.integers(0, 2**31),
+)
+def test_loglikes_kernel_matches_ref(b, c, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, d)
+    w = rand(rng, c, d)
+    const = rand(rng, c)
+    got = loglikes.gmm_loglikes(q, w, const, block_b=min(64, b))
+    want = ref.gmm_loglikes_ref(q, w, const)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([8, 32]), c=st.integers(2, 12), f=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_diag_packing_reproduces_textbook_loglikes(b, c, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, f))
+    means = rng.standard_normal((c, f))
+    variances = rng.uniform(0.3, 2.0, (c, f))
+    weights = rng.dirichlet(np.ones(c))
+    w, const = loglikes.pack_diag_weights(
+        jnp.asarray(means, jnp.float32),
+        jnp.asarray(1.0 / variances, jnp.float32),
+        jnp.asarray(np.log(weights), jnp.float32),
+    )
+    got = loglikes.gmm_loglikes(loglikes.expand_diag(jnp.asarray(x, jnp.float32)), w, const, block_b=b)
+    want = ref.diag_loglikes_direct(x, means, variances, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([8, 32]), c=st.integers(2, 8), f=st.integers(2, 8), seed=st.integers(0, 2**31))
+def test_full_packing_reproduces_textbook_loglikes(b, c, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, f))
+    means = rng.standard_normal((c, f))
+    covs = np.stack([_spd(rng, f) for _ in range(c)])
+    weights = rng.dirichlet(np.ones(c))
+    inv_covs = np.linalg.inv(covs)
+    logdets = np.linalg.slogdet(covs)[1]
+    w, const = loglikes.pack_full_weights(
+        jnp.asarray(means, jnp.float32),
+        jnp.asarray(inv_covs, jnp.float32),
+        jnp.asarray(np.log(weights), jnp.float32),
+        jnp.asarray(logdets, jnp.float32),
+    )
+    got = loglikes.gmm_loglikes(loglikes.expand_full(jnp.asarray(x, jnp.float32)), w, const, block_b=b)
+    want = ref.full_loglikes_direct(x, means, covs, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-3)
+
+
+def _spd(rng, f):
+    m = rng.standard_normal((f, f))
+    return m @ m.T + f * np.eye(f)
+
+
+# ---------------------------------------------------------------- precision
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([2, 8, 64]),
+    c=st.integers(1, 24),
+    r=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_precision_kernel_matches_ref(b, c, r, seed):
+    rng = np.random.default_rng(seed)
+    n = jnp.asarray(rng.uniform(0, 50, (b, c)), jnp.float32)
+    m = rand(rng, c, r, r)
+    got = precision.precision_matrices(n, m, block_b=min(32, b))
+    want = ref.precision_ref(n, m)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- cholesky
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 8), r=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_batched_cholesky_reconstructs(b, r, seed):
+    rng = np.random.default_rng(seed)
+    a = np.stack([_spd(rng, r) for _ in range(b)]).astype(np.float32)
+    l = chol.batched_cholesky(jnp.asarray(a))
+    rec = np.einsum("bik,bjk->bij", l, l)
+    np.testing.assert_allclose(rec, a, rtol=1e-3, atol=1e-3)
+    # lower triangular
+    upper = np.triu(np.asarray(l), k=1)
+    np.testing.assert_allclose(upper, 0.0, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 8), r=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_chol_solve_matches_numpy(b, r, seed):
+    rng = np.random.default_rng(seed)
+    a = np.stack([_spd(rng, r) for _ in range(b)]).astype(np.float32)
+    rhs = rng.standard_normal((b, r)).astype(np.float32)
+    got = chol.chol_solve(jnp.asarray(a), jnp.asarray(rhs))
+    want = np.linalg.solve(a, rhs[..., None])[..., 0]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_chol_solve_and_inverse():
+    rng = np.random.default_rng(0)
+    a = np.stack([_spd(rng, 16) for _ in range(4)]).astype(np.float32)
+    rhs = rng.standard_normal((4, 16)).astype(np.float32)
+    x, inv = chol.chol_solve_and_inverse(jnp.asarray(a), jnp.asarray(rhs))
+    eye = np.broadcast_to(np.eye(16, dtype=np.float32), (4, 16, 16))
+    np.testing.assert_allclose(np.einsum("bij,bjk->bik", a, inv), eye, atol=2e-3)
+    np.testing.assert_allclose(x, np.einsum("bij,bj->bi", inv, rhs), rtol=2e-3, atol=2e-3)
+    # inverse is symmetric by construction
+    np.testing.assert_allclose(inv, np.swapaxes(np.asarray(inv), 1, 2), atol=1e-6)
+
+
+def test_solves_are_jittable():
+    # guards the export path: everything must trace under jit
+    rng = np.random.default_rng(3)
+    a = np.stack([_spd(rng, 8) for _ in range(2)]).astype(np.float32)
+    rhs = rng.standard_normal((2, 8)).astype(np.float32)
+    got = jax.jit(chol.chol_solve)(jnp.asarray(a), jnp.asarray(rhs))
+    want = np.linalg.solve(a, rhs[..., None])[..., 0]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

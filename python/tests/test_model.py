@@ -1,0 +1,247 @@
+"""L2 graph semantics: jitted graph builders vs direct numpy references."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import loglikes, ref
+
+
+def _spd(rng, f, ridge=None):
+    m = rng.standard_normal((f, f))
+    return m @ m.T + (ridge if ridge is not None else f) * np.eye(f)
+
+
+def _gmm_params(rng, c, f):
+    means = rng.standard_normal((c, f))
+    covs = np.stack([_spd(rng, f) for _ in range(c)])
+    dvars = rng.uniform(0.3, 2.0, (c, f))
+    weights = rng.dirichlet(np.ones(c))
+    return means, covs, dvars, weights
+
+
+def _packed(means, covs, dvars, weights):
+    diag_w, diag_const = loglikes.pack_diag_weights(
+        jnp.asarray(means, jnp.float32),
+        jnp.asarray(1.0 / dvars, jnp.float32),
+        jnp.asarray(np.log(weights), jnp.float32),
+    )
+    inv = np.linalg.inv(covs)
+    logdet = np.linalg.slogdet(covs)[1]
+    full_w, full_const = loglikes.pack_full_weights(
+        jnp.asarray(means, jnp.float32),
+        jnp.asarray(inv, jnp.float32),
+        jnp.asarray(np.log(weights), jnp.float32),
+        jnp.asarray(logdet, jnp.float32),
+    )
+    return diag_w, diag_const, full_w, full_const
+
+
+# ------------------------------------------------------------- align_topk
+
+
+def test_align_matches_reference_semantics():
+    rng = np.random.default_rng(42)
+    b, c, f, k, min_post = 16, 12, 4, 5, 0.025
+    means, covs, dvars, weights = _gmm_params(rng, c, f)
+    x = rng.standard_normal((b, f)).astype(np.float32)
+
+    align = jax.jit(model.build_align_topk(k, min_post))
+    posts, idx = align(jnp.asarray(x), *_packed(means, covs, dvars, weights))
+    posts, idx = np.asarray(posts), np.asarray(idx)
+
+    want_posts, want_idx = ref.align_ref(
+        x, means, dvars, weights, means, covs, weights, k, min_post
+    )
+
+    for t in range(b):
+        got = {int(i): float(p) for i, p in zip(idx[t], posts[t]) if p > 0}
+        want = {int(i): float(p) for i, p in zip(want_idx[t], want_posts[t]) if p > 0}
+        assert set(got) == set(want), f"frame {t}: {got} vs {want}"
+        for i in got:
+            assert got[i] == pytest.approx(want[i], rel=2e-3, abs=2e-4)
+
+
+def test_align_posteriors_sum_to_one_and_pruned():
+    rng = np.random.default_rng(7)
+    b, c, f, k, min_post = 32, 16, 3, 6, 0.025
+    means, covs, dvars, weights = _gmm_params(rng, c, f)
+    x = rng.standard_normal((b, f)).astype(np.float32)
+    align = jax.jit(model.build_align_topk(k, min_post))
+    posts, idx = align(jnp.asarray(x), *_packed(means, covs, dvars, weights))
+    posts = np.asarray(posts)
+    np.testing.assert_allclose(posts.sum(axis=1), 1.0, rtol=1e-5)
+    nz = posts[posts > 0]
+    assert (nz >= min_post - 1e-6).all()
+    # indices within range and unique per frame
+    idx = np.asarray(idx)
+    assert (idx >= 0).all() and (idx < c).all()
+    for t in range(b):
+        assert len(set(idx[t].tolist())) == k
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), k=st.integers(1, 8))
+def test_manual_top_k_matches_numpy(seed, k):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, 12)).astype(np.float32)
+    vals, idx = jax.jit(lambda a: model.manual_top_k(a, k))(jnp.asarray(x))
+    want = np.sort(x, axis=1)[:, ::-1][:, :k]
+    np.testing.assert_allclose(vals, want, rtol=1e-6)
+    # indices actually point at the values
+    np.testing.assert_allclose(
+        np.take_along_axis(x, np.asarray(idx), axis=1), want, rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------- estep
+
+
+def _tvm_inputs(rng, b, c, f, r):
+    n = rng.uniform(0, 20, (b, c)).astype(np.float32)
+    fs = rng.standard_normal((b, c, f)).astype(np.float32)
+    t_mat = (rng.standard_normal((c, f, r)) * 0.3).astype(np.float32)
+    sigma_inv = np.stack([np.linalg.inv(_spd(rng, f)) for _ in range(c)]).astype(np.float32)
+    p = np.zeros(r, dtype=np.float32)
+    p[0] = 10.0
+    return n, fs, t_mat, sigma_inv, p
+
+
+def test_estep_phi_matches_reference():
+    rng = np.random.default_rng(3)
+    b, c, f, r = 8, 6, 4, 10
+    n, fs, t_mat, sigma_inv, p = _tvm_inputs(rng, b, c, f, r)
+
+    pre = jax.jit(model.build_precompute())
+    tt_si, tt_si_t = pre(jnp.asarray(t_mat), jnp.asarray(sigma_inv))
+    estep = jax.jit(model.build_estep())
+    mask = np.ones(b, dtype=np.float32)
+    acc_a, acc_b, acc_h, acc_hh, count, phi = estep(
+        jnp.asarray(n), jnp.asarray(fs), jnp.asarray(mask), tt_si, tt_si_t, jnp.asarray(p)
+    )
+
+    want_phi, want_cov = ref.estep_ref(n, fs, t_mat, sigma_inv, p)
+    np.testing.assert_allclose(phi, want_phi, rtol=2e-3, atol=2e-3)
+    assert float(count) == b
+
+    # accumulators vs direct sums
+    second = want_cov + np.einsum("br,bs->brs", want_phi, want_phi)
+    np.testing.assert_allclose(
+        acc_a, np.einsum("bc,brs->crs", n, second), rtol=3e-3, atol=3e-3
+    )
+    np.testing.assert_allclose(
+        acc_b, np.einsum("bcf,br->cfr", fs, want_phi), rtol=3e-3, atol=3e-3
+    )
+    np.testing.assert_allclose(acc_h, want_phi.sum(0), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(acc_hh, second.sum(0), rtol=3e-3, atol=3e-3)
+
+
+def test_estep_mask_zeroes_padding():
+    rng = np.random.default_rng(5)
+    b, c, f, r = 8, 6, 4, 10
+    n, fs, t_mat, sigma_inv, p = _tvm_inputs(rng, b, c, f, r)
+    pre = jax.jit(model.build_precompute())
+    tt_si, tt_si_t = pre(jnp.asarray(t_mat), jnp.asarray(sigma_inv))
+    estep = jax.jit(model.build_estep())
+
+    # full batch on first half only, second half zero-masked
+    mask = np.array([1.0] * 4 + [0.0] * 4, dtype=np.float32)
+    out_masked = estep(jnp.asarray(n), jnp.asarray(fs), jnp.asarray(mask), tt_si, tt_si_t, jnp.asarray(p))
+    # reference: just the first half, padded with zeros
+    n2 = n.copy()
+    fs2 = fs.copy()
+    n2[4:] = 0
+    fs2[4:] = 0
+    out_zero = estep(jnp.asarray(n2), jnp.asarray(fs2), jnp.asarray(np.ones(b, np.float32) * mask), tt_si, tt_si_t, jnp.asarray(p))
+    for a, z in zip(out_masked[:5], out_zero[:5]):
+        np.testing.assert_allclose(a, z, rtol=1e-4, atol=1e-4)
+    assert float(out_masked[4]) == 4.0
+    # masked phi rows are exactly zero
+    np.testing.assert_allclose(np.asarray(out_masked[5])[4:], 0.0)
+
+
+def test_extract_matches_estep_phi():
+    rng = np.random.default_rng(11)
+    b, c, f, r = 8, 6, 4, 10
+    n, fs, t_mat, sigma_inv, p = _tvm_inputs(rng, b, c, f, r)
+    pre = jax.jit(model.build_precompute())
+    tt_si, tt_si_t = pre(jnp.asarray(t_mat), jnp.asarray(sigma_inv))
+    (phi_ex,) = jax.jit(model.build_extract())(
+        jnp.asarray(n), jnp.asarray(fs), tt_si, tt_si_t, jnp.asarray(p)
+    )
+    mask = jnp.ones(b, jnp.float32)
+    phi_es = jax.jit(model.build_estep())(
+        jnp.asarray(n), jnp.asarray(fs), mask, tt_si, tt_si_t, jnp.asarray(p)
+    )[5]
+    np.testing.assert_allclose(phi_ex, phi_es, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- precompute
+
+
+def test_precompute_matches_direct_einsum():
+    rng = np.random.default_rng(13)
+    c, f, r = 5, 4, 7
+    t_mat = rng.standard_normal((c, f, r)).astype(np.float32)
+    sigma_inv = np.stack([np.linalg.inv(_spd(rng, f)) for _ in range(c)]).astype(np.float32)
+    tt_si, tt_si_t = jax.jit(model.build_precompute())(jnp.asarray(t_mat), jnp.asarray(sigma_inv))
+    np.testing.assert_allclose(
+        tt_si, np.einsum("cfr,cfg->crg", t_mat, sigma_inv), rtol=1e-4, atol=1e-4
+    )
+    want = np.einsum("cfr,cfg,cgs->crs", t_mat, sigma_inv, t_mat)
+    np.testing.assert_allclose(tt_si_t, 0.5 * (want + np.swapaxes(want, 1, 2)), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- ubm_acc
+
+
+def test_ubm_acc_matches_direct():
+    rng = np.random.default_rng(17)
+    b, c, f = 32, 6, 4
+    means, covs, _, weights = _gmm_params(rng, c, f)
+    x = rng.standard_normal((b, f)).astype(np.float32)
+    mask = np.ones(b, dtype=np.float32)
+    mask[-5:] = 0.0
+    _, _, full_w, full_const = _packed(means, covs, np.ones((c, f)), weights)
+
+    acc_n, acc_f, acc_s, ll = jax.jit(model.build_ubm_acc())(
+        jnp.asarray(x), jnp.asarray(mask), full_w, full_const
+    )
+
+    fll = ref.full_loglikes_direct(x, means, covs, weights)
+    gamma = np.exp(fll - fll.max(axis=1, keepdims=True))
+    gamma /= gamma.sum(axis=1, keepdims=True)
+    gamma *= mask[:, None]
+    np.testing.assert_allclose(acc_n, gamma.sum(0), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(acc_f, np.einsum("bc,bf->cf", gamma, x), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        acc_s, np.einsum("bc,bf,bg->cfg", gamma, x, x), rtol=2e-3, atol=2e-3
+    )
+    from scipy.special import logsumexp
+
+    np.testing.assert_allclose(ll, (logsumexp(fll, axis=1) * mask).sum(), rtol=1e-3)
+
+
+# ------------------------------------------------------------- plda_score
+
+
+def test_plda_score_matches_ref():
+    rng = np.random.default_rng(19)
+    ne, nt, d = 6, 9, 5
+    enroll = rng.standard_normal((ne, d)).astype(np.float32)
+    test = rng.standard_normal((nt, d)).astype(np.float32)
+    p_mat = _spd(rng, d).astype(np.float32)
+    q_mat = (-_spd(rng, d)).astype(np.float32)
+    (got,) = jax.jit(model.build_plda_score())(
+        jnp.asarray(enroll), jnp.asarray(test), jnp.asarray(p_mat), jnp.asarray(q_mat)
+    )
+    want = ref.plda_score_ref(enroll, test, p_mat, q_mat)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

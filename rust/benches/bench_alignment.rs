@@ -1,0 +1,36 @@
+//! Bench: frame alignment (paper §4.2 — the 3000×-RT claim).
+//! CPU reference vs accelerated `align_topk` graph on identical frames.
+
+use ivector_tv::bench_util::bench;
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::{align_archive_accel, align_archive_cpu};
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::train_ubm;
+use ivector_tv::ivector::AccelTvm;
+use ivector_tv::metrics::rt_factor;
+
+fn main() {
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = 16;
+    cfg.corpus.utts_per_train_speaker = 4;
+    let corpus = generate_corpus(&cfg.corpus).unwrap();
+    let train = &corpus.train;
+    let frames = train.total_frames();
+    let (ubm, _) = train_ubm(train, &cfg.ubm, 1).unwrap();
+    let accel = AccelTvm::new("artifacts").unwrap().with_alignment().unwrap();
+    let workers = ivector_tv::exec::default_workers();
+
+    println!("alignment bench: {frames} frames ({} utts)", train.utts.len());
+    let cpu = bench("align/cpu-ref", 1, 5, || {
+        align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers)
+    });
+    let dev = bench("align/accel", 1, 5, || {
+        align_archive_accel(&accel, &ubm.diag, &ubm.full, train).unwrap()
+    });
+    println!(
+        "-> accel {:.0}x RT, cpu-ref {:.0}x RT, speedup {:.2}x",
+        rt_factor(frames, dev.median_s),
+        rt_factor(frames, cpu.median_s),
+        cpu.median_s / dev.median_s
+    );
+}

@@ -1,0 +1,66 @@
+//! Bench: the TVM E-step hot loop — scalar CPU, multithreaded CPU,
+//! and the accelerated `estep` graph (paper's 25×-training claim).
+
+use ivector_tv::bench_util::bench;
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::{align_archive_cpu, stats_from_posts};
+use ivector_tv::exec::map_parallel;
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::train_ubm;
+use ivector_tv::ivector::{
+    estep_utterance, AccelTvm, EstepAccum, Formulation, TvModel, UttStats,
+};
+
+fn main() {
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = 24;
+    cfg.corpus.utts_per_train_speaker = 6;
+    let corpus = generate_corpus(&cfg.corpus).unwrap();
+    let train = &corpus.train;
+    let (ubm, _) = train_ubm(train, &cfg.ubm, 1).unwrap();
+    let workers = ivector_tv::exec::default_workers();
+    let posts = align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers);
+    let (bw, _) = stats_from_posts(train, &posts, cfg.ubm.components, workers);
+    let model = TvModel::init(Formulation::Augmented, &ubm.full, cfg.tvm.rank, 100.0, 3);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &model)).collect();
+    let (c, f, r) = (cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+    println!("estep bench: {} utts, C={c} F={f} R={r}", utts.len());
+
+    let (tt_si, tt_si_t) = model.precompute();
+    let scalar = bench("estep/cpu-1-thread", 1, 3, || {
+        let mut acc = EstepAccum::zeros(c, f, r);
+        for s in &utts {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        acc.count
+    });
+
+    let mt = bench("estep/cpu-multithread", 1, 3, || {
+        let chunk = utts.len().div_ceil(workers);
+        let parts = map_parallel(utts.len().div_ceil(chunk), workers, |k| {
+            let mut acc = EstepAccum::zeros(c, f, r);
+            for s in &utts[k * chunk..((k + 1) * chunk).min(utts.len())] {
+                estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+            }
+            acc
+        });
+        parts.len()
+    });
+
+    let mut accel = AccelTvm::new("artifacts").unwrap();
+    accel.set_model(&model).unwrap();
+    let dev = bench("estep/accel", 1, 3, || {
+        let mut acc = EstepAccum::zeros(c, f, r);
+        for chunk in utts.chunks(accel.dims.bu) {
+            let refs: Vec<&UttStats> = chunk.iter().collect();
+            let (a, _) = accel.estep_batch(&refs).unwrap();
+            acc.merge(&a);
+        }
+        acc.count
+    });
+    println!(
+        "-> accel vs scalar {:.1}x, vs multithread {:.1}x",
+        scalar.median_s / dev.median_s,
+        mt.median_s / dev.median_s
+    );
+}

@@ -1,0 +1,71 @@
+//! Bench: backend scoring — CPU PLDA score matrix vs the `plda_score`
+//! device graph, plus EER computation (trial-list sweep).
+
+use ivector_tv::backend::Plda;
+use ivector_tv::bench_util::bench;
+use ivector_tv::linalg::Mat;
+use ivector_tv::rng::Rng;
+use ivector_tv::runtime::{Runtime, Tensor};
+use ivector_tv::trials::{det_metrics, generate_trials};
+
+fn main() {
+    let d = 32; // must match artifacts manifest D
+    let (ne, nt) = (256, 256);
+    let mut rng = Rng::seed(1);
+
+    // labeled data → PLDA
+    let n_spk = 60;
+    let per = 8;
+    let mut x = Mat::zeros(n_spk * per, d);
+    let mut labels = Vec::new();
+    for s in 0..n_spk {
+        let y: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        for _ in 0..per {
+            let i = labels.len();
+            for j in 0..d {
+                x.set(i, j, y[j] + 0.6 * rng.normal());
+            }
+            labels.push(s);
+        }
+    }
+    let plda = Plda::fit(&x, &labels, 5).unwrap();
+    let enroll = Mat::from_fn(ne, d, |_, _| rng.normal());
+    let test = Mat::from_fn(nt, d, |_, _| rng.normal());
+
+    println!("scoring bench: {ne}x{nt} trials, D={d}");
+    let cpu = bench("plda-score/cpu", 1, 10, || plda.score_matrix(&enroll, &test));
+
+    // device path
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    rt.load("plda_score").unwrap();
+    let graph = rt.graph("plda_score").unwrap();
+    let pack = |m: &Mat| Tensor::from_f64(m.as_slice(), &[m.rows(), m.cols()]);
+    let (p_t, q_t) = (pack(&plda.p), pack(&plda.q));
+    let (e_t, t_t) = (pack(&enroll), pack(&test));
+    let dev = bench("plda-score/accel", 1, 10, || {
+        graph.run(&[e_t.clone(), t_t.clone(), p_t.clone(), q_t.clone()]).unwrap()
+    });
+    println!("-> scoring speedup accel/cpu: {:.2}x", cpu.median_s / dev.median_s);
+
+    // device vs CPU numerics
+    let out = graph.run(&[e_t, t_t, p_t, q_t]).unwrap();
+    let dev_scores = out[0].to_f64().unwrap();
+    let cpu_scores = plda.score_matrix(&enroll, &test);
+    let mut max_err = 0.0f64;
+    for i in 0..ne {
+        for j in 0..nt {
+            max_err = max_err.max(
+                (dev_scores[i * nt + j] - cpu_scores.get(i, j)).abs()
+                    / (1.0 + cpu_scores.get(i, j).abs()),
+            );
+        }
+    }
+    println!("plda-score accel vs cpu max rel err: {max_err:.2e}");
+    assert!(max_err < 1e-3, "device scoring diverged");
+
+    // EER sweep cost
+    let spk: Vec<usize> = (0..200).map(|i| i / 4).collect();
+    let trials = generate_trials(&spk, 8000, 3);
+    let scores: Vec<(f64, bool)> = trials.iter().map(|t| (rng.normal(), t.target)).collect();
+    bench("eer/8000-trials", 1, 20, || det_metrics(&scores));
+}

@@ -1,0 +1,47 @@
+//! Bench: one full extractor-training iteration, CPU vs accelerated
+//! coordinator path (the paper's headline 25× training speed-up).
+
+use ivector_tv::bench_util::bench;
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::{train_tvm, ComputePath, TrainSetup};
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::train_ubm;
+use ivector_tv::ivector::{AccelTvm, Formulation, TrainVariant};
+
+fn main() {
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = 24;
+    cfg.corpus.utts_per_train_speaker = 6;
+    let corpus = generate_corpus(&cfg.corpus).unwrap();
+    let (ubm, _) = train_ubm(&corpus.train, &cfg.ubm, 1).unwrap();
+    let variant = TrainVariant {
+        formulation: Formulation::Augmented,
+        min_divergence: true,
+        sigma_update: true,
+        realign_every: None,
+    };
+    println!("training bench: {} utts, 2 EM iterations per rep", corpus.train.utts.len());
+
+    let cpu = bench("train-2-iters/cpu", 0, 3, || {
+        let mut setup = TrainSetup {
+            cfg: &cfg,
+            feats: &corpus.train,
+            diag: ubm.diag.clone(),
+            full: ubm.full.clone(),
+        };
+        train_tvm(&mut setup, variant, 2, 3, ComputePath::CpuRef, None, &mut |_| None).unwrap();
+    });
+
+    let mut accel = AccelTvm::new("artifacts").unwrap().with_alignment().unwrap();
+    let dev = bench("train-2-iters/accel", 0, 3, || {
+        let mut setup = TrainSetup {
+            cfg: &cfg,
+            feats: &corpus.train,
+            diag: ubm.diag.clone(),
+            full: ubm.full.clone(),
+        };
+        train_tvm(&mut setup, variant, 2, 3, ComputePath::Accel, Some(&mut accel), &mut |_| None)
+            .unwrap();
+    });
+    println!("-> training speedup accel/cpu: {:.2}x (paper: 25x GPU vs 22-core)", cpu.median_s / dev.median_s);
+}

@@ -1,0 +1,218 @@
+//! Linear discriminant analysis (paper §4.1: 400 → 200 before PLDA).
+//!
+//! Solved as a symmetric problem: whiten by the within-class scatter
+//! (Cholesky), eigendecompose the whitened between-class scatter, and
+//! keep the leading directions.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{jacobi_eigh, Cholesky, Mat};
+
+/// Fitted LDA projection.
+#[derive(Debug, Clone)]
+pub struct Lda {
+    /// Projection matrix (out_dim × in_dim); rows are discriminants.
+    pub w: Mat,
+}
+
+impl Lda {
+    /// Fit on labeled rows. `spk_of_row[i]` is the class of row i.
+    pub fn fit(x: &Mat, spk_of_row: &[usize], out_dim: usize) -> Result<Self> {
+        let (n, d) = (x.rows(), x.cols());
+        assert_eq!(n, spk_of_row.len());
+        let n_spk = spk_of_row.iter().max().map(|&m| m + 1).unwrap_or(0);
+        if out_dim > d {
+            bail!("LDA out_dim {out_dim} exceeds input dim {d}");
+        }
+        if n_spk < 2 {
+            bail!("LDA needs at least two classes");
+        }
+
+        // class means + global mean
+        let mut counts = vec![0.0f64; n_spk];
+        let mut means = Mat::zeros(n_spk, d);
+        let mut global = vec![0.0; d];
+        for i in 0..n {
+            let s = spk_of_row[i];
+            counts[s] += 1.0;
+            crate::linalg::axpy(1.0, x.row(i), means.row_mut(s));
+            crate::linalg::axpy(1.0, x.row(i), &mut global);
+        }
+        for s in 0..n_spk {
+            let c = counts[s].max(1.0);
+            for v in means.row_mut(s) {
+                *v /= c;
+            }
+        }
+        for v in &mut global {
+            *v /= n as f64;
+        }
+
+        // scatters
+        let mut sw = Mat::zeros(d, d);
+        for i in 0..n {
+            let s = spk_of_row[i];
+            let diff: Vec<f64> =
+                x.row(i).iter().zip(means.row(s)).map(|(a, b)| a - b).collect();
+            for (ii, &di) in diff.iter().enumerate() {
+                if di == 0.0 {
+                    continue;
+                }
+                let row = sw.row_mut(ii);
+                for (jj, &dj) in diff.iter().enumerate() {
+                    row[jj] += di * dj;
+                }
+            }
+        }
+        sw.scale(1.0 / n as f64);
+        // ridge for stability
+        let tr = sw.trace() / d as f64;
+        for i in 0..d {
+            *sw.get_mut(i, i) += 1e-6 * tr.max(1e-12) + 1e-12;
+        }
+
+        let mut sb = Mat::zeros(d, d);
+        for s in 0..n_spk {
+            if counts[s] == 0.0 {
+                continue;
+            }
+            let diff: Vec<f64> =
+                means.row(s).iter().zip(&global).map(|(a, b)| a - b).collect();
+            for (ii, &di) in diff.iter().enumerate() {
+                if di == 0.0 {
+                    continue;
+                }
+                let row = sb.row_mut(ii);
+                for (jj, &dj) in diff.iter().enumerate() {
+                    row[jj] += counts[s] * di * dj;
+                }
+            }
+        }
+        sb.scale(1.0 / n as f64);
+
+        // whiten Sw: y = L⁻¹ x with Sw = L Lᵀ, then eigendecompose
+        // L⁻¹ Sb L⁻ᵀ and take the top eigenvectors.
+        let chol = Cholesky::new(&sw)?;
+        // M = L⁻¹ Sb L⁻ᵀ: solve L A = Sb, then L B = Aᵀ
+        let a = forward_solve_mat(&chol, &sb);
+        let m = forward_solve_mat(&chol, &a.t());
+        let mut msym = m;
+        msym.symmetrize();
+        let eig = jacobi_eigh(&msym);
+
+        // top out_dim eigenvectors (descending eigenvalue), mapped back:
+        // w = L⁻ᵀ v  ⇔ solve Lᵀ w = v
+        let dtot = eig.values.len();
+        let mut w = Mat::zeros(out_dim, d);
+        for k in 0..out_dim {
+            let v = eig.vectors.col(dtot - 1 - k);
+            let wk = backward_solve_vec(&chol, &v);
+            w.row_mut(k).copy_from_slice(&wk);
+        }
+        Ok(Self { w })
+    }
+
+    /// Project rows: (N × D) → (N × out_dim).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        x.matmul_nt(&self.w)
+    }
+}
+
+/// Solve L Y = B columnwise (forward substitution), B (d × m).
+fn forward_solve_mat(chol: &Cholesky, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(b.rows(), b.cols());
+    for j in 0..b.cols() {
+        let y = chol.forward_solve_vec(&b.col(j));
+        out.set_col(j, &y);
+    }
+    out
+}
+
+/// Solve Lᵀ w = v (backward substitution on the lower factor).
+fn backward_solve_vec(chol: &Cholesky, v: &[f64]) -> Vec<f64> {
+    let l = chol.l();
+    let n = l.rows();
+    let mut x = v.to_vec();
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= l.get(k, i) * x[k];
+        }
+        x[i] /= l.get(i, i);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Two classes separated along one axis, noise along others.
+    fn two_class_data(seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::seed(seed);
+        let n = 200;
+        let mut x = Mat::zeros(n, 5);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % 2;
+            let row = x.row_mut(i);
+            row[0] = if class == 0 { -2.0 } else { 2.0 } + 0.3 * rng.normal();
+            for v in row.iter_mut().skip(1) {
+                *v = 2.0 * rng.normal(); // big non-discriminative noise
+            }
+            labels.push(class);
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn lda_finds_the_discriminative_axis() {
+        let (x, labels) = two_class_data(1);
+        let lda = Lda::fit(&x, &labels, 1).unwrap();
+        // the first discriminant should be dominated by coordinate 0
+        let w0 = lda.w.row(0);
+        let lead = w0[0].abs();
+        let rest: f64 = w0[1..].iter().map(|v| v.abs()).fold(0.0, f64::max);
+        assert!(lead > 3.0 * rest, "w0 = {w0:?}");
+    }
+
+    #[test]
+    fn projection_separates_classes() {
+        let (x, labels) = two_class_data(2);
+        let lda = Lda::fit(&x, &labels, 1).unwrap();
+        let y = lda.apply(&x);
+        // class-conditional means well separated vs within std
+        let mut m = [0.0f64; 2];
+        let mut cnt = [0.0f64; 2];
+        for i in 0..y.rows() {
+            m[labels[i]] += y.get(i, 0);
+            cnt[labels[i]] += 1.0;
+        }
+        m[0] /= cnt[0];
+        m[1] /= cnt[1];
+        let mut var = 0.0;
+        for i in 0..y.rows() {
+            let d = y.get(i, 0) - m[labels[i]];
+            var += d * d;
+        }
+        var /= y.rows() as f64;
+        let sep = (m[0] - m[1]).abs() / var.sqrt();
+        assert!(sep > 5.0, "separation {sep}");
+    }
+
+    #[test]
+    fn errors_on_bad_inputs() {
+        let (x, labels) = two_class_data(3);
+        assert!(Lda::fit(&x, &labels, 99).is_err());
+        let one_class = vec![0usize; x.rows()];
+        assert!(Lda::fit(&x, &one_class, 2).is_err());
+    }
+
+    #[test]
+    fn output_dims() {
+        let (x, labels) = two_class_data(4);
+        let lda = Lda::fit(&x, &labels, 3).unwrap();
+        let y = lda.apply(&x);
+        assert_eq!((y.rows(), y.cols()), (200, 3));
+    }
+}

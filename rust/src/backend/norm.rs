@@ -1,0 +1,113 @@
+//! Centering, whitening and length normalization
+//! (Garcia-Romero & Espy-Wilson, 2011 — paper ref [24]).
+
+use anyhow::Result;
+
+use crate::linalg::{jacobi_eigh, Mat};
+
+/// Mean removal fitted on the backend training set.
+#[derive(Debug, Clone)]
+pub struct Centering {
+    pub mean: Vec<f64>,
+}
+
+impl Centering {
+    pub fn fit(x: &Mat) -> Self {
+        let n = x.rows().max(1);
+        let mut mean = vec![0.0; x.cols()];
+        for i in 0..x.rows() {
+            crate::linalg::axpy(1.0, x.row(i), &mut mean);
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        Self { mean }
+    }
+
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for i in 0..out.rows() {
+            for (v, m) in out.row_mut(i).iter_mut().zip(&self.mean) {
+                *v -= m;
+            }
+        }
+        out
+    }
+}
+
+/// Whitening via the eigendecomposition of the total covariance
+/// (paper §4.1: applied when min-div was not used).
+#[derive(Debug, Clone)]
+pub struct Whitening {
+    /// `P = Λ^{-½} Qᵀ` of the covariance.
+    pub p: Mat,
+}
+
+impl Whitening {
+    pub fn fit(centered: &Mat) -> Result<Self> {
+        let n = centered.rows().max(2);
+        let mut cov = centered.matmul_tn(centered);
+        cov.scale(1.0 / (n as f64 - 1.0));
+        let eig = jacobi_eigh(&cov);
+        Ok(Self { p: eig.whitener(1e-10) })
+    }
+
+    pub fn apply(&self, x: &Mat) -> Mat {
+        x.matmul_nt(&self.p)
+    }
+}
+
+/// Length normalization: scale each vector to unit Euclidean norm.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthNorm;
+
+impl LengthNorm {
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for i in 0..out.rows() {
+            crate::linalg::normalize(out.row_mut(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn centering_zeroes_the_mean() {
+        let mut rng = Rng::seed(1);
+        let x = Mat::from_fn(50, 4, |_, j| 3.0 * rng.normal() + j as f64);
+        let c = Centering::fit(&x);
+        let y = c.apply(&x);
+        let c2 = Centering::fit(&y);
+        assert!(c2.mean.iter().all(|&m| m.abs() < 1e-10));
+    }
+
+    #[test]
+    fn whitening_gives_identity_covariance() {
+        let mut rng = Rng::seed(2);
+        // correlated data
+        let x = Mat::from_fn(500, 3, |_, _| rng.normal());
+        let mix = Mat::from_rows(&[&[2.0, 0.5, 0.0], &[0.0, 1.0, 0.3], &[0.0, 0.0, 0.2]]);
+        let data = x.matmul(&mix);
+        let centered = Centering::fit(&data).apply(&data);
+        let w = Whitening::fit(&centered).unwrap();
+        let white = w.apply(&centered);
+        let mut cov = white.matmul_tn(&white);
+        cov.scale(1.0 / (white.rows() as f64 - 1.0));
+        assert!(cov.approx_eq(&Mat::eye(3), 0.05), "cov {:?}", cov);
+    }
+
+    #[test]
+    fn length_norm_unit_rows() {
+        let mut rng = Rng::seed(3);
+        let x = Mat::from_fn(10, 5, |_, _| 4.0 * rng.normal());
+        let y = LengthNorm.apply(&x);
+        for i in 0..10 {
+            assert!((crate::linalg::norm2(y.row(i)) - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Two-covariance PLDA (paper ref [24] scoring; Brümmer's two-cov
+//! formulation): `x = μ + y + ε`, `y ~ N(0, B)` between speakers,
+//! `ε ~ N(0, W)` within speaker. Trained by EM over speaker-labeled
+//! vectors; scored with the closed-form LLR
+//!
+//! `llr(e, t) = ½eᵀQe + ½tᵀQt + eᵀPt + const`
+//!
+//! with `tot = B + W`, `Q = tot⁻¹ − (tot − B·tot⁻¹·B)⁻¹`,
+//! `P = tot⁻¹·B·(tot − B·tot⁻¹·B)⁻¹` (the constant is dropped —
+//! detection metrics are threshold-invariant).
+
+use anyhow::Result;
+
+use crate::io::Serialize;
+use crate::linalg::{outer, Cholesky, Mat};
+
+/// Trained PLDA model.
+#[derive(Debug, Clone)]
+pub struct Plda {
+    pub mu: Vec<f64>,
+    /// Between-speaker covariance.
+    pub b: Mat,
+    /// Within-speaker covariance.
+    pub w: Mat,
+    /// Scoring matrices (derived; rebuilt on fit/load).
+    pub p: Mat,
+    pub q: Mat,
+}
+
+impl Plda {
+    /// EM fit on labeled rows.
+    pub fn fit(x: &Mat, spk_of_row: &[usize], iters: usize) -> Result<Self> {
+        let (n, d) = (x.rows(), x.cols());
+        assert_eq!(n, spk_of_row.len());
+        let n_spk = spk_of_row.iter().max().map(|&m| m + 1).unwrap_or(0);
+        anyhow::ensure!(n_spk >= 2, "PLDA needs at least two speakers");
+
+        // global mean
+        let mut mu = vec![0.0; d];
+        for i in 0..n {
+            crate::linalg::axpy(1.0, x.row(i), &mut mu);
+        }
+        for v in &mut mu {
+            *v /= n as f64;
+        }
+
+        // per-speaker counts and sums (centered)
+        let mut counts = vec![0.0f64; n_spk];
+        let mut sums = Mat::zeros(n_spk, d);
+        for i in 0..n {
+            let s = spk_of_row[i];
+            counts[s] += 1.0;
+            for (j, (&xv, m)) in x.row(i).iter().zip(&mu).enumerate() {
+                *sums.get_mut(s, j) += xv - m;
+            }
+        }
+
+        // init: B, W from total covariance split
+        let mut total = Mat::zeros(d, d);
+        for i in 0..n {
+            let cx: Vec<f64> = x.row(i).iter().zip(&mu).map(|(a, b)| a - b).collect();
+            total.add_scaled(1.0, &outer(&cx, &cx));
+        }
+        total.scale(1.0 / n as f64);
+        let mut b = total.clone();
+        b.scale(0.5);
+        let mut w = total;
+        w.scale(0.5);
+
+        for _ in 0..iters {
+            let w_inv = Cholesky::new_regularized(&w).0.inverse();
+            let b_inv = Cholesky::new_regularized(&b).0.inverse();
+
+            let mut b_acc = Mat::zeros(d, d);
+            let mut w_acc = Mat::zeros(d, d);
+            for s in 0..n_spk {
+                let ns = counts[s];
+                if ns == 0.0 {
+                    continue;
+                }
+                // posterior of y_s: Λ = B⁻¹ + n_s W⁻¹; ŷ = Λ⁻¹ W⁻¹ Σᵢ(xᵢ−μ)
+                let mut lam = b_inv.clone();
+                lam.add_scaled(ns, &w_inv);
+                let lam_chol = Cholesky::new_regularized(&lam).0;
+                let rhs = w_inv.matvec(sums.row(s));
+                let y_hat = lam_chol.solve_vec(&rhs);
+                let y_cov = lam_chol.inverse();
+
+                let mut second = y_cov.clone();
+                second.add_scaled(1.0, &outer(&y_hat, &y_hat));
+                b_acc.add_scaled(1.0, &second);
+
+                // within: Σᵢ E‖xᵢ−μ−y‖² terms — expand to avoid a second
+                // data pass: Σᵢ(cᵢ−ŷ)(cᵢ−ŷ)ᵀ + n_s·Cov(y).
+                // We only kept per-speaker sums, so accumulate the cross
+                // terms with the raw data below.
+                w_acc.add_scaled(ns, &y_cov);
+                // subtract 2·sym(Σc ŷᵀ) + n ŷŷᵀ, data pass adds Σ ccᵀ
+                let sy = outer(sums.row(s), &y_hat);
+                w_acc.add_scaled(-1.0, &sy);
+                w_acc.add_scaled(-1.0, &sy.t());
+                w_acc.add_scaled(ns, &outer(&y_hat, &y_hat));
+            }
+            // add Σᵢ cᵢcᵢᵀ (precomputed `total·n`)
+            for i in 0..n {
+                let cx: Vec<f64> = x.row(i).iter().zip(&mu).map(|(a, b)| a - b).collect();
+                w_acc.add_scaled(1.0, &outer(&cx, &cx));
+            }
+
+            b_acc.scale(1.0 / n_spk as f64);
+            w_acc.scale(1.0 / n as f64);
+            b_acc.symmetrize();
+            w_acc.symmetrize();
+            // floors against collapse
+            for m in [&mut b_acc, &mut w_acc] {
+                let tr = m.trace() / d as f64;
+                for i in 0..d {
+                    *m.get_mut(i, i) += 1e-8 * tr.max(1e-12) + 1e-12;
+                }
+            }
+            b = b_acc;
+            w = w_acc;
+        }
+
+        let (p, q) = Self::scoring_matrices(&b, &w)?;
+        Ok(Self { mu, b, w, p, q })
+    }
+
+    /// Derive the closed-form scoring matrices from (B, W).
+    pub fn scoring_matrices(b: &Mat, w: &Mat) -> Result<(Mat, Mat)> {
+        let tot = b.add(w);
+        let tot_inv = Cholesky::new_regularized(&tot).0.inverse();
+        // S = tot − B tot⁻¹ B
+        let bt = b.matmul(&tot_inv).matmul(b);
+        let s = tot.sub(&bt);
+        let s_inv = Cholesky::new_regularized(&s).0.inverse();
+        let p = tot_inv.matmul(b).matmul(&s_inv);
+        let mut q = tot_inv.sub(&s_inv);
+        q.symmetrize();
+        let mut p_sym = p;
+        p_sym.symmetrize();
+        Ok((p_sym, q))
+    }
+
+    /// LLR for a single (enroll, test) pair of *centered* vectors.
+    pub fn score_pair(&self, e: &[f64], t: &[f64]) -> f64 {
+        let qe = crate::linalg::dot(e, &self.q.matvec(e));
+        let qt = crate::linalg::dot(t, &self.q.matvec(t));
+        let pt = crate::linalg::dot(e, &self.p.matvec(t));
+        0.5 * qe + 0.5 * qt + pt
+    }
+
+    /// Full (N × M) score matrix — the CPU mirror of the `plda_score`
+    /// graph.
+    pub fn score_matrix(&self, enroll: &Mat, test: &Mat) -> Mat {
+        let qe: Vec<f64> =
+            (0..enroll.rows()).map(|i| 0.5 * crate::linalg::dot(enroll.row(i), &self.q.matvec(enroll.row(i)))).collect();
+        let qt: Vec<f64> =
+            (0..test.rows()).map(|j| 0.5 * crate::linalg::dot(test.row(j), &self.q.matvec(test.row(j)))).collect();
+        let cross = enroll.matmul(&self.p).matmul_nt(test);
+        Mat::from_fn(enroll.rows(), test.rows(), |i, j| qe[i] + qt[j] + cross.get(i, j))
+    }
+}
+
+impl Serialize for Plda {
+    fn write(&self, w: &mut crate::io::BinWriter) -> Result<()> {
+        self.mu.write(w)?;
+        self.b.write(w)?;
+        self.w.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> Result<Self> {
+        let mu = Vec::<f64>::read(r)?;
+        let b = Mat::read(r)?;
+        let w = Mat::read(r)?;
+        let (p, q) = Plda::scoring_matrices(&b, &w)?;
+        Ok(Self { mu, b, w, p, q })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn planted_data(
+        n_spk: usize,
+        per_spk: usize,
+        d: usize,
+        b_scale: f64,
+        w_scale: f64,
+        seed: u64,
+    ) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::seed(seed);
+        let mut x = Mat::zeros(n_spk * per_spk, d);
+        let mut labels = Vec::new();
+        for s in 0..n_spk {
+            let y: Vec<f64> = (0..d).map(|_| b_scale * rng.normal()).collect();
+            for u in 0..per_spk {
+                let row = x.row_mut(s * per_spk + u);
+                for j in 0..d {
+                    row[j] = y[j] + w_scale * rng.normal();
+                }
+                labels.push(s);
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn em_recovers_planted_covariances() {
+        let (x, labels) = planted_data(200, 10, 4, 2.0, 0.7, 1);
+        let plda = Plda::fit(&x, &labels, 10).unwrap();
+        // B ≈ 4·I, W ≈ 0.49·I (tolerances cover the sampling error of
+        // 200 speaker draws: sd(B̂) ≈ 4·√(2/200) ≈ 0.4)
+        for i in 0..4 {
+            assert!((plda.b.get(i, i) - 4.0).abs() < 1.2, "B[{i}][{i}] = {}", plda.b.get(i, i));
+            assert!((plda.w.get(i, i) - 0.49).abs() < 0.12, "W[{i}][{i}] = {}", plda.w.get(i, i));
+            // off-diagonals near zero
+            for j in 0..4 {
+                if i != j {
+                    assert!(plda.b.get(i, j).abs() < 0.8, "B[{i}][{j}] = {}", plda.b.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_speaker_scores_higher() {
+        let (x, labels) = planted_data(40, 8, 4, 1.5, 0.5, 2);
+        let plda = Plda::fit(&x, &labels, 8).unwrap();
+        // held-out pairs
+        let (ex, el) = planted_data(10, 2, 4, 1.5, 0.5, 3);
+        let centered = {
+            let mut c = ex.clone();
+            for i in 0..c.rows() {
+                for (v, m) in c.row_mut(i).iter_mut().zip(&plda.mu) {
+                    *v -= m;
+                }
+            }
+            c
+        };
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let mut n_same = 0.0;
+        let mut n_diff = 0.0;
+        for i in 0..centered.rows() {
+            for j in 0..centered.rows() {
+                if i == j {
+                    continue;
+                }
+                let s = plda.score_pair(centered.row(i), centered.row(j));
+                if el[i] == el[j] {
+                    same += s;
+                    n_same += 1.0;
+                } else {
+                    diff += s;
+                    n_diff += 1.0;
+                }
+            }
+        }
+        assert!(same / n_same > diff / n_diff + 0.5, "{} vs {}", same / n_same, diff / n_diff);
+    }
+
+    #[test]
+    fn score_matrix_matches_pairs() {
+        let (x, labels) = planted_data(20, 5, 3, 1.0, 0.6, 5);
+        let plda = Plda::fit(&x, &labels, 5).unwrap();
+        let e = Mat::from_fn(4, 3, |i, j| (i + j) as f64 * 0.2 - 0.5);
+        let t = Mat::from_fn(6, 3, |i, j| (i as f64 - j as f64) * 0.3);
+        let m = plda.score_matrix(&e, &t);
+        for i in 0..4 {
+            for j in 0..6 {
+                let want = plda.score_pair(e.row(i), t.row(j));
+                assert!((m.get(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn scoring_matrices_one_dimensional_sanity() {
+        // d=1: closed forms are scalars we can verify by hand
+        let b = Mat::from_rows(&[&[2.0]]);
+        let w = Mat::from_rows(&[&[1.0]]);
+        let (p, q) = Plda::scoring_matrices(&b, &w).unwrap();
+        let tot = 3.0f64;
+        let s = tot - 2.0 * 2.0 / tot; // tot − B²/tot
+        assert!((p.get(0, 0) - (2.0 / tot) / s).abs() < 1e-10);
+        assert!((q.get(0, 0) - (1.0 / tot - 1.0 / s)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let (x, labels) = planted_data(15, 4, 3, 1.0, 0.5, 7);
+        let plda = Plda::fit(&x, &labels, 4).unwrap();
+        let dir = std::env::temp_dir().join("ivtv_plda_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plda.bin");
+        crate::io::save(&plda, &path).unwrap();
+        let back: Plda = crate::io::load(&path).unwrap();
+        assert!(back.p.approx_eq(&plda.p, 1e-12));
+        let e = [0.4, -0.2, 0.1];
+        let t = [0.1, 0.3, -0.5];
+        assert!((back.score_pair(&e, &t) - plda.score_pair(&e, &t)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warm-up + N timed repetitions, reporting median / mean / p10 / p90.
+
+use std::time::Instant;
+
+/// Summary statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    /// One aligned human-readable row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} med {:>9} mean {:>9} p10 {:>9} p90 {:>9} (n={})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.p10_s),
+            fmt_time(self.p90_s),
+            self.reps
+        )
+    }
+}
+
+/// Pretty-print a duration in s/ms/µs.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Time `f` with `warmup` + `reps` runs. The closure's return value is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    let result = BenchResult {
+        name: name.to_string(),
+        median_s: pct(0.5),
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        p10_s: pct(0.1),
+        p90_s: pct(0.9),
+        reps,
+    };
+    println!("{}", result.row());
+    result
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let r = bench("noop", 1, 11, || 1 + 1);
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+        assert_eq!(r.reps, 11);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(fmt_time(2.5e-6).ends_with(" µs"));
+    }
+}

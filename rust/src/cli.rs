@@ -1,0 +1,70 @@
+//! Command-line launcher (no external arg-parsing crates are available
+//! offline, so this module is the substrate: a small subcommand + flag
+//! parser with help text).
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "synth" => commands::synth(&args),
+        "train-ubm" => commands::train_ubm(&args),
+        "align" => commands::align(&args),
+        "train" => commands::train(&args),
+        "extract" => commands::extract(&args),
+        "backend" => commands::backend(&args),
+        "eval" => commands::eval(&args),
+        "pipeline" => commands::pipeline(&args),
+        "smoke" => commands::smoke(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}` (try `ivector-tv help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "\
+ivector-tv — GPU-accelerated total-variability i-vector stack
+             (Vestman et al., Interspeech 2019 reproduction)
+
+USAGE: ivector-tv <COMMAND> [--flag value ...]
+
+COMMANDS:
+  synth      generate the synthetic corpus          (--config, --out-dir)
+  train-ubm  train diagonal+full UBM                (--config, --data-dir)
+  align      compute frame posteriors (accelerated) (--config, --data-dir)
+  train      train the i-vector extractor           (--config, --variant,
+             --iters, --realign-every, --seed, --accel|--cpu-ref)
+  extract    extract i-vectors with a trained model (--config, --model)
+  backend    train LDA + PLDA on extracted vectors  (--config)
+  eval       score trials, report EER/minDCF        (--config)
+  pipeline   synth → ubm → align → train → extract → backend → eval
+  smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
+
+Flags not listed above: --artifacts DIR (default ./artifacts),
+--work DIR (default ./work), --quiet. See configs/*.toml for the full
+config schema."
+    );
+}

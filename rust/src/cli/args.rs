@@ -1,0 +1,143 @@
+//! Tiny `--flag value` / `--switch` parser (clap is unavailable offline).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed flag map with typed accessors and unknown-flag detection at
+/// access time (commands declare what they read; leftovers are reported
+/// by [`Args::finish`]).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs and bare `--switch`es.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument `{tok}`");
+            };
+            if name.is_empty() {
+                bail!("bare `--` is not supported");
+            }
+            // --key=value form
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                i += 1;
+                continue;
+            }
+            // --key value form (value must not look like a flag)
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                switches.push(name.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { flags, switches, consumed: Default::default() })
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{key} `{s}`: {e}")),
+        }
+    }
+
+    /// Bare switch presence (e.g. `--cpu-ref`).
+    pub fn switch(&self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Error on any flag the command never read (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.iter().any(|c| c == *k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_switches() {
+        let a = Args::parse(&sv(&["--iters", "25", "--cpu-ref", "--seed=7"])).unwrap();
+        assert_eq!(a.get_parse_or("iters", 0usize).unwrap(), 25);
+        assert_eq!(a.get_parse_or("seed", 0u64).unwrap(), 7);
+        assert!(a.switch("cpu-ref"));
+        assert!(!a.switch("accel"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["train"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_reported() {
+        let a = Args::parse(&sv(&["--oops", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_or("work", "./work"), "./work");
+        assert_eq!(a.get_parse_or("batch", 256usize).unwrap(), 256);
+    }
+}

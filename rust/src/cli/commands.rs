@@ -1,0 +1,74 @@
+//! CLI command implementations. Each command is a thin wrapper over the
+//! library: parse flags → load config → call into the pipeline stages.
+
+use anyhow::Result;
+
+use super::Args;
+
+/// `smoke --hlo PATH [--inputs 2x3:f32,4:i32]` — compile + run an HLO
+/// artifact with zero-filled inputs; prints output shapes. Diagnostic for
+/// the AOT bridge.
+pub fn smoke(args: &Args) -> Result<()> {
+    let path = args.require("hlo")?;
+    let spec_str = args.get_or("inputs", "");
+    args.finish()?;
+    let specs: Vec<(Vec<usize>, &str)> = spec_str
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            let (dims, ty) = s.split_once(':').unwrap_or((s, "f32"));
+            let shape = dims
+                .split('x')
+                .filter(|d| !d.is_empty())
+                .map(|d| d.parse().expect("bad dim"))
+                .collect();
+            (shape, if ty == "i32" { "i32" } else { "f32" })
+        })
+        .collect();
+    let outs = crate::runtime::smoke_run(&path, &specs)?;
+    for (i, t) in outs.iter().enumerate() {
+        println!("output[{i}]: shape={:?}", t.shape());
+    }
+    println!("smoke OK ({} outputs)", outs.len());
+    Ok(())
+}
+
+/// `synth` — generate the synthetic corpus (features + speaker labels).
+pub fn synth(args: &Args) -> Result<()> {
+    crate::coordinator::stages::synth(args)
+}
+
+/// `train-ubm` — train the diagonal + full-covariance UBM.
+pub fn train_ubm(args: &Args) -> Result<()> {
+    crate::coordinator::stages::train_ubm(args)
+}
+
+/// `align` — compute pruned frame posteriors for the corpus.
+pub fn align(args: &Args) -> Result<()> {
+    crate::coordinator::stages::align(args)
+}
+
+/// `train` — train the i-vector extractor (one variant / seed).
+pub fn train(args: &Args) -> Result<()> {
+    crate::coordinator::stages::train(args)
+}
+
+/// `extract` — extract i-vectors for a dataset with a trained model.
+pub fn extract(args: &Args) -> Result<()> {
+    crate::coordinator::stages::extract(args)
+}
+
+/// `backend` — train the LDA+PLDA backend.
+pub fn backend(args: &Args) -> Result<()> {
+    crate::coordinator::stages::backend(args)
+}
+
+/// `eval` — score the trial list and print EER / minDCF.
+pub fn eval(args: &Args) -> Result<()> {
+    crate::coordinator::stages::eval(args)
+}
+
+/// `pipeline` — run every stage end-to-end.
+pub fn pipeline(args: &Args) -> Result<()> {
+    crate::coordinator::stages::pipeline(args)
+}

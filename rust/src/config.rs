@@ -1,0 +1,355 @@
+//! Config system: a TOML-subset parser plus the typed experiment config.
+//!
+//! No serde/toml crates are available offline, so `parse_toml` handles
+//! the subset the configs use: `[section]` headers, `key = value` with
+//! string / integer / float / boolean scalars, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value> {
+        let s = raw.trim();
+        if let Some(stripped) = s.strip_prefix('"') {
+            let inner = stripped.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string: {s}"))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        match s {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value `{s}`")
+    }
+}
+
+/// `section.key → value` map from a TOML-subset document.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    values: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // a '#' inside a quoted string would break this; configs
+                // don't use '#' in strings.
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| anyhow!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() { k.trim().to_string() } else { format!("{section}.{}", k.trim()) };
+            values.insert(key, Value::parse(v).with_context(|| format!("line {}", lineno + 1))?);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(other) => bail!("{key}: expected number, got {other:?}"),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
+            Some(other) => bail!("{key}: expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(other) => bail!("{key}: expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.values.get(key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(other) => bail!("{key}: expected string, got {other:?}"),
+        }
+    }
+}
+
+/// Synthetic-corpus parameters (DESIGN.md substitution table: stands in
+/// for VoxCeleb + the Kaldi MFCC front-end).
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub n_train_speakers: usize,
+    pub utts_per_train_speaker: usize,
+    pub n_eval_speakers: usize,
+    pub utts_per_eval_speaker: usize,
+    pub min_frames: usize,
+    pub max_frames: usize,
+    /// Base feature dim before deltas (final dim = 3 × this).
+    pub base_dim: usize,
+    /// Ground-truth world GMM components.
+    pub true_components: usize,
+    /// Rank / scale of the ground-truth speaker subspace.
+    pub speaker_rank: usize,
+    pub speaker_scale: f64,
+    /// Rank / scale of the ground-truth channel subspace.
+    pub channel_rank: usize,
+    pub channel_scale: f64,
+    /// Sticky-Markov stay probability (gives deltas temporal structure).
+    pub stay_prob: f64,
+    /// Fraction of leading/trailing silence frames (exercises VAD).
+    pub silence_frac: f64,
+    pub seed: u64,
+}
+
+/// UBM parameters (paper: 2048 full-cov components — scaled here).
+#[derive(Debug, Clone)]
+pub struct UbmConfig {
+    pub components: usize,
+    pub diag_em_iters: usize,
+    pub full_em_iters: usize,
+    /// Frames subsampled for UBM training.
+    pub train_frames: usize,
+    pub var_floor: f64,
+}
+
+/// Total-variability model parameters.
+#[derive(Debug, Clone)]
+pub struct TvmConfig {
+    /// i-vector dimension (paper: 400).
+    pub rank: usize,
+    /// EM iterations (paper explores up to 200; optimum ≈ 22).
+    pub iters: usize,
+    /// Top-K Gaussians kept per frame in alignment (paper: 20).
+    pub top_k: usize,
+    /// Posterior pruning threshold (paper: 0.025).
+    pub min_post: f64,
+    /// Prior offset for the augmented formulation (Kaldi: 100).
+    pub prior_offset: f64,
+    /// Utterances used for extractor training (paper: 100k longest).
+    pub train_utts: usize,
+    /// Device batch size (utterances per E-step dispatch).
+    pub batch_utts: usize,
+    /// Frames per alignment dispatch.
+    pub batch_frames: usize,
+}
+
+/// Backend parameters.
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    /// LDA output dim (paper: 400 → 200; scaled).
+    pub lda_dim: usize,
+    pub plda_iters: usize,
+}
+
+/// Trial-list parameters (paper: VoxCeleb1 protocol, 37 720 trials,
+/// equal target/non-target).
+#[derive(Debug, Clone)]
+pub struct TrialConfig {
+    pub n_trials: usize,
+    pub seed: u64,
+}
+
+/// Full experiment config.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub corpus: CorpusConfig,
+    pub ubm: UbmConfig,
+    pub tvm: TvmConfig,
+    pub backend: BackendConfig,
+    pub trials: TrialConfig,
+}
+
+impl Config {
+    /// Built-in defaults (the scaled-down VoxCeleb recipe of DESIGN.md).
+    pub fn default_scaled() -> Self {
+        Self {
+            corpus: CorpusConfig {
+                n_train_speakers: 150,
+                utts_per_train_speaker: 12,
+                n_eval_speakers: 40,
+                utts_per_eval_speaker: 8,
+                // ≥ ~250 speech frames/utt keeps per-component stats
+                // informative at C = 64 (validated: shorter utterances
+                // drown the speaker offsets in estimation noise)
+                min_frames: 250,
+                max_frames: 450,
+                base_dim: 8,
+                true_components: 64,
+                speaker_rank: 24,
+                speaker_scale: 1.0,
+                channel_rank: 12,
+                channel_scale: 0.25,
+                stay_prob: 0.9,
+                silence_frac: 0.12,
+                seed: 20190915,
+            },
+            ubm: UbmConfig {
+                components: 64,
+                diag_em_iters: 8,
+                full_em_iters: 4,
+                train_frames: 100_000,
+                var_floor: 1e-3,
+            },
+            tvm: TvmConfig {
+                rank: 64,
+                iters: 22,
+                top_k: 20,
+                min_post: 0.025,
+                prior_offset: 100.0,
+                train_utts: usize::MAX,
+                batch_utts: 64,
+                batch_frames: 4096,
+            },
+            backend: BackendConfig { lda_dim: 32, plda_iters: 8 },
+            trials: TrialConfig { n_trials: 8000, seed: 7 },
+        }
+    }
+
+    /// Defaults overridden by a TOML-subset file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let doc = Doc::load(path)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Defaults overridden by a parsed document.
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = Self::default_scaled();
+        Ok(Self {
+            corpus: CorpusConfig {
+                n_train_speakers: doc.get_usize("corpus.n_train_speakers", d.corpus.n_train_speakers)?,
+                utts_per_train_speaker: doc.get_usize("corpus.utts_per_train_speaker", d.corpus.utts_per_train_speaker)?,
+                n_eval_speakers: doc.get_usize("corpus.n_eval_speakers", d.corpus.n_eval_speakers)?,
+                utts_per_eval_speaker: doc.get_usize("corpus.utts_per_eval_speaker", d.corpus.utts_per_eval_speaker)?,
+                min_frames: doc.get_usize("corpus.min_frames", d.corpus.min_frames)?,
+                max_frames: doc.get_usize("corpus.max_frames", d.corpus.max_frames)?,
+                base_dim: doc.get_usize("corpus.base_dim", d.corpus.base_dim)?,
+                true_components: doc.get_usize("corpus.true_components", d.corpus.true_components)?,
+                speaker_rank: doc.get_usize("corpus.speaker_rank", d.corpus.speaker_rank)?,
+                speaker_scale: doc.get_f64("corpus.speaker_scale", d.corpus.speaker_scale)?,
+                channel_rank: doc.get_usize("corpus.channel_rank", d.corpus.channel_rank)?,
+                channel_scale: doc.get_f64("corpus.channel_scale", d.corpus.channel_scale)?,
+                stay_prob: doc.get_f64("corpus.stay_prob", d.corpus.stay_prob)?,
+                silence_frac: doc.get_f64("corpus.silence_frac", d.corpus.silence_frac)?,
+                seed: doc.get_usize("corpus.seed", d.corpus.seed as usize)? as u64,
+            },
+            ubm: UbmConfig {
+                components: doc.get_usize("ubm.components", d.ubm.components)?,
+                diag_em_iters: doc.get_usize("ubm.diag_em_iters", d.ubm.diag_em_iters)?,
+                full_em_iters: doc.get_usize("ubm.full_em_iters", d.ubm.full_em_iters)?,
+                train_frames: doc.get_usize("ubm.train_frames", d.ubm.train_frames)?,
+                var_floor: doc.get_f64("ubm.var_floor", d.ubm.var_floor)?,
+            },
+            tvm: TvmConfig {
+                rank: doc.get_usize("tvm.rank", d.tvm.rank)?,
+                iters: doc.get_usize("tvm.iters", d.tvm.iters)?,
+                top_k: doc.get_usize("tvm.top_k", d.tvm.top_k)?,
+                min_post: doc.get_f64("tvm.min_post", d.tvm.min_post)?,
+                prior_offset: doc.get_f64("tvm.prior_offset", d.tvm.prior_offset)?,
+                train_utts: doc.get_usize("tvm.train_utts", d.tvm.train_utts)?,
+                batch_utts: doc.get_usize("tvm.batch_utts", d.tvm.batch_utts)?,
+                batch_frames: doc.get_usize("tvm.batch_frames", d.tvm.batch_frames)?,
+            },
+            backend: BackendConfig {
+                lda_dim: doc.get_usize("backend.lda_dim", d.backend.lda_dim)?,
+                plda_iters: doc.get_usize("backend.plda_iters", d.backend.plda_iters)?,
+            },
+            trials: TrialConfig {
+                n_trials: doc.get_usize("trials.n_trials", d.trials.n_trials)?,
+                seed: doc.get_usize("trials.seed", d.trials.seed as usize)? as u64,
+            },
+        })
+    }
+
+    /// Feature dimension after deltas.
+    pub fn feat_dim(&self) -> usize {
+        3 * self.corpus.base_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            "# comment\n\
+             top = 1\n\
+             [tvm]\n\
+             rank = 32   # inline comment\n\
+             min_post = 0.05\n\
+             [corpus]\n\
+             seed = 99\n\
+             name = \"vox-scaled\"\n\
+             flag = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_usize("top", 0).unwrap(), 1);
+        assert_eq!(doc.get_usize("tvm.rank", 0).unwrap(), 32);
+        assert_eq!(doc.get_f64("tvm.min_post", 0.0).unwrap(), 0.05);
+        assert_eq!(doc.get_str("corpus.name", "").unwrap(), "vox-scaled");
+        assert!(doc.get_bool("corpus.flag", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_survive_partial_file() {
+        let doc = Doc::parse("[tvm]\nrank = 16\n").unwrap();
+        let cfg = Config::from_doc(&doc).unwrap();
+        assert_eq!(cfg.tvm.rank, 16);
+        assert_eq!(cfg.tvm.top_k, 20); // default preserved
+        assert_eq!(cfg.feat_dim(), 24);
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let doc = Doc::parse("[tvm]\nrank = \"oops\"\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(Doc::parse("key value no equals").is_err());
+        assert!(Doc::parse("[unclosed\n").is_err());
+    }
+}

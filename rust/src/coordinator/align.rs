@@ -1,0 +1,238 @@
+//! Alignment rounds + Baum-Welch statistics over an archive.
+//!
+//! Two paths compute identical pruned posteriors:
+//! * CPU reference — [`crate::gmm::select_posteriors`] per utterance,
+//!   parallel over utterances;
+//! * accelerated — frames from *all* utterances are packed densely into
+//!   BF-sized device blocks (crossing utterance boundaries, so no
+//!   padding waste) and streamed through the `align_topk` graph.
+
+use anyhow::Result;
+
+use crate::exec::map_parallel;
+use crate::gmm::{select_posteriors, DiagGmm, FullGmm};
+use crate::io::{FeatArchive, Posting};
+use crate::ivector::AccelTvm;
+use crate::linalg::Mat;
+use crate::stats::BwStats;
+
+/// Per-utterance posting lists for a whole archive.
+pub type ArchivePosts = Vec<Vec<Vec<Posting>>>;
+
+/// Globally-accumulated raw statistics (for Σ updates and centering).
+#[derive(Debug, Clone)]
+pub struct GlobalRawStats {
+    /// Σ_u n_c(u).
+    pub n: Vec<f64>,
+    /// Σ_u f_c(u) raw (C × F).
+    pub f: Mat,
+    /// Σ_u S_c(u) raw, C matrices of F × F.
+    pub s: Vec<Mat>,
+}
+
+impl GlobalRawStats {
+    /// Centered second-order stats around `means` (standard
+    /// formulation): `S̃ = S − m f_totᵀ − f_tot mᵀ + n_tot m mᵀ`.
+    pub fn centered_second_order(&self, means: &Mat) -> Vec<Mat> {
+        let c_n = self.n.len();
+        let dim = self.f.cols();
+        (0..c_n)
+            .map(|c| {
+                let m = means.row(c);
+                let ft = self.f.row(c);
+                let nc = self.n[c];
+                let mut sc = self.s[c].clone();
+                for i in 0..dim {
+                    for j in 0..dim {
+                        let v = sc.get(i, j) - m[i] * ft[j] - ft[i] * m[j] + nc * m[i] * m[j];
+                        sc.set(i, j, v);
+                    }
+                }
+                sc
+            })
+            .collect()
+    }
+}
+
+/// CPU reference alignment of a whole archive (parallel over utts).
+pub fn align_archive_cpu(
+    diag: &DiagGmm,
+    full: &FullGmm,
+    archive: &FeatArchive,
+    top_k: usize,
+    min_post: f64,
+    workers: usize,
+) -> ArchivePosts {
+    map_parallel(archive.utts.len(), workers, |i| {
+        select_posteriors(diag, full, &archive.utts[i].feats, top_k, min_post)
+    })
+}
+
+/// Accelerated alignment: dense frame packing across utterances.
+pub fn align_archive_accel(
+    accel: &AccelTvm,
+    diag: &DiagGmm,
+    full: &FullGmm,
+    archive: &FeatArchive,
+) -> Result<ArchivePosts> {
+    let dims = accel.dims;
+    let aligner = crate::ivector::accel::AccelAligner::new(accel.runtime(), dims, diag, full)?;
+    let f_dim = archive.dim();
+    let total: usize = archive.total_frames();
+
+    // pack every frame of every utterance into BF-sized blocks
+    let mut out: ArchivePosts = archive.utts.iter().map(|u| Vec::with_capacity(u.feats.rows())).collect();
+    let mut block = Mat::zeros(dims.bf, f_dim);
+    let mut owners: Vec<usize> = Vec::with_capacity(dims.bf); // utt index per row
+    let mut filled = 0usize;
+    let flush = |block: &Mat, owners: &[usize], filled: usize, out: &mut ArchivePosts| -> Result<()> {
+        if filled == 0 {
+            return Ok(());
+        }
+        let posts = aligner.align_block(block, filled)?;
+        for (row, frame_posts) in posts.into_iter().enumerate() {
+            out[owners[row]].push(frame_posts);
+        }
+        Ok(())
+    };
+
+    for (ui, u) in archive.utts.iter().enumerate() {
+        for t in 0..u.feats.rows() {
+            block.row_mut(filled).copy_from_slice(u.feats.row(t));
+            owners.push(ui);
+            filled += 1;
+            if filled == dims.bf {
+                flush(&block, &owners, filled, &mut out)?;
+                filled = 0;
+                owners.clear();
+            }
+        }
+    }
+    flush(&block, &owners, filled, &mut out)?;
+    debug_assert_eq!(out.iter().map(|u| u.len()).sum::<usize>(), total);
+    Ok(out)
+}
+
+/// Raw per-utterance first-order stats + global accumulators from
+/// aligned posteriors (parallel over utterances). This is the CPU side
+/// of the paper's pipeline ("Baum-Welch statistics … computed in CPU").
+pub fn stats_from_posts(
+    archive: &FeatArchive,
+    posts: &ArchivePosts,
+    n_components: usize,
+    workers: usize,
+) -> (Vec<BwStats>, GlobalRawStats) {
+    let per_utt: Vec<BwStats> = map_parallel(archive.utts.len(), workers, |i| {
+        BwStats::accumulate(&archive.utts[i].feats, &posts[i], n_components, true)
+    });
+    let dim = archive.dim();
+    let mut global = GlobalRawStats {
+        n: vec![0.0; n_components],
+        f: Mat::zeros(n_components, dim),
+        s: vec![Mat::zeros(dim, dim); n_components],
+    };
+    let mut light = Vec::with_capacity(per_utt.len());
+    for st in per_utt {
+        for (a, &b) in global.n.iter_mut().zip(&st.n) {
+            *a += b;
+        }
+        global.f.add_scaled(1.0, &st.f);
+        if let Some(s) = &st.s {
+            for (g, u) in global.s.iter_mut().zip(s) {
+                g.add_scaled(1.0, u);
+            }
+        }
+        // keep only the first-order stats per utterance (second-order
+        // lives in the global accumulator — Kaldi does the same)
+        light.push(BwStats { n: st.n, f: st.f, s: None });
+    }
+    (light, global)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::frontend::synth::generate_corpus;
+    use crate::gmm::{train_ubm, UbmPair};
+
+    pub(crate) fn tiny_setup() -> (FeatArchive, UbmPair) {
+        let cfg = CorpusConfig {
+            n_train_speakers: 5,
+            utts_per_train_speaker: 3,
+            n_eval_speakers: 2,
+            utts_per_eval_speaker: 2,
+            min_frames: 50,
+            max_frames: 80,
+            base_dim: 4,
+            true_components: 6,
+            speaker_rank: 4,
+            speaker_scale: 0.4,
+            channel_rank: 2,
+            channel_scale: 0.15,
+            stay_prob: 0.85,
+            silence_frac: 0.1,
+            seed: 99,
+        };
+        let corpus = generate_corpus(&cfg).unwrap();
+        let ubm_cfg = crate::config::UbmConfig {
+            components: 8,
+            diag_em_iters: 3,
+            full_em_iters: 2,
+            train_frames: 3000,
+            var_floor: 1e-3,
+        };
+        let (pair, _) = train_ubm(&corpus.train, &ubm_cfg, 1).unwrap();
+        (corpus.train, pair)
+    }
+
+    #[test]
+    fn cpu_alignment_covers_all_frames() {
+        let (arch, ubm) = tiny_setup();
+        let posts = align_archive_cpu(&ubm.diag, &ubm.full, &arch, 5, 0.025, 4);
+        assert_eq!(posts.len(), arch.utts.len());
+        for (u, p) in arch.utts.iter().zip(&posts) {
+            assert_eq!(p.len(), u.feats.rows());
+            for frame in p {
+                assert!(!frame.is_empty());
+                let total: f32 = frame.iter().map(|x| x.post).sum();
+                assert!((total - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_totals_match_frame_count() {
+        let (arch, ubm) = tiny_setup();
+        let posts = align_archive_cpu(&ubm.diag, &ubm.full, &arch, 5, 0.025, 4);
+        let (per_utt, global) = stats_from_posts(&arch, &posts, 8, 4);
+        assert_eq!(per_utt.len(), arch.utts.len());
+        let total_frames: f64 = arch.utts.iter().map(|u| u.feats.rows() as f64).sum();
+        let total_n: f64 = global.n.iter().sum();
+        assert!((total_n - total_frames).abs() < 1e-6 * total_frames);
+        // per-utt stats sum to global
+        let mut n_sum = 0.0;
+        for st in &per_utt {
+            n_sum += st.total_count();
+            assert!(st.s.is_none(), "per-utt second order must be dropped");
+        }
+        assert!((n_sum - total_n).abs() < 1e-6 * total_n);
+    }
+
+    #[test]
+    fn centered_second_order_is_psd_like() {
+        let (arch, ubm) = tiny_setup();
+        let posts = align_archive_cpu(&ubm.diag, &ubm.full, &arch, 5, 0.025, 4);
+        let (_per_utt, global) = stats_from_posts(&arch, &posts, 8, 4);
+        let centered = global.centered_second_order(&ubm.full.means);
+        for (c, sc) in centered.iter().enumerate() {
+            if global.n[c] < 1.0 {
+                continue;
+            }
+            // diagonal of a centered scatter must be non-negative
+            for i in 0..sc.rows() {
+                assert!(sc.get(i, i) > -1e-6, "S̃[{c}][{i}][{i}] = {}", sc.get(i, i));
+            }
+        }
+    }
+}

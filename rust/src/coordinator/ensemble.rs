@@ -1,0 +1,251 @@
+//! Ensemble experiment harness: the paper reports every curve as the
+//! average of five random restarts; this module runs (variant × seed)
+//! grids and evaluates EER per training iteration.
+
+use anyhow::Result;
+
+use crate::backend::{Backend, BackendOpts};
+use crate::config::Config;
+use crate::exec::default_workers;
+use crate::gmm::{DiagGmm, FullGmm};
+use crate::io::FeatArchive;
+use crate::ivector::{extract_cpu, AccelTvm, TrainVariant, TvModel, UttStats};
+use crate::stats::BwStats;
+use crate::trials::{det_metrics, generate_trials, Trial};
+
+use super::align::{align_archive_cpu, stats_from_posts, GlobalRawStats};
+use super::trainer::{train_tvm_with_stats, ComputePath, IterCtx, IterStats, TrainSetup};
+
+/// Evaluation harness: extracts i-vectors for the backend-training and
+/// eval sets, trains the LDA/PLDA backend, scores the trial list, and
+/// returns pooled EER. Alignments are cached and recomputed only when
+/// the trainer realigned (the paper's "updated UBM is used in the
+/// testing phase").
+pub struct EvalHarness<'a> {
+    cfg: &'a Config,
+    backend_train: &'a FeatArchive,
+    eval: &'a FeatArchive,
+    trials: Vec<Trial>,
+    eval_spk: Vec<usize>,
+    backend_spk: Vec<usize>,
+    // cached stats (invalidated on realignment)
+    cache: Option<(Vec<BwStats>, Vec<BwStats>)>,
+}
+
+/// Alignment products shared across ensemble runs over one fixed UBM:
+/// trainer-side per-utterance stats + eval-harness stats.
+#[derive(Clone)]
+pub struct SharedAlignment {
+    pub train_stats: (Vec<BwStats>, GlobalRawStats),
+    pub harness_stats: (Vec<BwStats>, Vec<BwStats>),
+}
+
+impl<'a> EvalHarness<'a> {
+    pub fn new(cfg: &'a Config, backend_train: &'a FeatArchive, eval: &'a FeatArchive) -> Self {
+        let eval_spk = speaker_indices(eval);
+        let backend_spk = speaker_indices(backend_train);
+        let trials = generate_trials(&eval_spk, cfg.trials.n_trials, cfg.trials.seed);
+        Self { cfg, backend_train, eval, trials, eval_spk, backend_spk, cache: None }
+    }
+
+    /// Seed the alignment cache (shared across ensemble runs).
+    pub fn set_cache(&mut self, cache: (Vec<BwStats>, Vec<BwStats>)) {
+        self.cache = Some(cache);
+    }
+
+    /// EER (%) for the current model/UBM state. `whiten` should be set
+    /// when the variant skipped min-div (paper §4.1).
+    pub fn eer(&mut self, ctx: &IterCtx, whiten: bool) -> Result<f64> {
+        let workers = default_workers();
+        if ctx.realigned {
+            self.cache = None;
+        }
+        if self.cache.is_none() {
+            let stats_of = |arch: &FeatArchive| {
+                let posts = align_archive_cpu(
+                    ctx.diag,
+                    ctx.full,
+                    arch,
+                    self.cfg.tvm.top_k,
+                    self.cfg.tvm.min_post,
+                    workers,
+                );
+                stats_from_posts(arch, &posts, self.cfg.ubm.components, workers).0
+            };
+            self.cache = Some((stats_of(self.backend_train), stats_of(self.eval)));
+        }
+        let (bt_stats, ev_stats) = self.cache.as_ref().unwrap();
+
+        let to_utt = |bw: &BwStats| UttStats::from_bw(bw, ctx.model);
+        let bt_utts: Vec<UttStats> = bt_stats.iter().map(to_utt).collect();
+        let ev_utts: Vec<UttStats> = ev_stats.iter().map(to_utt).collect();
+        let bt_iv = extract_cpu(ctx.model, &bt_utts, workers);
+        let ev_iv = extract_cpu(ctx.model, &ev_utts, workers);
+
+        let backend = Backend::train(
+            &bt_iv,
+            &self.backend_spk,
+            &BackendOpts {
+                lda_dim: self.cfg.backend.lda_dim,
+                plda_iters: self.cfg.backend.plda_iters,
+                whiten,
+            },
+        )?;
+        let proj = backend.project(&ev_iv);
+        let scores = backend.score(&proj, &proj);
+        let scored: Vec<(f64, bool)> = self
+            .trials
+            .iter()
+            .map(|t| (scores.get(t.enroll, t.test), t.target))
+            .collect();
+        Ok(det_metrics(&scored).eer_pct)
+    }
+
+    /// The trial list (exposed for examples that report counts).
+    pub fn trial_count(&self) -> usize {
+        self.trials.len()
+    }
+
+    /// Eval speaker labels per utterance row.
+    pub fn eval_speakers(&self) -> &[usize] {
+        &self.eval_spk
+    }
+}
+
+/// Map utterances to dense speaker indices.
+pub fn speaker_indices(arch: &FeatArchive) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    arch.utts
+        .iter()
+        .map(|u| {
+            let next = map.len();
+            *map.entry(u.spk_id.clone()).or_insert(next)
+        })
+        .collect()
+}
+
+/// One (variant, seed) training run with per-iteration EER tracking.
+#[derive(Debug, Clone)]
+pub struct RunCurve {
+    pub variant_id: String,
+    pub seed: u64,
+    pub eer_by_iter: Vec<f64>,
+    pub iter_stats: Vec<IterStats>,
+}
+
+/// Train one variant with one seed, evaluating EER after every
+/// iteration. `eval_every` thins the (expensive) EER evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn run_curve(
+    cfg: &Config,
+    train: &FeatArchive,
+    eval: &FeatArchive,
+    diag: &DiagGmm,
+    full: &FullGmm,
+    variant: TrainVariant,
+    iters: usize,
+    seed: u64,
+    eval_every: usize,
+    path: ComputePath,
+    accel: Option<&mut AccelTvm>,
+) -> Result<(TvModel, RunCurve)> {
+    run_curve_shared(cfg, train, eval, diag, full, variant, iters, seed, eval_every, path, accel, None)
+}
+
+/// [`run_curve`] with alignments shared across runs (fig2-style
+/// ensembles over one fixed UBM — a large wall-time win on this
+/// single-core testbed; see EXPERIMENTS.md §Perf).
+#[allow(clippy::too_many_arguments)]
+pub fn run_curve_shared(
+    cfg: &Config,
+    train: &FeatArchive,
+    eval: &FeatArchive,
+    diag: &DiagGmm,
+    full: &FullGmm,
+    variant: TrainVariant,
+    iters: usize,
+    seed: u64,
+    eval_every: usize,
+    path: ComputePath,
+    accel: Option<&mut AccelTvm>,
+    shared: Option<&SharedAlignment>,
+) -> Result<(TvModel, RunCurve)> {
+    let mut setup =
+        TrainSetup { cfg, feats: train, diag: diag.clone(), full: full.clone() };
+    let mut harness = EvalHarness::new(cfg, train, eval);
+    if let Some(sh) = shared {
+        harness.set_cache(sh.harness_stats.clone());
+    }
+    let whiten = !variant.min_divergence;
+    let mut eers = Vec::new();
+    let (model, hist) = train_tvm_with_stats(
+        &mut setup,
+        variant,
+        iters,
+        seed,
+        path,
+        accel,
+        shared.map(|sh| sh.train_stats.clone()),
+        &mut |ctx| {
+            if (ctx.iter + 1) % eval_every == 0 || ctx.iter + 1 == iters {
+                let eer = harness.eer(&ctx, whiten).expect("eval harness");
+                eers.push(eer);
+                Some(eer)
+            } else {
+                None
+            }
+        },
+    )?;
+    Ok((
+        model,
+        RunCurve {
+            variant_id: variant.id(),
+            seed,
+            eer_by_iter: eers,
+            iter_stats: hist,
+        },
+    ))
+}
+
+/// Average curves across seeds (the paper's five-run ensembles).
+pub fn mean_curve(curves: &[RunCurve]) -> Vec<f64> {
+    if curves.is_empty() {
+        return Vec::new();
+    }
+    let len = curves.iter().map(|c| c.eer_by_iter.len()).min().unwrap_or(0);
+    (0..len)
+        .map(|i| curves.iter().map(|c| c.eer_by_iter[i]).sum::<f64>() / curves.len() as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speaker_indices_dense_and_stable() {
+        use crate::io::Utterance;
+        use crate::linalg::Mat;
+        let arch = FeatArchive {
+            utts: vec![
+                Utterance { utt_id: "a0".into(), spk_id: "a".into(), feats: Mat::zeros(1, 2) },
+                Utterance { utt_id: "b0".into(), spk_id: "b".into(), feats: Mat::zeros(1, 2) },
+                Utterance { utt_id: "a1".into(), spk_id: "a".into(), feats: Mat::zeros(1, 2) },
+            ],
+        };
+        assert_eq!(speaker_indices(&arch), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn mean_curve_averages() {
+        let mk = |eers: Vec<f64>| RunCurve {
+            variant_id: "x".into(),
+            seed: 0,
+            eer_by_iter: eers,
+            iter_stats: vec![],
+        };
+        let m = mean_curve(&[mk(vec![4.0, 2.0]), mk(vec![6.0, 4.0, 9.0])]);
+        assert_eq!(m, vec![5.0, 3.0]); // truncates to shortest
+        assert!(mean_curve(&[]).is_empty());
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's training system.
+//!
+//! * [`align`] — frame-alignment rounds (CPU reference and accelerated
+//!   paths) + Baum-Welch statistics over the corpus.
+//! * [`trainer`] — the five-step EM schedule of §3.2 with optional
+//!   in-training realignment, pipelined CPU loaders feeding the device
+//!   (the paper's Fig. 1), per-iteration diagnostics.
+//! * [`ensemble`] — multi-seed ensemble runs (the paper averages five
+//!   random restarts for every curve).
+//! * [`stages`] — CLI stage implementations (synth → ubm → align →
+//!   train → extract → backend → eval).
+
+pub mod align;
+pub mod ensemble;
+pub mod stages;
+pub mod trainer;
+
+pub use align::{align_archive_accel, align_archive_cpu, stats_from_posts, GlobalRawStats};
+pub use trainer::{run_alignment, train_tvm, train_tvm_with_stats, ComputePath, IterCtx, IterStats, TrainSetup};

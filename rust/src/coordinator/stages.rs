@@ -1,0 +1,377 @@
+//! CLI stage implementations: each command reads/writes the work dir
+//! so stages compose like a Kaldi recipe (`synth → train-ubm → align →
+//! train → extract → backend → eval`), and `pipeline` chains them
+//! in-process.
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, BackendOpts};
+use crate::cli::Args;
+use crate::config::Config;
+use crate::exec::default_workers;
+use crate::frontend::synth::generate_corpus;
+use crate::gmm::{DiagGmm, FullGmm};
+use crate::io::{load, save, FeatArchive, PostArchive, Serialize, UttPosts};
+use crate::ivector::{
+    extract_cpu, AccelTvm, Formulation, TrainVariant, TvModel, UttStats,
+};
+use crate::linalg::Mat;
+use crate::metrics::{rt_factor, Stopwatch};
+use crate::trials::{det_metrics, generate_trials};
+
+use super::align::{align_archive_accel, align_archive_cpu, stats_from_posts};
+use super::trainer::{train_tvm, ComputePath, TrainSetup};
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.get("config") {
+        Some(path) => Config::load(&path),
+        None => Ok(Config::default_scaled()),
+    }
+}
+
+fn work_dir(args: &Args) -> String {
+    args.get_or("work", "./work")
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "./artifacts")
+}
+
+/// `synth`: generate the corpus archives.
+pub fn synth(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    args.finish()?;
+    let sw = Stopwatch::start();
+    let corpus = generate_corpus(&cfg.corpus)?;
+    corpus.train.save(format!("{work}/train.feats"))?;
+    corpus.eval.save(format!("{work}/eval.feats"))?;
+    println!(
+        "synth: {} train utts ({} frames), {} eval utts ({} frames) in {:.1}s -> {work}/",
+        corpus.train.utts.len(),
+        corpus.train.total_frames(),
+        corpus.eval.utts.len(),
+        corpus.eval.total_frames(),
+        sw.elapsed_s()
+    );
+    Ok(())
+}
+
+/// `train-ubm`: diagonal + full UBM.
+pub fn train_ubm_stage(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    args.finish()?;
+    let train = FeatArchive::load(format!("{work}/train.feats"))
+        .context("run `ivector-tv synth` first")?;
+    let sw = Stopwatch::start();
+    let (pair, lls) = crate::gmm::train_ubm(&train, &cfg.ubm, cfg.corpus.seed)?;
+    save(&pair.diag, format!("{work}/ubm.diag"))?;
+    save(&pair.full, format!("{work}/ubm.full"))?;
+    println!(
+        "train-ubm: C={} in {:.1}s (diag EM ll: {:.3} -> {:.3})",
+        cfg.ubm.components,
+        sw.elapsed_s(),
+        lls.first().unwrap_or(&f64::NAN),
+        lls.last().unwrap_or(&f64::NAN)
+    );
+    Ok(())
+}
+
+/// `align`: frame posteriors for the train archive.
+pub fn align(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    let arts = artifacts_dir(args);
+    let cpu_ref = args.switch("cpu-ref");
+    args.finish()?;
+    let train = FeatArchive::load(format!("{work}/train.feats"))?;
+    let diag: DiagGmm = load(format!("{work}/ubm.diag"))?;
+    let full: FullGmm = load(format!("{work}/ubm.full"))?;
+
+    let sw = Stopwatch::start();
+    let posts = if cpu_ref {
+        align_archive_cpu(&diag, &full, &train, cfg.tvm.top_k, cfg.tvm.min_post, default_workers())
+    } else {
+        let accel = AccelTvm::new(&arts)?.with_alignment()?;
+        align_archive_accel(&accel, &diag, &full, &train)?
+    };
+    let wall = sw.elapsed_s();
+    let frames = train.total_frames();
+    let archive = PostArchive {
+        utts: train
+            .utts
+            .iter()
+            .zip(posts)
+            .map(|(u, frames)| UttPosts { utt_id: u.utt_id.clone(), frames })
+            .collect(),
+    };
+    let avg: f64 = archive.utts.iter().map(|u| u.avg_postings()).sum::<f64>()
+        / archive.utts.len().max(1) as f64;
+    archive.save(format!("{work}/train.posts"))?;
+    println!(
+        "align[{}]: {frames} frames in {wall:.2}s = {:.0}x real time, {:.2} postings/frame",
+        if cpu_ref { "cpu-ref" } else { "accel" },
+        rt_factor(frames, wall),
+        avg
+    );
+    Ok(())
+}
+
+fn variant_from_args(args: &Args) -> Result<TrainVariant> {
+    let formulation = match args.get_or("variant", "aug").as_str() {
+        "std" | "standard" => Formulation::Standard,
+        "aug" | "augmented" => Formulation::Augmented,
+        other => anyhow::bail!("--variant must be std|aug, got `{other}`"),
+    };
+    let realign = args.get_parse_or("realign-every", 0usize)?;
+    Ok(TrainVariant {
+        formulation,
+        min_divergence: formulation == Formulation::Augmented || args.switch("mindiv"),
+        sigma_update: args.switch("sigma"),
+        realign_every: (realign > 0).then_some(realign),
+    })
+}
+
+/// `train`: train the i-vector extractor.
+pub fn train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    let arts = artifacts_dir(args);
+    let variant = variant_from_args(args)?;
+    let iters = args.get_parse_or("iters", cfg.tvm.iters)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let cpu_ref = args.switch("cpu-ref");
+    args.finish()?;
+
+    let train_arch = FeatArchive::load(format!("{work}/train.feats"))?;
+    let diag: DiagGmm = load(format!("{work}/ubm.diag"))?;
+    let full: FullGmm = load(format!("{work}/ubm.full"))?;
+    let mut setup = TrainSetup { cfg: &cfg, feats: &train_arch, diag, full };
+
+    let sw = Stopwatch::start();
+    let (path, mut accel) = if cpu_ref {
+        (ComputePath::CpuRef, None)
+    } else {
+        (ComputePath::Accel, Some(AccelTvm::new(&arts)?.with_alignment()?))
+    };
+    let (model, hist) = train_tvm(
+        &mut setup,
+        variant,
+        iters,
+        seed,
+        path,
+        accel.as_mut(),
+        &mut |_| None,
+    )?;
+    save(&model, format!("{work}/tvm.bin"))?;
+    // persist the (possibly realigned) UBM alongside the model — the
+    // paper uses the *updated* UBM at test time
+    save(&setup.diag, format!("{work}/ubm_final.diag"))?;
+    save(&setup.full, format!("{work}/ubm_final.full"))?;
+    let estep_total: f64 = hist.iter().map(|h| h.estep_s).sum();
+    println!(
+        "train[{}|{}]: variant={} iters={iters} seed={seed} in {:.1}s (estep {:.1}s, final tΔ {:.2e})",
+        if cpu_ref { "cpu-ref" } else { "accel" },
+        variant.id(),
+        variant.id(),
+        sw.elapsed_s(),
+        estep_total,
+        hist.last().map(|h| h.t_delta).unwrap_or(f64::NAN),
+    );
+    Ok(())
+}
+
+/// i-vector file: ids + speaker labels + row matrix.
+pub struct IvecSet {
+    pub utt_ids: Vec<String>,
+    pub spk_ids: Vec<String>,
+    pub vectors: Mat,
+}
+
+impl Serialize for IvecSet {
+    fn write(&self, w: &mut crate::io::BinWriter) -> Result<()> {
+        w.write_u64(self.utt_ids.len() as u64)?;
+        for (u, s) in self.utt_ids.iter().zip(&self.spk_ids) {
+            w.write_string(u)?;
+            w.write_string(s)?;
+        }
+        self.vectors.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> Result<Self> {
+        let n = r.read_u64()? as usize;
+        let mut utt_ids = Vec::with_capacity(n);
+        let mut spk_ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            utt_ids.push(r.read_string()?);
+            spk_ids.push(r.read_string()?);
+        }
+        Ok(Self { utt_ids, spk_ids, vectors: Mat::read(r)? })
+    }
+}
+
+fn extract_set(
+    cfg: &Config,
+    model: &TvModel,
+    diag: &DiagGmm,
+    full: &FullGmm,
+    arch: &FeatArchive,
+) -> IvecSet {
+    let workers = default_workers();
+    let posts = align_archive_cpu(diag, full, arch, cfg.tvm.top_k, cfg.tvm.min_post, workers);
+    let (bw, _) = stats_from_posts(arch, &posts, cfg.ubm.components, workers);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, model)).collect();
+    IvecSet {
+        utt_ids: arch.utts.iter().map(|u| u.utt_id.clone()).collect(),
+        spk_ids: arch.utts.iter().map(|u| u.spk_id.clone()).collect(),
+        vectors: extract_cpu(model, &utts, workers),
+    }
+}
+
+/// `extract`: i-vectors for train (backend) and eval sets.
+pub fn extract(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    args.finish()?;
+    let model: TvModel = load(format!("{work}/tvm.bin"))?;
+    let diag: DiagGmm = load(format!("{work}/ubm_final.diag"))?;
+    let full: FullGmm = load(format!("{work}/ubm_final.full"))?;
+    let sw = Stopwatch::start();
+    for (name, file) in [("train", "train.feats"), ("eval", "eval.feats")] {
+        let arch = FeatArchive::load(format!("{work}/{file}"))?;
+        let set = extract_set(&cfg, &model, &diag, &full, &arch);
+        save(&set, format!("{work}/{name}.ivecs"))?;
+        println!(
+            "extract: {} {} i-vectors (dim {})",
+            set.vectors.rows(),
+            name,
+            set.vectors.cols()
+        );
+    }
+    println!("extract done in {:.1}s", sw.elapsed_s());
+    Ok(())
+}
+
+/// `backend`: train LDA + PLDA on the train i-vectors.
+pub fn backend(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    let whiten = args.switch("whiten");
+    args.finish()?;
+    let set: IvecSet = load(format!("{work}/train.ivecs"))?;
+    let spk = dense_labels(&set.spk_ids);
+    let be = Backend::train(
+        &set.vectors,
+        &spk,
+        &BackendOpts { lda_dim: cfg.backend.lda_dim, plda_iters: cfg.backend.plda_iters, whiten },
+    )?;
+    save(&be, format!("{work}/backend.bin"))?;
+    println!("backend: LDA {}→{}, PLDA {} iters", set.vectors.cols(), cfg.backend.lda_dim, cfg.backend.plda_iters);
+    Ok(())
+}
+
+/// `eval`: score the trial list, print EER/minDCF.
+pub fn eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    args.finish()?;
+    let set: IvecSet = load(format!("{work}/eval.ivecs"))?;
+    let be: Backend = load(format!("{work}/backend.bin"))?;
+    let spk = dense_labels(&set.spk_ids);
+    let trials = generate_trials(&spk, cfg.trials.n_trials, cfg.trials.seed);
+    let proj = be.project(&set.vectors);
+    let scores = be.score(&proj, &proj);
+    let scored: Vec<(f64, bool)> =
+        trials.iter().map(|t| (scores.get(t.enroll, t.test), t.target)).collect();
+    let m = det_metrics(&scored);
+    println!(
+        "eval: {} trials -> EER {:.2}%  minDCF(0.01) {:.3}  minDCF(0.001) {:.3}",
+        trials.len(),
+        m.eer_pct,
+        m.min_dcf_01,
+        m.min_dcf_001
+    );
+    Ok(())
+}
+
+/// `pipeline`: all stages end-to-end in one process.
+pub fn pipeline(args: &Args) -> Result<()> {
+    synth(args)?;
+    train_ubm_stage(args)?;
+    align(args)?;
+    train(args)?;
+    extract(args)?;
+    backend(args)?;
+    eval(args)
+}
+
+/// Re-export used by `cli::commands`.
+pub use train_ubm_stage as train_ubm;
+
+fn dense_labels(spk_ids: &[String]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    spk_ids
+        .iter()
+        .map(|s| {
+            let next = map.len();
+            *map.entry(s.clone()).or_insert(next)
+        })
+        .collect()
+}
+
+// ------------------------- backend serialization -------------------------
+
+impl Serialize for Backend {
+    fn write(&self, w: &mut crate::io::BinWriter) -> Result<()> {
+        self.centering.mean.write(w)?;
+        match &self.whitening {
+            Some(wh) => {
+                w.write_u32(1)?;
+                wh.p.write(w)?;
+            }
+            None => w.write_u32(0)?,
+        }
+        self.lda.w.write(w)?;
+        self.plda.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> Result<Self> {
+        let mean = Vec::<f64>::read(r)?;
+        let whitening = if r.read_u32()? == 1 {
+            Some(crate::backend::Whitening { p: Mat::read(r)? })
+        } else {
+            None
+        };
+        let lda = crate::backend::Lda { w: Mat::read(r)? };
+        let plda = crate::backend::Plda::read(r)?;
+        Ok(Self { centering: crate::backend::Centering { mean }, whitening, lda, plda })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_labels_stable() {
+        let ids: Vec<String> = ["a", "b", "a", "c"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(dense_labels(&ids), vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn ivecset_roundtrip() {
+        let dir = std::env::temp_dir().join("ivtv_stage_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("set.ivecs");
+        let set = IvecSet {
+            utt_ids: vec!["u0".into(), "u1".into()],
+            spk_ids: vec!["s0".into(), "s0".into()],
+            vectors: Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]),
+        };
+        save(&set, &p).unwrap();
+        let back: IvecSet = load(&p).unwrap();
+        assert_eq!(back.utt_ids, set.utt_ids);
+        assert!(back.vectors.approx_eq(&set.vectors, 0.0));
+    }
+}

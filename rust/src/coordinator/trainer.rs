@@ -1,0 +1,447 @@
+//! The EM training schedule (paper §3.2's five-step loop):
+//!
+//! 1. frame alignment + Baum-Welch statistics with the current UBM;
+//! 2. E-step (device batches via pipelined CPU loaders, or the CPU
+//!    reference path);
+//! 3. M-step: T update, optional Σ update;
+//! 4. optional minimum-divergence re-estimation;
+//! 5. if realignment is scheduled: push the updated bias means back
+//!    into the UBM and recompute alignments next iteration.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::exec::{default_workers, map_parallel, pipeline};
+use crate::gmm::{DiagGmm, FullGmm};
+use crate::io::FeatArchive;
+use crate::ivector::{
+    estep_utterance, min_divergence, mstep, AccelTvm, EstepAccum, Formulation,
+    GlobalSecondOrder, TrainVariant, TvModel, UttStats,
+};
+use crate::metrics::Stopwatch;
+use crate::stats::BwStats;
+
+use super::align::{
+    align_archive_accel, align_archive_cpu, stats_from_posts, ArchivePosts, GlobalRawStats,
+};
+
+/// Which compute path executes the hot loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputePath {
+    /// Pure-rust scalar reference (the "Kaldi CPU baseline" analogue).
+    CpuRef,
+    /// XLA/PJRT device graphs fed by pipelined CPU loaders (the
+    /// paper's GPU path analogue).
+    Accel,
+}
+
+/// Everything the trainer needs.
+pub struct TrainSetup<'a> {
+    pub cfg: &'a Config,
+    /// Extractor-training utterances.
+    pub feats: &'a FeatArchive,
+    /// UBM pair; the full model's means move when realignment is on.
+    pub diag: DiagGmm,
+    pub full: FullGmm,
+}
+
+/// Snapshot handed to the per-iteration callback (EER harness).
+pub struct IterCtx<'a> {
+    pub iter: usize,
+    pub model: &'a TvModel,
+    pub diag: &'a DiagGmm,
+    pub full: &'a FullGmm,
+    /// True when this iteration recomputed the frame alignments.
+    pub realigned: bool,
+}
+
+/// Per-iteration diagnostics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    pub align_s: f64,
+    pub estep_s: f64,
+    pub mstep_s: f64,
+    pub wall_s: f64,
+    /// Mean squared change in T (convergence signal).
+    pub t_delta: f64,
+    /// Pipeline consumer utilization (accel path only).
+    pub device_util: Option<f64>,
+    /// EER from the callback, when it chose to evaluate.
+    pub eer_pct: Option<f64>,
+}
+
+/// Train a total-variability model. `per_iter` runs after every
+/// iteration and may return an EER to record (pass `|_| None` to skip).
+pub fn train_tvm(
+    setup: &mut TrainSetup,
+    variant: TrainVariant,
+    iters: usize,
+    seed: u64,
+    path: ComputePath,
+    accel: Option<&mut AccelTvm>,
+    per_iter: &mut dyn FnMut(IterCtx) -> Option<f64>,
+) -> Result<(TvModel, Vec<IterStats>)> {
+    train_tvm_with_stats(setup, variant, iters, seed, path, accel, None, per_iter)
+}
+
+/// [`train_tvm`] with optionally pre-computed initial alignment
+/// statistics (valid only while the UBM is unchanged — ensemble runs
+/// over the same UBM share one alignment round this way).
+#[allow(clippy::too_many_arguments)]
+pub fn train_tvm_with_stats(
+    setup: &mut TrainSetup,
+    variant: TrainVariant,
+    iters: usize,
+    seed: u64,
+    path: ComputePath,
+    accel: Option<&mut AccelTvm>,
+    initial_stats: Option<(Vec<BwStats>, GlobalRawStats)>,
+    per_iter: &mut dyn FnMut(IterCtx) -> Option<f64>,
+) -> Result<(TvModel, Vec<IterStats>)> {
+    let cfg = setup.cfg;
+    let c_n = cfg.ubm.components;
+    let workers = default_workers();
+    let mut accel = accel;
+    if path == ComputePath::Accel {
+        anyhow::ensure!(accel.is_some(), "accel path requires an AccelTvm");
+    }
+
+    let mut model = TvModel::init(
+        variant.formulation,
+        &setup.full,
+        cfg.tvm.rank,
+        cfg.tvm.prior_offset,
+        seed,
+    );
+
+    // step 1 (initial): alignment + statistics (or the shared cache)
+    let sw = Stopwatch::start();
+    let (mut per_utt, mut global) = match initial_stats {
+        Some(stats) => stats,
+        None => run_alignment(setup, path, accel.as_deref(), workers)?,
+    };
+    let mut align_s = sw.elapsed_s();
+
+    let mut history = Vec::with_capacity(iters);
+    let mut last_h_bar: Option<Vec<f64>> = None;
+
+    for iter in 0..iters {
+        let iter_sw = Stopwatch::start();
+        let mut realigned = false;
+
+        // step 5 of the *previous* iteration: realignment
+        if let Some(every) = variant.realign_every {
+            if iter > 0 && iter % every == 0 {
+                let sw = Stopwatch::start();
+                apply_realignment(setup, &mut model, last_h_bar.as_deref())?;
+                let (pu, gl) = run_alignment(setup, path, accel.as_deref(), workers)?;
+                per_utt = pu;
+                global = gl;
+                align_s = sw.elapsed_s();
+                realigned = true;
+            } else if iter > 0 {
+                align_s = 0.0;
+            }
+        } else if iter > 0 {
+            align_s = 0.0;
+        }
+
+        // step 2: E-step
+        let sw = Stopwatch::start();
+        let (acc, device_util) = match path {
+            ComputePath::CpuRef => (estep_cpu(&model, &per_utt, workers), None),
+            ComputePath::Accel => {
+                let a = accel.as_deref_mut().expect("checked above");
+                let (acc, util) = estep_accel(&model, &per_utt, a, cfg.tvm.batch_utts, workers)?;
+                (acc, Some(util))
+            }
+        };
+        let estep_s = sw.elapsed_s();
+        last_h_bar = Some(acc.h.iter().map(|&x| x / acc.count.max(1.0)).collect());
+
+        // step 3: M-step (+ optional Σ update)
+        let sw = Stopwatch::start();
+        let second = variant.sigma_update.then(|| GlobalSecondOrder {
+            s: match variant.formulation {
+                Formulation::Standard => global.centered_second_order(&model.means),
+                Formulation::Augmented => global.s.clone(),
+            },
+            n: global.n.clone(),
+        });
+        let t_delta = mstep(&mut model, &acc, second.as_ref(), cfg.ubm.var_floor);
+
+        // step 4: minimum divergence
+        if variant.min_divergence {
+            min_divergence(&mut model, &acc);
+        }
+        let mstep_s = sw.elapsed_s();
+
+        let eer = per_iter(IterCtx {
+            iter,
+            model: &model,
+            diag: &setup.diag,
+            full: &setup.full,
+            realigned,
+        });
+
+        history.push(IterStats {
+            iter,
+            align_s: if iter == 0 || realigned { align_s } else { 0.0 },
+            estep_s,
+            mstep_s,
+            wall_s: iter_sw.elapsed_s(),
+            t_delta,
+            device_util,
+            eer_pct: eer,
+        });
+        let _ = c_n;
+    }
+
+    Ok((model, history))
+}
+
+/// Alignment + statistics with the current UBM pair.
+pub fn run_alignment(
+    setup: &TrainSetup,
+    path: ComputePath,
+    accel: Option<&AccelTvm>,
+    workers: usize,
+) -> Result<(Vec<BwStats>, GlobalRawStats)> {
+    let cfg = setup.cfg;
+    let posts: ArchivePosts = match path {
+        ComputePath::CpuRef => align_archive_cpu(
+            &setup.diag,
+            &setup.full,
+            setup.feats,
+            cfg.tvm.top_k,
+            cfg.tvm.min_post,
+            workers,
+        ),
+        ComputePath::Accel => {
+            align_archive_accel(accel.expect("accel set"), &setup.diag, &setup.full, setup.feats)?
+        }
+    };
+    Ok(stats_from_posts(setup.feats, &posts, cfg.ubm.components, workers))
+}
+
+/// Push the model's bias means into the UBM (paper §3.2 / §5).
+fn apply_realignment(
+    setup: &mut TrainSetup,
+    model: &mut TvModel,
+    last_h_bar: Option<&[f64]>,
+) -> Result<()> {
+    if model.formulation == Formulation::Standard {
+        // §5: m_c ← m_c + T_c h̄ (works "less well with Σ updates", as
+        // the paper notes — kept for completeness)
+        if let Some(h) = last_h_bar {
+            let c_n = model.num_components();
+            let mut means = model.means.clone();
+            for c in 0..c_n {
+                let shift = model.t[c].matvec(h);
+                for (j, s) in shift.iter().enumerate() {
+                    *means.get_mut(c, j) += s;
+                }
+            }
+            model.means = means;
+        }
+    }
+    let new_means = model.bias_means();
+    setup.diag.means = new_means.clone();
+    setup.full.set_means(new_means)?;
+    // keep the standard model's centering means in sync with the UBM
+    if model.formulation == Formulation::Standard {
+        model.means = setup.full.means.clone();
+    }
+    Ok(())
+}
+
+/// CPU-reference E-step: parallel chunks, merged accumulators.
+fn estep_cpu(model: &TvModel, per_utt: &[BwStats], workers: usize) -> EstepAccum {
+    let (tt_si, tt_si_t) = model.precompute();
+    let (c_n, f_dim, r) = (model.num_components(), model.feat_dim(), model.rank());
+    let chunk = per_utt.len().div_ceil(workers.max(1)).max(1);
+    let n_chunks = per_utt.len().div_ceil(chunk);
+    let partials = map_parallel(n_chunks, workers, |k| {
+        let mut acc = EstepAccum::zeros(c_n, f_dim, r);
+        for bw in &per_utt[k * chunk..((k + 1) * chunk).min(per_utt.len())] {
+            let st = UttStats::from_bw(bw, model);
+            estep_utterance(&st, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        acc
+    });
+    let mut total = EstepAccum::zeros(c_n, f_dim, r);
+    for p in &partials {
+        total.merge(p);
+    }
+    total
+}
+
+/// Accelerated E-step: CPU loader threads adapt/pack batches, the
+/// device drains them (paper Fig. 1). Returns (accum, device util).
+fn estep_accel(
+    model: &TvModel,
+    per_utt: &[BwStats],
+    accel: &mut AccelTvm,
+    batch_utts: usize,
+    workers: usize,
+) -> Result<(EstepAccum, f64)> {
+    accel.set_model(model)?;
+    let bu = batch_utts.min(accel.dims.bu);
+    let n_batches = per_utt.len().div_ceil(bu);
+    let (c_n, f_dim, r) = (model.num_components(), model.feat_dim(), model.rank());
+
+    let mut total = EstepAccum::zeros(c_n, f_dim, r);
+    let mut err: Option<anyhow::Error> = None;
+    let accel_ref = &*accel;
+    let (stats, wall) = pipeline(
+        n_batches,
+        workers,
+        workers * 2,
+        |k| {
+            // loader: formulation adaptation (centering) on CPU
+            per_utt[k * bu..((k + 1) * bu).min(per_utt.len())]
+                .iter()
+                .map(|bw| UttStats::from_bw(bw, model))
+                .collect::<Vec<_>>()
+        },
+        |_k, batch| {
+            if err.is_some() {
+                return;
+            }
+            let refs: Vec<&UttStats> = batch.iter().collect();
+            match accel_ref.estep_batch(&refs) {
+                Ok((acc, _phi)) => total.merge(&acc),
+                Err(e) => err = Some(e),
+            }
+        },
+    );
+    if let Some(e) = err {
+        return Err(e);
+    }
+    Ok((total, stats.consumer_utilization(wall)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::align::tests::tiny_setup;
+    use super::*;
+    use crate::config::Config;
+
+    fn tiny_config() -> Config {
+        let mut cfg = Config::default_scaled();
+        cfg.ubm.components = 8;
+        cfg.tvm.rank = 6;
+        cfg.tvm.top_k = 5;
+        cfg.tvm.batch_utts = 4;
+        cfg
+    }
+
+    #[test]
+    fn cpu_training_runs_and_converges() {
+        let cfg = tiny_config();
+        let (arch, ubm) = tiny_setup();
+        let mut setup = TrainSetup { cfg: &cfg, feats: &arch, diag: ubm.diag, full: ubm.full };
+        let variant = TrainVariant {
+            formulation: Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: true,
+            realign_every: None,
+        };
+        let (model, hist) = train_tvm(
+            &mut setup,
+            variant,
+            5,
+            42,
+            ComputePath::CpuRef,
+            None,
+            &mut |_| None,
+        )
+        .unwrap();
+        assert_eq!(hist.len(), 5);
+        // T change shrinks as EM converges
+        assert!(
+            hist.last().unwrap().t_delta < hist[0].t_delta,
+            "{:?}",
+            hist.iter().map(|h| h.t_delta).collect::<Vec<_>>()
+        );
+        assert_eq!(model.rank(), 6);
+        // prior offset survives min-div with the right structure
+        assert!(model.prior_mean[0] > 0.0);
+        assert!(model.prior_mean[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn realignment_updates_ubm_means() {
+        let cfg = tiny_config();
+        let (arch, ubm) = tiny_setup();
+        let before = ubm.full.means.clone();
+        let mut setup = TrainSetup { cfg: &cfg, feats: &arch, diag: ubm.diag, full: ubm.full };
+        let variant = TrainVariant {
+            formulation: Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: false,
+            realign_every: Some(2),
+        };
+        let mut realign_iters = Vec::new();
+        train_tvm(&mut setup, variant, 5, 7, ComputePath::CpuRef, None, &mut |ctx| {
+            if ctx.realigned {
+                realign_iters.push(ctx.iter);
+            }
+            None
+        })
+        .unwrap();
+        assert_eq!(realign_iters, vec![2, 4]);
+        assert!(
+            !setup.full.means.approx_eq(&before, 1e-9),
+            "realignment must move the UBM means"
+        );
+    }
+
+    #[test]
+    fn callback_receives_every_iteration() {
+        let cfg = tiny_config();
+        let (arch, ubm) = tiny_setup();
+        let mut setup = TrainSetup { cfg: &cfg, feats: &arch, diag: ubm.diag, full: ubm.full };
+        let variant = TrainVariant {
+            formulation: Formulation::Standard,
+            min_divergence: false,
+            sigma_update: false,
+            realign_every: None,
+        };
+        let mut seen = Vec::new();
+        let (_, hist) = train_tvm(&mut setup, variant, 3, 1, ComputePath::CpuRef, None, &mut |ctx| {
+            seen.push(ctx.iter);
+            Some(42.0)
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert!(hist.iter().all(|h| h.eer_pct == Some(42.0)));
+    }
+
+    #[test]
+    fn different_seeds_give_different_models() {
+        let cfg = tiny_config();
+        let (arch, ubm) = tiny_setup();
+        let variant = TrainVariant {
+            formulation: Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: false,
+            realign_every: None,
+        };
+        let run = |seed| {
+            let (arch2, ubm2) = (&arch, (ubm.diag.clone(), ubm.full.clone()));
+            let mut setup =
+                TrainSetup { cfg: &cfg, feats: arch2, diag: ubm2.0, full: ubm2.1 };
+            train_tvm(&mut setup, variant, 2, seed, ComputePath::CpuRef, None, &mut |_| None)
+                .unwrap()
+                .0
+        };
+        let m1 = run(1);
+        let m2 = run(2);
+        assert!(!m1.t[0].approx_eq(&m2.t[0], 1e-6), "seeds must differ");
+        // but the same seed reproduces exactly
+        let m1b = run(1);
+        assert!(m1.t[0].approx_eq(&m1b.t[0], 0.0));
+    }
+}

@@ -1,0 +1,241 @@
+//! Threaded execution substrate — the paper's Fig. 1 pipeline.
+//!
+//! The paper keeps its GPU saturated by running multiple CPU data
+//! loaders in parallel with device execution. This module provides that
+//! shape with std threads + bounded channels (tokio is unavailable
+//! offline, and the workload is CPU/compute bound anyway):
+//!
+//! * [`map_parallel`] — order-preserving parallel map over items
+//!   (used for Baum-Welch statistics, per-utterance CPU work).
+//! * [`Pipeline`] — producers push prepared batches into a bounded
+//!   queue; a single consumer (the device executor) drains it. Producer
+//!   and consumer busy-times are tracked so benchmarks can report
+//!   pipeline efficiency.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Order-preserving parallel map: applies `f` to every item index using
+/// `workers` threads and returns outputs in input order.
+pub fn map_parallel<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n_items);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n_items).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let out_ptr = out_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so no two threads write the same slot,
+                // and the scope keeps `out` alive.
+                unsafe { out_ptr.write(i, Some(v)) };
+            });
+        }
+    });
+
+    out.into_iter().map(|v| v.expect("worker completed")).collect()
+}
+
+/// Raw-pointer wrapper that is Send/Sync by construction. A method (not
+/// direct field access) is used at the write site so the 2021-edition
+/// closure captures the wrapper, not the bare pointer field.
+struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    /// SAFETY: caller guarantees exclusive access to slot `i` and that
+    /// the allocation outlives the call.
+    unsafe fn write(&self, i: usize, v: T) {
+        *self.0.add(i) = v;
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        Self(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Busy-time accounting shared between the pipeline sides.
+#[derive(Default)]
+pub struct PipelineStats {
+    producer_busy_ns: AtomicU64,
+    consumer_busy_ns: AtomicU64,
+    items: AtomicUsize,
+}
+
+impl PipelineStats {
+    /// Seconds the producers spent computing (summed across threads).
+    pub fn producer_busy(&self) -> f64 {
+        self.producer_busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Seconds the consumer spent computing.
+    pub fn consumer_busy(&self) -> f64 {
+        self.consumer_busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Items that flowed through the pipeline.
+    pub fn items(&self) -> usize {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    /// Consumer busy fraction of wall time — how well the loaders kept
+    /// the device fed (the paper's "keep the GPU utilized all the time").
+    pub fn consumer_utilization(&self, wall: f64) -> f64 {
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        self.consumer_busy() / wall
+    }
+}
+
+/// Producer/consumer pipeline over an indexed work list.
+///
+/// `n_producers` threads run `produce(index)` for every index in
+/// `0..n_items` (dynamic scheduling), pushing into a bounded queue of
+/// `queue_cap`; the calling thread runs `consume(index, item)` in
+/// arbitrary arrival order. Returns the pipeline stats + wall seconds.
+pub fn pipeline<T, P, C>(
+    n_items: usize,
+    n_producers: usize,
+    queue_cap: usize,
+    produce: P,
+    mut consume: C,
+) -> (Arc<PipelineStats>, f64)
+where
+    T: Send,
+    P: Fn(usize) -> T + Sync,
+    C: FnMut(usize, T),
+{
+    let stats = Arc::new(PipelineStats::default());
+    let wall0 = Instant::now();
+    if n_items == 0 {
+        return (stats, 0.0);
+    }
+    let n_producers = n_producers.max(1).min(n_items);
+    let (tx, rx): (SyncSender<(usize, T)>, Receiver<(usize, T)>) = sync_channel(queue_cap.max(1));
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_producers {
+            let tx = tx.clone();
+            let next = &next;
+            let produce = &produce;
+            let stats = Arc::clone(&stats);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let t0 = Instant::now();
+                let item = produce(i);
+                stats
+                    .producer_busy_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if tx.send((i, item)).is_err() {
+                    break; // consumer dropped — abort quietly
+                }
+            });
+        }
+        drop(tx); // close the channel once all producers finish
+
+        for (i, item) in rx {
+            let t0 = Instant::now();
+            consume(i, item);
+            stats
+                .consumer_busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            stats.items.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+
+    let wall = wall0.elapsed().as_secs_f64();
+    (stats, wall)
+}
+
+/// Reasonable default worker count: physical parallelism minus one for
+/// the consumer thread.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_parallel_preserves_order() {
+        let out = map_parallel(100, 7, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_parallel_empty_and_single() {
+        assert_eq!(map_parallel(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(map_parallel(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn pipeline_processes_everything() {
+        let mut seen = vec![false; 50];
+        let mut sum = 0usize;
+        let (stats, _wall) = pipeline(
+            50,
+            4,
+            8,
+            |i| i * 2,
+            |i, v| {
+                assert_eq!(v, i * 2);
+                seen[i] = true;
+                sum += v;
+            },
+        );
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(sum, (0..50).map(|i| i * 2).sum::<usize>());
+        assert_eq!(stats.items(), 50);
+    }
+
+    #[test]
+    fn pipeline_overlaps_work() {
+        // producers sleep; consumer is fast — wall should be well under
+        // the serial sum of producer time.
+        let per_item = std::time::Duration::from_millis(5);
+        let (stats, wall) = pipeline(
+            16,
+            8,
+            4,
+            |_| std::thread::sleep(per_item),
+            |_, _| {},
+        );
+        let serial = stats.producer_busy();
+        assert!(wall < serial * 0.6, "wall {wall:.3}s vs serial {serial:.3}s");
+    }
+
+    #[test]
+    fn pipeline_zero_items() {
+        let (stats, _) = pipeline(0, 4, 4, |_| 0u8, |_, _| panic!("no items"));
+        assert_eq!(stats.items(), 0);
+    }
+}

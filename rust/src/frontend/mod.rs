@@ -1,0 +1,17 @@
+//! Acoustic front-end substrate.
+//!
+//! The paper builds on Kaldi's VoxCeleb recipe: MFCC extraction, energy
+//! VAD, and the VoxCeleb1+2 corpora. None of those are available here
+//! (see DESIGN.md substitutions), so this module provides the synthetic
+//! equivalents that exercise the same downstream code paths:
+//!
+//! * [`synth`] — a ground-truth generative world (full-covariance GMM +
+//!   low-rank speaker and channel subspaces) from which per-utterance
+//!   frame sequences are sampled with sticky-Markov temporal structure.
+//! * [`features`] — delta/double-delta appending and energy-based VAD,
+//!   mirroring the 24-ceps → 72-dim pipeline at 8 → 24 dims.
+
+pub mod features;
+pub mod synth;
+
+pub use synth::{CorpusBundle, GroundTruth};

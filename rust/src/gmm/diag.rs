@@ -1,0 +1,223 @@
+//! Diagonal-covariance GMM: pre-selection model + diagonal EM.
+
+use crate::io::Serialize;
+use crate::linalg::Mat;
+
+use super::LOG_2PI;
+
+/// Diagonal-covariance GMM.
+#[derive(Debug, Clone)]
+pub struct DiagGmm {
+    /// Mixture weights (C), sum to 1.
+    pub weights: Vec<f64>,
+    /// Means (C × F).
+    pub means: Mat,
+    /// Diagonal variances (C × F).
+    pub vars: Mat,
+}
+
+impl DiagGmm {
+    /// Number of components.
+    pub fn num_components(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Feature dim.
+    pub fn dim(&self) -> usize {
+        self.means.cols()
+    }
+
+    /// Per-component log-likelihoods of one frame (length C), including
+    /// log-weights — i.e. log(w_c · N(x | m_c, diag v_c)).
+    pub fn log_likes(&self, x: &[f64], out: &mut [f64]) {
+        let c_n = self.num_components();
+        let dim = self.dim();
+        debug_assert_eq!(out.len(), c_n);
+        for c in 0..c_n {
+            let m = self.means.row(c);
+            let v = self.vars.row(c);
+            let mut ll = -0.5 * dim as f64 * LOG_2PI + self.weights[c].max(1e-300).ln();
+            for j in 0..dim {
+                let d = x[j] - m[j];
+                ll -= 0.5 * (v[j].ln() + d * d / v[j]);
+            }
+            out[c] = ll;
+        }
+    }
+
+    /// Total log-likelihood of one frame: logsumexp over components.
+    pub fn frame_log_like(&self, x: &[f64]) -> f64 {
+        let mut ll = vec![0.0; self.num_components()];
+        self.log_likes(x, &mut ll);
+        log_sum_exp(&ll)
+    }
+
+    /// One EM iteration over frames (rows of `data`); returns the mean
+    /// frame log-likelihood *before* the update (standard EM reporting).
+    /// Parallelized over frame chunks (UBM setup dominated experiment
+    /// wall time single-threaded — EXPERIMENTS.md §Perf).
+    pub fn em_step(&mut self, data: &Mat, var_floor: f64) -> f64 {
+        let c_n = self.num_components();
+        let dim = self.dim();
+        let t_len = data.rows();
+        let workers = crate::exec::default_workers();
+        let chunk = t_len.div_ceil(workers).max(1);
+        let n_chunks = t_len.div_ceil(chunk);
+
+        struct Partial {
+            n: Vec<f64>,
+            f: Mat,
+            s: Mat,
+            ll: f64,
+        }
+        let partials = crate::exec::map_parallel(n_chunks, workers, |k| {
+            let mut ll_buf = vec![0.0; c_n];
+            let mut p = Partial {
+                n: vec![0.0; c_n],
+                f: Mat::zeros(c_n, dim),
+                s: Mat::zeros(c_n, dim),
+                ll: 0.0,
+            };
+            for t in k * chunk..((k + 1) * chunk).min(t_len) {
+                let x = data.row(t);
+                self.log_likes(x, &mut ll_buf);
+                let lse = log_sum_exp(&ll_buf);
+                p.ll += lse;
+                for c in 0..c_n {
+                    let gamma = (ll_buf[c] - lse).exp();
+                    if gamma < 1e-12 {
+                        continue;
+                    }
+                    p.n[c] += gamma;
+                    let fr = p.f.row_mut(c);
+                    let sr = p.s.row_mut(c);
+                    for j in 0..dim {
+                        fr[j] += gamma * x[j];
+                        sr[j] += gamma * x[j] * x[j];
+                    }
+                }
+            }
+            p
+        });
+        let mut acc_n = vec![0.0; c_n];
+        let mut acc_f = Mat::zeros(c_n, dim);
+        let mut acc_s = Mat::zeros(c_n, dim);
+        let mut total_ll = 0.0;
+        for p in partials {
+            for (a, b) in acc_n.iter_mut().zip(&p.n) {
+                *a += b;
+            }
+            acc_f.add_scaled(1.0, &p.f);
+            acc_s.add_scaled(1.0, &p.s);
+            total_ll += p.ll;
+        }
+        let total_n: f64 = acc_n.iter().sum();
+        for c in 0..c_n {
+            if acc_n[c] < 1e-8 {
+                continue; // keep dead components untouched
+            }
+            self.weights[c] = acc_n[c] / total_n;
+            for j in 0..dim {
+                let mean = acc_f.get(c, j) / acc_n[c];
+                let var = (acc_s.get(c, j) / acc_n[c] - mean * mean).max(var_floor);
+                self.means.set(c, j, mean);
+                self.vars.set(c, j, var);
+            }
+        }
+        total_ll / t_len as f64
+    }
+}
+
+impl Serialize for DiagGmm {
+    fn write(&self, w: &mut crate::io::BinWriter) -> anyhow::Result<()> {
+        self.weights.write(w)?;
+        self.means.write(w)?;
+        self.vars.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> anyhow::Result<Self> {
+        Ok(Self { weights: Vec::<f64>::read(r)?, means: Mat::read(r)?, vars: Mat::read(r)? })
+    }
+}
+
+/// Numerically-stable logsumexp.
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn two_component() -> DiagGmm {
+        DiagGmm {
+            weights: vec![0.4, 0.6],
+            means: Mat::from_rows(&[&[0.0, 0.0], &[3.0, 3.0]]),
+            vars: Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]),
+        }
+    }
+
+    #[test]
+    fn loglikes_match_hand_formula() {
+        let g = two_component();
+        let mut ll = [0.0; 2];
+        g.log_likes(&[0.0, 0.0], &mut ll);
+        let want0 = 0.4f64.ln() - LOG_2PI; // at the mean of comp 0
+        assert!((ll[0] - want0).abs() < 1e-12, "{} vs {want0}", ll[0]);
+        let want1 = 0.6f64.ln() - LOG_2PI - 0.5 * 18.0;
+        assert!((ll[1] - want1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_sum_exp_stable() {
+        assert!((log_sum_exp(&[1000.0, 1000.0]) - (1000.0 + 2.0f64.ln())).abs() < 1e-9);
+        assert_eq!(log_sum_exp(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn em_increases_likelihood() {
+        let mut rng = Rng::seed(21);
+        // two clear clusters
+        let data = Mat::from_fn(400, 2, |t, _| {
+            if t % 2 == 0 {
+                rng.normal()
+            } else {
+                4.0 + rng.normal()
+            }
+        });
+        let mut g = DiagGmm {
+            weights: vec![0.5, 0.5],
+            means: Mat::from_rows(&[&[0.5, 0.5], &[3.0, 3.0]]),
+            vars: Mat::from_rows(&[&[2.0, 2.0], &[2.0, 2.0]]),
+        };
+        let mut prev = f64::NEG_INFINITY;
+        for _ in 0..5 {
+            let ll = g.em_step(&data, 1e-4);
+            assert!(ll >= prev - 1e-9, "EM decreased: {prev} → {ll}");
+            prev = ll;
+        }
+        // variances floored
+        for c in 0..2 {
+            for j in 0..2 {
+                assert!(g.vars.get(c, j) >= 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let g = two_component();
+        let dir = std::env::temp_dir().join("ivtv_gmm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("diag.bin");
+        crate::io::save(&g, &p).unwrap();
+        let back: DiagGmm = crate::io::load(&p).unwrap();
+        assert_eq!(back.weights, g.weights);
+        assert!(back.means.approx_eq(&g.means, 0.0));
+    }
+}

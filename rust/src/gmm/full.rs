@@ -1,0 +1,288 @@
+//! Full-covariance GMM — the i-vector UBM proper.
+//!
+//! Log-likelihoods use the expanded quadratic form with cached
+//! `Σ_c⁻¹`, `Σ_c⁻¹ m_c` and per-component constants, which is also
+//! exactly the layout the accelerated `align_topk` graph consumes
+//! (one big matmul against a (C, F + F²) weight matrix).
+
+use anyhow::Result;
+
+use crate::io::Serialize;
+use crate::linalg::{Cholesky, Mat};
+use crate::stats::BwStats;
+
+use super::diag::log_sum_exp;
+use super::{DiagGmm, LOG_2PI};
+
+/// Full-covariance GMM with cached inverse-covariance expansion.
+#[derive(Debug, Clone)]
+pub struct FullGmm {
+    pub weights: Vec<f64>,
+    /// Means (C × F).
+    pub means: Mat,
+    /// Full covariances, C matrices of F × F.
+    pub covs: Vec<Mat>,
+    // ---- caches (rebuilt by `refresh`) ----
+    /// Σ_c⁻¹ per component.
+    inv_covs: Vec<Mat>,
+    /// Σ_c⁻¹ m_c per component (C × F).
+    lin: Mat,
+    /// log w_c − ½(F log 2π + log|Σ_c| + m_cᵀ Σ_c⁻¹ m_c).
+    consts: Vec<f64>,
+}
+
+impl FullGmm {
+    /// Build from parameters (computes caches).
+    pub fn new(weights: Vec<f64>, means: Mat, covs: Vec<Mat>) -> Result<Self> {
+        let mut g = Self {
+            weights,
+            means,
+            covs,
+            inv_covs: Vec::new(),
+            lin: Mat::zeros(0, 0),
+            consts: Vec::new(),
+        };
+        g.refresh()?;
+        Ok(g)
+    }
+
+    /// Promote a diagonal GMM (initialization of full-cov EM).
+    pub fn from_diag(d: &DiagGmm) -> Result<Self> {
+        let covs = (0..d.num_components()).map(|c| Mat::diag(d.vars.row(c))).collect();
+        Self::new(d.weights.clone(), d.means.clone(), covs)
+    }
+
+    /// Rebuild the inverse/constant caches after mutating parameters.
+    /// Regularizes any non-PD covariance with the minimal ridge.
+    pub fn refresh(&mut self) -> Result<()> {
+        let c_n = self.weights.len();
+        let dim = self.means.cols();
+        let mut inv_covs = Vec::with_capacity(c_n);
+        let mut lin = Mat::zeros(c_n, dim);
+        let mut consts = Vec::with_capacity(c_n);
+        for c in 0..c_n {
+            let (chol, _ridge) = Cholesky::new_regularized(&self.covs[c]);
+            let inv = chol.inverse();
+            let m = self.means.row(c);
+            let sm = inv.matvec(m);
+            lin.row_mut(c).copy_from_slice(&sm);
+            let quad = crate::linalg::dot(m, &sm);
+            consts.push(
+                self.weights[c].max(1e-300).ln()
+                    - 0.5 * (dim as f64 * LOG_2PI + chol.logdet() + quad),
+            );
+            inv_covs.push(inv);
+        }
+        self.inv_covs = inv_covs;
+        self.lin = lin;
+        self.consts = consts;
+        Ok(())
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.means.cols()
+    }
+
+    /// Cached Σ_c⁻¹ (used by the TVM precompute and the align graph
+    /// parameter packing).
+    pub fn inv_cov(&self, c: usize) -> &Mat {
+        &self.inv_covs[c]
+    }
+
+    /// Per-component log w_c·N(x|…) for a *subset* of components
+    /// (the top-K refinement path): `out[i] = ll(select[i])`.
+    pub fn log_likes_select(&self, x: &[f64], select: &[u32], out: &mut [f64]) {
+        debug_assert_eq!(select.len(), out.len());
+        for (i, &c) in select.iter().enumerate() {
+            out[i] = self.log_like_one(x, c as usize);
+        }
+    }
+
+    /// log w_c·N(x | m_c, Σ_c) for one component via the expansion
+    /// const_c + xᵀ(Σ⁻¹m) − ½ xᵀΣ⁻¹x.
+    pub fn log_like_one(&self, x: &[f64], c: usize) -> f64 {
+        let dim = self.dim();
+        let inv = &self.inv_covs[c];
+        let mut quad = 0.0;
+        for i in 0..dim {
+            let row = inv.row(i);
+            let xi = x[i];
+            // exploit symmetry: diagonal once, off-diagonal doubled
+            quad += row[i] * xi * xi;
+            for j in (i + 1)..dim {
+                quad += 2.0 * row[j] * xi * x[j];
+            }
+        }
+        self.consts[c] + crate::linalg::dot(x, self.lin.row(c)) - 0.5 * quad
+    }
+
+    /// All-component log-likes of one frame.
+    pub fn log_likes(&self, x: &[f64], out: &mut [f64]) {
+        for c in 0..self.num_components() {
+            out[c] = self.log_like_one(x, c);
+        }
+    }
+
+    /// Frame total log-likelihood.
+    pub fn frame_log_like(&self, x: &[f64]) -> f64 {
+        let mut ll = vec![0.0; self.num_components()];
+        self.log_likes(x, &mut ll);
+        log_sum_exp(&ll)
+    }
+
+    /// M-step from accumulated (raw) Baum-Welch statistics: standard
+    /// full-covariance GMM re-estimation with covariance flooring.
+    pub fn update_from_stats(&mut self, acc: &BwStats, var_floor: f64) -> Result<()> {
+        let c_n = self.num_components();
+        let dim = self.dim();
+        let s = acc.s.as_ref().expect("full-cov update needs second-order stats");
+        let total_n: f64 = acc.n.iter().sum();
+        for c in 0..c_n {
+            let nc = acc.n[c];
+            if nc < dim as f64 * 0.5 {
+                continue; // starved component: keep old parameters
+            }
+            self.weights[c] = nc / total_n;
+            let mean: Vec<f64> = acc.f.row(c).iter().map(|&v| v / nc).collect();
+            let mut cov = s[c].clone();
+            cov.scale(1.0 / nc);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let v = cov.get(i, j) - mean[i] * mean[j];
+                    cov.set(i, j, v);
+                }
+            }
+            cov.symmetrize();
+            for i in 0..dim {
+                let v = cov.get(i, i).max(var_floor);
+                cov.set(i, i, v);
+            }
+            self.means.row_mut(c).copy_from_slice(&mean);
+            self.covs[c] = cov;
+        }
+        self.refresh()
+    }
+
+    /// Replace the means (the §3.2 realignment step: UBM means get the
+    /// updated bias terms) and refresh caches.
+    pub fn set_means(&mut self, means: Mat) -> Result<()> {
+        assert_eq!((means.rows(), means.cols()), (self.means.rows(), self.means.cols()));
+        self.means = means;
+        self.refresh()
+    }
+}
+
+impl Serialize for FullGmm {
+    fn write(&self, w: &mut crate::io::BinWriter) -> anyhow::Result<()> {
+        self.weights.write(w)?;
+        self.means.write(w)?;
+        self.covs.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> anyhow::Result<Self> {
+        let weights = Vec::<f64>::read(r)?;
+        let means = Mat::read(r)?;
+        let covs = Vec::<Mat>::read(r)?;
+        FullGmm::new(weights, means, covs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::Posting;
+    use crate::rng::Rng;
+
+    fn demo_full() -> FullGmm {
+        FullGmm::new(
+            vec![0.3, 0.7],
+            Mat::from_rows(&[&[0.0, 0.0], &[2.0, -1.0]]),
+            vec![
+                Mat::from_rows(&[&[1.0, 0.3], &[0.3, 1.5]]),
+                Mat::from_rows(&[&[0.8, -0.2], &[-0.2, 0.6]]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_loglike_matches_direct_formula() {
+        let g = demo_full();
+        let x = [0.7, -0.4];
+        for c in 0..2 {
+            // direct: log w − ½(F log2π + log|Σ| + (x−m)ᵀΣ⁻¹(x−m))
+            let m = g.means.row(c);
+            let d = [x[0] - m[0], x[1] - m[1]];
+            let chol = Cholesky::new(&g.covs[c]).unwrap();
+            let sd = chol.solve_vec(&d);
+            let quad = d[0] * sd[0] + d[1] * sd[1];
+            let want = g.weights[c].ln() - 0.5 * (2.0 * LOG_2PI + chol.logdet() + quad);
+            let got = g.log_like_one(&x, c);
+            assert!((got - want).abs() < 1e-10, "c={c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn diag_promotion_agrees_with_diag_loglikes() {
+        let d = DiagGmm {
+            weights: vec![0.5, 0.5],
+            means: Mat::from_rows(&[&[0.0, 1.0], &[2.0, 3.0]]),
+            vars: Mat::from_rows(&[&[1.0, 2.0], &[0.5, 1.5]]),
+        };
+        let f = FullGmm::from_diag(&d).unwrap();
+        let x = [0.3, -0.8];
+        let mut ll_d = [0.0; 2];
+        let mut ll_f = [0.0; 2];
+        d.log_likes(&x, &mut ll_d);
+        f.log_likes(&x, &mut ll_f);
+        for c in 0..2 {
+            assert!((ll_d[c] - ll_f[c]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn em_from_stats_recovers_cluster() {
+        // frames all assigned to comp 0 with weight 1 → mean/cov must
+        // match the sample moments
+        let mut rng = Rng::seed(31);
+        let t_len = 2000;
+        let data = Mat::from_fn(t_len, 2, |_, j| if j == 0 { 1.0 + rng.normal() } else { -2.0 + 0.5 * rng.normal() });
+        let posts: Vec<Vec<Posting>> =
+            (0..t_len).map(|_| vec![Posting { idx: 0, post: 1.0 }]).collect();
+        let acc = BwStats::accumulate(&data, &posts, 2, true);
+        let mut g = demo_full();
+        g.update_from_stats(&acc, 1e-4).unwrap();
+        assert!((g.means.get(0, 0) - 1.0).abs() < 0.1);
+        assert!((g.means.get(0, 1) + 2.0).abs() < 0.1);
+        assert!((g.covs[0].get(1, 1) - 0.25).abs() < 0.05);
+        // comp 1 starved → untouched means
+        assert_eq!(g.means.get(1, 0), 2.0);
+    }
+
+    #[test]
+    fn set_means_refreshes_cache() {
+        let mut g = demo_full();
+        let x = [0.2, 0.4];
+        let before = g.log_like_one(&x, 0);
+        g.set_means(Mat::from_rows(&[&[5.0, 5.0], &[2.0, -1.0]])).unwrap();
+        let after = g.log_like_one(&x, 0);
+        assert!(after < before, "moving the mean away must lower the loglike");
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let g = demo_full();
+        let dir = std::env::temp_dir().join("ivtv_gmm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("full.bin");
+        crate::io::save(&g, &p).unwrap();
+        let back: FullGmm = crate::io::load(&p).unwrap();
+        assert!(back.means.approx_eq(&g.means, 0.0));
+        let x = [0.1, 0.9];
+        assert!((back.frame_log_like(&x) - g.frame_log_like(&x)).abs() < 1e-12);
+    }
+}

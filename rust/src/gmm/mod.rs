@@ -1,0 +1,23 @@
+//! GMM / UBM substrate (paper relies on Kaldi for this stage).
+//!
+//! * [`DiagGmm`] — diagonal-covariance GMM used for the cheap top-K
+//!   Gaussian pre-selection (paper §4.2: "we use a UBM with diagonal
+//!   covariance matrices to select the top-20 Gaussian components").
+//! * [`FullGmm`] — full-covariance GMM used to refine the posteriors of
+//!   the selected components, and as the i-vector extractor's UBM.
+//! * [`train`] — the UBM recipe: global-stats init → binary splitting →
+//!   diagonal EM → full-covariance EM.
+//! * [`select`] — top-K selection + posterior pruning/renormalization
+//!   (the CPU reference of the accelerated `align_topk` graph).
+
+mod diag;
+mod full;
+mod select;
+mod train;
+
+pub use diag::DiagGmm;
+pub use full::FullGmm;
+pub use select::{prune_posteriors, select_posteriors};
+pub use train::{train_ubm, UbmPair};
+
+pub(crate) const LOG_2PI: f64 = 1.8378770664093453;

@@ -1,0 +1,188 @@
+//! Frame alignment: top-K Gaussian selection + posterior pruning.
+//!
+//! This is the CPU reference of the accelerated `align_topk` graph and
+//! follows Kaldi/paper §4.2 exactly:
+//!
+//! 1. diagonal-covariance UBM scores all C components; keep the top-K
+//!    (paper: K = 20);
+//! 2. the full-covariance UBM re-scores only the selected components;
+//! 3. posteriors are softmax over the selected components, entries
+//!    below `min_post` (paper: 0.025) are discarded, and the survivors
+//!    are linearly rescaled to sum to one.
+
+use crate::io::Posting;
+use crate::linalg::Mat;
+
+use super::diag::log_sum_exp;
+use super::{DiagGmm, FullGmm};
+
+/// Indices of the K largest entries of `xs` (order not specified).
+pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u32> {
+    let k = k.min(xs.len());
+    // partial selection: maintain the current top-k in a small vec —
+    // for C ≤ a few thousand this beats a full sort.
+    let mut top: Vec<u32> = (0..k as u32).collect();
+    top.sort_by(|&a, &b| xs[b as usize].partial_cmp(&xs[a as usize]).unwrap());
+    for i in k..xs.len() {
+        let v = xs[i];
+        if v > xs[top[k - 1] as usize] {
+            // insert i keeping descending order
+            let mut pos = k - 1;
+            while pos > 0 && v > xs[top[pos - 1] as usize] {
+                pos -= 1;
+            }
+            top.pop();
+            top.insert(pos, i as u32);
+        }
+    }
+    top
+}
+
+/// Softmax over selected log-likes, prune `< min_post`, renormalize.
+/// Returns (index, posterior) pairs — the archive representation.
+pub fn prune_posteriors(select: &[u32], log_likes: &[f64], min_post: f64) -> Vec<Posting> {
+    debug_assert_eq!(select.len(), log_likes.len());
+    let lse = log_sum_exp(log_likes);
+    let mut kept: Vec<Posting> = select
+        .iter()
+        .zip(log_likes)
+        .filter_map(|(&idx, &ll)| {
+            let post = (ll - lse).exp();
+            (post >= min_post).then_some(Posting { idx, post: post as f32 })
+        })
+        .collect();
+    if kept.is_empty() {
+        // degenerate frame: keep the single best component
+        let best = select
+            .iter()
+            .zip(log_likes)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(&idx, _)| idx)
+            .unwrap();
+        return vec![Posting { idx: best, post: 1.0 }];
+    }
+    let total: f32 = kept.iter().map(|p| p.post).sum();
+    for p in &mut kept {
+        p.post /= total;
+    }
+    kept
+}
+
+/// Full two-stage alignment of one utterance (frames × F): diag top-K →
+/// full-cov refinement → pruning. The CPU reference path.
+pub fn select_posteriors(
+    diag: &DiagGmm,
+    full: &FullGmm,
+    feats: &Mat,
+    top_k: usize,
+    min_post: f64,
+) -> Vec<Vec<Posting>> {
+    let c_n = diag.num_components();
+    let mut ll_diag = vec![0.0; c_n];
+    let mut out = Vec::with_capacity(feats.rows());
+    let mut ll_sel = vec![0.0; top_k.min(c_n)];
+    for t in 0..feats.rows() {
+        let x = feats.row(t);
+        diag.log_likes(x, &mut ll_diag);
+        let sel = top_k_indices(&ll_diag, top_k);
+        ll_sel.resize(sel.len(), 0.0);
+        full.log_likes_select(x, &sel, &mut ll_sel);
+        out.push(prune_posteriors(&sel, &ll_sel, min_post));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, gen_dim};
+
+    #[test]
+    fn top_k_finds_largest() {
+        let xs = [0.1, 5.0, -2.0, 3.0, 4.0];
+        let mut got = top_k_indices(&xs, 3);
+        got.sort();
+        assert_eq!(got, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn top_k_handles_k_ge_len() {
+        let xs = [2.0, 1.0];
+        let mut got = top_k_indices(&xs, 5);
+        got.sort();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_top_k_matches_sort() {
+        forall(
+            505,
+            64,
+            |rng| {
+                let n = gen_dim(rng, 1, 200);
+                let k = gen_dim(rng, 1, n);
+                let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (xs, k)
+            },
+            |(xs, k)| {
+                let mut got = top_k_indices(xs, *k);
+                got.sort();
+                let mut order: Vec<usize> = (0..xs.len()).collect();
+                order.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+                let mut want: Vec<u32> = order[..*k].iter().map(|&i| i as u32).collect();
+                want.sort();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {got:?}, want {want:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn pruned_posteriors_sum_to_one() {
+        let select = [3u32, 7, 9];
+        let ll = [0.0, -1.0, -8.0]; // third gets pruned at 0.025
+        let posts = prune_posteriors(&select, &ll, 0.025);
+        let total: f32 = posts.iter().map(|p| p.post).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(posts.iter().all(|p| p.post >= 0.025));
+        assert_eq!(posts.len(), 2);
+        assert_eq!(posts[0].idx, 3);
+    }
+
+    #[test]
+    fn degenerate_frame_keeps_best() {
+        // all posteriors below threshold is impossible after softmax
+        // (they sum to 1), but equal tiny values with huge min_post is:
+        let posts = prune_posteriors(&[1, 2, 3, 4], &[0.0, 0.0, 0.0, 0.0], 0.9);
+        assert_eq!(posts.len(), 1);
+        assert_eq!(posts[0].post, 1.0);
+    }
+
+    #[test]
+    fn prop_pruning_invariants() {
+        forall(
+            606,
+            64,
+            |rng| {
+                let n = gen_dim(rng, 1, 30);
+                let ll: Vec<f64> = (0..n).map(|_| 4.0 * rng.normal()).collect();
+                let sel: Vec<u32> = (0..n as u32).collect();
+                (sel, ll)
+            },
+            |(sel, ll)| {
+                let posts = prune_posteriors(sel, ll, 0.025);
+                let total: f64 = posts.iter().map(|p| p.post as f64).sum();
+                if (total - 1.0).abs() > 1e-5 {
+                    return Err(format!("sum {total}"));
+                }
+                if posts.is_empty() {
+                    return Err("empty posting".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

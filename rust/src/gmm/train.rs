@@ -1,0 +1,247 @@
+//! UBM training recipe (the paper delegates this to Kaldi; we build it):
+//! global-stats init → binary splitting → diagonal EM → full-cov EM.
+
+use anyhow::Result;
+
+use crate::config::UbmConfig;
+use crate::io::FeatArchive;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::stats::BwStats;
+
+use super::{select_posteriors, DiagGmm, FullGmm};
+
+/// The trained UBM pair: diagonal (pre-select) + full (refine).
+pub struct UbmPair {
+    pub diag: DiagGmm,
+    pub full: FullGmm,
+}
+
+/// Subsample up to `max_frames` frames from the archive (round-robin
+/// over utterances, deterministic).
+pub fn pool_frames(archive: &FeatArchive, max_frames: usize, seed: u64) -> Mat {
+    let total: usize = archive.total_frames();
+    let dim = archive.dim();
+    let take = total.min(max_frames);
+    let mut rng = Rng::seed(seed);
+    // keep-probability subsampling, then truncate
+    let keep_p = take as f64 / total as f64;
+    let mut out = Mat::zeros(take, dim);
+    let mut k = 0;
+    'outer: for u in &archive.utts {
+        for t in 0..u.feats.rows() {
+            if rng.uniform() <= keep_p {
+                out.row_mut(k).copy_from_slice(u.feats.row(t));
+                k += 1;
+                if k == take {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    if k < take {
+        // fill the tail from the beginning (rare rounding shortfall)
+        let mut idx = 0usize;
+        while k < take {
+            let u = &archive.utts[idx % archive.utts.len()];
+            out.row_mut(k).copy_from_slice(u.feats.row(idx % u.feats.rows()));
+            k += 1;
+            idx += 1;
+        }
+    }
+    out
+}
+
+/// Initialize a 1-component diagonal GMM from global stats, then grow
+/// to `target` components by binary splitting + EM.
+fn init_diag_by_splitting(
+    data: &Mat,
+    target: usize,
+    em_iters: usize,
+    var_floor: f64,
+    seed: u64,
+) -> DiagGmm {
+    let dim = data.cols();
+    let t_len = data.rows();
+    // global mean/var
+    let mut mean = vec![0.0; dim];
+    let mut var = vec![0.0; dim];
+    for t in 0..t_len {
+        for (j, &x) in data.row(t).iter().enumerate() {
+            mean[j] += x;
+            var[j] += x * x;
+        }
+    }
+    for j in 0..dim {
+        mean[j] /= t_len as f64;
+        var[j] = (var[j] / t_len as f64 - mean[j] * mean[j]).max(var_floor);
+    }
+    let mut g = DiagGmm {
+        weights: vec![1.0],
+        means: Mat::from_vec(mean, 1, dim),
+        vars: Mat::from_vec(var, 1, dim),
+    };
+    let mut rng = Rng::seed(seed);
+    while g.num_components() < target {
+        g = split_gmm(&g, target, &mut rng);
+        for _ in 0..em_iters.max(1) {
+            g.em_step(data, var_floor);
+        }
+    }
+    g
+}
+
+/// Binary splitting: each component splits into two, means perturbed
+/// ±0.1·σ along each axis (Kaldi's `gmm-global-init-from-feats` style).
+fn split_gmm(g: &DiagGmm, cap: usize, rng: &mut Rng) -> DiagGmm {
+    let c_old = g.num_components();
+    let c_new = (2 * c_old).min(cap);
+    let dim = g.dim();
+    let mut weights = Vec::with_capacity(c_new);
+    let mut means = Mat::zeros(c_new, dim);
+    let mut vars = Mat::zeros(c_new, dim);
+    // split the heaviest components first when capped
+    let mut order: Vec<usize> = (0..c_old).collect();
+    order.sort_by(|&a, &b| g.weights[b].partial_cmp(&g.weights[a]).unwrap());
+    let n_split = c_new - c_old;
+    let mut slot = 0;
+    for (rank, &c) in order.iter().enumerate() {
+        if rank < n_split {
+            for sign in [-1.0, 1.0] {
+                weights.push(g.weights[c] / 2.0);
+                for j in 0..dim {
+                    let sigma = g.vars.get(c, j).sqrt();
+                    means.set(slot, j, g.means.get(c, j) + sign * (0.1 + 0.02 * rng.uniform()) * sigma);
+                    vars.set(slot, j, g.vars.get(c, j));
+                }
+                slot += 1;
+            }
+        } else {
+            weights.push(g.weights[c]);
+            means.row_mut(slot).copy_from_slice(g.means.row(c));
+            vars.row_mut(slot).copy_from_slice(g.vars.row(c));
+            slot += 1;
+        }
+    }
+    DiagGmm { weights, means, vars }
+}
+
+/// Full UBM recipe over a training archive. Returns the diag + full
+/// pair and the per-iteration mean log-likelihoods (diagnostics).
+pub fn train_ubm(archive: &FeatArchive, cfg: &UbmConfig, seed: u64) -> Result<(UbmPair, Vec<f64>)> {
+    let data = pool_frames(archive, cfg.train_frames, seed);
+    let mut lls = Vec::new();
+
+    // stage 1: diagonal UBM by splitting + EM
+    let mut diag = init_diag_by_splitting(&data, cfg.components, 2, cfg.var_floor, seed);
+    for _ in 0..cfg.diag_em_iters {
+        lls.push(diag.em_step(&data, cfg.var_floor));
+    }
+
+    // stage 2: full-covariance EM, initialized from the diagonal model.
+    // E-step via the production alignment path (top-K + pruning) so the
+    // UBM sees exactly the posteriors the extractor will. Parallelized
+    // over frame chunks (this stage dominated experiment setup time
+    // single-threaded — see EXPERIMENTS.md §Perf).
+    let workers = crate::exec::default_workers();
+    let mut full = FullGmm::from_diag(&diag)?;
+    for _ in 0..cfg.full_em_iters {
+        let chunk_rows = data.rows().div_ceil(workers).max(1);
+        let n_chunks = data.rows().div_ceil(chunk_rows);
+        let partials = crate::exec::map_parallel(n_chunks, workers, |k| {
+            let lo = k * chunk_rows;
+            let hi = ((k + 1) * chunk_rows).min(data.rows());
+            let mut block = Mat::zeros(hi - lo, data.cols());
+            for t in lo..hi {
+                block.row_mut(t - lo).copy_from_slice(data.row(t));
+            }
+            let posts = select_posteriors(&diag, &full, &block, cfg.components.min(20), 1e-8);
+            BwStats::accumulate(&block, &posts, cfg.components, true)
+        });
+        let mut acc = BwStats::zeros(cfg.components, data.cols(), true);
+        for p in &partials {
+            acc.merge(p);
+        }
+        full.update_from_stats(&acc, cfg.var_floor)?;
+    }
+    Ok((UbmPair { diag, full }, lls))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::frontend::synth::generate_corpus;
+
+    fn tiny_corpus() -> FeatArchive {
+        let cfg = CorpusConfig {
+            n_train_speakers: 6,
+            utts_per_train_speaker: 3,
+            n_eval_speakers: 2,
+            utts_per_eval_speaker: 2,
+            min_frames: 60,
+            max_frames: 90,
+            base_dim: 4,
+            true_components: 8,
+            speaker_rank: 4,
+            speaker_scale: 0.4,
+            channel_rank: 2,
+            channel_scale: 0.15,
+            stay_prob: 0.85,
+            silence_frac: 0.1,
+            seed: 77,
+        };
+        generate_corpus(&cfg).unwrap().train
+    }
+
+    #[test]
+    fn pool_frames_bounds() {
+        let arch = tiny_corpus();
+        let pooled = pool_frames(&arch, 500, 1);
+        assert_eq!(pooled.rows(), 500.min(arch.total_frames()));
+        assert_eq!(pooled.cols(), arch.dim());
+    }
+
+    #[test]
+    fn splitting_reaches_target_and_em_converges() {
+        let arch = tiny_corpus();
+        let data = pool_frames(&arch, 2000, 2);
+        let g = init_diag_by_splitting(&data, 8, 2, 1e-3, 3);
+        assert_eq!(g.num_components(), 8);
+        assert!((g.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_respects_cap() {
+        let data = Mat::from_fn(100, 2, |t, j| (t % 7) as f64 + j as f64);
+        let g = init_diag_by_splitting(&data, 5, 1, 1e-3, 4);
+        assert_eq!(g.num_components(), 5);
+    }
+
+    #[test]
+    fn full_ubm_training_improves_likelihood() {
+        let arch = tiny_corpus();
+        let cfg = UbmConfig {
+            components: 8,
+            diag_em_iters: 4,
+            full_em_iters: 2,
+            train_frames: 3000,
+            var_floor: 1e-3,
+        };
+        let (pair, lls) = train_ubm(&arch, &cfg, 5).unwrap();
+        assert_eq!(pair.full.num_components(), 8);
+        // diagonal EM non-decreasing
+        for w in lls.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "diag EM decreased: {w:?}");
+        }
+        // full model beats the diagonal model on pooled data
+        let data = pool_frames(&arch, 500, 9);
+        let mut diag_ll = 0.0;
+        let mut full_ll = 0.0;
+        for t in 0..data.rows() {
+            diag_ll += pair.diag.frame_log_like(data.row(t));
+            full_ll += pair.full.frame_log_like(data.row(t));
+        }
+        assert!(full_ll > diag_ll, "full {full_ll} vs diag {diag_ll}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Feature and posterior archives — the Kaldi `.ark` analogues.
+//!
+//! * [`FeatArchive`] stores per-utterance feature matrices (f32 payload,
+//!   frames × dim) with utterance and speaker ids.
+//! * [`PostArchive`] stores the *pruned* frame posteriors the alignment
+//!   stage produces: per frame, a short list of (gaussian index,
+//!   posterior) pairs — the paper stores "on average four Gaussian
+//!   indices and posteriors per frame" the same way.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{BinReader, BinWriter};
+use crate::linalg::Mat;
+
+/// One utterance: id, speaker, and its feature matrix (frames × dim).
+#[derive(Debug, Clone)]
+pub struct Utterance {
+    pub utt_id: String,
+    pub spk_id: String,
+    /// Features, frames × dim (f64 in memory; stored f32 like Kaldi).
+    pub feats: Mat,
+}
+
+/// Feature archive: ordered collection of utterances.
+#[derive(Debug, Clone, Default)]
+pub struct FeatArchive {
+    pub utts: Vec<Utterance>,
+}
+
+impl FeatArchive {
+    /// Write all utterances to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = BinWriter::create(path)?;
+        w.write_u64(self.utts.len() as u64)?;
+        for u in &self.utts {
+            w.write_string(&u.utt_id)?;
+            w.write_string(&u.spk_id)?;
+            w.write_u32(u.feats.rows() as u32)?;
+            w.write_u32(u.feats.cols() as u32)?;
+            let f32s: Vec<f32> = u.feats.as_slice().iter().map(|&x| x as f32).collect();
+            w.write_f32_slice(&f32s)?;
+        }
+        w.finish()
+    }
+
+    /// Read an archive written by [`FeatArchive::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = BinReader::open(&path)?;
+        let n = r.read_u64()? as usize;
+        let mut utts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let utt_id = r.read_string()?;
+            let spk_id = r.read_string()?;
+            let rows = r.read_u32()? as usize;
+            let cols = r.read_u32()? as usize;
+            let data = r.read_f32_vec(rows * cols)?;
+            let feats = Mat::from_vec(data.iter().map(|&x| x as f64).collect(), rows, cols);
+            utts.push(Utterance { utt_id, spk_id, feats });
+        }
+        Ok(Self { utts })
+    }
+
+    /// Total frame count across utterances.
+    pub fn total_frames(&self) -> usize {
+        self.utts.iter().map(|u| u.feats.rows()).sum()
+    }
+
+    /// Feature dimension (all utterances agree; panics on empty archive).
+    pub fn dim(&self) -> usize {
+        self.utts[0].feats.cols()
+    }
+
+    /// Distinct speaker ids, in first-seen order.
+    pub fn speakers(&self) -> Vec<String> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for u in &self.utts {
+            if seen.insert(u.spk_id.clone()) {
+                out.push(u.spk_id.clone());
+            }
+        }
+        out
+    }
+}
+
+/// One (gaussian index, posterior) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Posting {
+    pub idx: u32,
+    pub post: f32,
+}
+
+/// Pruned posteriors for one utterance: `frames[f]` lists the surviving
+/// components for frame `f`.
+#[derive(Debug, Clone)]
+pub struct UttPosts {
+    pub utt_id: String,
+    pub frames: Vec<Vec<Posting>>,
+}
+
+impl UttPosts {
+    /// Average postings per frame (the paper reports ≈ 4).
+    pub fn avg_postings(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.len()).sum::<usize>() as f64 / self.frames.len() as f64
+    }
+}
+
+/// Sparse posterior archive.
+#[derive(Debug, Clone, Default)]
+pub struct PostArchive {
+    pub utts: Vec<UttPosts>,
+}
+
+impl PostArchive {
+    /// Write to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = BinWriter::create(path)?;
+        w.write_u64(self.utts.len() as u64)?;
+        for u in &self.utts {
+            w.write_string(&u.utt_id)?;
+            w.write_u32(u.frames.len() as u32)?;
+            for frame in &u.frames {
+                w.write_u32(frame.len() as u32)?;
+                for p in frame {
+                    w.write_u32(p.idx)?;
+                    w.write_f32_slice(&[p.post])?;
+                }
+            }
+        }
+        w.finish()
+    }
+
+    /// Read an archive written by [`PostArchive::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = BinReader::open(&path)?;
+        let n = r.read_u64()? as usize;
+        let mut utts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let utt_id = r.read_string()?;
+            let nframes = r.read_u32()? as usize;
+            if nframes > 1 << 24 {
+                bail!("frame count {nframes} implausible — corrupt archive?");
+            }
+            let mut frames = Vec::with_capacity(nframes);
+            for _ in 0..nframes {
+                let k = r.read_u32()? as usize;
+                let mut frame = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let idx = r.read_u32()?;
+                    let post = r.read_f32_vec(1)?[0];
+                    frame.push(Posting { idx, post });
+                }
+                frames.push(frame);
+            }
+            utts.push(UttPosts { utt_id, frames });
+        }
+        Ok(Self { utts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ivtv_archive_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn demo_feats() -> FeatArchive {
+        FeatArchive {
+            utts: vec![
+                Utterance {
+                    utt_id: "spk0-utt0".into(),
+                    spk_id: "spk0".into(),
+                    feats: Mat::from_fn(10, 4, |i, j| (i * 4 + j) as f64 * 0.25),
+                },
+                Utterance {
+                    utt_id: "spk1-utt0".into(),
+                    spk_id: "spk1".into(),
+                    feats: Mat::from_fn(7, 4, |i, j| -((i + j) as f64)),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn feats_roundtrip() {
+        let p = tmp("feats.bin");
+        let a = demo_feats();
+        a.save(&p).unwrap();
+        let b = FeatArchive::load(&p).unwrap();
+        assert_eq!(b.utts.len(), 2);
+        assert_eq!(b.utts[0].utt_id, "spk0-utt0");
+        assert_eq!(b.utts[1].spk_id, "spk1");
+        assert!(b.utts[0].feats.approx_eq(&a.utts[0].feats, 1e-6));
+        assert_eq!(b.total_frames(), 17);
+        assert_eq!(b.dim(), 4);
+        assert_eq!(b.speakers(), vec!["spk0".to_string(), "spk1".to_string()]);
+    }
+
+    #[test]
+    fn posts_roundtrip() {
+        let p = tmp("posts.bin");
+        let a = PostArchive {
+            utts: vec![UttPosts {
+                utt_id: "u0".into(),
+                frames: vec![
+                    vec![Posting { idx: 3, post: 0.9 }, Posting { idx: 11, post: 0.1 }],
+                    vec![Posting { idx: 5, post: 1.0 }],
+                ],
+            }],
+        };
+        a.save(&p).unwrap();
+        let b = PostArchive::load(&p).unwrap();
+        assert_eq!(b.utts[0].frames.len(), 2);
+        assert_eq!(b.utts[0].frames[0][1], Posting { idx: 11, post: 0.1 });
+        assert!((b.utts[0].avg_postings() - 1.5).abs() < 1e-9);
+    }
+}

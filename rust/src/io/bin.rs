@@ -1,0 +1,193 @@
+//! Buffered little-endian binary reader/writer with magic + version.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"IVTV";
+const VERSION: u32 = 1;
+
+/// Buffered writer that stamps the container header on creation.
+pub struct BinWriter {
+    w: BufWriter<File>,
+}
+
+impl BinWriter {
+    /// Create/truncate `path` and write the header.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        let mut w = Self { w: BufWriter::new(f) };
+        w.w.write_all(MAGIC)?;
+        w.write_u32(VERSION)?;
+        Ok(w)
+    }
+
+    pub fn write_u32(&mut self, v: u32) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_f64(&mut self, v: f64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_f64_slice(&mut self, v: &[f64]) -> Result<()> {
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn write_f32_slice(&mut self, v: &[f32]) -> Result<()> {
+        for &x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn write_string(&mut self, s: &str) -> Result<()> {
+        self.write_u32(s.len() as u32)?;
+        self.w.write_all(s.as_bytes())?;
+        Ok(())
+    }
+
+    /// Flush and close.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Buffered reader that validates the container header on open.
+pub struct BinReader {
+    r: BufReader<File>,
+}
+
+impl BinReader {
+    /// Open `path` and check magic + version.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let f = File::open(&path)
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut r = Self { r: BufReader::new(f) };
+        let mut magic = [0u8; 4];
+        r.r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic {:?} (not an ivector-tv file)", path.as_ref().display(), magic);
+        }
+        let version = r.read_u32()?;
+        if version != VERSION {
+            bail!("{}: unsupported version {version}", path.as_ref().display());
+        }
+        Ok(r)
+    }
+
+    pub fn read_u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn read_u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn read_f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn read_f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        let mut bytes = vec![0u8; n * 8];
+        self.r.read_exact(&mut bytes)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn read_f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.r.read_exact(&mut bytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn read_string(&mut self) -> Result<String> {
+        let n = self.read_u32()? as usize;
+        if n > 1 << 20 {
+            bail!("string length {n} implausible — corrupt file?");
+        }
+        let mut b = vec![0u8; n];
+        self.r.read_exact(&mut b)?;
+        Ok(String::from_utf8(b)?)
+    }
+
+    /// True when the underlying file is exhausted.
+    pub fn at_eof(&mut self) -> Result<bool> {
+        Ok(self.r.fill_buf()?.is_empty())
+    }
+}
+
+use std::io::BufRead;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ivtv_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let p = tmp("prim.bin");
+        let mut w = BinWriter::create(&p).unwrap();
+        w.write_u32(7).unwrap();
+        w.write_u64(1 << 40).unwrap();
+        w.write_f64(-2.5).unwrap();
+        w.write_string("hello utt").unwrap();
+        w.write_f32_slice(&[1.0, 2.0]).unwrap();
+        w.finish().unwrap();
+
+        let mut r = BinReader::open(&p).unwrap();
+        assert_eq!(r.read_u32().unwrap(), 7);
+        assert_eq!(r.read_u64().unwrap(), 1 << 40);
+        assert_eq!(r.read_f64().unwrap(), -2.5);
+        assert_eq!(r.read_string().unwrap(), "hello utt");
+        assert_eq!(r.read_f32_vec(2).unwrap(), vec![1.0, 2.0]);
+        assert!(r.at_eof().unwrap());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(BinReader::open(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let p = tmp("trunc.bin");
+        let mut w = BinWriter::create(&p).unwrap();
+        w.write_u32(1).unwrap();
+        w.finish().unwrap();
+        let mut r = BinReader::open(&p).unwrap();
+        r.read_u32().unwrap();
+        assert!(r.read_u64().is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Binary IO substrate — the Kaldi-archive analogue.
+//!
+//! The paper reads Kaldi-format feature/posterior archives through
+//! PyKaldi; we define our own little-endian binary container with the
+//! same roles: feature archives (`.feats`), sparse posterior archives
+//! (`.posts`), and model files. All writers/readers go through the
+//! [`BinWriter`]/[`BinReader`] primitives so every format shares magic +
+//! version handling.
+
+mod bin;
+mod archive;
+
+pub use archive::{FeatArchive, PostArchive, Posting, Utterance, UttPosts};
+pub use bin::{BinReader, BinWriter};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Convenience: write any [`Serialize`] implementor to a file.
+pub fn save<T: Serialize>(value: &T, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BinWriter::create(path)?;
+    value.write(&mut w)?;
+    w.finish()
+}
+
+/// Convenience: read any [`Serialize`] implementor from a file.
+pub fn load<T: Serialize>(path: impl AsRef<Path>) -> Result<T> {
+    let mut r = BinReader::open(path)?;
+    T::read(&mut r)
+}
+
+/// Symmetric binary serialization for model/archive types.
+pub trait Serialize: Sized {
+    fn write(&self, w: &mut BinWriter) -> Result<()>;
+    fn read(r: &mut BinReader) -> Result<Self>;
+}
+
+impl Serialize for crate::linalg::Mat {
+    fn write(&self, w: &mut BinWriter) -> Result<()> {
+        w.write_u32(self.rows() as u32)?;
+        w.write_u32(self.cols() as u32)?;
+        w.write_f64_slice(self.as_slice())
+    }
+
+    fn read(r: &mut BinReader) -> Result<Self> {
+        let rows = r.read_u32()? as usize;
+        let cols = r.read_u32()? as usize;
+        let data = r.read_f64_vec(rows * cols)?;
+        Ok(crate::linalg::Mat::from_vec(data, rows, cols))
+    }
+}
+
+impl Serialize for Vec<f64> {
+    fn write(&self, w: &mut BinWriter) -> Result<()> {
+        w.write_u64(self.len() as u64)?;
+        w.write_f64_slice(self)
+    }
+
+    fn read(r: &mut BinReader) -> Result<Self> {
+        let n = r.read_u64()? as usize;
+        r.read_f64_vec(n)
+    }
+}
+
+impl Serialize for Vec<crate::linalg::Mat> {
+    fn write(&self, w: &mut BinWriter) -> Result<()> {
+        w.write_u64(self.len() as u64)?;
+        for m in self {
+            m.write(w)?;
+        }
+        Ok(())
+    }
+
+    fn read(r: &mut BinReader) -> Result<Self> {
+        let n = r.read_u64()? as usize;
+        (0..n).map(|_| crate::linalg::Mat::read(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn mat_roundtrip() {
+        let dir = std::env::temp_dir().join("ivtv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mat.bin");
+        let m = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64 * 0.5 - 2.0);
+        save(&m, &path).unwrap();
+        let back: Mat = load(&path).unwrap();
+        assert!(back.approx_eq(&m, 0.0));
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let dir = std::env::temp_dir().join("ivtv_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vec.bin");
+        let v = vec![1.0, -2.5, 3.25];
+        save(&v, &path).unwrap();
+        let back: Vec<f64> = load(&path).unwrap();
+        assert_eq!(back, v);
+    }
+}

@@ -1,0 +1,350 @@
+//! Accelerated (device) extractor path — the paper's GPU contribution.
+//!
+//! Mirrors the CPU reference exactly (same math, f32 on device):
+//! `precompute` runs once per EM iteration, `estep`/`extract` stream
+//! utterance batches. Batches are padded to the graph's static shape
+//! and masked; integration tests assert CPU ≡ accel to f32 tolerance.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Doc;
+use crate::gmm::{DiagGmm, FullGmm};
+use crate::io::Posting;
+use crate::linalg::Mat;
+use crate::runtime::{Runtime, Tensor};
+
+use super::estep::{EstepAccum, UttStats};
+use super::model::TvModel;
+
+/// Static graph dimensions, read from `artifacts/manifest.toml`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphDims {
+    pub c: usize,
+    pub f: usize,
+    pub r: usize,
+    pub k: usize,
+    pub bf: usize,
+    pub bu: usize,
+    pub d: usize,
+    pub ne: usize,
+    pub nt: usize,
+}
+
+impl GraphDims {
+    /// Parse from the manifest emitted by `python -m compile.aot`.
+    pub fn from_manifest(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let doc = Doc::load(&path).context("artifact manifest (run `make artifacts`)")?;
+        Ok(Self {
+            c: doc.get_usize("dims.C", 0)?,
+            f: doc.get_usize("dims.F", 0)?,
+            r: doc.get_usize("dims.R", 0)?,
+            k: doc.get_usize("dims.K", 0)?,
+            bf: doc.get_usize("dims.BF", 0)?,
+            bu: doc.get_usize("dims.BU", 0)?,
+            d: doc.get_usize("dims.D", 0)?,
+            ne: doc.get_usize("dims.NE", 0)?,
+            nt: doc.get_usize("dims.NT", 0)?,
+        })
+    }
+}
+
+/// Device-side TVM: owns the runtime, the compiled graphs, and the
+/// per-iteration precomputed constants.
+pub struct AccelTvm {
+    rt: Runtime,
+    pub dims: GraphDims,
+    // per-iteration constants (set_model)
+    tt_si: Option<Tensor>,   // (C, R, F)
+    tt_si_t: Option<Tensor>, // (C, R, R)
+    prior: Option<Tensor>,   // (R,)
+}
+
+impl AccelTvm {
+    /// Load the manifest + the TVM graphs from `artifacts_dir`.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let dims = GraphDims::from_manifest(format!("{artifacts_dir}/manifest.toml"))?;
+        let mut rt = Runtime::cpu(artifacts_dir)?;
+        rt.load("precompute")?;
+        rt.load("estep")?;
+        rt.load("extract")?;
+        Ok(Self { rt, dims, tt_si: None, tt_si_t: None, prior: None })
+    }
+
+    /// Also load the alignment + UBM graphs (used by the aligner paths).
+    pub fn with_alignment(mut self) -> Result<Self> {
+        self.rt.load("align_topk")?;
+        self.rt.load("ubm_acc")?;
+        Ok(self)
+    }
+
+    /// Validate that a model matches the graph shapes.
+    fn check_model(&self, model: &TvModel) -> Result<()> {
+        if model.num_components() != self.dims.c
+            || model.feat_dim() != self.dims.f
+            || model.rank() != self.dims.r
+        {
+            bail!(
+                "model dims (C={}, F={}, R={}) do not match artifacts (C={}, F={}, R={}) — \
+                 re-run `make artifacts` after changing python/compile/dims.py",
+                model.num_components(),
+                model.feat_dim(),
+                model.rank(),
+                self.dims.c,
+                self.dims.f,
+                self.dims.r
+            );
+        }
+        Ok(())
+    }
+
+    /// Run the `precompute` graph for the current model parameters.
+    /// Must be called after every parameter update (per EM iteration).
+    pub fn set_model(&mut self, model: &TvModel) -> Result<()> {
+        self.check_model(model)?;
+        let (c, f, r) = (self.dims.c, self.dims.f, self.dims.r);
+        // pack T (C, F, R)
+        let mut t_flat = Vec::with_capacity(c * f * r);
+        for tc in &model.t {
+            t_flat.extend(tc.as_slice().iter().map(|&x| x as f32));
+        }
+        // pack Σ⁻¹ (C, F, F)
+        let inv = model.sigma_inverses();
+        let mut si_flat = Vec::with_capacity(c * f * f);
+        for ic in &inv {
+            si_flat.extend(ic.as_slice().iter().map(|&x| x as f32));
+        }
+        let out = self.rt.graph("precompute")?.run(&[
+            Tensor::from_f32(t_flat, &[c, f, r]),
+            Tensor::from_f32(si_flat, &[c, f, f]),
+        ])?;
+        let prior: Vec<f32> = model.prior_mean.iter().map(|&x| x as f32).collect();
+        self.tt_si = Some(out[0].clone());
+        self.tt_si_t = Some(out[1].clone());
+        self.prior = Some(Tensor::from_f32(prior, &[r]));
+        Ok(())
+    }
+
+    fn pack_batch(&self, batch: &[&UttStats]) -> (Tensor, Tensor, Tensor) {
+        let (c, f, bu) = (self.dims.c, self.dims.f, self.dims.bu);
+        assert!(batch.len() <= bu, "batch {} exceeds BU {}", batch.len(), bu);
+        let mut n = vec![0f32; bu * c];
+        let mut fs = vec![0f32; bu * c * f];
+        let mut mask = vec![0f32; bu];
+        for (b, st) in batch.iter().enumerate() {
+            debug_assert_eq!(st.n.len(), c);
+            for ci in 0..c {
+                n[b * c + ci] = st.n[ci] as f32;
+            }
+            for (k, &v) in st.f.as_slice().iter().enumerate() {
+                fs[b * c * f + k] = v as f32;
+            }
+            mask[b] = 1.0;
+        }
+        (
+            Tensor::from_f32(n, &[bu, c]),
+            Tensor::from_f32(fs, &[bu, c, f]),
+            Tensor::from_f32(mask, &[bu]),
+        )
+    }
+
+    fn constants(&self) -> Result<(&Tensor, &Tensor, &Tensor)> {
+        match (&self.tt_si, &self.tt_si_t, &self.prior) {
+            (Some(a), Some(b), Some(p)) => Ok((a, b, p)),
+            _ => bail!("AccelTvm::set_model must be called before estep/extract"),
+        }
+    }
+
+    /// Run the E-step graph on one utterance batch (≤ BU) and return
+    /// the partial accumulator plus the batch φ rows.
+    pub fn estep_batch(&self, batch: &[&UttStats]) -> Result<(EstepAccum, Mat)> {
+        let (c, f, r) = (self.dims.c, self.dims.f, self.dims.r);
+        let (n_t, f_t, m_t) = self.pack_batch(batch);
+        let (tt_si, tt_si_t, prior) = self.constants()?;
+        let out = self.rt.graph("estep")?.run(&[
+            n_t,
+            f_t,
+            m_t,
+            tt_si.clone(),
+            tt_si_t.clone(),
+            prior.clone(),
+        ])?;
+        // unpack: acc_a (C,R,R), acc_b (C,F,R), acc_h (R), acc_hh (R,R),
+        // count (), phi (BU, R)
+        let mut acc = EstepAccum::zeros(c, f, r);
+        let a = out[0].to_f64()?;
+        for ci in 0..c {
+            acc.a[ci] = Mat::from_vec(a[ci * r * r..(ci + 1) * r * r].to_vec(), r, r);
+        }
+        let b = out[1].to_f64()?;
+        for ci in 0..c {
+            acc.b[ci] = Mat::from_vec(b[ci * f * r..(ci + 1) * f * r].to_vec(), f, r);
+        }
+        acc.h = out[2].to_f64()?;
+        acc.hh = Mat::from_vec(out[3].to_f64()?, r, r);
+        acc.count = out[4].to_f64()?[0];
+
+        let phi_all = out[5].to_f64()?;
+        let mut phi = Mat::zeros(batch.len(), r);
+        for (bi, row) in phi.as_mut_slice().chunks_exact_mut(r).enumerate() {
+            row.copy_from_slice(&phi_all[bi * r..(bi + 1) * r]);
+        }
+        Ok((acc, phi))
+    }
+
+    /// Run the extraction graph on one batch; returns i-vectors
+    /// (posterior means minus the prior mean), one row per input.
+    pub fn extract_batch(&self, batch: &[&UttStats], prior_mean: &[f64]) -> Result<Mat> {
+        let r = self.dims.r;
+        let (n_t, f_t, _m) = self.pack_batch(batch);
+        let (tt_si, tt_si_t, prior) = self.constants()?;
+        let out = self.rt.graph("extract")?.run(&[
+            n_t,
+            f_t,
+            tt_si.clone(),
+            tt_si_t.clone(),
+            prior.clone(),
+        ])?;
+        let phi_all = out[0].to_f64()?;
+        let mut iv = Mat::zeros(batch.len(), r);
+        for bi in 0..batch.len() {
+            for j in 0..r {
+                iv.set(bi, j, phi_all[bi * r + j] - prior_mean[j]);
+            }
+        }
+        Ok(iv)
+    }
+
+    /// Borrow the runtime (aligner / scorer helpers share the client).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Mutable runtime access (loading extra graphs).
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+}
+
+/// Pack diagonal-GMM parameters for the `align_topk` graph
+/// (mirrors `kernels.loglikes.pack_diag_weights`).
+pub fn pack_diag_params(g: &DiagGmm) -> (Tensor, Tensor) {
+    let (c, f) = (g.num_components(), g.dim());
+    let mut w = vec![0f32; c * 2 * f];
+    let mut consts = vec![0f32; c];
+    for ci in 0..c {
+        let mut const_c = g.weights[ci].max(1e-300).ln() - 0.5 * f as f64 * crate::gmm::LOG_2PI;
+        for j in 0..f {
+            let v = g.vars.get(ci, j);
+            let m = g.means.get(ci, j);
+            let vinv = 1.0 / v;
+            w[ci * 2 * f + j] = (m * vinv) as f32;
+            w[ci * 2 * f + f + j] = (-0.5 * vinv) as f32;
+            const_c -= 0.5 * (v.ln() + m * m * vinv);
+        }
+        consts[ci] = const_c as f32;
+    }
+    (Tensor::from_f32(w, &[c, 2 * f]), Tensor::from_f32(consts, &[c]))
+}
+
+/// Pack full-covariance GMM parameters for the `align_topk` /
+/// `ubm_acc` graphs (mirrors `kernels.loglikes.pack_full_weights`).
+/// Uses the FullGmm caches, so `consts` match the CPU path exactly.
+pub fn pack_full_params(g: &FullGmm) -> (Tensor, Tensor) {
+    let (c, f) = (g.num_components(), g.dim());
+    let q = f + f * f;
+    let mut w = vec![0f32; c * q];
+    let mut consts = vec![0f32; c];
+    for ci in 0..c {
+        let inv = g.inv_cov(ci);
+        let m = g.means.row(ci);
+        let lin = inv.matvec(m); // Σ⁻¹ m
+        for j in 0..f {
+            w[ci * q + j] = lin[j] as f32;
+        }
+        for (k, &v) in inv.as_slice().iter().enumerate() {
+            w[ci * q + f + k] = (-0.5 * v) as f32;
+        }
+        // const = log w − ½(F log2π + log|Σ| + mᵀΣ⁻¹m): recompute from
+        // parts (FullGmm keeps it private); cheap at C ≤ thousands.
+        let (chol, _) = crate::linalg::Cholesky::new_regularized(&g.covs[ci]);
+        consts[ci] = (g.weights[ci].max(1e-300).ln()
+            - 0.5
+                * (f as f64 * crate::gmm::LOG_2PI
+                    + chol.logdet()
+                    + crate::linalg::dot(m, &lin))) as f32;
+    }
+    (Tensor::from_f32(w, &[c, q]), Tensor::from_f32(consts, &[c]))
+}
+
+/// Device-side frame aligner: streams frame batches through the
+/// `align_topk` graph (the paper's 3000×-RT path).
+pub struct AccelAligner<'rt> {
+    rt: &'rt Runtime,
+    dims: GraphDims,
+    diag_w: Tensor,
+    diag_const: Tensor,
+    full_w: Tensor,
+    full_const: Tensor,
+}
+
+impl<'rt> AccelAligner<'rt> {
+    /// Pack GMM parameters once; graphs must already be loaded.
+    pub fn new(rt: &'rt Runtime, dims: GraphDims, diag: &DiagGmm, full: &FullGmm) -> Result<Self> {
+        rt.graph("align_topk")?; // fail fast if not loaded
+        let (diag_w, diag_const) = pack_diag_params(diag);
+        let (full_w, full_const) = pack_full_params(full);
+        Ok(Self { rt, dims, diag_w, diag_const, full_w, full_const })
+    }
+
+    /// Align a flat frame block (rows ≤ BF); returns per-frame pruned
+    /// postings for the first `n_rows` rows.
+    pub fn align_block(&self, frames: &Mat, n_rows: usize) -> Result<Vec<Vec<Posting>>> {
+        let (bf, f, k) = (self.dims.bf, self.dims.f, self.dims.k);
+        assert!(n_rows <= bf && frames.cols() == f);
+        let mut flat = vec![0f32; bf * f];
+        for t in 0..n_rows.min(frames.rows()) {
+            for (j, &v) in frames.row(t).iter().enumerate() {
+                flat[t * f + j] = v as f32;
+            }
+        }
+        let out = self.rt.graph("align_topk")?.run(&[
+            Tensor::from_f32(flat, &[bf, f]),
+            self.diag_w.clone(),
+            self.diag_const.clone(),
+            self.full_w.clone(),
+            self.full_const.clone(),
+        ])?;
+        let posts = out[0].as_f32()?;
+        let idx = out[1].as_i32()?;
+        let mut result = Vec::with_capacity(n_rows);
+        for t in 0..n_rows {
+            let mut frame = Vec::with_capacity(4);
+            for j in 0..k {
+                let p = posts[t * k + j];
+                if p > 0.0 {
+                    frame.push(Posting { idx: idx[t * k + j] as u32, post: p });
+                }
+            }
+            result.push(frame);
+        }
+        Ok(result)
+    }
+
+    /// Align a whole utterance (any number of frames) by streaming
+    /// BF-sized blocks.
+    pub fn align_utterance(&self, feats: &Mat) -> Result<Vec<Vec<Posting>>> {
+        let bf = self.dims.bf;
+        let mut out = Vec::with_capacity(feats.rows());
+        let mut start = 0;
+        while start < feats.rows() {
+            let n = (feats.rows() - start).min(bf);
+            let mut block = Mat::zeros(n, feats.cols());
+            for t in 0..n {
+                block.row_mut(t).copy_from_slice(feats.row(start + t));
+            }
+            out.extend(self.align_block(&block, n)?);
+            start += n;
+        }
+        Ok(out)
+    }
+}

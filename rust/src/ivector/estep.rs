@@ -1,0 +1,259 @@
+//! E-step (paper §3 step 2, eqs. 3–4) — CPU reference path.
+//!
+//! Per utterance: posterior precision `L(u) = I + Σ_c n_c TᵀΣ⁻¹T|_c`,
+//! posterior mean `φ(u) = L⁻¹(p + Σ_c TᵀΣ⁻¹ f_c)`, posterior
+//! covariance `Φ(u) = L⁻¹`, accumulated into the M-step and
+//! minimum-divergence sufficient statistics.
+
+use crate::linalg::{outer, Cholesky, Mat};
+
+use super::model::{Formulation, TvModel};
+
+/// Per-utterance first-order statistics in the layout the extractor
+/// consumes: occupancies + first-order stats (already centered for the
+/// standard formulation — see [`UttStats::from_bw`]).
+#[derive(Debug, Clone)]
+pub struct UttStats {
+    /// n_c (C).
+    pub n: Vec<f64>,
+    /// f_c (C × F).
+    pub f: Mat,
+}
+
+impl UttStats {
+    /// Adapt raw Baum-Welch stats to a formulation: the standard
+    /// formulation centers around the model's bias means, the
+    /// augmented consumes them raw (paper §2).
+    pub fn from_bw(bw: &crate::stats::BwStats, model: &TvModel) -> Self {
+        match model.formulation {
+            Formulation::Standard => {
+                let centered = bw.center(&model.means);
+                Self { n: centered.n, f: centered.f }
+            }
+            Formulation::Augmented => Self { n: bw.n.clone(), f: bw.f.clone() },
+        }
+    }
+}
+
+/// Accumulators for the M-step + minimum divergence (paper eqs. 6–7).
+#[derive(Debug, Clone)]
+pub struct EstepAccum {
+    /// A_c = Σ_u n_c(u) (Φ(u)+φφᵀ), C matrices of R × R.
+    pub a: Vec<Mat>,
+    /// B_c = Σ_u f_c(u) φ(u)ᵀ, C matrices of F × R.
+    pub b: Vec<Mat>,
+    /// Σ_u φ(u) (R).
+    pub h: Vec<f64>,
+    /// Σ_u (Φ(u)+φφᵀ) (R × R).
+    pub hh: Mat,
+    /// Number of utterances accumulated.
+    pub count: f64,
+}
+
+impl EstepAccum {
+    pub fn zeros(c: usize, f: usize, r: usize) -> Self {
+        Self {
+            a: vec![Mat::zeros(r, r); c],
+            b: vec![Mat::zeros(f, r); c],
+            h: vec![0.0; r],
+            hh: Mat::zeros(r, r),
+            count: 0.0,
+        }
+    }
+
+    /// Merge a partial accumulator (parallel workers / device batches).
+    pub fn merge(&mut self, other: &EstepAccum) {
+        for (x, y) in self.a.iter_mut().zip(&other.a) {
+            x.add_scaled(1.0, y);
+        }
+        for (x, y) in self.b.iter_mut().zip(&other.b) {
+            x.add_scaled(1.0, y);
+        }
+        for (x, &y) in self.h.iter_mut().zip(&other.h) {
+            *x += y;
+        }
+        self.hh.add_scaled(1.0, &other.hh);
+        self.count += other.count;
+    }
+}
+
+/// E-step for one utterance; returns φ and accumulates into `acc`.
+///
+/// `tt_si` / `tt_si_t` are the precomputed per-component constants from
+/// [`TvModel::precompute`].
+pub fn estep_utterance(
+    stats: &UttStats,
+    tt_si: &[Mat],
+    tt_si_t: &[Mat],
+    prior_mean: &[f64],
+    acc: Option<&mut EstepAccum>,
+) -> Vec<f64> {
+    let r = prior_mean.len();
+    let c_n = stats.n.len();
+
+    // L = I + Σ_c n_c M_c
+    let mut l_mat = Mat::eye(r);
+    for c in 0..c_n {
+        if stats.n[c] != 0.0 {
+            l_mat.add_scaled(stats.n[c], &tt_si_t[c]);
+        }
+    }
+    // rhs = p + Σ_c TᵀΣ⁻¹ f_c
+    let mut rhs = prior_mean.to_vec();
+    for c in 0..c_n {
+        if stats.n[c] != 0.0 {
+            let v = tt_si[c].matvec(stats.f.row(c));
+            crate::linalg::axpy(1.0, &v, &mut rhs);
+        }
+    }
+    let chol = Cholesky::new_regularized(&l_mat).0;
+    let phi = chol.solve_vec(&rhs);
+
+    if let Some(acc) = acc {
+        let mut cov = chol.inverse(); // Φ
+        // second moment Φ + φφᵀ
+        let phi_outer = outer(&phi, &phi);
+        cov.add_scaled(1.0, &phi_outer);
+        for c in 0..c_n {
+            if stats.n[c] != 0.0 {
+                acc.a[c].add_scaled(stats.n[c], &cov);
+                // B_c += f_c φᵀ
+                acc.b[c].add_scaled(1.0, &outer(stats.f.row(c), &phi));
+            }
+        }
+        crate::linalg::axpy(1.0, &phi, &mut acc.h);
+        acc.hh.add_scaled(1.0, &cov);
+        acc.count += 1.0;
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::test_support::tiny_ubm;
+    use super::super::model::{Formulation, TvModel};
+    use super::*;
+    use crate::rng::Rng;
+
+    pub(crate) fn random_stats(c: usize, f: usize, rng: &mut Rng) -> UttStats {
+        UttStats {
+            n: (0..c).map(|_| rng.uniform_in(0.0, 30.0)).collect(),
+            f: Mat::from_fn(c, f, |_, _| rng.normal() * 3.0),
+        }
+    }
+
+    #[test]
+    fn phi_solves_the_linear_system() {
+        let ubm = tiny_ubm(4, 3, 1);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 5, 100.0, 2);
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut rng = Rng::seed(3);
+        let stats = random_stats(4, 3, &mut rng);
+        let phi = estep_utterance(&stats, &tt_si, &tt_si_t, &model.prior_mean, None);
+
+        // reconstruct L φ and compare to rhs
+        let r = model.rank();
+        let mut l_mat = Mat::eye(r);
+        for c in 0..4 {
+            l_mat.add_scaled(stats.n[c], &tt_si_t[c]);
+        }
+        let lphi = l_mat.matvec(&phi);
+        let mut rhs = model.prior_mean.clone();
+        for c in 0..4 {
+            crate::linalg::axpy(1.0, &tt_si[c].matvec(stats.f.row(c)), &mut rhs);
+        }
+        for (a, b) in lphi.iter().zip(&rhs) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_stats_give_prior_mean() {
+        let ubm = tiny_ubm(3, 2, 5);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 4, 100.0, 1);
+        let (tt_si, tt_si_t) = model.precompute();
+        let stats = UttStats { n: vec![0.0; 3], f: Mat::zeros(3, 2) };
+        let phi = estep_utterance(&stats, &tt_si, &tt_si_t, &model.prior_mean, None);
+        // L = I, rhs = p → φ = p
+        for (a, b) in phi.iter().zip(&model.prior_mean) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn accumulators_match_manual_sums() {
+        let ubm = tiny_ubm(3, 2, 7);
+        let model = TvModel::init(Formulation::Standard, &ubm, 4, 100.0, 9);
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut rng = Rng::seed(11);
+        let s1 = random_stats(3, 2, &mut rng);
+        let s2 = random_stats(3, 2, &mut rng);
+
+        let mut acc = EstepAccum::zeros(3, 2, 4);
+        let phi1 = estep_utterance(&s1, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        let phi2 = estep_utterance(&s2, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+
+        assert_eq!(acc.count, 2.0);
+        // h = φ1 + φ2
+        for i in 0..4 {
+            assert!((acc.h[i] - (phi1[i] + phi2[i])).abs() < 1e-10);
+        }
+        // B_c = f_c(1) φ1ᵀ + f_c(2) φ2ᵀ
+        for c in 0..3 {
+            let mut want = outer(s1.f.row(c), &phi1);
+            want.add_scaled(1.0, &outer(s2.f.row(c), &phi2));
+            assert!(acc.b[c].approx_eq(&want, 1e-10));
+        }
+    }
+
+    #[test]
+    fn merge_equals_joint_accumulation() {
+        let ubm = tiny_ubm(3, 2, 13);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 4, 100.0, 2);
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut rng = Rng::seed(17);
+        let stats: Vec<UttStats> = (0..4).map(|_| random_stats(3, 2, &mut rng)).collect();
+
+        let mut joint = EstepAccum::zeros(3, 2, 4);
+        for s in &stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut joint));
+        }
+        let mut a1 = EstepAccum::zeros(3, 2, 4);
+        let mut a2 = EstepAccum::zeros(3, 2, 4);
+        for s in &stats[..2] {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut a1));
+        }
+        for s in &stats[2..] {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut a2));
+        }
+        a1.merge(&a2);
+        assert_eq!(a1.count, joint.count);
+        assert!(a1.hh.approx_eq(&joint.hh, 1e-10));
+        for c in 0..3 {
+            assert!(a1.a[c].approx_eq(&joint.a[c], 1e-10));
+        }
+    }
+
+    #[test]
+    fn centering_applied_only_for_standard() {
+        let ubm = tiny_ubm(2, 2, 19);
+        let std_model = TvModel::init(Formulation::Standard, &ubm, 3, 100.0, 1);
+        let aug_model = TvModel::init(Formulation::Augmented, &ubm, 3, 100.0, 1);
+        let bw = crate::stats::BwStats {
+            n: vec![2.0, 1.0],
+            f: Mat::from_rows(&[&[4.0, 2.0], &[1.0, 1.0]]),
+            s: None,
+        };
+        let s_std = UttStats::from_bw(&bw, &std_model);
+        let s_aug = UttStats::from_bw(&bw, &aug_model);
+        // augmented = raw
+        assert!(s_aug.f.approx_eq(&bw.f, 0.0));
+        // standard = centered: f − n·m
+        for c in 0..2 {
+            for j in 0..2 {
+                let want = bw.f.get(c, j) - bw.n[c] * ubm.means.get(c, j);
+                assert!((s_std.f.get(c, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+}

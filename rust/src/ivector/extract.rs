@@ -1,0 +1,98 @@
+//! I-vector extraction — CPU reference path.
+//!
+//! The i-vector is the posterior mean φ(u) with the prior mean
+//! subtracted (Kaldi subtracts the prior offset from the first
+//! coordinate; for the standard formulation p = 0 so this is a no-op).
+//! Subtracting p makes the two formulations produce directly
+//! comparable embeddings for the backend.
+
+use crate::exec::map_parallel;
+use crate::linalg::Mat;
+
+use super::estep::{estep_utterance, UttStats};
+use super::model::TvModel;
+
+/// Extract i-vectors for a list of utterance stats (parallel over
+/// utterances). Returns an (N × R) matrix, one i-vector per row.
+pub fn extract_cpu(model: &TvModel, stats: &[UttStats], workers: usize) -> Mat {
+    let (tt_si, tt_si_t) = model.precompute();
+    let r = model.rank();
+    let rows = map_parallel(stats.len(), workers.max(1), |i| {
+        let mut phi = estep_utterance(&stats[i], &tt_si, &tt_si_t, &model.prior_mean, None);
+        for (x, p) in phi.iter_mut().zip(&model.prior_mean) {
+            *x -= p;
+        }
+        phi
+    });
+    let mut out = Mat::zeros(stats.len(), r);
+    for (i, row) in rows.into_iter().enumerate() {
+        out.row_mut(i).copy_from_slice(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::test_support::tiny_ubm;
+    use super::super::model::{Formulation, TvModel};
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn extraction_subtracts_prior() {
+        let ubm = tiny_ubm(3, 2, 61);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 4, 50.0, 3);
+        // zero stats → φ = p → i-vector must be exactly 0
+        let stats = vec![UttStats { n: vec![0.0; 3], f: Mat::zeros(3, 2) }];
+        let iv = extract_cpu(&model, &stats, 2);
+        assert!(iv.max_abs() < 1e-10, "{}", iv.max_abs());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let ubm = tiny_ubm(4, 3, 67);
+        let model = TvModel::init(Formulation::Standard, &ubm, 5, 0.0, 7);
+        let mut rng = Rng::seed(3);
+        let stats: Vec<UttStats> = (0..10)
+            .map(|_| UttStats {
+                n: (0..4).map(|_| rng.uniform_in(1.0, 30.0)).collect(),
+                f: Mat::from_fn(4, 3, |_, _| rng.normal()),
+            })
+            .collect();
+        let a = extract_cpu(&model, &stats, 1);
+        let b = extract_cpu(&model, &stats, 4);
+        assert!(a.approx_eq(&b, 1e-12));
+        assert_eq!(a.rows(), 10);
+        assert_eq!(a.cols(), 5);
+    }
+
+    #[test]
+    fn more_data_shrinks_toward_zero_less() {
+        // i-vector magnitude grows with evidence (posterior moves away
+        // from the prior)
+        let ubm = tiny_ubm(3, 2, 71);
+        let model = TvModel::init(Formulation::Standard, &ubm, 4, 0.0, 9);
+        let mut rng = Rng::seed(5);
+        let f_dir = Mat::from_fn(3, 2, |_, _| rng.normal());
+        let small = UttStats {
+            n: vec![1.0; 3],
+            f: {
+                let mut f = f_dir.clone();
+                f.scale(1.0);
+                f
+            },
+        };
+        let big = UttStats {
+            n: vec![100.0; 3],
+            f: {
+                let mut f = f_dir.clone();
+                f.scale(100.0);
+                f
+            },
+        };
+        let iv = extract_cpu(&model, &[small, big], 1);
+        let norm_small = crate::linalg::norm2(iv.row(0));
+        let norm_big = crate::linalg::norm2(iv.row(1));
+        assert!(norm_big > norm_small, "{norm_big} vs {norm_small}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Minimum-divergence re-estimation (paper §3.1).
+//!
+//! From the E-step sums `h = (1/U)Σφ`, `H = (1/U)Σ(Φ+φφᵀ)` build
+//! `G = H − hhᵀ`, whiten via the eigendecomposition `G = QΛQᵀ`
+//! (`P₁ = Λ^{-½}Qᵀ`), and absorb the inverse into T: `T ← T P₁⁻¹`.
+//!
+//! Standard formulation: that is all. Augmented formulation: a second
+//! transform `P₂` — the Householder reflection of eqs. (8)–(11) — maps
+//! the whitened mean direction onto `e₁` so the prior-offset structure
+//! `p = [p₀ 0 …]` is restored; finally `p ← P₂P₁h` (eq. 12).
+
+use crate::linalg::{
+    householder_apply_left, householder_apply_vec, householder_direction, jacobi_eigh,
+};
+
+use super::estep::EstepAccum;
+use super::model::{Formulation, TvModel};
+
+/// Eigenvalue floor for the whitening (guards early iterations where G
+/// can be near-singular).
+const EIG_FLOOR: f64 = 1e-10;
+
+/// Apply minimum-divergence re-estimation in place. Returns the
+/// whitening transform's log-volume change (diagnostic).
+pub fn min_divergence(model: &mut TvModel, acc: &EstepAccum) -> f64 {
+    assert!(acc.count > 0.0, "min-divergence needs accumulated utterances");
+    let r = model.rank();
+    let u = acc.count;
+
+    // ĥ = h/U, Ĥ = H/U, G = Ĥ − ĥĥᵀ   (paper eqs. 6–7)
+    let h: Vec<f64> = acc.h.iter().map(|&x| x / u).collect();
+    let mut g = acc.hh.clone();
+    g.scale(1.0 / u);
+    for i in 0..r {
+        for j in 0..r {
+            let v = g.get(i, j) - h[i] * h[j];
+            g.set(i, j, v);
+        }
+    }
+    g.symmetrize();
+
+    let eig = jacobi_eigh(&g);
+    let p1 = eig.whitener(EIG_FLOOR); // P₁ = Λ^{-½}Qᵀ
+    let p1_inv = eig.whitener_inv(EIG_FLOOR); // P₁⁻¹ = QΛ^{½}
+    let logvol: f64 =
+        eig.values.iter().map(|&l| 0.5 * l.max(EIG_FLOOR).ln()).sum();
+
+    match model.formulation {
+        Formulation::Standard => {
+            // T ← T P₁⁻¹ whitens the i-vector distribution; prior mean
+            // stays 0 (the paper keeps h out of the standard update).
+            for tc in &mut model.t {
+                *tc = tc.matmul(&p1_inv);
+            }
+        }
+        Formulation::Augmented => {
+            // whitened mean and its Householder direction (eqs. 9–11)
+            let p1h = p1.matvec(&h);
+            let norm = crate::linalg::norm2(&p1h);
+            let mut h_tilde = p1h.clone();
+            if norm > 0.0 {
+                for x in &mut h_tilde {
+                    *x /= norm;
+                }
+            } else {
+                // degenerate (h = 0): identity reflection
+                h_tilde = vec![0.0; r];
+                h_tilde[0] = 1.0;
+            }
+            let a = householder_direction(&h_tilde);
+            // T ← T P₁⁻¹ P₂⁻¹; the reflection is involutory (P₂⁻¹ = P₂),
+            // and right-multiplication by the symmetric P₂ equals
+            // (P₂ Mᵀ)ᵀ — reuse the left-apply kernel.
+            for tc in &mut model.t {
+                let tp1 = tc.matmul(&p1_inv);
+                *tc = householder_apply_left(&a, &tp1.t()).t();
+            }
+            // p ← P₂P₁h  (eq. 12); analytically [‖P₁h‖, 0, …]
+            model.prior_mean = householder_apply_vec(&a, &p1h);
+            // zero the analytic tail (fp dust) so the structure is exact
+            for x in model.prior_mean.iter_mut().skip(1) {
+                if x.abs() < 1e-9 * norm.max(1.0) {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+    logvol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::estep::{estep_utterance, EstepAccum, UttStats};
+    use super::super::model::test_support::tiny_ubm;
+    use super::super::model::{Formulation, TvModel};
+    use super::super::mstep::mstep;
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn run_em_iter(model: &mut TvModel, stats: &[UttStats], min_div: bool) -> EstepAccum {
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(model.num_components(), model.feat_dim(), model.rank());
+        for s in stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        mstep(model, &acc, None, 1e-6);
+        if min_div {
+            min_divergence(model, &acc);
+        }
+        acc
+    }
+
+    fn posterior_moments(model: &TvModel, stats: &[UttStats]) -> (Vec<f64>, Mat) {
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(model.num_components(), model.feat_dim(), model.rank());
+        for s in stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        let u = acc.count;
+        let h: Vec<f64> = acc.h.iter().map(|&x| x / u).collect();
+        let mut g = acc.hh.clone();
+        g.scale(1.0 / u);
+        for i in 0..model.rank() {
+            for j in 0..model.rank() {
+                let v = g.get(i, j) - h[i] * h[j];
+                g.set(i, j, v);
+            }
+        }
+        (h, g)
+    }
+
+    fn random_corpus(c: usize, f: usize, n: usize, seed: u64) -> Vec<UttStats> {
+        let mut rng = Rng::seed(seed);
+        (0..n)
+            .map(|_| UttStats {
+                n: (0..c).map(|_| rng.uniform_in(5.0, 50.0)).collect(),
+                f: crate::linalg::Mat::from_fn(c, f, |_, _| 4.0 * rng.normal()),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mindiv_whitens_ivectors_augmented() {
+        let ubm = tiny_ubm(4, 3, 41);
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 5, 10.0, 3);
+        let stats = random_corpus(4, 3, 40, 7);
+        // a couple of EM+mindiv rounds
+        for _ in 0..3 {
+            run_em_iter(&mut model, &stats, true);
+        }
+        // after min-div the training i-vector covariance is ~identity
+        let (_h, g) = posterior_moments(&model, &stats);
+        let eye = Mat::eye(5);
+        let dev = g.sub(&eye).max_abs();
+        assert!(dev < 0.15, "G deviates from I by {dev}");
+    }
+
+    #[test]
+    fn mindiv_restores_prior_structure_augmented() {
+        let ubm = tiny_ubm(4, 3, 43);
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 5, 10.0, 5);
+        let stats = random_corpus(4, 3, 30, 9);
+        run_em_iter(&mut model, &stats, true);
+        // p = [p₀ 0 0 …] with p₀ > 0
+        assert!(model.prior_mean[0] > 0.0, "prior offset must stay positive");
+        for &x in &model.prior_mean[1..] {
+            assert_eq!(x, 0.0, "prior tail must be exactly zero");
+        }
+        // and the i-vector mean aligns with e₁: h ≈ p
+        let (h, _) = posterior_moments(&model, &stats);
+        let tail: f64 = h[1..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(tail < 0.3 * h[0].abs(), "mean not aligned with e1: {h:?}");
+    }
+
+    #[test]
+    fn mindiv_is_an_exact_reparameterization() {
+        // min-div changes the *prior* (that is its purpose), but the
+        // map itself is a change of variables: for any latent ω, the
+        // supervector prediction T'·(P₂P₁ω) must equal T·ω. Verify by
+        // round-tripping through the transforms: T'·(P₂P₁ h̄) = T·h̄,
+        // and more generally on random latents re-expressed in the new
+        // coordinates via the accumulated (h, H) statistics.
+        let ubm = tiny_ubm(3, 2, 47);
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 4, 10.0, 7);
+        let stats = random_corpus(3, 2, 25, 11);
+        run_em_iter(&mut model, &stats, false);
+
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(3, 2, 4);
+        for s in &stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        let t_before = model.t.clone();
+        let h_bar: Vec<f64> = acc.h.iter().map(|&x| x / acc.count).collect();
+        min_divergence(&mut model, &acc);
+
+        // the new prior mean IS P₂P₁h̄ (eq. 12), so T'·p_new = T·h̄
+        for c in 0..3 {
+            let before = t_before[c].matvec(&h_bar);
+            let after = model.t[c].matvec(&model.prior_mean);
+            for (a, b) in after.iter().zip(&before) {
+                assert!((a - b).abs() < 1e-8, "c={c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mindiv_standard_whitens_covariance() {
+        let ubm = tiny_ubm(4, 3, 53);
+        let mut model = TvModel::init(Formulation::Standard, &ubm, 5, 0.0, 9);
+        // center the random stats so the standard assumptions hold
+        let stats = random_corpus(4, 3, 40, 13);
+        for _ in 0..3 {
+            run_em_iter(&mut model, &stats, true);
+        }
+        let (_h, g) = posterior_moments(&model, &stats);
+        let dev = g.sub(&Mat::eye(5)).max_abs();
+        assert!(dev < 0.15, "G deviates from I by {dev}");
+        // prior stays zero for the standard formulation
+        assert!(model.prior_mean.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,29 @@
+//! The total-variability i-vector extractor — the paper's core.
+//!
+//! Two formulations (paper §2):
+//!
+//! * **Standard** — `μ_c(u) = m_c + T_c ω(u)`, centered Baum-Welch
+//!   statistics, zero prior offset. Variants: ± minimum-divergence,
+//!   ± residual-covariance update (4 training variants in Fig. 2).
+//! * **Augmented** (Kaldi) — `μ_c(u) = T_c ω(u)` with the bias folded
+//!   into the first column of `T_c` and a non-zero prior offset
+//!   `p = [p₀ 0 …]ᵀ` (Kaldi: p₀ = 100), raw statistics. Minimum
+//!   divergence always applied (with the Householder step of §3.1).
+//!
+//! Both are trained by the same EM skeleton ([`estep`], [`mstep`],
+//! [`mindiv`]) and extracted by [`extract`]; the accelerated device
+//! path ([`accel`]) reproduces the CPU reference bit-for-bit up to f32.
+
+pub mod accel;
+mod estep;
+mod extract;
+mod mindiv;
+mod model;
+mod mstep;
+
+pub use accel::AccelTvm;
+pub use estep::{estep_utterance, EstepAccum, UttStats};
+pub use extract::extract_cpu;
+pub use mindiv::min_divergence;
+pub use model::{Formulation, TrainVariant, TvModel};
+pub use mstep::{mstep, GlobalSecondOrder};

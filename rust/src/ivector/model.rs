@@ -1,0 +1,320 @@
+//! The total-variability model: parameters, initialization, serialization.
+
+use anyhow::Result;
+
+use crate::gmm::FullGmm;
+use crate::io::Serialize;
+use crate::linalg::{Cholesky, Mat};
+use crate::rng::Rng;
+
+/// Which formulation of the model (paper §2.1 vs §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Formulation {
+    /// §2.1: separate bias m_c, centered stats, p = 0.
+    Standard,
+    /// §2.2: bias folded into T's first column, raw stats, p = [p₀ 0 …].
+    Augmented,
+}
+
+/// A full training variant — the six curves of Fig. 2 plus the
+/// realignment schedule of Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainVariant {
+    pub formulation: Formulation,
+    /// Apply minimum-divergence re-estimation each iteration
+    /// (augmented formulation: always true, per the paper).
+    pub min_divergence: bool,
+    /// Update residual covariances Σ_c each iteration.
+    pub sigma_update: bool,
+    /// Re-align training data every k iterations (paper §3.2);
+    /// `None` = never (Fig. 2 setting).
+    pub realign_every: Option<usize>,
+}
+
+impl TrainVariant {
+    /// The paper's recommended recipe (§5): augmented + Σ-updates +
+    /// frame-alignment updates.
+    pub fn recommended(realign_every: usize) -> Self {
+        Self {
+            formulation: Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: true,
+            realign_every: Some(realign_every),
+        }
+    }
+
+    /// The six Fig. 2 variants, with their legend labels.
+    pub fn fig2_set() -> Vec<(String, Self)> {
+        let mut out = Vec::new();
+        for &md in &[false, true] {
+            for &sig in &[false, true] {
+                out.push((
+                    format!(
+                        "standard{}{}",
+                        if md { "+mindiv" } else { "" },
+                        if sig { "+sigma" } else { "" }
+                    ),
+                    Self {
+                        formulation: Formulation::Standard,
+                        min_divergence: md,
+                        sigma_update: sig,
+                        realign_every: None,
+                    },
+                ));
+            }
+        }
+        for &sig in &[false, true] {
+            out.push((
+                format!("augmented{}", if sig { "+sigma" } else { "" }),
+                Self {
+                    formulation: Formulation::Augmented,
+                    min_divergence: true,
+                    sigma_update: sig,
+                    realign_every: None,
+                },
+            ));
+        }
+        out
+    }
+
+    /// Short variant id used in file names / logs.
+    pub fn id(&self) -> String {
+        format!(
+            "{}{}{}{}",
+            match self.formulation {
+                Formulation::Standard => "std",
+                Formulation::Augmented => "aug",
+            },
+            if self.min_divergence { "-md" } else { "" },
+            if self.sigma_update { "-sig" } else { "" },
+            match self.realign_every {
+                Some(k) => format!("-ra{k}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// The total-variability model parameters.
+#[derive(Debug, Clone)]
+pub struct TvModel {
+    pub formulation: Formulation,
+    /// Factor loading matrices T_c, C matrices of F × R.
+    pub t: Vec<Mat>,
+    /// Residual covariances Σ_c, C matrices of F × F.
+    pub sigma: Vec<Mat>,
+    /// Bias means m_c (C × F): the UBM means snapshot for the standard
+    /// formulation (used for stat centering and §5-style realignment);
+    /// for the augmented formulation this mirrors `bias_means()` after
+    /// each update (kept for diagnostics).
+    pub means: Mat,
+    /// Prior mean p over the latent vector (R). Zeros for standard;
+    /// `[p₀ 0 …]` (then re-estimated by min-div, eq. 12) for augmented.
+    pub prior_mean: Vec<f64>,
+}
+
+impl TvModel {
+    /// Random initialization (paper §2.1/§2.2): T ~ N(0,1); Σ from the
+    /// UBM; augmented additionally writes m_c/p₀ into T's first column.
+    pub fn init(formulation: Formulation, ubm: &FullGmm, rank: usize, prior_offset: f64, seed: u64) -> Self {
+        let c_n = ubm.num_components();
+        let f_dim = ubm.dim();
+        let mut rng = Rng::seed(seed);
+        let mut t: Vec<Mat> = (0..c_n)
+            .map(|_| Mat::from_fn(f_dim, rank, |_, _| rng.normal()))
+            .collect();
+        let mut prior_mean = vec![0.0; rank];
+        if formulation == Formulation::Augmented {
+            prior_mean[0] = prior_offset;
+            for (c, tc) in t.iter_mut().enumerate() {
+                let col: Vec<f64> = ubm.means.row(c).iter().map(|&m| m / prior_offset).collect();
+                tc.set_col(0, &col);
+            }
+        }
+        Self {
+            formulation,
+            t,
+            sigma: ubm.covs.clone(),
+            means: ubm.means.clone(),
+            prior_mean,
+        }
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.t[0].rows()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.t[0].cols()
+    }
+
+    /// Σ_c⁻¹ for every component (Cholesky, regularized if needed).
+    pub fn sigma_inverses(&self) -> Vec<Mat> {
+        self.sigma
+            .iter()
+            .map(|s| Cholesky::new_regularized(s).0.inverse())
+            .collect()
+    }
+
+    /// Per-component `TᵀΣ⁻¹` (R × F) and `TᵀΣ⁻¹T` (R × R) — the
+    /// E-step constants (CPU mirror of the `precompute` graph).
+    pub fn precompute(&self) -> (Vec<Mat>, Vec<Mat>) {
+        let inv = self.sigma_inverses();
+        let mut tt_si = Vec::with_capacity(self.t.len());
+        let mut tt_si_t = Vec::with_capacity(self.t.len());
+        for (tc, ic) in self.t.iter().zip(&inv) {
+            let a = tc.matmul_tn(ic); // (R, F)
+            let mut b = a.matmul(tc); // (R, R)
+            b.symmetrize();
+            tt_si.push(a);
+            tt_si_t.push(b);
+        }
+        (tt_si, tt_si_t)
+    }
+
+    /// The model's current bias supervector per component (C × F):
+    /// standard → `means`; augmented → first column of T_c times p[0]
+    /// (paper §3.2: "take the first columns of matrices T_c and
+    /// multiply them with p").
+    pub fn bias_means(&self) -> Mat {
+        match self.formulation {
+            Formulation::Standard => self.means.clone(),
+            Formulation::Augmented => {
+                let c_n = self.num_components();
+                let f_dim = self.feat_dim();
+                let p0 = self.prior_mean[0];
+                Mat::from_fn(c_n, f_dim, |c, fi| self.t[c].get(fi, 0) * p0)
+            }
+        }
+    }
+}
+
+impl Serialize for TvModel {
+    fn write(&self, w: &mut crate::io::BinWriter) -> Result<()> {
+        w.write_u32(match self.formulation {
+            Formulation::Standard => 0,
+            Formulation::Augmented => 1,
+        })?;
+        self.t.write(w)?;
+        self.sigma.write(w)?;
+        self.means.write(w)?;
+        self.prior_mean.write(w)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> Result<Self> {
+        let formulation = match r.read_u32()? {
+            0 => Formulation::Standard,
+            1 => Formulation::Augmented,
+            other => anyhow::bail!("bad formulation tag {other}"),
+        };
+        Ok(Self {
+            formulation,
+            t: Vec::<Mat>::read(r)?,
+            sigma: Vec::<Mat>::read(r)?,
+            means: Mat::read(r)?,
+            prior_mean: Vec::<f64>::read(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Small random UBM for extractor unit tests.
+    pub fn tiny_ubm(c: usize, f: usize, seed: u64) -> FullGmm {
+        let mut rng = Rng::seed(seed);
+        let means = Mat::from_fn(c, f, |_, _| 2.0 * rng.normal());
+        let covs = (0..c)
+            .map(|_| {
+                let m = Mat::from_fn(f, f, |_, _| 0.3 * rng.normal());
+                let mut a = m.matmul_nt(&m);
+                for i in 0..f {
+                    *a.get_mut(i, i) += 1.0;
+                }
+                a
+            })
+            .collect();
+        let weights = rng.dirichlet(3.0, c);
+        FullGmm::new(weights, means, covs).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::tiny_ubm;
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_prior() {
+        let ubm = tiny_ubm(4, 3, 1);
+        let m = TvModel::init(Formulation::Augmented, &ubm, 6, 100.0, 2);
+        assert_eq!(m.num_components(), 4);
+        assert_eq!(m.feat_dim(), 3);
+        assert_eq!(m.rank(), 6);
+        assert_eq!(m.prior_mean[0], 100.0);
+        assert!(m.prior_mean[1..].iter().all(|&x| x == 0.0));
+        // first column carries m_c / p0
+        for c in 0..4 {
+            for fi in 0..3 {
+                assert!((m.t[c].get(fi, 0) - ubm.means.get(c, fi) / 100.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn standard_init_zero_prior() {
+        let ubm = tiny_ubm(3, 2, 5);
+        let m = TvModel::init(Formulation::Standard, &ubm, 4, 100.0, 2);
+        assert!(m.prior_mean.iter().all(|&x| x == 0.0));
+        assert!(m.means.approx_eq(&ubm.means, 0.0));
+    }
+
+    #[test]
+    fn bias_means_roundtrip_augmented() {
+        let ubm = tiny_ubm(4, 3, 7);
+        let m = TvModel::init(Formulation::Augmented, &ubm, 5, 100.0, 3);
+        // at init, bias_means must reproduce the UBM means exactly
+        assert!(m.bias_means().approx_eq(&ubm.means, 1e-10));
+    }
+
+    #[test]
+    fn precompute_dimensions_and_symmetry() {
+        let ubm = tiny_ubm(3, 4, 9);
+        let m = TvModel::init(Formulation::Standard, &ubm, 6, 100.0, 4);
+        let (tt_si, tt_si_t) = m.precompute();
+        assert_eq!(tt_si.len(), 3);
+        assert_eq!((tt_si[0].rows(), tt_si[0].cols()), (6, 4));
+        assert_eq!((tt_si_t[0].rows(), tt_si_t[0].cols()), (6, 6));
+        for b in &tt_si_t {
+            assert!(b.approx_eq(&b.t(), 1e-10));
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let ubm = tiny_ubm(3, 2, 11);
+        let m = TvModel::init(Formulation::Augmented, &ubm, 4, 100.0, 5);
+        let dir = std::env::temp_dir().join("ivtv_tvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tvm.bin");
+        crate::io::save(&m, &p).unwrap();
+        let back: TvModel = crate::io::load(&p).unwrap();
+        assert_eq!(back.formulation, Formulation::Augmented);
+        assert!(back.t[2].approx_eq(&m.t[2], 0.0));
+        assert_eq!(back.prior_mean, m.prior_mean);
+    }
+
+    #[test]
+    fn fig2_set_has_six_variants() {
+        let set = TrainVariant::fig2_set();
+        assert_eq!(set.len(), 6);
+        let ids: std::collections::HashSet<String> =
+            set.iter().map(|(_, v)| v.id()).collect();
+        assert_eq!(ids.len(), 6, "variant ids must be distinct");
+    }
+}

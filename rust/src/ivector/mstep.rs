@@ -1,0 +1,232 @@
+//! M-step (paper §3 step 3): update T_c, optionally update Σ_c.
+//!
+//! T update (Kenny 2005 eigenvoice, eq. used by both formulations):
+//! `T_c = B_c A_c⁻¹` with `A_c = Σ_u n_c(Φ+φφᵀ)`, `B_c = Σ_u f_c φᵀ`.
+//!
+//! Σ update: residual covariance given the *new* T,
+//! `Σ_c = (S_c − T B_cᵀ − B_c Tᵀ + T A_c Tᵀ) / N_c`
+//! — the four-term symmetric form, which reduces to Kaldi's
+//! `(S_c − T B_cᵀ)/N_c` when T is the exact minimizer but stays
+//! correct (and symmetric) under regularized solves. (Paper footnote 1:
+//! Kaldi's variance update is equivalent to [10].)
+
+use crate::linalg::{Cholesky, Mat};
+
+use super::estep::EstepAccum;
+use super::model::TvModel;
+
+/// Globally-accumulated second-order statistics (per component) +
+/// total occupancies — the Σ-update inputs. Computed once per
+/// alignment round (they do not depend on the latent posteriors).
+#[derive(Debug, Clone)]
+pub struct GlobalSecondOrder {
+    /// Σ_u S_c(u), centered for the standard formulation, raw for the
+    /// augmented one (same convention as the first-order stats).
+    pub s: Vec<Mat>,
+    /// Σ_u n_c(u) per component.
+    pub n: Vec<f64>,
+}
+
+/// Apply the M-step to the model in place. Returns the mean squared
+/// change in T (diagnostic for convergence plots).
+pub fn mstep(
+    model: &mut TvModel,
+    acc: &EstepAccum,
+    second_order: Option<&GlobalSecondOrder>,
+    var_floor: f64,
+) -> f64 {
+    let c_n = model.num_components();
+    let mut delta = 0.0;
+    let mut delta_n = 0.0;
+
+    for c in 0..c_n {
+        // T_c = B_c A_c⁻¹  ⇔  T_cᵀ = A_c⁻¹ B_cᵀ (A symmetric SPD-ish)
+        let chol = Cholesky::new_regularized(&acc.a[c]).0;
+        let t_new = chol.solve_mat(&acc.b[c].t()).t();
+        delta += t_new.sub(&model.t[c]).fro_norm().powi(2);
+        delta_n += (t_new.rows() * t_new.cols()) as f64;
+        model.t[c] = t_new;
+    }
+
+    if let Some(so) = second_order {
+        for c in 0..c_n {
+            let nc = so.n[c];
+            if nc < model.feat_dim() as f64 {
+                continue; // starved component: keep the old covariance
+            }
+            let t = &model.t[c];
+            let bt = acc.b[c].t(); // B_cᵀ (R, F)
+            let t_bt = t.matmul(&bt); // T B_cᵀ (F, F)
+            let ta = t.matmul(&acc.a[c]); // (F, R)
+            let ta_tt = ta.matmul_nt(t); // (F, F)
+            let mut sig = so.s[c].clone();
+            sig.add_scaled(-1.0, &t_bt);
+            sig.add_scaled(-1.0, &t_bt.t());
+            sig.add_scaled(1.0, &ta_tt);
+            sig.scale(1.0 / nc);
+            sig.symmetrize();
+            for i in 0..sig.rows() {
+                let v = sig.get(i, i).max(var_floor);
+                sig.set(i, i, v);
+            }
+            model.sigma[c] = sig;
+        }
+    }
+
+    delta / delta_n.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::estep::{estep_utterance, EstepAccum, UttStats};
+    use super::super::model::test_support::tiny_ubm;
+    use super::super::model::{Formulation, TvModel};
+    use super::*;
+    use crate::rng::Rng;
+
+    fn synth_stats_from_model(
+        model: &TvModel,
+        n_utts: usize,
+        rng: &mut Rng,
+    ) -> (Vec<UttStats>, GlobalSecondOrder) {
+        // generate utterance stats consistent with the generative model:
+        // f_c = n_c (T_c ω) + noise, which the M-step should fit well.
+        let c_n = model.num_components();
+        let f_dim = model.feat_dim();
+        let r = model.rank();
+        let mut all = Vec::new();
+        let mut s_tot = vec![Mat::zeros(f_dim, f_dim); c_n];
+        let mut n_tot = vec![0.0; c_n];
+        for _ in 0..n_utts {
+            let mut omega: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            for (o, p) in omega.iter_mut().zip(&model.prior_mean) {
+                *o += p;
+            }
+            let n: Vec<f64> = (0..c_n).map(|_| rng.uniform_in(5.0, 40.0)).collect();
+            let mut f = Mat::zeros(c_n, f_dim);
+            for c in 0..c_n {
+                let mu = model.t[c].matvec(&omega);
+                for j in 0..f_dim {
+                    let noise = 0.05 * rng.normal() * (n[c]).sqrt();
+                    f.set(c, j, n[c] * mu[j] + noise);
+                    // crude matching S accumulation: n * mu muᵀ + small diag
+                }
+                for j in 0..f_dim {
+                    for k in 0..f_dim {
+                        let v = s_tot[c].get(j, k) + n[c] * mu[j] * mu[k];
+                        s_tot[c].set(j, k, v);
+                    }
+                    let v = s_tot[c].get(j, j) + 0.01 * n[c];
+                    s_tot[c].set(j, j, v);
+                }
+                n_tot[c] += n[c];
+            }
+            all.push(UttStats { n, f });
+        }
+        (all, GlobalSecondOrder { s: s_tot, n: n_tot })
+    }
+
+    #[test]
+    fn t_update_is_least_squares_solution() {
+        let ubm = tiny_ubm(3, 2, 23);
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 4, 10.0, 3);
+        let mut rng = Rng::seed(5);
+        let (stats, _so) = synth_stats_from_model(&model, 30, &mut rng);
+
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(3, 2, 4);
+        for s in &stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        mstep(&mut model, &acc, None, 1e-6);
+        // verify normal equations: T_c A_c = B_c
+        for c in 0..3 {
+            let lhs = model.t[c].matmul(&acc.a[c]);
+            assert!(lhs.approx_eq(&acc.b[c], 1e-6), "c={c}");
+        }
+    }
+
+    #[test]
+    fn em_iterations_fit_the_generating_subspace() {
+        // likelihood proxy: ‖f_c − n_c T φ‖ shrinks over EM iterations
+        let ubm = tiny_ubm(3, 2, 29);
+        let gen_model = TvModel::init(Formulation::Augmented, &ubm, 3, 10.0, 7);
+        let mut rng = Rng::seed(9);
+        let (stats, _) = synth_stats_from_model(&gen_model, 60, &mut rng);
+
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 3, 10.0, 99);
+        let mut errs = Vec::new();
+        for _ in 0..6 {
+            let (tt_si, tt_si_t) = model.precompute();
+            let mut acc = EstepAccum::zeros(3, 2, 3);
+            let mut err = 0.0;
+            for s in &stats {
+                let phi =
+                    estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+                for c in 0..3 {
+                    let mu = model.t[c].matvec(&phi);
+                    for j in 0..2 {
+                        let e = s.f.get(c, j) - s.n[c] * mu[j];
+                        err += e * e;
+                    }
+                }
+            }
+            errs.push(err);
+            mstep(&mut model, &acc, None, 1e-6);
+        }
+        assert!(
+            errs.last().unwrap() < &(errs[0] * 0.5),
+            "EM did not reduce reconstruction error: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn sigma_update_produces_spd_floored_covariances() {
+        let ubm = tiny_ubm(3, 2, 31);
+        let mut model = TvModel::init(Formulation::Augmented, &ubm, 4, 10.0, 3);
+        let mut rng = Rng::seed(13);
+        let (stats, so) = synth_stats_from_model(&model, 40, &mut rng);
+        let (tt_si, tt_si_t) = model.precompute();
+        let mut acc = EstepAccum::zeros(3, 2, 4);
+        for s in &stats {
+            estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        }
+        mstep(&mut model, &acc, Some(&so), 1e-4);
+        for c in 0..3 {
+            // symmetric
+            assert!(model.sigma[c].approx_eq(&model.sigma[c].t(), 1e-12));
+            // diagonal floored
+            for i in 0..2 {
+                assert!(model.sigma[c].get(i, i) >= 1e-4);
+            }
+            // choleskyable after regularization (SPD-ish)
+            let (_, ridge) = Cholesky::new_regularized(&model.sigma[c]);
+            assert!(ridge < 1.0, "covariance badly conditioned");
+        }
+    }
+
+    #[test]
+    fn starved_component_keeps_sigma() {
+        let ubm = tiny_ubm(2, 2, 37);
+        let mut model = TvModel::init(Formulation::Standard, &ubm, 3, 10.0, 3);
+        let sigma_before = model.sigma[1].clone();
+        let acc = {
+            let mut acc = EstepAccum::zeros(2, 2, 3);
+            // only component 0 has mass
+            let mut rng = Rng::seed(3);
+            let stats = UttStats {
+                n: vec![20.0, 0.0],
+                f: Mat::from_fn(2, 2, |_, _| rng.normal()),
+            };
+            let (tt_si, tt_si_t) = model.precompute();
+            estep_utterance(&stats, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+            acc
+        };
+        let so = GlobalSecondOrder {
+            s: vec![Mat::eye(2), Mat::eye(2)],
+            n: vec![20.0, 0.0],
+        };
+        mstep(&mut model, &acc, Some(&so), 1e-6);
+        assert!(model.sigma[1].approx_eq(&sigma_before, 0.0), "starved Σ must not move");
+    }
+}

@@ -1,0 +1,34 @@
+//! # ivector-tv
+//!
+//! A three-layer reproduction of *"Unleashing the Unused Potential of
+//! I-Vectors Enabled by GPU Acceleration"* (Vestman, Lee, Kinnunen,
+//! Koshinaka — Interspeech 2019).
+//!
+//! * **L3 (this crate)** — the coordinator: EM training schedule with
+//!   in-training realignment, pipelined CPU data loaders feeding the
+//!   accelerator, ensemble runner, scoring backend, CLI.
+//! * **L2** — JAX compute graphs (frame alignment, TVM E-step, i-vector
+//!   extraction, UBM accumulation, PLDA scoring), AOT-lowered to HLO text
+//!   at build time (`python/compile/`).
+//! * **L1** — Pallas kernels for the hot spots inside the L2 graphs.
+//!
+//! Python never runs on the request path: the rust binary loads the
+//! HLO artifacts through PJRT ([`runtime`]) and is self-contained.
+
+pub mod bench_util;
+pub mod config;
+pub mod exec;
+pub mod frontend;
+pub mod gmm;
+pub mod io;
+pub mod linalg;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod trials;
+pub mod backend;
+pub mod cli;
+pub mod coordinator;
+pub mod ivector;

@@ -1,0 +1,212 @@
+//! Cholesky decomposition and SPD solves — the workhorse behind the
+//! E-step precision solve `L(u) φ = rhs`, covariance inversion, and
+//! PLDA/LDA whitening.
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of an SPD matrix: `A = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorize. Fails (rather than silently regularizing) when `A` is
+    /// not positive definite — callers that want flooring do it
+    /// explicitly via [`Cholesky::new_regularized`].
+    pub fn new(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut d = a.get(j, j);
+            for k in 0..j {
+                d -= l.get(j, k) * l.get(j, k);
+            }
+            if d <= 0.0 || !d.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d = {d:.3e})");
+            }
+            let dj = d.sqrt();
+            l.set(j, j, dj);
+            for i in (j + 1)..n {
+                let mut s = a.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s / dj);
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Factorize with a diagonal ridge added until the factorization
+    /// succeeds (used on accumulated covariances that may be rank
+    /// deficient early in EM). Returns the factor and the ridge used.
+    pub fn new_regularized(a: &Mat) -> (Self, f64) {
+        let mut ridge = 0.0;
+        let scale = a.trace().abs().max(1e-10) / a.rows() as f64;
+        loop {
+            let mut m = a.clone();
+            if ridge > 0.0 {
+                for i in 0..m.rows() {
+                    *m.get_mut(i, i) += ridge;
+                }
+            }
+            if let Ok(c) = Self::new(&m) {
+                return (c, ridge);
+            }
+            ridge = if ridge == 0.0 { scale * 1e-10 } else { ridge * 10.0 };
+            assert!(ridge.is_finite(), "regularization diverged");
+        }
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l.get(i, k) * y[k];
+            }
+            y[i] /= self.l.get(i, i);
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                y[i] -= self.l.get(k, i) * y[k];
+            }
+            y[i] /= self.l.get(i, i);
+        }
+        y
+    }
+
+    /// Solve `A X = B` column-block right-hand side.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut x = Mat::zeros(n, b.cols());
+        // Solve per column (column extraction cost is negligible at our sizes).
+        for j in 0..b.cols() {
+            let col = self.solve_vec(&b.col(j));
+            x.set_col(j, &col);
+        }
+        x
+    }
+
+    /// `A⁻¹` (SPD inverse).
+    pub fn inverse(&self) -> Mat {
+        let mut inv = self.solve_mat(&Mat::eye(self.l.rows()));
+        inv.symmetrize();
+        inv
+    }
+
+    /// `log |A|`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve `L z = v` (forward substitution only) — used for whitening
+    /// with the covariance factor: `z = L⁻¹ v`.
+    pub fn forward_solve_vec(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(v.len(), n);
+        let mut z = v.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                z[i] -= self.l.get(i, k) * z[k];
+            }
+            z[i] /= self.l.get(i, i);
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let m = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = m.matmul_nt(&m);
+        for i in 0..n {
+            *a.get_mut(i, i) += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn chol_reconstructs() {
+        let mut rng = Rng::seed(7);
+        let a = random_spd(8, &mut rng);
+        let c = Cholesky::new(&a).unwrap();
+        let rec = c.l().matmul_nt(c.l());
+        assert!(rec.approx_eq(&a, 1e-9), "max diff {}", rec.sub(&a).max_abs());
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::seed(3);
+        let a = random_spd(6, &mut rng);
+        let b: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let x = Cholesky::new(&a).unwrap().solve_vec(&b);
+        let ax = a.matvec(&x);
+        for (l, r) in ax.iter().zip(&b) {
+            assert!((l - r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let mut rng = Rng::seed(11);
+        let a = random_spd(5, &mut rng);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).approx_eq(&Mat::eye(5), 1e-9));
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let ld = Cholesky::new(&a).unwrap().logdet();
+        assert!((ld - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn regularized_recovers() {
+        // singular matrix: rank 1
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let (c, ridge) = Cholesky::new_regularized(&a);
+        assert!(ridge > 0.0);
+        assert_eq!(c.l().rows(), 2);
+    }
+
+    #[test]
+    fn solve_mat_matches_vec() {
+        let mut rng = Rng::seed(5);
+        let a = random_spd(4, &mut rng);
+        let b = Mat::from_fn(4, 3, |_, _| rng.normal());
+        let c = Cholesky::new(&a).unwrap();
+        let x = c.solve_mat(&b);
+        for j in 0..3 {
+            let xj = c.solve_vec(&b.col(j));
+            for i in 0..4 {
+                assert!((x.get(i, j) - xj[i]).abs() < 1e-12);
+            }
+        }
+    }
+}

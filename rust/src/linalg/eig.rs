@@ -1,0 +1,192 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices — used by the
+//! minimum-divergence whitening `G = QΛQᵀ` (paper §3.1), LDA, and PLDA.
+
+use super::Mat;
+
+/// Symmetric eigendecomposition `A = Q Λ Qᵀ`.
+#[derive(Debug, Clone)]
+pub struct EigH {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns of `Q` (same order as `values`).
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeps. Converges quadratically; for the
+/// R ≤ a-few-hundred matrices in this codebase it is exact to ~1e-12.
+pub fn jacobi_eigh(a: &Mat) -> EigH {
+    assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut q = Mat::eye(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m.get(p, r);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(r, r);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,r of m
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, r);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, r, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(r, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(r, k, s * mpk + c * mqk);
+                }
+                // accumulate rotations into q
+                for k in 0..n {
+                    let qkp = q.get(k, p);
+                    let qkq = q.get(k, r);
+                    q.set(k, p, c * qkp - s * qkq);
+                    q.set(k, r, s * qkp + c * qkq);
+                }
+            }
+        }
+    }
+
+    // extract + sort ascending
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    order.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors.set(i, new_j, q.get(i, old_j));
+        }
+    }
+    EigH { values, vectors }
+}
+
+impl EigH {
+    /// Reconstruct `Q Λ Qᵀ` (tests / diagnostics).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.values.len();
+        let mut ql = self.vectors.clone();
+        for j in 0..n {
+            for i in 0..n {
+                *ql.get_mut(i, j) *= self.values[j];
+            }
+        }
+        ql.matmul_nt(&self.vectors)
+    }
+
+    /// Whitening transform `P₁ = Λ^{-½} Qᵀ` of the (SPD) decomposed
+    /// matrix, flooring eigenvalues at `floor` (paper §3.1).
+    pub fn whitener(&self, floor: f64) -> Mat {
+        let n = self.values.len();
+        let mut p = self.vectors.t();
+        for i in 0..n {
+            let lam = self.values[i].max(floor);
+            let s = 1.0 / lam.sqrt();
+            for j in 0..n {
+                *p.get_mut(i, j) *= s;
+            }
+        }
+        p
+    }
+
+    /// Inverse of the whitening transform: `P₁⁻¹ = Q Λ^{½}`.
+    pub fn whitener_inv(&self, floor: f64) -> Mat {
+        let n = self.values.len();
+        let mut qi = self.vectors.clone();
+        for j in 0..n {
+            let s = self.values[j].max(floor).sqrt();
+            for i in 0..n {
+                *qi.get_mut(i, j) *= s;
+            }
+        }
+        qi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::seed(13);
+        let a = random_sym(10, &mut rng);
+        let e = jacobi_eigh(&a);
+        assert!(e.reconstruct().approx_eq(&a, 1e-10));
+    }
+
+    #[test]
+    fn eigenvalues_sorted_and_orthonormal() {
+        let mut rng = Rng::seed(17);
+        let a = random_sym(8, &mut rng);
+        let e = jacobi_eigh(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        let qtq = e.vectors.matmul_tn(&e.vectors);
+        assert!(qtq.approx_eq(&Mat::eye(8), 1e-10));
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = jacobi_eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whitener_whitens() {
+        let mut rng = Rng::seed(23);
+        let m = Mat::from_fn(6, 6, |_, _| rng.normal());
+        let mut g = m.matmul_nt(&m);
+        for i in 0..6 {
+            *g.get_mut(i, i) += 1.0;
+        }
+        let e = jacobi_eigh(&g);
+        let p1 = e.whitener(1e-12);
+        // P1 G P1ᵀ = I
+        let w = p1.matmul(&g).matmul_nt(&p1);
+        assert!(w.approx_eq(&Mat::eye(6), 1e-9));
+        // P1 · P1⁻¹ = I
+        let id = p1.matmul(&e.whitener_inv(1e-12));
+        assert!(id.approx_eq(&Mat::eye(6), 1e-9));
+    }
+
+    #[test]
+    fn diagonal_matrix_fast_path() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let e = jacobi_eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-14);
+        assert!((e.values[2] - 3.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,152 @@
+//! LU decomposition with partial pivoting — general (non-SPD) solves,
+//! used for inverting the minimum-divergence transform `P₁ = Λ^{-½}Qᵀ`
+//! and other non-symmetric systems.
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Packed LU factorization with row pivots.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    /// Factorize `A = P L U`.
+    pub fn new(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows(), a.cols(), "lu needs a square matrix");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut pmax = lu.get(k, k).abs();
+            for i in (k + 1)..n {
+                let v = lu.get(i, k).abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax < 1e-300 {
+                bail!("singular matrix at pivot {k}");
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu.get(k, j);
+                    lu.set(k, j, lu.get(p, j));
+                    lu.set(p, j, t);
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu.get(k, k);
+            for i in (k + 1)..n {
+                let m = lu.get(i, k) / pivot;
+                lu.set(i, k, m);
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu.get(i, j) - m * lu.get(k, j);
+                        lu.set(i, j, v);
+                    }
+                }
+            }
+        }
+        Ok(Self { lu, piv, sign })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward L (unit diagonal)
+        for i in 1..n {
+            for k in 0..i {
+                x[i] -= self.lu.get(i, k) * x[k];
+            }
+        }
+        // backward U
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                x[i] -= self.lu.get(i, k) * x[k];
+            }
+            x[i] /= self.lu.get(i, i);
+        }
+        x
+    }
+
+    /// Solve `A X = B`.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut x = Mat::zeros(b.rows(), b.cols());
+        for j in 0..b.cols() {
+            x.set_col(j, &self.solve_vec(&b.col(j)));
+        }
+        x
+    }
+
+    /// `A⁻¹`.
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.lu.rows()))
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu.get(i, i);
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn solve_roundtrip() {
+        let mut rng = Rng::seed(2);
+        let a = Mat::from_fn(7, 7, |_, _| rng.normal());
+        let b: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let x = Lu::new(&a).unwrap().solve_vec(&b);
+        let ax = a.matvec(&x);
+        for (l, r) in ax.iter().zip(&b) {
+            assert!((l - r).abs() < 1e-8, "{l} vs {r}");
+        }
+    }
+
+    #[test]
+    fn inverse_identity() {
+        let mut rng = Rng::seed(4);
+        let a = Mat::from_fn(6, 6, |_, _| rng.normal());
+        let inv = Lu::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).approx_eq(&Mat::eye(6), 1e-8));
+    }
+
+    #[test]
+    fn det_known() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        assert!((Lu::new(&a).unwrap().det() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = Lu::new(&a).unwrap().solve_vec(&[3.0, 5.0]);
+        assert!((x[0] - 5.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,342 @@
+//! The dense row-major f64 matrix type.
+
+/// Dense row-major f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// From an owned buffer (row-major).
+    pub fn from_vec(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// From row slices (tests / small fixtures).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Build elementwise.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Self::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m.data[i * d.len() + i] = x;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        *self.get_mut(i, j) = v;
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.set(i, j, x);
+        }
+    }
+
+    /// Raw row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self · other` (ikj loop order, cache-friendly).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &aik) in a_row.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    out_row[j] += aik * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt dims");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            for j in 0..other.rows {
+                out.data[i * other.rows + j] = super::dot(a_row, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn dims");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for k in 0..self.rows {
+            let a_row = self.row(k);
+            let b_row = other.row(k);
+            for (i, &aki) in a_row.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out_row[j] += aki * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec dims");
+        (0..self.rows).map(|i| super::dot(self.row(i), v)).collect()
+    }
+
+    /// `selfᵀ · v`.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "matvec_t dims");
+        let mut out = vec![0.0; self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            for (j, &mij) in self.row(i).iter().enumerate() {
+                out[j] += vi * mij;
+            }
+        }
+        out
+    }
+
+    /// Elementwise `self += alpha * other`.
+    pub fn add_scaled(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat::from_vec(data, self.rows, self.cols)
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat::from_vec(data, self.rows, self.cols)
+    }
+
+    /// Force exact symmetry: `(M + Mᵀ)/2` in place (square only).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let m = 0.5 * (self.get(i, j) + self.get(j, i));
+                self.set(i, j, m);
+                self.set(j, i, m);
+            }
+        }
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.get(i, i)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| comparison.
+    pub fn approx_eq(&self, other: &Mat, tol: f64) -> bool {
+        (self.rows, self.cols) == (other.rows, other.cols)
+            && self.data.iter().zip(&other.data).all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert!(a.matmul(&Mat::eye(2)).approx_eq(&a, 0.0));
+        assert!(Mat::eye(2).matmul(&a).approx_eq(&a, 0.0));
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = Mat::from_rows(&[&[7.0, 8.0], &[9.0, 10.0], &[11.0, 12.0]]);
+        let c = a.matmul(&b);
+        assert!(c.approx_eq(&Mat::from_rows(&[&[58.0, 64.0], &[139.0, 154.0]]), 1e-12));
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.37 - 1.0);
+        let b = Mat::from_fn(3, 5, |i, j| (i as f64 - j as f64) * 0.21);
+        let c0 = a.matmul(&b);
+        let c1 = a.matmul_nt(&b.t());
+        let c2 = a.t().matmul_tn(&b);
+        assert!(c0.approx_eq(&c1, 1e-12));
+        assert!(c0.approx_eq(&c2, 1e-12));
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f64);
+        let v = [1.0, -1.0, 2.0, 0.5];
+        let got = a.matvec(&v);
+        let vm = Mat::from_vec(v.to_vec(), 4, 1);
+        let want = a.matmul(&vm);
+        for i in 0..3 {
+            assert!((got[i] - want.get(i, 0)).abs() < 1e-12);
+        }
+        let got_t = a.matvec_t(&[1.0, 2.0, 3.0]);
+        let want_t = a.t().matvec(&[1.0, 2.0, 3.0]);
+        for (x, y) in got_t.iter().zip(&want_t) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 7 + j) as f64);
+        assert!(a.t().t().approx_eq(&a, 0.0));
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut a = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        a.symmetrize();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(a.get(i, j), a.get(j, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Dense linear algebra substrate (f64, row-major).
+//!
+//! No linear-algebra crates are available in the offline build, so the
+//! model math (EM updates, minimum-divergence whitening, Householder
+//! reflections, LDA/PLDA) runs on this hand-written kernel set:
+//! [`Mat`] plus Cholesky / LU solves and a Jacobi symmetric
+//! eigendecomposition. Everything is f64; conversion to the device's
+//! f32 happens at the [`crate::runtime`] boundary.
+
+mod mat;
+mod chol;
+mod lu;
+mod eig;
+mod vecops;
+
+pub use chol::Cholesky;
+pub use eig::{jacobi_eigh, EigH};
+pub use lu::Lu;
+pub use mat::Mat;
+pub use vecops::{axpy, dot, norm2, normalize, outer, scale_in_place};
+
+/// Householder reflection `P = I - 2 a aᵀ` applied to a matrix from the
+/// left: `P · M`, without materializing `P` (paper eq. 8).
+pub fn householder_apply_left(a: &[f64], m: &Mat) -> Mat {
+    assert_eq!(a.len(), m.rows());
+    // P M = M - 2 a (aᵀ M)
+    let mut atm = vec![0.0; m.cols()];
+    for i in 0..m.rows() {
+        let ai = a[i];
+        if ai != 0.0 {
+            let row = m.row(i);
+            for (j, &mij) in row.iter().enumerate() {
+                atm[j] += ai * mij;
+            }
+        }
+    }
+    let mut out = m.clone();
+    for i in 0..m.rows() {
+        let c = 2.0 * a[i];
+        let row = out.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r -= c * atm[j];
+        }
+    }
+    out
+}
+
+/// Householder reflection applied to a vector: `P v = v - 2 a (aᵀ v)`.
+pub fn householder_apply_vec(a: &[f64], v: &[f64]) -> Vec<f64> {
+    let av = dot(a, v);
+    v.iter().zip(a).map(|(&vi, &ai)| vi - 2.0 * ai * av).collect()
+}
+
+/// The Householder direction of paper eqs. (10)–(11): given the whitened
+/// mean direction `h_tilde` (unit length), returns the unit vector `a`
+/// such that `(I - 2aaᵀ) h_tilde = ±e₁`.
+pub fn householder_direction(h_tilde: &[f64]) -> Vec<f64> {
+    let r = h_tilde.len();
+    // alpha = 1/sqrt(2(1 - h~[1])), beta = -alpha   (paper eq. 11)
+    let h1 = h_tilde[0];
+    if (1.0 - h1).abs() < 1e-12 {
+        // h_tilde is already e1: any reflection fixing e1 works; use a = 0
+        // (caller treats zero vector as the identity reflection).
+        return vec![0.0; r];
+    }
+    let alpha = 1.0 / (2.0 * (1.0 - h1)).sqrt();
+    let beta = -alpha;
+    let mut a: Vec<f64> = h_tilde.iter().map(|&x| alpha * x).collect();
+    a[0] += beta;
+    // normalize defensively (analytically already unit length)
+    normalize(&mut a);
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn householder_maps_h_to_e1() {
+        let h = [0.6, 0.0, 0.8];
+        let a = householder_direction(&h);
+        let r = householder_apply_vec(&a, &h);
+        assert!((r[0].abs() - 1.0).abs() < 1e-12, "{r:?}");
+        assert!(r[1].abs() < 1e-12 && r[2].abs() < 1e-12, "{r:?}");
+    }
+
+    #[test]
+    fn householder_is_involution() {
+        let h = {
+            let mut v = vec![0.3, -0.5, 0.2, 0.7];
+            normalize(&mut v);
+            v
+        };
+        let a = householder_direction(&h);
+        let once = householder_apply_vec(&a, &[1.0, 2.0, 3.0, 4.0]);
+        let twice = householder_apply_vec(&a, &once);
+        for (x, y) in twice.iter().zip([1.0, 2.0, 3.0, 4.0]) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn householder_identity_case() {
+        let h = [1.0, 0.0, 0.0];
+        let a = householder_direction(&h);
+        assert!(a.iter().all(|&x| x == 0.0));
+        let v = householder_apply_vec(&a, &[3.0, 1.0, -2.0]);
+        assert_eq!(v, vec![3.0, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn householder_left_matches_explicit() {
+        let h = {
+            let mut v = vec![0.3, -0.5, 0.2];
+            normalize(&mut v);
+            v
+        };
+        let a = householder_direction(&h);
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        // explicit P
+        let mut p = Mat::eye(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                *p.get_mut(i, j) -= 2.0 * a[i] * a[j];
+            }
+        }
+        let want = p.matmul(&m);
+        let got = householder_apply_left(&a, &m);
+        assert!(want.approx_eq(&got, 1e-12));
+    }
+}

@@ -1,0 +1,5 @@
+//! `ivector-tv` launcher — see [`ivector_tv::cli`] for the command set.
+
+fn main() {
+    std::process::exit(ivector_tv::cli::main());
+}

@@ -1,0 +1,125 @@
+//! Timing / throughput metrics: real-time factors and stage reports.
+//!
+//! The paper's §4.2 headline numbers are *real-time factors* (alignment
+//! 3000× RT, extraction 10 000× RT) and a training speed-up vs the CPU
+//! baseline. Synthetic utterances have no audio clock, so we adopt the
+//! front-end's nominal frame rate (100 frames/s, the standard 10 ms
+//! hop the paper's MFCC config implies) to convert frames to seconds.
+
+use std::time::Instant;
+
+/// Nominal frame hop (seconds) — 10 ms like the Kaldi MFCC config.
+pub const FRAME_HOP_S: f64 = 0.01;
+
+/// Convert a frame count to nominal audio seconds.
+pub fn frames_to_audio_seconds(frames: usize) -> f64 {
+    frames as f64 * FRAME_HOP_S
+}
+
+/// Real-time factor: processed audio seconds per wall second.
+pub fn rt_factor(frames: usize, wall_s: f64) -> f64 {
+    if wall_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    frames_to_audio_seconds(frames) / wall_s
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// One row of a stage report (printed by examples / benches).
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub stage: String,
+    pub wall_s: f64,
+    pub items: usize,
+    pub item_name: String,
+    /// Optional real-time factor (alignment/extraction stages).
+    pub rt: Option<f64>,
+}
+
+impl StageReport {
+    pub fn new(stage: &str, wall_s: f64, items: usize, item_name: &str) -> Self {
+        Self { stage: stage.into(), wall_s, items, item_name: item_name.into(), rt: None }
+    }
+
+    pub fn with_rt(mut self, frames: usize) -> Self {
+        self.rt = Some(rt_factor(frames, self.wall_s));
+        self
+    }
+
+    /// items / second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.items as f64 / self.wall_s
+    }
+}
+
+/// Render stage reports as a markdown table (EXPERIMENTS.md format).
+pub fn markdown_table(rows: &[StageReport]) -> String {
+    let mut s = String::from("| stage | wall (s) | items | items/s | ×RT |\n|---|---|---|---|---|\n");
+    for r in rows {
+        let rt = r.rt.map(|x| format!("{x:.0}")).unwrap_or_else(|| "—".into());
+        s.push_str(&format!(
+            "| {} | {:.3} | {} {} | {:.1} | {} |\n",
+            r.stage,
+            r.wall_s,
+            r.items,
+            r.item_name,
+            r.throughput(),
+            rt
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rt_factor_math() {
+        // 100 000 frames = 1000 s of audio; processed in 2 s → 500× RT
+        assert!((rt_factor(100_000, 2.0) - 500.0).abs() < 1e-9);
+        assert_eq!(rt_factor(10, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn report_table_renders() {
+        let rows = vec![
+            StageReport::new("align", 2.0, 100_000, "frames").with_rt(100_000),
+            StageReport::new("mstep", 0.5, 64, "components"),
+        ];
+        let md = markdown_table(&rows);
+        assert!(md.contains("| align |"));
+        assert!(md.contains("500"));
+        assert!(md.contains("| — |") || md.contains(" — |"));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-testing substrate (the proptest crate is unavailable
+//! offline). Seeded case generation with failure reporting: on a
+//! failing case the runner reports the case seed so the exact input is
+//! reproducible with `forall_seeded`.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Number of cases per property (kept modest; these run in `cargo test`).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` generated inputs. `gen` builds a case from a
+/// per-case rng; `prop` returns `Err(reason)` on violation.
+///
+/// Panics with the failing case seed on the first violation.
+pub fn forall<T, G, P>(base_seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::seed(case_seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {case_seed:#x}): {reason}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case by seed (debugging a failure from [`forall`]).
+pub fn forall_seeded<T, G, P>(case_seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::seed(case_seed);
+    let input = gen(&mut rng);
+    if let Err(reason) = prop(&input) {
+        panic!("property failed (seed {case_seed:#x}): {reason}\ninput: {input:?}");
+    }
+}
+
+/// Generator: dimension in [lo, hi].
+pub fn gen_dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Generator: random matrix with entries ~ scale·N(0,1).
+pub fn gen_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| scale * rng.normal())
+}
+
+/// Generator: random SPD matrix `M Mᵀ + ridge·I`.
+pub fn gen_spd(rng: &mut Rng, n: usize, ridge: f64) -> Mat {
+    let m = gen_mat(rng, n, n, 1.0);
+    let mut a = m.matmul_nt(&m);
+    for i in 0..n {
+        *a.get_mut(i, i) += ridge;
+    }
+    a
+}
+
+/// Generator: probability vector of length n (Dirichlet(1)).
+pub fn gen_simplex(rng: &mut Rng, n: usize) -> Vec<f64> {
+    rng.dirichlet(1.0, n)
+}
+
+/// Helper: assert two f64s are close, producing a property error.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{jacobi_eigh, Cholesky, Lu};
+
+    #[test]
+    fn prop_chol_solves_spd() {
+        forall(
+            101,
+            DEFAULT_CASES,
+            |rng| {
+                let n = gen_dim(rng, 1, 12);
+                let a = gen_spd(rng, n, n as f64);
+                let b: Vec<f64> = rng.normal_vec(n);
+                (a, b)
+            },
+            |(a, b)| {
+                let x = Cholesky::new(a).map_err(|e| e.to_string())?.solve_vec(b);
+                let ax = a.matvec(&x);
+                for (l, r) in ax.iter().zip(b) {
+                    close(*l, *r, 1e-8, "A x = b residual")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_lu_inverse() {
+        forall(
+            202,
+            DEFAULT_CASES,
+            |rng| {
+                let n = gen_dim(rng, 1, 10);
+                // shifted to keep condition number sane
+                let mut m = gen_mat(rng, n, n, 1.0);
+                for i in 0..n {
+                    *m.get_mut(i, i) += 4.0;
+                }
+                m
+            },
+            |a| {
+                let inv = Lu::new(a).map_err(|e| e.to_string())?.inverse();
+                let id = a.matmul(&inv);
+                if id.approx_eq(&Mat::eye(a.rows()), 1e-7) {
+                    Ok(())
+                } else {
+                    Err(format!("A·A⁻¹ deviates by {}", id.sub(&Mat::eye(a.rows())).max_abs()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_eigh_reconstructs_and_orthonormal() {
+        forall(
+            303,
+            32,
+            |rng| {
+                let n = gen_dim(rng, 2, 10);
+                let mut a = gen_mat(rng, n, n, 2.0);
+                a.symmetrize();
+                a
+            },
+            |a| {
+                let e = jacobi_eigh(a);
+                if !e.reconstruct().approx_eq(a, 1e-9) {
+                    return Err("QΛQᵀ ≠ A".into());
+                }
+                let qtq = e.vectors.matmul_tn(&e.vectors);
+                if !qtq.approx_eq(&Mat::eye(a.rows()), 1e-9) {
+                    return Err("Q not orthonormal".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_simplex_sums_to_one() {
+        forall(
+            404,
+            DEFAULT_CASES,
+            |rng| {
+                let n = gen_dim(rng, 1, 30);
+                gen_simplex(rng, n)
+            },
+            |p| close(p.iter().sum::<f64>(), 1.0, 1e-10, "simplex sum"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(1, 4, |rng| rng.uniform(), |&u| if u < 2.0 { Err("forced".into()) } else { Ok(()) });
+    }
+}

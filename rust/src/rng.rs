@@ -1,0 +1,240 @@
+//! Deterministic PRNG substrate: xoshiro256** seeded via SplitMix64.
+//!
+//! Every stochastic step in the stack (corpus synthesis, T-matrix random
+//! initialization, trial sampling) flows through this module, so entire
+//! ensemble runs are reproducible from a single `u64` seed — the paper's
+//! "five runs with random start" become five seeds.
+
+/// xoshiro256** generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (any u64 is a valid seed).
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], cached_normal: None }
+    }
+
+    /// Derive an independent stream (for per-worker / per-speaker rngs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::seed(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    /// Next raw u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias negligible for our n
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (pairs cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Sample an index from an (unnormalized) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Symmetric Dirichlet(alpha) sample via Gamma(alpha) draws
+    /// (Marsaglia–Tsang, with the alpha<1 boost).
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Gamma(shape, 1) sample.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.uniform().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed(42);
+        let mut b = Rng::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed(1);
+        let mut b = Rng::seed(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Rng::seed(9);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed(5);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::seed(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        let f2 = counts[2] as f64 / 30_000.0;
+        assert!((f2 - 0.7).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Rng::seed(8);
+        let d = rng.dirichlet(2.0, 10);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut rng = Rng::seed(12);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.gamma(3.5)).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed(4);
+        let mut v: Vec<usize> = (0..20).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Rng::seed(6);
+        for _ in 0..1000 {
+            assert!(rng.below(7) < 7);
+        }
+    }
+}

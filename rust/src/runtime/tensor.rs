@@ -1,0 +1,153 @@
+//! Host-side tensor: the IO type at the rust ⇄ PJRT boundary.
+//!
+//! Row-major, shape-tagged, `f32` or `i32` payload — exactly what the L2
+//! graphs consume/produce. Model math lives in [`crate::linalg`] (f64);
+//! conversion happens here at the device boundary.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element payload of a [`Tensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor (row-major) with shape metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    /// f32 tensor from data + shape. Panics if sizes mismatch (programmer error).
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "tensor data/shape mismatch: {} vs {:?}",
+            data.len(),
+            shape
+        );
+        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    /// i32 tensor from data + shape.
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    /// Zero-filled f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::from_f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    /// Zero-filled i32 tensor.
+    pub fn zeros_i32(shape: &[usize]) -> Self {
+        Self::from_i32(vec![0; shape.iter().product()], shape)
+    }
+
+    /// f32 tensor from f64 slice (the linalg → device conversion).
+    pub fn from_f64(data: &[f64], shape: &[usize]) -> Self {
+        Self::from_f32(data.iter().map(|&x| x as f32).collect(), shape)
+    }
+
+    /// Shape (row-major dims).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True when the tensor has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Borrow i32 payload.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Copy payload to f64 (the device → linalg conversion).
+    pub fn to_f64(&self) -> Result<Vec<f64>> {
+        Ok(self.as_f32()?.iter().map(|&x| x as f64).collect())
+    }
+
+    /// Convert to an XLA literal for device upload.
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("literal reshape {:?}: {e:?}", self.shape))
+    }
+
+    /// Build from an XLA literal fetched off device.
+    pub(crate) fn from_literal(lit: xla::Literal) -> Result<Self> {
+        let array_shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let shape: Vec<usize> = array_shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match array_shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?)
+            }
+            xla::PrimitiveType::S32 => {
+                TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?)
+            }
+            // 64-bit outputs appear if a graph was lowered with x64 enabled —
+            // that is a build-path bug; surface it clearly.
+            other => bail!("unsupported device output type {other:?} (graphs must be f32/i32)"),
+        };
+        Ok(Self { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_shape() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn f64_conversion() {
+        let t = Tensor::from_f64(&[1.5, -2.5], &[2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.5f32, -2.5f32]);
+        assert_eq!(t.to_f64().unwrap(), vec![1.5, -2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn zeros_i32() {
+        let t = Tensor::zeros_i32(&[3, 2]);
+        assert_eq!(t.as_i32().unwrap(), &[0; 6]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Baum-Welch sufficient statistics (paper §2, notation n_c, f_c, S_c).
+//!
+//! Computed on CPU worker threads — the paper does the same ("The
+//! Baum-Welch statistics used in i-vector extractor training are
+//! computed in CPU"): statistics give a fixed-size representation per
+//! utterance, which is what the device E-step batches over.
+//!
+//! The two formulations differ in centering: the standard formulation
+//! centers first/second-order stats around the UBM means; the augmented
+//! (Kaldi) formulation consumes them raw (paper §2, "centered … for the
+//! standard formulation and *not* centered for the augmented").
+
+use crate::io::Posting;
+use crate::linalg::Mat;
+
+/// Per-utterance Baum-Welch statistics over C components, dim F.
+#[derive(Debug, Clone)]
+pub struct BwStats {
+    /// Occupancies n_c, length C.
+    pub n: Vec<f64>,
+    /// First-order stats f_c, C × F.
+    pub f: Mat,
+    /// Second-order stats S_c (only accumulated when requested — the
+    /// Σ-update needs them, extraction does not). `S[c]` is F × F.
+    pub s: Option<Vec<Mat>>,
+}
+
+impl BwStats {
+    /// Accumulate stats for one utterance from its frames (T × F) and
+    /// pruned posteriors (`posts[t]` lists surviving components).
+    pub fn accumulate(
+        feats: &Mat,
+        posts: &[Vec<Posting>],
+        n_components: usize,
+        second_order: bool,
+    ) -> Self {
+        assert_eq!(feats.rows(), posts.len(), "frames/posteriors mismatch");
+        let dim = feats.cols();
+        let mut n = vec![0.0; n_components];
+        let mut f = Mat::zeros(n_components, dim);
+        let mut s = if second_order {
+            Some(vec![Mat::zeros(dim, dim); n_components])
+        } else {
+            None
+        };
+        for (t, frame_posts) in posts.iter().enumerate() {
+            let x = feats.row(t);
+            for p in frame_posts {
+                let c = p.idx as usize;
+                debug_assert!(c < n_components);
+                let gamma = p.post as f64;
+                n[c] += gamma;
+                let f_row = f.row_mut(c);
+                for (j, &xj) in x.iter().enumerate() {
+                    f_row[j] += gamma * xj;
+                }
+                if let Some(s) = &mut s {
+                    let sc = &mut s[c];
+                    for i in 0..dim {
+                        let gx = gamma * x[i];
+                        if gx == 0.0 {
+                            continue;
+                        }
+                        let row = sc.row_mut(i);
+                        for (j, &xj) in x.iter().enumerate().skip(i) {
+                            row[j] += gx * xj;
+                        }
+                    }
+                }
+            }
+        }
+        // mirror the upper triangles
+        if let Some(s) = &mut s {
+            for sc in s.iter_mut() {
+                for i in 0..dim {
+                    for j in 0..i {
+                        let v = sc.get(j, i);
+                        sc.set(i, j, v);
+                    }
+                }
+            }
+        }
+        Self { n, f, s }
+    }
+
+    /// Center around per-component means (standard formulation):
+    /// `f̃_c = f_c − n_c m_c`, `S̃_c = S_c − m_c f_cᵀ − f_c m_cᵀ + n_c m_c m_cᵀ`.
+    pub fn center(&self, means: &Mat) -> Self {
+        let (c_n, dim) = (self.n.len(), self.f.cols());
+        assert_eq!((means.rows(), means.cols()), (c_n, dim));
+        let mut f = self.f.clone();
+        for c in 0..c_n {
+            let nc = self.n[c];
+            let m = means.row(c);
+            let row = f.row_mut(c);
+            for j in 0..dim {
+                row[j] -= nc * m[j];
+            }
+        }
+        let s = self.s.as_ref().map(|s_raw| {
+            (0..c_n)
+                .map(|c| {
+                    let mut sc = s_raw[c].clone();
+                    let m = means.row(c);
+                    let fr = self.f.row(c);
+                    let nc = self.n[c];
+                    for i in 0..dim {
+                        for j in 0..dim {
+                            let v = sc.get(i, j) - m[i] * fr[j] - fr[i] * m[j] + nc * m[i] * m[j];
+                            sc.set(i, j, v);
+                        }
+                    }
+                    sc
+                })
+                .collect()
+        });
+        Self { n: self.n.clone(), f, s }
+    }
+
+    /// Total occupancy Σ_c n_c (≈ VAD-surviving frame count).
+    pub fn total_count(&self) -> f64 {
+        self.n.iter().sum()
+    }
+
+    /// Merge another utterance's stats into a global accumulator.
+    pub fn merge(&mut self, other: &BwStats) {
+        assert_eq!(self.n.len(), other.n.len());
+        for (a, b) in self.n.iter_mut().zip(&other.n) {
+            *a += b;
+        }
+        self.f.add_scaled(1.0, &other.f);
+        match (&mut self.s, &other.s) {
+            (Some(a), Some(b)) => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    x.add_scaled(1.0, y);
+                }
+            }
+            (None, None) => {}
+            _ => panic!("merging stats with mismatched second-order presence"),
+        }
+    }
+
+    /// Empty accumulator.
+    pub fn zeros(n_components: usize, dim: usize, second_order: bool) -> Self {
+        Self {
+            n: vec![0.0; n_components],
+            f: Mat::zeros(n_components, dim),
+            s: second_order.then(|| vec![Mat::zeros(dim, dim); n_components]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> (Mat, Vec<Vec<Posting>>) {
+        // 3 frames, dim 2, 2 components
+        let feats = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let posts = vec![
+            vec![Posting { idx: 0, post: 1.0 }],
+            vec![Posting { idx: 0, post: 0.5 }, Posting { idx: 1, post: 0.5 }],
+            vec![Posting { idx: 1, post: 1.0 }],
+        ];
+        (feats, posts)
+    }
+
+    #[test]
+    fn occupancy_and_first_order() {
+        let (feats, posts) = demo();
+        let st = BwStats::accumulate(&feats, &posts, 2, false);
+        assert!((st.n[0] - 1.5).abs() < 1e-12);
+        assert!((st.n[1] - 1.5).abs() < 1e-12);
+        // f_0 = 1.0*[1,2] + 0.5*[3,4] = [2.5, 4]
+        assert!((st.f.get(0, 0) - 2.5).abs() < 1e-12);
+        assert!((st.f.get(0, 1) - 4.0).abs() < 1e-12);
+        // f_1 = 0.5*[3,4] + 1.0*[5,6] = [6.5, 8]
+        assert!((st.f.get(1, 0) - 6.5).abs() < 1e-12);
+        assert!((st.total_count() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn second_order_symmetric_and_correct() {
+        let (feats, posts) = demo();
+        let st = BwStats::accumulate(&feats, &posts, 2, true);
+        let s0 = &st.s.as_ref().unwrap()[0];
+        // S_0 = 1*[1,2]ᵀ[1,2] + 0.5*[3,4]ᵀ[3,4]
+        assert!((s0.get(0, 0) - (1.0 + 4.5)).abs() < 1e-12);
+        assert!((s0.get(0, 1) - (2.0 + 6.0)).abs() < 1e-12);
+        assert_eq!(s0.get(0, 1), s0.get(1, 0));
+    }
+
+    #[test]
+    fn centering_zeroes_mean_matched_stats() {
+        // single component whose mean equals the weighted frame mean →
+        // centered f must vanish.
+        let feats = Mat::from_rows(&[&[2.0, 0.0], &[4.0, 2.0]]);
+        let posts = vec![
+            vec![Posting { idx: 0, post: 1.0 }],
+            vec![Posting { idx: 0, post: 1.0 }],
+        ];
+        let st = BwStats::accumulate(&feats, &posts, 1, true);
+        let means = Mat::from_rows(&[&[3.0, 1.0]]);
+        let c = st.center(&means);
+        assert!(c.f.max_abs() < 1e-12);
+        // centered S = Σ (x-m)(x-m)ᵀ = [[1,1],[1,1]] * 2
+        let s0 = &c.s.as_ref().unwrap()[0];
+        assert!((s0.get(0, 0) - 2.0).abs() < 1e-12);
+        assert!((s0.get(1, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let (feats, posts) = demo();
+        let st = BwStats::accumulate(&feats, &posts, 2, true);
+        let mut acc = BwStats::zeros(2, 2, true);
+        acc.merge(&st);
+        acc.merge(&st);
+        assert!((acc.n[0] - 3.0).abs() < 1e-12);
+        assert!((acc.f.get(1, 1) - 16.0).abs() < 1e-12);
+    }
+}

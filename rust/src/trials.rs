@@ -1,0 +1,185 @@
+//! Trial lists and detection metrics (EER, minDCF, DET points).
+//!
+//! The paper evaluates on the VoxCeleb1 protocol: 37 720 trials with an
+//! equal number of target and non-target pairs, pooled EER. We generate
+//! a balanced trial list over the held-out synthetic speakers the same
+//! way and compute EER by ROC sweep plus NIST-style minDCF.
+
+use crate::rng::Rng;
+
+/// One verification trial: enrollment utterance index, test utterance
+/// index (into the eval i-vector list), and ground truth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Trial {
+    pub enroll: usize,
+    pub test: usize,
+    pub target: bool,
+}
+
+/// Balanced trial list generated from utterance speaker labels:
+/// `n_trials/2` same-speaker and `n_trials/2` different-speaker pairs,
+/// sampled without replacement where possible.
+pub fn generate_trials(spk_of_utt: &[usize], n_trials: usize, seed: u64) -> Vec<Trial> {
+    let n = spk_of_utt.len();
+    assert!(n >= 2, "need at least two utterances");
+    let mut rng = Rng::seed(seed);
+
+    // enumerate all candidate pairs once (eval sets are small)
+    let mut targets = Vec::new();
+    let mut nontargets = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if spk_of_utt[i] == spk_of_utt[j] {
+                targets.push((i, j));
+            } else {
+                nontargets.push((i, j));
+            }
+        }
+    }
+    assert!(!targets.is_empty(), "no same-speaker pairs available");
+    rng.shuffle(&mut targets);
+    rng.shuffle(&mut nontargets);
+
+    let half = n_trials / 2;
+    let mut out = Vec::with_capacity(half * 2);
+    for k in 0..half {
+        let (e, t) = targets[k % targets.len()];
+        out.push(Trial { enroll: e, test: t, target: true });
+    }
+    for k in 0..half {
+        let (e, t) = nontargets[k % nontargets.len()];
+        out.push(Trial { enroll: e, test: t, target: false });
+    }
+    rng.shuffle(&mut out);
+    out
+}
+
+/// Detection metrics computed from scored trials.
+#[derive(Debug, Clone)]
+pub struct DetMetrics {
+    /// Equal error rate in percent.
+    pub eer_pct: f64,
+    /// minDCF at p_target = 0.01 (c_miss = c_fa = 1).
+    pub min_dcf_01: f64,
+    /// minDCF at p_target = 0.001.
+    pub min_dcf_001: f64,
+}
+
+/// Compute EER + minDCF from (score, is_target) pairs via threshold sweep.
+pub fn det_metrics(scores: &[(f64, bool)]) -> DetMetrics {
+    let n_tgt = scores.iter().filter(|(_, t)| *t).count();
+    let n_non = scores.len() - n_tgt;
+    assert!(n_tgt > 0 && n_non > 0, "need both target and non-target trials");
+
+    // sort descending by score; sweep the threshold through every score
+    let mut sorted: Vec<(f64, bool)> = scores.to_vec();
+    sorted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // at threshold above max score: accept none → P_miss=1, P_fa=0
+    let mut accepted_tgt = 0usize;
+    let mut accepted_non = 0usize;
+    let mut eer = f64::NAN;
+    let mut best_gap = f64::INFINITY;
+    let mut min_dcf_01 = f64::INFINITY;
+    let mut min_dcf_001 = f64::INFINITY;
+
+    let mut i = 0;
+    while i <= sorted.len() {
+        let p_miss = 1.0 - accepted_tgt as f64 / n_tgt as f64;
+        let p_fa = accepted_non as f64 / n_non as f64;
+        let gap = (p_miss - p_fa).abs();
+        if gap < best_gap {
+            best_gap = gap;
+            eer = 0.5 * (p_miss + p_fa);
+        }
+        for (p_t, dcf) in [(0.01, &mut min_dcf_01), (0.001, &mut min_dcf_001)] {
+            let c = p_t * p_miss + (1.0 - p_t) * p_fa;
+            if c < *dcf {
+                *dcf = c;
+            }
+        }
+        if i == sorted.len() {
+            break;
+        }
+        // accept the next-highest score (handle ties as a block)
+        let s = sorted[i].0;
+        while i < sorted.len() && sorted[i].0 == s {
+            if sorted[i].1 {
+                accepted_tgt += 1;
+            } else {
+                accepted_non += 1;
+            }
+            i += 1;
+        }
+    }
+
+    // normalize minDCF by the best uninformed system, NIST style
+    let norm_01 = 0.01f64.min(0.99);
+    let norm_001 = 0.001f64.min(0.999);
+    DetMetrics {
+        eer_pct: eer * 100.0,
+        min_dcf_01: min_dcf_01 / norm_01,
+        min_dcf_001: min_dcf_001 / norm_001,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_zero_eer() {
+        let scores: Vec<(f64, bool)> =
+            (0..50).map(|i| (i as f64, false)).chain((0..50).map(|i| (100.0 + i as f64, true))).collect();
+        let m = det_metrics(&scores);
+        assert!(m.eer_pct < 1e-9, "{}", m.eer_pct);
+        assert!(m.min_dcf_01 < 1e-9);
+    }
+
+    #[test]
+    fn random_scores_eer_near_half() {
+        let mut rng = Rng::seed(77);
+        let scores: Vec<(f64, bool)> =
+            (0..4000).map(|i| (rng.uniform(), i % 2 == 0)).collect();
+        let m = det_metrics(&scores);
+        assert!((m.eer_pct - 50.0).abs() < 5.0, "{}", m.eer_pct);
+    }
+
+    #[test]
+    fn inverted_scores_eer_near_one() {
+        // targets score LOW → EER ≈ 100%
+        let scores: Vec<(f64, bool)> =
+            (0..50).map(|i| (100.0 + i as f64, false)).chain((0..50).map(|i| (i as f64, true))).collect();
+        let m = det_metrics(&scores);
+        assert!(m.eer_pct > 95.0);
+    }
+
+    #[test]
+    fn trial_list_balanced_and_valid() {
+        // 6 speakers × 4 utts
+        let spk: Vec<usize> = (0..24).map(|i| i / 4).collect();
+        let trials = generate_trials(&spk, 200, 3);
+        assert_eq!(trials.len(), 200);
+        let n_tgt = trials.iter().filter(|t| t.target).count();
+        assert_eq!(n_tgt, 100);
+        for t in &trials {
+            assert_ne!(t.enroll, t.test);
+            assert_eq!(t.target, spk[t.enroll] == spk[t.test]);
+        }
+    }
+
+    #[test]
+    fn trial_list_deterministic() {
+        let spk: Vec<usize> = (0..12).map(|i| i / 3).collect();
+        assert_eq!(generate_trials(&spk, 50, 9), generate_trials(&spk, 50, 9));
+    }
+
+    #[test]
+    fn eer_known_value() {
+        // one mistake each way out of 4 → EER 50%? Construct:
+        // targets: 3, 1; nontargets: 2, 0. Threshold at 1.5: miss=1/2, fa=1/2 → EER 50.
+        let scores = vec![(3.0, true), (1.0, true), (2.0, false), (0.0, false)];
+        let m = det_metrics(&scores);
+        assert!((m.eer_pct - 50.0).abs() < 1e-9, "{}", m.eer_pct);
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests across the three layers: the accelerated device
+//! path must reproduce the CPU reference (same math, f32 on device),
+//! and the full pipeline must produce a working speaker verifier.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first — the
+//! Makefile test target guarantees the ordering).
+
+use ivector_tv::config::Config;
+use ivector_tv::coordinator::{
+    align_archive_accel, align_archive_cpu, stats_from_posts, ComputePath, TrainSetup,
+};
+use ivector_tv::frontend::synth::generate_corpus;
+use ivector_tv::gmm::{train_ubm, UbmPair};
+use ivector_tv::io::FeatArchive;
+use ivector_tv::ivector::{
+    estep_utterance, extract_cpu, AccelTvm, EstepAccum, Formulation, TrainVariant, TvModel,
+    UttStats,
+};
+
+/// Scaled-down corpus at the *artifact* dims (C=64, F=24, R=64).
+fn artifact_scale_setup() -> (Config, FeatArchive, FeatArchive, UbmPair) {
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = 48;
+    cfg.corpus.utts_per_train_speaker = 5;
+    cfg.corpus.n_eval_speakers = 12;
+    cfg.corpus.utts_per_eval_speaker = 4;
+    cfg.corpus.min_frames = 150;
+    cfg.corpus.max_frames = 250;
+    cfg.ubm.train_frames = 20_000;
+    cfg.ubm.diag_em_iters = 3;
+    cfg.ubm.full_em_iters = 1;
+    cfg.tvm.iters = 3;
+    // LDA needs out_dim < n_speakers (between-class scatter rank)
+    cfg.backend.lda_dim = 16;
+    let corpus = generate_corpus(&cfg.corpus).unwrap();
+    let (ubm, _) = train_ubm(&corpus.train, &cfg.ubm, 1).unwrap();
+    (cfg, corpus.train, corpus.eval, ubm)
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.toml").exists()
+}
+
+#[test]
+fn accel_alignment_matches_cpu_reference() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts` before `cargo test`");
+    }
+    let (cfg, train, _eval, ubm) = artifact_scale_setup();
+    let accel = AccelTvm::new("artifacts").unwrap().with_alignment().unwrap();
+
+    let cpu = align_archive_cpu(&ubm.diag, &ubm.full, &train, cfg.tvm.top_k, cfg.tvm.min_post, 4);
+    let dev = align_archive_accel(&accel, &ubm.diag, &ubm.full, &train).unwrap();
+
+    assert_eq!(cpu.len(), dev.len());
+    let mut mismatched_frames = 0usize;
+    let mut total_frames = 0usize;
+    for (cu, du) in cpu.iter().zip(&dev) {
+        assert_eq!(cu.len(), du.len());
+        for (cf, df) in cu.iter().zip(du) {
+            total_frames += 1;
+            let mut c_map: std::collections::HashMap<u32, f32> =
+                cf.iter().map(|p| (p.idx, p.post)).collect();
+            let mut ok = c_map.len() == df.len();
+            if ok {
+                for p in df {
+                    match c_map.remove(&p.idx) {
+                        Some(cp) if (cp - p.post).abs() < 5e-3 => {}
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !ok {
+                mismatched_frames += 1;
+            }
+        }
+    }
+    // f32 softmax near the pruning threshold can flip a component in/out
+    // on rare frames; demand equality on ≥ 99.5% of frames.
+    let rate = mismatched_frames as f64 / total_frames as f64;
+    assert!(rate < 5e-3, "{mismatched_frames}/{total_frames} frames disagree ({rate:.4})");
+}
+
+#[test]
+fn accel_estep_matches_cpu_reference() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts`");
+    }
+    let (cfg, train, _eval, ubm) = artifact_scale_setup();
+    let model = TvModel::init(Formulation::Augmented, &ubm.full, cfg.tvm.rank, 100.0, 5);
+
+    let posts = align_archive_cpu(&ubm.diag, &ubm.full, &train, cfg.tvm.top_k, cfg.tvm.min_post, 4);
+    let (bw, _) = stats_from_posts(&train, &posts, cfg.ubm.components, 4);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &model)).collect();
+
+    // CPU accumulation
+    let (tt_si, tt_si_t) = model.precompute();
+    let mut cpu_acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+    for s in &utts {
+        estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut cpu_acc));
+    }
+
+    // device accumulation
+    let mut accel = AccelTvm::new("artifacts").unwrap();
+    accel.set_model(&model).unwrap();
+    let mut dev_acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+    let bu = accel.dims.bu;
+    for chunk in utts.chunks(bu) {
+        let refs: Vec<&UttStats> = chunk.iter().collect();
+        let (acc, _phi) = accel.estep_batch(&refs).unwrap();
+        dev_acc.merge(&acc);
+    }
+
+    assert_eq!(dev_acc.count, cpu_acc.count);
+    let rel = |a: f64, b: f64| (a - b).abs() / (1.0 + a.abs().max(b.abs()));
+    for (i, (a, b)) in dev_acc.h.iter().zip(&cpu_acc.h).enumerate() {
+        assert!(rel(*a, *b) < 2e-3, "h[{i}]: {a} vs {b}");
+    }
+    let hh_dev = dev_acc.hh.sub(&cpu_acc.hh).max_abs() / (1.0 + cpu_acc.hh.max_abs());
+    assert!(hh_dev < 2e-3, "H deviates by {hh_dev}");
+    for c in 0..cfg.ubm.components {
+        let da = dev_acc.a[c].sub(&cpu_acc.a[c]).max_abs() / (1.0 + cpu_acc.a[c].max_abs());
+        let db = dev_acc.b[c].sub(&cpu_acc.b[c]).max_abs() / (1.0 + cpu_acc.b[c].max_abs());
+        assert!(da < 3e-3, "A[{c}] deviates by {da}");
+        assert!(db < 3e-3, "B[{c}] deviates by {db}");
+    }
+}
+
+#[test]
+fn accel_extraction_matches_cpu_reference() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts`");
+    }
+    let (cfg, train, _eval, ubm) = artifact_scale_setup();
+    let model = TvModel::init(Formulation::Augmented, &ubm.full, cfg.tvm.rank, 100.0, 9);
+    let posts = align_archive_cpu(&ubm.diag, &ubm.full, &train, cfg.tvm.top_k, cfg.tvm.min_post, 4);
+    let (bw, _) = stats_from_posts(&train, &posts, cfg.ubm.components, 4);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &model)).collect();
+
+    let cpu_iv = extract_cpu(&model, &utts, 4);
+
+    let mut accel = AccelTvm::new("artifacts").unwrap();
+    accel.set_model(&model).unwrap();
+    let mut rows = Vec::new();
+    for chunk in utts.chunks(accel.dims.bu) {
+        let refs: Vec<&UttStats> = chunk.iter().collect();
+        let iv = accel.extract_batch(&refs, &model.prior_mean).unwrap();
+        for i in 0..iv.rows() {
+            rows.push(iv.row(i).to_vec());
+        }
+    }
+    assert_eq!(rows.len(), cpu_iv.rows());
+    for (i, row) in rows.iter().enumerate() {
+        for (j, v) in row.iter().enumerate() {
+            let want = cpu_iv.get(i, j);
+            assert!(
+                (v - want).abs() < 2e-3 * (1.0 + want.abs()),
+                "iv[{i}][{j}]: {v} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn end_to_end_training_produces_working_verifier() {
+    if !have_artifacts() {
+        panic!("artifacts missing — run `make artifacts`");
+    }
+    let (cfg, train, eval, ubm) = artifact_scale_setup();
+    let mut accel = AccelTvm::new("artifacts").unwrap().with_alignment().unwrap();
+    let variant = TrainVariant::recommended(2);
+    let mut setup = TrainSetup {
+        cfg: &cfg,
+        feats: &train,
+        diag: ubm.diag.clone(),
+        full: ubm.full.clone(),
+    };
+    let (model, curve) = ivector_tv::coordinator::ensemble::run_curve(
+        &cfg,
+        &train,
+        &eval,
+        &setup.diag,
+        &setup.full,
+        variant,
+        3,
+        42,
+        1,
+        ComputePath::Accel,
+        Some(&mut accel),
+    )
+    .unwrap();
+    let _ = &mut setup;
+    assert_eq!(curve.eer_by_iter.len(), 3);
+    let final_eer = *curve.eer_by_iter.last().unwrap();
+    // synthetic speakers are separable by construction: far below chance
+    assert!(final_eer < 45.0, "EER {final_eer:.1}% — verifier not working");
+    assert_eq!(model.rank(), cfg.tvm.rank);
+}

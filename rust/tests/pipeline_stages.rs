@@ -1,0 +1,166 @@
+//! Stage-level integration: the CLI pipeline run end-to-end through the
+//! public stage functions (disk round-trips included), plus failure
+//! injection on the archive/model formats.
+
+use ivector_tv::cli::Args;
+use ivector_tv::coordinator::stages;
+use ivector_tv::io::{load, save, BinReader, FeatArchive};
+use ivector_tv::ivector::TvModel;
+
+fn args(pairs: &[(&str, &str)], switches: &[&str]) -> Args {
+    let mut argv: Vec<String> = Vec::new();
+    for (k, v) in pairs {
+        argv.push(format!("--{k}"));
+        argv.push(v.to_string());
+    }
+    for s in switches {
+        argv.push(format!("--{s}"));
+    }
+    Args::parse(&argv).unwrap()
+}
+
+fn tiny_config_file(dir: &std::path::Path) -> String {
+    let path = dir.join("tiny.toml");
+    std::fs::write(
+        &path,
+        "[corpus]\n\
+         n_train_speakers = 20\n\
+         utts_per_train_speaker = 4\n\
+         n_eval_speakers = 6\n\
+         utts_per_eval_speaker = 3\n\
+         min_frames = 120\n\
+         max_frames = 200\n\
+         [ubm]\n\
+         diag_em_iters = 2\n\
+         full_em_iters = 1\n\
+         train_frames = 8000\n\
+         [tvm]\n\
+         iters = 2\n\
+         [backend]\n\
+         lda_dim = 12\n\
+         plda_iters = 3\n\
+         [trials]\n\
+         n_trials = 1000\n",
+    )
+    .unwrap();
+    path.to_str().unwrap().to_string()
+}
+
+#[test]
+fn cli_pipeline_end_to_end_on_disk() {
+    let dir = std::env::temp_dir().join("ivtv_pipeline_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = tiny_config_file(&dir);
+    let work = dir.join("work");
+    let work_s = work.to_str().unwrap();
+
+    // stage by stage, each reading the previous stage's disk outputs
+    let base = |extra: &[(&str, &str)], sw: &[&str]| {
+        let mut pairs = vec![("config", cfg_path.as_str()), ("work", work_s)];
+        pairs.extend_from_slice(extra);
+        args(&pairs, sw)
+    };
+    stages::synth(&base(&[], &[])).unwrap();
+    assert!(work.join("train.feats").exists());
+    stages::train_ubm(&base(&[], &[])).unwrap();
+    stages::align(&base(&[], &["cpu-ref"])).unwrap();
+    assert!(work.join("train.posts").exists());
+    stages::train(&base(&[("iters", "2"), ("variant", "aug")], &["sigma", "cpu-ref"])).unwrap();
+    let model: TvModel = load(work.join("tvm.bin")).unwrap();
+    assert_eq!(model.rank(), 64);
+    stages::extract(&base(&[], &[])).unwrap();
+    stages::backend(&base(&[], &[])).unwrap();
+    stages::eval(&base(&[], &[])).unwrap();
+
+    // stage outputs reload cleanly
+    let train: FeatArchive = FeatArchive::load(work.join("train.feats")).unwrap();
+    assert_eq!(train.utts.len(), 80);
+    let posts = ivector_tv::io::PostArchive::load(work.join("train.posts")).unwrap();
+    assert_eq!(posts.utts.len(), 80);
+    // postings per frame in the pruned regime the paper reports (~4)
+    let avg: f64 =
+        posts.utts.iter().map(|u| u.avg_postings()).sum::<f64>() / posts.utts.len() as f64;
+    assert!(avg >= 1.0 && avg <= 10.0, "avg postings {avg}");
+}
+
+#[test]
+fn corrupt_archive_is_rejected_not_misread() {
+    let dir = std::env::temp_dir().join("ivtv_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("feats.bin");
+    // write a valid archive then truncate it mid-payload
+    let arch = FeatArchive {
+        utts: vec![ivector_tv::io::Utterance {
+            utt_id: "u".into(),
+            spk_id: "s".into(),
+            feats: ivector_tv::linalg::Mat::zeros(100, 24),
+        }],
+    };
+    arch.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(FeatArchive::load(&path).is_err(), "truncated archive must fail to load");
+
+    // flip the magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(FeatArchive::load(&path).is_err(), "bad magic must be rejected");
+}
+
+#[test]
+fn model_files_are_not_interchangeable() {
+    // loading a TvModel from a GMM file must fail cleanly, not alias
+    let dir = std::env::temp_dir().join("ivtv_mix_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("diag.bin");
+    let gmm = ivector_tv::gmm::DiagGmm {
+        weights: vec![1.0],
+        means: ivector_tv::linalg::Mat::zeros(1, 4),
+        vars: ivector_tv::linalg::Mat::from_fn(1, 4, |_, _| 1.0),
+    };
+    save(&gmm, &path).unwrap();
+    let res: anyhow::Result<TvModel> = load(&path);
+    assert!(res.is_err(), "cross-type load must error");
+}
+
+#[test]
+fn reader_rejects_implausible_lengths() {
+    // a header claiming a ludicrous string length must error, not OOM
+    let dir = std::env::temp_dir().join("ivtv_len_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("evil.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"IVTV");
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // "string length"
+    std::fs::write(&path, &bytes).unwrap();
+    let mut r = BinReader::open(&path).unwrap();
+    assert!(r.read_string().is_err());
+}
+
+#[test]
+fn unknown_cli_flags_are_reported() {
+    let a = args(&[("bogus-flag", "1")], &[]);
+    assert!(stages::synth(&a).is_err());
+}
+
+#[test]
+fn config_dim_mismatch_fails_fast_on_accel() {
+    // a model whose dims disagree with the artifacts must be refused by
+    // the accel path with an actionable error
+    if !std::path::Path::new("artifacts/manifest.toml").exists() {
+        panic!("artifacts missing — run `make artifacts`");
+    }
+    let ubm = {
+        let mut rng = ivector_tv::rng::Rng::seed(1);
+        let means = ivector_tv::linalg::Mat::from_fn(8, 6, |_, _| rng.normal());
+        let covs = (0..8).map(|_| ivector_tv::linalg::Mat::eye(6)).collect();
+        ivector_tv::gmm::FullGmm::new(vec![0.125; 8], means, covs).unwrap()
+    };
+    let model = TvModel::init(ivector_tv::ivector::Formulation::Augmented, &ubm, 5, 100.0, 1);
+    let mut accel = ivector_tv::ivector::AccelTvm::new("artifacts").unwrap();
+    let err = accel.set_model(&model).unwrap_err();
+    assert!(err.to_string().contains("do not match artifacts"), "{err}");
+}
