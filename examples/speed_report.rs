@@ -4,28 +4,46 @@
 //! (the paper: 3000× RT alignment, 10 000× RT extraction, 25×
 //! training speed-up of GPU over the 22-core Kaldi CPU baseline).
 //!
-//!     cargo run --release --example speed_report [-- --utts N]
+//! Also runs a kernel-level microbench of the batched CPU paths
+//! (scalar vs GEMM-shaped) at paper-class dims and records the
+//! machine-readable trajectory in `BENCH_1.json` (frames/sec for
+//! alignment, utterances/sec for the E-step) so future PRs can track
+//! the perf curve.
+//!
+//!     cargo run --release --example speed_report \
+//!         [-- --utts N --bench-c C --bench-f F --bench-r R \
+//!             --bench-frames T --bench-utts U]
+//!
+//! The accelerated sections are skipped (with a note) when
+//! `artifacts/` is missing, so the CPU report runs everywhere.
 
+use ivector_tv::bench_util::bench;
 use ivector_tv::config::Config;
 use ivector_tv::coordinator::{
-    align_archive_accel, align_archive_cpu, stats_from_posts, ComputePath, TrainSetup,
+    align_archive_accel, align_archive_cpu, align_archive_cpu_scalar, stats_from_posts,
+    ComputePath, TrainSetup,
 };
 use ivector_tv::frontend::synth::generate_corpus;
-use ivector_tv::gmm::train_ubm;
+use ivector_tv::gmm::{train_ubm, BatchAligner, DiagGmm, FullGmm};
 use ivector_tv::ivector::{
-    estep_utterance, extract_cpu, AccelTvm, EstepAccum, Formulation, TrainVariant, TvModel,
-    UttStats,
+    estep_batch_cpu, estep_utterance, extract_cpu, AccelTvm, EstepAccum, EstepWorkspace,
+    Formulation, TrainVariant, TvModel, UttStats,
 };
-use ivector_tv::metrics::{markdown_table, rt_factor, StageReport, Stopwatch};
+use ivector_tv::linalg::Mat;
+use ivector_tv::metrics::{markdown_table, StageReport, Stopwatch};
+use ivector_tv::rng::Rng;
+
+fn arg_usize(argv: &[String], flag: &str, default: usize) -> usize {
+    argv.iter()
+        .position(|a| a == flag)
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
-    let n_utts: usize = argv
-        .iter()
-        .position(|a| a == "--utts")
-        .and_then(|i| argv.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(400);
+    let n_utts = arg_usize(&argv, "--utts", 400);
 
     let mut cfg = Config::default_scaled();
     cfg.corpus.n_train_speakers = n_utts.div_ceil(8);
@@ -37,22 +55,39 @@ fn main() -> anyhow::Result<()> {
     let frames = train.total_frames();
     println!("corpus: {} utts, {frames} frames (= {:.0}s of nominal audio)", train.utts.len(), frames as f64 * 0.01);
     let (ubm, _) = train_ubm(train, &cfg.ubm, 1)?;
-    let mut accel = AccelTvm::new("artifacts")?.with_alignment()?;
+    let mut accel = match AccelTvm::new("artifacts").and_then(AccelTvm::with_alignment) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            println!("note: accel sections skipped (artifacts unavailable): {e:#}");
+            None
+        }
+    };
     let workers = ivector_tv::exec::default_workers();
     let mut rows = Vec::new();
 
     // ---- frame alignment (paper: 3000× RT on Titan V) ----
     let sw = Stopwatch::start();
+    let _posts_scalar = align_archive_cpu_scalar(
+        &ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers,
+    );
+    let scalar_s = sw.elapsed_s();
+    rows.push(StageReport::new("align (cpu-scalar)", scalar_s, frames, "frames").with_rt(frames));
+
+    let sw = Stopwatch::start();
     let posts_cpu =
         align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers);
     let cpu_s = sw.elapsed_s();
-    rows.push(StageReport::new("align (cpu-ref)", cpu_s, frames, "frames").with_rt(frames));
+    rows.push(StageReport::new("align (cpu-batched)", cpu_s, frames, "frames").with_rt(frames));
+    println!("-> align cpu batched/scalar speedup: {:.2}x", scalar_s / cpu_s);
 
-    let sw = Stopwatch::start();
-    let _posts_dev = align_archive_accel(&accel, &ubm.diag, &ubm.full, train)?;
-    let dev_s = sw.elapsed_s();
-    rows.push(StageReport::new("align (accel)", dev_s, frames, "frames").with_rt(frames));
-    let align_speedup = cpu_s / dev_s;
+    let mut align_speedup_accel = None;
+    if let Some(accel) = &accel {
+        let sw = Stopwatch::start();
+        let _posts_dev = align_archive_accel(accel, &ubm.diag, &ubm.full, train)?;
+        let dev_s = sw.elapsed_s();
+        rows.push(StageReport::new("align (accel)", dev_s, frames, "frames").with_rt(frames));
+        align_speedup_accel = Some(cpu_s / dev_s);
+    }
 
     // ---- stats + model ----
     let (bw, _global) = stats_from_posts(train, &posts_cpu, cfg.ubm.components, workers);
@@ -63,23 +98,26 @@ fn main() -> anyhow::Result<()> {
     let sw = Stopwatch::start();
     let _iv = extract_cpu(&model, &utts, workers);
     let cpu_s = sw.elapsed_s();
-    rows.push(StageReport::new("extract (cpu-ref)", cpu_s, utts.len(), "utts").with_rt(frames));
+    rows.push(StageReport::new("extract (cpu-batched)", cpu_s, utts.len(), "utts").with_rt(frames));
 
-    accel.set_model(&model)?;
-    let sw = Stopwatch::start();
-    for chunk in utts.chunks(accel.dims.bu) {
-        let refs: Vec<&UttStats> = chunk.iter().collect();
-        let _ = accel.extract_batch(&refs, &model.prior_mean)?;
+    let mut extract_speedup = None;
+    if let Some(accel) = &mut accel {
+        accel.set_model(&model)?;
+        let sw = Stopwatch::start();
+        for chunk in utts.chunks(accel.dims.bu) {
+            let refs: Vec<&UttStats> = chunk.iter().collect();
+            let _ = accel.extract_batch(&refs, &model.prior_mean)?;
+        }
+        let dev_s = sw.elapsed_s();
+        rows.push(StageReport::new("extract (accel)", dev_s, utts.len(), "utts").with_rt(frames));
+        extract_speedup = Some(cpu_s / dev_s);
     }
-    let dev_s = sw.elapsed_s();
-    rows.push(StageReport::new("extract (accel)", dev_s, utts.len(), "utts").with_rt(frames));
-    let extract_speedup = cpu_s / dev_s;
 
     // ---- one full training E-step (the per-iteration hot loop;
     //      paper: 25× training speed-up over the CPU baseline) ----
     let sw = Stopwatch::start();
     {
-        // scalar single-thread baseline — the honest "Kaldi CPU" analogue
+        // per-item scalar baseline — the honest "Kaldi CPU" analogue
         let (tt_si, tt_si_t) = model.precompute();
         let mut acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
         for s in &utts {
@@ -87,20 +125,35 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let scalar_s = sw.elapsed_s();
-    rows.push(StageReport::new("estep (cpu 1-thread)", scalar_s, utts.len(), "utts"));
+    rows.push(StageReport::new("estep (cpu-scalar 1-thread)", scalar_s, utts.len(), "utts"));
 
     let sw = Stopwatch::start();
     {
+        let consts = model.precompute_consts();
+        let bu = cfg.tvm.batch_utts.max(1);
+        let mut ws = EstepWorkspace::new(cfg.tvm.rank, bu);
+        let mut acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
+        for chunk in utts.chunks(bu) {
+            let refs: Vec<&UttStats> = chunk.iter().collect();
+            estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
+        }
+    }
+    let batched_s = sw.elapsed_s();
+    rows.push(StageReport::new("estep (cpu-batched 1-thread)", batched_s, utts.len(), "utts"));
+
+    let mut estep_speedup_accel = None;
+    if let Some(accel) = &accel {
+        let sw = Stopwatch::start();
         let mut acc = EstepAccum::zeros(cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
         for chunk in utts.chunks(accel.dims.bu) {
             let refs: Vec<&UttStats> = chunk.iter().collect();
             let (a, _) = accel.estep_batch(&refs)?;
             acc.merge(&a);
         }
+        let accel_s = sw.elapsed_s();
+        rows.push(StageReport::new("estep (accel)", accel_s, utts.len(), "utts"));
+        estep_speedup_accel = Some(scalar_s / accel_s);
     }
-    let accel_s = sw.elapsed_s();
-    rows.push(StageReport::new("estep (accel)", accel_s, utts.len(), "utts"));
-    let estep_speedup = scalar_s / accel_s;
 
     // ---- one end-to-end training iteration both paths ----
     let variant = TrainVariant {
@@ -115,26 +168,126 @@ fn main() -> anyhow::Result<()> {
     let iter_cpu = sw.elapsed_s();
     rows.push(StageReport::new("train-iter (cpu multi-thread)", iter_cpu, 1, "iter"));
 
-    let mut t_dev = TrainSetup { cfg: &cfg, feats: train, diag: ubm.diag.clone(), full: ubm.full.clone() };
-    let sw = Stopwatch::start();
-    ivector_tv::coordinator::train_tvm(&mut t_dev, variant, 1, 3, ComputePath::Accel, Some(&mut accel), &mut |_| None)?;
-    let iter_dev = sw.elapsed_s();
-    rows.push(StageReport::new("train-iter (accel)", iter_dev, 1, "iter"));
+    let mut iter_speedup = None;
+    if let Some(accel) = &mut accel {
+        let mut t_dev = TrainSetup { cfg: &cfg, feats: train, diag: ubm.diag.clone(), full: ubm.full.clone() };
+        let sw = Stopwatch::start();
+        ivector_tv::coordinator::train_tvm(&mut t_dev, variant, 1, 3, ComputePath::Accel, Some(accel), &mut |_| None)?;
+        let iter_dev = sw.elapsed_s();
+        rows.push(StageReport::new("train-iter (accel)", iter_dev, 1, "iter"));
+        iter_speedup = Some(iter_cpu / iter_dev);
+    }
 
     println!("\n{}", markdown_table(&rows));
-    println!("| metric | paper (Titan V vs 22-core Xeon) | this testbed (XLA-CPU vs scalar rust) |");
+    println!("| metric | paper (Titan V vs 22-core Xeon) | this testbed |");
     println!("|---|---|---|");
+    if let Some(s) = align_speedup_accel {
+        println!("| align speed-up accel/cpu-batched | — | {s:.1}× |");
+    }
+    if let Some(s) = extract_speedup {
+        println!("| extract speed-up accel/cpu-batched | — | {s:.1}× |");
+    }
+    if let Some(s) = estep_speedup_accel {
+        println!("| E-step speed-up accel/scalar | 25× (training) | {s:.1}× |");
+    }
+    if let Some(s) = iter_speedup {
+        println!("| full-iteration speed-up | 25× | {s:.1}× |");
+    }
+
+    // ---- kernel microbench at paper-class dims → BENCH_1.json ----
+    let bc = arg_usize(&argv, "--bench-c", 2048);
+    let bf = arg_usize(&argv, "--bench-f", 60);
+    // Paper-class rank by default (the acceptance dims). Footprint is
+    // steep — the A accumulator alone is C·R²·8 bytes (~2.6 GB at
+    // C=2048, R=400) and the scalar reference holds full TᵀΣ⁻¹T
+    // matrices (another ~2.6 GB): ~7 GB peak. Pass --bench-r 200 on
+    // smaller hosts.
+    let br = arg_usize(&argv, "--bench-r", 400);
+    let bframes = arg_usize(&argv, "--bench-frames", 1000);
+    let butts = arg_usize(&argv, "--bench-utts", 8);
+    kernel_bench_json(bc, bf, br, bframes, butts, cfg.tvm.top_k)?;
+    Ok(())
+}
+
+/// Single-threaded scalar-vs-batched kernel comparison on a synthetic
+/// UBM/model at the requested dims; writes `BENCH_1.json`.
+fn kernel_bench_json(
+    c: usize,
+    f: usize,
+    r: usize,
+    n_frames: usize,
+    n_utts: usize,
+    top_k: usize,
+) -> anyhow::Result<()> {
+    println!("\n== kernel microbench (C={c} F={f} R={r}, {n_frames} frames, {n_utts} utts) ==");
+    let mut rng = Rng::seed(4242);
+    let diag = DiagGmm {
+        weights: rng.dirichlet(2.0, c),
+        means: Mat::from_fn(c, f, |_, _| 2.0 * rng.normal()),
+        vars: Mat::from_fn(c, f, |_, _| rng.uniform_in(0.5, 2.0)),
+    };
+    let full = FullGmm::from_diag(&diag)?;
+    let frames = Mat::from_fn(n_frames, f, |_, _| 2.0 * rng.normal());
+
+    let align_scalar = bench("kernel/align-scalar", 1, 3, || {
+        ivector_tv::gmm::select_posteriors_scalar(&diag, &full, &frames, top_k, 0.025)
+    });
+    let align_batched = bench("kernel/align-batched", 1, 3, || {
+        BatchAligner::new(&diag, &full, top_k, 0.025).align_utterance(&frames)
+    });
+
+    let model = TvModel::init(Formulation::Augmented, &full, r, 100.0, 7);
+    let stats: Vec<UttStats> = (0..n_utts)
+        .map(|_| UttStats {
+            n: (0..c).map(|_| rng.uniform_in(0.5, 30.0)).collect(),
+            f: Mat::from_fn(c, f, |_, _| 3.0 * rng.normal()),
+        })
+        .collect();
+
+    let estep_scalar = {
+        let (tt_si, tt_si_t) = model.precompute();
+        bench("kernel/estep-scalar", 1, 2, || {
+            let mut acc = EstepAccum::zeros(c, f, r);
+            for s in &stats {
+                estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+            }
+            acc.count
+        })
+    };
+    let estep_batched = {
+        let consts = model.precompute_consts();
+        bench("kernel/estep-batched", 1, 2, || {
+            let mut acc = EstepAccum::zeros(c, f, r);
+            let mut ws = EstepWorkspace::new(r, stats.len());
+            let refs: Vec<&UttStats> = stats.iter().collect();
+            estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
+            acc.count
+        })
+    };
+
+    let fps_scalar = n_frames as f64 / align_scalar.median_s;
+    let fps_batched = n_frames as f64 / align_batched.median_s;
+    let ups_scalar = n_utts as f64 / estep_scalar.median_s;
+    let ups_batched = n_utts as f64 / estep_batched.median_s;
+    let align_speedup = align_scalar.median_s / align_batched.median_s;
+    let estep_speedup = estep_scalar.median_s / estep_batched.median_s;
     println!(
-        "| alignment ×RT (accel) | ~3000× | {:.0}× |",
-        rt_factor(frames, rows[1].wall_s)
+        "-> alignment {fps_batched:.0} frames/s vs {fps_scalar:.0} scalar ({align_speedup:.2}x); \
+         estep {ups_batched:.2} utts/s vs {ups_scalar:.2} scalar ({estep_speedup:.2}x)"
     );
-    println!(
-        "| extraction ×RT (accel) | ~10000× | {:.0}× |",
-        rt_factor(frames, rows[3].wall_s)
+
+    let json = format!(
+        "{{\n  \"issue\": 1,\n  \"dims\": {{\"C\": {c}, \"F\": {f}, \"R\": {r}, \
+\"frames\": {n_frames}, \"utts\": {n_utts}, \"top_k\": {top_k}}},\n  \
+\"alignment\": {{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
+\"frames_per_s_scalar\": {fps_scalar:.2}, \"frames_per_s_batched\": {fps_batched:.2}, \
+\"speedup\": {align_speedup:.3}}},\n  \
+\"estep\": {{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
+\"utts_per_s_scalar\": {ups_scalar:.4}, \"utts_per_s_batched\": {ups_batched:.4}, \
+\"speedup\": {estep_speedup:.3}}}\n}}\n",
+        align_scalar.median_s, align_batched.median_s, estep_scalar.median_s, estep_batched.median_s,
     );
-    println!("| align speed-up accel/cpu-ref | — | {align_speedup:.1}× |");
-    println!("| extract speed-up accel/cpu-ref | — | {extract_speedup:.1}× |");
-    println!("| E-step speed-up accel/scalar | 25× (training) | {estep_speedup:.1}× |");
-    println!("| full-iteration speed-up | 25× | {:.1}× |", iter_cpu / iter_dev);
+    std::fs::write("BENCH_1.json", &json)?;
+    println!("wrote BENCH_1.json");
     Ok(())
 }

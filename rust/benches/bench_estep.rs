@@ -1,33 +1,35 @@
-//! Bench: the TVM E-step hot loop — scalar CPU, multithreaded CPU,
-//! and the accelerated `estep` graph (paper's 25×-training claim).
+//! Bench: the TVM E-step hot loop — per-item scalar CPU, batched
+//! GEMM-shaped CPU (single- and multi-threaded), and the accelerated
+//! `estep` graph (paper's 25×-training claim). The accel case is
+//! skipped when `artifacts/` is absent.
 
 use ivector_tv::bench_util::bench;
 use ivector_tv::config::Config;
 use ivector_tv::coordinator::{align_archive_cpu, stats_from_posts};
 use ivector_tv::exec::map_parallel;
-use ivector_tv::frontend::synth::generate_corpus;
-use ivector_tv::gmm::train_ubm;
 use ivector_tv::ivector::{
-    estep_utterance, AccelTvm, EstepAccum, Formulation, TvModel, UttStats,
+    estep_batch_cpu, estep_utterance, AccelTvm, EstepAccum, EstepWorkspace, Formulation,
+    TvModel, UttStats,
 };
 
 fn main() {
     let mut cfg = Config::default_scaled();
     cfg.corpus.n_train_speakers = 24;
     cfg.corpus.utts_per_train_speaker = 6;
-    let corpus = generate_corpus(&cfg.corpus).unwrap();
+    let corpus = ivector_tv::frontend::synth::generate_corpus(&cfg.corpus).unwrap();
     let train = &corpus.train;
-    let (ubm, _) = train_ubm(train, &cfg.ubm, 1).unwrap();
+    let (ubm, _) = ivector_tv::gmm::train_ubm(train, &cfg.ubm, 1).unwrap();
     let workers = ivector_tv::exec::default_workers();
     let posts = align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers);
     let (bw, _) = stats_from_posts(train, &posts, cfg.ubm.components, workers);
     let model = TvModel::init(Formulation::Augmented, &ubm.full, cfg.tvm.rank, 100.0, 3);
     let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &model)).collect();
     let (c, f, r) = (cfg.ubm.components, cfg.feat_dim(), cfg.tvm.rank);
-    println!("estep bench: {} utts, C={c} F={f} R={r}", utts.len());
+    let bu = cfg.tvm.batch_utts.max(1);
+    println!("estep bench: {} utts, C={c} F={f} R={r} BU={bu}", utts.len());
 
     let (tt_si, tt_si_t) = model.precompute();
-    let scalar = bench("estep/cpu-1-thread", 1, 3, || {
+    let scalar = bench("estep/cpu-scalar-1-thread", 1, 3, || {
         let mut acc = EstepAccum::zeros(c, f, r);
         for s in &utts {
             estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
@@ -35,32 +37,54 @@ fn main() {
         acc.count
     });
 
-    let mt = bench("estep/cpu-multithread", 1, 3, || {
+    let consts = model.precompute_consts();
+    let batched = bench("estep/cpu-batched-1-thread", 1, 3, || {
+        let mut acc = EstepAccum::zeros(c, f, r);
+        let mut ws = EstepWorkspace::new(r, bu);
+        for chunk in utts.chunks(bu) {
+            let refs: Vec<&UttStats> = chunk.iter().collect();
+            estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
+        }
+        acc.count
+    });
+    println!(
+        "-> batched vs scalar (1 thread): {:.2}x",
+        scalar.median_s / batched.median_s
+    );
+
+    let mt = bench("estep/cpu-batched-multithread", 1, 3, || {
         let chunk = utts.len().div_ceil(workers);
         let parts = map_parallel(utts.len().div_ceil(chunk), workers, |k| {
             let mut acc = EstepAccum::zeros(c, f, r);
-            for s in &utts[k * chunk..((k + 1) * chunk).min(utts.len())] {
-                estep_utterance(s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+            let mut ws = EstepWorkspace::new(r, bu);
+            let slice = &utts[k * chunk..((k + 1) * chunk).min(utts.len())];
+            for b in slice.chunks(bu) {
+                let refs: Vec<&UttStats> = b.iter().collect();
+                estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
             }
             acc
         });
         parts.len()
     });
 
-    let mut accel = AccelTvm::new("artifacts").unwrap();
-    accel.set_model(&model).unwrap();
-    let dev = bench("estep/accel", 1, 3, || {
-        let mut acc = EstepAccum::zeros(c, f, r);
-        for chunk in utts.chunks(accel.dims.bu) {
-            let refs: Vec<&UttStats> = chunk.iter().collect();
-            let (a, _) = accel.estep_batch(&refs).unwrap();
-            acc.merge(&a);
+    match AccelTvm::new("artifacts") {
+        Ok(mut accel) => {
+            accel.set_model(&model).unwrap();
+            let dev = bench("estep/accel", 1, 3, || {
+                let mut acc = EstepAccum::zeros(c, f, r);
+                for chunk in utts.chunks(accel.dims.bu) {
+                    let refs: Vec<&UttStats> = chunk.iter().collect();
+                    let (a, _) = accel.estep_batch(&refs).unwrap();
+                    acc.merge(&a);
+                }
+                acc.count
+            });
+            println!(
+                "-> accel vs scalar {:.1}x, vs batched multithread {:.1}x",
+                scalar.median_s / dev.median_s,
+                mt.median_s / dev.median_s
+            );
         }
-        acc.count
-    });
-    println!(
-        "-> accel vs scalar {:.1}x, vs multithread {:.1}x",
-        scalar.median_s / dev.median_s,
-        mt.median_s / dev.median_s
-    );
+        Err(e) => println!("estep/accel skipped (no artifacts): {e:#}"),
+    }
 }

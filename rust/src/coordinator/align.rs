@@ -1,8 +1,9 @@
 //! Alignment rounds + Baum-Welch statistics over an archive.
 //!
 //! Two paths compute identical pruned posteriors:
-//! * CPU reference — [`crate::gmm::select_posteriors`] per utterance,
-//!   parallel over utterances;
+//! * CPU — [`crate::gmm::BatchAligner`] scoring frame blocks as one
+//!   matrix product, parallel over utterance chunks (the per-frame
+//!   scalar oracle survives as [`align_archive_cpu_scalar`]);
 //! * accelerated — frames from *all* utterances are packed densely into
 //!   BF-sized device blocks (crossing utterance boundaries, so no
 //!   padding waste) and streamed through the `align_topk` graph.
@@ -10,7 +11,7 @@
 use anyhow::Result;
 
 use crate::exec::map_parallel;
-use crate::gmm::{select_posteriors, DiagGmm, FullGmm};
+use crate::gmm::{select_posteriors_scalar, DiagGmm, FullGmm};
 use crate::io::{FeatArchive, Posting};
 use crate::ivector::AccelTvm;
 use crate::linalg::Mat;
@@ -54,7 +55,9 @@ impl GlobalRawStats {
     }
 }
 
-/// CPU reference alignment of a whole archive (parallel over utts).
+/// CPU alignment of a whole archive through the batched GEMM-shaped
+/// aligner, parallel over utterance chunks: each worker packs the UBM
+/// weights and allocates its scratch once per chunk, not per utterance.
 pub fn align_archive_cpu(
     diag: &DiagGmm,
     full: &FullGmm,
@@ -63,8 +66,31 @@ pub fn align_archive_cpu(
     min_post: f64,
     workers: usize,
 ) -> ArchivePosts {
+    let n = archive.utts.len();
+    let chunk = n.div_ceil(workers.max(1)).max(1);
+    let n_chunks = n.div_ceil(chunk);
+    let chunks = map_parallel(n_chunks, workers, |k| {
+        let mut aligner = crate::gmm::BatchAligner::new(diag, full, top_k, min_post);
+        archive.utts[k * chunk..((k + 1) * chunk).min(n)]
+            .iter()
+            .map(|u| aligner.align_utterance(&u.feats))
+            .collect::<Vec<_>>()
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// The per-frame scalar CPU path — the equivalence oracle and bench
+/// baseline for [`align_archive_cpu`].
+pub fn align_archive_cpu_scalar(
+    diag: &DiagGmm,
+    full: &FullGmm,
+    archive: &FeatArchive,
+    top_k: usize,
+    min_post: f64,
+    workers: usize,
+) -> ArchivePosts {
     map_parallel(archive.utts.len(), workers, |i| {
-        select_posteriors(diag, full, &archive.utts[i].feats, top_k, min_post)
+        select_posteriors_scalar(diag, full, &archive.utts[i].feats, top_k, min_post)
     })
 }
 
@@ -184,6 +210,24 @@ pub(crate) mod tests {
         };
         let (pair, _) = train_ubm(&corpus.train, &ubm_cfg, 1).unwrap();
         (corpus.train, pair)
+    }
+
+    #[test]
+    fn batched_archive_alignment_matches_scalar() {
+        let (arch, ubm) = tiny_setup();
+        let batched = align_archive_cpu(&ubm.diag, &ubm.full, &arch, 5, 0.025, 4);
+        let scalar = align_archive_cpu_scalar(&ubm.diag, &ubm.full, &arch, 5, 0.025, 4);
+        assert_eq!(batched.len(), scalar.len());
+        for (ub, us) in batched.iter().zip(&scalar) {
+            assert_eq!(ub.len(), us.len());
+            for (fb, fs) in ub.iter().zip(us) {
+                assert_eq!(fb.len(), fs.len(), "posting counts differ");
+                for (pb, ps) in fb.iter().zip(fs) {
+                    assert_eq!(pb.idx, ps.idx);
+                    assert!((pb.post - ps.post).abs() < 1e-5);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! The EM training schedule (paper §3.2's five-step loop):
 //!
 //! 1. frame alignment + Baum-Welch statistics with the current UBM;
-//! 2. E-step (device batches via pipelined CPU loaders, or the CPU
-//!    reference path);
+//! 2. E-step (device batches via pipelined CPU loaders, or the batched
+//!    GEMM-shaped CPU path);
 //! 3. M-step: T update, optional Σ update;
 //! 4. optional minimum-divergence re-estimation;
 //! 5. if realignment is scheduled: push the updated bias means back
@@ -15,7 +15,7 @@ use crate::exec::{default_workers, map_parallel, pipeline};
 use crate::gmm::{DiagGmm, FullGmm};
 use crate::io::FeatArchive;
 use crate::ivector::{
-    estep_utterance, min_divergence, mstep, AccelTvm, EstepAccum, Formulation,
+    estep_batch_cpu, min_divergence, mstep, AccelTvm, EstepAccum, EstepWorkspace, Formulation,
     GlobalSecondOrder, TrainVariant, TvModel, UttStats,
 };
 use crate::metrics::Stopwatch;
@@ -150,7 +150,9 @@ pub fn train_tvm_with_stats(
         // step 2: E-step
         let sw = Stopwatch::start();
         let (acc, device_util) = match path {
-            ComputePath::CpuRef => (estep_cpu(&model, &per_utt, workers), None),
+            ComputePath::CpuRef => {
+                (estep_cpu(&model, &per_utt, workers, cfg.tvm.batch_utts), None)
+            }
             ComputePath::Accel => {
                 let a = accel.as_deref_mut().expect("checked above");
                 let (acc, util) = estep_accel(&model, &per_utt, a, cfg.tvm.batch_utts, workers)?;
@@ -256,17 +258,32 @@ fn apply_realignment(
     Ok(())
 }
 
-/// CPU-reference E-step: parallel chunks, merged accumulators.
-fn estep_cpu(model: &TvModel, per_utt: &[BwStats], workers: usize) -> EstepAccum {
-    let (tt_si, tt_si_t) = model.precompute();
+/// Batched CPU E-step: parallel chunks, each worker streaming
+/// `batch_utts`-sized batches through [`estep_batch_cpu`] with a
+/// reusable workspace — structurally identical to the accel path's
+/// batch loop, merged accumulators at the end.
+fn estep_cpu(
+    model: &TvModel,
+    per_utt: &[BwStats],
+    workers: usize,
+    batch_utts: usize,
+) -> EstepAccum {
+    let consts = model.precompute_consts();
     let (c_n, f_dim, r) = (model.num_components(), model.feat_dim(), model.rank());
     let chunk = per_utt.len().div_ceil(workers.max(1)).max(1);
     let n_chunks = per_utt.len().div_ceil(chunk);
+    let bu = batch_utts.max(1);
     let partials = map_parallel(n_chunks, workers, |k| {
         let mut acc = EstepAccum::zeros(c_n, f_dim, r);
-        for bw in &per_utt[k * chunk..((k + 1) * chunk).min(per_utt.len())] {
-            let st = UttStats::from_bw(bw, model);
-            estep_utterance(&st, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut acc));
+        let mut ws = EstepWorkspace::new(r, bu);
+        let slice = &per_utt[k * chunk..((k + 1) * chunk).min(per_utt.len())];
+        for batch in slice.chunks(bu) {
+            // formulation adaptation (centering) per batch, like the
+            // accel path's loader stage
+            let stats: Vec<UttStats> =
+                batch.iter().map(|bw| UttStats::from_bw(bw, model)).collect();
+            let refs: Vec<&UttStats> = stats.iter().collect();
+            estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
         }
         acc
     });

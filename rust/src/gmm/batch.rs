@@ -1,0 +1,253 @@
+//! Batched, GEMM-shaped CPU frame alignment.
+//!
+//! The scalar reference ([`super::select_posteriors_scalar`]) walks one
+//! frame at a time and re-derives `ln v` and `1/v` for every (frame,
+//! component, dim) triple inside `DiagGmm::log_likes`. This module
+//! mirrors what the accelerated `align_topk` graph does on device —
+//! and what `pack_diag_params` feeds it: the diagonal scores of a whole
+//! frame block become one `[x; x²] · Wᵀ` matrix product against a
+//! packed `(C × 2F)` weight matrix whose per-component constants absorb
+//! every log/divide, followed by top-K selection and full-covariance
+//! rescoring of only the K survivors.
+//!
+//! All scratch lives in the aligner, so the per-frame inner loop
+//! allocates nothing beyond the output posting lists.
+
+use crate::io::Posting;
+use crate::linalg::Mat;
+
+use super::select::{prune_posteriors, top_k_into};
+use super::{DiagGmm, FullGmm, LOG_2PI};
+
+/// Frames scored per matrix product. Big enough that the packed weight
+/// matrix is re-read from cache across the block, small enough that the
+/// score block (`BLOCK × C`) stays modest.
+const BLOCK: usize = 128;
+
+/// Shared-dimension panel width for the score product (2F is usually
+/// below this, i.e. a single panel).
+const QB: usize = 512;
+
+/// Batched two-stage aligner with reusable scratch buffers.
+///
+/// Equivalent to the scalar path up to floating-point rounding: the
+/// packed expansion evaluates `x·(m/v) − ½x²/v + const_c` instead of
+/// `−½(x−m)²/v − ½ ln v + ln w_c + …`, which agrees to ~1e-12 relative.
+pub struct BatchAligner<'g> {
+    full: &'g FullGmm,
+    top_k: usize,
+    min_post: f64,
+    dim: usize,
+    /// Packed diagonal score weights (C × 2F): row c = [m/v ; −½/v].
+    w: Mat,
+    /// Per-component constants folding ln w_c, ln v and m²/v.
+    consts: Vec<f64>,
+    /// Augmented frame block [x ; x²] (BLOCK × 2F).
+    aug: Mat,
+    /// Diagonal scores (BLOCK × C).
+    scores: Mat,
+    /// Top-K selection buffer.
+    sel: Vec<u32>,
+    /// Full-covariance log-likes of the selected components.
+    ll_sel: Vec<f64>,
+}
+
+impl<'g> BatchAligner<'g> {
+    /// Pack the diagonal UBM once (the f64 mirror of
+    /// [`crate::ivector::accel::pack_diag_params`]).
+    pub fn new(diag: &DiagGmm, full: &'g FullGmm, top_k: usize, min_post: f64) -> Self {
+        let (c_n, f_dim) = (diag.num_components(), diag.dim());
+        let mut w = Mat::zeros(c_n, 2 * f_dim);
+        let mut consts = vec![0.0; c_n];
+        for c in 0..c_n {
+            let mut const_c =
+                diag.weights[c].max(1e-300).ln() - 0.5 * f_dim as f64 * LOG_2PI;
+            let m = diag.means.row(c);
+            let v = diag.vars.row(c);
+            let wr = w.row_mut(c);
+            for j in 0..f_dim {
+                let vinv = 1.0 / v[j];
+                wr[j] = m[j] * vinv;
+                wr[f_dim + j] = -0.5 * vinv;
+                const_c -= 0.5 * (v[j].ln() + m[j] * m[j] * vinv);
+            }
+            consts[c] = const_c;
+        }
+        Self {
+            full,
+            top_k,
+            min_post,
+            dim: f_dim,
+            w,
+            consts,
+            aug: Mat::zeros(BLOCK, 2 * f_dim),
+            scores: Mat::zeros(BLOCK, c_n),
+            sel: Vec::with_capacity(top_k.min(c_n)),
+            ll_sel: vec![0.0; top_k.min(c_n)],
+        }
+    }
+
+    /// Align a whole utterance, streaming BLOCK-sized frame blocks.
+    pub fn align_utterance(&mut self, feats: &Mat) -> Vec<Vec<Posting>> {
+        assert_eq!(feats.cols(), self.dim, "feature dim mismatch");
+        let mut out = Vec::with_capacity(feats.rows());
+        let mut start = 0;
+        while start < feats.rows() {
+            let n = (feats.rows() - start).min(BLOCK);
+            self.align_block(feats, start, n, &mut out);
+            start += n;
+        }
+        out
+    }
+
+    /// Score + select + rescore + prune one block of `n` frames
+    /// starting at row `start`, appending per-frame postings to `out`.
+    fn align_block(&mut self, feats: &Mat, start: usize, n: usize, out: &mut Vec<Vec<Posting>>) {
+        let f_dim = self.dim;
+        for t in 0..n {
+            let x = feats.row(start + t);
+            let arow = self.aug.row_mut(t);
+            for (j, &xj) in x.iter().enumerate() {
+                arow[j] = xj;
+                arow[f_dim + j] = xj * xj;
+            }
+        }
+        score_rows(&self.aug, n, &self.w, &self.consts, &mut self.scores);
+        for t in 0..n {
+            top_k_into(self.scores.row(t), self.top_k, &mut self.sel);
+            self.ll_sel.resize(self.sel.len(), 0.0);
+            self.full.log_likes_select(feats.row(start + t), &self.sel, &mut self.ll_sel);
+            out.push(prune_posteriors(&self.sel, &self.ll_sel, self.min_post));
+        }
+    }
+}
+
+/// `out[t] = consts + aug[t] · wᵀ` for the first `n_rows` rows, with
+/// the shared dimension panel-blocked so the weight rows are re-read
+/// from cache across the frame sweep.
+fn score_rows(aug: &Mat, n_rows: usize, w: &Mat, consts: &[f64], out: &mut Mat) {
+    debug_assert!(n_rows <= aug.rows() && n_rows <= out.rows());
+    debug_assert_eq!(out.cols(), w.rows());
+    let q = w.cols();
+    for t in 0..n_rows {
+        out.row_mut(t).copy_from_slice(consts);
+    }
+    for qb in (0..q).step_by(QB) {
+        let qe = (qb + QB).min(q);
+        for t in 0..n_rows {
+            let a_seg = &aug.row(t)[qb..qe];
+            let orow = out.row_mut(t);
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o += crate::linalg::dot(a_seg, &w.row(c)[qb..qe]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::select_posteriors_scalar;
+    use super::*;
+    use crate::proptest::{forall, gen_dim};
+    use crate::rng::Rng;
+
+    fn random_ubm(c: usize, f: usize, rng: &mut Rng) -> (DiagGmm, FullGmm) {
+        let diag = DiagGmm {
+            weights: rng.dirichlet(2.0, c),
+            means: Mat::from_fn(c, f, |_, _| 2.0 * rng.normal()),
+            vars: Mat::from_fn(c, f, |_, _| rng.uniform_in(0.3, 2.5)),
+        };
+        let full = FullGmm::from_diag(&diag).unwrap();
+        (diag, full)
+    }
+
+    #[test]
+    fn batched_scores_match_diag_loglikes() {
+        let mut rng = Rng::seed(71);
+        let (diag, full) = random_ubm(9, 4, &mut rng);
+        let feats = Mat::from_fn(30, 4, |_, _| 2.0 * rng.normal());
+        let mut aligner = BatchAligner::new(&diag, &full, 9, 0.0);
+        // score one block through the packed GEMM path
+        let mut ll_ref = vec![0.0; 9];
+        let n = feats.rows();
+        for t in 0..n {
+            let x = feats.row(t);
+            let arow = aligner.aug.row_mut(t);
+            for (j, &xj) in x.iter().enumerate() {
+                arow[j] = xj;
+                arow[4 + j] = xj * xj;
+            }
+        }
+        score_rows(&aligner.aug, n, &aligner.w, &aligner.consts, &mut aligner.scores);
+        for t in 0..n {
+            diag.log_likes(feats.row(t), &mut ll_ref);
+            for c in 0..9 {
+                let got = aligner.scores.get(t, c);
+                assert!(
+                    (got - ll_ref[c]).abs() < 1e-10 * (1.0 + ll_ref[c].abs()),
+                    "t={t} c={c}: {got} vs {}",
+                    ll_ref[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_batched_align_matches_scalar() {
+        forall(
+            7007,
+            32,
+            |rng| {
+                let c = gen_dim(rng, 2, 24);
+                let f = gen_dim(rng, 1, 6);
+                let k = gen_dim(rng, 1, c);
+                // more frames than BLOCK sometimes, to cross block seams
+                let t_len = gen_dim(rng, 1, 300);
+                let (diag, full) = random_ubm(c, f, rng);
+                let feats = Mat::from_fn(t_len, f, |_, _| 2.0 * rng.normal());
+                (diag, full, feats, k)
+            },
+            |(diag, full, feats, k)| {
+                let batched = BatchAligner::new(diag, full, *k, 0.025).align_utterance(feats);
+                let scalar = select_posteriors_scalar(diag, full, feats, *k, 0.025);
+                if batched.len() != scalar.len() {
+                    return Err(format!("frame count {} vs {}", batched.len(), scalar.len()));
+                }
+                for (t, (b, s)) in batched.iter().zip(&scalar).enumerate() {
+                    if b.len() != s.len() {
+                        return Err(format!("frame {t}: {} vs {} postings", b.len(), s.len()));
+                    }
+                    for (pb, ps) in b.iter().zip(s) {
+                        if pb.idx != ps.idx {
+                            return Err(format!("frame {t}: idx {} vs {}", pb.idx, ps.idx));
+                        }
+                        if (pb.post - ps.post).abs() > 1e-5 {
+                            return Err(format!(
+                                "frame {t} idx {}: post {} vs {}",
+                                pb.idx, pb.post, ps.post
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn wrapper_routes_through_batched_path() {
+        let mut rng = Rng::seed(73);
+        let (diag, full) = random_ubm(8, 3, &mut rng);
+        let feats = Mat::from_fn(140, 3, |_, _| rng.normal());
+        let via_wrapper = super::super::select_posteriors(&diag, &full, &feats, 5, 0.025);
+        let via_aligner = BatchAligner::new(&diag, &full, 5, 0.025).align_utterance(&feats);
+        assert_eq!(via_wrapper.len(), via_aligner.len());
+        for (a, b) in via_wrapper.iter().zip(&via_aligner) {
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
+    }
+}

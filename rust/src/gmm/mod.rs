@@ -9,15 +9,22 @@
 //!   diagonal EM → full-covariance EM.
 //! * [`select`] — top-K selection + posterior pruning/renormalization
 //!   (the CPU reference of the accelerated `align_topk` graph).
+//! * [`batch`] — the batched GEMM-shaped CPU aligner that
+//!   [`select_posteriors`] routes through; the per-frame scalar path
+//!   survives as [`select_posteriors_scalar`], the equivalence oracle.
 
+mod batch;
 mod diag;
 mod full;
 mod select;
 mod train;
 
+pub use batch::BatchAligner;
 pub use diag::DiagGmm;
 pub use full::FullGmm;
-pub use select::{prune_posteriors, select_posteriors};
+pub use select::{
+    prune_posteriors, select_posteriors, select_posteriors_scalar, top_k_indices, top_k_into,
+};
 pub use train::{train_ubm, UbmPair};
 
 pub(crate) const LOG_2PI: f64 = 1.8378770664093453;

@@ -16,26 +16,74 @@ use crate::linalg::Mat;
 use super::diag::log_sum_exp;
 use super::{DiagGmm, FullGmm};
 
-/// Indices of the K largest entries of `xs` (order not specified).
+/// Indices of the K largest entries of `xs`, descending by value
+/// (ties broken toward the lower index, matching a stable full sort).
 pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    top_k_into(xs, k, &mut out);
+    out
+}
+
+/// [`top_k_indices`] into a reusable buffer — the per-frame hot path of
+/// the batched aligner allocates nothing.
+///
+/// Uses a fixed-size binary min-heap held in `out` itself: build is
+/// O(K), each of the remaining C−K elements costs O(1) when it loses to
+/// the current K-th best and O(log K) when it displaces it. The old
+/// insertion-shift selection degenerated to O(C·K) shifts per frame on
+/// ascending input (every element displaced the tail); the heap's worst
+/// case is O(C log K).
+pub fn top_k_into(xs: &[f64], k: usize, out: &mut Vec<u32>) {
     let k = k.min(xs.len());
-    // partial selection: maintain the current top-k in a small vec —
-    // for C ≤ a few thousand this beats a full sort.
-    let mut top: Vec<u32> = (0..k as u32).collect();
-    top.sort_by(|&a, &b| xs[b as usize].partial_cmp(&xs[a as usize]).unwrap());
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    out.extend(0..k as u32);
+    for i in (0..k / 2).rev() {
+        sift_down(out, xs, i);
+    }
     for i in k..xs.len() {
-        let v = xs[i];
-        if v > xs[top[k - 1] as usize] {
-            // insert i keeping descending order
-            let mut pos = k - 1;
-            while pos > 0 && v > xs[top[pos - 1] as usize] {
-                pos -= 1;
-            }
-            top.pop();
-            top.insert(pos, i as u32);
+        // strict `>` keeps the earliest index among boundary ties,
+        // matching a stable descending sort
+        if xs[i] > xs[out[0] as usize] {
+            out[0] = i as u32;
+            sift_down(out, xs, 0);
         }
     }
-    top
+    out.sort_unstable_by(|&a, &b| {
+        xs[b as usize].partial_cmp(&xs[a as usize]).unwrap().then(a.cmp(&b))
+    });
+}
+
+/// Heap ordering: among equal values the *higher* index ranks lower,
+/// so it sits at the root and is evicted first — keeping the earliest
+/// indices among ties, exactly like a stable descending sort (relevant
+/// when mixture splitting clones components bit-exactly).
+#[inline]
+fn heap_less(xs: &[f64], a: u32, b: u32) -> bool {
+    let (xa, xb) = (xs[a as usize], xs[b as usize]);
+    xa < xb || (xa == xb && a > b)
+}
+
+/// Restore the min-heap property under `heap[i]` (keyed by `xs`).
+fn sift_down(heap: &mut [u32], xs: &[f64], mut i: usize) {
+    loop {
+        let l = 2 * i + 1;
+        if l >= heap.len() {
+            break;
+        }
+        let mut m = if heap_less(xs, heap[l], heap[i]) { l } else { i };
+        let r = l + 1;
+        if r < heap.len() && heap_less(xs, heap[r], heap[m]) {
+            m = r;
+        }
+        if m == i {
+            break;
+        }
+        heap.swap(i, m);
+        i = m;
+    }
 }
 
 /// Softmax over selected log-likes, prune `< min_post`, renormalize.
@@ -69,8 +117,23 @@ pub fn prune_posteriors(select: &[u32], log_likes: &[f64], min_post: f64) -> Vec
 }
 
 /// Full two-stage alignment of one utterance (frames × F): diag top-K →
-/// full-cov refinement → pruning. The CPU reference path.
+/// full-cov refinement → pruning. Thin wrapper over the batched
+/// GEMM-shaped aligner ([`super::BatchAligner`]), so every caller and
+/// test of this entry point exercises the batched kernel.
 pub fn select_posteriors(
+    diag: &DiagGmm,
+    full: &FullGmm,
+    feats: &Mat,
+    top_k: usize,
+    min_post: f64,
+) -> Vec<Vec<Posting>> {
+    super::BatchAligner::new(diag, full, top_k, min_post).align_utterance(feats)
+}
+
+/// The per-frame scalar reference: one `diag.log_likes` pass per frame.
+/// Kept as the equivalence oracle for the batched aligner and as the
+/// bench baseline — not a hot path.
+pub fn select_posteriors_scalar(
     diag: &DiagGmm,
     full: &FullGmm,
     feats: &Mat,
@@ -103,6 +166,34 @@ mod tests {
         let mut got = top_k_indices(&xs, 3);
         got.sort();
         assert_eq!(got, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn top_k_sorted_ascending_input() {
+        // the old insertion-shift selection degenerated on this shape;
+        // the heap must stay correct (and fast) here
+        let xs: Vec<f64> = (0..500).map(|i| i as f64).collect();
+        let got = top_k_indices(&xs, 20);
+        let want: Vec<u32> = (480..500).rev().map(|i| i as u32).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn top_k_returns_descending_order() {
+        let xs = [0.1, 5.0, -2.0, 3.0, 4.0, 5.0];
+        // descending by value; tie at 5.0 keeps the lower index first
+        assert_eq!(top_k_indices(&xs, 4), vec![1, 5, 4, 3]);
+    }
+
+    #[test]
+    fn top_k_boundary_tie_evicts_highest_index() {
+        // ties straddling the K boundary must keep the earliest index,
+        // matching a stable descending sort — including when the tied
+        // entry is *evicted* from the heap, not just never inserted
+        let xs = [5.0, 5.0, 6.0];
+        assert_eq!(top_k_indices(&xs, 2), vec![2, 0]);
+        let xs2 = [5.0, 3.0, 5.0, 6.0];
+        assert_eq!(top_k_indices(&xs2, 2), vec![3, 0]);
     }
 
     #[test]

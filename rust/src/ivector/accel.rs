@@ -155,19 +155,17 @@ impl AccelTvm {
     }
 
     /// Run the E-step graph on one utterance batch (≤ BU) and return
-    /// the partial accumulator plus the batch φ rows.
+    /// the partial accumulator plus the batch φ rows. The per-iteration
+    /// constants set by [`AccelTvm::set_model`] are passed by reference,
+    /// eliminating the per-batch `Tensor` buffer clones (the remaining
+    /// per-batch host→Literal conversion is a runtime-API limit — see
+    /// ROADMAP "device-resident constants").
     pub fn estep_batch(&self, batch: &[&UttStats]) -> Result<(EstepAccum, Mat)> {
         let (c, f, r) = (self.dims.c, self.dims.f, self.dims.r);
+        let graph = self.rt.graph("estep")?;
         let (n_t, f_t, m_t) = self.pack_batch(batch);
         let (tt_si, tt_si_t, prior) = self.constants()?;
-        let out = self.rt.graph("estep")?.run(&[
-            n_t,
-            f_t,
-            m_t,
-            tt_si.clone(),
-            tt_si_t.clone(),
-            prior.clone(),
-        ])?;
+        let out = graph.run_refs(&[&n_t, &f_t, &m_t, tt_si, tt_si_t, prior])?;
         // unpack: acc_a (C,R,R), acc_b (C,F,R), acc_h (R), acc_hh (R,R),
         // count (), phi (BU, R)
         let mut acc = EstepAccum::zeros(c, f, r);
@@ -195,15 +193,10 @@ impl AccelTvm {
     /// (posterior means minus the prior mean), one row per input.
     pub fn extract_batch(&self, batch: &[&UttStats], prior_mean: &[f64]) -> Result<Mat> {
         let r = self.dims.r;
+        let graph = self.rt.graph("extract")?;
         let (n_t, f_t, _m) = self.pack_batch(batch);
         let (tt_si, tt_si_t, prior) = self.constants()?;
-        let out = self.rt.graph("extract")?.run(&[
-            n_t,
-            f_t,
-            tt_si.clone(),
-            tt_si_t.clone(),
-            prior.clone(),
-        ])?;
+        let out = graph.run_refs(&[&n_t, &f_t, tt_si, tt_si_t, prior])?;
         let phi_all = out[0].to_f64()?;
         let mut iv = Mat::zeros(batch.len(), r);
         for bi in 0..batch.len() {
@@ -307,12 +300,15 @@ impl<'rt> AccelAligner<'rt> {
                 flat[t * f + j] = v as f32;
             }
         }
-        let out = self.rt.graph("align_topk")?.run(&[
-            Tensor::from_f32(flat, &[bf, f]),
-            self.diag_w.clone(),
-            self.diag_const.clone(),
-            self.full_w.clone(),
-            self.full_const.clone(),
+        // packed GMM weights are built once in `new` and borrowed per
+        // block — no per-block clones of the (C, F + F²) tensors
+        let frames_t = Tensor::from_f32(flat, &[bf, f]);
+        let out = self.rt.graph("align_topk")?.run_refs(&[
+            &frames_t,
+            &self.diag_w,
+            &self.diag_const,
+            &self.full_w,
+            &self.full_const,
         ])?;
         let posts = out[0].as_f32()?;
         let idx = out[1].as_i32()?;

@@ -1,11 +1,26 @@
-//! E-step (paper §3 step 2, eqs. 3–4) — CPU reference path.
+//! E-step (paper §3 step 2, eqs. 3–4) — CPU paths.
 //!
 //! Per utterance: posterior precision `L(u) = I + Σ_c n_c TᵀΣ⁻¹T|_c`,
 //! posterior mean `φ(u) = L⁻¹(p + Σ_c TᵀΣ⁻¹ f_c)`, posterior
 //! covariance `Φ(u) = L⁻¹`, accumulated into the M-step and
 //! minimum-divergence sufficient statistics.
+//!
+//! Two implementations share the math:
+//!
+//! * [`estep_utterance`] — the per-item scalar reference (one utterance,
+//!   `outer()` temporaries), kept as the equivalence oracle;
+//! * [`estep_batch_cpu`] — the batched GEMM-shaped kernel the trainer
+//!   and extractor run: `Σ_c TᵀΣ⁻¹ f_c` for a whole utterance batch is
+//!   one panel-blocked `(U × CF)·(CF × R)` product against
+//!   [`EstepConsts::tt_si_flat`], `L` is assembled by a single packed
+//!   GEMV over [`EstepConsts::tt_si_t_packed`] (mirroring the device
+//!   graph's packed constants), and all accumulator updates are
+//!   in-place rank-1 kernels with buffers owned by [`EstepWorkspace`].
 
-use crate::linalg::{outer, Cholesky, Mat};
+use crate::linalg::{
+    axpy, dot, outer, sym_pack_into, sym_packed_len, sym_unpack_eye_into, sym_weighted_sum,
+    Cholesky, Mat,
+};
 
 use super::model::{Formulation, TvModel};
 
@@ -75,6 +90,164 @@ impl EstepAccum {
         self.hh.add_scaled(1.0, &other.hh);
         self.count += other.count;
     }
+}
+
+/// Per-iteration E-step constants in the batched (GEMM-friendly)
+/// layout — the CPU mirror of what `AccelTvm::set_model` uploads.
+/// Built once per EM iteration via [`TvModel::precompute_consts`].
+#[derive(Debug, Clone)]
+pub struct EstepConsts {
+    /// Components C.
+    pub c: usize,
+    /// Feature dim F.
+    pub f: usize,
+    /// Rank R.
+    pub r: usize,
+    /// `(R × C·F)`: row i holds `[TᵀΣ⁻¹]_c[i, ·]` for ascending c —
+    /// the flat layout that turns `Σ_c TᵀΣ⁻¹ f_c` into one GEMV
+    /// against `vec(f)` (and a GEMM over an utterance batch).
+    pub tt_si_flat: Mat,
+    /// `(C × R(R+1)/2)`: packed upper triangles of `TᵀΣ⁻¹T|_c`, so
+    /// `L − I = Σ_c n_c M_c` is a single packed GEMV.
+    pub tt_si_t_packed: Mat,
+    /// Prior mean p (R).
+    pub prior_mean: Vec<f64>,
+}
+
+impl EstepConsts {
+    /// Repack the per-component constants of [`TvModel::precompute`].
+    pub fn from_parts(tt_si: &[Mat], tt_si_t: &[Mat], prior_mean: &[f64]) -> Self {
+        let c_n = tt_si.len();
+        let r = prior_mean.len();
+        let f_dim = if c_n > 0 { tt_si[0].cols() } else { 0 };
+        let mut flat = Mat::zeros(r, c_n * f_dim);
+        for (c, m) in tt_si.iter().enumerate() {
+            debug_assert_eq!((m.rows(), m.cols()), (r, f_dim));
+            for i in 0..r {
+                flat.row_mut(i)[c * f_dim..(c + 1) * f_dim].copy_from_slice(m.row(i));
+            }
+        }
+        let mut packed = Mat::zeros(c_n, sym_packed_len(r));
+        for (c, m) in tt_si_t.iter().enumerate() {
+            sym_pack_into(m, packed.row_mut(c));
+        }
+        Self {
+            c: c_n,
+            f: f_dim,
+            r,
+            tt_si_flat: flat,
+            tt_si_t_packed: packed,
+            prior_mean: prior_mean.to_vec(),
+        }
+    }
+}
+
+/// Reusable scratch for [`estep_batch_cpu`]: one per worker thread, so
+/// the batch loop allocates nothing but the returned φ matrix.
+#[derive(Debug, Clone)]
+pub struct EstepWorkspace {
+    /// Right-hand sides `p + TᵀΣ⁻¹ vec(f)` (BU × R).
+    rhs: Mat,
+    /// Packed `L − I` accumulator (R(R+1)/2).
+    l_packed: Vec<f64>,
+    /// Assembled precision L (R × R).
+    l_mat: Mat,
+    /// Posterior second moment `Φ + φφᵀ` of the current utterance.
+    cov: Mat,
+    /// Batch capacity.
+    bu: usize,
+}
+
+impl EstepWorkspace {
+    pub fn new(r: usize, bu: usize) -> Self {
+        Self {
+            rhs: Mat::zeros(bu, r),
+            l_packed: vec![0.0; sym_packed_len(r)],
+            l_mat: Mat::zeros(r, r),
+            cov: Mat::zeros(r, r),
+            bu,
+        }
+    }
+
+    /// Batch capacity this workspace was sized for.
+    pub fn capacity(&self) -> usize {
+        self.bu
+    }
+}
+
+/// Shared-dimension panel width for the rhs GEMM: bounds the slice of
+/// `tt_si_flat` touched per pass so the panel stays cache-resident
+/// across the utterance sweep instead of re-streaming all R·C·F weights
+/// per utterance.
+const RHS_QB: usize = 256;
+
+/// Batched E-step over a slice of utterances — the CPU structural twin
+/// of `AccelTvm::estep_batch`. Returns the batch φ rows
+/// (`batch.len() × R`) and, when `acc` is given, accumulates the
+/// M-step/min-div statistics exactly like the per-item reference.
+///
+/// Matches [`estep_utterance`] to floating-point rounding (~1e-13
+/// relative) with one caveat: the reference skips components with
+/// `n_c = 0` in the rhs sum, while the GEMM cannot — so the two agree
+/// only when `f_c = 0` whenever `n_c = 0`, which is guaranteed for
+/// statistics accumulated from posteriors.
+pub fn estep_batch_cpu(
+    batch: &[&UttStats],
+    consts: &EstepConsts,
+    ws: &mut EstepWorkspace,
+    mut acc: Option<&mut EstepAccum>,
+) -> Mat {
+    let (c_n, f_dim, r) = (consts.c, consts.f, consts.r);
+    let u_n = batch.len();
+    assert!(u_n <= ws.bu, "batch {} exceeds workspace capacity {}", u_n, ws.bu);
+    let cf = c_n * f_dim;
+
+    // rhs = p + TᵀΣ⁻¹ · vec(f): one panel-blocked GEMM over the batch;
+    // each weight panel is read from memory once per batch, not once
+    // per utterance.
+    for u in 0..u_n {
+        ws.rhs.row_mut(u).copy_from_slice(&consts.prior_mean);
+    }
+    for qb in (0..cf).step_by(RHS_QB) {
+        let qe = (qb + RHS_QB).min(cf);
+        for (u, st) in batch.iter().enumerate() {
+            debug_assert_eq!(st.f.as_slice().len(), cf, "stats dims mismatch");
+            let f_seg = &st.f.as_slice()[qb..qe];
+            let rrow = ws.rhs.row_mut(u);
+            for (i, rv) in rrow.iter_mut().enumerate() {
+                *rv += dot(f_seg, &consts.tt_si_flat.row(i)[qb..qe]);
+            }
+        }
+    }
+
+    // per-utterance: packed L assembly, solve, in-place accumulation
+    let mut phi_out = Mat::zeros(u_n, r);
+    for (u, st) in batch.iter().enumerate() {
+        debug_assert_eq!(st.n.len(), c_n, "stats dims mismatch");
+        sym_weighted_sum(&consts.tt_si_t_packed, &st.n, &mut ws.l_packed);
+        sym_unpack_eye_into(&ws.l_packed, &mut ws.l_mat);
+        let chol = Cholesky::new_regularized(&ws.l_mat).0;
+        let phi_row = phi_out.row_mut(u);
+        phi_row.copy_from_slice(ws.rhs.row(u));
+        chol.solve_vec_in_place(phi_row);
+
+        if let Some(acc) = acc.as_deref_mut() {
+            chol.inverse_into(&mut ws.cov); // Φ
+            let phi_u = phi_out.row(u);
+            ws.cov.rank1_update(1.0, phi_u, phi_u); // Φ + φφᵀ
+            for c in 0..c_n {
+                let w = st.n[c];
+                if w != 0.0 {
+                    acc.a[c].add_scaled(w, &ws.cov);
+                    acc.b[c].rank1_update(1.0, st.f.row(c), phi_u);
+                }
+            }
+            axpy(1.0, phi_u, &mut acc.h);
+            acc.hh.add_scaled(1.0, &ws.cov);
+            acc.count += 1.0;
+        }
+    }
+    phi_out
 }
 
 /// E-step for one utterance; returns φ and accumulates into `acc`.
@@ -231,6 +404,126 @@ mod tests {
         assert!(a1.hh.approx_eq(&joint.hh, 1e-10));
         for c in 0..3 {
             assert!(a1.a[c].approx_eq(&joint.a[c], 1e-10));
+        }
+    }
+
+    #[test]
+    fn prop_batched_estep_matches_per_item_reference() {
+        use crate::proptest::{forall, gen_dim};
+        forall(
+            7117,
+            24,
+            |rng| {
+                let c = gen_dim(rng, 1, 6);
+                let f = gen_dim(rng, 1, 4);
+                let r = gen_dim(rng, 1, 6);
+                let n_utts = gen_dim(rng, 1, 9);
+                let ubm = tiny_ubm(c, f, rng.below(1 << 30) as u64 + 1);
+                let model = TvModel::init(Formulation::Augmented, &ubm, r, 10.0, 5);
+                // n > 0 everywhere: the reference skips n_c = 0 in the
+                // rhs, the GEMM cannot (valid stats have f_c = 0 there)
+                let stats: Vec<UttStats> = (0..n_utts)
+                    .map(|_| UttStats {
+                        n: (0..c).map(|_| rng.uniform_in(0.1, 30.0)).collect(),
+                        f: Mat::from_fn(c, f, |_, _| 3.0 * rng.normal()),
+                    })
+                    .collect();
+                (model, stats)
+            },
+            |(model, stats)| {
+                let (c, f, r) =
+                    (model.num_components(), model.feat_dim(), model.rank());
+                let (tt_si, tt_si_t) = model.precompute();
+                let mut ref_acc = EstepAccum::zeros(c, f, r);
+                let mut ref_phi = Mat::zeros(stats.len(), r);
+                for (u, s) in stats.iter().enumerate() {
+                    let phi = estep_utterance(
+                        s, &tt_si, &tt_si_t, &model.prior_mean, Some(&mut ref_acc),
+                    );
+                    ref_phi.row_mut(u).copy_from_slice(&phi);
+                }
+
+                let consts = model.precompute_consts();
+                let mut ws = EstepWorkspace::new(r, stats.len());
+                let refs: Vec<&UttStats> = stats.iter().collect();
+                let mut acc = EstepAccum::zeros(c, f, r);
+                let phi = estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut acc));
+
+                let tol = 1e-10 * (1.0 + ref_phi.max_abs());
+                if !phi.approx_eq(&ref_phi, tol) {
+                    return Err(format!(
+                        "phi deviates by {}",
+                        phi.sub(&ref_phi).max_abs()
+                    ));
+                }
+                if acc.count != ref_acc.count {
+                    return Err("count mismatch".into());
+                }
+                for ci in 0..c {
+                    let ta = 1e-10 * (1.0 + ref_acc.a[ci].max_abs());
+                    if !acc.a[ci].approx_eq(&ref_acc.a[ci], ta) {
+                        return Err(format!(
+                            "A[{ci}] deviates by {}",
+                            acc.a[ci].sub(&ref_acc.a[ci]).max_abs()
+                        ));
+                    }
+                    let tb = 1e-10 * (1.0 + ref_acc.b[ci].max_abs());
+                    if !acc.b[ci].approx_eq(&ref_acc.b[ci], tb) {
+                        return Err(format!(
+                            "B[{ci}] deviates by {}",
+                            acc.b[ci].sub(&ref_acc.b[ci]).max_abs()
+                        ));
+                    }
+                }
+                let th = 1e-10 * (1.0 + ref_acc.hh.max_abs());
+                if !acc.hh.approx_eq(&ref_acc.hh, th) {
+                    return Err("hh deviates".into());
+                }
+                for (x, y) in acc.h.iter().zip(&ref_acc.h) {
+                    crate::proptest::close(*x, *y, 1e-10, "h")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn batched_estep_split_batches_match_single_batch() {
+        // batching boundaries must not change the accumulated result
+        let ubm = tiny_ubm(4, 3, 91);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 5, 10.0, 2);
+        let mut rng = Rng::seed(23);
+        let stats: Vec<UttStats> = (0..7).map(|_| random_stats(4, 3, &mut rng)).collect();
+        let consts = model.precompute_consts();
+
+        let refs: Vec<&UttStats> = stats.iter().collect();
+        let mut ws = EstepWorkspace::new(5, 7);
+        let mut joint = EstepAccum::zeros(4, 3, 5);
+        estep_batch_cpu(&refs, &consts, &mut ws, Some(&mut joint));
+
+        let mut ws2 = EstepWorkspace::new(5, 4);
+        let mut split = EstepAccum::zeros(4, 3, 5);
+        for chunk in refs.chunks(4) {
+            estep_batch_cpu(chunk, &consts, &mut ws2, Some(&mut split));
+        }
+        assert_eq!(split.count, joint.count);
+        assert!(split.hh.approx_eq(&joint.hh, 1e-12));
+        for c in 0..4 {
+            assert!(split.a[c].approx_eq(&joint.a[c], 1e-12));
+            assert!(split.b[c].approx_eq(&joint.b[c], 1e-12));
+        }
+    }
+
+    #[test]
+    fn batched_estep_zero_stats_give_prior_mean() {
+        let ubm = tiny_ubm(3, 2, 5);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 4, 100.0, 1);
+        let consts = model.precompute_consts();
+        let stats = UttStats { n: vec![0.0; 3], f: Mat::zeros(3, 2) };
+        let mut ws = EstepWorkspace::new(4, 1);
+        let phi = estep_batch_cpu(&[&stats], &consts, &mut ws, None);
+        for (a, b) in phi.row(0).iter().zip(&model.prior_mean) {
+            assert!((a - b).abs() < 1e-10);
         }
     }
 

@@ -9,24 +9,41 @@
 use crate::exec::map_parallel;
 use crate::linalg::Mat;
 
-use super::estep::{estep_utterance, UttStats};
+use super::estep::{estep_batch_cpu, EstepWorkspace, UttStats};
 use super::model::TvModel;
 
+/// Utterances per batch of the batched CPU extractor. Batch boundaries
+/// are a function of the input only (not the worker count), so results
+/// are identical for any parallelism.
+const EXTRACT_BATCH: usize = 32;
+
 /// Extract i-vectors for a list of utterance stats (parallel over
-/// utterances). Returns an (N × R) matrix, one i-vector per row.
+/// batches, each batch one GEMM-shaped [`estep_batch_cpu`] call).
+/// Returns an (N × R) matrix, one i-vector per row.
 pub fn extract_cpu(model: &TvModel, stats: &[UttStats], workers: usize) -> Mat {
-    let (tt_si, tt_si_t) = model.precompute();
+    let consts = model.precompute_consts();
     let r = model.rank();
-    let rows = map_parallel(stats.len(), workers.max(1), |i| {
-        let mut phi = estep_utterance(&stats[i], &tt_si, &tt_si_t, &model.prior_mean, None);
-        for (x, p) in phi.iter_mut().zip(&model.prior_mean) {
-            *x -= p;
+    let n_batches = stats.len().div_ceil(EXTRACT_BATCH);
+    let blocks = map_parallel(n_batches, workers.max(1), |k| {
+        let lo = k * EXTRACT_BATCH;
+        let hi = (lo + EXTRACT_BATCH).min(stats.len());
+        let refs: Vec<&UttStats> = stats[lo..hi].iter().collect();
+        let mut ws = EstepWorkspace::new(r, refs.len());
+        let mut phi = estep_batch_cpu(&refs, &consts, &mut ws, None);
+        for u in 0..phi.rows() {
+            for (x, p) in phi.row_mut(u).iter_mut().zip(&consts.prior_mean) {
+                *x -= p;
+            }
         }
         phi
     });
     let mut out = Mat::zeros(stats.len(), r);
-    for (i, row) in rows.into_iter().enumerate() {
-        out.row_mut(i).copy_from_slice(&row);
+    let mut row = 0;
+    for block in blocks {
+        for u in 0..block.rows() {
+            out.row_mut(row).copy_from_slice(block.row(u));
+            row += 1;
+        }
     }
     out
 }
@@ -64,6 +81,35 @@ mod tests {
         assert!(a.approx_eq(&b, 1e-12));
         assert_eq!(a.rows(), 10);
         assert_eq!(a.cols(), 5);
+    }
+
+    #[test]
+    fn batched_extraction_matches_per_item_reference() {
+        let ubm = tiny_ubm(4, 3, 83);
+        let model = TvModel::init(Formulation::Augmented, &ubm, 5, 20.0, 11);
+        let mut rng = Rng::seed(7);
+        // more utterances than one EXTRACT_BATCH to cross a boundary
+        let stats: Vec<UttStats> = (0..(EXTRACT_BATCH + 5))
+            .map(|_| UttStats {
+                n: (0..4).map(|_| rng.uniform_in(0.5, 30.0)).collect(),
+                f: crate::linalg::Mat::from_fn(4, 3, |_, _| rng.normal()),
+            })
+            .collect();
+        let got = extract_cpu(&model, &stats, 3);
+        let (tt_si, tt_si_t) = model.precompute();
+        for (u, s) in stats.iter().enumerate() {
+            let phi = super::super::estep::estep_utterance(
+                s, &tt_si, &tt_si_t, &model.prior_mean, None,
+            );
+            for j in 0..5 {
+                let want = phi[j] - model.prior_mean[j];
+                assert!(
+                    (got.get(u, j) - want).abs() < 1e-9 * (1.0 + want.abs()),
+                    "u={u} j={j}: {} vs {want}",
+                    got.get(u, j)
+                );
+            }
+        }
     }
 
     #[test]

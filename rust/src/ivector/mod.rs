@@ -22,7 +22,9 @@ mod model;
 mod mstep;
 
 pub use accel::AccelTvm;
-pub use estep::{estep_utterance, EstepAccum, UttStats};
+pub use estep::{
+    estep_batch_cpu, estep_utterance, EstepAccum, EstepConsts, EstepWorkspace, UttStats,
+};
 pub use extract::extract_cpu;
 pub use mindiv::min_divergence;
 pub use model::{Formulation, TrainVariant, TvModel};

@@ -176,6 +176,15 @@ impl TvModel {
         (tt_si, tt_si_t)
     }
 
+    /// The E-step constants in the batched layout consumed by
+    /// [`super::estep::estep_batch_cpu`]: flat `TᵀΣ⁻¹` plus packed
+    /// `TᵀΣ⁻¹T` — the CPU mirror of the device `precompute` graph's
+    /// packed outputs. Rebuild after every parameter update.
+    pub fn precompute_consts(&self) -> super::estep::EstepConsts {
+        let (tt_si, tt_si_t) = self.precompute();
+        super::estep::EstepConsts::from_parts(&tt_si, &tt_si_t, &self.prior_mean)
+    }
+
     /// The model's current bias supervector per component (C × F):
     /// standard → `means`; augmented → first column of T_c times p[0]
     /// (paper §3.2: "take the first columns of matrices T_c and

@@ -69,10 +69,17 @@ impl Cholesky {
 
     /// Solve `A x = b` for one right-hand side.
     pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
-        let n = self.l.rows();
-        assert_eq!(b.len(), n);
-        // forward: L y = b
         let mut y = b.to_vec();
+        self.solve_vec_in_place(&mut y);
+        y
+    }
+
+    /// Solve `A x = b` in place (no allocation) — the hot-path variant
+    /// used by the batched E-step workspaces.
+    pub fn solve_vec_in_place(&self, y: &mut [f64]) {
+        let n = self.l.rows();
+        assert_eq!(y.len(), n);
+        // forward: L y = b
         for i in 0..n {
             for k in 0..i {
                 y[i] -= self.l.get(i, k) * y[k];
@@ -86,7 +93,6 @@ impl Cholesky {
             }
             y[i] /= self.l.get(i, i);
         }
-        y
     }
 
     /// Solve `A X = B` column-block right-hand side.
@@ -104,9 +110,24 @@ impl Cholesky {
 
     /// `A⁻¹` (SPD inverse).
     pub fn inverse(&self) -> Mat {
-        let mut inv = self.solve_mat(&Mat::eye(self.l.rows()));
-        inv.symmetrize();
+        let mut inv = Mat::zeros(self.l.rows(), self.l.rows());
+        self.inverse_into(&mut inv);
         inv
+    }
+
+    /// `out = A⁻¹` into a caller-owned buffer, solving per unit column
+    /// with one reused scratch vector (the workspace-friendly variant).
+    pub fn inverse_into(&self, out: &mut Mat) {
+        let n = self.l.rows();
+        assert_eq!((out.rows(), out.cols()), (n, n), "inverse_into out dims");
+        let mut col = vec![0.0; n];
+        for j in 0..n {
+            col.fill(0.0);
+            col[j] = 1.0;
+            self.solve_vec_in_place(&mut col);
+            out.set_col(j, &col);
+        }
+        out.symmetrize();
     }
 
     /// `log |A|`.

@@ -1,5 +1,16 @@
 //! The dense row-major f64 matrix type.
 
+/// k-panel height for the blocked matmul: the panel of `B` rows kept
+/// hot while streaming the output.
+const MM_KB: usize = 64;
+/// j-panel width for the blocked matmul: `MM_KB × MM_JB` f64s ≈ 128 KiB
+/// of `B`, sized to stay resident in L2 across the `i` sweep.
+const MM_JB: usize = 256;
+/// Shared-dimension panel for the dot-product-shaped kernels
+/// (`matmul_nt_into`): bounds the slice of every `other` row touched
+/// per pass so the whole row panel fits in cache.
+const NT_QB: usize = 512;
+
 /// Dense row-major f64 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
@@ -136,8 +147,44 @@ impl Mat {
         out
     }
 
-    /// Matrix product `self · other` (ikj loop order, cache-friendly).
+    /// Matrix product `self · other` — cache-blocked i-k-j kernel.
+    ///
+    /// Panels of `other` (`MM_KB` rows × `MM_JB` cols) are swept over
+    /// every output row, so each panel is loaded from memory once per
+    /// `i` sweep instead of once per scalar. For every output element
+    /// the k-contributions are still added in ascending order, so the
+    /// result is bit-identical to [`Mat::matmul_naive`].
     pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let n = other.cols;
+        let kk = self.cols;
+        for kb in (0..kk).step_by(MM_KB) {
+            let ke = (kb + MM_KB).min(kk);
+            for jb in (0..n).step_by(MM_JB) {
+                let je = (jb + MM_JB).min(n);
+                for i in 0..self.rows {
+                    let a_row = &self.data[i * kk..(i + 1) * kk];
+                    let out_row = &mut out.data[i * n + jb..i * n + je];
+                    for k in kb..ke {
+                        let aik = a_row[k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let b_seg = &other.data[k * n + jb..k * n + je];
+                        for (o, &b) in out_row.iter_mut().zip(b_seg) {
+                            *o += aik * b;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The unblocked ikj reference kernel — kept as the equivalence
+    /// oracle for the blocked [`Mat::matmul`] and as a bench baseline.
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dims {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
         let mut out = Mat::zeros(self.rows, other.cols);
         let n = other.cols;
@@ -159,15 +206,31 @@ impl Mat {
 
     /// `self · otherᵀ` without materializing the transpose.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_nt dims");
         let mut out = Mat::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            for j in 0..other.rows {
-                out.data[i * other.rows + j] = super::dot(a_row, other.row(j));
+        self.matmul_nt_into(other, &mut out);
+        out
+    }
+
+    /// `out = self · otherᵀ` into a caller-owned buffer (no allocation)
+    /// with the shared dimension processed in cache-sized panels: the
+    /// panel of `other` rows is re-read from cache, not memory, across
+    /// the `self` row sweep.
+    pub fn matmul_nt_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.cols, "matmul_nt dims");
+        assert_eq!((out.rows, out.cols), (self.rows, other.rows), "matmul_nt_into out dims");
+        out.fill(0.0);
+        let q = self.cols;
+        let p = other.rows;
+        for qb in (0..q).step_by(NT_QB) {
+            let qe = (qb + NT_QB).min(q);
+            for i in 0..self.rows {
+                let a_seg = &self.data[i * q + qb..i * q + qe];
+                let out_row = &mut out.data[i * p..(i + 1) * p];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    *o += super::dot(a_seg, &other.data[j * q + qb..j * q + qe]);
+                }
             }
         }
-        out
     }
 
     /// `selfᵀ · other` without materializing the transpose.
@@ -210,6 +273,38 @@ impl Mat {
             }
         }
         out
+    }
+
+    /// Matrix–vector product into a caller-owned buffer (no allocation).
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(self.cols, v.len(), "matvec dims");
+        assert_eq!(out.len(), self.rows, "matvec out dims");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = super::dot(self.row(i), v);
+        }
+    }
+
+    /// Rank-1 update `self += alpha · a bᵀ` in place — the ger/syr-style
+    /// kernel that replaces `outer()` temporaries in the E-step
+    /// accumulators (pass `a == b` for the symmetric `φφᵀ` case).
+    pub fn rank1_update(&mut self, alpha: f64, a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), self.rows, "rank1 a dim");
+        assert_eq!(b.len(), self.cols, "rank1 b dim");
+        for (i, &ai) in a.iter().enumerate() {
+            let w = alpha * ai;
+            if w == 0.0 {
+                continue;
+            }
+            let row = self.row_mut(i);
+            for (r, &bj) in row.iter_mut().zip(b) {
+                *r += w * bj;
+            }
+        }
+    }
+
+    /// Fill every element with `v`.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
     }
 
     /// Elementwise `self += alpha * other`.
@@ -321,6 +416,80 @@ mod tests {
         for (x, y) in got_t.iter().zip(&want_t) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn prop_blocked_matmul_matches_naive() {
+        // dims straddle the panel sizes so the blocked kernel exercises
+        // both interior and ragged panels; the k-order is preserved per
+        // output element, so the match is exact, not approximate.
+        crate::proptest::forall(
+            707,
+            24,
+            |rng| {
+                let m = crate::proptest::gen_dim(rng, 1, 90);
+                let k = crate::proptest::gen_dim(rng, 1, 150);
+                let n = crate::proptest::gen_dim(rng, 1, 300);
+                let a = crate::proptest::gen_mat(rng, m, k, 1.0);
+                let b = crate::proptest::gen_mat(rng, k, n, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let blocked = a.matmul(b);
+                let naive = a.matmul_naive(b);
+                if blocked.approx_eq(&naive, 0.0) {
+                    Ok(())
+                } else {
+                    Err(format!("blocked deviates by {}", blocked.sub(&naive).max_abs()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_matmul_nt_into_matches_matmul() {
+        crate::proptest::forall(
+            808,
+            24,
+            |rng| {
+                let m = crate::proptest::gen_dim(rng, 1, 20);
+                let q = crate::proptest::gen_dim(rng, 1, 700); // straddles NT_QB
+                let p = crate::proptest::gen_dim(rng, 1, 20);
+                let a = crate::proptest::gen_mat(rng, m, q, 1.0);
+                let b = crate::proptest::gen_mat(rng, p, q, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let mut out = Mat::zeros(a.rows(), b.rows());
+                a.matmul_nt_into(b, &mut out);
+                let want = a.matmul(&b.t());
+                if out.approx_eq(&want, 1e-9 * (1.0 + want.max_abs())) {
+                    Ok(())
+                } else {
+                    Err(format!("deviates by {}", out.sub(&want).max_abs()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rank1_update_matches_outer() {
+        let a = [1.0, 0.0, -2.0];
+        let b = [3.0, 4.0];
+        let mut m = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let mut want = m.clone();
+        want.add_scaled(0.5, &crate::linalg::outer(&a, &b));
+        m.rank1_update(0.5, &a, &b);
+        assert!(m.approx_eq(&want, 1e-15));
+    }
+
+    #[test]
+    fn matvec_into_matches_matvec() {
+        let a = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.7 - 1.0);
+        let v = [0.5, -1.0, 2.0];
+        let mut out = [0.0; 4];
+        a.matvec_into(&v, &mut out);
+        assert_eq!(out.to_vec(), a.matvec(&v));
     }
 
     #[test]

@@ -11,12 +11,14 @@ mod mat;
 mod chol;
 mod lu;
 mod eig;
+mod sympack;
 mod vecops;
 
 pub use chol::Cholesky;
 pub use eig::{jacobi_eigh, EigH};
 pub use lu::Lu;
 pub use mat::Mat;
+pub use sympack::{sym_pack, sym_pack_into, sym_packed_len, sym_unpack_eye_into, sym_weighted_sum};
 pub use vecops::{axpy, dot, norm2, normalize, outer, scale_in_place};
 
 /// Householder reflection `P = I - 2 a aᵀ` applied to a matrix from the

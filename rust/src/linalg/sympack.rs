@@ -1,0 +1,145 @@
+//! Packed storage for symmetric matrices.
+//!
+//! The E-step precision build `L = I + Σ_c n_c · TᵀΣ⁻¹T|_c` touches C
+//! full R×R matrices per utterance even though each is symmetric.
+//! Packing the upper triangles into rows of a `(C × R(R+1)/2)` matrix
+//! turns the whole sum into a single `(R(R+1)/2 × C) · n` GEMV over
+//! contiguous memory — half the flops and none of the strided reads of
+//! C separate full-matrix axpys.
+//!
+//! Layout: row-major upper triangle, `packed[idx(i, j)] = M[i][j]` for
+//! `j ≥ i`, with `idx(i, j) = i·n − i(i−1)/2 + (j − i)`.
+
+use super::Mat;
+
+/// Packed length of an `n × n` symmetric matrix: `n(n+1)/2`.
+#[inline]
+pub fn sym_packed_len(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// Pack the upper triangle of a symmetric matrix into `out`
+/// (length [`sym_packed_len`]). Only the upper triangle is read, so
+/// exact symmetry of `m` is the caller's contract.
+pub fn sym_pack_into(m: &Mat, out: &mut [f64]) {
+    let n = m.rows();
+    assert_eq!(m.cols(), n, "sym_pack needs a square matrix");
+    assert_eq!(out.len(), sym_packed_len(n), "sym_pack out length");
+    let mut idx = 0;
+    for i in 0..n {
+        let row = m.row(i);
+        out[idx..idx + (n - i)].copy_from_slice(&row[i..]);
+        idx += n - i;
+    }
+}
+
+/// Pack the upper triangle into a fresh buffer.
+pub fn sym_pack(m: &Mat) -> Vec<f64> {
+    let mut out = vec![0.0; sym_packed_len(m.rows())];
+    sym_pack_into(m, &mut out);
+    out
+}
+
+/// Unpack into `out = I + M` — the precision-matrix assembly of the
+/// E-step (`L = I + Σ n_c M_c` after the packed weighted sum).
+pub fn sym_unpack_eye_into(packed: &[f64], out: &mut Mat) {
+    let n = out.rows();
+    assert_eq!(out.cols(), n, "sym_unpack needs a square out");
+    assert_eq!(packed.len(), sym_packed_len(n), "sym_unpack packed length");
+    let mut idx = 0;
+    for i in 0..n {
+        for j in i..n {
+            let mut v = packed[idx];
+            idx += 1;
+            if i == j {
+                v += 1.0;
+            }
+            out.set(i, j, v);
+            out.set(j, i, v);
+        }
+    }
+}
+
+/// `out = Σ_c w[c] · packed_rows[c]` — the single GEMV that replaces C
+/// full-matrix axpys when accumulating weighted symmetric matrices.
+/// `packed_rows` is `(C × n(n+1)/2)`; zero weights are skipped so the
+/// result matches the sparse per-component reference loop exactly.
+pub fn sym_weighted_sum(packed_rows: &Mat, w: &[f64], out: &mut [f64]) {
+    assert_eq!(packed_rows.rows(), w.len(), "sym_weighted_sum weight length");
+    assert_eq!(packed_rows.cols(), out.len(), "sym_weighted_sum out length");
+    out.fill(0.0);
+    for (c, &wc) in w.iter().enumerate() {
+        if wc != 0.0 {
+            super::axpy(wc, packed_rows.row(c), out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, gen_dim, gen_spd};
+
+    #[test]
+    fn pack_roundtrip_adds_identity() {
+        let m = Mat::from_rows(&[&[2.0, 0.5, -1.0], &[0.5, 3.0, 0.25], &[-1.0, 0.25, 4.0]]);
+        let packed = sym_pack(&m);
+        assert_eq!(packed.len(), 6);
+        let mut back = Mat::zeros(3, 3);
+        sym_unpack_eye_into(&packed, &mut back);
+        let mut want = m.clone();
+        for i in 0..3 {
+            *want.get_mut(i, i) += 1.0;
+        }
+        assert!(back.approx_eq(&want, 0.0));
+    }
+
+    #[test]
+    fn prop_weighted_sum_matches_full_axpys() {
+        forall(
+            909,
+            48,
+            |rng| {
+                let n = gen_dim(rng, 1, 10);
+                let c = gen_dim(rng, 1, 8);
+                let mats: Vec<Mat> = (0..c)
+                    .map(|_| {
+                        let mut m = gen_spd(rng, n, 0.1);
+                        m.symmetrize();
+                        m
+                    })
+                    .collect();
+                // include an exact zero weight to exercise the skip
+                let mut w: Vec<f64> = (0..c).map(|_| rng.uniform_in(0.0, 5.0)).collect();
+                w[0] = 0.0;
+                (mats, w)
+            },
+            |(mats, w)| {
+                let n = mats[0].rows();
+                let p = sym_packed_len(n);
+                let mut rows = Mat::zeros(mats.len(), p);
+                for (c, m) in mats.iter().enumerate() {
+                    sym_pack_into(m, rows.row_mut(c));
+                }
+                let mut packed = vec![0.0; p];
+                sym_weighted_sum(&rows, w, &mut packed);
+                let mut got = Mat::zeros(n, n);
+                sym_unpack_eye_into(&packed, &mut got);
+                // reference: I + Σ w_c M_c with full-matrix axpys
+                let mut want = Mat::eye(n);
+                for (m, &wc) in mats.iter().zip(w) {
+                    if wc != 0.0 {
+                        want.add_scaled(wc, m);
+                    }
+                }
+                // not bit-exact: the reference folds the identity in
+                // before the sum, the packed path after it
+                if got.approx_eq(&want, 1e-12 * (1.0 + want.max_abs())) {
+                    Ok(())
+                } else {
+                    Err(format!("deviates by {}", got.sub(&want).max_abs()))
+                }
+            },
+        );
+    }
+}

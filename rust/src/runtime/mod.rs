@@ -98,6 +98,15 @@ impl Graph {
     /// device result is always a tuple literal — we decompose it into one
     /// [`Tensor`] per graph output.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// [`Graph::run`] over borrowed tensors — the hot-path variant.
+    /// Streaming callers mix per-batch inputs with large per-iteration
+    /// constants (packed weights, TᵀΣ⁻¹ tensors); borrowing lets them
+    /// pass the constants without cloning the buffers on every batch.
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let result = self
