@@ -7,12 +7,15 @@
 //! Also runs a kernel-level microbench of the batched CPU paths
 //! (scalar vs GEMM-shaped) at paper-class dims and records the
 //! machine-readable trajectory in `BENCH_1.json` (frames/sec for
-//! alignment, utterances/sec for the E-step) so future PRs can track
-//! the perf curve.
+//! alignment, utterances/sec for the E-step), plus a serving-path load
+//! replay (tiny in-process engine, micro-batched vs unbatched) whose
+//! p50/p95/p99 latency and throughput land in `BENCH_2.json` — so
+//! future PRs can track both perf curves.
 //!
 //!     cargo run --release --example speed_report \
 //!         [-- --utts N --bench-c C --bench-f F --bench-r R \
-//!             --bench-frames T --bench-utts U]
+//!             --bench-frames T --bench-utts U \
+//!             --serve-requests N --serve-concurrency C]
 //!
 //! The accelerated sections are skipped (with a note) when
 //! `artifacts/` is missing, so the CPU report runs everywhere.
@@ -206,6 +209,43 @@ fn main() -> anyhow::Result<()> {
     let bframes = arg_usize(&argv, "--bench-frames", 1000);
     let butts = arg_usize(&argv, "--bench-utts", 8);
     kernel_bench_json(bc, bf, br, bframes, butts, cfg.tvm.top_k)?;
+
+    // ---- serving-path load replay → BENCH_2.json ----
+    let serve_requests = arg_usize(&argv, "--serve-requests", 1200);
+    let serve_concurrency = arg_usize(&argv, "--serve-concurrency", 8);
+    serving_bench_json(serve_requests, serve_concurrency)?;
+    Ok(())
+}
+
+/// Serving latency/throughput at tiny-engine dims: replay verify
+/// traffic through the micro-batched engine and its unbatched twin,
+/// write the `BENCH_2.json` serving section.
+fn serving_bench_json(requests: usize, concurrency: usize) -> anyhow::Result<()> {
+    use ivector_tv::frontend::synth::TrafficGen;
+    use ivector_tv::serve::bench::{
+        run_batched_vs_unbatched, tiny_serve_config, train_tiny_bundle, write_bench2_json,
+        ServeBenchOpts,
+    };
+
+    println!("\n== serving load replay ({requests} verify requests, {concurrency} clients) ==");
+    let cfg = tiny_serve_config();
+    let bundle = train_tiny_bundle(&cfg, 42)?;
+    let traffic = TrafficGen::new(&cfg.corpus, 8, 4242);
+    let opts = ServeBenchOpts { speakers: 8, enroll_utts: 2, requests, concurrency };
+    let (batched, unbatched) = run_batched_vs_unbatched(bundle, &cfg.serve, &traffic, &opts)?;
+    println!(
+        "-> batched: {:.0} req/s (p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}); \
+         unbatched: {:.0} req/s (p50 {:.2} ms, p99 {:.2} ms)",
+        batched.throughput_rps,
+        batched.verify.p50_s * 1e3,
+        batched.verify.p99_s * 1e3,
+        batched.mean_batch,
+        unbatched.throughput_rps,
+        unbatched.verify.p50_s * 1e3,
+        unbatched.verify.p99_s * 1e3,
+    );
+    write_bench2_json("BENCH_2.json", &[("batched", &batched), ("unbatched", &unbatched)])?;
+    println!("wrote BENCH_2.json");
     Ok(())
 }
 

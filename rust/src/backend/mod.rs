@@ -17,6 +17,7 @@ use anyhow::Result;
 use crate::linalg::Mat;
 
 /// The full trained backend: a processing chain + PLDA scorer.
+#[derive(Debug, Clone)]
 pub struct Backend {
     pub centering: Centering,
     /// Applied only when the extractor skipped minimum divergence

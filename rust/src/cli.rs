@@ -34,6 +34,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "backend" => commands::backend(&args),
         "eval" => commands::eval(&args),
         "pipeline" => commands::pipeline(&args),
+        "bundle" => commands::bundle(&args),
+        "verify" => commands::verify(&args),
+        "serve-bench" => commands::serve_bench(&args),
         "smoke" => commands::smoke(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -61,6 +64,15 @@ COMMANDS:
   backend    train LDA + PLDA on extracted vectors  (--config)
   eval       score trials, report EER/minDCF        (--config)
   pipeline   synth → ubm → align → train → extract → backend → eval
+             → bundle
+  bundle     pack UBM+TVM+backend into work/bundle.bin for serving
+  verify     online enroll/verify traffic vs a bundle (--work, --config,
+             --speakers, --enroll-utts, --trials, --concurrency,
+             --save-registry PATH)
+  serve-bench  sustained verify load, micro-batched vs unbatched;
+             writes BENCH_2.json (--requests, --concurrency, --speakers,
+             --enroll-utts, --work | tiny in-process bundle, --out,
+             --batched-only)
   smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
 
 Flags not listed above: --artifacts DIR (default ./artifacts),

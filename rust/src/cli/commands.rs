@@ -1,7 +1,17 @@
 //! CLI command implementations. Each command is a thin wrapper over the
-//! library: parse flags → load config → call into the pipeline stages.
+//! library: parse flags → load config → call into the pipeline stages
+//! (or, for the serving commands, into [`crate::serve`]).
 
 use anyhow::Result;
+
+use crate::config::Config;
+use crate::frontend::synth::TrafficGen;
+use crate::metrics::Stopwatch;
+use crate::serve::bench::{
+    run_batched_vs_unbatched, run_verify_load, tiny_serve_config, train_tiny_bundle,
+    write_bench2_json, ServeBenchOpts, ServeBenchReport,
+};
+use crate::serve::{Engine, ModelBundle};
 
 use super::Args;
 
@@ -71,4 +81,119 @@ pub fn eval(args: &Args) -> Result<()> {
 /// `pipeline` — run every stage end-to-end.
 pub fn pipeline(args: &Args) -> Result<()> {
     crate::coordinator::stages::pipeline(args)
+}
+
+/// `bundle` — assemble the serving model bundle from stage artifacts.
+pub fn bundle(args: &Args) -> Result<()> {
+    crate::coordinator::stages::bundle(args)
+}
+
+fn print_load_report(name: &str, r: &ServeBenchReport) {
+    println!(
+        "{name}: {} requests @ {} clients in {:.2}s = {:.0} req/s | \
+         p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | mean batch {:.2} | \
+         score target {:.2} vs impostor {:.2}",
+        r.requests,
+        r.concurrency,
+        r.wall_s,
+        r.throughput_rps,
+        r.verify.p50_s * 1e3,
+        r.verify.p95_s * 1e3,
+        r.verify.p99_s * 1e3,
+        r.mean_batch,
+        r.target_mean,
+        r.impostor_mean,
+    );
+}
+
+/// `verify` — enroll/verify synthetic traffic against a trained bundle
+/// through the serving engine (the online counterpart of `eval`).
+pub fn verify(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => Config::load(&path)?,
+        None => Config::default_scaled(),
+    };
+    let work = args.get_or("work", "./work");
+    let speakers = args.get_parse_or("speakers", 4usize)?;
+    let enroll_utts = args.get_parse_or("enroll-utts", 3usize)?;
+    let trials = args.get_parse_or("trials", 64usize)?;
+    let concurrency = args.get_parse_or("concurrency", 4usize)?;
+    let seed = args.get_parse_or("seed", 7u64)?;
+    let save_registry = args.get("save-registry");
+    args.finish()?;
+
+    let bundle = ModelBundle::load_auto(&work, &cfg)?;
+    let engine = Engine::new(bundle, &cfg.serve);
+    let traffic = TrafficGen::new(&cfg.corpus, speakers, seed);
+    let report = run_verify_load(
+        &engine,
+        &traffic,
+        &ServeBenchOpts { speakers, enroll_utts, requests: trials, concurrency },
+    )?;
+    print_load_report("verify", &report);
+    if let Some(path) = save_registry {
+        engine.registry().save(&path)?;
+        println!("registry: {} speakers -> {path}", engine.registry().len());
+    }
+    Ok(())
+}
+
+/// `serve-bench` — sustained verify load against an engine (trained
+/// tiny bundle in-process, or a `--work` dir's bundle), micro-batching
+/// on vs off; writes the `BENCH_2.json` serving report.
+pub fn serve_bench(args: &Args) -> Result<()> {
+    let work = args.get("work");
+    // precedence: explicit --config; else the default pipeline config
+    // when loading a --work bundle (matching how it was trained); else
+    // the tiny config for the in-process bundle
+    let cfg = match (args.get("config"), &work) {
+        (Some(path), _) => Config::load(&path)?,
+        (None, Some(_)) => Config::default_scaled(),
+        (None, None) => tiny_serve_config(),
+    };
+    let requests = args.get_parse_or("requests", 1500usize)?;
+    let concurrency = args.get_parse_or("concurrency", 8usize)?;
+    let speakers = args.get_parse_or("speakers", 8usize)?;
+    let enroll_utts = args.get_parse_or("enroll-utts", 2usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let out = args.get_or("out", "BENCH_2.json");
+    let batched_only = args.switch("batched-only");
+    args.finish()?;
+
+    let sw = Stopwatch::start();
+    let bundle = match &work {
+        Some(w) => ModelBundle::load_auto(w, &cfg)?,
+        None => {
+            println!("serve-bench: no --work given — training a tiny in-process bundle");
+            train_tiny_bundle(&cfg, seed)?
+        }
+    };
+    println!(
+        "bundle ready in {:.1}s (C={} F={} R={})",
+        sw.elapsed_s(),
+        bundle.tvm.num_components(),
+        bundle.tvm.feat_dim(),
+        bundle.tvm.rank()
+    );
+    let traffic = TrafficGen::new(&cfg.corpus, speakers, seed ^ 0xBEEF);
+    let opts = ServeBenchOpts { speakers, enroll_utts, requests, concurrency };
+
+    let mut reports: Vec<(&str, ServeBenchReport)> = Vec::new();
+    if batched_only {
+        let engine = Engine::new(bundle, &cfg.serve);
+        let report = run_verify_load(&engine, &traffic, &opts)?;
+        print_load_report("serve-bench[batched]", &report);
+        reports.push(("batched", report));
+    } else {
+        let (batched, unbatched) = run_batched_vs_unbatched(bundle, &cfg.serve, &traffic, &opts)?;
+        print_load_report("serve-bench[batched]", &batched);
+        print_load_report("serve-bench[unbatched]", &unbatched);
+        reports.push(("batched", batched));
+        reports.push(("unbatched", unbatched));
+    }
+    let refs: Vec<(&str, &ServeBenchReport)> =
+        reports.iter().map(|(name, r)| (*name, r)).collect();
+    write_bench2_json(&out, &refs)?;
+    println!("wrote {out}");
+    Ok(())
 }

@@ -190,6 +190,23 @@ pub struct TrialConfig {
     pub seed: u64,
 }
 
+/// Online-serving parameters ([`crate::serve`]): micro-batcher shape
+/// and registry sharding.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests coalesced into one E-step dispatch (flush-on-size).
+    pub batch_utts: usize,
+    /// Micro-batch flush deadline in microseconds (flush-on-deadline):
+    /// the max time the first request in a batch waits for co-riders.
+    pub flush_us: u64,
+    /// E-step worker threads draining the micro-batch queue.
+    pub workers: usize,
+    /// Lock shards of the speaker registry.
+    pub registry_shards: usize,
+    /// Bound on queued (admitted, not yet dispatched) requests.
+    pub queue_cap: usize,
+}
+
 /// Full experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -198,6 +215,7 @@ pub struct Config {
     pub tvm: TvmConfig,
     pub backend: BackendConfig,
     pub trials: TrialConfig,
+    pub serve: ServeConfig,
 }
 
 impl Config {
@@ -243,6 +261,13 @@ impl Config {
             },
             backend: BackendConfig { lda_dim: 32, plda_iters: 8 },
             trials: TrialConfig { n_trials: 8000, seed: 7 },
+            serve: ServeConfig {
+                batch_utts: 32,
+                flush_us: 2000,
+                workers: 2,
+                registry_shards: 16,
+                queue_cap: 1024,
+            },
         }
     }
 
@@ -298,6 +323,14 @@ impl Config {
                 n_trials: doc.get_usize("trials.n_trials", d.trials.n_trials)?,
                 seed: doc.get_usize("trials.seed", d.trials.seed as usize)? as u64,
             },
+            serve: ServeConfig {
+                batch_utts: doc.get_usize("serve.batch_utts", d.serve.batch_utts)?,
+                flush_us: doc.get_usize("serve.flush_us", d.serve.flush_us as usize)? as u64,
+                workers: doc.get_usize("serve.workers", d.serve.workers)?,
+                registry_shards: doc
+                    .get_usize("serve.registry_shards", d.serve.registry_shards)?,
+                queue_cap: doc.get_usize("serve.queue_cap", d.serve.queue_cap)?,
+            },
         })
     }
 
@@ -339,6 +372,22 @@ mod tests {
         assert_eq!(cfg.tvm.rank, 16);
         assert_eq!(cfg.tvm.top_k, 20); // default preserved
         assert_eq!(cfg.feat_dim(), 24);
+        assert_eq!(cfg.serve.batch_utts, 32); // serve defaults preserved
+    }
+
+    #[test]
+    fn serve_section_overrides() {
+        let doc = Doc::parse(
+            "[serve]\nbatch_utts = 8\nflush_us = 500\nworkers = 4\n\
+             registry_shards = 2\nqueue_cap = 64\n",
+        )
+        .unwrap();
+        let cfg = Config::from_doc(&doc).unwrap();
+        assert_eq!(cfg.serve.batch_utts, 8);
+        assert_eq!(cfg.serve.flush_us, 500);
+        assert_eq!(cfg.serve.workers, 4);
+        assert_eq!(cfg.serve.registry_shards, 2);
+        assert_eq!(cfg.serve.queue_cap, 64);
     }
 
     #[test]

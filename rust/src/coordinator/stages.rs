@@ -295,7 +295,26 @@ pub fn eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `pipeline`: all stages end-to-end in one process.
+/// `bundle`: assemble the serving [`crate::serve::ModelBundle`] from
+/// the per-stage artifacts and write `work/bundle.bin` — the single
+/// file the serving commands (`verify`, `serve-bench`) hot-load.
+pub fn bundle(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let work = work_dir(args);
+    args.finish()?;
+    let bundle = crate::serve::ModelBundle::from_work_dir(&work, &cfg)?;
+    save(&bundle, format!("{work}/bundle.bin"))?;
+    println!(
+        "bundle: C={} F={} R={} (+LDA/PLDA backend) -> {work}/bundle.bin",
+        bundle.tvm.num_components(),
+        bundle.tvm.feat_dim(),
+        bundle.tvm.rank()
+    );
+    Ok(())
+}
+
+/// `pipeline`: all stages end-to-end in one process (plus the serving
+/// bundle, so a finished pipeline is immediately servable).
 pub fn pipeline(args: &Args) -> Result<()> {
     synth(args)?;
     train_ubm_stage(args)?;
@@ -303,13 +322,17 @@ pub fn pipeline(args: &Args) -> Result<()> {
     train(args)?;
     extract(args)?;
     backend(args)?;
-    eval(args)
+    eval(args)?;
+    bundle(args)
 }
 
 /// Re-export used by `cli::commands`.
 pub use train_ubm_stage as train_ubm;
 
-fn dense_labels(spk_ids: &[String]) -> Vec<usize> {
+/// Map speaker ids to dense 0-based labels in first-seen order (the
+/// layout `Backend::train`/PLDA expect). Shared with the serving bench
+/// harness.
+pub fn dense_labels(spk_ids: &[String]) -> Vec<usize> {
     let mut map = std::collections::HashMap::new();
     spk_ids
         .iter()

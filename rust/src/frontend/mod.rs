@@ -14,4 +14,4 @@
 pub mod features;
 pub mod synth;
 
-pub use synth::{CorpusBundle, GroundTruth};
+pub use synth::{CorpusBundle, GroundTruth, TrafficGen};

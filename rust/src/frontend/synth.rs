@@ -139,6 +139,57 @@ impl GroundTruth {
     }
 }
 
+/// Deterministic request-traffic source for the serving subsystem
+/// ([`crate::serve`]): a set of "traffic speakers" with ground-truth
+/// offsets whose utterances are sampled on demand. `utterance(s, k)`
+/// is a pure function of `(seed, s, k)`, so concurrent load-test
+/// clients can replay identical traffic without pre-materializing an
+/// archive, and enrollment (small `k`) and verification (large `k`)
+/// draws never collide.
+#[derive(Debug, Clone)]
+pub struct TrafficGen {
+    world: GroundTruth,
+    /// Per-speaker ground-truth supervector offsets.
+    offsets: Vec<Vec<f64>>,
+    seed: u64,
+}
+
+impl TrafficGen {
+    /// Sample the world + `n_speakers` speaker identities.
+    pub fn new(cfg: &CorpusConfig, n_speakers: usize, seed: u64) -> Self {
+        let world = GroundTruth::sample(cfg);
+        let mut rng = Rng::seed(seed ^ 0xF0AD_5EED);
+        let offsets = (0..n_speakers)
+            .map(|s| {
+                let mut spk_rng = rng.fork(s as u64);
+                world.sample_speaker_offset(&mut spk_rng)
+            })
+            .collect();
+        Self { world, offsets, seed }
+    }
+
+    pub fn n_speakers(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Stable id of traffic speaker `s`.
+    pub fn speaker_id(&self, s: usize) -> String {
+        format!("traffic{s:05}")
+    }
+
+    /// The `k`-th utterance of speaker `s` (full front-end: deltas +
+    /// VAD). Deterministic in `(seed, s, k)` and safe to call from many
+    /// threads (`&self`, fresh rng per call).
+    pub fn utterance(&self, s: usize, k: u64) -> Mat {
+        let mut rng = Rng::seed(
+            self.seed
+                ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ k.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        self.world.sample_processed_utterance(&self.offsets[s], &mut rng)
+    }
+}
+
 /// Generate the train + eval corpora deterministically from the config.
 pub fn generate_corpus(cfg: &CorpusConfig) -> Result<CorpusBundle> {
     let world = GroundTruth::sample(cfg);
@@ -241,6 +292,25 @@ mod tests {
         // same offset → identical; different speakers → nonzero distance
         let norm_a: f64 = off_a.iter().map(|x| x * x).sum::<f64>().sqrt();
         assert!(norm_a > 0.0);
+    }
+
+    #[test]
+    fn traffic_gen_is_deterministic_and_distinct() {
+        let cfg = tiny_cfg();
+        let a = TrafficGen::new(&cfg, 3, 7);
+        let b = TrafficGen::new(&cfg, 3, 7);
+        assert_eq!(a.n_speakers(), 3);
+        assert_eq!(a.speaker_id(1), "traffic00001");
+        // same (seed, s, k) → identical features, replayable across gens
+        assert!(a.utterance(1, 5).approx_eq(&b.utterance(1, 5), 0.0));
+        // different k or s → different utterances
+        assert!(!a.utterance(1, 5).approx_eq(&a.utterance(1, 6), 1e-9)
+            || a.utterance(1, 5).rows() != a.utterance(1, 6).rows());
+        let u0 = a.utterance(0, 5);
+        let u1 = a.utterance(1, 5);
+        assert!(u0.rows() != u1.rows() || !u0.approx_eq(&u1, 1e-9));
+        // dim matches the front-end contract
+        assert_eq!(u0.cols(), 3 * cfg.base_dim);
     }
 
     #[test]

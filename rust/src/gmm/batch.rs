@@ -28,34 +28,24 @@ const BLOCK: usize = 128;
 /// below this, i.e. a single panel).
 const QB: usize = 512;
 
-/// Batched two-stage aligner with reusable scratch buffers.
-///
-/// Equivalent to the scalar path up to floating-point rounding: the
-/// packed expansion evaluates `x·(m/v) − ½x²/v + const_c` instead of
-/// `−½(x−m)²/v − ½ ln v + ln w_c + …`, which agrees to ~1e-12 relative.
-pub struct BatchAligner<'g> {
-    full: &'g FullGmm,
-    top_k: usize,
-    min_post: f64,
-    dim: usize,
+/// The precomputed diagonal score expansion (the f64 mirror of
+/// [`crate::ivector::accel::pack_diag_params`]): a pure function of the
+/// diagonal UBM, so long-lived callers (the serving engine's
+/// [`crate::serve::ServeModel`]) pack once per model and share it
+/// across requests instead of re-deriving every ln/divide per aligner.
+#[derive(Debug, Clone)]
+pub struct PackedDiag {
     /// Packed diagonal score weights (C × 2F): row c = [m/v ; −½/v].
     w: Mat,
     /// Per-component constants folding ln w_c, ln v and m²/v.
     consts: Vec<f64>,
-    /// Augmented frame block [x ; x²] (BLOCK × 2F).
-    aug: Mat,
-    /// Diagonal scores (BLOCK × C).
-    scores: Mat,
-    /// Top-K selection buffer.
-    sel: Vec<u32>,
-    /// Full-covariance log-likes of the selected components.
-    ll_sel: Vec<f64>,
+    /// Feature dim F.
+    dim: usize,
 }
 
-impl<'g> BatchAligner<'g> {
-    /// Pack the diagonal UBM once (the f64 mirror of
-    /// [`crate::ivector::accel::pack_diag_params`]).
-    pub fn new(diag: &DiagGmm, full: &'g FullGmm, top_k: usize, min_post: f64) -> Self {
+impl PackedDiag {
+    /// Pack the diagonal UBM.
+    pub fn new(diag: &DiagGmm) -> Self {
         let (c_n, f_dim) = (diag.num_components(), diag.dim());
         let mut w = Mat::zeros(c_n, 2 * f_dim);
         let mut consts = vec![0.0; c_n];
@@ -73,13 +63,67 @@ impl<'g> BatchAligner<'g> {
             }
             consts[c] = const_c;
         }
+        Self { w, consts, dim: f_dim }
+    }
+
+    /// Components C.
+    pub fn num_components(&self) -> usize {
+        self.w.rows()
+    }
+}
+
+/// Batched two-stage aligner with reusable scratch buffers.
+///
+/// Equivalent to the scalar path up to floating-point rounding: the
+/// packed expansion evaluates `x·(m/v) − ½x²/v + const_c` instead of
+/// `−½(x−m)²/v − ½ ln v + ln w_c + …`, which agrees to ~1e-12 relative.
+pub struct BatchAligner<'g> {
+    full: &'g FullGmm,
+    top_k: usize,
+    min_post: f64,
+    /// Diagonal score expansion (owned, or borrowed from a caller that
+    /// amortizes the pack across many aligners).
+    packed: std::borrow::Cow<'g, PackedDiag>,
+    /// Augmented frame block [x ; x²] (BLOCK × 2F).
+    aug: Mat,
+    /// Diagonal scores (BLOCK × C).
+    scores: Mat,
+    /// Top-K selection buffer.
+    sel: Vec<u32>,
+    /// Full-covariance log-likes of the selected components.
+    ll_sel: Vec<f64>,
+}
+
+impl<'g> BatchAligner<'g> {
+    /// Pack the diagonal UBM once and build the aligner.
+    pub fn new(diag: &DiagGmm, full: &'g FullGmm, top_k: usize, min_post: f64) -> Self {
+        Self::build(std::borrow::Cow::Owned(PackedDiag::new(diag)), full, top_k, min_post)
+    }
+
+    /// Build over an already-packed diagonal UBM (the serving hot path:
+    /// the pack is per-model, only the scratch is per-aligner).
+    pub fn with_packed(
+        packed: &'g PackedDiag,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+    ) -> Self {
+        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post)
+    }
+
+    fn build(
+        packed: std::borrow::Cow<'g, PackedDiag>,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+    ) -> Self {
+        let c_n = packed.num_components();
+        let f_dim = packed.dim;
         Self {
             full,
             top_k,
             min_post,
-            dim: f_dim,
-            w,
-            consts,
+            packed,
             aug: Mat::zeros(BLOCK, 2 * f_dim),
             scores: Mat::zeros(BLOCK, c_n),
             sel: Vec::with_capacity(top_k.min(c_n)),
@@ -89,7 +133,7 @@ impl<'g> BatchAligner<'g> {
 
     /// Align a whole utterance, streaming BLOCK-sized frame blocks.
     pub fn align_utterance(&mut self, feats: &Mat) -> Vec<Vec<Posting>> {
-        assert_eq!(feats.cols(), self.dim, "feature dim mismatch");
+        assert_eq!(feats.cols(), self.packed.dim, "feature dim mismatch");
         let mut out = Vec::with_capacity(feats.rows());
         let mut start = 0;
         while start < feats.rows() {
@@ -103,7 +147,7 @@ impl<'g> BatchAligner<'g> {
     /// Score + select + rescore + prune one block of `n` frames
     /// starting at row `start`, appending per-frame postings to `out`.
     fn align_block(&mut self, feats: &Mat, start: usize, n: usize, out: &mut Vec<Vec<Posting>>) {
-        let f_dim = self.dim;
+        let f_dim = self.packed.dim;
         for t in 0..n {
             let x = feats.row(start + t);
             let arow = self.aug.row_mut(t);
@@ -112,7 +156,7 @@ impl<'g> BatchAligner<'g> {
                 arow[f_dim + j] = xj * xj;
             }
         }
-        score_rows(&self.aug, n, &self.w, &self.consts, &mut self.scores);
+        score_rows(&self.aug, n, &self.packed.w, &self.packed.consts, &mut self.scores);
         for t in 0..n {
             top_k_into(self.scores.row(t), self.top_k, &mut self.sel);
             self.ll_sel.resize(self.sel.len(), 0.0);
@@ -178,7 +222,7 @@ mod tests {
                 arow[4 + j] = xj * xj;
             }
         }
-        score_rows(&aligner.aug, n, &aligner.w, &aligner.consts, &mut aligner.scores);
+        score_rows(&aligner.aug, n, &aligner.packed.w, &aligner.packed.consts, &mut aligner.scores);
         for t in 0..n {
             diag.log_likes(feats.row(t), &mut ll_ref);
             for c in 0..9 {
@@ -232,6 +276,26 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn shared_packed_weights_match_owned_pack() {
+        let mut rng = Rng::seed(79);
+        let (diag, full) = random_ubm(10, 4, &mut rng);
+        let feats = Mat::from_fn(200, 4, |_, _| 1.5 * rng.normal());
+        let packed = PackedDiag::new(&diag);
+        assert_eq!(packed.num_components(), 10);
+        let owned = BatchAligner::new(&diag, &full, 5, 0.025).align_utterance(&feats);
+        let shared =
+            BatchAligner::with_packed(&packed, &full, 5, 0.025).align_utterance(&feats);
+        assert_eq!(owned.len(), shared.len());
+        for (a, b) in owned.iter().zip(&shared) {
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
     }
 
     #[test]

@@ -18,8 +18,8 @@
 //!   in-place rank-1 kernels with buffers owned by [`EstepWorkspace`].
 
 use crate::linalg::{
-    axpy, dot, outer, sym_pack_into, sym_packed_len, sym_unpack_eye_into, sym_weighted_sum,
-    Cholesky, Mat,
+    axpy, dot, factor_in_place_regularized, outer, sym_pack_into, sym_packed_len,
+    sym_unpack_eye_into, sym_weighted_sum, CholRef, Cholesky, Mat,
 };
 
 use super::model::{Formulation, TvModel};
@@ -226,7 +226,13 @@ pub fn estep_batch_cpu(
         debug_assert_eq!(st.n.len(), c_n, "stats dims mismatch");
         sym_weighted_sum(&consts.tt_si_t_packed, &st.n, &mut ws.l_packed);
         sym_unpack_eye_into(&ws.l_packed, &mut ws.l_mat);
-        let chol = Cholesky::new_regularized(&ws.l_mat).0;
+        // blocked in-place factorization of the precision — no per-solve
+        // allocation (the former `Cholesky::new_regularized` cloned an
+        // R×R matrix per utterance). L is SPD by construction
+        // (I + Σ n_c·PSD), so the ridge retry — which rebuilds the
+        // clobbered buffer from the packed form — is a defensive rarity.
+        factor_in_place_regularized(&mut ws.l_mat, |m| sym_unpack_eye_into(&ws.l_packed, m));
+        let chol = CholRef::new(&ws.l_mat);
         let phi_row = phi_out.row_mut(u);
         phi_row.copy_from_slice(ws.rhs.row(u));
         chol.solve_vec_in_place(phi_row);

@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the coordinator: EM training schedule with
 //!   in-training realignment, pipelined CPU data loaders feeding the
-//!   accelerator, ensemble runner, scoring backend, CLI.
+//!   accelerator, ensemble runner, scoring backend, CLI, and the online
+//!   serving subsystem ([`serve`]: micro-batched extraction, speaker
+//!   registry, verification engine).
 //! * **L2** — JAX compute graphs (frame alignment, TVM E-step, i-vector
 //!   extraction, UBM accumulation, PLDA scoring), AOT-lowered to HLO text
 //!   at build time (`python/compile/`).
@@ -26,6 +28,7 @@ pub mod metrics;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod trials;
 pub mod backend;

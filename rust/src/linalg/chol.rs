@@ -1,77 +1,137 @@
 //! Cholesky decomposition and SPD solves — the workhorse behind the
 //! E-step precision solve `L(u) φ = rhs`, covariance inversion, and
 //! PLDA/LDA whitening.
+//!
+//! Two factorization paths:
+//!
+//! * [`factor_in_place`] — the blocked right-looking kernel: factors a
+//!   caller-owned buffer with panel-dot trailing updates, so hot loops
+//!   (the batched E-step solves one R×R system per utterance) allocate
+//!   nothing. [`CholRef`] wraps such a buffer with the solve kernels,
+//!   which read only the lower triangle — the junk the in-place factor
+//!   leaves above the diagonal is never touched.
+//! * [`Cholesky::new_scalar`] — the unblocked scalar reference, kept as
+//!   the equivalence oracle for the blocked path.
 
 use anyhow::{bail, Result};
 
 use super::Mat;
 
-/// Lower-triangular Cholesky factor of an SPD matrix: `A = L Lᵀ`.
-#[derive(Debug, Clone)]
-pub struct Cholesky {
-    l: Mat,
+/// Panel width of the blocked right-looking factorization: the column
+/// panel whose trailing update dominates the flops. `CHOL_NB × CHOL_NB`
+/// f64s (~32 KiB) keep the diagonal block L1-resident while the panel
+/// rows stream through the dot-product update.
+const CHOL_NB: usize = 64;
+
+/// Blocked right-looking Cholesky factorization, in place: on success
+/// the lower triangle (diagonal included) of `a` holds `L` with
+/// `A = L Lᵀ`. The strictly-upper triangle is left untouched (solvers
+/// via [`CholRef`] never read it). On failure `a` is partially
+/// overwritten — callers that retry (e.g. with a ridge) must rebuild it.
+///
+/// Same math as the scalar reference with a different accumulation
+/// grouping (per-panel trailing updates), so the factors agree to
+/// floating-point rounding, not bit-exactly.
+pub fn factor_in_place(a: &mut Mat) -> Result<()> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky needs a square matrix");
+    for kb in (0..n).step_by(CHOL_NB) {
+        let ke = (kb + CHOL_NB).min(n);
+        // 1. factor the diagonal block (scalar, within the panel);
+        //    contributions of columns < kb were already subtracted by
+        //    earlier trailing updates.
+        for j in kb..ke {
+            let s = {
+                let d = a.as_slice();
+                super::dot(&d[j * n + kb..j * n + j], &d[j * n + kb..j * n + j])
+            };
+            let djj = a.get(j, j) - s;
+            if djj <= 0.0 || !djj.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d = {djj:.3e})");
+            }
+            let djj = djj.sqrt();
+            a.set(j, j, djj);
+            for i in (j + 1)..ke {
+                let s = {
+                    let d = a.as_slice();
+                    super::dot(&d[i * n + kb..i * n + j], &d[j * n + kb..j * n + j])
+                };
+                let v = (a.get(i, j) - s) / djj;
+                a.set(i, j, v);
+            }
+        }
+        // 2. panel solve: rows below the block against L11ᵀ.
+        for i in ke..n {
+            for j in kb..ke {
+                let s = {
+                    let d = a.as_slice();
+                    super::dot(&d[i * n + kb..i * n + j], &d[j * n + kb..j * n + j])
+                };
+                let v = (a.get(i, j) - s) / a.get(j, j);
+                a.set(i, j, v);
+            }
+        }
+        // 3. trailing update of the lower triangle:
+        //    A22 −= L21 L21ᵀ, one panel-dot per (i, j).
+        for i in ke..n {
+            for j in ke..=i {
+                let s = {
+                    let d = a.as_slice();
+                    super::dot(&d[i * n + kb..i * n + ke], &d[j * n + kb..j * n + ke])
+                };
+                *a.get_mut(i, j) -= s;
+            }
+        }
+    }
+    Ok(())
 }
 
-impl Cholesky {
-    /// Factorize. Fails (rather than silently regularizing) when `A` is
-    /// not positive definite — callers that want flooring do it
-    /// explicitly via [`Cholesky::new_regularized`].
-    pub fn new(a: &Mat) -> Result<Self> {
-        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
-        let n = a.rows();
-        let mut l = Mat::zeros(n, n);
-        for j in 0..n {
-            let mut d = a.get(j, j);
-            for k in 0..j {
-                d -= l.get(j, k) * l.get(j, k);
-            }
-            if d <= 0.0 || !d.is_finite() {
-                bail!("matrix not positive definite at pivot {j} (d = {d:.3e})");
-            }
-            let dj = d.sqrt();
-            l.set(j, j, dj);
-            for i in (j + 1)..n {
-                let mut s = a.get(i, j);
-                for k in 0..j {
-                    s -= l.get(i, k) * l.get(j, k);
-                }
-                l.set(i, j, s / dj);
-            }
-        }
-        Ok(Self { l })
-    }
-
-    /// Factorize with a diagonal ridge added until the factorization
-    /// succeeds (used on accumulated covariances that may be rank
-    /// deficient early in EM). Returns the factor and the ridge used.
-    pub fn new_regularized(a: &Mat) -> (Self, f64) {
-        let mut ridge = 0.0;
-        let scale = a.trace().abs().max(1e-10) / a.rows() as f64;
-        loop {
-            let mut m = a.clone();
-            if ridge > 0.0 {
-                for i in 0..m.rows() {
-                    *m.get_mut(i, i) += ridge;
-                }
-            }
-            if let Ok(c) = Self::new(&m) {
-                return (c, ridge);
-            }
-            ridge = if ridge == 0.0 { scale * 1e-10 } else { ridge * 10.0 };
-            assert!(ridge.is_finite(), "regularization diverged");
+/// Zero the strictly-upper triangle an in-place factorization leaves as
+/// junk, so an owned factor is a proper lower-triangular matrix.
+fn zero_upper(l: &mut Mat) {
+    let n = l.rows();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            l.set(i, j, 0.0);
         }
     }
+}
 
-    /// The lower-triangular factor.
-    pub fn l(&self) -> &Mat {
-        &self.l
+/// [`factor_in_place`] with the standard ridge-escalation retry: on a
+/// failed factorization, `rebuild` must restore the original matrix
+/// into the (clobbered) buffer, the next ridge of the ladder is added
+/// to the diagonal, and the factorization retries. Returns the ridge
+/// that succeeded (0.0 on first try) — the single policy shared by
+/// [`Cholesky::new_regularized`] and the allocation-free E-step path.
+pub fn factor_in_place_regularized(a: &mut Mat, mut rebuild: impl FnMut(&mut Mat)) -> f64 {
+    let scale = a.trace().abs().max(1e-10) / a.rows().max(1) as f64;
+    let mut ridge = 0.0;
+    loop {
+        if factor_in_place(a).is_ok() {
+            return ridge;
+        }
+        ridge = if ridge == 0.0 { scale * 1e-10 } else { ridge * 10.0 };
+        assert!(ridge.is_finite(), "regularization diverged");
+        rebuild(a);
+        for i in 0..a.rows() {
+            *a.get_mut(i, i) += ridge;
+        }
     }
+}
 
-    /// Solve `A x = b` for one right-hand side.
-    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
-        let mut y = b.to_vec();
-        self.solve_vec_in_place(&mut y);
-        y
+/// Borrowed lower-triangular Cholesky factor over a caller-owned buffer
+/// (typically one factored by [`factor_in_place`]). Only the lower
+/// triangle is read, so the buffer's upper triangle may hold leftovers.
+#[derive(Debug, Clone, Copy)]
+pub struct CholRef<'a> {
+    l: &'a Mat,
+}
+
+impl<'a> CholRef<'a> {
+    /// Wrap a factored buffer.
+    pub fn new(l: &'a Mat) -> Self {
+        debug_assert_eq!(l.rows(), l.cols(), "cholesky factor must be square");
+        Self { l }
     }
 
     /// Solve `A x = b` in place (no allocation) — the hot-path variant
@@ -93,26 +153,6 @@ impl Cholesky {
             }
             y[i] /= self.l.get(i, i);
         }
-    }
-
-    /// Solve `A X = B` column-block right-hand side.
-    pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let n = self.l.rows();
-        assert_eq!(b.rows(), n);
-        let mut x = Mat::zeros(n, b.cols());
-        // Solve per column (column extraction cost is negligible at our sizes).
-        for j in 0..b.cols() {
-            let col = self.solve_vec(&b.col(j));
-            x.set_col(j, &col);
-        }
-        x
-    }
-
-    /// `A⁻¹` (SPD inverse).
-    pub fn inverse(&self) -> Mat {
-        let mut inv = Mat::zeros(self.l.rows(), self.l.rows());
-        self.inverse_into(&mut inv);
-        inv
     }
 
     /// `out = A⁻¹` into a caller-owned buffer, solving per unit column
@@ -148,6 +188,124 @@ impl Cholesky {
             z[i] /= self.l.get(i, i);
         }
         z
+    }
+}
+
+/// Lower-triangular Cholesky factor of an SPD matrix: `A = L Lᵀ`
+/// (owned-buffer API; allocation-free callers use [`factor_in_place`] +
+/// [`CholRef`] directly).
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorize (blocked right-looking path). Fails (rather than
+    /// silently regularizing) when `A` is not positive definite —
+    /// callers that want flooring do it explicitly via
+    /// [`Cholesky::new_regularized`].
+    pub fn new(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+        let mut l = a.clone();
+        factor_in_place(&mut l)?;
+        zero_upper(&mut l);
+        Ok(Self { l })
+    }
+
+    /// The unblocked scalar factorization — the equivalence oracle and
+    /// bench baseline for the blocked [`factor_in_place`] path.
+    pub fn new_scalar(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut d = a.get(j, j);
+            for k in 0..j {
+                d -= l.get(j, k) * l.get(j, k);
+            }
+            if d <= 0.0 || !d.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d = {d:.3e})");
+            }
+            let dj = d.sqrt();
+            l.set(j, j, dj);
+            for i in (j + 1)..n {
+                let mut s = a.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s / dj);
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Factorize with a diagonal ridge added until the factorization
+    /// succeeds (used on accumulated covariances that may be rank
+    /// deficient early in EM). Returns the factor and the ridge used.
+    pub fn new_regularized(a: &Mat) -> (Self, f64) {
+        let mut l = a.clone();
+        let ridge = factor_in_place_regularized(&mut l, |buf| {
+            buf.as_mut_slice().copy_from_slice(a.as_slice())
+        });
+        zero_upper(&mut l);
+        (Self { l }, ridge)
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Borrow as the allocation-free solver view.
+    pub fn view(&self) -> CholRef<'_> {
+        CholRef::new(&self.l)
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let mut y = b.to_vec();
+        self.solve_vec_in_place(&mut y);
+        y
+    }
+
+    /// Solve `A x = b` in place (no allocation).
+    pub fn solve_vec_in_place(&self, y: &mut [f64]) {
+        self.view().solve_vec_in_place(y)
+    }
+
+    /// Solve `A X = B` column-block right-hand side.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut x = Mat::zeros(n, b.cols());
+        // Solve per column (column extraction cost is negligible at our sizes).
+        for j in 0..b.cols() {
+            let col = self.solve_vec(&b.col(j));
+            x.set_col(j, &col);
+        }
+        x
+    }
+
+    /// `A⁻¹` (SPD inverse).
+    pub fn inverse(&self) -> Mat {
+        let mut inv = Mat::zeros(self.l.rows(), self.l.rows());
+        self.inverse_into(&mut inv);
+        inv
+    }
+
+    /// `out = A⁻¹` into a caller-owned buffer.
+    pub fn inverse_into(&self, out: &mut Mat) {
+        self.view().inverse_into(out)
+    }
+
+    /// `log |A|`.
+    pub fn logdet(&self) -> f64 {
+        self.view().logdet()
+    }
+
+    /// Solve `L z = v` (forward substitution only).
+    pub fn forward_solve_vec(&self, v: &[f64]) -> Vec<f64> {
+        self.view().forward_solve_vec(v)
     }
 }
 
@@ -205,6 +363,9 @@ mod tests {
     fn non_spd_rejected() {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
         assert!(Cholesky::new(&a).is_err());
+        assert!(Cholesky::new_scalar(&a).is_err());
+        let mut b = a.clone();
+        assert!(factor_in_place(&mut b).is_err());
     }
 
     #[test]
@@ -229,5 +390,60 @@ mod tests {
                 assert!((x.get(i, j) - xj[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn prop_blocked_factor_matches_scalar() {
+        // dims straddle CHOL_NB so interior and ragged panels are both
+        // exercised; the blocked factor groups the trailing-update sums
+        // per panel, so the match is to rounding, not bit-exact.
+        crate::proptest::forall(
+            1313,
+            24,
+            |rng| {
+                let n = crate::proptest::gen_dim(rng, 1, 150);
+                random_spd(n, rng)
+            },
+            |a| {
+                let blocked = Cholesky::new(a).map_err(|e| e.to_string())?;
+                let scalar = Cholesky::new_scalar(a).map_err(|e| e.to_string())?;
+                let tol = 1e-11 * (1.0 + scalar.l().max_abs());
+                if blocked.l().approx_eq(scalar.l(), tol) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "blocked factor deviates by {}",
+                        blocked.l().sub(scalar.l()).max_abs()
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_in_place_factor_solves_with_junk_upper() {
+        // factor_in_place leaves the upper triangle untouched; CholRef
+        // must still solve correctly over that buffer.
+        crate::proptest::forall(
+            1414,
+            24,
+            |rng| {
+                let n = crate::proptest::gen_dim(rng, 1, 90);
+                let a = random_spd(n, rng);
+                let b: Vec<f64> = rng.normal_vec(n);
+                (a, b)
+            },
+            |(a, b)| {
+                let mut f = a.clone();
+                factor_in_place(&mut f).map_err(|e| e.to_string())?;
+                let mut x = b.clone();
+                CholRef::new(&f).solve_vec_in_place(&mut x);
+                let ax = a.matvec(&x);
+                for (l, r) in ax.iter().zip(b) {
+                    crate::proptest::close(*l, *r, 1e-7, "A x = b residual")?;
+                }
+                Ok(())
+            },
+        );
     }
 }

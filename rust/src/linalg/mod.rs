@@ -14,7 +14,7 @@ mod eig;
 mod sympack;
 mod vecops;
 
-pub use chol::Cholesky;
+pub use chol::{factor_in_place, factor_in_place_regularized, CholRef, Cholesky};
 pub use eig::{jacobi_eigh, EigH};
 pub use lu::Lu;
 pub use mat::Mat;

@@ -1,11 +1,17 @@
-//! Timing / throughput metrics: real-time factors and stage reports.
+//! Timing / throughput metrics: real-time factors, stage reports, and
+//! the serving-path latency histograms.
 //!
 //! The paper's §4.2 headline numbers are *real-time factors* (alignment
 //! 3000× RT, extraction 10 000× RT) and a training speed-up vs the CPU
 //! baseline. Synthetic utterances have no audio clock, so we adopt the
 //! front-end's nominal frame rate (100 frames/s, the standard 10 ms
 //! hop the paper's MFCC config implies) to convert frames to seconds.
+//!
+//! [`LatencyHistogram`] backs the online serving subsystem
+//! ([`crate::serve`]): per-request latencies are recorded lock-free
+//! into log-spaced buckets and summarized as p50/p95/p99.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Nominal frame hop (seconds) — 10 ms like the Kaldi MFCC config.
@@ -93,6 +99,125 @@ pub fn markdown_table(rows: &[StageReport]) -> String {
     s
 }
 
+// ---------------------- serving latency histogram ----------------------
+
+/// Buckets per octave (factor-of-two span) of the latency histogram:
+/// 8 sub-buckets give ≤ ~9 % relative quantile error.
+const LAT_BUCKETS_PER_OCTAVE: usize = 8;
+/// Lower edge of bucket 0 (1 µs — anything faster lands in bucket 0).
+const LAT_MIN_S: f64 = 1e-6;
+/// Bucket count: 28 octaves above 1 µs ≈ 268 s ceiling.
+const LAT_N_BUCKETS: usize = 28 * LAT_BUCKETS_PER_OCTAVE;
+
+/// Concurrent log-spaced latency histogram: `record` is a single atomic
+/// add per bucket (plus count/sum/max upkeep), so request threads never
+/// contend on a lock; quantiles are read-side walks over the buckets.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Point-in-time summary of a [`LatencyHistogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..LAT_N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(seconds: f64) -> usize {
+        if seconds <= LAT_MIN_S {
+            return 0;
+        }
+        let octaves = (seconds / LAT_MIN_S).log2();
+        ((octaves * LAT_BUCKETS_PER_OCTAVE as f64) as usize).min(LAT_N_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in seconds (quantiles report this, i.e.
+    /// a conservative upper bound of the true quantile).
+    fn bucket_upper_s(i: usize) -> f64 {
+        LAT_MIN_S * 2f64.powf((i + 1) as f64 / LAT_BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Record one observation (seconds).
+    pub fn record(&self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        self.buckets[Self::bucket_index(s)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (s * 1e9) as u64;
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Quantile `q ∈ [0, 1]` as the upper edge of the covering bucket
+    /// (0.0 when empty). The total is taken from one snapshot of the
+    /// buckets themselves (not the separate `count` atomic), so a read
+    /// that races concurrent `record`s stays internally consistent
+    /// instead of falling through to the top-bucket sentinel.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let snapshot: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = snapshot.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &b) in snapshot.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return Self::bucket_upper_s(i);
+            }
+        }
+        Self::bucket_upper_s(LAT_N_BUCKETS - 1)
+    }
+
+    /// p50/p95/p99 + mean/max snapshot.
+    pub fn summary(&self) -> LatencySummary {
+        let count = self.count();
+        let mean_s = if count == 0 {
+            0.0
+        } else {
+            self.total_ns.load(Ordering::Relaxed) as f64 * 1e-9 / count as f64
+        };
+        LatencySummary {
+            count,
+            mean_s,
+            p50_s: self.quantile(0.50),
+            p95_s: self.quantile(0.95),
+            p99_s: self.quantile(0.99),
+            max_s: self.max_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +246,59 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_known_values() {
+        let h = LatencyHistogram::new();
+        // 90 fast (1 ms) + 10 slow (100 ms) observations
+        for _ in 0..90 {
+            h.record(1e-3);
+        }
+        for _ in 0..10 {
+            h.record(0.1);
+        }
+        assert_eq!(h.count(), 100);
+        let s = h.summary();
+        // bucket resolution is 2^(1/8) ≈ 1.09×: quantiles are upper
+        // bounds within ~10 % of the true value
+        assert!(s.p50_s >= 1e-3 && s.p50_s < 1.2e-3, "p50 {}", s.p50_s);
+        assert!(s.p95_s >= 0.1 && s.p95_s < 0.12, "p95 {}", s.p95_s);
+        assert!(s.p99_s >= 0.1 && s.p99_s < 0.12, "p99 {}", s.p99_s);
+        assert!((s.max_s - 0.1).abs() < 1e-6);
+        let want_mean = (90.0 * 1e-3 + 10.0 * 0.1) / 100.0;
+        assert!((s.mean_s - want_mean).abs() < 1e-6, "mean {}", s.mean_s);
+    }
+
+    #[test]
+    fn histogram_empty_and_extremes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.summary().count, 0);
+        // out-of-range observations clamp to the edge buckets
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e6);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_records_all_counted() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    h.record(1e-4 * (1 + (t + i) % 7) as f64);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 1000);
     }
 }

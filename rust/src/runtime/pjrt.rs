@@ -1,0 +1,136 @@
+//! The real PJRT-backed runtime (`--features accel`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Tensor;
+
+/// A process-wide PJRT client plus the set of compiled graph executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    graphs: HashMap<String, Graph>,
+    artifacts_dir: PathBuf,
+    /// Accumulated device-execution wall time, for the speed report.
+    pub device_time: std::cell::Cell<f64>,
+}
+
+/// One compiled HLO graph (one `artifacts/<name>.hlo.txt`).
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client. (The paper used a Titan V GPU; on this
+    /// testbed the accelerator is the XLA CPU backend — see DESIGN.md
+    /// substitution table.)
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            graphs: HashMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            device_time: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// Platform string, e.g. "cpu" — used by the speed report.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `artifacts/<name>.hlo.txt`, caching the executable.
+    pub fn load(&mut self, name: &str) -> Result<&Graph> {
+        if !self.graphs.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let graph = Graph::compile_file(&self.client, name, &path)?;
+            self.graphs.insert(name.to_string(), graph);
+        }
+        Ok(&self.graphs[name])
+    }
+
+    /// Get an already-loaded graph.
+    pub fn graph(&self, name: &str) -> Result<&Graph> {
+        self.graphs.get(name).ok_or_else(|| anyhow!("graph `{name}` not loaded"))
+    }
+
+    /// Load + compile a graph from an explicit path (diagnostics, tests).
+    pub fn load_path(&mut self, name: &str, path: impl AsRef<Path>) -> Result<&Graph> {
+        let graph = Graph::compile_file(&self.client, name, path.as_ref())?;
+        self.graphs.insert(name.to_string(), graph);
+        Ok(&self.graphs[name])
+    }
+}
+
+impl Graph {
+    fn compile_file(client: &xla::PjRtClient, name: &str, path: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))
+        .with_context(|| format!("did you run `make artifacts`? missing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile `{name}`: {e:?}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        eprintln!("[runtime] compiled graph `{name}` in {ms:.0} ms");
+        Ok(Self { exe, name: name.to_string() })
+    }
+
+    /// Execute with host tensors; returns the decomposed output tuple.
+    ///
+    /// All L2 graphs are lowered with `return_tuple=True`, so the single
+    /// device result is always a tuple literal — we decompose it into one
+    /// [`Tensor`] per graph output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// [`Graph::run`] over borrowed tensors — the hot-path variant.
+    /// Streaming callers mix per-batch inputs with large per-iteration
+    /// constants (packed weights, TᵀΣ⁻¹ tensors); borrowing lets them
+    /// pass the constants without cloning the buffers on every batch.
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute `{}`: {e:?}", self.name))?;
+        let mut out = result
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("execute `{}`: empty result", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch `{}`: {e:?}", self.name))?;
+        let parts =
+            out.decompose_tuple().map_err(|e| anyhow!("decompose `{}`: {e:?}", self.name))?;
+        parts.into_iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Graph name (artifact stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Quick diagnostic used by `ivector-tv smoke`: compile an HLO file and
+/// run it with zero-filled inputs of the given shapes.
+pub fn smoke_run(path: &str, input_specs: &[(Vec<usize>, &str)]) -> Result<Vec<Tensor>> {
+    let mut rt = Runtime::cpu(".")?;
+    let graph = rt.load_path("smoke", path)?;
+    let inputs: Vec<Tensor> = input_specs
+        .iter()
+        .map(|(shape, ty)| match *ty {
+            "f32" => Ok(Tensor::zeros(shape)),
+            "i32" => Ok(Tensor::zeros_i32(shape)),
+            other => bail!("unsupported smoke input type {other}"),
+        })
+        .collect::<Result<_>>()?;
+    graph.run(&inputs)
+}

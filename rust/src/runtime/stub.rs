@@ -1,0 +1,88 @@
+//! CPU-only stand-in for the PJRT runtime (default build, no `accel`).
+//!
+//! API-identical to [`super::pjrt`] so that every accelerated code path
+//! compiles without the `xla` dependency. [`Runtime::cpu`] is the single
+//! entry point and it returns an error, so the types are uninhabited
+//! (they hold [`std::convert::Infallible`]) and the remaining methods
+//! are statically unreachable — no panics, no `unimplemented!`.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+const NO_ACCEL_MSG: &str = "this binary was built without the `accel` cargo feature — \
+     the XLA/PJRT device path is unavailable; rebuild with \
+     `cargo build --release --features accel` (requires the `xla` crate \
+     and a prebuilt xla_extension), or use the CPU paths (`--cpu-ref`)";
+
+/// Uninhabited stand-in for the PJRT client wrapper.
+pub struct Runtime {
+    never: Infallible,
+    /// Accumulated device-execution wall time (API parity with the
+    /// accel runtime; never observable because `Runtime` cannot be
+    /// constructed in this build).
+    pub device_time: std::cell::Cell<f64>,
+}
+
+/// Uninhabited stand-in for a compiled HLO graph.
+pub struct Graph {
+    never: Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the device path is compiled out.
+    pub fn cpu(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(NO_ACCEL_MSG)
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<&Graph> {
+        match self.never {}
+    }
+
+    pub fn graph(&self, _name: &str) -> Result<&Graph> {
+        match self.never {}
+    }
+
+    pub fn load_path(&mut self, _name: &str, _path: impl AsRef<Path>) -> Result<&Graph> {
+        match self.never {}
+    }
+}
+
+impl Graph {
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self.never {}
+    }
+
+    pub fn run_refs(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        match self.never {}
+    }
+
+    pub fn name(&self) -> &str {
+        match self.never {}
+    }
+}
+
+/// `ivector-tv smoke` without the device path: a clear error.
+pub fn smoke_run(_path: &str, _input_specs: &[(Vec<usize>, &str)]) -> Result<Vec<Tensor>> {
+    bail!(NO_ACCEL_MSG)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let err = Runtime::cpu(".").unwrap_err();
+        assert!(err.to_string().contains("accel"), "{err}");
+        let err = smoke_run("x.hlo.txt", &[]).unwrap_err();
+        assert!(err.to_string().contains("accel"), "{err}");
+    }
+}

@@ -4,7 +4,9 @@
 //! graphs consume/produce. Model math lives in [`crate::linalg`] (f64);
 //! conversion happens here at the device boundary.
 
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "accel")]
+use anyhow::anyhow;
+use anyhow::{bail, Result};
 
 /// Element payload of a [`Tensor`].
 #[derive(Debug, Clone, PartialEq)]
@@ -91,6 +93,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal for device upload.
+    #[cfg(feature = "accel")]
     pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -101,6 +104,7 @@ impl Tensor {
     }
 
     /// Build from an XLA literal fetched off device.
+    #[cfg(feature = "accel")]
     pub(crate) fn from_literal(lit: xla::Literal) -> Result<Self> {
         let array_shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
         let shape: Vec<usize> = array_shape.dims().iter().map(|&d| d as usize).collect();

@@ -1,0 +1,273 @@
+//! Dynamic micro-batcher: coalesce concurrent extraction requests into
+//! E-step batches.
+//!
+//! Request threads do the CPU "loader" work (alignment + Baum-Welch
+//! statistics, exactly the paper's pipelined-loader role) and submit a
+//! [`Job`]; worker threads drain the shared queue and run one
+//! GEMM-shaped [`estep_batch_cpu`] per batch — so per-request traffic
+//! rides the same batched kernels as offline training. A batch closes
+//! when it reaches `batch_utts` jobs (flush-on-size), when the oldest
+//! job has waited `flush` since enqueue (flush-on-deadline), or as soon
+//! as no announced request is still on its way (early flush — under
+//! light load batching costs nothing over per-request dispatch;
+//! [`MicroBatcher::begin_request`] is the announcement).
+//!
+//! Hot-swap coherence: each job carries the `Arc<ServeModel>` snapshot
+//! its statistics were computed with, and a batch only groups jobs that
+//! share the same snapshot — a model swap mid-flight splits the batch
+//! at the epoch boundary instead of mixing models.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::ivector::{estep_batch_cpu, EstepWorkspace, UttStats};
+
+use super::bundle::ServeModel;
+
+/// One queued extraction request (built by [`MicroBatcher::submit`],
+/// which owns the enqueue timestamp).
+struct Job {
+    /// Baum-Welch statistics computed on the request thread.
+    stats: UttStats,
+    /// The model snapshot the statistics belong to.
+    model: Arc<ServeModel>,
+    /// Response channel: the i-vector (posterior mean − prior mean).
+    resp: SyncSender<Vec<f64>>,
+    /// Stamped as the job enters the queue; the flush deadline counts
+    /// from here, so a job never waits for co-riders longer than
+    /// `flush` past its enqueue.
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    batch_utts: usize,
+    flush: Duration,
+    queue_cap: usize,
+    /// Requests announced via [`MicroBatcher::begin_request`] that have
+    /// not submitted yet (still computing their statistics). While this
+    /// is zero no co-rider can arrive, so workers flush a sub-size
+    /// batch immediately instead of idling out the deadline — under
+    /// light load batching then costs nothing over per-request
+    /// dispatch, and the deadline only pays for genuine coalescing.
+    inbound: AtomicUsize,
+    /// Dispatched batch count (metrics).
+    batches: AtomicU64,
+    /// Requests that flowed through batches (metrics).
+    requests: AtomicU64,
+}
+
+/// RAII announcement of an in-flight request (created before the
+/// caller starts its statistics work, dropped once the job is queued
+/// or the request path bails).
+pub(crate) struct RequestToken<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for RequestToken<'_> {
+    fn drop(&mut self) {
+        self.shared.inbound.fetch_sub(1, Ordering::AcqRel);
+        // a worker may be holding a sub-size batch open for this request
+        self.shared.cv.notify_all();
+    }
+}
+
+/// The batcher: a bounded job queue plus its worker pool. Dropping it
+/// drains the queue and joins the workers.
+pub(crate) struct MicroBatcher {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl MicroBatcher {
+    pub fn new(batch_utts: usize, flush: Duration, workers: usize, queue_cap: usize) -> Self {
+        let queue_cap = queue_cap.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            // a batch larger than the queue bound could never fill, so
+            // the size trigger would degenerate to deadline-only under
+            // saturation — clamp to keep flush-on-size reachable
+            batch_utts: batch_utts.clamp(1, queue_cap),
+            flush,
+            queue_cap,
+            inbound: AtomicUsize::new(0),
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        });
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Announce an in-flight request before its statistics work starts;
+    /// keep the token alive until just after [`MicroBatcher::submit`].
+    pub fn begin_request(&self) -> RequestToken<'_> {
+        self.shared.inbound.fetch_add(1, Ordering::AcqRel);
+        RequestToken { shared: &self.shared }
+    }
+
+    /// Enqueue a request, blocking while the queue is at capacity
+    /// (backpressure); errors once shutdown has begun. The i-vector
+    /// arrives on `resp` when the request's batch is dispatched.
+    pub fn submit(
+        &self,
+        stats: UttStats,
+        model: Arc<ServeModel>,
+        resp: SyncSender<Vec<f64>>,
+    ) -> Result<()> {
+        let shared = &*self.shared;
+        let mut q = shared.queue.lock().unwrap();
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                bail!("serving engine is shutting down");
+            }
+            if q.len() < shared.queue_cap {
+                break;
+            }
+            q = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        }
+        q.push_back(Job { stats, model, resp, enqueued: Instant::now() });
+        drop(q);
+        shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Batches dispatched so far.
+    pub fn dispatched_batches(&self) -> u64 {
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    /// Requests that flowed through dispatched batches.
+    pub fn batched_requests(&self) -> u64 {
+        self.shared.requests.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    // per-worker scratch, reused across batches (rebuilt on rank change
+    // after a hot swap or on a larger batch)
+    let mut ws: Option<EstepWorkspace> = None;
+    let mut ws_rank = usize::MAX;
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            // wait for the first job of the next batch
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return; // queue drained: exit
+                }
+                q = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+            }
+            // hold for co-riders until the batch fills, the deadline
+            // expires, or nobody is on the way (shutdown flushes
+            // immediately); the deadline counts from the oldest job's
+            // enqueue, so time already spent queued behind a busy
+            // worker is not re-waited
+            let deadline = q.front().expect("queue non-empty here").enqueued + shared.flush;
+            while q.len() < shared.batch_utts && !shared.shutdown.load(Ordering::Acquire) {
+                if shared.inbound.load(Ordering::Acquire) == 0 {
+                    break; // no announced request can still join
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (queue, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                q = queue;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            // drain one batch of model-coherent jobs
+            let mut batch: Vec<Job> = Vec::with_capacity(shared.batch_utts.min(q.len()));
+            while batch.len() < shared.batch_utts {
+                let coherent = match (q.front(), batch.first()) {
+                    (Some(job), Some(first)) => Arc::ptr_eq(&job.model, &first.model),
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                if !coherent {
+                    break;
+                }
+                batch.push(q.pop_front().unwrap());
+            }
+            batch
+        };
+        // queue space freed / epoch-split leftovers visible to peers
+        shared.cv.notify_all();
+        if batch.is_empty() {
+            continue;
+        }
+        // a panicking batch (e.g. non-finite statistics blowing up the
+        // E-step) must not kill the worker: catch it, drop the jobs —
+        // their response senders close, so each waiting request gets an
+        // error instead of hanging on a shrunken pool
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_batch(shared, &mut ws, &mut ws_rank, &batch);
+        }));
+        if caught.is_err() {
+            ws = None; // scratch state is suspect after an unwind
+            eprintln!(
+                "[serve] batch worker caught a panicked dispatch ({} requests errored)",
+                batch.len()
+            );
+        }
+    }
+}
+
+/// One batched E-step dispatch + per-request responses.
+fn run_batch(
+    shared: &Shared,
+    ws: &mut Option<EstepWorkspace>,
+    ws_rank: &mut usize,
+    batch: &[Job],
+) {
+    let model = &batch[0].model;
+    let r = model.consts.r;
+    let rebuild = match ws.as_ref() {
+        Some(w) => *ws_rank != r || w.capacity() < batch.len(),
+        None => true,
+    };
+    if rebuild {
+        *ws = Some(EstepWorkspace::new(r, batch.len().max(shared.batch_utts)));
+        *ws_rank = r;
+    }
+    let refs: Vec<&UttStats> = batch.iter().map(|j| &j.stats).collect();
+    let phi = estep_batch_cpu(&refs, &model.consts, ws.as_mut().unwrap(), None);
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    shared.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for (u, job) in batch.iter().enumerate() {
+        let mut ivector = phi.row(u).to_vec();
+        for (x, p) in ivector.iter_mut().zip(&model.consts.prior_mean) {
+            *x -= p;
+        }
+        // the requester may have given up — dropping the response is fine
+        let _ = job.resp.send(ivector);
+    }
+}

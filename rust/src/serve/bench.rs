@@ -1,0 +1,326 @@
+//! Serving-load harness: train a tiny in-process bundle, replay
+//! synthetic enroll/verify traffic against an [`Engine`] at a given
+//! concurrency, and report latency/throughput — the machinery behind
+//! the `serve-bench` CLI command and the `speed_report` example's
+//! `BENCH_2.json` serving section.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, BackendOpts};
+use crate::config::Config;
+use crate::coordinator::{align_archive_cpu, stats_from_posts, ComputePath, TrainSetup};
+use crate::exec::default_workers;
+use crate::frontend::synth::{generate_corpus, TrafficGen};
+use crate::ivector::{extract_cpu, Formulation, TrainVariant, UttStats};
+use crate::metrics::{LatencySummary, Stopwatch};
+
+use super::bundle::ModelBundle;
+use super::engine::Engine;
+
+/// A scaled-down config whose full offline recipe trains in seconds —
+/// the "tiny-config engine" of the serving benchmarks and tests.
+pub fn tiny_serve_config() -> Config {
+    let mut cfg = Config::default_scaled();
+    cfg.corpus.n_train_speakers = 8;
+    cfg.corpus.utts_per_train_speaker = 5;
+    cfg.corpus.n_eval_speakers = 2;
+    cfg.corpus.utts_per_eval_speaker = 2;
+    cfg.corpus.min_frames = 60;
+    cfg.corpus.max_frames = 100;
+    cfg.corpus.base_dim = 3;
+    cfg.corpus.true_components = 6;
+    cfg.corpus.speaker_rank = 4;
+    cfg.corpus.channel_rank = 2;
+    cfg.ubm.components = 8;
+    cfg.ubm.diag_em_iters = 2;
+    cfg.ubm.full_em_iters = 1;
+    cfg.ubm.train_frames = 4000;
+    cfg.tvm.rank = 8;
+    cfg.tvm.iters = 2;
+    cfg.tvm.top_k = 4;
+    cfg.tvm.batch_utts = 16;
+    cfg.backend.lda_dim = 4;
+    cfg.backend.plda_iters = 3;
+    cfg
+}
+
+/// Deterministic serving-traffic source at a config's corpus dims.
+pub fn tiny_traffic(cfg: &Config, n_speakers: usize, seed: u64) -> TrafficGen {
+    TrafficGen::new(&cfg.corpus, n_speakers, seed)
+}
+
+/// Run the full offline recipe in-process (synth → UBM → extractor →
+/// backend) and assemble the serving bundle. At [`tiny_serve_config`]
+/// dims this takes seconds, which is what lets `serve-bench` and the
+/// serve tests run standalone, without a pre-trained work dir.
+pub fn train_tiny_bundle(cfg: &Config, seed: u64) -> Result<ModelBundle> {
+    let workers = default_workers();
+    let corpus = generate_corpus(&cfg.corpus)?;
+    let (ubm, _) = crate::gmm::train_ubm(&corpus.train, &cfg.ubm, seed)?;
+    let mut setup = TrainSetup { cfg, feats: &corpus.train, diag: ubm.diag, full: ubm.full };
+    let variant = TrainVariant {
+        formulation: Formulation::Augmented,
+        min_divergence: true,
+        sigma_update: false,
+        realign_every: None,
+    };
+    let (tvm, _) = crate::coordinator::train_tvm(
+        &mut setup,
+        variant,
+        cfg.tvm.iters,
+        seed,
+        ComputePath::CpuRef,
+        None,
+        &mut |_| None,
+    )?;
+    // backend on the training i-vectors
+    let posts = align_archive_cpu(
+        &setup.diag,
+        &setup.full,
+        &corpus.train,
+        cfg.tvm.top_k,
+        cfg.tvm.min_post,
+        workers,
+    );
+    let (bw, _) = stats_from_posts(&corpus.train, &posts, cfg.ubm.components, workers);
+    let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &tvm)).collect();
+    let ivecs = extract_cpu(&tvm, &utts, workers);
+    let spk_ids: Vec<String> = corpus.train.utts.iter().map(|u| u.spk_id.clone()).collect();
+    let labels = crate::coordinator::stages::dense_labels(&spk_ids);
+    let backend = Backend::train(
+        &ivecs,
+        &labels,
+        &BackendOpts { lda_dim: cfg.backend.lda_dim, plda_iters: cfg.backend.plda_iters, whiten: false },
+    )?;
+    Ok(ModelBundle {
+        diag: setup.diag,
+        full: setup.full,
+        tvm,
+        backend,
+        top_k: cfg.tvm.top_k,
+        min_post: cfg.tvm.min_post,
+    })
+}
+
+/// Load-replay parameters.
+#[derive(Debug, Clone)]
+pub struct ServeBenchOpts {
+    /// Speakers enrolled before the load phase.
+    pub speakers: usize,
+    /// Enrollment utterances per speaker.
+    pub enroll_utts: usize,
+    /// Verify requests replayed (half target, half impostor trials).
+    pub requests: usize,
+    /// Concurrent client threads.
+    pub concurrency: usize,
+}
+
+/// One load run's results.
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    pub requests: usize,
+    pub concurrency: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub verify: LatencySummary,
+    pub enroll: LatencySummary,
+    pub dispatched_batches: u64,
+    pub batched_requests: u64,
+    /// Mean requests per dispatched E-step batch (from
+    /// [`crate::serve::EngineMetrics::mean_batch`]).
+    pub mean_batch: f64,
+    pub target_mean: f64,
+    pub impostor_mean: f64,
+}
+
+impl ServeBenchReport {
+    /// One JSON object (no trailing newline) for the BENCH_2 report.
+    pub fn json_fragment(&self) -> String {
+        format!(
+            "{{\"requests\": {}, \"concurrency\": {}, \"wall_s\": {:.6}, \
+\"throughput_rps\": {:.2}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \
+\"mean_ms\": {:.4}, \"max_ms\": {:.4}, \"mean_batch\": {:.3}, \
+\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
+            self.requests,
+            self.concurrency,
+            self.wall_s,
+            self.throughput_rps,
+            self.verify.p50_s * 1e3,
+            self.verify.p95_s * 1e3,
+            self.verify.p99_s * 1e3,
+            self.verify.mean_s * 1e3,
+            self.verify.max_s * 1e3,
+            self.mean_batch,
+            self.target_mean,
+            self.impostor_mean,
+        )
+    }
+}
+
+/// Enroll `opts.speakers` from the traffic source, then replay
+/// `opts.requests` verify requests from `opts.concurrency` client
+/// threads (alternating target and impostor trials). Expects a fresh
+/// engine — its latency histograms become the report.
+pub fn run_verify_load(
+    engine: &Engine,
+    traffic: &TrafficGen,
+    opts: &ServeBenchOpts,
+) -> Result<ServeBenchReport> {
+    let n_spk = opts.speakers.min(traffic.n_speakers());
+    // with one speaker, "impostor" trials would silently score the
+    // claimed speaker against itself — refuse rather than mislead
+    anyhow::ensure!(
+        n_spk >= 2,
+        "verify load needs at least 2 speakers for impostor trials (got {n_spk})"
+    );
+    for s in 0..n_spk {
+        let id = traffic.speaker_id(s);
+        for k in 0..opts.enroll_utts.max(1) {
+            engine.enroll(&id, &traffic.utterance(s, k as u64))?;
+        }
+    }
+
+    let sw = Stopwatch::start();
+    let concurrency = opts.concurrency.max(1);
+    // (target_sum, target_n, impostor_sum, impostor_n) per client
+    let partials: Result<Vec<(f64, usize, f64, usize)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|c| {
+                scope.spawn(move || -> Result<(f64, usize, f64, usize)> {
+                    let mut acc = (0.0, 0usize, 0.0, 0usize);
+                    let mut i = c;
+                    while i < opts.requests {
+                        let claimed = i % n_spk;
+                        let target = i % 2 == 0;
+                        let actual = if target { claimed } else { (claimed + 1) % n_spk };
+                        // verification keys live past the enrollment keys
+                        let feats = traffic.utterance(actual, 1_000 + i as u64);
+                        let out = engine.verify(&traffic.speaker_id(claimed), &feats)?;
+                        if target {
+                            acc.0 += out.score;
+                            acc.1 += 1;
+                        } else {
+                            acc.2 += out.score;
+                            acc.3 += 1;
+                        }
+                        i += concurrency;
+                    }
+                    Ok(acc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let partials = partials.context("verify load failed")?;
+    let wall_s = sw.elapsed_s();
+
+    let (mut ts, mut tn, mut is, mut in_) = (0.0, 0usize, 0.0, 0usize);
+    for (a, b, c, d) in partials {
+        ts += a;
+        tn += b;
+        is += c;
+        in_ += d;
+    }
+    let m = engine.metrics();
+    Ok(ServeBenchReport {
+        requests: opts.requests,
+        concurrency,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { opts.requests as f64 / wall_s } else { f64::INFINITY },
+        verify: m.verify,
+        enroll: m.enroll,
+        dispatched_batches: m.dispatched_batches,
+        batched_requests: m.batched_requests,
+        mean_batch: m.mean_batch(),
+        target_mean: if tn > 0 { ts / tn as f64 } else { 0.0 },
+        impostor_mean: if in_ > 0 { is / in_ as f64 } else { 0.0 },
+    })
+}
+
+/// Run the same load twice — once through `serve_cfg` (micro-batching
+/// on) and once through a `batch_utts = 1` twin — the comparison the
+/// `serve-bench` CLI and the `speed_report` example both report.
+pub fn run_batched_vs_unbatched(
+    bundle: ModelBundle,
+    serve_cfg: &crate::config::ServeConfig,
+    traffic: &TrafficGen,
+    opts: &ServeBenchOpts,
+) -> Result<(ServeBenchReport, ServeBenchReport)> {
+    let batched = {
+        let engine = Engine::new(bundle.clone(), serve_cfg);
+        run_verify_load(&engine, traffic, opts)?
+    };
+    let unbatched = {
+        let mut solo = serve_cfg.clone();
+        solo.batch_utts = 1;
+        let engine = Engine::new(bundle, &solo);
+        run_verify_load(&engine, traffic, opts)?
+    };
+    Ok((batched, unbatched))
+}
+
+/// Write the `BENCH_2.json` serving report from named load runs.
+pub fn write_bench2_json(
+    path: impl AsRef<Path>,
+    variants: &[(&str, &ServeBenchReport)],
+) -> Result<()> {
+    let mut body = String::from("{\n  \"issue\": 2,\n  \"serving\": {\n");
+    for (i, (name, report)) in variants.iter().enumerate() {
+        body.push_str(&format!("    \"{name}\": {}", report.json_fragment()));
+        body.push_str(if i + 1 < variants.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  }\n}\n");
+    std::fs::write(&path, body)
+        .with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_report_json_shape() {
+        let report = ServeBenchReport {
+            requests: 100,
+            concurrency: 4,
+            wall_s: 0.5,
+            throughput_rps: 200.0,
+            verify: LatencySummary {
+                count: 100,
+                mean_s: 0.002,
+                p50_s: 0.0015,
+                p95_s: 0.004,
+                p99_s: 0.006,
+                max_s: 0.008,
+            },
+            enroll: LatencySummary {
+                count: 8,
+                mean_s: 0.002,
+                p50_s: 0.0015,
+                p95_s: 0.004,
+                p99_s: 0.006,
+                max_s: 0.008,
+            },
+            dispatched_batches: 25,
+            batched_requests: 100,
+            mean_batch: 4.0,
+            target_mean: 3.0,
+            impostor_mean: -2.0,
+        };
+        let frag = report.json_fragment();
+        assert!(frag.contains("\"p99_ms\": 6.0000"), "{frag}");
+        assert!(frag.contains("\"throughput_rps\": 200.00"), "{frag}");
+
+        let dir = std::env::temp_dir().join("ivtv_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_2.json");
+        write_bench2_json(&p, &[("batched", &report), ("unbatched", &report)]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"issue\": 2"));
+        assert!(text.contains("\"batched\": {"));
+        assert!(text.contains("\"unbatched\": {"));
+    }
+}

@@ -1,0 +1,288 @@
+//! The serving model bundle: every artifact a request needs, loaded as
+//! one immutable unit so the engine can hot-swap it atomically.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::backend::Backend;
+use crate::config::Config;
+use crate::gmm::{BatchAligner, DiagGmm, FullGmm, PackedDiag};
+use crate::io::Serialize;
+use crate::ivector::{extract_cpu, EstepConsts, TvModel, UttStats};
+use crate::linalg::Mat;
+use crate::stats::BwStats;
+
+/// Everything the online paths need: the UBM pair for alignment, the
+/// total-variability model for extraction, the LDA+PLDA backend for
+/// scoring, and the alignment pruning parameters (baked in so a bundle
+/// is self-contained — serving must not depend on the offline config
+/// that trained it).
+#[derive(Debug, Clone)]
+pub struct ModelBundle {
+    pub diag: DiagGmm,
+    pub full: FullGmm,
+    pub tvm: TvModel,
+    pub backend: Backend,
+    /// Top-K Gaussians kept per frame in alignment.
+    pub top_k: usize,
+    /// Posterior pruning threshold.
+    pub min_post: f64,
+}
+
+impl ModelBundle {
+    /// Assemble from the per-stage artifacts the offline `pipeline`
+    /// writes into a work dir (preferring the realignment-updated
+    /// `ubm_final.*` the extractor was trained against, falling back to
+    /// the pre-training UBM).
+    pub fn from_work_dir(work: &str, cfg: &Config) -> Result<Self> {
+        let (diag, full) = if Path::new(&format!("{work}/ubm_final.diag")).exists() {
+            (
+                crate::io::load(format!("{work}/ubm_final.diag"))?,
+                crate::io::load(format!("{work}/ubm_final.full"))?,
+            )
+        } else {
+            (
+                crate::io::load(format!("{work}/ubm.diag"))
+                    .context("no UBM in work dir — run `ivector-tv pipeline` first")?,
+                crate::io::load(format!("{work}/ubm.full"))?,
+            )
+        };
+        let tvm = crate::io::load(format!("{work}/tvm.bin"))
+            .context("no extractor in work dir — run `ivector-tv train` first")?;
+        let backend = crate::io::load(format!("{work}/backend.bin"))
+            .context("no backend in work dir — run `ivector-tv backend` first")?;
+        Ok(Self { diag, full, tvm, backend, top_k: cfg.tvm.top_k, min_post: cfg.tvm.min_post })
+    }
+
+    /// Cheap content fingerprint (FNV-1a over the dims, the alignment
+    /// parameters, the prior mean, and bounded stride-samples of every
+    /// parameter block that shapes an i-vector: T, **and** the diag +
+    /// full UBM the alignment runs on — a changed UBM changes the
+    /// Baum-Welch statistics, which is a different i-vector space even
+    /// under an identical T). Enrollments are tagged with it, so
+    /// verification can refuse to score across genuinely different
+    /// models after a hot swap while a value-identical bundle reload
+    /// keeps matching. Not cryptographic — a collision needs a
+    /// retrained model agreeing on every sampled parameter bit.
+    pub fn fingerprint(&self) -> u64 {
+        fn fold(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        // stride-sample a flat f64 block so each block costs O(16k)
+        // elements at any scale
+        fn fold_slice(mut h: u64, data: &[f64]) -> u64 {
+            let stride = (data.len() >> 14).max(1);
+            let mut idx = 0usize;
+            while idx < data.len() {
+                h = fold(h, data[idx].to_bits());
+                idx += stride;
+            }
+            h
+        }
+        let (c, f, r) = (self.tvm.num_components(), self.tvm.feat_dim(), self.tvm.rank());
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for d in [c as u64, f as u64, r as u64, self.top_k as u64] {
+            h = fold(h, d);
+        }
+        h = fold(h, self.min_post.to_bits());
+        for &p in &self.tvm.prior_mean {
+            h = fold(h, p.to_bits());
+        }
+        // T (the extractor space)
+        let per = f * r;
+        let total = c * per;
+        let stride = (total >> 16).max(1);
+        let mut idx = 0usize;
+        while idx < total {
+            h = fold(h, self.tvm.t[idx / per].as_slice()[idx % per].to_bits());
+            idx += stride;
+        }
+        // the alignment models (statistics space)
+        h = fold_slice(h, &self.diag.weights);
+        h = fold_slice(h, self.diag.means.as_slice());
+        h = fold_slice(h, self.diag.vars.as_slice());
+        h = fold_slice(h, &self.full.weights);
+        h = fold_slice(h, self.full.means.as_slice());
+        for cov in &self.full.covs {
+            h = fold_slice(h, cov.as_slice());
+        }
+        h
+    }
+
+    /// Load `work/bundle.bin` when present (written by `pipeline`),
+    /// falling back to assembling from the per-stage artifacts. Rejects
+    /// a bundle whose feature dim disagrees with `cfg` — serving
+    /// callers sample traffic at the config's dims, so a mismatch would
+    /// otherwise surface as an assert deep inside the aligner.
+    pub fn load_auto(work: &str, cfg: &Config) -> Result<Self> {
+        let bundled = format!("{work}/bundle.bin");
+        let bundle: Self = if Path::new(&bundled).exists() {
+            crate::io::load(&bundled)?
+        } else {
+            Self::from_work_dir(work, cfg)?
+        };
+        anyhow::ensure!(
+            bundle.tvm.feat_dim() == cfg.feat_dim(),
+            "bundle feature dim {} does not match config dim {} — pass the \
+             --config the pipeline was trained with",
+            bundle.tvm.feat_dim(),
+            cfg.feat_dim()
+        );
+        Ok(bundle)
+    }
+}
+
+impl Serialize for ModelBundle {
+    fn write(&self, w: &mut crate::io::BinWriter) -> Result<()> {
+        self.diag.write(w)?;
+        self.full.write(w)?;
+        self.tvm.write(w)?;
+        self.backend.write(w)?;
+        w.write_u32(self.top_k as u32)?;
+        w.write_f64(self.min_post)
+    }
+
+    fn read(r: &mut crate::io::BinReader) -> Result<Self> {
+        Ok(Self {
+            diag: DiagGmm::read(r)?,
+            full: FullGmm::read(r)?,
+            tvm: TvModel::read(r)?,
+            backend: Backend::read(r)?,
+            top_k: r.read_u32()? as usize,
+            min_post: r.read_f64()?,
+        })
+    }
+}
+
+/// An immutable bundle plus its derived per-bundle constants, shared as
+/// `Arc<ServeModel>` between request threads and batch workers. Built
+/// once per (hot-)load; the batched E-step constants are the serving
+/// mirror of what the trainer rebuilds each EM iteration.
+#[derive(Debug)]
+pub struct ServeModel {
+    pub bundle: ModelBundle,
+    /// Batched E-step constants (flat `TᵀΣ⁻¹`, packed `TᵀΣ⁻¹T`).
+    pub consts: EstepConsts,
+    /// Packed diagonal alignment weights, shared by every request's
+    /// aligner (the pack is per-model, not per-request).
+    packed_diag: PackedDiag,
+    /// [`ModelBundle::fingerprint`], precomputed — tags enrollments so
+    /// cross-model scoring after a hot swap is refused.
+    pub fingerprint: u64,
+}
+
+impl ServeModel {
+    pub fn new(bundle: ModelBundle) -> Self {
+        let consts = bundle.tvm.precompute_consts();
+        let packed_diag = PackedDiag::new(&bundle.diag);
+        let fingerprint = bundle.fingerprint();
+        Self { bundle, consts, packed_diag, fingerprint }
+    }
+
+    /// i-vector dimension.
+    pub fn rank(&self) -> usize {
+        self.consts.r
+    }
+
+    /// The request-thread "loader" stage: align the utterance with the
+    /// batched CPU aligner and accumulate its Baum-Welch statistics —
+    /// the fixed-size representation the micro-batched E-step consumes
+    /// (identical to the offline `extract` stage's per-utterance path).
+    pub fn utt_stats(&self, feats: &Mat) -> UttStats {
+        let mut aligner = BatchAligner::with_packed(
+            &self.packed_diag,
+            &self.bundle.full,
+            self.bundle.top_k,
+            self.bundle.min_post,
+        );
+        let posts = aligner.align_utterance(feats);
+        let bw = BwStats::accumulate(feats, &posts, self.bundle.diag.num_components(), false);
+        UttStats::from_bw(&bw, &self.bundle.tvm)
+    }
+
+    /// Single-threaded oracle extraction (no batcher): exactly the
+    /// offline [`extract_cpu`] path on this utterance.
+    pub fn extract_serial(&self, feats: &Mat) -> Vec<f64> {
+        let stats = self.utt_stats(feats);
+        extract_cpu(&self.bundle.tvm, std::slice::from_ref(&stats), 1).row(0).to_vec()
+    }
+
+    /// Project one raw i-vector through the backend chain
+    /// (center → [whiten] → length-norm → LDA).
+    pub fn project(&self, ivector: &[f64]) -> Vec<f64> {
+        let x = Mat::from_vec(ivector.to_vec(), 1, ivector.len());
+        self.bundle.backend.project(&x).row(0).to_vec()
+    }
+
+    /// PLDA log-likelihood ratio between an enrolled (mean) i-vector
+    /// and a test i-vector, both raw — projection happens here.
+    pub fn score(&self, enrolled: &[f64], test: &[f64]) -> f64 {
+        let e = self.project(enrolled);
+        let t = self.project(test);
+        self.bundle.backend.plda.score_pair(&e, &t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bench::{tiny_serve_config, train_tiny_bundle};
+    use super::*;
+
+    #[test]
+    fn bundle_roundtrips_through_disk() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let dir = std::env::temp_dir().join("ivtv_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bundle.bin");
+        crate::io::save(&bundle, &p).unwrap();
+        let back: ModelBundle = crate::io::load(&p).unwrap();
+        assert_eq!(back.top_k, bundle.top_k);
+        assert_eq!(back.min_post, bundle.min_post);
+        assert!(back.tvm.t[0].approx_eq(&bundle.tvm.t[0], 0.0));
+        assert!(back.full.means.approx_eq(&bundle.full.means, 0.0));
+        // the reloaded bundle scores identically
+        let world = super::super::bench::tiny_traffic(&cfg, 2, 9);
+        let a = ServeModel::new(bundle);
+        let b = ServeModel::new(back);
+        let u = world.utterance(0, 0);
+        let iva = a.extract_serial(&u);
+        let ivb = b.extract_serial(&u);
+        for (x, y) in iva.iter().zip(&ivb) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        assert!((a.score(&iva, &iva) - b.score(&ivb, &ivb)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_model_scores_separate_speakers() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let model = ServeModel::new(bundle);
+        let world = super::super::bench::tiny_traffic(&cfg, 2, 31);
+        // average enrollment, mean score over several test draws (a
+        // single trial pair at tiny dims would be noise-dominated)
+        let mut enroll = vec![0.0; model.rank()];
+        for k in 0..3 {
+            let iv = model.extract_serial(&world.utterance(0, k));
+            for (e, x) in enroll.iter_mut().zip(&iv) {
+                *e += x / 3.0;
+            }
+        }
+        let mut target = 0.0;
+        let mut impostor = 0.0;
+        let trials = 6;
+        for k in 0..trials {
+            target += model.score(&enroll, &model.extract_serial(&world.utterance(0, 100 + k)));
+            impostor +=
+                model.score(&enroll, &model.extract_serial(&world.utterance(1, 100 + k)));
+        }
+        assert!(
+            target > impostor,
+            "mean target {} must out-score mean impostor {}",
+            target / trials as f64,
+            impostor / trials as f64
+        );
+    }
+}

@@ -1,0 +1,465 @@
+//! The serving engine: an immutable, atomically hot-swappable model
+//! bundle behind `extract` / `enroll` / `verify`.
+//!
+//! Request flow (the paper's Fig. 1 pipeline reshaped for serving):
+//! the request thread plays the CPU-loader role — alignment + Baum-Welch
+//! statistics against its model snapshot — then parks on a response
+//! channel while the micro-batcher coalesces concurrent requests into
+//! one GEMM-shaped E-step dispatch. Enrollments land in the sharded
+//! [`Registry`]; verification scores the averaged enrollment i-vector
+//! against the request's i-vector through the bundle's PLDA backend.
+
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ServeConfig;
+use crate::linalg::Mat;
+use crate::metrics::{LatencyHistogram, LatencySummary};
+
+use super::batcher::MicroBatcher;
+use super::bundle::{ModelBundle, ServeModel};
+use super::registry::Registry;
+
+/// One verification result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VerifyOutcome {
+    /// PLDA log-likelihood ratio (higher = more likely the claimed
+    /// speaker; threshold-free, like the offline `eval` scores).
+    pub score: f64,
+    /// Enrollment utterances behind the claimed speaker's profile.
+    pub enrolled_utts: u64,
+}
+
+/// Point-in-time engine counters.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineMetrics {
+    pub uptime_s: f64,
+    pub extract: LatencySummary,
+    pub enroll: LatencySummary,
+    pub verify: LatencySummary,
+    pub dispatched_batches: u64,
+    pub batched_requests: u64,
+    pub enrolled_speakers: usize,
+}
+
+impl EngineMetrics {
+    /// Mean requests per dispatched E-step batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.dispatched_batches == 0 {
+            return 0.0;
+        }
+        self.batched_requests as f64 / self.dispatched_batches as f64
+    }
+}
+
+/// The long-lived serving engine. `&Engine` is `Sync`: request threads
+/// call `extract`/`enroll`/`verify` concurrently while an operator
+/// thread may [`Engine::swap_bundle`] at any time.
+pub struct Engine {
+    /// The current model, swapped atomically; requests snapshot the
+    /// `Arc` once and stay on that snapshot end-to-end.
+    model: RwLock<Arc<ServeModel>>,
+    registry: Registry,
+    batcher: MicroBatcher,
+    extract_lat: LatencyHistogram,
+    enroll_lat: LatencyHistogram,
+    verify_lat: LatencyHistogram,
+    started: Instant,
+}
+
+impl Engine {
+    /// Spin up the worker pool around a bundle.
+    pub fn new(bundle: ModelBundle, opts: &ServeConfig) -> Self {
+        Self {
+            model: RwLock::new(Arc::new(ServeModel::new(bundle))),
+            registry: Registry::new(opts.registry_shards),
+            batcher: MicroBatcher::new(
+                opts.batch_utts,
+                Duration::from_micros(opts.flush_us),
+                opts.workers,
+                opts.queue_cap,
+            ),
+            extract_lat: LatencyHistogram::new(),
+            enroll_lat: LatencyHistogram::new(),
+            verify_lat: LatencyHistogram::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Snapshot the current model.
+    pub fn model(&self) -> Arc<ServeModel> {
+        self.model.read().unwrap().clone()
+    }
+
+    /// Atomically replace the model bundle. In-flight requests finish
+    /// on the snapshot they started with; the micro-batcher never mixes
+    /// snapshots within a batch.
+    pub fn swap_bundle(&self, bundle: ModelBundle) {
+        let next = Arc::new(ServeModel::new(bundle));
+        *self.model.write().unwrap() = next;
+    }
+
+    /// The speaker registry (persistence, admin).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Extraction against an explicit snapshot — the shared inner path.
+    fn extract_with(&self, model: &Arc<ServeModel>, feats: &Mat) -> Result<Vec<f64>> {
+        // announce before the loader work so batch workers know a
+        // co-rider is on the way and hold sub-size batches for it
+        let token = self.batcher.begin_request();
+        let stats = model.utt_stats(feats);
+        let (tx, rx) = sync_channel(1);
+        self.batcher.submit(stats, Arc::clone(model), tx)?;
+        drop(token); // queued: no longer "on the way"
+        rx.recv().map_err(|_| anyhow!("serving worker dropped the response"))
+    }
+
+    /// Extract one i-vector for a feature matrix (frames × dim).
+    pub fn extract(&self, feats: &Mat) -> Result<Vec<f64>> {
+        let t0 = Instant::now();
+        let model = self.model();
+        let iv = self.extract_with(&model, feats)?;
+        self.extract_lat.record(t0.elapsed().as_secs_f64());
+        Ok(iv)
+    }
+
+    /// Enroll one utterance for a speaker (averaged with any previous
+    /// enrollments); returns the speaker's new utterance count. The
+    /// profile is tagged with the model fingerprint, so enrollments
+    /// never mix models across a hot swap.
+    pub fn enroll(&self, speaker_id: &str, feats: &Mat) -> Result<u64> {
+        let t0 = Instant::now();
+        let model = self.model();
+        let iv = self.extract_with(&model, feats)?;
+        let count = self.registry.enroll(speaker_id, &iv, model.fingerprint)?;
+        self.enroll_lat.record(t0.elapsed().as_secs_f64());
+        Ok(count)
+    }
+
+    /// Verify an utterance against an enrolled speaker. Refuses to
+    /// score a profile enrolled under a different model than the
+    /// current bundle — i-vectors from different total-variability
+    /// spaces are not comparable, so the mismatch is an error rather
+    /// than a plausible-looking meaningless score.
+    pub fn verify(&self, speaker_id: &str, feats: &Mat) -> Result<VerifyOutcome> {
+        let t0 = Instant::now();
+        let model = self.model();
+        let profile = self
+            .registry
+            .profile(speaker_id)
+            .ok_or_else(|| anyhow!("speaker `{speaker_id}` is not enrolled"))?;
+        anyhow::ensure!(
+            profile.model_fp == model.fingerprint,
+            "speaker `{speaker_id}` was enrolled under a different model — \
+             re-enroll after the bundle swap"
+        );
+        let iv = self.extract_with(&model, feats)?;
+        let score = model.score(&profile.mean(), &iv);
+        self.verify_lat.record(t0.elapsed().as_secs_f64());
+        Ok(VerifyOutcome { score, enrolled_utts: profile.count })
+    }
+
+    /// Counters snapshot.
+    pub fn metrics(&self) -> EngineMetrics {
+        EngineMetrics {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            extract: self.extract_lat.summary(),
+            enroll: self.enroll_lat.summary(),
+            verify: self.verify_lat.summary(),
+            dispatched_batches: self.batcher.dispatched_batches(),
+            batched_requests: self.batcher.batched_requests(),
+            enrolled_speakers: self.registry.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, OnceLock};
+
+    use super::super::bench::{tiny_serve_config, tiny_traffic, train_tiny_bundle};
+    use super::*;
+    use crate::ivector::extract_cpu;
+
+    /// One tiny bundle shared across the serve tests (training it takes
+    /// a few seconds; every test needs the same deterministic model).
+    fn shared_bundle() -> &'static ModelBundle {
+        static BUNDLE: OnceLock<ModelBundle> = OnceLock::new();
+        BUNDLE.get_or_init(|| train_tiny_bundle(&tiny_serve_config(), 5).unwrap())
+    }
+
+    fn opts(batch_utts: usize, flush_us: u64, workers: usize) -> ServeConfig {
+        ServeConfig { batch_utts, flush_us, workers, registry_shards: 4, queue_cap: 256 }
+    }
+
+    #[test]
+    fn prop_serve_extraction_matches_extract_cpu() {
+        // acceptance: batched serve-path extraction ≡ extract_cpu on the
+        // same features (≤ 1e-10)
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 4, 77);
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 300, 2));
+        let model = engine.model();
+        crate::proptest::forall(
+            20_2507,
+            16,
+            |rng| {
+                let s = rng.below(4);
+                let k = rng.below(64) as u64;
+                (s, k)
+            },
+            |&(s, k)| {
+                let feats = traffic.utterance(s, k);
+                let got = engine.extract(&feats).map_err(|e| e.to_string())?;
+                let stats = model.utt_stats(&feats);
+                let want = extract_cpu(&model.bundle.tvm, std::slice::from_ref(&stats), 1);
+                for (j, (g, w)) in got.iter().zip(want.row(0)).enumerate() {
+                    if (g - w).abs() > 1e-10 * (1.0 + w.abs()) {
+                        return Err(format!("coord {j}: {g} vs {w}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_into_batches() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 4, 13);
+        // one worker + generous deadline: near-simultaneous requests
+        // must ride shared dispatches
+        let engine = Engine::new(shared_bundle().clone(), &opts(8, 200_000, 1));
+        let n = 16;
+        let barrier = std::sync::Barrier::new(n);
+        std::thread::scope(|scope| {
+            for i in 0..n {
+                let engine = &engine;
+                let traffic = &traffic;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let feats = traffic.utterance(i % 4, i as u64);
+                    barrier.wait();
+                    engine.extract(&feats).unwrap();
+                });
+            }
+        });
+        let m = engine.metrics();
+        assert_eq!(m.batched_requests, 16);
+        assert!(m.dispatched_batches >= 2, "batches {}", m.dispatched_batches);
+        // inbound-aware early flush makes exact batch counts scheduling
+        // dependent; requiring strictly fewer batches than requests
+        // still proves coalescing happened
+        assert!(
+            m.dispatched_batches < 16,
+            "16 near-simultaneous requests should coalesce, got {} batches",
+            m.dispatched_batches
+        );
+        assert_eq!(m.extract.count, 16);
+    }
+
+    #[test]
+    fn verify_after_incompatible_swap_is_rejected() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 17);
+        let bundle = shared_bundle().clone();
+        let engine = Engine::new(bundle.clone(), &opts(2, 300, 1));
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        // a value-identical swap keeps the profile scorable
+        engine.swap_bundle(bundle.clone());
+        engine.verify(&id, &traffic.utterance(0, 1)).unwrap();
+        // a retrained-model stand-in: same dims, different parameters
+        let mut other = bundle;
+        *other.tvm.t[0].get_mut(0, 0) += 0.5;
+        engine.swap_bundle(other);
+        let err = engine.verify(&id, &traffic.utterance(0, 1)).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // mixing epochs within one profile is refused too
+        let err = engine.enroll(&id, &traffic.utterance(0, 2)).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // removing the stale profile unblocks enrollment under the new model
+        assert!(engine.registry().remove(&id));
+        engine.enroll(&id, &traffic.utterance(0, 2)).unwrap();
+        engine.verify(&id, &traffic.utterance(0, 3)).unwrap();
+    }
+
+    #[test]
+    fn unknown_speaker_is_rejected() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 3);
+        let engine = Engine::new(shared_bundle().clone(), &opts(2, 200, 1));
+        let err = engine.verify("nobody", &traffic.utterance(0, 0)).unwrap_err();
+        assert!(err.to_string().contains("not enrolled"), "{err}");
+    }
+
+    #[test]
+    fn verify_scores_separate_target_from_impostor() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 21);
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 500, 2));
+        let id = traffic.speaker_id(0);
+        for k in 0..3 {
+            engine.enroll(&id, &traffic.utterance(0, k)).unwrap();
+        }
+        // mean over several trials — a single pair at tiny dims is noisy
+        let mut target = 0.0;
+        let mut impostor = 0.0;
+        for k in 50..56 {
+            let t = engine.verify(&id, &traffic.utterance(0, k)).unwrap();
+            assert_eq!(t.enrolled_utts, 3);
+            target += t.score;
+            impostor += engine.verify(&id, &traffic.utterance(1, k)).unwrap().score;
+        }
+        assert!(
+            target > impostor,
+            "mean target {} must out-score mean impostor {}",
+            target / 6.0,
+            impostor / 6.0
+        );
+    }
+
+    /// Satellite acceptance: N threads enroll/verify against one engine
+    /// while hot swaps replace the bundle mid-flight — no lost
+    /// enrollments, scores identical to the single-threaded oracle.
+    #[test]
+    fn concurrent_enroll_verify_with_hot_swap_matches_oracle() {
+        let cfg = tiny_serve_config();
+        let bundle = shared_bundle().clone();
+        let oracle = ServeModel::new(bundle.clone());
+        // speakers 0..8 owned by the worker threads; 8 is the shared
+        // contended speaker every thread also enrolls
+        let traffic = tiny_traffic(&cfg, 9, 99);
+        let engine = Engine::new(bundle.clone(), &opts(4, 1_000, 2));
+        let n_threads = 4usize;
+        let enroll_utts = 2usize;
+        let running = AtomicBool::new(true);
+        let scores: Mutex<Vec<(usize, f64, f64)>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|scope| {
+            // hot-swapper: replaces the bundle (with identical values)
+            // while requests are in flight
+            let swapper = {
+                let engine = &engine;
+                let bundle = &bundle;
+                let running = &running;
+                scope.spawn(move || {
+                    while running.load(Ordering::Relaxed) {
+                        engine.swap_bundle(bundle.clone());
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                })
+            };
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let engine = &engine;
+                    let traffic = &traffic;
+                    let scores = &scores;
+                    scope.spawn(move || {
+                        for rep in 0..2 {
+                            let spk = t * 2 + rep;
+                            let id = traffic.speaker_id(spk);
+                            for k in 0..enroll_utts {
+                                engine.enroll(&id, &traffic.utterance(spk, k as u64)).unwrap();
+                            }
+                            // contended speaker: identical utterance from
+                            // every thread, so the running sum is exact
+                            // in any interleaving
+                            engine.enroll("shared", &traffic.utterance(8, 0)).unwrap();
+                            let target =
+                                engine.verify(&id, &traffic.utterance(spk, 100)).unwrap();
+                            let impostor = engine
+                                .verify(&id, &traffic.utterance((spk + 1) % 8, 100))
+                                .unwrap();
+                            scores.lock().unwrap().push((spk, target.score, impostor.score));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            running.store(false, Ordering::Relaxed);
+            swapper.join().unwrap();
+        });
+
+        // no lost enrollments under contention
+        let reg = engine.registry();
+        assert_eq!(reg.len(), 9, "8 per-thread speakers + the shared one");
+        assert_eq!(
+            reg.profile("shared").unwrap().count,
+            (n_threads * 2) as u64,
+            "every thread's shared enrollments must land"
+        );
+        assert_eq!(reg.total_enrollments(), (8 * enroll_utts + n_threads * 2) as u64);
+        for spk in 0..8 {
+            assert_eq!(
+                reg.profile(&traffic.speaker_id(spk)).unwrap().count,
+                enroll_utts as u64
+            );
+        }
+
+        // scores identical to the single-threaded oracle
+        let results = scores.into_inner().unwrap();
+        assert_eq!(results.len(), 8);
+        for (spk, target, impostor) in results {
+            let mut sum = vec![0.0; oracle.rank()];
+            for k in 0..enroll_utts {
+                let iv = oracle.extract_serial(&traffic.utterance(spk, k as u64));
+                for (s, x) in sum.iter_mut().zip(&iv) {
+                    *s += x;
+                }
+            }
+            let mean: Vec<f64> = sum.iter().map(|&x| x / enroll_utts as f64).collect();
+            let want_t =
+                oracle.score(&mean, &oracle.extract_serial(&traffic.utterance(spk, 100)));
+            let want_i = oracle.score(
+                &mean,
+                &oracle.extract_serial(&traffic.utterance((spk + 1) % 8, 100)),
+            );
+            assert!(
+                (target - want_t).abs() <= 1e-12 * (1.0 + want_t.abs()),
+                "spk {spk}: target {target} vs oracle {want_t}"
+            );
+            assert!(
+                (impostor - want_i).abs() <= 1e-12 * (1.0 + want_i.abs()),
+                "spk {spk}: impostor {impostor} vs oracle {want_i}"
+            );
+        }
+    }
+
+    #[test]
+    fn verify_load_sustains_a_thousand_requests() {
+        // acceptance: ≥ 1000 verify requests against a tiny-config
+        // engine with micro-batching on
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 6, 42);
+        let engine = Engine::new(shared_bundle().clone(), &cfg.serve);
+        let report = super::super::bench::run_verify_load(
+            &engine,
+            &traffic,
+            &super::super::bench::ServeBenchOpts {
+                speakers: 6,
+                enroll_utts: 2,
+                requests: 1000,
+                concurrency: 8,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.verify.count, 1000);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.verify.p99_s >= report.verify.p50_s);
+        assert!(
+            report.target_mean > report.impostor_mean,
+            "target mean {} vs impostor mean {}",
+            report.target_mean,
+            report.impostor_mean
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Online serving subsystem: micro-batched i-vector extraction, the
+//! speaker registry, and the verification engine.
+//!
+//! The offline stack processes archives; this module turns the same
+//! batched kernels into a long-lived request/response service — the
+//! consequence of the paper's 3000×-real-time frame posteriors being
+//! fast enough that *online* i-vector extraction is practical:
+//!
+//! * [`ModelBundle`] / [`ServeModel`] — the immutable model unit
+//!   (UBM pair + total-variability model + LDA/PLDA backend) that
+//!   [`Engine`] hot-swaps atomically;
+//! * [`Engine`] — `extract` / `enroll` / `verify` over a dynamic
+//!   micro-batcher: request threads do the CPU loader work (alignment,
+//!   Baum-Welch statistics), worker threads drain the queue in
+//!   `batch_utts`-sized model-coherent batches through the same
+//!   [`crate::ivector::estep_batch_cpu`] GEMM path as training;
+//! * [`Registry`] — sharded-lock speaker store with enrollment
+//!   averaging and `io`-format persistence;
+//! * [`bench`] — the load-replay harness behind `serve-bench` and the
+//!   `BENCH_2.json` serving report.
+
+pub mod bench;
+mod batcher;
+mod bundle;
+mod engine;
+mod registry;
+
+pub use bundle::{ModelBundle, ServeModel};
+pub use engine::{Engine, EngineMetrics, VerifyOutcome};
+pub use registry::{Registry, SpeakerProfile};

@@ -1,0 +1,265 @@
+//! Concurrent speaker registry: enrollment state behind sharded locks.
+//!
+//! Enrollment is *averaging*: a speaker's profile accumulates the sum
+//! of raw enrollment i-vectors and the count, and verification scores
+//! against the running mean (the standard multi-session enrollment
+//! recipe — scoring the averaged i-vector). Shards keep unrelated
+//! speakers off the same mutex so enroll/verify traffic scales with
+//! cores instead of serializing on one registry lock.
+//!
+//! Every profile carries the fingerprint of the model it was enrolled
+//! under ([`crate::serve::ModelBundle::fingerprint`]): i-vectors from
+//! different total-variability spaces are not comparable, so mixing
+//! model epochs in one profile — or scoring across them — is an error
+//! the engine surfaces instead of a silently meaningless score.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::io::{BinReader, BinWriter};
+
+/// Accumulated enrollment state of one speaker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeakerProfile {
+    /// Number of enrollment utterances.
+    pub count: u64,
+    /// Sum of raw enrollment i-vectors (dim R).
+    pub sum: Vec<f64>,
+    /// Fingerprint of the model every enrollment used.
+    pub model_fp: u64,
+}
+
+impl SpeakerProfile {
+    /// The averaged enrollment i-vector.
+    pub fn mean(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        self.sum.iter().map(|&x| x / n).collect()
+    }
+}
+
+/// Sharded concurrent speaker store.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Vec<Mutex<HashMap<String, SpeakerProfile>>>,
+}
+
+impl Registry {
+    /// Create with `n_shards` lock shards (clamped to ≥ 1).
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            shards: (0..n_shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, speaker_id: &str) -> &Mutex<HashMap<String, SpeakerProfile>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        speaker_id.hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    /// Add one enrollment i-vector to `speaker_id` (creating the
+    /// profile on first enrollment); returns the new utterance count.
+    /// Fails if the speaker already holds enrollments from a different
+    /// model epoch — averaging across total-variability spaces would
+    /// corrupt the profile.
+    pub fn enroll(&self, speaker_id: &str, ivector: &[f64], model_fp: u64) -> Result<u64> {
+        let mut shard = self.shard(speaker_id).lock().unwrap();
+        let profile = shard.entry(speaker_id.to_string()).or_insert_with(|| SpeakerProfile {
+            count: 0,
+            sum: vec![0.0; ivector.len()],
+            model_fp,
+        });
+        ensure!(
+            profile.model_fp == model_fp,
+            "speaker `{speaker_id}` was enrolled under a different model — \
+             remove and re-enroll after a bundle swap"
+        );
+        assert_eq!(
+            profile.sum.len(),
+            ivector.len(),
+            "enrollment dim changed for speaker {speaker_id}"
+        );
+        for (s, &x) in profile.sum.iter_mut().zip(ivector) {
+            *s += x;
+        }
+        profile.count += 1;
+        Ok(profile.count)
+    }
+
+    /// Snapshot a speaker's profile (mean + count), if enrolled.
+    pub fn profile(&self, speaker_id: &str) -> Option<SpeakerProfile> {
+        self.shard(speaker_id).lock().unwrap().get(speaker_id).cloned()
+    }
+
+    /// Remove a speaker; returns whether it existed.
+    pub fn remove(&self, speaker_id: &str) -> bool {
+        self.shard(speaker_id).lock().unwrap().remove(speaker_id).is_some()
+    }
+
+    /// Number of enrolled speakers.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when no speaker is enrolled.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total enrollment utterances across all speakers.
+    pub fn total_enrollments(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(|p| p.count).sum::<u64>())
+            .sum()
+    }
+
+    /// All enrolled speaker ids, sorted (stable across shard layouts).
+    pub fn speaker_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Persist all profiles (sorted by id, so files are deterministic
+    /// regardless of shard count or enrollment order). The snapshot is
+    /// taken per speaker before the header is written, so a concurrent
+    /// `remove` between listing and reading simply drops that id from
+    /// the file instead of failing the save.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let snapshot: Vec<(String, SpeakerProfile)> = self
+            .speaker_ids()
+            .into_iter()
+            .filter_map(|id| self.profile(&id).map(|p| (id, p)))
+            .collect();
+        let mut w = BinWriter::create(path)?;
+        w.write_u64(snapshot.len() as u64)?;
+        for (id, p) in &snapshot {
+            w.write_string(id)?;
+            w.write_u64(p.count)?;
+            w.write_u64(p.model_fp)?;
+            w.write_u64(p.sum.len() as u64)?;
+            w.write_f64_slice(&p.sum)?;
+        }
+        w.finish()
+    }
+
+    /// Load a registry written by [`Registry::save`], distributing the
+    /// profiles over `n_shards` fresh shards.
+    pub fn load(path: impl AsRef<Path>, n_shards: usize) -> Result<Self> {
+        let mut r = BinReader::open(path)?;
+        let n = r.read_u64()? as usize;
+        let reg = Self::new(n_shards);
+        for _ in 0..n {
+            let id = r.read_string()?;
+            let count = r.read_u64()?;
+            let model_fp = r.read_u64()?;
+            let dim = r.read_u64()? as usize;
+            if dim > 1 << 20 {
+                bail!("i-vector dim {dim} implausible — corrupt registry file?");
+            }
+            let sum = r.read_f64_vec(dim)?;
+            let mut shard = reg.shard(&id).lock().unwrap();
+            shard.insert(id, SpeakerProfile { count, sum, model_fp });
+        }
+        Ok(reg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: u64 = 7;
+
+    #[test]
+    fn enrollment_averages() {
+        let reg = Registry::new(4);
+        assert!(reg.is_empty());
+        assert_eq!(reg.enroll("alice", &[1.0, 2.0], FP).unwrap(), 1);
+        assert_eq!(reg.enroll("alice", &[3.0, 4.0], FP).unwrap(), 2);
+        let p = reg.profile("alice").unwrap();
+        assert_eq!(p.count, 2);
+        assert_eq!(p.mean(), vec![2.0, 3.0]);
+        assert!(reg.profile("bob").is_none());
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.total_enrollments(), 2);
+    }
+
+    #[test]
+    fn mixed_model_epochs_rejected() {
+        let reg = Registry::new(2);
+        reg.enroll("a", &[1.0], 1).unwrap();
+        let err = reg.enroll("a", &[1.0], 2).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // count unchanged by the rejected enrollment
+        assert_eq!(reg.profile("a").unwrap().count, 1);
+        // after removal the speaker can enroll under the new model
+        assert!(reg.remove("a"));
+        assert_eq!(reg.enroll("a", &[1.0], 2).unwrap(), 1);
+    }
+
+    #[test]
+    fn remove_and_ids() {
+        let reg = Registry::new(3);
+        for id in ["s2", "s0", "s1"] {
+            reg.enroll(id, &[1.0], FP).unwrap();
+        }
+        assert_eq!(reg.speaker_ids(), vec!["s0", "s1", "s2"]);
+        assert!(reg.remove("s1"));
+        assert!(!reg.remove("s1"));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let reg = Registry::new(5);
+        reg.enroll("a", &[1.0, -1.0], FP).unwrap();
+        reg.enroll("a", &[2.0, -2.0], FP).unwrap();
+        reg.enroll("b", &[0.5, 0.25], 9).unwrap();
+        let dir = std::env::temp_dir().join("ivtv_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("reg.bin");
+        reg.save(&p).unwrap();
+        // reload into a *different* shard count
+        let back = Registry::load(&p, 2).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.profile("a").unwrap(), reg.profile("a").unwrap());
+        assert_eq!(back.profile("b").unwrap(), reg.profile("b").unwrap());
+    }
+
+    #[test]
+    fn concurrent_enrollments_are_not_lost() {
+        let reg = std::sync::Arc::new(Registry::new(8));
+        let threads = 8;
+        let per_thread = 200;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let reg = std::sync::Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    // contended speaker + a per-thread speaker
+                    reg.enroll("shared", &[1.0, 1.0], FP).unwrap();
+                    reg.enroll(&format!("spk{t}"), &[i as f64, 0.0], FP).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let shared = reg.profile("shared").unwrap();
+        assert_eq!(shared.count, (threads * per_thread) as u64);
+        // identical addends ⇒ the sum is exact regardless of order
+        assert_eq!(shared.mean(), vec![1.0, 1.0]);
+        assert_eq!(reg.len(), threads + 1);
+        assert_eq!(reg.total_enrollments(), (2 * threads * per_thread) as u64);
+    }
+}

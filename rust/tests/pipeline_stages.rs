@@ -72,6 +72,21 @@ fn cli_pipeline_end_to_end_on_disk() {
     stages::extract(&base(&[], &[])).unwrap();
     stages::backend(&base(&[], &[])).unwrap();
     stages::eval(&base(&[], &[])).unwrap();
+    stages::bundle(&base(&[], &[])).unwrap();
+    assert!(work.join("bundle.bin").exists());
+
+    // the bundle serves: enroll/verify round-trip through the engine
+    let cfg = ivector_tv::config::Config::load(&cfg_path).unwrap();
+    let bundle =
+        ivector_tv::serve::ModelBundle::load_auto(work.to_str().unwrap(), &cfg).unwrap();
+    let engine = ivector_tv::serve::Engine::new(bundle, &cfg.serve);
+    let eval_arch: FeatArchive = FeatArchive::load(work.join("eval.feats")).unwrap();
+    let (u0, u1) = (&eval_arch.utts[0], &eval_arch.utts[1]);
+    assert_eq!(u0.spk_id, u1.spk_id, "eval archive groups utts per speaker");
+    engine.enroll(&u0.spk_id, &u0.feats).unwrap();
+    let out = engine.verify(&u0.spk_id, &u1.feats).unwrap();
+    assert!(out.score.is_finite());
+    assert_eq!(out.enrolled_utts, 1);
 
     // stage outputs reload cleanly
     let train: FeatArchive = FeatArchive::load(work.join("train.feats")).unwrap();
