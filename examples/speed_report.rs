@@ -244,6 +244,14 @@ fn serving_bench_json(requests: usize, concurrency: usize) -> anyhow::Result<()>
         unbatched.verify.p50_s * 1e3,
         unbatched.verify.p99_s * 1e3,
     );
+    println!(
+        "-> admission: shed {} / timeout {} of {} requests; queue depth max {} mean {:.1}",
+        batched.shed_requests,
+        batched.timed_out_requests,
+        requests,
+        batched.queue_depth_max,
+        batched.queue_depth_mean,
+    );
     write_bench2_json("BENCH_2.json", &[("batched", &batched), ("unbatched", &unbatched)])?;
     println!("wrote BENCH_2.json");
     Ok(())

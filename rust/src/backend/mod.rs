@@ -56,6 +56,17 @@ impl Backend {
         Ok(Self { centering, whitening, lda, plda })
     }
 
+    /// Raw i-vector dimension the chain was trained on (what
+    /// [`Backend::project`] expects as input).
+    pub fn input_dim(&self) -> usize {
+        self.centering.mean.len()
+    }
+
+    /// Dimension of projected vectors (what the PLDA scorer consumes).
+    pub fn output_dim(&self) -> usize {
+        self.lda.w.rows()
+    }
+
     /// Project raw i-vectors through the full chain (center → [whiten]
     /// → length-norm → LDA).
     pub fn project(&self, ivectors: &Mat) -> Mat {

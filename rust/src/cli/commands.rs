@@ -90,9 +90,11 @@ pub fn bundle(args: &Args) -> Result<()> {
 
 fn print_load_report(name: &str, r: &ServeBenchReport) {
     println!(
-        "{name}: {} requests @ {} clients in {:.2}s = {:.0} req/s | \
+        "{name}: {}/{} requests completed @ {} clients in {:.2}s = {:.0} req/s | \
          p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | mean batch {:.2} | \
+         shed {} timeout {} | queue depth max {} mean {:.1} | \
          score target {:.2} vs impostor {:.2}",
+        r.completed_requests,
         r.requests,
         r.concurrency,
         r.wall_s,
@@ -101,6 +103,10 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
         r.verify.p95_s * 1e3,
         r.verify.p99_s * 1e3,
         r.mean_batch,
+        r.shed_requests,
+        r.timed_out_requests,
+        r.queue_depth_max,
+        r.queue_depth_mean,
         r.target_mean,
         r.impostor_mean,
     );
@@ -123,7 +129,7 @@ pub fn verify(args: &Args) -> Result<()> {
     args.finish()?;
 
     let bundle = ModelBundle::load_auto(&work, &cfg)?;
-    let engine = Engine::new(bundle, &cfg.serve);
+    let engine = Engine::new(bundle, &cfg.serve)?;
     let traffic = TrafficGen::new(&cfg.corpus, speakers, seed);
     let report = run_verify_load(
         &engine,
@@ -180,7 +186,7 @@ pub fn serve_bench(args: &Args) -> Result<()> {
 
     let mut reports: Vec<(&str, ServeBenchReport)> = Vec::new();
     if batched_only {
-        let engine = Engine::new(bundle, &cfg.serve);
+        let engine = Engine::new(bundle, &cfg.serve)?;
         let report = run_verify_load(&engine, &traffic, &opts)?;
         print_load_report("serve-bench[batched]", &report);
         reports.push(("batched", report));

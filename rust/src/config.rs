@@ -190,8 +190,8 @@ pub struct TrialConfig {
     pub seed: u64,
 }
 
-/// Online-serving parameters ([`crate::serve`]): micro-batcher shape
-/// and registry sharding.
+/// Online-serving parameters ([`crate::serve`]): micro-batcher shape,
+/// admission-control deadlines, and registry sharding.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max requests coalesced into one E-step dispatch (flush-on-size).
@@ -205,6 +205,18 @@ pub struct ServeConfig {
     pub registry_shards: usize,
     /// Bound on queued (admitted, not yet dispatched) requests.
     pub queue_cap: usize,
+    /// Admission deadline in milliseconds: how long a request may wait
+    /// for queue space before it is load-shed with a typed
+    /// `Overloaded` error instead of blocking its thread.
+    pub submit_timeout_ms: u64,
+    /// End-to-end request deadline in milliseconds: how long a request
+    /// may wait for its batched response before failing with a typed
+    /// `Timeout` error (bounds the damage of a stalled worker).
+    pub request_timeout_ms: u64,
+    /// Aligner-scratch buffers retained in the per-model checkout pool
+    /// (~2 MB each at paper dims; 0 disables pooling). Size it to the
+    /// expected number of concurrently-aligning request threads.
+    pub scratch_pool: usize,
 }
 
 /// Full experiment config.
@@ -267,6 +279,9 @@ impl Config {
                 workers: 2,
                 registry_shards: 16,
                 queue_cap: 1024,
+                submit_timeout_ms: 250,
+                request_timeout_ms: 10_000,
+                scratch_pool: 8,
             },
         }
     }
@@ -330,6 +345,13 @@ impl Config {
                 registry_shards: doc
                     .get_usize("serve.registry_shards", d.serve.registry_shards)?,
                 queue_cap: doc.get_usize("serve.queue_cap", d.serve.queue_cap)?,
+                submit_timeout_ms: doc
+                    .get_usize("serve.submit_timeout_ms", d.serve.submit_timeout_ms as usize)?
+                    as u64,
+                request_timeout_ms: doc
+                    .get_usize("serve.request_timeout_ms", d.serve.request_timeout_ms as usize)?
+                    as u64,
+                scratch_pool: doc.get_usize("serve.scratch_pool", d.serve.scratch_pool)?,
             },
         })
     }
@@ -379,7 +401,8 @@ mod tests {
     fn serve_section_overrides() {
         let doc = Doc::parse(
             "[serve]\nbatch_utts = 8\nflush_us = 500\nworkers = 4\n\
-             registry_shards = 2\nqueue_cap = 64\n",
+             registry_shards = 2\nqueue_cap = 64\nsubmit_timeout_ms = 50\n\
+             request_timeout_ms = 2000\nscratch_pool = 3\n",
         )
         .unwrap();
         let cfg = Config::from_doc(&doc).unwrap();
@@ -388,6 +411,19 @@ mod tests {
         assert_eq!(cfg.serve.workers, 4);
         assert_eq!(cfg.serve.registry_shards, 2);
         assert_eq!(cfg.serve.queue_cap, 64);
+        assert_eq!(cfg.serve.submit_timeout_ms, 50);
+        assert_eq!(cfg.serve.request_timeout_ms, 2000);
+        assert_eq!(cfg.serve.scratch_pool, 3);
+    }
+
+    #[test]
+    fn serve_admission_defaults_survive_partial_file() {
+        let doc = Doc::parse("[serve]\nqueue_cap = 16\n").unwrap();
+        let cfg = Config::from_doc(&doc).unwrap();
+        assert_eq!(cfg.serve.queue_cap, 16);
+        assert_eq!(cfg.serve.submit_timeout_ms, 250);
+        assert_eq!(cfg.serve.request_timeout_ms, 10_000);
+        assert_eq!(cfg.serve.scratch_pool, 8);
     }
 
     #[test]

@@ -70,6 +70,47 @@ impl PackedDiag {
     pub fn num_components(&self) -> usize {
         self.w.rows()
     }
+
+    /// Feature dim F.
+    pub fn feat_dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// The aligner's reusable scratch buffers, split from the model refs so
+/// long-lived callers (the serving engine) can pool them across
+/// requests the way batch workers reuse an `EstepWorkspace`. At paper
+/// dims (C = 2048, F = 60) the two block buffers alone are
+/// `BLOCK × (2F + C) × 8 B ≈ 2.2 MB` — rebuilding that per request is
+/// pure allocator churn, since the buffers depend only on (F, C), never
+/// on the utterance.
+#[derive(Debug, Clone)]
+pub struct AlignScratch {
+    /// Augmented frame block [x ; x²] (BLOCK × 2F).
+    aug: Mat,
+    /// Diagonal scores (BLOCK × C).
+    scores: Mat,
+    /// Top-K selection buffer.
+    sel: Vec<u32>,
+    /// Full-covariance log-likes of the selected components.
+    ll_sel: Vec<f64>,
+}
+
+impl AlignScratch {
+    /// Allocate scratch for a (feature dim, component count) shape.
+    pub fn new(f_dim: usize, c_n: usize) -> Self {
+        Self {
+            aug: Mat::zeros(BLOCK, 2 * f_dim),
+            scores: Mat::zeros(BLOCK, c_n),
+            sel: Vec::new(),
+            ll_sel: Vec::new(),
+        }
+    }
+
+    /// Whether this scratch was sized for the given model shape.
+    pub fn fits(&self, f_dim: usize, c_n: usize) -> bool {
+        self.aug.cols() == 2 * f_dim && self.scores.cols() == c_n
+    }
 }
 
 /// Batched two-stage aligner with reusable scratch buffers.
@@ -84,31 +125,52 @@ pub struct BatchAligner<'g> {
     /// Diagonal score expansion (owned, or borrowed from a caller that
     /// amortizes the pack across many aligners).
     packed: std::borrow::Cow<'g, PackedDiag>,
-    /// Augmented frame block [x ; x²] (BLOCK × 2F).
-    aug: Mat,
-    /// Diagonal scores (BLOCK × C).
-    scores: Mat,
-    /// Top-K selection buffer.
-    sel: Vec<u32>,
-    /// Full-covariance log-likes of the selected components.
-    ll_sel: Vec<f64>,
+    /// Working buffers (owned here; poolable via [`Self::with_scratch`]
+    /// / [`Self::into_scratch`]).
+    scratch: AlignScratch,
 }
 
 impl<'g> BatchAligner<'g> {
     /// Pack the diagonal UBM once and build the aligner.
     pub fn new(diag: &DiagGmm, full: &'g FullGmm, top_k: usize, min_post: f64) -> Self {
-        Self::build(std::borrow::Cow::Owned(PackedDiag::new(diag)), full, top_k, min_post)
+        let packed = std::borrow::Cow::Owned(PackedDiag::new(diag));
+        let scratch = AlignScratch::new(packed.dim, packed.num_components());
+        Self::build(packed, full, top_k, min_post, scratch)
     }
 
-    /// Build over an already-packed diagonal UBM (the serving hot path:
-    /// the pack is per-model, only the scratch is per-aligner).
+    /// Build over an already-packed diagonal UBM (the pack is
+    /// per-model, only the scratch is per-aligner).
     pub fn with_packed(
         packed: &'g PackedDiag,
         full: &'g FullGmm,
         top_k: usize,
         min_post: f64,
     ) -> Self {
-        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post)
+        let scratch = AlignScratch::new(packed.dim, packed.num_components());
+        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post, scratch)
+    }
+
+    /// Build over a shared pack **and** recycled scratch — the serving
+    /// hot path (zero per-request buffer builds). Scratch of the wrong
+    /// shape is defensively replaced rather than trusted.
+    pub fn with_scratch(
+        packed: &'g PackedDiag,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+        scratch: AlignScratch,
+    ) -> Self {
+        let scratch = if scratch.fits(packed.dim, packed.num_components()) {
+            scratch
+        } else {
+            AlignScratch::new(packed.dim, packed.num_components())
+        };
+        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post, scratch)
+    }
+
+    /// Recover the scratch for reuse (pool check-in).
+    pub fn into_scratch(self) -> AlignScratch {
+        self.scratch
     }
 
     fn build(
@@ -116,19 +178,9 @@ impl<'g> BatchAligner<'g> {
         full: &'g FullGmm,
         top_k: usize,
         min_post: f64,
+        scratch: AlignScratch,
     ) -> Self {
-        let c_n = packed.num_components();
-        let f_dim = packed.dim;
-        Self {
-            full,
-            top_k,
-            min_post,
-            packed,
-            aug: Mat::zeros(BLOCK, 2 * f_dim),
-            scores: Mat::zeros(BLOCK, c_n),
-            sel: Vec::with_capacity(top_k.min(c_n)),
-            ll_sel: vec![0.0; top_k.min(c_n)],
-        }
+        Self { full, top_k, min_post, packed, scratch }
     }
 
     /// Align a whole utterance, streaming BLOCK-sized frame blocks.
@@ -150,18 +202,28 @@ impl<'g> BatchAligner<'g> {
         let f_dim = self.packed.dim;
         for t in 0..n {
             let x = feats.row(start + t);
-            let arow = self.aug.row_mut(t);
+            let arow = self.scratch.aug.row_mut(t);
             for (j, &xj) in x.iter().enumerate() {
                 arow[j] = xj;
                 arow[f_dim + j] = xj * xj;
             }
         }
-        score_rows(&self.aug, n, &self.packed.w, &self.packed.consts, &mut self.scores);
+        score_rows(
+            &self.scratch.aug,
+            n,
+            &self.packed.w,
+            &self.packed.consts,
+            &mut self.scratch.scores,
+        );
         for t in 0..n {
-            top_k_into(self.scores.row(t), self.top_k, &mut self.sel);
-            self.ll_sel.resize(self.sel.len(), 0.0);
-            self.full.log_likes_select(feats.row(start + t), &self.sel, &mut self.ll_sel);
-            out.push(prune_posteriors(&self.sel, &self.ll_sel, self.min_post));
+            top_k_into(self.scratch.scores.row(t), self.top_k, &mut self.scratch.sel);
+            self.scratch.ll_sel.resize(self.scratch.sel.len(), 0.0);
+            self.full.log_likes_select(
+                feats.row(start + t),
+                &self.scratch.sel,
+                &mut self.scratch.ll_sel,
+            );
+            out.push(prune_posteriors(&self.scratch.sel, &self.scratch.ll_sel, self.min_post));
         }
     }
 }
@@ -216,17 +278,23 @@ mod tests {
         let n = feats.rows();
         for t in 0..n {
             let x = feats.row(t);
-            let arow = aligner.aug.row_mut(t);
+            let arow = aligner.scratch.aug.row_mut(t);
             for (j, &xj) in x.iter().enumerate() {
                 arow[j] = xj;
                 arow[4 + j] = xj * xj;
             }
         }
-        score_rows(&aligner.aug, n, &aligner.packed.w, &aligner.packed.consts, &mut aligner.scores);
+        score_rows(
+            &aligner.scratch.aug,
+            n,
+            &aligner.packed.w,
+            &aligner.packed.consts,
+            &mut aligner.scratch.scores,
+        );
         for t in 0..n {
             diag.log_likes(feats.row(t), &mut ll_ref);
             for c in 0..9 {
-                let got = aligner.scores.get(t, c);
+                let got = aligner.scratch.scores.get(t, c);
                 assert!(
                     (got - ll_ref[c]).abs() < 1e-10 * (1.0 + ll_ref[c].abs()),
                     "t={t} c={c}: {got} vs {}",
@@ -296,6 +364,42 @@ mod tests {
                 assert_eq!(pa.post, pb.post);
             }
         }
+    }
+
+    #[test]
+    fn recycled_scratch_matches_fresh_scratch() {
+        // pool round-trip: align, recover the scratch, align a second
+        // utterance with it — identical postings to a fresh aligner
+        let mut rng = Rng::seed(83);
+        let (diag, full) = random_ubm(12, 5, &mut rng);
+        let packed = PackedDiag::new(&diag);
+        assert_eq!(packed.feat_dim(), 5);
+        let u1 = Mat::from_fn(150, 5, |_, _| 1.5 * rng.normal());
+        let u2 = Mat::from_fn(90, 5, |_, _| 1.5 * rng.normal());
+
+        let mut first = BatchAligner::with_packed(&packed, &full, 6, 0.025);
+        let _ = first.align_utterance(&u1);
+        let scratch = first.into_scratch();
+        assert!(scratch.fits(5, 12));
+
+        let recycled =
+            BatchAligner::with_scratch(&packed, &full, 6, 0.025, scratch).align_utterance(&u2);
+        let fresh = BatchAligner::with_packed(&packed, &full, 6, 0.025).align_utterance(&u2);
+        assert_eq!(recycled.len(), fresh.len());
+        for (a, b) in recycled.iter().zip(&fresh) {
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
+
+        // wrong-shape scratch is replaced, not trusted
+        let bad = AlignScratch::new(3, 4);
+        assert!(!bad.fits(5, 12));
+        let via_bad =
+            BatchAligner::with_scratch(&packed, &full, 6, 0.025, bad).align_utterance(&u2);
+        assert_eq!(via_bad.len(), fresh.len());
     }
 
     #[test]

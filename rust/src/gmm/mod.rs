@@ -19,7 +19,7 @@ mod full;
 mod select;
 mod train;
 
-pub use batch::{BatchAligner, PackedDiag};
+pub use batch::{AlignScratch, BatchAligner, PackedDiag};
 pub use diag::DiagGmm;
 pub use full::FullGmm;
 pub use select::{

@@ -218,6 +218,55 @@ impl LatencyHistogram {
     }
 }
 
+// ---------------------- queue depth gauge ----------------------
+
+/// Concurrent depth gauge for bounded queues: each enqueue records the
+/// post-push depth, and the summary exposes the max and the mean of the
+/// recorded samples — the "how close to `queue_cap` does admission
+/// control run" statistic of the serving report. Lock-free like
+/// [`LatencyHistogram`]: three relaxed atomics per record.
+#[derive(Debug, Default)]
+pub struct DepthGauge {
+    max: AtomicU64,
+    sum: AtomicU64,
+    samples: AtomicU64,
+}
+
+/// Point-in-time summary of a [`DepthGauge`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DepthSummary {
+    /// Recorded samples (enqueues, for a queue gauge).
+    pub samples: u64,
+    /// Largest recorded depth.
+    pub max: u64,
+    /// Mean recorded depth (0.0 when empty).
+    pub mean: f64,
+}
+
+impl DepthGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observed depth.
+    pub fn record(&self, depth: u64) {
+        self.max.fetch_max(depth, Ordering::Relaxed);
+        self.sum.fetch_add(depth, Ordering::Relaxed);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Max / mean snapshot.
+    pub fn summary(&self) -> DepthSummary {
+        let samples = self.samples.load(Ordering::Relaxed);
+        let mean = if samples == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / samples as f64
+        };
+        DepthSummary { samples, max: self.max.load(Ordering::Relaxed), mean }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +331,19 @@ mod tests {
         h.record(f64::NAN);
         assert_eq!(h.count(), 4);
         assert!(h.quantile(1.0) > 0.0);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_max_and_mean() {
+        let g = DepthGauge::new();
+        assert_eq!(g.summary(), DepthSummary { samples: 0, max: 0, mean: 0.0 });
+        for d in [1, 4, 2, 1] {
+            g.record(d);
+        }
+        let s = g.summary();
+        assert_eq!(s.samples, 4);
+        assert_eq!(s.max, 4);
+        assert!((s.mean - 2.0).abs() < 1e-12, "mean {}", s.mean);
     }
 
     #[test]

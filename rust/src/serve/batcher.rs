@@ -1,5 +1,5 @@
 //! Dynamic micro-batcher: coalesce concurrent extraction requests into
-//! E-step batches.
+//! E-step batches, behind real admission control.
 //!
 //! Request threads do the CPU "loader" work (alignment + Baum-Welch
 //! statistics, exactly the paper's pipelined-loader role) and submit a
@@ -12,6 +12,15 @@
 //! light load batching costs nothing over per-request dispatch;
 //! [`MicroBatcher::begin_request`] is the announcement).
 //!
+//! Admission control: the queue is bounded, and [`MicroBatcher::submit`]
+//! waits for space only until the caller's deadline — then it **sheds**
+//! the request with a typed [`ServeError::Overloaded`] instead of
+//! blocking the submitter indefinitely. Under saturation the engine
+//! therefore degrades into fast, observable rejections (counted in
+//! [`MicroBatcher::shed_requests`]) rather than an unbounded convoy of
+//! blocked request threads; queue occupancy is tracked per enqueue in a
+//! [`DepthGauge`] for the serving report.
+//!
 //! Hot-swap coherence: each job carries the `Arc<ServeModel>` snapshot
 //! its statistics were computed with, and a batch only groups jobs that
 //! share the same snapshot — a model swap mid-flight splits the batch
@@ -23,11 +32,13 @@ use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::ivector::{estep_batch_cpu, EstepWorkspace, UttStats};
+use crate::metrics::{DepthGauge, DepthSummary};
 
 use super::bundle::ServeModel;
+use super::error::ServeError;
 
 /// One queued extraction request (built by [`MicroBatcher::submit`],
 /// which owns the enqueue timestamp).
@@ -42,6 +53,10 @@ struct Job {
     /// from here, so a job never waits for co-riders longer than
     /// `flush` past its enqueue.
     enqueued: Instant,
+    /// The caller's request deadline: past it the caller has dropped
+    /// its receiver, so workers purge the job instead of burning a
+    /// batch slot on dead work.
+    expires: Instant,
 }
 
 struct Shared {
@@ -58,10 +73,22 @@ struct Shared {
     /// light load batching then costs nothing over per-request
     /// dispatch, and the deadline only pays for genuine coalescing.
     inbound: AtomicUsize,
+    /// Test hook: while set, workers leave the queue untouched — the
+    /// deterministic stand-in for "all workers are busy" that the
+    /// overload and timeout tests pivot on. Read in the worker loop in
+    /// every build; only tests can set it.
+    stalled: AtomicBool,
     /// Dispatched batch count (metrics).
     batches: AtomicU64,
     /// Requests that flowed through batches (metrics).
     requests: AtomicU64,
+    /// Requests shed at admission (queue full past the submit deadline).
+    shed: AtomicU64,
+    /// Queued jobs purged because their caller's request deadline
+    /// passed before a worker reached them.
+    expired: AtomicU64,
+    /// Post-push queue depth per admitted request.
+    depth: DepthGauge,
 }
 
 /// RAII announcement of an in-flight request (created before the
@@ -100,8 +127,12 @@ impl MicroBatcher {
             flush,
             queue_cap,
             inbound: AtomicUsize::new(0),
+            stalled: AtomicBool::new(false),
             batches: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            depth: DepthGauge::new(),
         });
         let workers = (0..workers.max(1))
             .map(|_| {
@@ -119,27 +150,45 @@ impl MicroBatcher {
         RequestToken { shared: &self.shared }
     }
 
-    /// Enqueue a request, blocking while the queue is at capacity
-    /// (backpressure); errors once shutdown has begun. The i-vector
+    /// Enqueue a request, waiting for queue space only until
+    /// `submit_deadline`: past it the request is **load-shed** with a
+    /// typed [`ServeError::Overloaded`] instead of blocking forever.
+    /// Errors with [`ServeError::ShuttingDown`] once shutdown has
+    /// begun. `expires` is the caller's request deadline: a job still
+    /// queued past it is purged by the workers (the caller has dropped
+    /// its receiver) instead of dispatched. On success the i-vector
     /// arrives on `resp` when the request's batch is dispatched.
     pub fn submit(
         &self,
         stats: UttStats,
         model: Arc<ServeModel>,
         resp: SyncSender<Vec<f64>>,
+        submit_deadline: Instant,
+        expires: Instant,
     ) -> Result<()> {
         let shared = &*self.shared;
+        let start = Instant::now();
         let mut q = shared.queue.lock().unwrap();
         loop {
             if shared.shutdown.load(Ordering::Acquire) {
-                bail!("serving engine is shutting down");
+                return Err(ServeError::ShuttingDown.into());
             }
             if q.len() < shared.queue_cap {
                 break;
             }
-            q = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+            let now = Instant::now();
+            if now >= submit_deadline {
+                drop(q);
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Overloaded { waited: now - start }.into());
+            }
+            // bounded wait: a worker's post-drain notify_all wakes us,
+            // and the residual `deadline - now` caps the sleep so a
+            // missed wakeup can only cost the deadline, never a hang
+            q = shared.cv.wait_timeout(q, submit_deadline - now).unwrap().0;
         }
-        q.push_back(Job { stats, model, resp, enqueued: Instant::now() });
+        q.push_back(Job { stats, model, resp, enqueued: Instant::now(), expires });
+        shared.depth.record(q.len() as u64);
         drop(q);
         shared.cv.notify_all();
         Ok(())
@@ -153,6 +202,35 @@ impl MicroBatcher {
     /// Requests that flowed through dispatched batches.
     pub fn batched_requests(&self) -> u64 {
         self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed at admission (typed `Overloaded` rejections).
+    pub fn shed_requests(&self) -> u64 {
+        self.shared.shed.load(Ordering::Relaxed)
+    }
+
+    /// Queued jobs purged because their caller's deadline passed before
+    /// a worker reached them.
+    pub fn expired_jobs(&self) -> u64 {
+        self.shared.expired.load(Ordering::Relaxed)
+    }
+
+    /// Queue-depth statistics over admitted requests.
+    pub fn queue_depth(&self) -> DepthSummary {
+        self.shared.depth.summary()
+    }
+
+    /// Jobs currently queued (admitted, not yet dispatched).
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Test hook: freeze (or thaw) the worker pool, the deterministic
+    /// stand-in for saturated workers in the overload/timeout tests.
+    #[cfg(test)]
+    pub fn set_stalled(&self, stalled: bool) {
+        self.shared.stalled.store(stalled, Ordering::Release);
+        self.shared.cv.notify_all();
     }
 }
 
@@ -174,9 +252,10 @@ fn worker_loop(shared: &Shared) {
     loop {
         let batch = {
             let mut q = shared.queue.lock().unwrap();
-            // wait for the first job of the next batch
+            // wait for the first job of the next batch (or idle while
+            // the test hook stalls the pool)
             loop {
-                if !q.is_empty() {
+                if !q.is_empty() && !shared.stalled.load(Ordering::Acquire) {
                     break;
                 }
                 if shared.shutdown.load(Ordering::Acquire) {
@@ -184,12 +263,26 @@ fn worker_loop(shared: &Shared) {
                 }
                 q = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
             }
+            // a caller past its request deadline has dropped its
+            // receiver — under sustained overload, dispatching those
+            // jobs would leave workers serving only ghosts while fresh
+            // requests keep timing out, so purge them before (and
+            // after) batch assembly
+            purge_expired(&mut q, shared);
             // hold for co-riders until the batch fills, the deadline
             // expires, or nobody is on the way (shutdown flushes
             // immediately); the deadline counts from the oldest job's
             // enqueue, so time already spent queued behind a busy
             // worker is not re-waited
-            let deadline = q.front().expect("queue non-empty here").enqueued + shared.flush;
+            let deadline = match q.front() {
+                Some(job) => job.enqueued + shared.flush,
+                None => {
+                    // everything queued had already expired; the purge
+                    // freed queue space, so wake any blocked submitter
+                    shared.cv.notify_all();
+                    continue;
+                }
+            };
             while q.len() < shared.batch_utts && !shared.shutdown.load(Ordering::Acquire) {
                 if shared.inbound.load(Ordering::Acquire) == 0 {
                     break; // no announced request can still join
@@ -204,6 +297,8 @@ fn worker_loop(shared: &Shared) {
                     break;
                 }
             }
+            // jobs may have expired during the co-rider wait
+            purge_expired(&mut q, shared);
             // drain one batch of model-coherent jobs
             let mut batch: Vec<Job> = Vec::with_capacity(shared.batch_utts.min(q.len()));
             while batch.len() < shared.batch_utts {
@@ -238,6 +333,22 @@ fn worker_loop(shared: &Shared) {
                 batch.len()
             );
         }
+    }
+}
+
+/// Drop queued jobs whose caller's request deadline has passed. The
+/// whole queue is scanned, not just the front: deadlines start before
+/// the variable-length loader (alignment) stage, so a slow-to-align
+/// request can sit *behind* a later-expiring one — expiry is not
+/// monotone along the queue. The scan is a cheap pointer walk bounded
+/// by `queue_cap`, once per batch assembly.
+fn purge_expired(q: &mut VecDeque<Job>, shared: &Shared) {
+    let now = Instant::now();
+    let before = q.len();
+    q.retain(|job| now < job.expires);
+    let removed = (before - q.len()) as u64;
+    if removed > 0 {
+        shared.expired.fetch_add(removed, Ordering::Relaxed);
     }
 }
 

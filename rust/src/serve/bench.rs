@@ -18,6 +18,7 @@ use crate::metrics::{LatencySummary, Stopwatch};
 
 use super::bundle::ModelBundle;
 use super::engine::Engine;
+use super::error::ServeError;
 
 /// A scaled-down config whose full offline recipe trains in seconds —
 /// the "tiny-config engine" of the serving benchmarks and tests.
@@ -120,9 +121,15 @@ pub struct ServeBenchOpts {
 /// One load run's results.
 #[derive(Debug, Clone)]
 pub struct ServeBenchReport {
+    /// Requests attempted.
     pub requests: usize,
+    /// Requests that produced a score (attempted minus shed/timed-out).
+    pub completed_requests: usize,
     pub concurrency: usize,
     pub wall_s: f64,
+    /// Completed requests per second — rejections do no E-step work, so
+    /// counting them would let an aggressively-shedding engine report
+    /// *higher* throughput under saturation.
     pub throughput_rps: f64,
     pub verify: LatencySummary,
     pub enroll: LatencySummary,
@@ -131,6 +138,14 @@ pub struct ServeBenchReport {
     /// Mean requests per dispatched E-step batch (from
     /// [`crate::serve::EngineMetrics::mean_batch`]).
     pub mean_batch: f64,
+    /// Requests shed at admission (typed `Overloaded` rejections).
+    pub shed_requests: u64,
+    /// Requests that missed their response deadline (typed `Timeout`).
+    pub timed_out_requests: u64,
+    /// Largest micro-batch queue depth an admitted request saw.
+    pub queue_depth_max: u64,
+    /// Mean post-enqueue queue depth over admitted requests.
+    pub queue_depth_mean: f64,
     pub target_mean: f64,
     pub impostor_mean: f64,
 }
@@ -139,11 +154,13 @@ impl ServeBenchReport {
     /// One JSON object (no trailing newline) for the BENCH_2 report.
     pub fn json_fragment(&self) -> String {
         format!(
-            "{{\"requests\": {}, \"concurrency\": {}, \"wall_s\": {:.6}, \
+            "{{\"requests\": {}, \"completed\": {}, \"concurrency\": {}, \"wall_s\": {:.6}, \
 \"throughput_rps\": {:.2}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \
 \"mean_ms\": {:.4}, \"max_ms\": {:.4}, \"mean_batch\": {:.3}, \
+\"shed\": {}, \"timeouts\": {}, \"queue_depth_max\": {}, \"queue_depth_mean\": {:.2}, \
 \"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
             self.requests,
+            self.completed_requests,
             self.concurrency,
             self.wall_s,
             self.throughput_rps,
@@ -153,16 +170,37 @@ impl ServeBenchReport {
             self.verify.mean_s * 1e3,
             self.verify.max_s * 1e3,
             self.mean_batch,
+            self.shed_requests,
+            self.timed_out_requests,
+            self.queue_depth_max,
+            self.queue_depth_mean,
             self.target_mean,
             self.impostor_mean,
         )
     }
 }
 
+/// Per-client accumulator of a load run: score sums plus the
+/// deadline-driven rejections (shed/timeout) the client absorbed.
+#[derive(Debug, Default, Clone, Copy)]
+struct ClientAcc {
+    target_sum: f64,
+    target_n: usize,
+    impostor_sum: f64,
+    impostor_n: usize,
+    rejected: usize,
+}
+
 /// Enroll `opts.speakers` from the traffic source, then replay
 /// `opts.requests` verify requests from `opts.concurrency` client
 /// threads (alternating target and impostor trials). Expects a fresh
 /// engine — its latency histograms become the report.
+///
+/// Typed admission rejections ([`ServeError::Overloaded`] /
+/// [`ServeError::Timeout`]) are *counted, not propagated*: under
+/// deliberate saturation the harness must keep driving load to observe
+/// the shed behaviour it is there to measure. Any other error still
+/// aborts the run.
 pub fn run_verify_load(
     engine: &Engine,
     traffic: &TrafficGen,
@@ -184,12 +222,11 @@ pub fn run_verify_load(
 
     let sw = Stopwatch::start();
     let concurrency = opts.concurrency.max(1);
-    // (target_sum, target_n, impostor_sum, impostor_n) per client
-    let partials: Result<Vec<(f64, usize, f64, usize)>> = std::thread::scope(|scope| {
+    let partials: Result<Vec<ClientAcc>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..concurrency)
             .map(|c| {
-                scope.spawn(move || -> Result<(f64, usize, f64, usize)> {
-                    let mut acc = (0.0, 0usize, 0.0, 0usize);
+                scope.spawn(move || -> Result<ClientAcc> {
+                    let mut acc = ClientAcc::default();
                     let mut i = c;
                     while i < opts.requests {
                         let claimed = i % n_spk;
@@ -197,13 +234,22 @@ pub fn run_verify_load(
                         let actual = if target { claimed } else { (claimed + 1) % n_spk };
                         // verification keys live past the enrollment keys
                         let feats = traffic.utterance(actual, 1_000 + i as u64);
-                        let out = engine.verify(&traffic.speaker_id(claimed), &feats)?;
-                        if target {
-                            acc.0 += out.score;
-                            acc.1 += 1;
-                        } else {
-                            acc.2 += out.score;
-                            acc.3 += 1;
+                        match engine.verify(&traffic.speaker_id(claimed), &feats) {
+                            Ok(out) if target => {
+                                acc.target_sum += out.score;
+                                acc.target_n += 1;
+                            }
+                            Ok(out) => {
+                                acc.impostor_sum += out.score;
+                                acc.impostor_n += 1;
+                            }
+                            Err(e)
+                                if e.downcast_ref::<ServeError>()
+                                    .is_some_and(ServeError::is_rejection) =>
+                            {
+                                acc.rejected += 1;
+                            }
+                            Err(e) => return Err(e),
                         }
                         i += concurrency;
                     }
@@ -216,26 +262,47 @@ pub fn run_verify_load(
     let partials = partials.context("verify load failed")?;
     let wall_s = sw.elapsed_s();
 
-    let (mut ts, mut tn, mut is, mut in_) = (0.0, 0usize, 0.0, 0usize);
-    for (a, b, c, d) in partials {
-        ts += a;
-        tn += b;
-        is += c;
-        in_ += d;
+    let mut total = ClientAcc::default();
+    for p in partials {
+        total.target_sum += p.target_sum;
+        total.target_n += p.target_n;
+        total.impostor_sum += p.impostor_sum;
+        total.impostor_n += p.impostor_n;
+        total.rejected += p.rejected;
+    }
+    if total.rejected > 0 {
+        println!(
+            "verify load: {} of {} requests rejected under overload (shed or timed out)",
+            total.rejected, opts.requests
+        );
     }
     let m = engine.metrics();
+    let completed = opts.requests - total.rejected;
     Ok(ServeBenchReport {
         requests: opts.requests,
+        completed_requests: completed,
         concurrency,
         wall_s,
-        throughput_rps: if wall_s > 0.0 { opts.requests as f64 / wall_s } else { f64::INFINITY },
+        throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { f64::INFINITY },
         verify: m.verify,
         enroll: m.enroll,
         dispatched_batches: m.dispatched_batches,
         batched_requests: m.batched_requests,
         mean_batch: m.mean_batch(),
-        target_mean: if tn > 0 { ts / tn as f64 } else { 0.0 },
-        impostor_mean: if in_ > 0 { is / in_ as f64 } else { 0.0 },
+        shed_requests: m.shed_requests,
+        timed_out_requests: m.timed_out_requests,
+        queue_depth_max: m.queue_depth.max,
+        queue_depth_mean: m.queue_depth.mean,
+        target_mean: if total.target_n > 0 {
+            total.target_sum / total.target_n as f64
+        } else {
+            0.0
+        },
+        impostor_mean: if total.impostor_n > 0 {
+            total.impostor_sum / total.impostor_n as f64
+        } else {
+            0.0
+        },
     })
 }
 
@@ -249,13 +316,13 @@ pub fn run_batched_vs_unbatched(
     opts: &ServeBenchOpts,
 ) -> Result<(ServeBenchReport, ServeBenchReport)> {
     let batched = {
-        let engine = Engine::new(bundle.clone(), serve_cfg);
+        let engine = Engine::new(bundle.clone(), serve_cfg)?;
         run_verify_load(&engine, traffic, opts)?
     };
     let unbatched = {
         let mut solo = serve_cfg.clone();
         solo.batch_utts = 1;
-        let engine = Engine::new(bundle, &solo);
+        let engine = Engine::new(bundle, &solo)?;
         run_verify_load(&engine, traffic, opts)?
     };
     Ok((batched, unbatched))
@@ -285,6 +352,7 @@ mod tests {
     fn bench_report_json_shape() {
         let report = ServeBenchReport {
             requests: 100,
+            completed_requests: 96,
             concurrency: 4,
             wall_s: 0.5,
             throughput_rps: 200.0,
@@ -307,12 +375,21 @@ mod tests {
             dispatched_batches: 25,
             batched_requests: 100,
             mean_batch: 4.0,
+            shed_requests: 3,
+            timed_out_requests: 1,
+            queue_depth_max: 12,
+            queue_depth_mean: 4.5,
             target_mean: 3.0,
             impostor_mean: -2.0,
         };
         let frag = report.json_fragment();
         assert!(frag.contains("\"p99_ms\": 6.0000"), "{frag}");
         assert!(frag.contains("\"throughput_rps\": 200.00"), "{frag}");
+        assert!(frag.contains("\"completed\": 96"), "{frag}");
+        assert!(frag.contains("\"shed\": 3"), "{frag}");
+        assert!(frag.contains("\"timeouts\": 1"), "{frag}");
+        assert!(frag.contains("\"queue_depth_max\": 12"), "{frag}");
+        assert!(frag.contains("\"queue_depth_mean\": 4.50"), "{frag}");
 
         let dir = std::env::temp_dir().join("ivtv_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();

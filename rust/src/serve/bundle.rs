@@ -2,12 +2,14 @@
 //! one immutable unit so the engine can hot-swap it atomically.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::backend::Backend;
 use crate::config::Config;
-use crate::gmm::{BatchAligner, DiagGmm, FullGmm, PackedDiag};
+use crate::gmm::{AlignScratch, BatchAligner, DiagGmm, FullGmm, PackedDiag};
 use crate::io::Serialize;
 use crate::ivector::{extract_cpu, EstepConsts, TvModel, UttStats};
 use crate::linalg::Mat;
@@ -114,7 +116,10 @@ impl ModelBundle {
     /// falling back to assembling from the per-stage artifacts. Rejects
     /// a bundle whose feature dim disagrees with `cfg` — serving
     /// callers sample traffic at the config's dims, so a mismatch would
-    /// otherwise surface as an assert deep inside the aligner.
+    /// otherwise surface as an assert deep inside the aligner — and a
+    /// backend whose chain dims disagree with the extractor, which
+    /// would otherwise load fine and panic deep inside `project` on the
+    /// first verify.
     pub fn load_auto(work: &str, cfg: &Config) -> Result<Self> {
         let bundled = format!("{work}/bundle.bin");
         let bundle: Self = if Path::new(&bundled).exists() {
@@ -129,7 +134,46 @@ impl ModelBundle {
             bundle.tvm.feat_dim(),
             cfg.feat_dim()
         );
+        bundle.check_backend_dims()?;
         Ok(bundle)
+    }
+
+    /// Reject a backend whose processing chain disagrees with the
+    /// extractor's i-vector dimension (or with itself): mixed-artifact
+    /// work dirs must fail at load time with a nameable cause, not on
+    /// the first verify request.
+    pub fn check_backend_dims(&self) -> Result<()> {
+        let r = self.tvm.rank();
+        ensure!(
+            self.backend.input_dim() == r,
+            "bundle backend expects {}-dim i-vectors but the extractor produces rank {} — \
+             the backend was trained against a different extractor",
+            self.backend.input_dim(),
+            r
+        );
+        ensure!(
+            self.backend.lda.w.cols() == r,
+            "bundle backend LDA takes {}-dim input but the extractor produces rank {} — \
+             the backend was trained against a different extractor",
+            self.backend.lda.w.cols(),
+            r
+        );
+        if let Some(wh) = &self.backend.whitening {
+            ensure!(
+                wh.p.cols() == r,
+                "bundle backend whitening is {}-dim but the extractor produces rank {}",
+                wh.p.cols(),
+                r
+            );
+        }
+        ensure!(
+            self.backend.plda.mu.len() == self.backend.output_dim(),
+            "bundle backend PLDA is {}-dim but its LDA projects to {} — \
+             mismatched backend artifacts",
+            self.backend.plda.mu.len(),
+            self.backend.output_dim()
+        );
+        Ok(())
     }
 }
 
@@ -155,6 +199,63 @@ impl Serialize for ModelBundle {
     }
 }
 
+/// A bounded checkout pool of [`AlignScratch`] buffers, owned by a
+/// [`ServeModel`] so every request under that model reuses aligner
+/// scratch (~2 MB at paper dims) instead of rebuilding it — the serving
+/// mirror of how batch workers reuse their `EstepWorkspace`. Living on
+/// the model (not the engine) keeps the pool shape-correct by
+/// construction: a hot swap retires the pool with its model.
+#[derive(Debug)]
+pub(crate) struct ScratchPool {
+    slots: Mutex<Vec<AlignScratch>>,
+    /// Retained buffers bound (`cap = 0` disables pooling entirely).
+    cap: usize,
+    /// Fresh allocations (pool empty at checkout).
+    created: AtomicU64,
+    /// Checkouts served from the pool.
+    reused: AtomicU64,
+}
+
+impl ScratchPool {
+    fn new(cap: usize) -> Self {
+        Self {
+            slots: Mutex::new(Vec::with_capacity(cap.min(64))),
+            cap,
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// Pop a pooled buffer, or allocate when the pool is dry. The shape
+    /// is revalidated defensively even though a per-model pool only
+    /// ever holds one shape.
+    fn checkout(&self, f_dim: usize, c_n: usize) -> AlignScratch {
+        if let Some(s) = self.slots.lock().unwrap().pop() {
+            if s.fits(f_dim, c_n) {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                return s;
+            }
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        AlignScratch::new(f_dim, c_n)
+    }
+
+    /// Return a buffer; dropped silently once the pool is at capacity
+    /// (a burst of concurrent requests must not ratchet memory up
+    /// forever).
+    fn checkin(&self, scratch: AlignScratch) {
+        let mut slots = self.slots.lock().unwrap();
+        if slots.len() < self.cap {
+            slots.push(scratch);
+        }
+    }
+
+    /// (fresh allocations, pooled reuses) so far.
+    fn stats(&self) -> (u64, u64) {
+        (self.created.load(Ordering::Relaxed), self.reused.load(Ordering::Relaxed))
+    }
+}
+
 /// An immutable bundle plus its derived per-bundle constants, shared as
 /// `Arc<ServeModel>` between request threads and batch workers. Built
 /// once per (hot-)load; the batched E-step constants are the serving
@@ -167,17 +268,30 @@ pub struct ServeModel {
     /// Packed diagonal alignment weights, shared by every request's
     /// aligner (the pack is per-model, not per-request).
     packed_diag: PackedDiag,
+    /// Checkout pool of aligner scratch shared by every request's
+    /// aligner (the scratch is per-request-in-flight, not per-request).
+    scratch: ScratchPool,
     /// [`ModelBundle::fingerprint`], precomputed — tags enrollments so
     /// cross-model scoring after a hot swap is refused.
     pub fingerprint: u64,
 }
 
+/// Scratch buffers retained when a caller does not configure the pool
+/// (covers a handful of concurrent request threads).
+const DEFAULT_SCRATCH_POOL: usize = 8;
+
 impl ServeModel {
     pub fn new(bundle: ModelBundle) -> Self {
+        Self::with_scratch_pool(bundle, DEFAULT_SCRATCH_POOL)
+    }
+
+    /// Build with an explicit scratch-pool bound (`[serve] scratch_pool`;
+    /// 0 disables pooling).
+    pub fn with_scratch_pool(bundle: ModelBundle, scratch_pool: usize) -> Self {
         let consts = bundle.tvm.precompute_consts();
         let packed_diag = PackedDiag::new(&bundle.diag);
         let fingerprint = bundle.fingerprint();
-        Self { bundle, consts, packed_diag, fingerprint }
+        Self { bundle, consts, packed_diag, scratch: ScratchPool::new(scratch_pool), fingerprint }
     }
 
     /// i-vector dimension.
@@ -185,18 +299,31 @@ impl ServeModel {
         self.consts.r
     }
 
+    /// (fresh scratch allocations, pooled reuses) — the serving
+    /// report's measure of per-request buffer churn.
+    pub fn scratch_stats(&self) -> (u64, u64) {
+        self.scratch.stats()
+    }
+
     /// The request-thread "loader" stage: align the utterance with the
     /// batched CPU aligner and accumulate its Baum-Welch statistics —
     /// the fixed-size representation the micro-batched E-step consumes
     /// (identical to the offline `extract` stage's per-utterance path).
+    /// Aligner scratch is checked out of the model's pool and returned
+    /// after alignment, so steady-state traffic allocates nothing here.
     pub fn utt_stats(&self, feats: &Mat) -> UttStats {
-        let mut aligner = BatchAligner::with_packed(
+        let scratch = self
+            .scratch
+            .checkout(self.packed_diag.feat_dim(), self.packed_diag.num_components());
+        let mut aligner = BatchAligner::with_scratch(
             &self.packed_diag,
             &self.bundle.full,
             self.bundle.top_k,
             self.bundle.min_post,
+            scratch,
         );
         let posts = aligner.align_utterance(feats);
+        self.scratch.checkin(aligner.into_scratch());
         let bw = BwStats::accumulate(feats, &posts, self.bundle.diag.num_components(), false);
         UttStats::from_bw(&bw, &self.bundle.tvm)
     }
@@ -253,6 +380,74 @@ mod tests {
             assert!((x - y).abs() < 1e-12);
         }
         assert!((a.score(&iva, &iva) - b.score(&ivb, &ivb)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers_across_requests() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let model = ServeModel::with_scratch_pool(bundle, 2);
+        let world = super::super::bench::tiny_traffic(&cfg, 1, 11);
+        let first = model.utt_stats(&world.utterance(0, 0));
+        let (created, reused) = model.scratch_stats();
+        assert_eq!((created, reused), (1, 0));
+        // every sequential request after the first rides the pool
+        for k in 1..5 {
+            let again = model.utt_stats(&world.utterance(0, k));
+            assert_eq!(again.n.len(), first.n.len());
+        }
+        let (created, reused) = model.scratch_stats();
+        assert_eq!(created, 1, "sequential traffic must not allocate again");
+        assert_eq!(reused, 4);
+        // pooling is semantically invisible
+        let k0 = model.utt_stats(&world.utterance(0, 0));
+        assert_eq!(k0.n, first.n);
+        assert!(k0.f.approx_eq(&first.f, 0.0));
+    }
+
+    #[test]
+    fn scratch_pool_zero_disables_pooling() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let model = ServeModel::with_scratch_pool(bundle, 0);
+        let world = super::super::bench::tiny_traffic(&cfg, 1, 11);
+        for k in 0..3 {
+            model.utt_stats(&world.utterance(0, k));
+        }
+        let (created, reused) = model.scratch_stats();
+        assert_eq!((created, reused), (3, 0));
+    }
+
+    #[test]
+    fn load_auto_rejects_backend_dim_mismatch() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        bundle.check_backend_dims().unwrap();
+
+        // a backend trained against a different extractor: every chain
+        // stage is internally coherent at rank+1, so only the
+        // backend-vs-extractor check can catch it
+        let wrong_rank = bundle.tvm.rank() + 1;
+        let mut rng = crate::rng::Rng::seed(99);
+        let ivecs = Mat::from_fn(24, wrong_rank, |_, _| rng.normal());
+        let labels: Vec<usize> = (0..24).map(|i| i % 4).collect();
+        let foreign = crate::backend::Backend::train(
+            &ivecs,
+            &labels,
+            &crate::backend::BackendOpts { lda_dim: 3, plda_iters: 2, whiten: false },
+        )
+        .unwrap();
+        let mut mixed = bundle;
+        mixed.backend = foreign;
+        let err = mixed.check_backend_dims().unwrap_err();
+        assert!(err.to_string().contains("different extractor"), "{err}");
+
+        // and load_auto refuses the same bundle from disk
+        let dir = std::env::temp_dir().join("ivtv_bundle_dim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::io::save(&mixed, dir.join("bundle.bin")).unwrap();
+        let err = ModelBundle::load_auto(dir.to_str().unwrap(), &cfg).unwrap_err();
+        assert!(err.to_string().contains("different extractor"), "{err}");
     }
 
     #[test]

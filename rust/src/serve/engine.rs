@@ -8,8 +8,18 @@
 //! one GEMM-shaped E-step dispatch. Enrollments land in the sharded
 //! [`Registry`]; verification scores the averaged enrollment i-vector
 //! against the request's i-vector through the bundle's PLDA backend.
+//!
+//! Every request carries two deadlines derived from the `[serve]`
+//! config: the **submit deadline** bounds how long admission control
+//! waits for micro-batch queue space (past it the request is shed with
+//! a typed [`ServeError::Overloaded`]), and the **request deadline**
+//! bounds the wait for the batched response (past it the request fails
+//! with [`ServeError::Timeout`] — a stalled worker can no longer hang a
+//! request thread forever). Shed/timeout counts and queue-depth stats
+//! are part of [`EngineMetrics`].
 
-use std::sync::mpsc::sync_channel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
@@ -17,10 +27,11 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ServeConfig;
 use crate::linalg::Mat;
-use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::metrics::{DepthSummary, LatencyHistogram, LatencySummary};
 
 use super::batcher::MicroBatcher;
 use super::bundle::{ModelBundle, ServeModel};
+use super::error::ServeError;
 use super::registry::Registry;
 
 /// One verification result.
@@ -42,6 +53,21 @@ pub struct EngineMetrics {
     pub verify: LatencySummary,
     pub dispatched_batches: u64,
     pub batched_requests: u64,
+    /// Requests shed at admission (typed `Overloaded` rejections).
+    pub shed_requests: u64,
+    /// Requests that missed their response deadline (typed `Timeout`).
+    pub timed_out_requests: u64,
+    /// Queued jobs purged unprocessed because their caller's deadline
+    /// passed first (workers never burn batch slots on dead work).
+    pub expired_jobs: u64,
+    /// Micro-batch queue occupancy over admitted requests.
+    pub queue_depth: DepthSummary,
+    /// Jobs queued right now (admitted, not yet dispatched).
+    pub queue_len: usize,
+    /// Aligner-scratch pool counters of the *current* model snapshot
+    /// (fresh allocations, pooled reuses); reset by a hot swap.
+    pub scratch_created: u64,
+    pub scratch_reused: u64,
     pub enrolled_speakers: usize,
 }
 
@@ -64,6 +90,14 @@ pub struct Engine {
     model: RwLock<Arc<ServeModel>>,
     registry: Registry,
     batcher: MicroBatcher,
+    /// Admission bound: max wait for queue space before shedding.
+    submit_timeout: Duration,
+    /// End-to-end bound: max wait for the batched response.
+    request_timeout: Duration,
+    /// Scratch-pool bound handed to each `ServeModel` (hot swaps too).
+    scratch_pool: usize,
+    /// Requests that missed their response deadline.
+    timeouts: AtomicU64,
     extract_lat: LatencyHistogram,
     enroll_lat: LatencyHistogram,
     verify_lat: LatencyHistogram,
@@ -71,10 +105,18 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spin up the worker pool around a bundle.
-    pub fn new(bundle: ModelBundle, opts: &ServeConfig) -> Self {
-        Self {
-            model: RwLock::new(Arc::new(ServeModel::new(bundle))),
+    /// Spin up the worker pool around a bundle. Rejects a bundle whose
+    /// backend dims disagree with its extractor — the in-process
+    /// counterpart of the `load_auto` check, so a mixed-artifact bundle
+    /// fails here instead of panicking inside `project` on the first
+    /// verify.
+    pub fn new(bundle: ModelBundle, opts: &ServeConfig) -> Result<Self> {
+        bundle.check_backend_dims()?;
+        Ok(Self {
+            model: RwLock::new(Arc::new(ServeModel::with_scratch_pool(
+                bundle,
+                opts.scratch_pool,
+            ))),
             registry: Registry::new(opts.registry_shards),
             batcher: MicroBatcher::new(
                 opts.batch_utts,
@@ -82,11 +124,15 @@ impl Engine {
                 opts.workers,
                 opts.queue_cap,
             ),
+            submit_timeout: Duration::from_millis(opts.submit_timeout_ms.max(1)),
+            request_timeout: Duration::from_millis(opts.request_timeout_ms.max(1)),
+            scratch_pool: opts.scratch_pool,
+            timeouts: AtomicU64::new(0),
             extract_lat: LatencyHistogram::new(),
             enroll_lat: LatencyHistogram::new(),
             verify_lat: LatencyHistogram::new(),
             started: Instant::now(),
-        }
+        })
     }
 
     /// Snapshot the current model.
@@ -96,10 +142,14 @@ impl Engine {
 
     /// Atomically replace the model bundle. In-flight requests finish
     /// on the snapshot they started with; the micro-batcher never mixes
-    /// snapshots within a batch.
-    pub fn swap_bundle(&self, bundle: ModelBundle) {
-        let next = Arc::new(ServeModel::new(bundle));
+    /// snapshots within a batch. A backend/extractor dim mismatch is
+    /// rejected here (the current model stays installed) — hot swaps
+    /// must not be able to arm a panic for the next verify request.
+    pub fn swap_bundle(&self, bundle: ModelBundle) -> Result<()> {
+        bundle.check_backend_dims()?;
+        let next = Arc::new(ServeModel::with_scratch_pool(bundle, self.scratch_pool));
         *self.model.write().unwrap() = next;
+        Ok(())
     }
 
     /// The speaker registry (persistence, admin).
@@ -108,15 +158,43 @@ impl Engine {
     }
 
     /// Extraction against an explicit snapshot — the shared inner path.
+    /// Deadline-bounded end to end: admission sheds past the submit
+    /// deadline, and a stalled worker surfaces as a typed timeout
+    /// instead of hanging this thread.
     fn extract_with(&self, model: &Arc<ServeModel>, feats: &Mat) -> Result<Vec<f64>> {
+        let t0 = Instant::now();
+        let request_deadline = t0 + self.request_timeout;
         // announce before the loader work so batch workers know a
         // co-rider is on the way and hold sub-size batches for it
         let token = self.batcher.begin_request();
         let stats = model.utt_stats(feats);
+        // the admission budget starts *after* the loader work:
+        // submit_timeout bounds the wait for queue space, so a long
+        // utterance's alignment must not eat the budget and turn every
+        // transiently-full queue into an instant shed
+        let submit_deadline = (Instant::now() + self.submit_timeout).min(request_deadline);
         let (tx, rx) = sync_channel(1);
-        self.batcher.submit(stats, Arc::clone(model), tx)?;
+        self.batcher.submit(stats, Arc::clone(model), tx, submit_deadline, request_deadline)?;
         drop(token); // queued: no longer "on the way"
-        rx.recv().map_err(|_| anyhow!("serving worker dropped the response"))
+        let remaining = request_deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(remaining) {
+            Ok(ivector) => Ok(ivector),
+            Err(RecvTimeoutError::Timeout) => {
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Timeout { waited: t0.elapsed() }.into())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // a purged (expired) job also surfaces as Disconnected —
+                // classify by the deadline, so overload is reported as a
+                // timeout and never masquerades as a broken worker
+                if Instant::now() >= request_deadline {
+                    self.timeouts.fetch_add(1, Ordering::Relaxed);
+                    Err(ServeError::Timeout { waited: t0.elapsed() }.into())
+                } else {
+                    Err(ServeError::WorkerFailed.into())
+                }
+            }
+        }
     }
 
     /// Extract one i-vector for a feature matrix (frames × dim).
@@ -166,6 +244,7 @@ impl Engine {
 
     /// Counters snapshot.
     pub fn metrics(&self) -> EngineMetrics {
+        let (scratch_created, scratch_reused) = self.model().scratch_stats();
         EngineMetrics {
             uptime_s: self.started.elapsed().as_secs_f64(),
             extract: self.extract_lat.summary(),
@@ -173,6 +252,13 @@ impl Engine {
             verify: self.verify_lat.summary(),
             dispatched_batches: self.batcher.dispatched_batches(),
             batched_requests: self.batcher.batched_requests(),
+            shed_requests: self.batcher.shed_requests(),
+            timed_out_requests: self.timeouts.load(Ordering::Relaxed),
+            expired_jobs: self.batcher.expired_jobs(),
+            queue_depth: self.batcher.queue_depth(),
+            queue_len: self.batcher.queue_len(),
+            scratch_created,
+            scratch_reused,
             enrolled_speakers: self.registry.len(),
         }
     }
@@ -195,7 +281,18 @@ mod tests {
     }
 
     fn opts(batch_utts: usize, flush_us: u64, workers: usize) -> ServeConfig {
-        ServeConfig { batch_utts, flush_us, workers, registry_shards: 4, queue_cap: 256 }
+        ServeConfig {
+            batch_utts,
+            flush_us,
+            workers,
+            registry_shards: 4,
+            queue_cap: 256,
+            // generous request-path deadlines: the functional tests
+            // exercise correctness, not admission control
+            submit_timeout_ms: 10_000,
+            request_timeout_ms: 60_000,
+            scratch_pool: 4,
+        }
     }
 
     #[test]
@@ -204,7 +301,7 @@ mod tests {
         // same features (≤ 1e-10)
         let cfg = tiny_serve_config();
         let traffic = tiny_traffic(&cfg, 4, 77);
-        let engine = Engine::new(shared_bundle().clone(), &opts(4, 300, 2));
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 300, 2)).unwrap();
         let model = engine.model();
         crate::proptest::forall(
             20_2507,
@@ -235,7 +332,7 @@ mod tests {
         let traffic = tiny_traffic(&cfg, 4, 13);
         // one worker + generous deadline: near-simultaneous requests
         // must ride shared dispatches
-        let engine = Engine::new(shared_bundle().clone(), &opts(8, 200_000, 1));
+        let engine = Engine::new(shared_bundle().clone(), &opts(8, 200_000, 1)).unwrap();
         let n = 16;
         let barrier = std::sync::Barrier::new(n);
         std::thread::scope(|scope| {
@@ -269,16 +366,16 @@ mod tests {
         let cfg = tiny_serve_config();
         let traffic = tiny_traffic(&cfg, 1, 17);
         let bundle = shared_bundle().clone();
-        let engine = Engine::new(bundle.clone(), &opts(2, 300, 1));
+        let engine = Engine::new(bundle.clone(), &opts(2, 300, 1)).unwrap();
         let id = traffic.speaker_id(0);
         engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
         // a value-identical swap keeps the profile scorable
-        engine.swap_bundle(bundle.clone());
+        engine.swap_bundle(bundle.clone()).unwrap();
         engine.verify(&id, &traffic.utterance(0, 1)).unwrap();
         // a retrained-model stand-in: same dims, different parameters
         let mut other = bundle;
         *other.tvm.t[0].get_mut(0, 0) += 0.5;
-        engine.swap_bundle(other);
+        engine.swap_bundle(other).unwrap();
         let err = engine.verify(&id, &traffic.utterance(0, 1)).unwrap_err();
         assert!(err.to_string().contains("different model"), "{err}");
         // mixing epochs within one profile is refused too
@@ -294,7 +391,7 @@ mod tests {
     fn unknown_speaker_is_rejected() {
         let cfg = tiny_serve_config();
         let traffic = tiny_traffic(&cfg, 1, 3);
-        let engine = Engine::new(shared_bundle().clone(), &opts(2, 200, 1));
+        let engine = Engine::new(shared_bundle().clone(), &opts(2, 200, 1)).unwrap();
         let err = engine.verify("nobody", &traffic.utterance(0, 0)).unwrap_err();
         assert!(err.to_string().contains("not enrolled"), "{err}");
     }
@@ -303,7 +400,7 @@ mod tests {
     fn verify_scores_separate_target_from_impostor() {
         let cfg = tiny_serve_config();
         let traffic = tiny_traffic(&cfg, 2, 21);
-        let engine = Engine::new(shared_bundle().clone(), &opts(4, 500, 2));
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 500, 2)).unwrap();
         let id = traffic.speaker_id(0);
         for k in 0..3 {
             engine.enroll(&id, &traffic.utterance(0, k)).unwrap();
@@ -336,7 +433,7 @@ mod tests {
         // speakers 0..8 owned by the worker threads; 8 is the shared
         // contended speaker every thread also enrolls
         let traffic = tiny_traffic(&cfg, 9, 99);
-        let engine = Engine::new(bundle.clone(), &opts(4, 1_000, 2));
+        let engine = Engine::new(bundle.clone(), &opts(4, 1_000, 2)).unwrap();
         let n_threads = 4usize;
         let enroll_utts = 2usize;
         let running = AtomicBool::new(true);
@@ -351,7 +448,7 @@ mod tests {
                 let running = &running;
                 scope.spawn(move || {
                     while running.load(Ordering::Relaxed) {
-                        engine.swap_bundle(bundle.clone());
+                        engine.swap_bundle(bundle.clone()).unwrap();
                         std::thread::sleep(Duration::from_millis(1));
                     }
                 })
@@ -434,13 +531,184 @@ mod tests {
         }
     }
 
+    /// Wait (bounded) until the batcher holds exactly `n` queued jobs.
+    fn await_queue_depth(engine: &Engine, n: usize) {
+        let t0 = Instant::now();
+        while engine.batcher.queue_len() != n {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "queue never reached depth {n} (at {})",
+                engine.batcher.queue_len()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Tentpole acceptance: with the queue at `queue_cap` and more
+    /// submitters than workers, the excess request is shed with the
+    /// typed overload error within its submit deadline, while every
+    /// admitted request still matches the `extract_cpu` oracle.
+    #[test]
+    fn saturated_queue_sheds_within_submit_deadline() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 55);
+        let mut o = opts(2, 500, 1);
+        o.queue_cap = 2;
+        o.submit_timeout_ms = 120;
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        let model = engine.model();
+
+        // deterministic saturation: freeze the worker pool, fill the
+        // queue to queue_cap with requests that will complete later
+        engine.batcher.set_stalled(true);
+        std::thread::scope(|scope| {
+            let fillers: Vec<_> = (0..2)
+                .map(|i| {
+                    let engine = &engine;
+                    let traffic = &traffic;
+                    scope.spawn(move || {
+                        let feats = traffic.utterance(i % 2, i as u64);
+                        (i, engine.extract(&feats).unwrap())
+                    })
+                })
+                .collect();
+            await_queue_depth(&engine, 2);
+
+            // the queue is at capacity and nobody drains it: this
+            // submitter must be load-shed, typed and on time
+            let t0 = Instant::now();
+            let err = engine.extract(&traffic.utterance(0, 99)).unwrap_err();
+            let waited = t0.elapsed();
+            let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+            assert!(
+                matches!(typed, ServeError::Overloaded { .. }),
+                "expected Overloaded, got {typed:?}"
+            );
+            assert!(typed.is_rejection());
+            assert!(
+                waited >= Duration::from_millis(100),
+                "shed before the deadline: {waited:?}"
+            );
+            assert!(
+                waited < Duration::from_secs(5),
+                "shed long after the deadline: {waited:?}"
+            );
+
+            // thaw: the admitted requests complete, bit-correct
+            engine.batcher.set_stalled(false);
+            for f in fillers {
+                let (i, got) = f.join().unwrap();
+                let want = model.extract_serial(&traffic.utterance(i % 2, i as u64));
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-10 * (1.0 + w.abs()),
+                        "filler {i} coord {j}: {g} vs {w}"
+                    );
+                }
+            }
+        });
+
+        let m = engine.metrics();
+        assert_eq!(m.shed_requests, 1);
+        assert_eq!(m.timed_out_requests, 0);
+        assert_eq!(m.queue_depth.max, 2, "queue must have reached queue_cap");
+        assert_eq!(m.queue_len, 0, "queue drained after thaw");
+        // the engine keeps serving after the shed
+        engine.extract(&traffic.utterance(1, 7)).unwrap();
+    }
+
+    /// A stalled worker cannot hang a request thread: the response wait
+    /// is bounded by the request deadline and surfaces as a typed
+    /// timeout.
+    #[test]
+    fn stalled_worker_times_out_the_request_not_the_thread() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 66);
+        let mut o = opts(2, 300, 1);
+        o.request_timeout_ms = 150;
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+
+        engine.batcher.set_stalled(true);
+        let t0 = Instant::now();
+        let err = engine.extract(&traffic.utterance(0, 0)).unwrap_err();
+        let waited = t0.elapsed();
+        let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(typed, ServeError::Timeout { .. }), "expected Timeout, got {typed:?}");
+        assert!(waited >= Duration::from_millis(140), "gave up early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "hung past the deadline: {waited:?}");
+        assert_eq!(engine.metrics().timed_out_requests, 1);
+
+        // thaw: the expired job is purged unprocessed (its caller is
+        // gone) and fresh requests serve normally
+        engine.batcher.set_stalled(false);
+        engine.extract(&traffic.utterance(0, 1)).unwrap();
+        let m = engine.metrics();
+        assert_eq!(m.expired_jobs, 1, "the timed-out job must be purged, not dispatched");
+        assert_eq!(m.batched_requests, 1, "only the fresh request may reach the E-step");
+    }
+
+    /// A dim-mismatched backend is rejected at construction and at hot
+    /// swap — never armed to panic inside `project` on the next verify.
+    #[test]
+    fn mismatched_backend_is_rejected_at_new_and_swap() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 44);
+        let mut bad = shared_bundle().clone();
+        bad.backend.centering.mean.push(0.0); // backend now expects rank+1
+        let err = Engine::new(bad.clone(), &opts(2, 300, 1)).unwrap_err();
+        assert!(err.to_string().contains("different extractor"), "{err}");
+
+        let engine = Engine::new(shared_bundle().clone(), &opts(2, 300, 1)).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        let err = engine.swap_bundle(bad).unwrap_err();
+        assert!(err.to_string().contains("different extractor"), "{err}");
+        // the rejected swap left the current model installed and serving
+        engine.verify(&id, &traffic.utterance(0, 1)).unwrap();
+    }
+
+    /// Satellite acceptance: a poisoned (NaN-stats) batch errors its own
+    /// requests through the `catch_unwind` path while the same worker
+    /// keeps serving subsequent requests correctly.
+    #[test]
+    fn poisoned_batch_errors_without_killing_the_worker() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 88);
+        let engine = Engine::new(shared_bundle().clone(), &opts(2, 300, 1)).unwrap();
+        let model = engine.model();
+        let feats = traffic.utterance(0, 0);
+
+        // craft non-finite statistics (a malformed request payload) and
+        // inject them directly at the batcher boundary
+        let mut stats = model.utt_stats(&feats);
+        for n in stats.n.iter_mut() {
+            *n = f64::NAN;
+        }
+        let (tx, rx) = sync_channel(1);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        engine.batcher.submit(stats, Arc::clone(&model), tx, deadline, deadline).unwrap();
+        // the dispatch panics inside the E-step; the catch_unwind path
+        // drops the job, closing the response channel
+        assert!(rx.recv().is_err(), "poisoned request must error, not produce an i-vector");
+
+        // same single worker, next request: still alive and bit-correct
+        let got = engine.extract(&feats).unwrap();
+        let want = model.extract_serial(&feats);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "coord {j}: {g} vs {w}");
+        }
+        let m = engine.metrics();
+        assert_eq!(m.shed_requests, 0);
+        assert_eq!(m.extract.count, 1);
+    }
+
     #[test]
     fn verify_load_sustains_a_thousand_requests() {
         // acceptance: ≥ 1000 verify requests against a tiny-config
         // engine with micro-batching on
         let cfg = tiny_serve_config();
         let traffic = tiny_traffic(&cfg, 6, 42);
-        let engine = Engine::new(shared_bundle().clone(), &cfg.serve);
+        let engine = Engine::new(shared_bundle().clone(), &cfg.serve).unwrap();
         let report = super::super::bench::run_verify_load(
             &engine,
             &traffic,

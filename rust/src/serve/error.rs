@@ -1,0 +1,96 @@
+//! Typed serving-path failures.
+//!
+//! Admission control and deadlines turn "the engine is saturated" from
+//! an unbounded blocked thread into a *value* the caller can branch on:
+//! a load balancer retries [`ServeError::Overloaded`] on another
+//! replica, treats [`ServeError::Timeout`] as a lost request, and pages
+//! on [`ServeError::WorkerFailed`]. The variants ride inside
+//! `anyhow::Error` (every engine entry point keeps its `Result`
+//! signature) and stay reachable through `Error::downcast_ref`, even
+//! under added context.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a serving request failed without producing an i-vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// Load-shed at admission: the micro-batch queue stayed at capacity
+    /// for the whole submit deadline. The request did **not** enter the
+    /// queue; retrying elsewhere is safe.
+    Overloaded {
+        /// How long admission waited for queue space before shedding.
+        waited: Duration,
+    },
+    /// Admitted, but the response missed the request deadline (stalled
+    /// or saturated workers). The job may still complete; its response
+    /// is discarded.
+    Timeout {
+        /// Total time spent on the request before giving up.
+        waited: Duration,
+    },
+    /// The engine is shutting down; no new requests are admitted.
+    ShuttingDown,
+    /// The worker dropped the response channel — the request's batch
+    /// dispatch panicked (e.g. non-finite statistics).
+    WorkerFailed,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Overloaded { waited } => write!(
+                f,
+                "engine overloaded: shed after waiting {:.0} ms for queue space",
+                waited.as_secs_f64() * 1e3
+            ),
+            Self::Timeout { waited } => write!(
+                f,
+                "request timed out after {:.0} ms waiting for its batch",
+                waited.as_secs_f64() * 1e3
+            ),
+            Self::ShuttingDown => write!(f, "serving engine is shutting down"),
+            Self::WorkerFailed => {
+                write!(f, "serving worker dropped the response (batch dispatch failed)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// True for the two deadline-driven rejections (shed or timed out)
+    /// — the "engine is saturated, not broken" failures a load harness
+    /// counts rather than propagates.
+    pub fn is_rejection(&self) -> bool {
+        matches!(self, Self::Overloaded { .. } | Self::Timeout { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_classification() {
+        let shed = ServeError::Overloaded { waited: Duration::from_millis(250) };
+        assert!(shed.to_string().contains("overloaded"));
+        assert!(shed.to_string().contains("250 ms"));
+        assert!(shed.is_rejection());
+        let to = ServeError::Timeout { waited: Duration::from_millis(100) };
+        assert!(to.to_string().contains("timed out"));
+        assert!(to.is_rejection());
+        assert!(!ServeError::ShuttingDown.is_rejection());
+        assert!(!ServeError::WorkerFailed.is_rejection());
+    }
+
+    #[test]
+    fn survives_anyhow_round_trip_with_context() {
+        use anyhow::Context;
+        let err: anyhow::Error = ServeError::Overloaded { waited: Duration::ZERO }.into();
+        let wrapped = Err::<(), _>(err).context("verify request").unwrap_err();
+        let back = wrapped.downcast_ref::<ServeError>().expect("typed error reachable");
+        assert!(back.is_rejection());
+    }
+}

@@ -14,6 +14,10 @@
 //!   Baum-Welch statistics), worker threads drain the queue in
 //!   `batch_utts`-sized model-coherent batches through the same
 //!   [`crate::ivector::estep_batch_cpu`] GEMM path as training;
+//! * [`ServeError`] — typed request failures: every request carries a
+//!   submit deadline (admission control sheds with `Overloaded` when
+//!   the queue stays full) and a request deadline (`Timeout` instead of
+//!   a thread hung on a stalled worker);
 //! * [`Registry`] — sharded-lock speaker store with enrollment
 //!   averaging and `io`-format persistence;
 //! * [`bench`] — the load-replay harness behind `serve-bench` and the
@@ -23,8 +27,10 @@ pub mod bench;
 mod batcher;
 mod bundle;
 mod engine;
+mod error;
 mod registry;
 
 pub use bundle::{ModelBundle, ServeModel};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
+pub use error::ServeError;
 pub use registry::{Registry, SpeakerProfile};

@@ -16,11 +16,25 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::io::{BinReader, BinWriter};
+
+/// One lock shard.
+type Shard = Mutex<HashMap<String, SpeakerProfile>>;
+
+/// Poison-tolerant shard lock. A panic while a shard is held (a bug in
+/// the holder, or a caller's unwind crossing an enrollment) must not
+/// convert into a permanent shard-wide outage: every profile update is
+/// a running `(sum, count)` pair mutated in place, so the worst a
+/// mid-update unwind leaves behind is one speaker's partially-applied
+/// enrollment — strictly better than poisoning `lock().unwrap()` for
+/// every later caller of that shard.
+fn lock(shard: &Shard) -> MutexGuard<'_, HashMap<String, SpeakerProfile>> {
+    shard.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Accumulated enrollment state of one speaker.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,7 +58,7 @@ impl SpeakerProfile {
 /// Sharded concurrent speaker store.
 #[derive(Debug)]
 pub struct Registry {
-    shards: Vec<Mutex<HashMap<String, SpeakerProfile>>>,
+    shards: Vec<Shard>,
 }
 
 impl Registry {
@@ -55,7 +69,7 @@ impl Registry {
         }
     }
 
-    fn shard(&self, speaker_id: &str) -> &Mutex<HashMap<String, SpeakerProfile>> {
+    fn shard(&self, speaker_id: &str) -> &Shard {
         let mut h = std::collections::hash_map::DefaultHasher::new();
         speaker_id.hash(&mut h);
         &self.shards[(h.finish() % self.shards.len() as u64) as usize]
@@ -65,9 +79,12 @@ impl Registry {
     /// profile on first enrollment); returns the new utterance count.
     /// Fails if the speaker already holds enrollments from a different
     /// model epoch — averaging across total-variability spaces would
-    /// corrupt the profile.
+    /// corrupt the profile — or if the i-vector dimension disagrees
+    /// with the existing profile. Both are *errors to that caller*,
+    /// never panics: a panic here would fire while the shard mutex is
+    /// held and cascade one malformed request into a shard-wide outage.
     pub fn enroll(&self, speaker_id: &str, ivector: &[f64], model_fp: u64) -> Result<u64> {
-        let mut shard = self.shard(speaker_id).lock().unwrap();
+        let mut shard = lock(self.shard(speaker_id));
         let profile = shard.entry(speaker_id.to_string()).or_insert_with(|| SpeakerProfile {
             count: 0,
             sum: vec![0.0; ivector.len()],
@@ -78,10 +95,12 @@ impl Registry {
             "speaker `{speaker_id}` was enrolled under a different model — \
              remove and re-enroll after a bundle swap"
         );
-        assert_eq!(
-            profile.sum.len(),
+        ensure!(
+            profile.sum.len() == ivector.len(),
+            "enrollment dim {} does not match speaker `{speaker_id}`'s existing profile \
+             dim {}",
             ivector.len(),
-            "enrollment dim changed for speaker {speaker_id}"
+            profile.sum.len()
         );
         for (s, &x) in profile.sum.iter_mut().zip(ivector) {
             *s += x;
@@ -92,17 +111,17 @@ impl Registry {
 
     /// Snapshot a speaker's profile (mean + count), if enrolled.
     pub fn profile(&self, speaker_id: &str) -> Option<SpeakerProfile> {
-        self.shard(speaker_id).lock().unwrap().get(speaker_id).cloned()
+        lock(self.shard(speaker_id)).get(speaker_id).cloned()
     }
 
     /// Remove a speaker; returns whether it existed.
     pub fn remove(&self, speaker_id: &str) -> bool {
-        self.shard(speaker_id).lock().unwrap().remove(speaker_id).is_some()
+        lock(self.shard(speaker_id)).remove(speaker_id).is_some()
     }
 
     /// Number of enrolled speakers.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock(s).len()).sum()
     }
 
     /// True when no speaker is enrolled.
@@ -112,10 +131,7 @@ impl Registry {
 
     /// Total enrollment utterances across all speakers.
     pub fn total_enrollments(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().values().map(|p| p.count).sum::<u64>())
-            .sum()
+        self.shards.iter().map(|s| lock(s).values().map(|p| p.count).sum::<u64>()).sum()
     }
 
     /// All enrolled speaker ids, sorted (stable across shard layouts).
@@ -123,7 +139,7 @@ impl Registry {
         let mut ids: Vec<String> = self
             .shards
             .iter()
-            .flat_map(|s| s.lock().unwrap().keys().cloned().collect::<Vec<_>>())
+            .flat_map(|s| lock(s).keys().cloned().collect::<Vec<_>>())
             .collect();
         ids.sort();
         ids
@@ -153,7 +169,12 @@ impl Registry {
     }
 
     /// Load a registry written by [`Registry::save`], distributing the
-    /// profiles over `n_shards` fresh shards.
+    /// profiles over `n_shards` fresh shards. Every record is validated
+    /// the way the dim guard already was: a zero enrollment count
+    /// (whose bogus mean `mean()`'s `count.max(1)` would silently
+    /// mask), a duplicate speaker id (silent last-record-wins), or a
+    /// non-finite sum (NaN/∞ would poison every later verify score) all
+    /// reject the file instead of loading corrupt state.
     pub fn load(path: impl AsRef<Path>, n_shards: usize) -> Result<Self> {
         let mut r = BinReader::open(path)?;
         let n = r.read_u64()? as usize;
@@ -163,12 +184,20 @@ impl Registry {
             let count = r.read_u64()?;
             let model_fp = r.read_u64()?;
             let dim = r.read_u64()? as usize;
+            if count == 0 {
+                bail!("speaker `{id}` has zero enrollments — corrupt registry file?");
+            }
             if dim > 1 << 20 {
                 bail!("i-vector dim {dim} implausible — corrupt registry file?");
             }
             let sum = r.read_f64_vec(dim)?;
-            let mut shard = reg.shard(&id).lock().unwrap();
-            shard.insert(id, SpeakerProfile { count, sum, model_fp });
+            if !sum.iter().all(|x| x.is_finite()) {
+                bail!("speaker `{id}` has a non-finite enrollment sum — corrupt registry file?");
+            }
+            let mut shard = lock(reg.shard(&id));
+            if shard.insert(id.clone(), SpeakerProfile { count, sum, model_fp }).is_some() {
+                bail!("duplicate speaker `{id}` — corrupt registry file?");
+            }
         }
         Ok(reg)
     }
@@ -217,6 +246,95 @@ mod tests {
         assert!(reg.remove("s1"));
         assert!(!reg.remove("s1"));
         assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error_and_the_shard_survives() {
+        // satellite acceptance: a dimension-mismatched enrollment is an
+        // error to that caller, and the shard keeps serving everyone
+        let reg = Registry::new(1); // one shard: every id shares the lock
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        let err = reg.enroll("alice", &[1.0, 2.0, 3.0], FP).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        // profile untouched by the rejected enrollment
+        let p = reg.profile("alice").unwrap();
+        assert_eq!(p.count, 1);
+        assert_eq!(p.sum, vec![1.0, 2.0]);
+        // the same shard still takes enrollments — no poisoned lock
+        assert_eq!(reg.enroll("bob", &[0.5, 0.5], FP).unwrap(), 1);
+        assert_eq!(reg.enroll("alice", &[3.0, 4.0], FP).unwrap(), 2);
+    }
+
+    #[test]
+    fn poisoned_shard_lock_is_tolerated() {
+        // a panic while holding a shard mutex (a buggy holder) must not
+        // take the shard down for every later caller
+        let reg = Registry::new(1);
+        reg.enroll("alice", &[1.0], FP).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = reg.shard("alice").lock().unwrap();
+            panic!("holder bug");
+        }));
+        assert!(caught.is_err());
+        assert!(reg.shard("alice").is_poisoned(), "the mutex really was poisoned");
+        // every accessor keeps working through the poison
+        assert_eq!(reg.profile("alice").unwrap().count, 1);
+        assert_eq!(reg.enroll("alice", &[2.0], FP).unwrap(), 2);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.total_enrollments(), 2);
+        assert_eq!(reg.speaker_ids(), vec!["alice"]);
+        assert!(reg.remove("alice"));
+    }
+
+    /// Hand-write a registry file in the `save` format from raw records.
+    fn write_registry_file(
+        path: &std::path::Path,
+        records: &[(&str, u64, u64, &[f64])],
+    ) -> Result<()> {
+        let mut w = BinWriter::create(path)?;
+        w.write_u64(records.len() as u64)?;
+        for (id, count, fp, sum) in records {
+            w.write_string(id)?;
+            w.write_u64(*count)?;
+            w.write_u64(*fp)?;
+            w.write_u64(sum.len() as u64)?;
+            w.write_f64_slice(sum)?;
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn load_rejects_corrupt_records() {
+        let dir = std::env::temp_dir().join("ivtv_registry_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // zero-count profile: mean() would silently divide by max(1)
+        let p = dir.join("zero_count.bin");
+        write_registry_file(&p, &[("a", 0, FP, &[1.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("zero enrollments"), "{err}");
+
+        // duplicate speaker ids: last record would silently win
+        let p = dir.join("dup.bin");
+        write_registry_file(&p, &[("a", 1, FP, &[1.0]), ("a", 2, FP, &[9.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("duplicate speaker"), "{err}");
+
+        // non-finite sums: NaN would poison every later verify score
+        let p = dir.join("nan.bin");
+        write_registry_file(&p, &[("a", 1, FP, &[f64::NAN, 1.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let p = dir.join("inf.bin");
+        write_registry_file(&p, &[("a", 1, FP, &[f64::INFINITY])]).unwrap();
+        assert!(Registry::load(&p, 2).is_err());
+
+        // a well-formed file with the same shapes still loads
+        let p = dir.join("ok.bin");
+        write_registry_file(&p, &[("a", 1, FP, &[1.0]), ("b", 2, FP, &[4.0])]).unwrap();
+        let reg = Registry::load(&p, 2).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.profile("b").unwrap().mean(), vec![2.0]);
     }
 
     #[test]

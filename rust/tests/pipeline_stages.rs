@@ -79,7 +79,7 @@ fn cli_pipeline_end_to_end_on_disk() {
     let cfg = ivector_tv::config::Config::load(&cfg_path).unwrap();
     let bundle =
         ivector_tv::serve::ModelBundle::load_auto(work.to_str().unwrap(), &cfg).unwrap();
-    let engine = ivector_tv::serve::Engine::new(bundle, &cfg.serve);
+    let engine = ivector_tv::serve::Engine::new(bundle, &cfg.serve).unwrap();
     let eval_arch: FeatArchive = FeatArchive::load(work.join("eval.feats")).unwrap();
     let (u0, u1) = (&eval_arch.utts[0], &eval_arch.utts[1]);
     assert_eq!(u0.spk_id, u1.spk_id, "eval archive groups utts per speaker");

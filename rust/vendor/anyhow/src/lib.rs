@@ -1,0 +1,264 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` API subset
+//! this repository uses, vendored so tier-1 (`cargo build --release &&
+//! cargo test -q`) resolves in a network-less container.
+//!
+//! Covered (drop-in compatible for these uses):
+//!
+//! * [`Error`] — boxed dynamic error with a context chain, convertible
+//!   from any `std::error::Error + Send + Sync + 'static` via `?`;
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result`
+//!   and `Option`;
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — format-style constructors;
+//! * [`Error::downcast_ref`] — typed access to the root error (how the
+//!   serving path exposes its typed overload/timeout errors);
+//! * `{e}` prints the outermost message, `{e:#}` the full
+//!   colon-separated chain, matching anyhow's display contract.
+//!
+//! Not covered (unused here): backtraces, `downcast`/`downcast_mut` by
+//! value, `chain()` iteration, `#[source]` attribute interplay.
+//! **Known divergence:** `anyhow!(err_value)` with a non-literal single
+//! expression stringifies the value into an ad-hoc message (real anyhow
+//! preserves error values for later `downcast_ref`). To keep a typed
+//! error downcastable, convert with `Error::new(err)` / `err.into()`
+//! instead of `anyhow!(err)` — every current call site in this repo
+//! uses the format-literal forms, which behave identically.
+//!
+//! Clean-room implementation against the documented anyhow API; no
+//! upstream code was copied.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error plus a chain of human-readable context layers
+/// (outermost first). Deliberately does **not** implement
+/// `std::error::Error`, exactly like anyhow's `Error` — that is what
+/// keeps the blanket `From<E: StdError>` conversion coherent.
+pub struct Error {
+    /// Context layers added by [`Context`], outermost first.
+    context: Vec<String>,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Ad-hoc message error backing [`anyhow!`].
+#[derive(Debug)]
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Create from a displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { context: Vec::new(), source: Box::new(Message(message.to_string())) }
+    }
+
+    /// Create from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self { context: Vec::new(), source: Box::new(error) }
+    }
+
+    /// Wrap with an outer context layer (consuming builder form; the
+    /// trait method on `Result` is the usual entry point).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The root error, if it is an `E`. Context layers do not hide the
+    /// root: a typed error stays downcastable through any number of
+    /// `.context(...)` wrappers.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.downcast_ref::<E>()
+    }
+
+    /// The root cause (the error the chain bottoms out at).
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = &*self.source;
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first, colon-joined
+            for c in &self.context {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.source)?;
+            let mut cause = self.source.source();
+            while let Some(next) = cause {
+                write!(f, ": {next}")?;
+                cause = next.source();
+            }
+            Ok(())
+        } else if let Some(c) = self.context.first() {
+            f.write_str(c)
+        } else {
+            write!(f, "{}", self.source)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow prints the message plus a caused-by chain; the
+        // colon-joined alternate form carries the same information
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Lazily-evaluated [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond))
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl StdError for Typed {}
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("positive"));
+    }
+
+    #[test]
+    fn context_layers_and_alternate_chain() {
+        let r: Result<()> = Err(Error::new(Typed(7)));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: typed error 7");
+        // context does not hide the typed root
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.root_cause().is::<Typed>());
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3");
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+}
