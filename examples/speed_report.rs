@@ -284,6 +284,20 @@ fn kernel_bench_json(
         BatchAligner::new(&diag, &full, top_k, 0.025).align_utterance(&frames)
     });
 
+    // mixed-precision comparison (same UBM, same frames, same run) →
+    // BENCH_4.json: alignment frames/s for the f64 and f32 paths
+    let precision_bench = ivector_tv::bench_util::bench_align_precision(
+        &diag, &full, &frames, top_k, 0.025, 1, 3,
+    );
+    println!(
+        "-> alignment precision: {:.0} frames/s f32 vs {:.0} f64 ({:.2}x)",
+        precision_bench.frames_per_s_f32(),
+        precision_bench.frames_per_s_f64(),
+        precision_bench.f32_speedup(),
+    );
+    ivector_tv::bench_util::write_bench4_json("BENCH_4.json", &precision_bench)?;
+    println!("wrote BENCH_4.json");
+
     let model = TvModel::init(Formulation::Augmented, &full, r, 100.0, 7);
     let stats: Vec<UttStats> = (0..n_utts)
         .map(|_| UttStats {

@@ -7,8 +7,9 @@
 use ivector_tv::bench_util::bench;
 use ivector_tv::config::Config;
 use ivector_tv::coordinator::{
-    align_archive_accel, align_archive_cpu, align_archive_cpu_scalar,
+    align_archive_accel, align_archive_cpu, align_archive_cpu_prec, align_archive_cpu_scalar,
 };
+use ivector_tv::gmm::AlignPrecision;
 use ivector_tv::frontend::synth::generate_corpus;
 use ivector_tv::gmm::train_ubm;
 use ivector_tv::ivector::AccelTvm;
@@ -31,11 +32,25 @@ fn main() {
     let batched = bench("align/cpu-batched", 1, 5, || {
         align_archive_cpu(&ubm.diag, &ubm.full, train, cfg.tvm.top_k, cfg.tvm.min_post, workers)
     });
+    let batched_f32 = bench("align/cpu-batched-f32", 1, 5, || {
+        align_archive_cpu_prec(
+            &ubm.diag,
+            &ubm.full,
+            train,
+            cfg.tvm.top_k,
+            cfg.tvm.min_post,
+            workers,
+            AlignPrecision::F32,
+        )
+    });
     println!(
-        "-> cpu batched {:.0}x RT vs scalar {:.0}x RT: {:.2}x speedup",
+        "-> cpu batched {:.0}x RT vs scalar {:.0}x RT: {:.2}x speedup; \
+         f32 {:.0}x RT ({:.2}x over f64)",
         rt_factor(frames, batched.median_s),
         rt_factor(frames, scalar.median_s),
-        scalar.median_s / batched.median_s
+        scalar.median_s / batched.median_s,
+        rt_factor(frames, batched_f32.median_s),
+        batched.median_s / batched_f32.median_s
     );
 
     match AccelTvm::new("artifacts").and_then(AccelTvm::with_alignment) {

@@ -75,6 +75,96 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One f32-vs-f64 alignment throughput comparison — both paths timed on
+/// the same UBM and the same frame block within one harness run, so
+/// the speedup is apples-to-apples. Shared by the `speed_report`
+/// example and the `serve-bench` CLI command, which both write it out
+/// as `BENCH_4.json`.
+#[derive(Debug, Clone)]
+pub struct AlignPrecisionBench {
+    /// UBM components C.
+    pub c: usize,
+    /// Feature dim F.
+    pub f: usize,
+    pub top_k: usize,
+    /// Frames scored per repetition.
+    pub frames: usize,
+    pub f64_median_s: f64,
+    pub f32_median_s: f64,
+}
+
+impl AlignPrecisionBench {
+    pub fn frames_per_s_f64(&self) -> f64 {
+        self.frames as f64 / self.f64_median_s
+    }
+
+    pub fn frames_per_s_f32(&self) -> f64 {
+        self.frames as f64 / self.f32_median_s
+    }
+
+    /// f64-time / f32-time (>1 ⇒ f32 is faster).
+    pub fn f32_speedup(&self) -> f64 {
+        self.f64_median_s / self.f32_median_s
+    }
+
+    /// The `BENCH_4.json` document (alignment frames/s for both
+    /// precisions from the same run).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\n  \"issue\": 4,\n  \"dims\": {{\"C\": {}, \"F\": {}, \"top_k\": {}, \
+\"frames\": {}}},\n  \"alignment\": {{\"f64_s\": {:.6}, \"f32_s\": {:.6}, \
+\"frames_per_s_f64\": {:.2}, \"frames_per_s_f32\": {:.2}, \"f32_speedup\": {:.3}}}\n}}\n",
+            self.c,
+            self.f,
+            self.top_k,
+            self.frames,
+            self.f64_median_s,
+            self.f32_median_s,
+            self.frames_per_s_f64(),
+            self.frames_per_s_f32(),
+            self.f32_speedup(),
+        )
+    }
+}
+
+/// Time the batched aligner at both precisions over one frame block.
+pub fn bench_align_precision(
+    diag: &crate::gmm::DiagGmm,
+    full: &crate::gmm::FullGmm,
+    frames: &crate::linalg::Mat,
+    top_k: usize,
+    min_post: f64,
+    warmup: usize,
+    reps: usize,
+) -> AlignPrecisionBench {
+    use crate::gmm::{AlignPrecision, BatchAligner};
+    let f64_r = bench("align/f64-batched", warmup, reps, || {
+        BatchAligner::with_precision(diag, full, top_k, min_post, AlignPrecision::F64)
+            .align_utterance(frames)
+    });
+    let f32_r = bench("align/f32-batched", warmup, reps, || {
+        BatchAligner::with_precision(diag, full, top_k, min_post, AlignPrecision::F32)
+            .align_utterance(frames)
+    });
+    AlignPrecisionBench {
+        c: diag.num_components(),
+        f: diag.dim(),
+        top_k,
+        frames: frames.rows(),
+        f64_median_s: f64_r.median_s,
+        f32_median_s: f32_r.median_s,
+    }
+}
+
+/// Write the `BENCH_4.json` precision report.
+pub fn write_bench4_json(
+    path: impl AsRef<std::path::Path>,
+    b: &AlignPrecisionBench,
+) -> anyhow::Result<()> {
+    std::fs::write(&path, b.json())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.as_ref().display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +181,30 @@ mod tests {
         assert!(fmt_time(2.5).ends_with(" s"));
         assert!(fmt_time(2.5e-3).ends_with(" ms"));
         assert!(fmt_time(2.5e-6).ends_with(" µs"));
+    }
+
+    #[test]
+    fn bench4_json_shape() {
+        let b = AlignPrecisionBench {
+            c: 2048,
+            f: 60,
+            top_k: 20,
+            frames: 1000,
+            f64_median_s: 0.5,
+            f32_median_s: 0.25,
+        };
+        assert!((b.f32_speedup() - 2.0).abs() < 1e-12);
+        assert!((b.frames_per_s_f32() - 4000.0).abs() < 1e-9);
+        let json = b.json();
+        assert!(json.contains("\"issue\": 4"), "{json}");
+        assert!(json.contains("\"frames_per_s_f64\": 2000.00"), "{json}");
+        assert!(json.contains("\"frames_per_s_f32\": 4000.00"), "{json}");
+        assert!(json.contains("\"f32_speedup\": 2.000"), "{json}");
+
+        let dir = std::env::temp_dir().join("ivtv_bench4_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_4.json");
+        write_bench4_json(&p, &b).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), json);
     }
 }

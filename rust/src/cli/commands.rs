@@ -146,13 +146,17 @@ pub fn verify(args: &Args) -> Result<()> {
 
 /// `serve-bench` — sustained verify load against an engine (trained
 /// tiny bundle in-process, or a `--work` dir's bundle), micro-batching
-/// on vs off; writes the `BENCH_2.json` serving report.
+/// on vs off; writes the `BENCH_2.json` serving report plus the
+/// `BENCH_4.json` f32-vs-f64 alignment kernel comparison.
+/// `--precision {f32,f64}` overrides `[align] precision` so the two
+/// alignment paths can be A/B'd under the same load harness (all
+/// shed/timeout/queue-depth counters stay in the report).
 pub fn serve_bench(args: &Args) -> Result<()> {
     let work = args.get("work");
     // precedence: explicit --config; else the default pipeline config
     // when loading a --work bundle (matching how it was trained); else
     // the tiny config for the in-process bundle
-    let cfg = match (args.get("config"), &work) {
+    let mut cfg = match (args.get("config"), &work) {
         (Some(path), _) => Config::load(&path)?,
         (None, Some(_)) => Config::default_scaled(),
         (None, None) => tiny_serve_config(),
@@ -163,7 +167,13 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let enroll_utts = args.get_parse_or("enroll-utts", 2usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
     let out = args.get_or("out", "BENCH_2.json");
+    let bench4_out = args.get_or("bench4-out", "BENCH_4.json");
     let batched_only = args.switch("batched-only");
+    if let Some(p) = args.get("precision") {
+        let p = crate::gmm::AlignPrecision::parse(&p)?;
+        cfg.align.precision = p;
+        cfg.serve.precision = p;
+    }
     args.finish()?;
 
     let sw = Stopwatch::start();
@@ -175,13 +185,42 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         }
     };
     println!(
-        "bundle ready in {:.1}s (C={} F={} R={})",
+        "bundle ready in {:.1}s (C={} F={} R={}, align precision {})",
         sw.elapsed_s(),
         bundle.tvm.num_components(),
         bundle.tvm.feat_dim(),
-        bundle.tvm.rank()
+        bundle.tvm.rank(),
+        cfg.serve.precision,
     );
     let traffic = TrafficGen::new(&cfg.corpus, speakers, seed ^ 0xBEEF);
+
+    // kernel-level f32-vs-f64 alignment comparison on this bundle's UBM
+    // (same harness run as the load replay) → BENCH_4.json
+    {
+        let sample = traffic.utterance(0, 0);
+        let n = 1024;
+        let frames = crate::linalg::Mat::from_fn(n, sample.cols(), |t, j| {
+            sample.get(t % sample.rows(), j)
+        });
+        let pb = crate::bench_util::bench_align_precision(
+            &bundle.diag,
+            &bundle.full,
+            &frames,
+            bundle.top_k,
+            bundle.min_post,
+            1,
+            3,
+        );
+        println!(
+            "-> alignment {:.0} frames/s f32 vs {:.0} f64 ({:.2}x)",
+            pb.frames_per_s_f32(),
+            pb.frames_per_s_f64(),
+            pb.f32_speedup(),
+        );
+        crate::bench_util::write_bench4_json(&bench4_out, &pb)?;
+        println!("wrote {bench4_out}");
+    }
+
     let opts = ServeBenchOpts { speakers, enroll_utts, requests, concurrency };
 
     let mut reports: Vec<(&str, ServeBenchReport)> = Vec::new();

@@ -9,6 +9,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::gmm::AlignPrecision;
+
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -174,6 +176,19 @@ pub struct TvmConfig {
     pub batch_frames: usize,
 }
 
+/// Frame-alignment compute parameters (`[align]`).
+#[derive(Debug, Clone)]
+pub struct AlignConfig {
+    /// Scalar width of the diagonal-scoring GEMM + top-K selection.
+    /// `"f64"` (default) is bit-stable against the scalar oracle;
+    /// `"f32"` roughly doubles alignment throughput and mirrors the
+    /// device runtime's precision. Log-sum-exp, posterior
+    /// normalization, and all Baum-Welch/E-step accumulation stay f64
+    /// either way. Applies to both the trainer's alignment passes and
+    /// the serving engine (mirrored into [`ServeConfig::precision`]).
+    pub precision: AlignPrecision,
+}
+
 /// Backend parameters.
 #[derive(Debug, Clone)]
 pub struct BackendConfig {
@@ -217,6 +232,11 @@ pub struct ServeConfig {
     /// (~2 MB each at paper dims; 0 disables pooling). Size it to the
     /// expected number of concurrently-aligning request threads.
     pub scratch_pool: usize,
+    /// Alignment scoring precision for request threads. Defaults to
+    /// the `[align] precision` knob (one knob covers trainer and
+    /// serving); an explicit `[serve] precision` key overrides it for
+    /// serving only — e.g. f64 training artifacts served at f32.
+    pub precision: AlignPrecision,
 }
 
 /// Full experiment config.
@@ -225,6 +245,7 @@ pub struct Config {
     pub corpus: CorpusConfig,
     pub ubm: UbmConfig,
     pub tvm: TvmConfig,
+    pub align: AlignConfig,
     pub backend: BackendConfig,
     pub trials: TrialConfig,
     pub serve: ServeConfig,
@@ -271,6 +292,7 @@ impl Config {
                 batch_utts: 64,
                 batch_frames: 4096,
             },
+            align: AlignConfig { precision: AlignPrecision::F64 },
             backend: BackendConfig { lda_dim: 32, plda_iters: 8 },
             trials: TrialConfig { n_trials: 8000, seed: 7 },
             serve: ServeConfig {
@@ -282,6 +304,7 @@ impl Config {
                 submit_timeout_ms: 250,
                 request_timeout_ms: 10_000,
                 scratch_pool: 8,
+                precision: AlignPrecision::F64,
             },
         }
     }
@@ -295,6 +318,16 @@ impl Config {
     /// Defaults overridden by a parsed document.
     pub fn from_doc(doc: &Doc) -> Result<Self> {
         let d = Self::default_scaled();
+        // one knob, two consumers: the trainer reads `align.precision`,
+        // the serving engine its ServeConfig mirror — which an explicit
+        // `serve.precision` key may override for serving alone
+        let precision = AlignPrecision::parse(
+            &doc.get_str("align.precision", d.align.precision.as_str())?,
+        )
+        .context("align.precision")?;
+        let serve_precision =
+            AlignPrecision::parse(&doc.get_str("serve.precision", precision.as_str())?)
+                .context("serve.precision")?;
         Ok(Self {
             corpus: CorpusConfig {
                 n_train_speakers: doc.get_usize("corpus.n_train_speakers", d.corpus.n_train_speakers)?,
@@ -330,6 +363,7 @@ impl Config {
                 batch_utts: doc.get_usize("tvm.batch_utts", d.tvm.batch_utts)?,
                 batch_frames: doc.get_usize("tvm.batch_frames", d.tvm.batch_frames)?,
             },
+            align: AlignConfig { precision },
             backend: BackendConfig {
                 lda_dim: doc.get_usize("backend.lda_dim", d.backend.lda_dim)?,
                 plda_iters: doc.get_usize("backend.plda_iters", d.backend.plda_iters)?,
@@ -352,6 +386,7 @@ impl Config {
                     .get_usize("serve.request_timeout_ms", d.serve.request_timeout_ms as usize)?
                     as u64,
                 scratch_pool: doc.get_usize("serve.scratch_pool", d.serve.scratch_pool)?,
+                precision: serve_precision,
             },
         })
     }
@@ -424,6 +459,34 @@ mod tests {
         assert_eq!(cfg.serve.submit_timeout_ms, 250);
         assert_eq!(cfg.serve.request_timeout_ms, 10_000);
         assert_eq!(cfg.serve.scratch_pool, 8);
+    }
+
+    #[test]
+    fn align_precision_defaults_to_f64_and_parses() {
+        let cfg = Config::from_doc(&Doc::parse("[tvm]\nrank = 16\n").unwrap()).unwrap();
+        assert_eq!(cfg.align.precision, AlignPrecision::F64);
+        assert_eq!(cfg.serve.precision, AlignPrecision::F64);
+
+        let cfg =
+            Config::from_doc(&Doc::parse("[align]\nprecision = \"f32\"\n").unwrap()).unwrap();
+        assert_eq!(cfg.align.precision, AlignPrecision::F32);
+        // the serving mirror follows the one knob
+        assert_eq!(cfg.serve.precision, AlignPrecision::F32);
+
+        // an explicit [serve] precision overrides serving only
+        let cfg = Config::from_doc(
+            &Doc::parse("[align]\nprecision = \"f64\"\n[serve]\nprecision = \"f32\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.align.precision, AlignPrecision::F64);
+        assert_eq!(cfg.serve.precision, AlignPrecision::F32);
+
+        let err = Config::from_doc(&Doc::parse("[align]\nprecision = \"f16\"\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("align.precision"), "{err:#}");
+        let err = Config::from_doc(&Doc::parse("[serve]\nprecision = \"bad\"\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("serve.precision"), "{err:#}");
     }
 
     #[test]

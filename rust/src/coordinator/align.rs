@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::exec::map_parallel;
-use crate::gmm::{select_posteriors_scalar, DiagGmm, FullGmm};
+use crate::gmm::{select_posteriors_scalar, AlignPrecision, DiagGmm, FullGmm};
 use crate::io::{FeatArchive, Posting};
 use crate::ivector::AccelTvm;
 use crate::linalg::Mat;
@@ -56,8 +56,8 @@ impl GlobalRawStats {
 }
 
 /// CPU alignment of a whole archive through the batched GEMM-shaped
-/// aligner, parallel over utterance chunks: each worker packs the UBM
-/// weights and allocates its scratch once per chunk, not per utterance.
+/// f64 aligner (see [`align_archive_cpu_prec`] for precision
+/// selection), parallel over utterance chunks.
 pub fn align_archive_cpu(
     diag: &DiagGmm,
     full: &FullGmm,
@@ -66,11 +66,30 @@ pub fn align_archive_cpu(
     min_post: f64,
     workers: usize,
 ) -> ArchivePosts {
+    align_archive_cpu_prec(diag, full, archive, top_k, min_post, workers, AlignPrecision::F64)
+}
+
+/// CPU alignment of a whole archive at an explicit scoring precision
+/// (`[align] precision`), parallel over utterance chunks: each worker
+/// packs the UBM weights and allocates its scratch once per chunk, not
+/// per utterance. The f32 path scores and selects single-precision;
+/// rescoring and posteriors stay f64 (see [`crate::gmm::batch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn align_archive_cpu_prec(
+    diag: &DiagGmm,
+    full: &FullGmm,
+    archive: &FeatArchive,
+    top_k: usize,
+    min_post: f64,
+    workers: usize,
+    precision: AlignPrecision,
+) -> ArchivePosts {
     let n = archive.utts.len();
     let chunk = n.div_ceil(workers.max(1)).max(1);
     let n_chunks = n.div_ceil(chunk);
     let chunks = map_parallel(n_chunks, workers, |k| {
-        let mut aligner = crate::gmm::BatchAligner::new(diag, full, top_k, min_post);
+        let mut aligner =
+            crate::gmm::BatchAligner::with_precision(diag, full, top_k, min_post, precision);
         archive.utts[k * chunk..((k + 1) * chunk).min(n)]
             .iter()
             .map(|u| aligner.align_utterance(&u.feats))
@@ -228,6 +247,55 @@ pub(crate) mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn f32_archive_alignment_matches_f64_within_tolerance() {
+        // trainer-path acceptance: the f32 archive pass produces the
+        // same statistics space as f64 — identical posting structure up
+        // to boundary ties, values within f32 tolerance
+        let (arch, ubm) = tiny_setup();
+        let f64_posts = align_archive_cpu_prec(
+            &ubm.diag,
+            &ubm.full,
+            &arch,
+            5,
+            0.025,
+            4,
+            AlignPrecision::F64,
+        );
+        let f32_posts = align_archive_cpu_prec(
+            &ubm.diag,
+            &ubm.full,
+            &arch,
+            5,
+            0.025,
+            4,
+            AlignPrecision::F32,
+        );
+        assert_eq!(f64_posts.len(), f32_posts.len());
+        let mut mismatched_frames = 0usize;
+        let mut total_frames = 0usize;
+        for (ua, ub) in f64_posts.iter().zip(&f32_posts) {
+            assert_eq!(ua.len(), ub.len());
+            for (fa, fb) in ua.iter().zip(ub) {
+                total_frames += 1;
+                let same_sel = fa.len() == fb.len()
+                    && fa.iter().zip(fb).all(|(p, q)| p.idx == q.idx);
+                if !same_sel {
+                    // a boundary tie swapped the selected set — rare
+                    mismatched_frames += 1;
+                    continue;
+                }
+                for (p, q) in fa.iter().zip(fb) {
+                    assert!((p.post - q.post).abs() <= 1e-4, "{} vs {}", p.post, q.post);
+                }
+            }
+        }
+        assert!(
+            mismatched_frames * 100 <= total_frames,
+            "boundary swaps must be rare: {mismatched_frames}/{total_frames}"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::ivector::{extract_cpu, AccelTvm, TrainVariant, TvModel, UttStats};
 use crate::stats::BwStats;
 use crate::trials::{det_metrics, generate_trials, Trial};
 
-use super::align::{align_archive_cpu, stats_from_posts, GlobalRawStats};
+use super::align::{align_archive_cpu_prec, stats_from_posts, GlobalRawStats};
 use super::trainer::{train_tvm_with_stats, ComputePath, IterCtx, IterStats, TrainSetup};
 
 /// Evaluation harness: extracts i-vectors for the backend-training and
@@ -62,13 +62,14 @@ impl<'a> EvalHarness<'a> {
         }
         if self.cache.is_none() {
             let stats_of = |arch: &FeatArchive| {
-                let posts = align_archive_cpu(
+                let posts = align_archive_cpu_prec(
                     ctx.diag,
                     ctx.full,
                     arch,
                     self.cfg.tvm.top_k,
                     self.cfg.tvm.min_post,
                     workers,
+                    self.cfg.align.precision,
                 );
                 stats_from_posts(arch, &posts, self.cfg.ubm.components, workers).0
             };

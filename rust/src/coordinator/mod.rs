@@ -16,7 +16,7 @@ pub mod stages;
 pub mod trainer;
 
 pub use align::{
-    align_archive_accel, align_archive_cpu, align_archive_cpu_scalar, stats_from_posts,
-    GlobalRawStats,
+    align_archive_accel, align_archive_cpu, align_archive_cpu_prec, align_archive_cpu_scalar,
+    stats_from_posts, GlobalRawStats,
 };
 pub use trainer::{run_alignment, train_tvm, train_tvm_with_stats, ComputePath, IterCtx, IterStats, TrainSetup};

@@ -19,7 +19,7 @@ use crate::linalg::Mat;
 use crate::metrics::{rt_factor, Stopwatch};
 use crate::trials::{det_metrics, generate_trials};
 
-use super::align::{align_archive_accel, align_archive_cpu, stats_from_posts};
+use super::align::{align_archive_accel, align_archive_cpu_prec, stats_from_posts};
 use super::trainer::{train_tvm, ComputePath, TrainSetup};
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -91,7 +91,15 @@ pub fn align(args: &Args) -> Result<()> {
 
     let sw = Stopwatch::start();
     let posts = if cpu_ref {
-        align_archive_cpu(&diag, &full, &train, cfg.tvm.top_k, cfg.tvm.min_post, default_workers())
+        align_archive_cpu_prec(
+            &diag,
+            &full,
+            &train,
+            cfg.tvm.top_k,
+            cfg.tvm.min_post,
+            default_workers(),
+            cfg.align.precision,
+        )
     } else {
         let accel = AccelTvm::new(&arts)?.with_alignment()?;
         align_archive_accel(&accel, &diag, &full, &train)?
@@ -111,7 +119,7 @@ pub fn align(args: &Args) -> Result<()> {
     archive.save(format!("{work}/train.posts"))?;
     println!(
         "align[{}]: {frames} frames in {wall:.2}s = {:.0}x real time, {:.2} postings/frame",
-        if cpu_ref { "cpu-ref" } else { "accel" },
+        if cpu_ref { format!("cpu-ref/{}", cfg.align.precision) } else { "accel".into() },
         rt_factor(frames, wall),
         avg
     );
@@ -219,7 +227,15 @@ fn extract_set(
     arch: &FeatArchive,
 ) -> IvecSet {
     let workers = default_workers();
-    let posts = align_archive_cpu(diag, full, arch, cfg.tvm.top_k, cfg.tvm.min_post, workers);
+    let posts = align_archive_cpu_prec(
+        diag,
+        full,
+        arch,
+        cfg.tvm.top_k,
+        cfg.tvm.min_post,
+        workers,
+        cfg.align.precision,
+    );
     let (bw, _) = stats_from_posts(arch, &posts, cfg.ubm.components, workers);
     let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, model)).collect();
     IvecSet {

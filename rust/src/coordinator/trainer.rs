@@ -22,7 +22,7 @@ use crate::metrics::Stopwatch;
 use crate::stats::BwStats;
 
 use super::align::{
-    align_archive_accel, align_archive_cpu, stats_from_posts, ArchivePosts, GlobalRawStats,
+    align_archive_accel, align_archive_cpu_prec, stats_from_posts, ArchivePosts, GlobalRawStats,
 };
 
 /// Which compute path executes the hot loops.
@@ -212,13 +212,16 @@ pub fn run_alignment(
 ) -> Result<(Vec<BwStats>, GlobalRawStats)> {
     let cfg = setup.cfg;
     let posts: ArchivePosts = match path {
-        ComputePath::CpuRef => align_archive_cpu(
+        // scoring precision comes from `[align] precision`; the
+        // Baum-Welch statistics accumulated below are f64 either way
+        ComputePath::CpuRef => align_archive_cpu_prec(
             &setup.diag,
             &setup.full,
             setup.feats,
             cfg.tvm.top_k,
             cfg.tvm.min_post,
             workers,
+            cfg.align.precision,
         ),
         ComputePath::Accel => {
             align_archive_accel(accel.expect("accel set"), &setup.diag, &setup.full, setup.feats)?
@@ -386,6 +389,33 @@ mod tests {
         // prior offset survives min-div with the right structure
         assert!(model.prior_mean[0] > 0.0);
         assert!(model.prior_mean[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cpu_training_runs_with_f32_alignment() {
+        // end-to-end precision selection: the trainer's alignment pass
+        // honours `[align] precision = "f32"` and EM still converges
+        let mut cfg = tiny_config();
+        cfg.align.precision = crate::gmm::AlignPrecision::F32;
+        let (arch, ubm) = tiny_setup();
+        let mut setup = TrainSetup { cfg: &cfg, feats: &arch, diag: ubm.diag, full: ubm.full };
+        let variant = TrainVariant {
+            formulation: Formulation::Augmented,
+            min_divergence: true,
+            sigma_update: false,
+            realign_every: None,
+        };
+        let (model, hist) =
+            train_tvm(&mut setup, variant, 4, 42, ComputePath::CpuRef, None, &mut |_| None)
+                .unwrap();
+        assert_eq!(hist.len(), 4);
+        assert!(hist.iter().all(|h| h.t_delta.is_finite()));
+        assert!(
+            hist.last().unwrap().t_delta < hist[0].t_delta,
+            "{:?}",
+            hist.iter().map(|h| h.t_delta).collect::<Vec<_>>()
+        );
+        assert!(model.t[0].as_slice().iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Batched, GEMM-shaped CPU frame alignment.
+//! Batched, GEMM-shaped CPU frame alignment — f64 and mixed-precision
+//! f32 paths.
 //!
 //! The scalar reference ([`super::select_posteriors_scalar`]) walks one
 //! frame at a time and re-derives `ln v` and `1/v` for every (frame,
@@ -10,11 +11,26 @@
 //! every log/divide, followed by top-K selection and full-covariance
 //! rescoring of only the K survivors.
 //!
+//! **Precision split** ([`AlignPrecision`]): the diagonal score GEMM and
+//! the top-K selection exist in both f64 and f32 — the f32 path
+//! ([`PackedDiagF32`], [`crate::linalg::MatF32`]) runs the hottest
+//! kernel with twice the SIMD lanes and half the memory traffic, and
+//! mirrors the device runtime's native f32. Everything *downstream* of
+//! selection stays f64 regardless: the full-covariance rescoring,
+//! log-sum-exp, posterior normalization, and the Baum-Welch/E-step
+//! accumulation they feed — so extractor training statistics are
+//! bit-identical between precisions whenever the selected top-K set
+//! agrees, and the only f32-induced difference is an occasional swap of
+//! near-tied components at the selection boundary.
+//!
 //! All scratch lives in the aligner, so the per-frame inner loop
 //! allocates nothing beyond the output posting lists.
 
+use std::borrow::Cow;
+
 use crate::io::Posting;
-use crate::linalg::Mat;
+use crate::linalg::f32::narrow;
+use crate::linalg::{Mat, MatF32};
 
 use super::select::{prune_posteriors, top_k_into};
 use super::{DiagGmm, FullGmm, LOG_2PI};
@@ -27,6 +43,41 @@ const BLOCK: usize = 128;
 /// Shared-dimension panel width for the score product (2F is usually
 /// below this, i.e. a single panel).
 const QB: usize = 512;
+
+/// Scalar width of the diagonal-scoring stage. The default is f64
+/// (bit-stable against the scalar oracle); f32 roughly doubles
+/// alignment throughput on SIMD CPUs and mirrors device precision.
+/// Selected by the `[align] precision` config knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlignPrecision {
+    F64,
+    F32,
+}
+
+impl AlignPrecision {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f64" => Ok(Self::F64),
+            "f32" => Ok(Self::F32),
+            other => anyhow::bail!("precision must be \"f32\" or \"f64\", got `{other}`"),
+        }
+    }
+
+    /// The config/CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::F64 => "f64",
+            Self::F32 => "f32",
+        }
+    }
+}
+
+impl std::fmt::Display for AlignPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// The precomputed diagonal score expansion (the f64 mirror of
 /// [`crate::ivector::accel::pack_diag_params`]): a pure function of the
@@ -77,39 +128,149 @@ impl PackedDiag {
     }
 }
 
+/// The f32 twin of [`PackedDiag`]: same layout, narrowed weights. All
+/// the ln/divide work happens once, in f64, inside [`PackedDiag::new`];
+/// this type only narrows the result, so the two packs can never drift
+/// in how they derive the expansion.
+#[derive(Debug, Clone)]
+pub struct PackedDiagF32 {
+    /// Packed diagonal score weights (C × 2F), narrowed.
+    w: MatF32,
+    /// Per-component constants, narrowed.
+    consts: Vec<f32>,
+    /// Feature dim F.
+    dim: usize,
+}
+
+impl PackedDiagF32 {
+    /// Pack the diagonal UBM (derives in f64, then narrows).
+    pub fn new(diag: &DiagGmm) -> Self {
+        Self::from_f64(&PackedDiag::new(diag))
+    }
+
+    /// Narrow an existing f64 pack (shared conversion idiom with the
+    /// device-tensor boundary — see [`crate::linalg::f32::narrow`]).
+    pub fn from_f64(p: &PackedDiag) -> Self {
+        Self {
+            w: MatF32::from_mat(&p.w),
+            consts: narrow(&p.consts),
+            dim: p.dim,
+        }
+    }
+
+    /// Components C.
+    pub fn num_components(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Feature dim F.
+    pub fn feat_dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Precision-specific block buffers of an [`AlignScratch`].
+#[derive(Debug, Clone)]
+enum ScratchBufs {
+    F64 {
+        /// Augmented frame block [x ; x²] (BLOCK × 2F).
+        aug: Mat,
+        /// Diagonal scores (BLOCK × C).
+        scores: Mat,
+    },
+    F32 {
+        aug: MatF32,
+        scores: MatF32,
+    },
+}
+
 /// The aligner's reusable scratch buffers, split from the model refs so
 /// long-lived callers (the serving engine) can pool them across
 /// requests the way batch workers reuse an `EstepWorkspace`. At paper
 /// dims (C = 2048, F = 60) the two block buffers alone are
-/// `BLOCK × (2F + C) × 8 B ≈ 2.2 MB` — rebuilding that per request is
-/// pure allocator churn, since the buffers depend only on (F, C), never
-/// on the utterance.
+/// `BLOCK × (2F + C) × 8 B ≈ 2.2 MB` in f64 (half that in f32) —
+/// rebuilding that per request is pure allocator churn, since the
+/// buffers depend only on (F, C, precision), never on the utterance.
 #[derive(Debug, Clone)]
 pub struct AlignScratch {
-    /// Augmented frame block [x ; x²] (BLOCK × 2F).
-    aug: Mat,
-    /// Diagonal scores (BLOCK × C).
-    scores: Mat,
+    bufs: ScratchBufs,
     /// Top-K selection buffer.
     sel: Vec<u32>,
-    /// Full-covariance log-likes of the selected components.
+    /// Full-covariance log-likes of the selected components (always
+    /// f64 — rescoring stays double regardless of scoring precision).
     ll_sel: Vec<f64>,
 }
 
 impl AlignScratch {
-    /// Allocate scratch for a (feature dim, component count) shape.
+    /// Allocate f64 scratch for a (feature dim, component count) shape.
     pub fn new(f_dim: usize, c_n: usize) -> Self {
-        Self {
-            aug: Mat::zeros(BLOCK, 2 * f_dim),
-            scores: Mat::zeros(BLOCK, c_n),
-            sel: Vec::new(),
-            ll_sel: Vec::new(),
+        Self::with_precision(AlignPrecision::F64, f_dim, c_n)
+    }
+
+    /// Allocate scratch for a shape at an explicit precision.
+    pub fn with_precision(precision: AlignPrecision, f_dim: usize, c_n: usize) -> Self {
+        let bufs = match precision {
+            AlignPrecision::F64 => ScratchBufs::F64 {
+                aug: Mat::zeros(BLOCK, 2 * f_dim),
+                scores: Mat::zeros(BLOCK, c_n),
+            },
+            AlignPrecision::F32 => ScratchBufs::F32 {
+                aug: MatF32::zeros(BLOCK, 2 * f_dim),
+                scores: MatF32::zeros(BLOCK, c_n),
+            },
+        };
+        Self { bufs, sel: Vec::new(), ll_sel: Vec::new() }
+    }
+
+    /// The precision this scratch was allocated for.
+    pub fn precision(&self) -> AlignPrecision {
+        match self.bufs {
+            ScratchBufs::F64 { .. } => AlignPrecision::F64,
+            ScratchBufs::F32 { .. } => AlignPrecision::F32,
         }
     }
 
-    /// Whether this scratch was sized for the given model shape.
+    /// Whether this scratch was sized for the given model shape
+    /// (precision-agnostic; see [`AlignScratch::precision`]).
     pub fn fits(&self, f_dim: usize, c_n: usize) -> bool {
-        self.aug.cols() == 2 * f_dim && self.scores.cols() == c_n
+        match &self.bufs {
+            ScratchBufs::F64 { aug, scores } => {
+                aug.cols() == 2 * f_dim && scores.cols() == c_n
+            }
+            ScratchBufs::F32 { aug, scores } => {
+                aug.cols() == 2 * f_dim && scores.cols() == c_n
+            }
+        }
+    }
+}
+
+/// The aligner's diagonal score expansion, either precision (owned, or
+/// borrowed from a caller that amortizes the pack across aligners).
+enum Pack<'g> {
+    F64(Cow<'g, PackedDiag>),
+    F32(Cow<'g, PackedDiagF32>),
+}
+
+impl Pack<'_> {
+    fn feat_dim(&self) -> usize {
+        match self {
+            Pack::F64(p) => p.dim,
+            Pack::F32(p) => p.dim,
+        }
+    }
+
+    fn num_components(&self) -> usize {
+        match self {
+            Pack::F64(p) => p.num_components(),
+            Pack::F32(p) => p.num_components(),
+        }
+    }
+
+    fn precision(&self) -> AlignPrecision {
+        match self {
+            Pack::F64(_) => AlignPrecision::F64,
+            Pack::F32(_) => AlignPrecision::F32,
+        }
     }
 }
 
@@ -117,28 +278,46 @@ impl AlignScratch {
 ///
 /// Equivalent to the scalar path up to floating-point rounding: the
 /// packed expansion evaluates `x·(m/v) − ½x²/v + const_c` instead of
-/// `−½(x−m)²/v − ½ ln v + ln w_c + …`, which agrees to ~1e-12 relative.
+/// `−½(x−m)²/v − ½ ln v + ln w_c + …`, which agrees to ~1e-12 relative
+/// in f64 and ~1e-6 relative in f32 — and because the f32 path only
+/// *selects* (rescoring, log-sum-exp and normalization stay f64), its
+/// output posteriors differ from f64 only when near-tied components
+/// swap at the top-K boundary.
 pub struct BatchAligner<'g> {
     full: &'g FullGmm,
     top_k: usize,
     min_post: f64,
-    /// Diagonal score expansion (owned, or borrowed from a caller that
-    /// amortizes the pack across many aligners).
-    packed: std::borrow::Cow<'g, PackedDiag>,
+    /// Diagonal score expansion (either precision).
+    packed: Pack<'g>,
     /// Working buffers (owned here; poolable via [`Self::with_scratch`]
     /// / [`Self::into_scratch`]).
     scratch: AlignScratch,
 }
 
 impl<'g> BatchAligner<'g> {
-    /// Pack the diagonal UBM once and build the aligner.
+    /// Pack the diagonal UBM once and build the f64 aligner.
     pub fn new(diag: &DiagGmm, full: &'g FullGmm, top_k: usize, min_post: f64) -> Self {
-        let packed = std::borrow::Cow::Owned(PackedDiag::new(diag));
-        let scratch = AlignScratch::new(packed.dim, packed.num_components());
+        Self::with_precision(diag, full, top_k, min_post, AlignPrecision::F64)
+    }
+
+    /// Pack the diagonal UBM once at the requested scoring precision.
+    pub fn with_precision(
+        diag: &DiagGmm,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+        precision: AlignPrecision,
+    ) -> Self {
+        let packed = match precision {
+            AlignPrecision::F64 => Pack::F64(Cow::Owned(PackedDiag::new(diag))),
+            AlignPrecision::F32 => Pack::F32(Cow::Owned(PackedDiagF32::new(diag))),
+        };
+        let scratch =
+            AlignScratch::with_precision(precision, packed.feat_dim(), packed.num_components());
         Self::build(packed, full, top_k, min_post, scratch)
     }
 
-    /// Build over an already-packed diagonal UBM (the pack is
+    /// Build over an already-packed f64 diagonal UBM (the pack is
     /// per-model, only the scratch is per-aligner).
     pub fn with_packed(
         packed: &'g PackedDiag,
@@ -147,12 +326,27 @@ impl<'g> BatchAligner<'g> {
         min_post: f64,
     ) -> Self {
         let scratch = AlignScratch::new(packed.dim, packed.num_components());
-        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post, scratch)
+        Self::build(Pack::F64(Cow::Borrowed(packed)), full, top_k, min_post, scratch)
+    }
+
+    /// [`Self::with_packed`] for the f32 pack.
+    pub fn with_packed_f32(
+        packed: &'g PackedDiagF32,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+    ) -> Self {
+        let scratch = AlignScratch::with_precision(
+            AlignPrecision::F32,
+            packed.dim,
+            packed.num_components(),
+        );
+        Self::build(Pack::F32(Cow::Borrowed(packed)), full, top_k, min_post, scratch)
     }
 
     /// Build over a shared pack **and** recycled scratch — the serving
     /// hot path (zero per-request buffer builds). Scratch of the wrong
-    /// shape is defensively replaced rather than trusted.
+    /// shape or precision is defensively replaced rather than trusted.
     pub fn with_scratch(
         packed: &'g PackedDiag,
         full: &'g FullGmm,
@@ -160,12 +354,32 @@ impl<'g> BatchAligner<'g> {
         min_post: f64,
         scratch: AlignScratch,
     ) -> Self {
-        let scratch = if scratch.fits(packed.dim, packed.num_components()) {
+        let pack = Pack::F64(Cow::Borrowed(packed));
+        let scratch = Self::validate_scratch(&pack, scratch);
+        Self::build(pack, full, top_k, min_post, scratch)
+    }
+
+    /// [`Self::with_scratch`] for the f32 pack.
+    pub fn with_scratch_f32(
+        packed: &'g PackedDiagF32,
+        full: &'g FullGmm,
+        top_k: usize,
+        min_post: f64,
+        scratch: AlignScratch,
+    ) -> Self {
+        let pack = Pack::F32(Cow::Borrowed(packed));
+        let scratch = Self::validate_scratch(&pack, scratch);
+        Self::build(pack, full, top_k, min_post, scratch)
+    }
+
+    fn validate_scratch(pack: &Pack<'_>, scratch: AlignScratch) -> AlignScratch {
+        if scratch.precision() == pack.precision()
+            && scratch.fits(pack.feat_dim(), pack.num_components())
+        {
             scratch
         } else {
-            AlignScratch::new(packed.dim, packed.num_components())
-        };
-        Self::build(std::borrow::Cow::Borrowed(packed), full, top_k, min_post, scratch)
+            AlignScratch::with_precision(pack.precision(), pack.feat_dim(), pack.num_components())
+        }
     }
 
     /// Recover the scratch for reuse (pool check-in).
@@ -173,8 +387,13 @@ impl<'g> BatchAligner<'g> {
         self.scratch
     }
 
+    /// The scoring precision this aligner runs at.
+    pub fn precision(&self) -> AlignPrecision {
+        self.packed.precision()
+    }
+
     fn build(
-        packed: std::borrow::Cow<'g, PackedDiag>,
+        packed: Pack<'g>,
         full: &'g FullGmm,
         top_k: usize,
         min_post: f64,
@@ -185,7 +404,7 @@ impl<'g> BatchAligner<'g> {
 
     /// Align a whole utterance, streaming BLOCK-sized frame blocks.
     pub fn align_utterance(&mut self, feats: &Mat) -> Vec<Vec<Posting>> {
-        assert_eq!(feats.cols(), self.packed.dim, "feature dim mismatch");
+        assert_eq!(feats.cols(), self.packed.feat_dim(), "feature dim mismatch");
         let mut out = Vec::with_capacity(feats.rows());
         let mut start = 0;
         while start < feats.rows() {
@@ -198,34 +417,78 @@ impl<'g> BatchAligner<'g> {
 
     /// Score + select + rescore + prune one block of `n` frames
     /// starting at row `start`, appending per-frame postings to `out`.
+    /// Scoring and selection run at the pack's precision; rescoring and
+    /// pruning are the shared f64 tail.
     fn align_block(&mut self, feats: &Mat, start: usize, n: usize, out: &mut Vec<Vec<Posting>>) {
-        let f_dim = self.packed.dim;
-        for t in 0..n {
-            let x = feats.row(start + t);
-            let arow = self.scratch.aug.row_mut(t);
-            for (j, &xj) in x.iter().enumerate() {
-                arow[j] = xj;
-                arow[f_dim + j] = xj * xj;
+        let f_dim = self.packed.feat_dim();
+        let AlignScratch { bufs, sel, ll_sel } = &mut self.scratch;
+        match (&self.packed, bufs) {
+            (Pack::F64(p), ScratchBufs::F64 { aug, scores }) => {
+                for t in 0..n {
+                    let x = feats.row(start + t);
+                    let arow = aug.row_mut(t);
+                    for (j, &xj) in x.iter().enumerate() {
+                        arow[j] = xj;
+                        arow[f_dim + j] = xj * xj;
+                    }
+                }
+                score_rows(aug, n, &p.w, &p.consts, scores);
+                for t in 0..n {
+                    top_k_into(scores.row(t), self.top_k, sel);
+                    finish_frame(
+                        self.full,
+                        feats.row(start + t),
+                        sel,
+                        ll_sel,
+                        self.min_post,
+                        out,
+                    );
+                }
             }
-        }
-        score_rows(
-            &self.scratch.aug,
-            n,
-            &self.packed.w,
-            &self.packed.consts,
-            &mut self.scratch.scores,
-        );
-        for t in 0..n {
-            top_k_into(self.scratch.scores.row(t), self.top_k, &mut self.scratch.sel);
-            self.scratch.ll_sel.resize(self.scratch.sel.len(), 0.0);
-            self.full.log_likes_select(
-                feats.row(start + t),
-                &self.scratch.sel,
-                &mut self.scratch.ll_sel,
-            );
-            out.push(prune_posteriors(&self.scratch.sel, &self.scratch.ll_sel, self.min_post));
+            (Pack::F32(p), ScratchBufs::F32 { aug, scores }) => {
+                for t in 0..n {
+                    let x = feats.row(start + t);
+                    let arow = aug.row_mut(t);
+                    for (j, &xj) in x.iter().enumerate() {
+                        // narrow first, square in f32: the pure-f32
+                        // pipeline the device path runs
+                        let xj = xj as f32;
+                        arow[j] = xj;
+                        arow[f_dim + j] = xj * xj;
+                    }
+                }
+                score_rows_f32(aug, n, &p.w, &p.consts, scores);
+                for t in 0..n {
+                    top_k_into(scores.row(t), self.top_k, sel);
+                    finish_frame(
+                        self.full,
+                        feats.row(start + t),
+                        sel,
+                        ll_sel,
+                        self.min_post,
+                        out,
+                    );
+                }
+            }
+            // constructors pair pack and scratch by construction
+            _ => unreachable!("scratch precision mismatches pack"),
         }
     }
+}
+
+/// The shared f64 tail of both precisions: full-covariance rescoring of
+/// the selected components, softmax + pruning, posting emission.
+fn finish_frame(
+    full: &FullGmm,
+    x: &[f64],
+    sel: &[u32],
+    ll_sel: &mut Vec<f64>,
+    min_post: f64,
+    out: &mut Vec<Vec<Posting>>,
+) {
+    ll_sel.resize(sel.len(), 0.0);
+    full.log_likes_select(x, sel, ll_sel);
+    out.push(prune_posteriors(sel, ll_sel, min_post));
 }
 
 /// `out[t] = consts + aug[t] · wᵀ` for the first `n_rows` rows, with
@@ -250,6 +513,19 @@ fn score_rows(aug: &Mat, n_rows: usize, w: &Mat, consts: &[f64], out: &mut Mat) 
     }
 }
 
+/// The f32 twin of [`score_rows`]: constants broadcast into the output
+/// rows, then the shared panel-blocked GEMM core
+/// ([`MatF32::matmul_nt_acc_rows`], 8-wide [`crate::linalg::dot_f32`]
+/// inner product — explicit `std::simd` lanes under the `simd`
+/// feature) accumulates `aug[t] · wᵀ` on top.
+fn score_rows_f32(aug: &MatF32, n_rows: usize, w: &MatF32, consts: &[f32], out: &mut MatF32) {
+    debug_assert_eq!(out.cols(), w.rows());
+    for t in 0..n_rows {
+        out.row_mut(t).copy_from_slice(consts);
+    }
+    aug.matmul_nt_acc_rows(n_rows, w, out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::select_posteriors_scalar;
@@ -267,6 +543,64 @@ mod tests {
         (diag, full)
     }
 
+    /// Tolerant posting comparison for the mixed-precision path. The
+    /// f32 stage only *selects* — rescoring and normalization stay f64 —
+    /// so two alignments can differ in exactly one way: near-tied
+    /// components swapping at the top-K boundary. Contract enforced
+    /// here (the documented f32 tolerance):
+    /// * postings for a shared component agree within `val_tol`;
+    /// * components present on only one side pair up across sides by
+    ///   posterior value within `swap_tol` (a boundary swap relabels a
+    ///   tie, it cannot move mass);
+    /// * an unpaired leftover must sit at the pruning threshold
+    ///   (`≤ min_post + swap_tol`) — the straddling-the-cutoff case.
+    fn posts_close(
+        a: &[Vec<Posting>],
+        b: &[Vec<Posting>],
+        val_tol: f32,
+        swap_tol: f32,
+        min_post: f32,
+    ) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("frame count {} vs {}", a.len(), b.len()));
+        }
+        for (t, (fa, fb)) in a.iter().zip(b).enumerate() {
+            let in_b: std::collections::BTreeMap<u32, f32> =
+                fb.iter().map(|p| (p.idx, p.post)).collect();
+            let in_a: std::collections::BTreeMap<u32, f32> =
+                fa.iter().map(|p| (p.idx, p.post)).collect();
+            let mut only_a: Vec<f32> = Vec::new();
+            for p in fa {
+                match in_b.get(&p.idx) {
+                    Some(&q) if (p.post - q).abs() <= val_tol => {}
+                    Some(&q) => {
+                        return Err(format!("frame {t} idx {}: post {} vs {q}", p.idx, p.post))
+                    }
+                    None => only_a.push(p.post),
+                }
+            }
+            let mut only_b: Vec<f32> =
+                fb.iter().filter(|p| !in_a.contains_key(&p.idx)).map(|p| p.post).collect();
+            only_a.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            only_b.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            let pairs = only_a.len().min(only_b.len());
+            for i in 0..pairs {
+                if (only_a[i] - only_b[i]).abs() > swap_tol {
+                    return Err(format!(
+                        "frame {t}: boundary-swapped posts {} vs {} beyond tol",
+                        only_a[i], only_b[i]
+                    ));
+                }
+            }
+            for &p in only_a[pairs..].iter().chain(&only_b[pairs..]) {
+                if p > min_post + swap_tol {
+                    return Err(format!("frame {t}: unpaired posting {p} above threshold"));
+                }
+            }
+        }
+        Ok(())
+    }
+
     #[test]
     fn batched_scores_match_diag_loglikes() {
         let mut rng = Rng::seed(71);
@@ -274,27 +608,26 @@ mod tests {
         let feats = Mat::from_fn(30, 4, |_, _| 2.0 * rng.normal());
         let mut aligner = BatchAligner::new(&diag, &full, 9, 0.0);
         // score one block through the packed GEMM path
-        let mut ll_ref = vec![0.0; 9];
         let n = feats.rows();
+        let (Pack::F64(packed), ScratchBufs::F64 { aug, scores }) =
+            (&aligner.packed, &mut aligner.scratch.bufs)
+        else {
+            panic!("default aligner must be f64");
+        };
         for t in 0..n {
             let x = feats.row(t);
-            let arow = aligner.scratch.aug.row_mut(t);
+            let arow = aug.row_mut(t);
             for (j, &xj) in x.iter().enumerate() {
                 arow[j] = xj;
                 arow[4 + j] = xj * xj;
             }
         }
-        score_rows(
-            &aligner.scratch.aug,
-            n,
-            &aligner.packed.w,
-            &aligner.packed.consts,
-            &mut aligner.scratch.scores,
-        );
+        score_rows(aug, n, &packed.w, &packed.consts, scores);
+        let mut ll_ref = vec![0.0; 9];
         for t in 0..n {
             diag.log_likes(feats.row(t), &mut ll_ref);
             for c in 0..9 {
-                let got = aligner.scratch.scores.get(t, c);
+                let got = scores.get(t, c);
                 assert!(
                     (got - ll_ref[c]).abs() < 1e-10 * (1.0 + ll_ref[c].abs()),
                     "t={t} c={c}: {got} vs {}",
@@ -346,6 +679,89 @@ mod tests {
         );
     }
 
+    /// Tentpole acceptance: the mixed-precision f32 path matches the
+    /// f64 scalar oracle within the documented tolerance (shared
+    /// components to 1e-4, boundary-tie swaps to 2e-3) across random
+    /// models, dims, and block seams.
+    #[test]
+    fn prop_f32_align_matches_scalar_oracle() {
+        forall(
+            3209,
+            32,
+            |rng| {
+                let c = gen_dim(rng, 2, 24);
+                let f = gen_dim(rng, 1, 6);
+                let k = gen_dim(rng, 1, c);
+                let t_len = gen_dim(rng, 1, 300);
+                let (diag, full) = random_ubm(c, f, rng);
+                let feats = Mat::from_fn(t_len, f, |_, _| 2.0 * rng.normal());
+                (diag, full, feats, k)
+            },
+            |(diag, full, feats, k)| {
+                let f32_posts =
+                    BatchAligner::with_precision(diag, full, *k, 0.025, AlignPrecision::F32)
+                        .align_utterance(feats);
+                let scalar = select_posteriors_scalar(diag, full, feats, *k, 0.025);
+                posts_close(&f32_posts, &scalar, 1e-4, 2e-3, 0.025)
+            },
+        );
+    }
+
+    /// Paper-shaped dims (F = 60, top-20 of C = 256 — C scaled down
+    /// from 2048 only to keep tier-1 debug-build time sane; the kernel
+    /// shape per frame is the paper's): f32 ≡ scalar oracle, crossing a
+    /// BLOCK seam.
+    #[test]
+    fn f32_align_matches_oracle_at_paper_shape() {
+        let mut rng = Rng::seed(2048);
+        let (c, f, k) = (256, 60, 20);
+        let (diag, full) = random_ubm(c, f, &mut rng);
+        let feats = Mat::from_fn(150, f, |_, _| 2.0 * rng.normal());
+        let f32_posts = BatchAligner::with_precision(&diag, &full, k, 0.025, AlignPrecision::F32)
+            .align_utterance(&feats);
+        let scalar = select_posteriors_scalar(&diag, &full, &feats, k, 0.025);
+        posts_close(&f32_posts, &scalar, 1e-4, 2e-3, 0.025).unwrap();
+    }
+
+    /// Adversarial dynamic range: features and means two orders of
+    /// magnitude apart push the diagonal scores to O(−10⁵), where a
+    /// naive all-f32 pipeline (f32 log-sum-exp over f32 rescores) loses
+    /// the inter-component differences entirely (f32 quantum at 1e5 is
+    /// ~0.008, comparable to posterior-relevant log-like gaps). The
+    /// mixed-precision contract keeps LSE + rescoring in f64, so only
+    /// *selection* sees f32 — and with well-separated components the
+    /// selected set is stable, making the output posteriors exactly the
+    /// oracle's.
+    #[test]
+    fn f32_selection_survives_large_dynamic_range() {
+        let mut rng = Rng::seed(919);
+        let (c, f) = (32, 8);
+        // means spread over ±300, unit-ish variances: score magnitudes
+        // hit ~1e5 while the top components stay separated by ≫ the f32
+        // rounding of the scores
+        let diag = DiagGmm {
+            weights: rng.dirichlet(2.0, c),
+            means: Mat::from_fn(c, f, |_, _| 300.0 * rng.normal()),
+            vars: Mat::from_fn(c, f, |_, _| rng.uniform_in(0.5, 2.0)),
+        };
+        let full = FullGmm::from_diag(&diag).unwrap();
+        // frames near random components, plus far-field outliers
+        let feats = Mat::from_fn(200, f, |t, j| {
+            let m = diag.means.get(t % c, j);
+            if t % 7 == 0 {
+                m + 40.0 * rng.normal() // outlier: every score huge-negative
+            } else {
+                m + rng.normal()
+            }
+        });
+        let f32_posts = BatchAligner::with_precision(&diag, &full, 5, 0.025, AlignPrecision::F32)
+            .align_utterance(&feats);
+        let scalar = select_posteriors_scalar(&diag, &full, &feats, 5, 0.025);
+        // swaps are still tolerated at ties, but shared components must
+        // match tightly — the f64 tail wipes out the f32 score error
+        posts_close(&f32_posts, &scalar, 1e-5, 2e-3, 0.025).unwrap();
+    }
+
     #[test]
     fn shared_packed_weights_match_owned_pack() {
         let mut rng = Rng::seed(79);
@@ -356,6 +772,28 @@ mod tests {
         let owned = BatchAligner::new(&diag, &full, 5, 0.025).align_utterance(&feats);
         let shared =
             BatchAligner::with_packed(&packed, &full, 5, 0.025).align_utterance(&feats);
+        assert_eq!(owned.len(), shared.len());
+        for (a, b) in owned.iter().zip(&shared) {
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_f32_pack_matches_owned_f32_pack() {
+        let mut rng = Rng::seed(81);
+        let (diag, full) = random_ubm(10, 4, &mut rng);
+        let feats = Mat::from_fn(200, 4, |_, _| 1.5 * rng.normal());
+        let packed = PackedDiagF32::new(&diag);
+        assert_eq!(packed.num_components(), 10);
+        assert_eq!(packed.feat_dim(), 4);
+        let owned = BatchAligner::with_precision(&diag, &full, 5, 0.025, AlignPrecision::F32)
+            .align_utterance(&feats);
+        let shared =
+            BatchAligner::with_packed_f32(&packed, &full, 5, 0.025).align_utterance(&feats);
         assert_eq!(owned.len(), shared.len());
         for (a, b) in owned.iter().zip(&shared) {
             assert_eq!(a.len(), b.len());
@@ -381,6 +819,7 @@ mod tests {
         let _ = first.align_utterance(&u1);
         let scratch = first.into_scratch();
         assert!(scratch.fits(5, 12));
+        assert_eq!(scratch.precision(), AlignPrecision::F64);
 
         let recycled =
             BatchAligner::with_scratch(&packed, &full, 6, 0.025, scratch).align_utterance(&u2);
@@ -403,6 +842,49 @@ mod tests {
     }
 
     #[test]
+    fn f32_scratch_recycles_and_rejects_precision_mismatch() {
+        let mut rng = Rng::seed(87);
+        let (diag, full) = random_ubm(12, 5, &mut rng);
+        let packed = PackedDiagF32::new(&diag);
+        let u1 = Mat::from_fn(140, 5, |_, _| 1.5 * rng.normal());
+        let u2 = Mat::from_fn(70, 5, |_, _| 1.5 * rng.normal());
+
+        let mut first = BatchAligner::with_packed_f32(&packed, &full, 6, 0.025);
+        assert_eq!(first.precision(), AlignPrecision::F32);
+        let _ = first.align_utterance(&u1);
+        let scratch = first.into_scratch();
+        assert_eq!(scratch.precision(), AlignPrecision::F32);
+        assert!(scratch.fits(5, 12));
+
+        let recycled = BatchAligner::with_scratch_f32(&packed, &full, 6, 0.025, scratch)
+            .align_utterance(&u2);
+        let fresh = BatchAligner::with_packed_f32(&packed, &full, 6, 0.025).align_utterance(&u2);
+        assert_eq!(recycled.len(), fresh.len());
+        for (a, b) in recycled.iter().zip(&fresh) {
+            assert_eq!(a.len(), b.len());
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
+
+        // right shape, wrong precision: defensively replaced (an f64
+        // scratch handed to an f32 aligner must not panic or misalign)
+        let f64_scratch = AlignScratch::new(5, 12);
+        assert!(f64_scratch.fits(5, 12));
+        let via_mismatch =
+            BatchAligner::with_scratch_f32(&packed, &full, 6, 0.025, f64_scratch)
+                .align_utterance(&u2);
+        assert_eq!(via_mismatch.len(), fresh.len());
+        for (a, b) in via_mismatch.iter().zip(&fresh) {
+            for (pa, pb) in a.iter().zip(b) {
+                assert_eq!(pa.idx, pb.idx);
+                assert_eq!(pa.post, pb.post);
+            }
+        }
+    }
+
+    #[test]
     fn wrapper_routes_through_batched_path() {
         let mut rng = Rng::seed(73);
         let (diag, full) = random_ubm(8, 3, &mut rng);
@@ -417,5 +899,14 @@ mod tests {
                 assert_eq!(pa.post, pb.post);
             }
         }
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(AlignPrecision::parse("f32").unwrap(), AlignPrecision::F32);
+        assert_eq!(AlignPrecision::parse("f64").unwrap(), AlignPrecision::F64);
+        assert!(AlignPrecision::parse("f16").is_err());
+        assert_eq!(AlignPrecision::F32.as_str(), "f32");
+        assert_eq!(AlignPrecision::F64.to_string(), "f64");
     }
 }

@@ -10,8 +10,9 @@
 //! * [`select`] — top-K selection + posterior pruning/renormalization
 //!   (the CPU reference of the accelerated `align_topk` graph).
 //! * [`batch`] — the batched GEMM-shaped CPU aligner that
-//!   [`select_posteriors`] routes through; the per-frame scalar path
-//!   survives as [`select_posteriors_scalar`], the equivalence oracle.
+//!   [`select_posteriors`] routes through, in f64 or mixed-precision
+//!   f32 ([`AlignPrecision`]); the per-frame scalar path survives as
+//!   [`select_posteriors_scalar`], the equivalence oracle.
 
 mod batch;
 mod diag;
@@ -19,7 +20,7 @@ mod full;
 mod select;
 mod train;
 
-pub use batch::{AlignScratch, BatchAligner, PackedDiag};
+pub use batch::{AlignPrecision, AlignScratch, BatchAligner, PackedDiag, PackedDiagF32};
 pub use diag::DiagGmm;
 pub use full::FullGmm;
 pub use select::{

@@ -18,7 +18,9 @@ use super::{DiagGmm, FullGmm};
 
 /// Indices of the K largest entries of `xs`, descending by value
 /// (ties broken toward the lower index, matching a stable full sort).
-pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u32> {
+/// Generic over the score scalar so the f32 alignment path selects
+/// straight off its f32 score block without a widening copy.
+pub fn top_k_indices<T: PartialOrd + Copy>(xs: &[T], k: usize) -> Vec<u32> {
     let mut out = Vec::new();
     top_k_into(xs, k, &mut out);
     out
@@ -33,7 +35,7 @@ pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<u32> {
 /// insertion-shift selection degenerated to O(C·K) shifts per frame on
 /// ascending input (every element displaced the tail); the heap's worst
 /// case is O(C log K).
-pub fn top_k_into(xs: &[f64], k: usize, out: &mut Vec<u32>) {
+pub fn top_k_into<T: PartialOrd + Copy>(xs: &[T], k: usize, out: &mut Vec<u32>) {
     let k = k.min(xs.len());
     out.clear();
     if k == 0 {
@@ -61,13 +63,13 @@ pub fn top_k_into(xs: &[f64], k: usize, out: &mut Vec<u32>) {
 /// indices among ties, exactly like a stable descending sort (relevant
 /// when mixture splitting clones components bit-exactly).
 #[inline]
-fn heap_less(xs: &[f64], a: u32, b: u32) -> bool {
+fn heap_less<T: PartialOrd + Copy>(xs: &[T], a: u32, b: u32) -> bool {
     let (xa, xb) = (xs[a as usize], xs[b as usize]);
     xa < xb || (xa == xb && a > b)
 }
 
 /// Restore the min-heap property under `heap[i]` (keyed by `xs`).
-fn sift_down(heap: &mut [u32], xs: &[f64], mut i: usize) {
+fn sift_down<T: PartialOrd + Copy>(heap: &mut [u32], xs: &[T], mut i: usize) {
     loop {
         let l = 2 * i + 1;
         if l >= heap.len() {

@@ -17,6 +17,11 @@
 //! Python never runs on the request path: the rust binary loads the
 //! HLO artifacts through PJRT ([`runtime`]) and is self-contained.
 
+// The `simd` feature swaps the f32 alignment kernels' inner loops for
+// explicit `std::simd` lanes (nightly-only; the default build uses
+// 8-wide unrolled loops that auto-vectorize on stable).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod bench_util;
 pub mod config;
 pub mod exec;

@@ -1,0 +1,317 @@
+//! Single-precision kernel layer for the mixed-precision alignment
+//! path.
+//!
+//! The hot alignment GEMM (`[x; x²] · Wᵀ`) is memory-bandwidth- and
+//! SIMD-lane-bound: in f64 half the vector lanes sit idle and every
+//! cache line carries half as many elements. This module provides the
+//! f32 mirror of the few [`super::Mat`] kernels that GEMM needs —
+//! [`MatF32`] with packed [`MatF32::matmul_nt_into`] /
+//! [`MatF32::matvec_into`] — written as 8-wide unrolled loops that
+//! auto-vectorize on stable rustc. The `simd` cargo feature (nightly)
+//! swaps the inner dot kernel for explicit `std::simd` lanes.
+//!
+//! Model math stays f64 ([`super::Mat`]); f32 is only for score-shaped
+//! work whose consumers re-derive exact quantities downstream (top-K
+//! selection feeding an f64 rescoring pass, device uploads). The
+//! f64 ⇄ f32 boundary crossings all go through [`narrow`] / [`widen`]
+//! so the crate has exactly one conversion idiom.
+
+/// Unroll width of the scalar kernels; matches the `std::simd` lane
+/// count used under the `simd` feature, so both paths sum partial
+/// products in the same 8-accumulator order.
+const LANES: usize = 8;
+
+/// Shared-dimension panel for [`MatF32::matmul_nt_into`] (same role as
+/// the f64 kernel's `NT_QB`; f32 halves the bytes per element, so the
+/// panel covers twice the logical width per cache byte).
+const NT_QB: usize = 512;
+
+/// Narrow an f64 slice to f32 — the single widening/narrowing idiom
+/// shared by the device-tensor boundary
+/// ([`crate::runtime::Tensor::from_f64`]) and the f32 alignment pack
+/// ([`crate::gmm::PackedDiagF32`]).
+#[inline]
+pub fn narrow(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+/// Widen an f32 slice to f64 (the inverse boundary crossing).
+#[inline]
+pub fn widen(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+/// f32 dot product, 8-wide. The scalar build keeps 8 independent
+/// accumulators so rustc can vectorize without reassociating a single
+/// serial chain; the `simd` build uses explicit `std::simd` lanes with
+/// the same reduction order, so the two builds agree bit-for-bit.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let main = a.len() - a.len() % LANES;
+    let (a8, a_tail) = a.split_at(main);
+    let (b8, b_tail) = b.split_at(main);
+    let mut acc = lane_sums(a8, b8);
+    // pairwise lane reduction (what `reduce_sum` lowers to)
+    for step in [4, 2, 1] {
+        for l in 0..step {
+            acc[l] += acc[l + step];
+        }
+    }
+    let mut s = acc[0];
+    for (x, y) in a_tail.iter().zip(b_tail) {
+        s += x * y;
+    }
+    s
+}
+
+/// Per-lane partial sums over the 8-aligned prefix (scalar build).
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn lane_sums(a8: &[f32], b8: &[f32]) -> [f32; LANES] {
+    let mut acc = [0.0f32; LANES];
+    for (ca, cb) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    acc
+}
+
+/// Per-lane partial sums over the 8-aligned prefix (`std::simd` build).
+#[cfg(feature = "simd")]
+#[inline]
+fn lane_sums(a8: &[f32], b8: &[f32]) -> [f32; LANES] {
+    use std::simd::f32x8;
+    let mut acc = f32x8::splat(0.0);
+    for (ca, cb) in a8.chunks_exact(LANES).zip(b8.chunks_exact(LANES)) {
+        acc += f32x8::from_slice(ca) * f32x8::from_slice(cb);
+    }
+    acc.to_array()
+}
+
+/// Dense row-major f32 matrix — the alignment-scoring mirror of
+/// [`super::Mat`], deliberately minimal: only what the f32 GEMM path
+/// consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From an owned buffer (row-major).
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatF32::from_vec size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Narrow an f64 matrix (row-major copy through [`narrow`]).
+    pub fn from_mat(m: &super::Mat) -> Self {
+        Self::from_vec(narrow(m.as_slice()), m.rows(), m.cols())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Fill every element with `v`.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// `out = self · otherᵀ` into a caller-owned buffer, shared
+    /// dimension panel-blocked like the f64 kernel: the panel of
+    /// `other` rows is re-read from cache, not memory, across the
+    /// `self` row sweep, and every dot runs 8 lanes wide.
+    pub fn matmul_nt_into(&self, other: &MatF32, out: &mut MatF32) {
+        assert_eq!((out.rows, out.cols), (self.rows, other.rows), "matmul_nt_into out dims");
+        out.fill(0.0);
+        self.matmul_nt_acc_rows(self.rows, other, out);
+    }
+
+    /// The panel-blocked accumulation core of [`MatF32::matmul_nt_into`]:
+    /// `out[i] += self[i] · otherᵀ` for the first `n_rows` rows, on top
+    /// of whatever `out` already holds. Exposed so the alignment score
+    /// kernel — which pre-initializes each output row with
+    /// per-component constants and scores only the filled prefix of its
+    /// block buffer — shares this blocking structure instead of
+    /// duplicating it.
+    pub fn matmul_nt_acc_rows(&self, n_rows: usize, other: &MatF32, out: &mut MatF32) {
+        assert_eq!(self.cols, other.cols, "matmul_nt dims");
+        assert_eq!(out.cols, other.rows, "matmul_nt out cols");
+        assert!(n_rows <= self.rows && n_rows <= out.rows, "matmul_nt row prefix");
+        let q = self.cols;
+        let p = other.rows;
+        for qb in (0..q).step_by(NT_QB) {
+            let qe = (qb + NT_QB).min(q);
+            for i in 0..n_rows {
+                let a_seg = &self.data[i * q + qb..i * q + qe];
+                let out_row = &mut out.data[i * p..(i + 1) * p];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    *o += dot_f32(a_seg, &other.data[j * q + qb..j * q + qe]);
+                }
+            }
+        }
+    }
+
+    /// Matrix–vector product into a caller-owned buffer.
+    pub fn matvec_into(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(self.cols, v.len(), "matvec dims");
+        assert_eq!(out.len(), self.rows, "matvec out dims");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot_f32(self.row(i), v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Mat;
+    use super::*;
+    use crate::proptest::{forall, gen_dim, gen_mat};
+
+    #[test]
+    fn narrow_widen_roundtrip() {
+        let xs = [1.5, -2.25, 0.0, 1e10, -3.5e-4];
+        let n = narrow(&xs);
+        assert_eq!(n, vec![1.5f32, -2.25, 0.0, 1e10, -3.5e-4]);
+        // every value above is exactly representable in f32
+        assert_eq!(widen(&n), xs.to_vec());
+    }
+
+    #[test]
+    fn dot_handles_unroll_boundaries() {
+        // lengths straddling the 8-lane unroll: 0..=9, 16, 17
+        for len in (0..=9).chain([16, 17]) {
+            let a: Vec<f32> = (0..len).map(|i| 0.5 * i as f32 - 1.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 0.25 * i as f32 + 2.0).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot_f32(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn prop_dot_matches_f64_dot() {
+        forall(
+            1907,
+            48,
+            |rng| {
+                let n = gen_dim(rng, 1, 300);
+                let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let got = dot_f32(&narrow(a), &narrow(b)) as f64;
+                let want = crate::linalg::dot(a, b);
+                // f32 relative accuracy over a ~300-term sum
+                let scale: f64 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+                if (got - want).abs() <= 1e-5 * (1.0 + scale) {
+                    Ok(())
+                } else {
+                    Err(format!("{got} vs {want} (scale {scale})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_matmul_nt_into_matches_f64_kernel() {
+        forall(
+            2008,
+            24,
+            |rng| {
+                let m = gen_dim(rng, 1, 20);
+                let q = gen_dim(rng, 1, 700); // straddles NT_QB and the unroll
+                let p = gen_dim(rng, 1, 20);
+                let a = gen_mat(rng, m, q, 1.0);
+                let b = gen_mat(rng, p, q, 1.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let (a32, b32) = (MatF32::from_mat(a), MatF32::from_mat(b));
+                let mut out = MatF32::zeros(a.rows(), b.rows());
+                a32.matmul_nt_into(&b32, &mut out);
+                let want = a.matmul_nt(b);
+                let scale = 1.0 + want.max_abs() + a.cols() as f64;
+                for i in 0..want.rows() {
+                    for j in 0..want.cols() {
+                        let (g, w) = (out.get(i, j) as f64, want.get(i, j));
+                        if (g - w).abs() > 1e-5 * scale {
+                            return Err(format!("({i},{j}): {g} vs {w}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn acc_rows_accumulates_over_a_row_prefix() {
+        // the score-kernel contract: accumulate on top of preloaded
+        // output rows, touch only the first n_rows
+        let a = MatF32::from_mat(&Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64));
+        let b = MatF32::from_mat(&Mat::from_fn(2, 5, |i, j| (i + j) as f64 * 0.5));
+        let mut out = MatF32::zeros(3, 2);
+        out.fill(1.0);
+        a.matmul_nt_acc_rows(2, &b, &mut out);
+        for i in 0..2 {
+            for j in 0..2 {
+                let want = 1.0 + dot_f32(a.row(i), b.row(j));
+                assert_eq!(out.get(i, j), want, "({i},{j})");
+            }
+        }
+        assert_eq!(out.row(2), &[1.0f32, 1.0][..], "rows past the prefix must be untouched");
+    }
+
+    #[test]
+    fn matvec_into_matches_f64_matvec() {
+        let a = Mat::from_fn(5, 19, |i, j| (i * 19 + j) as f64 * 0.37 - 3.0);
+        let v: Vec<f64> = (0..19).map(|j| 0.21 * j as f64 - 1.0).collect();
+        let a32 = MatF32::from_mat(&a);
+        let mut out = vec![0.0f32; 5];
+        a32.matvec_into(&narrow(&v), &mut out);
+        for (g, w) in out.iter().zip(a.matvec(&v)) {
+            assert!((*g as f64 - w).abs() <= 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+}

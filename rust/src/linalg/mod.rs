@@ -4,13 +4,17 @@
 //! model math (EM updates, minimum-divergence whitening, Householder
 //! reflections, LDA/PLDA) runs on this hand-written kernel set:
 //! [`Mat`] plus Cholesky / LU solves and a Jacobi symmetric
-//! eigendecomposition. Everything is f64; conversion to the device's
-//! f32 happens at the [`crate::runtime`] boundary.
+//! eigendecomposition. Model math is f64 throughout; the [`mod@f32`]
+//! submodule holds the single-precision mirror kernels ([`MatF32`])
+//! used by the mixed-precision alignment scoring path and the
+//! [`crate::runtime`] device boundary, with [`f32::narrow`] /
+//! [`f32::widen`] as the one sanctioned conversion idiom.
 
 mod mat;
 mod chol;
 mod lu;
 mod eig;
+pub mod f32;
 mod sympack;
 mod vecops;
 
@@ -18,6 +22,7 @@ pub use chol::{factor_in_place, factor_in_place_regularized, CholRef, Cholesky};
 pub use eig::{jacobi_eigh, EigH};
 pub use lu::Lu;
 pub use mat::Mat;
+pub use self::f32::{dot_f32, MatF32};
 pub use sympack::{sym_pack, sym_pack_into, sym_packed_len, sym_unpack_eye_into, sym_weighted_sum};
 pub use vecops::{axpy, dot, norm2, normalize, outer, scale_in_place};
 

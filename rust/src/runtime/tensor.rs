@@ -51,9 +51,11 @@ impl Tensor {
         Self::from_i32(vec![0; shape.iter().product()], shape)
     }
 
-    /// f32 tensor from f64 slice (the linalg → device conversion).
+    /// f32 tensor from f64 slice (the linalg → device conversion,
+    /// through the crate-wide narrowing helper shared with the f32
+    /// alignment pack).
     pub fn from_f64(data: &[f64], shape: &[usize]) -> Self {
-        Self::from_f32(data.iter().map(|&x| x as f32).collect(), shape)
+        Self::from_f32(crate::linalg::f32::narrow(data), shape)
     }
 
     /// Shape (row-major dims).
@@ -89,7 +91,7 @@ impl Tensor {
 
     /// Copy payload to f64 (the device → linalg conversion).
     pub fn to_f64(&self) -> Result<Vec<f64>> {
-        Ok(self.as_f32()?.iter().map(|&x| x as f64).collect())
+        Ok(crate::linalg::f32::widen(self.as_f32()?))
     }
 
     /// Convert to an XLA literal for device upload.

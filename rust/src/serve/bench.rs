@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::backend::{Backend, BackendOpts};
 use crate::config::Config;
-use crate::coordinator::{align_archive_cpu, stats_from_posts, ComputePath, TrainSetup};
+use crate::coordinator::{align_archive_cpu_prec, stats_from_posts, ComputePath, TrainSetup};
 use crate::exec::default_workers;
 use crate::frontend::synth::{generate_corpus, TrafficGen};
 use crate::ivector::{extract_cpu, Formulation, TrainVariant, UttStats};
@@ -76,14 +76,16 @@ pub fn train_tiny_bundle(cfg: &Config, seed: u64) -> Result<ModelBundle> {
         None,
         &mut |_| None,
     )?;
-    // backend on the training i-vectors
-    let posts = align_archive_cpu(
+    // backend on the training i-vectors (same `[align] precision` as
+    // the extractor training above — one regime per bundle)
+    let posts = align_archive_cpu_prec(
         &setup.diag,
         &setup.full,
         &corpus.train,
         cfg.tvm.top_k,
         cfg.tvm.min_post,
         workers,
+        cfg.align.precision,
     );
     let (bw, _) = stats_from_posts(&corpus.train, &posts, cfg.ubm.components, workers);
     let utts: Vec<UttStats> = bw.iter().map(|b| UttStats::from_bw(b, &tvm)).collect();

@@ -9,7 +9,9 @@ use anyhow::{ensure, Context, Result};
 
 use crate::backend::Backend;
 use crate::config::Config;
-use crate::gmm::{AlignScratch, BatchAligner, DiagGmm, FullGmm, PackedDiag};
+use crate::gmm::{
+    AlignPrecision, AlignScratch, BatchAligner, DiagGmm, FullGmm, PackedDiag, PackedDiagF32,
+};
 use crate::io::Serialize;
 use crate::ivector::{extract_cpu, EstepConsts, TvModel, UttStats};
 use crate::linalg::Mat;
@@ -226,18 +228,18 @@ impl ScratchPool {
         }
     }
 
-    /// Pop a pooled buffer, or allocate when the pool is dry. The shape
-    /// is revalidated defensively even though a per-model pool only
-    /// ever holds one shape.
-    fn checkout(&self, f_dim: usize, c_n: usize) -> AlignScratch {
+    /// Pop a pooled buffer, or allocate when the pool is dry. Shape
+    /// and precision are revalidated defensively even though a
+    /// per-model pool only ever holds one variant.
+    fn checkout(&self, precision: AlignPrecision, f_dim: usize, c_n: usize) -> AlignScratch {
         if let Some(s) = self.slots.lock().unwrap().pop() {
-            if s.fits(f_dim, c_n) {
+            if s.fits(f_dim, c_n) && s.precision() == precision {
                 self.reused.fetch_add(1, Ordering::Relaxed);
                 return s;
             }
         }
         self.created.fetch_add(1, Ordering::Relaxed);
-        AlignScratch::new(f_dim, c_n)
+        AlignScratch::with_precision(precision, f_dim, c_n)
     }
 
     /// Return a buffer; dropped silently once the pool is at capacity
@@ -256,6 +258,38 @@ impl ScratchPool {
     }
 }
 
+/// The per-model alignment weight pack at the model's configured
+/// scoring precision — exactly one variant is built per bundle load.
+#[derive(Debug)]
+enum ModelPack {
+    F64(PackedDiag),
+    F32(PackedDiagF32),
+}
+
+impl ModelPack {
+    fn feat_dim(&self) -> usize {
+        match self {
+            ModelPack::F64(p) => p.feat_dim(),
+            ModelPack::F32(p) => p.feat_dim(),
+        }
+    }
+
+    fn num_components(&self) -> usize {
+        match self {
+            ModelPack::F64(p) => p.num_components(),
+            ModelPack::F32(p) => p.num_components(),
+        }
+    }
+
+    /// The precision is the variant — no separate field to drift.
+    fn precision(&self) -> AlignPrecision {
+        match self {
+            ModelPack::F64(_) => AlignPrecision::F64,
+            ModelPack::F32(_) => AlignPrecision::F32,
+        }
+    }
+}
+
 /// An immutable bundle plus its derived per-bundle constants, shared as
 /// `Arc<ServeModel>` between request threads and batch workers. Built
 /// once per (hot-)load; the batched E-step constants are the serving
@@ -265,9 +299,11 @@ pub struct ServeModel {
     pub bundle: ModelBundle,
     /// Batched E-step constants (flat `TᵀΣ⁻¹`, packed `TᵀΣ⁻¹T`).
     pub consts: EstepConsts,
-    /// Packed diagonal alignment weights, shared by every request's
-    /// aligner (the pack is per-model, not per-request).
-    packed_diag: PackedDiag,
+    /// Packed diagonal alignment weights at the configured precision
+    /// (`[align] precision` — the variant *is* the precision), shared
+    /// by every request's aligner (the pack is per-model, not
+    /// per-request).
+    pack: ModelPack,
     /// Checkout pool of aligner scratch shared by every request's
     /// aligner (the scratch is per-request-in-flight, not per-request).
     scratch: ScratchPool,
@@ -286,17 +322,35 @@ impl ServeModel {
     }
 
     /// Build with an explicit scratch-pool bound (`[serve] scratch_pool`;
-    /// 0 disables pooling).
+    /// 0 disables pooling) at the default f64 precision.
     pub fn with_scratch_pool(bundle: ModelBundle, scratch_pool: usize) -> Self {
+        Self::with_options(bundle, scratch_pool, AlignPrecision::F64)
+    }
+
+    /// Build with an explicit scratch-pool bound and alignment scoring
+    /// precision — the serving entry point for `[align] precision`.
+    pub fn with_options(
+        bundle: ModelBundle,
+        scratch_pool: usize,
+        precision: AlignPrecision,
+    ) -> Self {
         let consts = bundle.tvm.precompute_consts();
-        let packed_diag = PackedDiag::new(&bundle.diag);
+        let pack = match precision {
+            AlignPrecision::F64 => ModelPack::F64(PackedDiag::new(&bundle.diag)),
+            AlignPrecision::F32 => ModelPack::F32(PackedDiagF32::new(&bundle.diag)),
+        };
         let fingerprint = bundle.fingerprint();
-        Self { bundle, consts, packed_diag, scratch: ScratchPool::new(scratch_pool), fingerprint }
+        Self { bundle, consts, pack, scratch: ScratchPool::new(scratch_pool), fingerprint }
     }
 
     /// i-vector dimension.
     pub fn rank(&self) -> usize {
         self.consts.r
+    }
+
+    /// Alignment scoring precision this model serves at.
+    pub fn precision(&self) -> AlignPrecision {
+        self.pack.precision()
     }
 
     /// (fresh scratch allocations, pooled reuses) — the serving
@@ -312,16 +366,27 @@ impl ServeModel {
     /// Aligner scratch is checked out of the model's pool and returned
     /// after alignment, so steady-state traffic allocates nothing here.
     pub fn utt_stats(&self, feats: &Mat) -> UttStats {
-        let scratch = self
-            .scratch
-            .checkout(self.packed_diag.feat_dim(), self.packed_diag.num_components());
-        let mut aligner = BatchAligner::with_scratch(
-            &self.packed_diag,
-            &self.bundle.full,
-            self.bundle.top_k,
-            self.bundle.min_post,
-            scratch,
+        let scratch = self.scratch.checkout(
+            self.pack.precision(),
+            self.pack.feat_dim(),
+            self.pack.num_components(),
         );
+        let mut aligner = match &self.pack {
+            ModelPack::F64(p) => BatchAligner::with_scratch(
+                p,
+                &self.bundle.full,
+                self.bundle.top_k,
+                self.bundle.min_post,
+                scratch,
+            ),
+            ModelPack::F32(p) => BatchAligner::with_scratch_f32(
+                p,
+                &self.bundle.full,
+                self.bundle.top_k,
+                self.bundle.min_post,
+                scratch,
+            ),
+        };
         let posts = aligner.align_utterance(feats);
         self.scratch.checkin(aligner.into_scratch());
         let bw = BwStats::accumulate(feats, &posts, self.bundle.diag.num_components(), false);
@@ -403,6 +468,37 @@ mod tests {
         let k0 = model.utt_stats(&world.utterance(0, 0));
         assert_eq!(k0.n, first.n);
         assert!(k0.f.approx_eq(&first.f, 0.0));
+    }
+
+    #[test]
+    fn f32_serve_model_matches_f64_within_tolerance() {
+        // serving-path acceptance of the precision knob: an f32 model
+        // extracts i-vectors equal to the f64 model's up to the f32
+        // alignment tolerance, and its scratch pool recycles f32
+        // buffers like the f64 pool does
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let f64_model = ServeModel::new(bundle.clone());
+        let f32_model = ServeModel::with_options(bundle, 2, AlignPrecision::F32);
+        assert_eq!(f64_model.precision(), AlignPrecision::F64);
+        assert_eq!(f32_model.precision(), AlignPrecision::F32);
+        let world = super::super::bench::tiny_traffic(&cfg, 2, 19);
+        for s in 0..2 {
+            for k in 0..3 {
+                let u = world.utterance(s, k);
+                let a = f64_model.extract_serial(&u);
+                let b = f32_model.extract_serial(&u);
+                // posting values agree to ~1e-4; the i-vector solve is
+                // well-conditioned at tiny dims, so the i-vectors track
+                let scale = 1.0 + a.iter().map(|x| x.abs()).fold(0.0, f64::max);
+                for (x, y) in a.iter().zip(&b) {
+                    assert!((x - y).abs() < 5e-3 * scale, "{x} vs {y}");
+                }
+            }
+        }
+        let (created, reused) = f32_model.scratch_stats();
+        assert_eq!(created, 1, "sequential f32 traffic must reuse pooled scratch");
+        assert_eq!(reused, 5);
     }
 
     #[test]

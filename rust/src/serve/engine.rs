@@ -96,6 +96,9 @@ pub struct Engine {
     request_timeout: Duration,
     /// Scratch-pool bound handed to each `ServeModel` (hot swaps too).
     scratch_pool: usize,
+    /// Alignment scoring precision handed to each `ServeModel`
+    /// (`[align] precision`; hot swaps inherit it).
+    precision: crate::gmm::AlignPrecision,
     /// Requests that missed their response deadline.
     timeouts: AtomicU64,
     extract_lat: LatencyHistogram,
@@ -113,9 +116,10 @@ impl Engine {
     pub fn new(bundle: ModelBundle, opts: &ServeConfig) -> Result<Self> {
         bundle.check_backend_dims()?;
         Ok(Self {
-            model: RwLock::new(Arc::new(ServeModel::with_scratch_pool(
+            model: RwLock::new(Arc::new(ServeModel::with_options(
                 bundle,
                 opts.scratch_pool,
+                opts.precision,
             ))),
             registry: Registry::new(opts.registry_shards),
             batcher: MicroBatcher::new(
@@ -127,6 +131,7 @@ impl Engine {
             submit_timeout: Duration::from_millis(opts.submit_timeout_ms.max(1)),
             request_timeout: Duration::from_millis(opts.request_timeout_ms.max(1)),
             scratch_pool: opts.scratch_pool,
+            precision: opts.precision,
             timeouts: AtomicU64::new(0),
             extract_lat: LatencyHistogram::new(),
             enroll_lat: LatencyHistogram::new(),
@@ -147,7 +152,8 @@ impl Engine {
     /// must not be able to arm a panic for the next verify request.
     pub fn swap_bundle(&self, bundle: ModelBundle) -> Result<()> {
         bundle.check_backend_dims()?;
-        let next = Arc::new(ServeModel::with_scratch_pool(bundle, self.scratch_pool));
+        let next =
+            Arc::new(ServeModel::with_options(bundle, self.scratch_pool, self.precision));
         *self.model.write().unwrap() = next;
         Ok(())
     }
@@ -292,6 +298,7 @@ mod tests {
             submit_timeout_ms: 10_000,
             request_timeout_ms: 60_000,
             scratch_pool: 4,
+            precision: crate::gmm::AlignPrecision::F64,
         }
     }
 
@@ -359,6 +366,33 @@ mod tests {
             m.dispatched_batches
         );
         assert_eq!(m.extract.count, 16);
+    }
+
+    /// Tentpole acceptance (serving side): `[align] precision = "f32"`
+    /// reaches the request path — the engine's extraction equals the
+    /// f32 serial oracle bit-for-bit (identical alignment + f64 E-step)
+    /// and a hot swap inherits the precision.
+    #[test]
+    fn f32_engine_matches_f32_oracle_and_survives_swap() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 23);
+        let mut o = opts(4, 300, 2);
+        o.precision = crate::gmm::AlignPrecision::F32;
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        let model = engine.model();
+        assert_eq!(model.precision(), crate::gmm::AlignPrecision::F32);
+        for s in 0..2 {
+            let feats = traffic.utterance(s, 5);
+            let got = engine.extract(&feats).unwrap();
+            let want = model.extract_serial(&feats);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "coord {j}: {g} vs {w}");
+            }
+        }
+        // a hot swap keeps serving at the configured precision
+        engine.swap_bundle(shared_bundle().clone()).unwrap();
+        assert_eq!(engine.model().precision(), crate::gmm::AlignPrecision::F32);
+        engine.extract(&traffic.utterance(0, 9)).unwrap();
     }
 
     #[test]
