@@ -9,13 +9,16 @@
 //! machine-readable trajectory in `BENCH_1.json` (frames/sec for
 //! alignment, utterances/sec for the E-step), plus a serving-path load
 //! replay (tiny in-process engine, micro-batched vs unbatched) whose
-//! p50/p95/p99 latency and throughput land in `BENCH_2.json` — so
-//! future PRs can track both perf curves.
+//! p50/p95/p99 latency and throughput land in `BENCH_2.json`, and a
+//! cluster 1-vs-2 replica scaling replay (saturating load, rolling
+//! swap mid-run) written to `BENCH_5.json` — so future PRs can track
+//! every perf curve.
 //!
 //!     cargo run --release --example speed_report \
 //!         [-- --utts N --bench-c C --bench-f F --bench-r R \
 //!             --bench-frames T --bench-utts U \
-//!             --serve-requests N --serve-concurrency C]
+//!             --serve-requests N --serve-concurrency C \
+//!             --cluster-requests N]
 //!
 //! The accelerated sections are skipped (with a note) when
 //! `artifacts/` is missing, so the CPU report runs everywhere.
@@ -213,23 +216,29 @@ fn main() -> anyhow::Result<()> {
     // ---- serving-path load replay → BENCH_2.json ----
     let serve_requests = arg_usize(&argv, "--serve-requests", 1200);
     let serve_concurrency = arg_usize(&argv, "--serve-concurrency", 8);
-    serving_bench_json(serve_requests, serve_concurrency)?;
+    let tiny_cfg = ivector_tv::serve::bench::tiny_serve_config();
+    let tiny_bundle = ivector_tv::serve::bench::train_tiny_bundle(&tiny_cfg, 42)?;
+    serving_bench_json(&tiny_cfg, tiny_bundle, serve_requests, serve_concurrency)?;
+
+    // ---- cluster 1-vs-2 replica scaling → BENCH_5.json ----
+    let cluster_requests = arg_usize(&argv, "--cluster-requests", 900);
+    cluster_bench_json(cluster_requests, serve_concurrency)?;
     Ok(())
 }
 
 /// Serving latency/throughput at tiny-engine dims: replay verify
 /// traffic through the micro-batched engine and its unbatched twin,
 /// write the `BENCH_2.json` serving section.
-fn serving_bench_json(requests: usize, concurrency: usize) -> anyhow::Result<()> {
+fn serving_bench_json(
+    cfg: &Config,
+    bundle: ivector_tv::serve::ModelBundle,
+    requests: usize,
+    concurrency: usize,
+) -> anyhow::Result<()> {
     use ivector_tv::frontend::synth::TrafficGen;
-    use ivector_tv::serve::bench::{
-        run_batched_vs_unbatched, tiny_serve_config, train_tiny_bundle, write_bench2_json,
-        ServeBenchOpts,
-    };
+    use ivector_tv::serve::bench::{run_batched_vs_unbatched, write_bench2_json, ServeBenchOpts};
 
     println!("\n== serving load replay ({requests} verify requests, {concurrency} clients) ==");
-    let cfg = tiny_serve_config();
-    let bundle = train_tiny_bundle(&cfg, 42)?;
     let traffic = TrafficGen::new(&cfg.corpus, 8, 4242);
     let opts = ServeBenchOpts { speakers: 8, enroll_utts: 2, requests, concurrency };
     let (batched, unbatched) = run_batched_vs_unbatched(bundle, &cfg.serve, &traffic, &opts)?;
@@ -254,6 +263,69 @@ fn serving_bench_json(requests: usize, concurrency: usize) -> anyhow::Result<()>
     );
     write_bench2_json("BENCH_2.json", &[("batched", &batched), ("unbatched", &unbatched)])?;
     println!("wrote BENCH_2.json");
+    Ok(())
+}
+
+/// Cluster scaling: the same saturating verify load against a
+/// 1-replica and a 2-replica dispatcher (rolling an identical-bundle
+/// swap through the latter mid-run), written as the `BENCH_5.json`
+/// section — the `cluster-bench` CLI run, in-process. Uses the
+/// compute-heavy rank-64 bench bundle so the replica worker, not the
+/// client pool, is the bottleneck the ratio measures.
+fn cluster_bench_json(requests: usize, concurrency: usize) -> anyhow::Result<()> {
+    use ivector_tv::frontend::synth::TrafficGen;
+    use ivector_tv::serve::bench::train_tiny_bundle;
+    use ivector_tv::serve::cluster::bench::{
+        cluster_bench_config, run_cluster_load, saturation_serve_config, write_bench5_json,
+        ClusterBenchOpts,
+    };
+    use ivector_tv::serve::Dispatcher;
+
+    println!("\n== cluster scaling replay ({requests} verify requests, {concurrency} clients) ==");
+    let cfg = cluster_bench_config();
+    let bundle = train_tiny_bundle(&cfg, 42)?;
+    let serve = saturation_serve_config(&cfg.serve);
+    let traffic = TrafficGen::new(&cfg.corpus, 8, 5151);
+    let opts = ClusterBenchOpts {
+        speakers: 8,
+        enroll_utts: 2,
+        requests,
+        concurrency,
+        live_enroll_every: 16,
+        stall_replica: None,
+    };
+
+    let mut single = cfg.cluster.clone();
+    single.replicas = 1;
+    let d1 = Dispatcher::new(bundle.clone(), &serve, &single)?;
+    let r1 = run_cluster_load(&d1, &traffic, &opts, None)?;
+    drop(d1);
+
+    let mut duo = cfg.cluster.clone();
+    duo.replicas = 2;
+    let d2 = Dispatcher::new(bundle.clone(), &serve, &duo)?;
+    let r2 = run_cluster_load(&d2, &traffic, &opts, Some(&bundle))?;
+
+    println!(
+        "-> 1 replica: {:.0} completed req/s (p99 {:.2} ms, rejected {}); \
+         2 replicas: {:.0} req/s (p99 {:.2} ms, rejected {}, failovers {}, \
+         swaps {}, lost enrollments {}) = {:.2}x",
+        r1.throughput_rps,
+        r1.verify.p99_s * 1e3,
+        r1.rejected,
+        r2.throughput_rps,
+        r2.verify.p99_s * 1e3,
+        r2.rejected,
+        r2.failovers,
+        r2.swaps,
+        r2.lost_enrollments,
+        if r1.throughput_rps > 0.0 { r2.throughput_rps / r1.throughput_rps } else { 0.0 },
+    );
+    write_bench5_json(
+        "BENCH_5.json",
+        &[("replicas_1".to_string(), &r1), ("replicas_2".to_string(), &r2)],
+    )?;
+    println!("wrote BENCH_5.json");
     Ok(())
 }
 

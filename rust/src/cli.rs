@@ -37,6 +37,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "bundle" => commands::bundle(&args),
         "verify" => commands::verify(&args),
         "serve-bench" => commands::serve_bench(&args),
+        "cluster-bench" => commands::cluster_bench(&args),
         "smoke" => commands::smoke(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -73,6 +74,11 @@ COMMANDS:
              writes BENCH_2.json (--requests, --concurrency, --speakers,
              --enroll-utts, --work | tiny in-process bundle, --out,
              --batched-only)
+  cluster-bench  1-vs-N replica scaling under a saturating load;
+             writes BENCH_5.json (--replicas, --route, --max-failovers,
+             --swap-mid-run, --stall-replica K, --live-enroll-every,
+             --requests, --concurrency, --speakers, --enroll-utts,
+             --work | tiny in-process bundle, --out)
   smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
 
 Flags not listed above: --artifacts DIR (default ./artifacts),

@@ -11,7 +11,11 @@ use crate::serve::bench::{
     run_batched_vs_unbatched, run_verify_load, tiny_serve_config, train_tiny_bundle,
     write_bench2_json, ServeBenchOpts, ServeBenchReport,
 };
-use crate::serve::{Engine, ModelBundle};
+use crate::serve::cluster::bench::{
+    cluster_bench_config, run_cluster_load, saturation_serve_config, write_bench5_json,
+    ClusterBenchOpts, ClusterBenchReport,
+};
+use crate::serve::{Dispatcher, Engine, ModelBundle};
 
 use super::Args;
 
@@ -239,6 +243,157 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let refs: Vec<(&str, &ServeBenchReport)> =
         reports.iter().map(|(name, r)| (*name, r)).collect();
     write_bench2_json(&out, &refs)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn print_cluster_report(name: &str, r: &ClusterBenchReport) {
+    println!(
+        "{name}: {} replicas ({}) | {}/{} requests completed in {:.2}s = {:.0} req/s | \
+         p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | \
+         failovers {} exhausted {} | engine shed {} timeouts {} | swaps {} | \
+         enrollments acked {} lost {} | score target {:.2} vs impostor {:.2}",
+        r.replicas,
+        r.route,
+        r.completed,
+        r.requests,
+        r.wall_s,
+        r.throughput_rps,
+        r.verify.p50_s * 1e3,
+        r.verify.p95_s * 1e3,
+        r.verify.p99_s * 1e3,
+        r.failovers,
+        r.exhausted,
+        r.engine_shed,
+        r.engine_timeouts,
+        r.swaps,
+        r.acked_enrollments,
+        r.lost_enrollments,
+        r.target_mean,
+        r.impostor_mean,
+    );
+}
+
+/// `cluster-bench` — the 1-vs-N replica scaling run behind
+/// `BENCH_5.json`: replay the same saturating verify load against a
+/// single-replica dispatcher and an N-replica one (same bundle, same
+/// traffic), with live enrollments riding along. `--swap-mid-run`
+/// rolls an identical-bundle swap through the cluster a third of the
+/// way in (the report's `lost_enrollments` must stay 0);
+/// `--stall-replica K` freezes one replica's workers for the load
+/// phase (the run must still complete, sheds failing over). Without an
+/// explicit `--config` the engines run the deliberately-saturating
+/// shape of [`saturation_serve_config`] over the compute-heavy
+/// [`cluster_bench_config`] bundle so the scaling headline measures
+/// the dispatcher, not an idle queue. `--replicas` is clamped to ≥ 2 —
+/// the bench *is* the 1-vs-N comparison, so N must exceed the
+/// baseline.
+pub fn cluster_bench(args: &Args) -> Result<()> {
+    let work = args.get("work");
+    let explicit_cfg = args.get("config");
+    let mut cfg = match (&explicit_cfg, &work) {
+        (Some(path), _) => Config::load(path)?,
+        (None, Some(_)) => Config::default_scaled(),
+        (None, None) => cluster_bench_config(),
+    };
+    let requests = args.get_parse_or("requests", 1200usize)?;
+    let concurrency = args.get_parse_or("concurrency", 8usize)?;
+    let speakers = args.get_parse_or("speakers", 8usize)?;
+    let enroll_utts = args.get_parse_or("enroll-utts", 2usize)?;
+    let live_enroll_every = args.get_parse_or("live-enroll-every", 16usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let replicas = args.get_parse_or("replicas", cfg.cluster.replicas.max(2))?.max(2);
+    if let Some(route) = args.get("route") {
+        cfg.cluster.route = crate::config::RoutePolicy::parse(&route)?;
+    }
+    cfg.cluster.max_failovers =
+        args.get_parse_or("max-failovers", cfg.cluster.max_failovers)?;
+    let swap_mid_run = args.switch("swap-mid-run");
+    let stall_replica = args
+        .get("stall-replica")
+        .map(|s| {
+            s.parse::<usize>().map_err(|e| anyhow::anyhow!("--stall-replica `{s}`: {e}"))
+        })
+        .transpose()?;
+    let out = args.get_or("out", "BENCH_5.json");
+    args.finish()?;
+    // fail the flag combination now — not after the multi-minute
+    // baseline run has already been paid for
+    if let Some(id) = stall_replica {
+        anyhow::ensure!(
+            id < replicas,
+            "--stall-replica {id} out of range (cluster run has {replicas} replicas)"
+        );
+    }
+
+    if explicit_cfg.is_none() {
+        cfg.serve = saturation_serve_config(&cfg.serve);
+        println!(
+            "cluster-bench: saturating engine shape (workers {}, queue_cap {}, \
+             flush {} µs, submit {} ms) — pass --config to override",
+            cfg.serve.workers, cfg.serve.queue_cap, cfg.serve.flush_us, cfg.serve.submit_timeout_ms,
+        );
+    }
+
+    let sw = Stopwatch::start();
+    let bundle = match &work {
+        Some(w) => ModelBundle::load_auto(w, &cfg)?,
+        None => {
+            println!("cluster-bench: no --work given — training a tiny in-process bundle");
+            train_tiny_bundle(&cfg, seed)?
+        }
+    };
+    println!(
+        "bundle ready in {:.1}s (C={} F={} R={})",
+        sw.elapsed_s(),
+        bundle.tvm.num_components(),
+        bundle.tvm.feat_dim(),
+        bundle.tvm.rank(),
+    );
+    let traffic = TrafficGen::new(&cfg.corpus, speakers, seed ^ 0xC1A5);
+    let base_opts = ClusterBenchOpts {
+        speakers,
+        enroll_utts,
+        requests,
+        concurrency,
+        live_enroll_every,
+        stall_replica: None,
+    };
+
+    // baseline: the same load against a single replica (no stall, no
+    // swap — the clean denominator of the scaling ratio)
+    let mut single = cfg.cluster.clone();
+    single.replicas = 1;
+    let d1 = Dispatcher::new(bundle.clone(), &cfg.serve, &single)?;
+    let r1 = run_cluster_load(&d1, &traffic, &base_opts, None)?;
+    print_cluster_report("cluster-bench[1 replica]", &r1);
+    drop(d1);
+
+    // the cluster run, with the optional degraded-replica and
+    // rolling-swap drills
+    let mut multi = cfg.cluster.clone();
+    multi.replicas = replicas;
+    let dn = Dispatcher::new(bundle.clone(), &cfg.serve, &multi)?;
+    let opts = ClusterBenchOpts { stall_replica, ..base_opts };
+    let rn = run_cluster_load(&dn, &traffic, &opts, swap_mid_run.then_some(&bundle))?;
+    print_cluster_report(&format!("cluster-bench[{replicas} replicas]"), &rn);
+    if r1.throughput_rps > 0.0 {
+        println!(
+            "-> completed-throughput scaling: {:.2}x ({}-replica {:.0} req/s vs 1-replica {:.0})",
+            rn.throughput_rps / r1.throughput_rps,
+            replicas,
+            rn.throughput_rps,
+            r1.throughput_rps,
+        );
+    }
+
+    write_bench5_json(
+        &out,
+        &[
+            ("replicas_1".to_string(), &r1),
+            (format!("replicas_{replicas}"), &rn),
+        ],
+    )?;
     println!("wrote {out}");
     Ok(())
 }

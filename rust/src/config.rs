@@ -115,6 +115,19 @@ impl Doc {
             Some(other) => bail!("{key}: expected string, got {other:?}"),
         }
     }
+
+    /// Whether `key` appears in the document — the "was this overridden
+    /// at all" probe behind optional per-replica cluster overrides.
+    pub fn has(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    /// All keys starting with `prefix` — section scans for validating
+    /// that dynamic subsections (e.g. `[cluster.replicaN]`) actually
+    /// land on something instead of being silently ignored.
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.values.keys().map(String::as_str).filter(move |k| k.starts_with(prefix))
+    }
 }
 
 /// Synthetic-corpus parameters (DESIGN.md substitution table: stands in
@@ -239,6 +252,109 @@ pub struct ServeConfig {
     pub precision: AlignPrecision,
 }
 
+/// How the cluster dispatcher picks a replica for each request
+/// (`[cluster] route`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through admitting replicas — fair under uniform request
+    /// cost, oblivious to backlog.
+    RoundRobin,
+    /// Pick the replica with the smallest load (dispatcher in-flight
+    /// counter + live micro-batch queue depth) — steers around a slow
+    /// or saturated replica before admission control has to shed.
+    LeastDepth,
+}
+
+impl RoutePolicy {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round_robin" => Ok(Self::RoundRobin),
+            "least_depth" => Ok(Self::LeastDepth),
+            other => bail!("route must be \"round_robin\" or \"least_depth\", got `{other}`"),
+        }
+    }
+
+    /// The config/CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round_robin",
+            Self::LeastDepth => "least_depth",
+        }
+    }
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-replica deviations from the shared `[serve]` engine shape
+/// (`[cluster.replicaN]` subsections) — how heterogeneous bundles serve
+/// side by side: e.g. replica 0 at f64 for bit-stable scoring, replica
+/// 1 at f32 for throughput (and, once the accel serving path lands, a
+/// CPU replica next to a device one). Unset fields inherit `[serve]`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaOverride {
+    /// Alignment scoring precision for this replica only.
+    pub precision: Option<AlignPrecision>,
+    /// E-step worker threads for this replica only.
+    pub workers: Option<usize>,
+    /// Micro-batch size for this replica only.
+    pub batch_utts: Option<usize>,
+}
+
+impl ReplicaOverride {
+    /// True when any field deviates from the shared `[serve]` shape.
+    pub fn is_override(&self) -> bool {
+        *self != Self::default()
+    }
+}
+
+/// Multi-engine cluster parameters (`[cluster]`,
+/// [`crate::serve::cluster`]): replica count, routing policy, shed
+/// failover budget, and the per-replica drain bound of a rolling swap.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Engine replicas behind the dispatcher (each with its own worker
+    /// pool and micro-batch queue; all sharing one speaker registry).
+    pub replicas: usize,
+    /// Routing policy for new requests.
+    pub route: RoutePolicy,
+    /// Max retries on *other* replicas after a shed (`Overloaded`) or
+    /// draining (`ShuttingDown`) rejection, all within the original
+    /// request deadline. 0 disables failover.
+    pub max_failovers: usize,
+    /// Per-replica drain bound during a rolling swap, in milliseconds:
+    /// how long the swap waits for a retired engine's workers to finish
+    /// the queued jobs and exit before moving to the next replica.
+    pub drain_timeout_ms: u64,
+    /// Per-replica overrides, indexed by replica id; missing/default
+    /// entries inherit `[serve]` unchanged.
+    pub overrides: Vec<ReplicaOverride>,
+}
+
+impl ClusterConfig {
+    /// The effective `[serve]` shape of replica `i`: the shared base
+    /// with this replica's overrides applied.
+    pub fn replica_serve_cfg(&self, base: &ServeConfig, i: usize) -> ServeConfig {
+        let mut cfg = base.clone();
+        if let Some(o) = self.overrides.get(i) {
+            if let Some(p) = o.precision {
+                cfg.precision = p;
+            }
+            if let Some(w) = o.workers {
+                cfg.workers = w;
+            }
+            if let Some(b) = o.batch_utts {
+                cfg.batch_utts = b;
+            }
+        }
+        cfg
+    }
+}
+
 /// Full experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -249,6 +365,7 @@ pub struct Config {
     pub backend: BackendConfig,
     pub trials: TrialConfig,
     pub serve: ServeConfig,
+    pub cluster: ClusterConfig,
 }
 
 impl Config {
@@ -306,6 +423,13 @@ impl Config {
                 scratch_pool: 8,
                 precision: AlignPrecision::F64,
             },
+            cluster: ClusterConfig {
+                replicas: 2,
+                route: RoutePolicy::LeastDepth,
+                max_failovers: 2,
+                drain_timeout_ms: 5_000,
+                overrides: Vec::new(),
+            },
         }
     }
 
@@ -328,6 +452,60 @@ impl Config {
         let serve_precision =
             AlignPrecision::parse(&doc.get_str("serve.precision", precision.as_str())?)
                 .context("serve.precision")?;
+        // `[cluster]` basics plus optional `[cluster.replicaN]`
+        // subsections (the TOML-subset parser flattens those to
+        // `cluster.replicaN.key` entries)
+        let replicas = doc.get_usize("cluster.replicas", d.cluster.replicas)?.max(1);
+        let route = RoutePolicy::parse(&doc.get_str("cluster.route", d.cluster.route.as_str())?)
+            .context("cluster.route")?;
+        let mut overrides = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let key = format!("cluster.replica{i}.precision");
+            let precision = if doc.has(&key) {
+                Some(AlignPrecision::parse(&doc.get_str(&key, "")?).context(key)?)
+            } else {
+                None
+            };
+            let key = format!("cluster.replica{i}.workers");
+            let workers = if doc.has(&key) { Some(doc.get_usize(&key, 0)?) } else { None };
+            let key = format!("cluster.replica{i}.batch_utts");
+            let batch_utts = if doc.has(&key) { Some(doc.get_usize(&key, 0)?) } else { None };
+            overrides.push(ReplicaOverride { precision, workers, batch_utts });
+        }
+        // a `[cluster.replicaN]` section outside 0..replicas would
+        // otherwise parse cleanly and be silently ignored — the classic
+        // 1-based-vs-0-based mistake must be an error, not dead config
+        for key in doc.keys_with_prefix("cluster.replica") {
+            let rest = &key["cluster.replica".len()..];
+            // `cluster.replicas` (the count) shares the prefix; only
+            // `cluster.replicaN.field` keys are per-replica overrides
+            let Some((idx, field)) = rest.split_once('.') else { continue };
+            let i: usize = idx.parse().map_err(|_| {
+                anyhow!("config section `[cluster.replica{idx}]`: replica id must be a number")
+            })?;
+            // the override reader probes the canonical spelling only, so
+            // a non-canonical id (`replica01`, `replica+1`) would parse
+            // here yet never be read — reject it instead of dropping it
+            if idx != i.to_string() {
+                bail!(
+                    "config section `[cluster.replica{idx}]`: write the replica id as \
+                     `replica{i}` (no leading zeros or signs)"
+                );
+            }
+            if i >= replicas {
+                bail!(
+                    "config section `[cluster.replica{i}]` is outside the configured \
+                     replica range 0..{replicas} (ids are 0-based; raise [cluster] replicas \
+                     or renumber the section)"
+                );
+            }
+            if !matches!(field, "precision" | "workers" | "batch_utts") {
+                bail!(
+                    "config key `{key}`: unknown per-replica override `{field}` \
+                     (supported: precision, workers, batch_utts)"
+                );
+            }
+        }
         Ok(Self {
             corpus: CorpusConfig {
                 n_train_speakers: doc.get_usize("corpus.n_train_speakers", d.corpus.n_train_speakers)?,
@@ -387,6 +565,15 @@ impl Config {
                     as u64,
                 scratch_pool: doc.get_usize("serve.scratch_pool", d.serve.scratch_pool)?,
                 precision: serve_precision,
+            },
+            cluster: ClusterConfig {
+                replicas,
+                route,
+                max_failovers: doc.get_usize("cluster.max_failovers", d.cluster.max_failovers)?,
+                drain_timeout_ms: doc
+                    .get_usize("cluster.drain_timeout_ms", d.cluster.drain_timeout_ms as usize)?
+                    as u64,
+                overrides,
             },
         })
     }
@@ -487,6 +674,87 @@ mod tests {
         let err = Config::from_doc(&Doc::parse("[serve]\nprecision = \"bad\"\n").unwrap())
             .unwrap_err();
         assert!(err.to_string().contains("serve.precision"), "{err:#}");
+    }
+
+    #[test]
+    fn cluster_defaults_and_overrides_parse() {
+        // defaults survive an unrelated file
+        let cfg = Config::from_doc(&Doc::parse("[tvm]\nrank = 16\n").unwrap()).unwrap();
+        assert_eq!(cfg.cluster.replicas, 2);
+        assert_eq!(cfg.cluster.route, RoutePolicy::LeastDepth);
+        assert_eq!(cfg.cluster.max_failovers, 2);
+        assert_eq!(cfg.cluster.drain_timeout_ms, 5_000);
+        assert!(cfg.cluster.overrides.iter().all(|o| !o.is_override()));
+
+        // full section + per-replica subsections
+        let cfg = Config::from_doc(
+            &Doc::parse(
+                "[cluster]\nreplicas = 3\nroute = \"round_robin\"\n\
+                 max_failovers = 1\ndrain_timeout_ms = 250\n\
+                 [cluster.replica1]\nprecision = \"f32\"\nworkers = 4\n\
+                 [cluster.replica2]\nbatch_utts = 8\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.replicas, 3);
+        assert_eq!(cfg.cluster.route, RoutePolicy::RoundRobin);
+        assert_eq!(cfg.cluster.max_failovers, 1);
+        assert_eq!(cfg.cluster.drain_timeout_ms, 250);
+        assert!(!cfg.cluster.overrides[0].is_override());
+        assert_eq!(cfg.cluster.overrides[1].precision, Some(AlignPrecision::F32));
+        assert_eq!(cfg.cluster.overrides[1].workers, Some(4));
+        assert_eq!(cfg.cluster.overrides[1].batch_utts, None);
+        assert_eq!(cfg.cluster.overrides[2].batch_utts, Some(8));
+
+        // the override applies on top of the shared [serve] base
+        let r1 = cfg.cluster.replica_serve_cfg(&cfg.serve, 1);
+        assert_eq!(r1.precision, AlignPrecision::F32);
+        assert_eq!(r1.workers, 4);
+        assert_eq!(r1.batch_utts, cfg.serve.batch_utts, "unset fields inherit [serve]");
+        let r0 = cfg.cluster.replica_serve_cfg(&cfg.serve, 0);
+        assert_eq!(r0.precision, cfg.serve.precision);
+        assert_eq!(r0.workers, cfg.serve.workers);
+
+        // bad spellings are nameable errors
+        let err = Config::from_doc(&Doc::parse("[cluster]\nroute = \"random\"\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("cluster.route"), "{err:#}");
+        let err = Config::from_doc(
+            &Doc::parse("[cluster.replica0]\nprecision = \"f16\"\n").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("replica0"), "{err:#}");
+        // replicas is clamped to ≥ 1, never 0
+        let cfg =
+            Config::from_doc(&Doc::parse("[cluster]\nreplicas = 0\n").unwrap()).unwrap();
+        assert_eq!(cfg.cluster.replicas, 1);
+
+        // a replica section outside 0..replicas is an error, not dead
+        // config (the 1-based-numbering mistake)
+        let err = Config::from_doc(
+            &Doc::parse("[cluster]\nreplicas = 2\n[cluster.replica2]\nprecision = \"f32\"\n")
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("0-based"), "{err:#}");
+        let err = Config::from_doc(
+            &Doc::parse("[cluster.replicaX]\nworkers = 1\n").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("must be a number"), "{err:#}");
+        // ...and so is a typo'd override field inside a valid section
+        let err = Config::from_doc(
+            &Doc::parse("[cluster.replica0]\nqueue_cap = 4\n").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown per-replica override"), "{err:#}");
+        // ...and a non-canonical id the reader would never probe
+        let err = Config::from_doc(
+            &Doc::parse("[cluster.replica01]\nprecision = \"f32\"\n").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("leading zeros"), "{err:#}");
     }
 
     #[test]

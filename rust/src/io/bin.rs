@@ -70,6 +70,18 @@ impl BinWriter {
         self.w.flush()?;
         Ok(())
     }
+
+    /// Flush, then fsync the file to stable storage before closing —
+    /// for writers about to `rename` the file into place as an atomic
+    /// replacement: without the sync, a power loss can journal the
+    /// rename while the data blocks are still unwritten, leaving a
+    /// present-but-truncated file. Costs an fsync, so plain [`Self::finish`]
+    /// remains the default for bulk archive writes.
+    pub fn finish_synced(mut self) -> Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().sync_all()?;
+        Ok(())
+    }
 }
 
 /// Buffered reader that validates the container header on open.

@@ -161,6 +161,12 @@ impl LatencyHistogram {
         LAT_MIN_S * 2f64.powf((i + 1) as f64 / LAT_BUCKETS_PER_OCTAVE as f64)
     }
 
+    /// Record one observation given as a [`std::time::Duration`] (the
+    /// request-path callers all hold an `Instant::elapsed()`).
+    pub fn record_duration(&self, elapsed: std::time::Duration) {
+        self.record(elapsed.as_secs_f64());
+    }
+
     /// Record one observation (seconds).
     pub fn record(&self, seconds: f64) {
         let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
@@ -331,6 +337,9 @@ mod tests {
         h.record(f64::NAN);
         assert_eq!(h.count(), 4);
         assert!(h.quantile(1.0) > 0.0);
+        // the Duration convenience records like the f64 path
+        h.record_duration(std::time::Duration::from_millis(2));
+        assert_eq!(h.count(), 5);
     }
 
     #[test]

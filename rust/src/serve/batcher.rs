@@ -73,10 +73,10 @@ struct Shared {
     /// light load batching then costs nothing over per-request
     /// dispatch, and the deadline only pays for genuine coalescing.
     inbound: AtomicUsize,
-    /// Test hook: while set, workers leave the queue untouched — the
+    /// Stall hook: while set, workers leave the queue untouched — the
     /// deterministic stand-in for "all workers are busy" that the
-    /// overload and timeout tests pivot on. Read in the worker loop in
-    /// every build; only tests can set it.
+    /// overload/timeout tests and the cluster bench's deliberate-stall
+    /// harness pivot on. Never set by the production request path.
     stalled: AtomicBool,
     /// Dispatched batch count (metrics).
     batches: AtomicU64,
@@ -107,10 +107,15 @@ impl Drop for RequestToken<'_> {
 }
 
 /// The batcher: a bounded job queue plus its worker pool. Dropping it
-/// drains the queue and joins the workers.
+/// drains the queue and joins the workers; [`MicroBatcher::shutdown`] +
+/// [`MicroBatcher::join_workers`] expose the same teardown through
+/// `&self` so an engine drain can run it early (and bounded) while the
+/// batcher stays shared.
 pub(crate) struct MicroBatcher {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Behind a mutex so a `&self` drain can take handles out to join;
+    /// emptied exactly once — later joins see an empty vec and return.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl MicroBatcher {
@@ -140,7 +145,48 @@ impl MicroBatcher {
                 std::thread::spawn(move || worker_loop(&shared))
             })
             .collect();
-        Self { shared, workers }
+        Self { shared, workers: Mutex::new(workers) }
+    }
+
+    /// Begin shutdown: new [`MicroBatcher::submit`] calls fail with a
+    /// typed [`ServeError::ShuttingDown`]; workers finish whatever is
+    /// queued and exit. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+    }
+
+    /// Join the worker threads, waiting at most until `deadline`
+    /// (`None` = wait forever). Returns true once every worker has been
+    /// joined; handles are taken out as they finish, so a timed-out
+    /// call leaves the stragglers for the next join (or for drop).
+    /// Callers must [`MicroBatcher::shutdown`] first or this blocks on
+    /// workers that never exit.
+    pub fn join_workers(&self, deadline: Option<Instant>) -> bool {
+        let mut workers =
+            self.workers.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        loop {
+            while let Some(i) = workers.iter().position(|h| h.is_finished()) {
+                let _ = workers.swap_remove(i).join();
+            }
+            if workers.is_empty() {
+                return true;
+            }
+            match deadline {
+                // bounded join: poll `is_finished` so a straggler past
+                // the deadline is reported, not waited out
+                Some(d) => {
+                    if Instant::now() >= d {
+                        return false;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                None => {
+                    let h = workers.pop().unwrap();
+                    let _ = h.join();
+                }
+            }
+        }
     }
 
     /// Announce an in-flight request before its statistics work starts;
@@ -225,9 +271,11 @@ impl MicroBatcher {
         self.shared.queue.lock().unwrap().len()
     }
 
-    /// Test hook: freeze (or thaw) the worker pool, the deterministic
-    /// stand-in for saturated workers in the overload/timeout tests.
-    #[cfg(test)]
+    /// Stall hook: freeze (or thaw) the worker pool — the deterministic
+    /// stand-in for saturated workers in the overload/timeout tests and
+    /// the cluster bench's deliberately-degraded replica. Compiled in
+    /// every build (the cluster bench is a real binary), never touched
+    /// by the serving path itself.
     pub fn set_stalled(&self, stalled: bool) {
         self.shared.stalled.store(stalled, Ordering::Release);
         self.shared.cv.notify_all();
@@ -236,11 +284,8 @@ impl MicroBatcher {
 
 impl Drop for MicroBatcher {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cv.notify_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
+        self.join_workers(None);
     }
 }
 

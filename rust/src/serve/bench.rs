@@ -52,6 +52,26 @@ pub fn tiny_traffic(cfg: &Config, n_speakers: usize, seed: u64) -> TrafficGen {
     TrafficGen::new(&cfg.corpus, n_speakers, seed)
 }
 
+/// One tiny bundle shared across the serve/cluster tests (training it
+/// takes a few seconds; every test wants the same deterministic model,
+/// so train it exactly once per test binary).
+#[cfg(test)]
+pub(crate) fn shared_test_bundle() -> &'static ModelBundle {
+    static BUNDLE: std::sync::OnceLock<ModelBundle> = std::sync::OnceLock::new();
+    BUNDLE.get_or_init(|| train_tiny_bundle(&tiny_serve_config(), 5).unwrap())
+}
+
+/// The deterministic verify-trial plan shared by the engine and
+/// cluster load harnesses: request `i` claims speaker `i % n_spk`;
+/// even requests are target trials, odd ones impostor trials voiced by
+/// the next speaker. Returns `(claimed, actual, is_target)`.
+pub(crate) fn trial_plan(i: usize, n_spk: usize) -> (usize, usize, bool) {
+    let claimed = i % n_spk;
+    let target = i % 2 == 0;
+    let actual = if target { claimed } else { (claimed + 1) % n_spk };
+    (claimed, actual, target)
+}
+
 /// Run the full offline recipe in-process (synth → UBM → extractor →
 /// backend) and assemble the serving bundle. At [`tiny_serve_config`]
 /// dims this takes seconds, which is what lets `serve-bench` and the
@@ -231,9 +251,7 @@ pub fn run_verify_load(
                     let mut acc = ClientAcc::default();
                     let mut i = c;
                     while i < opts.requests {
-                        let claimed = i % n_spk;
-                        let target = i % 2 == 0;
-                        let actual = if target { claimed } else { (claimed + 1) % n_spk };
+                        let (claimed, actual, target) = trial_plan(i, n_spk);
                         // verification keys live past the enrollment keys
                         let feats = traffic.utterance(actual, 1_000 + i as u64);
                         match engine.verify(&traffic.speaker_id(claimed), &feats) {

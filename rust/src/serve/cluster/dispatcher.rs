@@ -1,0 +1,848 @@
+//! The multi-engine dispatcher: load-aware routing, shed failover, and
+//! rolling hot swaps over N replicas sharing one speaker registry.
+//!
+//! Each replica is a complete [`Engine`] — its own micro-batch queue,
+//! worker pool, admission control, and model snapshot — so one stalled
+//! or saturated replica degrades *that replica only*. The dispatcher
+//! adds the cluster layer on top:
+//!
+//! * **routing** ([`crate::config::RoutePolicy`]): `round_robin` cycles
+//!   through admitting replicas; `least_depth` picks the replica with
+//!   the smallest load, where load = the dispatcher's per-replica
+//!   in-flight counter (covers the alignment stage the queue cannot
+//!   see) + the live micro-batch queue depth;
+//! * **failover**: a typed retriable rejection ([`ServeError`]
+//!   `Overloaded` / `ShuttingDown`) retries on the least-loaded
+//!   untried replica — within the original request deadline and at most
+//!   `max_failovers` times. Non-retriable failures (`Timeout`: the
+//!   deadline is already spent; `WorkerFailed`, bad requests) propagate
+//!   immediately;
+//! * **rolling swap** ([`Dispatcher::swap_bundle`]): replicas upgrade
+//!   one at a time — stop routing to the replica, install a fresh
+//!   engine on the shared registry, [`Engine::drain`] the retired one
+//!   (finish queued batches, join workers), resume routing — so the
+//!   rest of the cluster keeps serving throughout a model push.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ClusterConfig, RoutePolicy, ServeConfig};
+use crate::gmm::AlignPrecision;
+use crate::linalg::Mat;
+use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::serve::{
+    Engine, EngineMetrics, ModelBundle, Registry, ServeError, ServeModel, VerifyOutcome,
+};
+
+/// One replica slot: the engine (replaced wholesale by a rolling swap)
+/// plus the dispatcher's routing state for it.
+struct Replica {
+    id: usize,
+    /// Swapped by [`Dispatcher::swap_bundle`]; requests clone the `Arc`
+    /// once and stay on that engine end-to-end (like an engine's model
+    /// snapshot, one level up).
+    engine: RwLock<Arc<Engine>>,
+    /// Requests routed here and not yet returned — includes the
+    /// request-thread alignment stage the micro-batch queue never sees.
+    in_flight: AtomicUsize,
+    /// Cleared while a rolling swap is rebuilding this replica; the
+    /// router skips non-admitting replicas whenever any other is up.
+    admitting: AtomicBool,
+}
+
+impl Replica {
+    fn engine(&self) -> Arc<Engine> {
+        self.engine.read().unwrap_or_else(|poisoned| poisoned.into_inner()).clone()
+    }
+
+    /// Live load signal for `least_depth` routing and failover picks.
+    fn load(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire) + self.engine().queue_len()
+    }
+}
+
+/// RAII in-flight marker: decrements on every exit path (including an
+/// unwinding request) so a panic can never wedge a replica's load at
+/// "busy forever".
+struct Flight<'a>(&'a AtomicUsize);
+
+impl<'a> Flight<'a> {
+    fn begin(counter: &'a AtomicUsize) -> Self {
+        counter.fetch_add(1, Ordering::AcqRel);
+        Self(counter)
+    }
+}
+
+impl Drop for Flight<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Point-in-time snapshot of one replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaMetrics {
+    pub id: usize,
+    /// False only while a rolling swap is rebuilding this replica.
+    pub admitting: bool,
+    /// Requests currently routed here (dispatcher view).
+    pub in_flight: usize,
+    /// The alignment precision this replica currently serves at
+    /// (per-replica overrides make this heterogeneous).
+    pub precision: AlignPrecision,
+    /// The replica engine's own counters. Reset by a rolling swap (the
+    /// engine is rebuilt); cluster-level counters persist across swaps.
+    pub engine: EngineMetrics,
+}
+
+/// Cluster-level counters: request latencies and routing outcomes that
+/// persist across rolling swaps, over a per-replica breakdown.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    /// End-to-end request latencies as the client saw them — failover
+    /// retries included, which is exactly what a per-replica histogram
+    /// would miss.
+    pub extract: LatencySummary,
+    pub enroll: LatencySummary,
+    pub verify: LatencySummary,
+    /// Requests dispatched (each counted once, however many retries).
+    pub routed: u64,
+    /// Failover retries launched after a retriable rejection.
+    pub failovers: u64,
+    /// Requests still rejected after the failover budget / replica set
+    /// / request deadline ran out (the caller saw the last rejection).
+    pub exhausted: u64,
+    /// Completed rolling swaps.
+    pub swaps: u64,
+    /// Sheds/timeouts folded in from engines retired by those swaps
+    /// (their replacements restart at zero).
+    pub retired_shed: u64,
+    pub retired_timeouts: u64,
+    pub replicas: Vec<ReplicaMetrics>,
+}
+
+impl ClusterMetrics {
+    /// Engine-level sheds summed over replicas — including engines
+    /// retired by rolling swaps, so the total spans the cluster's whole
+    /// life (the client-visible residue after failover is
+    /// [`ClusterMetrics::exhausted`]).
+    pub fn total_shed(&self) -> u64 {
+        self.retired_shed + self.replicas.iter().map(|r| r.engine.shed_requests).sum::<u64>()
+    }
+
+    /// Engine-level request timeouts summed over replicas, retired
+    /// engines included.
+    pub fn total_timeouts(&self) -> u64 {
+        self.retired_timeouts
+            + self.replicas.iter().map(|r| r.engine.timed_out_requests).sum::<u64>()
+    }
+
+    /// Requests that flowed through E-step batches, summed over
+    /// replicas (since the last swap rebuilt each engine).
+    pub fn total_batched_requests(&self) -> u64 {
+        self.replicas.iter().map(|r| r.engine.batched_requests).sum()
+    }
+}
+
+/// The cluster dispatcher. `&Dispatcher` is `Sync`: request threads
+/// call `extract`/`enroll`/`verify` concurrently while an operator
+/// thread rolls a [`Dispatcher::swap_bundle`] through the replicas.
+pub struct Dispatcher {
+    replicas: Vec<Replica>,
+    /// One speaker store for the whole cluster: an enrollment on any
+    /// replica is immediately scorable on every other, and survives
+    /// per-replica engine rebuilds during rolling swaps.
+    registry: Arc<Registry>,
+    route: RoutePolicy,
+    max_failovers: usize,
+    /// Per-replica drain bound during rolling swaps.
+    drain_timeout: Duration,
+    /// The failover loop's outer bound: no retry *launches* after the
+    /// original request window (mirroring `[serve] request_timeout_ms`)
+    /// is spent, whatever the remaining attempt budget. Each attempt is
+    /// then bounded by the engine's own deadlines, so the worst-case
+    /// client wait is one window plus the final attempt's — a shed
+    /// arrives at `submit_timeout_ms`, far inside the window, so in
+    /// practice failover costs sheds' submit waits, not extra windows.
+    request_timeout: Duration,
+    /// Shared engine shape + per-replica overrides, kept so a rolling
+    /// swap rebuilds each replica exactly as it was configured.
+    serve_cfg: ServeConfig,
+    cluster_cfg: ClusterConfig,
+    /// Serializes rolling swaps — and [`Dispatcher::drain`], which
+    /// would otherwise race a swap: the swap could install a fresh,
+    /// admitting engine into a slot the drain had just retired.
+    swap_lock: Mutex<()>,
+    /// Set by [`Dispatcher::drain`]; terminal — a retired cluster
+    /// refuses further swaps instead of resurrecting worker pools.
+    retired: AtomicBool,
+    /// Shed/timeout counts carried over from engines retired by rolling
+    /// swaps (a swap rebuilds the engine with zeroed counters; without
+    /// this the cluster totals would silently forget everything before
+    /// the last swap).
+    retired_shed: AtomicU64,
+    retired_timeouts: AtomicU64,
+    /// Round-robin cursor.
+    rr: AtomicUsize,
+    routed: AtomicU64,
+    failovers: AtomicU64,
+    exhausted: AtomicU64,
+    swaps: AtomicU64,
+    extract_lat: LatencyHistogram,
+    enroll_lat: LatencyHistogram,
+    verify_lat: LatencyHistogram,
+}
+
+impl Dispatcher {
+    /// Build `cluster.replicas` engines around `bundle`, all on one
+    /// fresh shared registry (sharded per `serve.registry_shards`).
+    /// Each replica gets the shared `[serve]` shape with its
+    /// `[cluster.replicaN]` overrides applied.
+    pub fn new(bundle: ModelBundle, serve: &ServeConfig, cluster: &ClusterConfig) -> Result<Self> {
+        let registry = Arc::new(Registry::new(serve.registry_shards));
+        let n = cluster.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        for id in 0..n {
+            let cfg = cluster.replica_serve_cfg(serve, id);
+            let engine = Engine::with_registry(bundle.clone(), &cfg, Arc::clone(&registry))?;
+            replicas.push(Replica {
+                id,
+                engine: RwLock::new(Arc::new(engine)),
+                in_flight: AtomicUsize::new(0),
+                admitting: AtomicBool::new(true),
+            });
+        }
+        Ok(Self {
+            replicas,
+            registry,
+            route: cluster.route,
+            max_failovers: cluster.max_failovers,
+            drain_timeout: Duration::from_millis(cluster.drain_timeout_ms.max(1)),
+            request_timeout: Duration::from_millis(serve.request_timeout_ms.max(1)),
+            serve_cfg: serve.clone(),
+            cluster_cfg: cluster.clone(),
+            swap_lock: Mutex::new(()),
+            retired: AtomicBool::new(false),
+            retired_shed: AtomicU64::new(0),
+            retired_timeouts: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            routed: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            exhausted: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            extract_lat: LatencyHistogram::new(),
+            enroll_lat: LatencyHistogram::new(),
+            verify_lat: LatencyHistogram::new(),
+        })
+    }
+
+    /// Number of replicas.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The routing policy in force.
+    pub fn route(&self) -> RoutePolicy {
+        self.route
+    }
+
+    /// The cluster-wide speaker registry (persistence, admin).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// A shared handle to the cluster registry.
+    pub fn registry_handle(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The model snapshot replica `id` currently serves (panics on an
+    /// out-of-range id, like any index).
+    pub fn replica_model(&self, id: usize) -> Arc<ServeModel> {
+        self.replicas[id].engine().model()
+    }
+
+    /// Route one extraction across the cluster (failover included).
+    pub fn extract(&self, feats: &Mat) -> Result<Vec<f64>> {
+        let t0 = Instant::now();
+        let iv = self.dispatch(|engine| engine.extract(feats))?;
+        self.extract_lat.record_duration(t0.elapsed());
+        Ok(iv)
+    }
+
+    /// Route one enrollment across the cluster. The registry is shared,
+    /// so the resulting profile is scorable on every replica at once.
+    pub fn enroll(&self, speaker_id: &str, feats: &Mat) -> Result<u64> {
+        let t0 = Instant::now();
+        let count = self.dispatch(|engine| engine.enroll(speaker_id, feats))?;
+        self.enroll_lat.record_duration(t0.elapsed());
+        Ok(count)
+    }
+
+    /// Route one verification across the cluster.
+    pub fn verify(&self, speaker_id: &str, feats: &Mat) -> Result<VerifyOutcome> {
+        let t0 = Instant::now();
+        let out = self.dispatch(|engine| engine.verify(speaker_id, feats))?;
+        self.verify_lat.record_duration(t0.elapsed());
+        Ok(out)
+    }
+
+    /// The routed request core: pick a replica, run the operation, and
+    /// on a typed retriable rejection (`Overloaded` from admission
+    /// control, `ShuttingDown` from a draining replica) retry on the
+    /// least-loaded untried replica — bounded by `max_failovers`, and
+    /// launched only while the original request window has time left
+    /// (each attempt then carries the engine's own deadlines; see the
+    /// `request_timeout` field note for the worst-case bound). Anything
+    /// else propagates as-is: a `Timeout` request has already spent its
+    /// deadline, and a hard error (unknown speaker, model mismatch,
+    /// worker failure) would fail identically anywhere.
+    fn dispatch<T>(&self, f: impl Fn(&Engine) -> Result<T>) -> Result<T> {
+        let deadline = Instant::now() + self.request_timeout;
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        let mut tried: Vec<usize> = Vec::with_capacity(2);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..=self.max_failovers {
+            let Some(id) = self.pick(&tried, attempt == 0) else { break };
+            let replica = &self.replicas[id];
+            let engine = replica.engine();
+            let _flight = Flight::begin(&replica.in_flight);
+            match f(&engine) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let serve_err = e.downcast_ref::<ServeError>();
+                    let retriable = serve_err.is_some_and(ServeError::is_retriable);
+                    // `Overloaded` disqualifies the replica for this
+                    // request (its queue is full). `ShuttingDown` does
+                    // not: the engine the request held was retiring,
+                    // and a rolling swap installs the replacement
+                    // *before* draining it — a retry on the same
+                    // replica picks up the fresh engine.
+                    if !matches!(serve_err, Some(ServeError::ShuttingDown)) {
+                        tried.push(id);
+                    }
+                    last = Some(e);
+                    if !retriable {
+                        break;
+                    }
+                    if attempt == self.max_failovers
+                        || tried.len() >= self.replicas.len()
+                        || Instant::now() >= deadline
+                    {
+                        // still retriable, but the budget (attempts,
+                        // replicas, or time) is spent: the caller sees
+                        // the last rejection
+                        self.exhausted.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    self.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("cluster has no replica to route to")))
+    }
+
+    /// Choose a replica not in `tried`: by the configured policy for a
+    /// request's first attempt, always least-loaded for failover
+    /// retries. Prefers admitting replicas; when none admit (a rolling
+    /// swap on a small cluster) it falls back to any untried replica —
+    /// the engine itself then answers with a typed error the failover
+    /// loop understands, rather than the router inventing its own.
+    fn pick(&self, tried: &[usize], primary: bool) -> Option<usize> {
+        let untried = |r: &&Replica| !tried.contains(&r.id);
+        let mut pool: Vec<&Replica> = self
+            .replicas
+            .iter()
+            .filter(untried)
+            .filter(|r| r.admitting.load(Ordering::Acquire))
+            .collect();
+        if pool.is_empty() {
+            pool = self.replicas.iter().filter(untried).collect();
+        }
+        if pool.is_empty() {
+            return None;
+        }
+        if primary && self.route == RoutePolicy::RoundRobin {
+            let n = self.replicas.len();
+            let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+            for k in 0..n {
+                let id = (start + k) % n;
+                if pool.iter().any(|r| r.id == id) {
+                    return Some(id);
+                }
+            }
+        }
+        pool.iter().map(|r| (r.load(), r.id)).min().map(|(_, id)| id)
+    }
+
+    /// Roll a new bundle through the cluster, one replica at a time:
+    /// stop routing to the replica → install a fresh engine (same
+    /// shared registry, same per-replica overrides) → drain the retired
+    /// engine (it finishes everything already queued, then its workers
+    /// join, bounded by `drain_timeout_ms`) → resume routing. Every
+    /// other replica keeps serving throughout, so a model push never
+    /// takes the cluster offline. In-flight requests on a retiring
+    /// engine either complete on their snapshot or come back as typed
+    /// `ShuttingDown` rejections, which the failover path retries on an
+    /// already-upgraded replica.
+    ///
+    /// A bundle whose backend disagrees with its extractor is rejected
+    /// up front — before any replica is touched.
+    pub fn swap_bundle(&self, bundle: ModelBundle) -> Result<()> {
+        bundle.check_backend_dims()?;
+        let _serialized = self.swap_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        anyhow::ensure!(
+            !self.retired.load(Ordering::Acquire),
+            "cluster has been drained — a swap would resurrect retired replicas"
+        );
+        for replica in &self.replicas {
+            let cfg = self.cluster_cfg.replica_serve_cfg(&self.serve_cfg, replica.id);
+            let next = Arc::new(Engine::with_registry(
+                bundle.clone(),
+                &cfg,
+                Arc::clone(&self.registry),
+            )?);
+            replica.admitting.store(false, Ordering::Release);
+            let old = {
+                let mut slot =
+                    replica.engine.write().unwrap_or_else(|poisoned| poisoned.into_inner());
+                std::mem::replace(&mut *slot, next)
+            };
+            // the slot now holds the fresh engine, so the replica is
+            // fully serviceable — resume routing *before* the old
+            // engine's drain, or the drain (up to drain_timeout_ms)
+            // would dent cluster capacity for no reason
+            replica.admitting.store(true, Ordering::Release);
+            if !old.drain(self.drain_timeout) {
+                eprintln!(
+                    "[cluster] replica {}: drain exceeded {:?} — a worker is still \
+                     finishing its batch; its engine retires when that batch ends",
+                    replica.id, self.drain_timeout
+                );
+            }
+            // fold the retired engine's rejection counters into the
+            // cluster totals — the replacement starts at zero, and the
+            // report must not forget the pre-swap load. (A request
+            // still waiting on the old engine can time out after this
+            // read; that residue is the one count this can miss.)
+            let old_metrics = old.metrics();
+            self.retired_shed.fetch_add(old_metrics.shed_requests, Ordering::Relaxed);
+            self.retired_timeouts
+                .fetch_add(old_metrics.timed_out_requests, Ordering::Relaxed);
+        }
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Drain the whole cluster: stop routing everywhere, then drain
+    /// each replica (bounded by `timeout` per replica). Returns true
+    /// when every worker on every replica joined in time. New requests
+    /// fail with typed `ShuttingDown`. Terminal, and serialized with
+    /// [`Dispatcher::swap_bundle`]: an in-flight swap finishes first,
+    /// its fresh engines are drained here too, and later swaps are
+    /// refused instead of resurrecting worker pools.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let _serialized = self.swap_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        self.retired.store(true, Ordering::Release);
+        let mut all = true;
+        for replica in &self.replicas {
+            replica.admitting.store(false, Ordering::Release);
+            all &= replica.engine().drain(timeout);
+        }
+        all
+    }
+
+    /// Deliberately freeze (or thaw) one replica's worker pool — the
+    /// degraded-replica stand-in used by the failover tests and
+    /// `cluster-bench --stall-replica` (via
+    /// [`super::bench::run_cluster_load`]). Crate-only: outside code
+    /// must never be able to stall a serving replica.
+    pub(crate) fn stall_replica(&self, id: usize, stalled: bool) {
+        self.replicas[id].engine().stall_workers(stalled);
+    }
+
+    /// Cluster counters plus the per-replica breakdown.
+    pub fn metrics(&self) -> ClusterMetrics {
+        ClusterMetrics {
+            extract: self.extract_lat.summary(),
+            enroll: self.enroll_lat.summary(),
+            verify: self.verify_lat.summary(),
+            routed: self.routed.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            exhausted: self.exhausted.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            retired_shed: self.retired_shed.load(Ordering::Relaxed),
+            retired_timeouts: self.retired_timeouts.load(Ordering::Relaxed),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| {
+                    let engine = r.engine();
+                    ReplicaMetrics {
+                        id: r.id,
+                        admitting: r.admitting.load(Ordering::Acquire),
+                        in_flight: r.in_flight.load(Ordering::Acquire),
+                        precision: engine.model().precision(),
+                        engine: engine.metrics(),
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicBool;
+
+    use super::*;
+    use crate::serve::bench::{shared_test_bundle, tiny_serve_config, tiny_traffic};
+
+    /// Generous request-path deadlines: these tests exercise routing
+    /// and swap correctness, not admission control (the failover test
+    /// tightens them explicitly).
+    fn serve_opts() -> ServeConfig {
+        ServeConfig {
+            batch_utts: 4,
+            flush_us: 300,
+            workers: 2,
+            registry_shards: 4,
+            queue_cap: 256,
+            submit_timeout_ms: 10_000,
+            request_timeout_ms: 60_000,
+            scratch_pool: 4,
+            precision: AlignPrecision::F64,
+        }
+    }
+
+    fn cluster_opts(replicas: usize, route: RoutePolicy) -> ClusterConfig {
+        ClusterConfig {
+            replicas,
+            route,
+            max_failovers: 2,
+            drain_timeout_ms: 5_000,
+            overrides: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn least_depth_prefers_the_idle_lowest_id_replica() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 11);
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::LeastDepth),
+        )
+        .unwrap();
+        // sequential requests always see both replicas idle — the tie
+        // breaks to the lowest id every time, deterministically
+        for k in 0..4 {
+            d.extract(&traffic.utterance(0, k)).unwrap();
+        }
+        let m = d.metrics();
+        assert_eq!(m.routed, 4);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.replicas[0].engine.batched_requests, 4);
+        assert_eq!(m.replicas[1].engine.batched_requests, 0);
+        assert_eq!(m.extract.count, 4);
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_across_replicas() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 13);
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+        )
+        .unwrap();
+        for k in 0..6 {
+            d.extract(&traffic.utterance(0, k)).unwrap();
+        }
+        let m = d.metrics();
+        assert_eq!(m.replicas[0].engine.batched_requests, 3);
+        assert_eq!(m.replicas[1].engine.batched_requests, 3);
+    }
+
+    /// Tentpole acceptance: a stalled replica's `Overloaded` sheds are
+    /// transparently retried on the healthy replica, and every rescued
+    /// request still matches the serial oracle to 1e-10.
+    #[test]
+    fn failover_rescues_shed_requests_bit_exactly() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 55);
+        let mut serve = serve_opts();
+        serve.queue_cap = 1;
+        serve.submit_timeout_ms = 120;
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve,
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+        )
+        .unwrap();
+
+        // freeze replica 0 and park one direct request in its queue so
+        // the queue sits at capacity — every dispatcher request routed
+        // there must now shed (deterministically) and fail over
+        d.stall_replica(0, true);
+        let stalled_engine = self::engine_of(&d, 0);
+        let filler_feats = traffic.utterance(0, 99);
+        std::thread::scope(|scope| {
+            let filler = {
+                let engine = Arc::clone(&stalled_engine);
+                let feats = &filler_feats;
+                scope.spawn(move || engine.extract(feats))
+            };
+            let t0 = Instant::now();
+            while stalled_engine.queue_len() != 1 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "filler never queued");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+
+            // round robin alternates 0,1,0,1: half the requests shed on
+            // the stalled replica and must be rescued by replica 1
+            let oracle = d.replica_model(1);
+            for k in 0..4u64 {
+                let feats = traffic.utterance((k % 2) as usize, k);
+                let got = d.extract(&feats).unwrap();
+                let want = oracle.extract_serial(&feats);
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-10 * (1.0 + w.abs()),
+                        "req {k} coord {j}: {g} vs {w}"
+                    );
+                }
+            }
+            let m = d.metrics();
+            assert_eq!(m.routed, 4);
+            assert_eq!(m.failovers, 2, "the two requests routed to the stalled replica");
+            assert_eq!(m.exhausted, 0);
+            assert_eq!(m.replicas[0].engine.shed_requests, 2);
+            assert_eq!(m.replicas[1].engine.shed_requests, 0);
+
+            // thaw: the parked filler completes bit-correctly too
+            d.stall_replica(0, false);
+            let got = filler.join().unwrap().unwrap();
+            let want = d.replica_model(0).extract_serial(&filler_feats);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "filler coord {j}: {g} vs {w}");
+            }
+        });
+    }
+
+    fn engine_of(d: &Dispatcher, id: usize) -> Arc<Engine> {
+        d.replicas[id].engine()
+    }
+
+    /// Satellite acceptance: a rolling swap under concurrent
+    /// enroll/verify traffic loses no enrollments and produces no
+    /// cross-fingerprint verifies — every request either succeeds with
+    /// an oracle-identical score or (transiently) failed over, never
+    /// a mixed-space score.
+    #[test]
+    fn rolling_swap_under_traffic_loses_nothing() {
+        let cfg = tiny_serve_config();
+        let bundle = shared_test_bundle().clone();
+        let oracle = ServeModel::new(bundle.clone());
+        // speakers 0..8 owned by worker threads; 8 is the voice of the
+        // shared contended speaker
+        let traffic = tiny_traffic(&cfg, 9, 99);
+        let d = Dispatcher::new(
+            bundle.clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::LeastDepth),
+        )
+        .unwrap();
+        let n_threads = 4usize;
+        let enroll_utts = 2usize;
+        let running = AtomicBool::new(true);
+        let scores: Mutex<Vec<(usize, f64, f64)>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|scope| {
+            // the model push: rolling swaps (value-identical bundle, so
+            // fingerprints match and profiles stay scorable) while
+            // requests are in flight
+            let swapper = {
+                let d = &d;
+                let bundle = &bundle;
+                let running = &running;
+                scope.spawn(move || {
+                    let mut swaps = 0u64;
+                    while running.load(Ordering::Relaxed) {
+                        d.swap_bundle(bundle.clone()).unwrap();
+                        swaps += 1;
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    swaps
+                })
+            };
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let d = &d;
+                    let traffic = &traffic;
+                    let scores = &scores;
+                    scope.spawn(move || {
+                        for rep in 0..2 {
+                            let spk = t * 2 + rep;
+                            let id = traffic.speaker_id(spk);
+                            for k in 0..enroll_utts {
+                                d.enroll(&id, &traffic.utterance(spk, k as u64)).unwrap();
+                            }
+                            // contended speaker: identical utterance
+                            // from every thread ⇒ exact running sum in
+                            // any interleaving
+                            d.enroll("shared", &traffic.utterance(8, 0)).unwrap();
+                            let target =
+                                d.verify(&id, &traffic.utterance(spk, 100)).unwrap();
+                            let impostor = d
+                                .verify(&id, &traffic.utterance((spk + 1) % 8, 100))
+                                .unwrap();
+                            scores.lock().unwrap().push((spk, target.score, impostor.score));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            running.store(false, Ordering::Relaxed);
+            let swaps = swapper.join().unwrap();
+            assert!(swaps >= 1, "at least one rolling swap must have run mid-traffic");
+            assert_eq!(d.metrics().swaps, swaps);
+        });
+
+        // zero lost enrollments across swaps (shared registry outlives
+        // every per-replica engine rebuild)
+        let reg = d.registry();
+        assert_eq!(reg.len(), 9, "8 per-thread speakers + the shared one");
+        assert_eq!(reg.profile("shared").unwrap().count, (n_threads * 2) as u64);
+        assert_eq!(reg.total_enrollments(), (8 * enroll_utts + n_threads * 2) as u64);
+
+        // no cross-fingerprint verifies: every score equals the
+        // single-threaded oracle (a mixed-space score could not)
+        let results = scores.into_inner().unwrap();
+        assert_eq!(results.len(), 8);
+        for (spk, target, impostor) in results {
+            let mut sum = vec![0.0; oracle.rank()];
+            for k in 0..enroll_utts {
+                let iv = oracle.extract_serial(&traffic.utterance(spk, k as u64));
+                for (s, x) in sum.iter_mut().zip(&iv) {
+                    *s += x;
+                }
+            }
+            let mean: Vec<f64> = sum.iter().map(|&x| x / enroll_utts as f64).collect();
+            let want_t =
+                oracle.score(&mean, &oracle.extract_serial(&traffic.utterance(spk, 100)));
+            let want_i = oracle.score(
+                &mean,
+                &oracle.extract_serial(&traffic.utterance((spk + 1) % 8, 100)),
+            );
+            assert!(
+                (target - want_t).abs() <= 1e-12 * (1.0 + want_t.abs()),
+                "spk {spk}: target {target} vs oracle {want_t}"
+            );
+            assert!(
+                (impostor - want_i).abs() <= 1e-12 * (1.0 + want_i.abs()),
+                "spk {spk}: impostor {impostor} vs oracle {want_i}"
+            );
+        }
+
+        // the cluster is fully back: both replicas admitting, serving
+        let m = d.metrics();
+        assert!(m.replicas.iter().all(|r| r.admitting));
+        d.extract(&traffic.utterance(0, 500)).unwrap();
+    }
+
+    /// Per-replica overrides: an f32 replica serves next to the f64
+    /// one, and a rolling swap preserves each replica's precision.
+    #[test]
+    fn per_replica_precision_overrides_serve_side_by_side() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 17);
+        let mut cluster = cluster_opts(2, RoutePolicy::RoundRobin);
+        cluster.overrides = vec![
+            crate::config::ReplicaOverride::default(),
+            crate::config::ReplicaOverride {
+                precision: Some(AlignPrecision::F32),
+                workers: Some(1),
+                batch_utts: None,
+            },
+        ];
+        let bundle = shared_test_bundle().clone();
+        let d = Dispatcher::new(bundle.clone(), &serve_opts(), &cluster).unwrap();
+        assert_eq!(d.replica_model(0).precision(), AlignPrecision::F64);
+        assert_eq!(d.replica_model(1).precision(), AlignPrecision::F32);
+
+        // both serve, and the f32 replica tracks the f64 one within the
+        // established f32 alignment tolerance
+        let feats = traffic.utterance(0, 3);
+        let f64_iv = d.replica_model(0).extract_serial(&feats);
+        let f32_iv = d.replica_model(1).extract_serial(&feats);
+        let scale = 1.0 + f64_iv.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        for (x, y) in f64_iv.iter().zip(&f32_iv) {
+            assert!((x - y).abs() < 5e-3 * scale, "{x} vs {y}");
+        }
+        for k in 0..2 {
+            d.extract(&traffic.utterance(0, k)).unwrap();
+        }
+        let m = d.metrics();
+        assert_eq!(m.replicas[0].precision, AlignPrecision::F64);
+        assert_eq!(m.replicas[1].precision, AlignPrecision::F32);
+        assert_eq!(m.replicas[0].engine.batched_requests, 1);
+        assert_eq!(m.replicas[1].engine.batched_requests, 1);
+
+        // overrides survive a rolling swap (the rebuild reapplies them)
+        d.swap_bundle(bundle).unwrap();
+        assert_eq!(d.replica_model(0).precision(), AlignPrecision::F64);
+        assert_eq!(d.replica_model(1).precision(), AlignPrecision::F32);
+    }
+
+    #[test]
+    fn drained_cluster_rejects_with_typed_shutdown() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 7);
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::LeastDepth),
+        )
+        .unwrap();
+        d.extract(&traffic.utterance(0, 0)).unwrap();
+        assert!(d.drain(Duration::from_secs(10)), "all replicas must join");
+        let err = d.extract(&traffic.utterance(0, 1)).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(typed, ServeError::ShuttingDown), "{typed:?}");
+        // the retriable rejection ran out of replicas, not silently
+        assert_eq!(d.metrics().exhausted, 1);
+        // drained is terminal: a later swap must not resurrect workers
+        let err = d.swap_bundle(shared_test_bundle().clone()).unwrap_err();
+        assert!(err.to_string().contains("drained"), "{err}");
+        assert_eq!(d.metrics().swaps, 0);
+    }
+
+    #[test]
+    fn swap_rejects_mismatched_bundle_and_keeps_serving() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 23);
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::LeastDepth),
+        )
+        .unwrap();
+        let mut bad = shared_test_bundle().clone();
+        bad.backend.centering.mean.push(0.0); // backend now expects rank+1
+        let err = d.swap_bundle(bad).unwrap_err();
+        assert!(err.to_string().contains("different extractor"), "{err}");
+        // no replica was touched: zero swaps, everyone admitting, serving
+        let m = d.metrics();
+        assert_eq!(m.swaps, 0);
+        assert!(m.replicas.iter().all(|r| r.admitting));
+        d.extract(&traffic.utterance(0, 0)).unwrap();
+    }
+}

@@ -1,0 +1,35 @@
+//! Cluster serving: N engine replicas behind one load-aware dispatcher.
+//!
+//! One [`crate::serve::Engine`] turns the paper's kernel speed into a
+//! saturating single queue; this module turns N of them into sustained
+//! multi-tenant capacity. The pieces:
+//!
+//! * [`Dispatcher`] — owns the replicas (each a full engine: worker
+//!   pool, micro-batch queue, admission control) sharing **one**
+//!   `Arc<Registry>`, and routes extract/enroll/verify requests by a
+//!   pluggable [`crate::config::RoutePolicy`]: `round_robin` cycles,
+//!   `least_depth` follows a per-replica in-flight counter plus the
+//!   live micro-batch queue depth;
+//! * **shed failover** — a typed `Overloaded` (or `ShuttingDown`)
+//!   rejection from one replica retries on the next-least-loaded
+//!   replica within the original request deadline, bounded by
+//!   `max_failovers`, so transient per-replica saturation degrades into
+//!   a retry instead of a client-visible error;
+//! * **rolling swaps** — [`Dispatcher::swap_bundle`] upgrades replicas
+//!   one at a time behind a per-replica [`crate::serve::Engine::drain`]
+//!   (stop admitting → finish in-flight batches → join workers), so a
+//!   model push never takes the whole cluster offline;
+//! * **per-replica overrides** (`[cluster.replicaN]`) — precision
+//!   f32/f64 today, the accel backend when that serving path lands —
+//!   let heterogeneous bundles serve side by side for live A/B of
+//!   extractor variants;
+//! * [`ClusterMetrics`] — cluster-level latency histograms and routing
+//!   counters over a per-replica [`crate::serve::EngineMetrics`]
+//!   breakdown;
+//! * [`bench`] — the saturation load harness behind `cluster-bench`
+//!   and the `BENCH_5.json` 1-vs-N scaling report.
+
+pub mod bench;
+mod dispatcher;
+
+pub use dispatcher::{ClusterMetrics, Dispatcher, ReplicaMetrics};

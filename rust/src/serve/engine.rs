@@ -18,7 +18,7 @@
 //! request thread forever). Shed/timeout counts and queue-depth stats
 //! are part of [`EngineMetrics`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, RecvTimeoutError};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
@@ -88,8 +88,14 @@ pub struct Engine {
     /// The current model, swapped atomically; requests snapshot the
     /// `Arc` once and stay on that snapshot end-to-end.
     model: RwLock<Arc<ServeModel>>,
-    registry: Registry,
+    /// Shared so cluster replicas can serve one speaker store
+    /// ([`Engine::with_registry`]); a standalone engine owns the only
+    /// handle.
+    registry: Arc<Registry>,
     batcher: MicroBatcher,
+    /// Set by [`Engine::drain`]: the request path fast-fails with a
+    /// typed [`ServeError::ShuttingDown`] before doing alignment work.
+    draining: AtomicBool,
     /// Admission bound: max wait for queue space before shedding.
     submit_timeout: Duration,
     /// End-to-end bound: max wait for the batched response.
@@ -114,6 +120,18 @@ impl Engine {
     /// fails here instead of panicking inside `project` on the first
     /// verify.
     pub fn new(bundle: ModelBundle, opts: &ServeConfig) -> Result<Self> {
+        Self::with_registry(bundle, opts, Arc::new(Registry::new(opts.registry_shards)))
+    }
+
+    /// [`Engine::new`] with an externally-owned speaker registry — the
+    /// cluster constructor: N replica engines share one `Arc<Registry>`
+    /// so an enrollment on any replica is visible to every replica (and
+    /// survives a per-replica drain/rebuild during a rolling swap).
+    pub fn with_registry(
+        bundle: ModelBundle,
+        opts: &ServeConfig,
+        registry: Arc<Registry>,
+    ) -> Result<Self> {
         bundle.check_backend_dims()?;
         Ok(Self {
             model: RwLock::new(Arc::new(ServeModel::with_options(
@@ -121,13 +139,14 @@ impl Engine {
                 opts.scratch_pool,
                 opts.precision,
             ))),
-            registry: Registry::new(opts.registry_shards),
+            registry,
             batcher: MicroBatcher::new(
                 opts.batch_utts,
                 Duration::from_micros(opts.flush_us),
                 opts.workers,
                 opts.queue_cap,
             ),
+            draining: AtomicBool::new(false),
             submit_timeout: Duration::from_millis(opts.submit_timeout_ms.max(1)),
             request_timeout: Duration::from_millis(opts.request_timeout_ms.max(1)),
             scratch_pool: opts.scratch_pool,
@@ -163,11 +182,56 @@ impl Engine {
         &self.registry
     }
 
+    /// A shared handle to the registry — what a cluster dispatcher
+    /// passes to the next replica ([`Engine::with_registry`]).
+    pub fn registry_handle(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Jobs currently admitted but not yet dispatched — the live load
+    /// signal a least-depth router combines with its in-flight counter
+    /// (the historical max/mean live in `EngineMetrics.queue_depth`).
+    pub fn queue_len(&self) -> usize {
+        self.batcher.queue_len()
+    }
+
+    /// Drain the engine: stop admitting (new submits fail with a typed
+    /// [`ServeError::ShuttingDown`]), let workers finish everything
+    /// already queued, and join them — bounded by `timeout`. Returns
+    /// true once every worker has been joined (false = some worker was
+    /// still mid-batch at the deadline; drop joins the stragglers).
+    /// Idempotent: a second drain returns immediately.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        self.draining.store(true, Ordering::Release);
+        self.batcher.shutdown();
+        self.batcher.join_workers(Some(Instant::now() + timeout))
+    }
+
+    /// True once [`Engine::drain`] has begun: the engine rejects new
+    /// requests and its workers are exiting (or gone).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Deliberately freeze (or thaw) this engine's worker pool — the
+    /// deterministic stand-in for a degraded replica that the failover
+    /// tests and `cluster-bench --stall-replica` use. Crate-only:
+    /// outside code must never be able to stall a serving engine.
+    pub(crate) fn stall_workers(&self, stalled: bool) {
+        self.batcher.set_stalled(stalled);
+    }
+
     /// Extraction against an explicit snapshot — the shared inner path.
     /// Deadline-bounded end to end: admission sheds past the submit
     /// deadline, and a stalled worker surfaces as a typed timeout
     /// instead of hanging this thread.
     fn extract_with(&self, model: &Arc<ServeModel>, feats: &Mat) -> Result<Vec<f64>> {
+        // a draining engine sheds before the alignment work, not after:
+        // the caller (or the dispatcher above it) retries elsewhere, so
+        // burning the loader stage here would be pure waste
+        if self.draining.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown.into());
+        }
         let t0 = Instant::now();
         let request_deadline = t0 + self.request_timeout;
         // announce before the loader work so batch workers know a
@@ -270,21 +334,25 @@ impl Engine {
     }
 }
 
+impl Drop for Engine {
+    /// Tests and short-lived CLI commands must not leak worker threads:
+    /// dropping the engine drains it (typed `ShuttingDown` for any
+    /// racing submitter, workers finish the queue and are joined). The
+    /// bound only caps the *polling* join here — `MicroBatcher`'s own
+    /// drop joins any straggler unconditionally right after.
+    fn drop(&mut self) {
+        self.drain(Duration::from_secs(5));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use std::sync::atomic::{AtomicBool, Ordering};
-    use std::sync::{Mutex, OnceLock};
+    use std::sync::Mutex;
 
-    use super::super::bench::{tiny_serve_config, tiny_traffic, train_tiny_bundle};
+    use super::super::bench::{shared_test_bundle as shared_bundle, tiny_serve_config, tiny_traffic};
     use super::*;
     use crate::ivector::extract_cpu;
-
-    /// One tiny bundle shared across the serve tests (training it takes
-    /// a few seconds; every test needs the same deterministic model).
-    fn shared_bundle() -> &'static ModelBundle {
-        static BUNDLE: OnceLock<ModelBundle> = OnceLock::new();
-        BUNDLE.get_or_init(|| train_tiny_bundle(&tiny_serve_config(), 5).unwrap())
-    }
 
     fn opts(batch_utts: usize, flush_us: u64, workers: usize) -> ServeConfig {
         ServeConfig {
@@ -763,5 +831,61 @@ mod tests {
             report.target_mean,
             report.impostor_mean
         );
+    }
+
+    /// Satellite acceptance: `drain` finishes in-flight work, joins the
+    /// worker pool, and turns every later submit into a typed
+    /// `ShuttingDown` error — and it is idempotent, so the drop path
+    /// can run it again without blocking.
+    #[test]
+    fn drain_joins_workers_and_rejects_new_submits() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 31);
+        let engine = Engine::new(shared_bundle().clone(), &opts(2, 300, 2)).unwrap();
+        let feats = traffic.utterance(0, 0);
+        let want = engine.model().extract_serial(&feats);
+
+        // a request already queued when the drain starts must complete
+        let pre_drain = std::thread::scope(|scope| {
+            let engine = &engine;
+            let feats = &feats;
+            let h = scope.spawn(move || engine.extract(feats));
+            // wait until the request is admitted (queued or dispatched)
+            let t0 = Instant::now();
+            while engine.metrics().batched_requests == 0 && engine.queue_len() == 0 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "request never queued");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert!(engine.drain(Duration::from_secs(10)), "workers must join");
+            h.join().unwrap()
+        });
+        // the in-flight request either completed bit-correctly or — if
+        // the drain flag won the race before submit — was typed-shed
+        match pre_drain {
+            Ok(got) => {
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "coord {j}: {g} vs {w}");
+                }
+            }
+            Err(e) => {
+                let typed = e.downcast_ref::<ServeError>().expect("typed serve error");
+                assert!(matches!(typed, ServeError::ShuttingDown), "{typed:?}");
+            }
+        }
+
+        assert!(engine.is_draining());
+        // new submits after drain: typed ShuttingDown, fast (no queue wait)
+        let t0 = Instant::now();
+        let err = engine.extract(&traffic.utterance(0, 1)).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(typed, ServeError::ShuttingDown), "{typed:?}");
+        assert!(!typed.is_rejection(), "shutdown is not an overload rejection");
+        assert!(t0.elapsed() < Duration::from_secs(1), "shutdown must fail fast");
+        let err = engine.enroll("spk", &traffic.utterance(0, 2)).unwrap_err();
+        assert!(err.downcast_ref::<ServeError>().is_some(), "{err}");
+
+        // idempotent: a second drain (and the drop path after it)
+        // returns immediately with nothing left to join
+        assert!(engine.drain(Duration::from_millis(10)));
     }
 }

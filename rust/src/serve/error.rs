@@ -1,13 +1,16 @@
 //! Typed serving-path failures.
 //!
 //! Admission control and deadlines turn "the engine is saturated" from
-//! an unbounded blocked thread into a *value* the caller can branch on:
-//! a load balancer retries [`ServeError::Overloaded`] on another
-//! replica, treats [`ServeError::Timeout`] as a lost request, and pages
-//! on [`ServeError::WorkerFailed`]. The variants ride inside
-//! `anyhow::Error` (every engine entry point keeps its `Result`
-//! signature) and stay reachable through `Error::downcast_ref`, even
-//! under added context.
+//! an unbounded blocked thread into a *value* the caller can branch on
+//! — and the cluster dispatcher ([`crate::serve::cluster`]) does
+//! exactly that: it retries [`ServeError::Overloaded`] and
+//! [`ServeError::ShuttingDown`] on another replica (the shed-failover
+//! path), treats [`ServeError::Timeout`] as a lost request (the
+//! deadline is already spent — retrying would double it), and
+//! propagates [`ServeError::WorkerFailed`] for paging. The variants
+//! ride inside `anyhow::Error` (every engine entry point keeps its
+//! `Result` signature) and stay reachable through
+//! `Error::downcast_ref`, even under added context.
 
 use std::fmt;
 use std::time::Duration;
@@ -66,6 +69,16 @@ impl ServeError {
     pub fn is_rejection(&self) -> bool {
         matches!(self, Self::Overloaded { .. } | Self::Timeout { .. })
     }
+
+    /// True when retrying the request elsewhere is safe *and* useful:
+    /// the request never entered a queue (`Overloaded` was shed at
+    /// admission; `ShuttingDown` was refused by a draining engine), so
+    /// another replica can still serve it within the original deadline.
+    /// `Timeout` is deliberately not retriable — its deadline is
+    /// already spent — and hard failures would fail anywhere.
+    pub fn is_retriable(&self) -> bool {
+        matches!(self, Self::Overloaded { .. } | Self::ShuttingDown)
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +96,12 @@ mod tests {
         assert!(to.is_rejection());
         assert!(!ServeError::ShuttingDown.is_rejection());
         assert!(!ServeError::WorkerFailed.is_rejection());
+        // the dispatcher's failover set: shed + draining, never a
+        // spent-deadline timeout or a hard failure
+        assert!(shed.is_retriable());
+        assert!(ServeError::ShuttingDown.is_retriable());
+        assert!(!to.is_retriable());
+        assert!(!ServeError::WorkerFailed.is_retriable());
     }
 
     #[test]

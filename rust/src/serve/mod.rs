@@ -19,11 +19,17 @@
 //!   the queue stays full) and a request deadline (`Timeout` instead of
 //!   a thread hung on a stalled worker);
 //! * [`Registry`] — sharded-lock speaker store with enrollment
-//!   averaging and `io`-format persistence;
+//!   averaging and `io`-format persistence (atomic snapshot writes);
+//! * [`cluster`] — N engine replicas behind one [`cluster::Dispatcher`]
+//!   sharing a single registry: load-aware routing, shed failover, and
+//!   rolling hot swaps (the multi-engine layer the single engine's
+//!   typed rejections were designed for);
 //! * [`bench`] — the load-replay harness behind `serve-bench` and the
-//!   `BENCH_2.json` serving report.
+//!   `BENCH_2.json` serving report (its cluster sibling lives in
+//!   [`cluster::bench`] and writes `BENCH_5.json`).
 
 pub mod bench;
+pub mod cluster;
 mod batcher;
 mod bundle;
 mod engine;
@@ -31,6 +37,7 @@ mod error;
 mod registry;
 
 pub use bundle::{ModelBundle, ServeModel};
+pub use cluster::{ClusterMetrics, Dispatcher, ReplicaMetrics};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
 pub use error::ServeError;
 pub use registry::{Registry, SpeakerProfile};

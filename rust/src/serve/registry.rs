@@ -18,7 +18,7 @@ use std::hash::{Hash, Hasher};
 use std::path::Path;
 use std::sync::{Mutex, MutexGuard};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::io::{BinReader, BinWriter};
 
@@ -150,22 +150,35 @@ impl Registry {
     /// taken per speaker before the header is written, so a concurrent
     /// `remove` between listing and reading simply drops that id from
     /// the file instead of failing the save.
+    ///
+    /// The write is **atomic at the file level**: bytes go to a fresh
+    /// temp file next to `path` (same directory — `rename(2)` is only
+    /// atomic within one filesystem) which is renamed into place once
+    /// fully written. A crash mid-save therefore leaves the previous
+    /// snapshot intact instead of a truncated file — the durability
+    /// floor the future enrollment WAL will compact into.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
         let snapshot: Vec<(String, SpeakerProfile)> = self
             .speaker_ids()
             .into_iter()
             .filter_map(|id| self.profile(&id).map(|p| (id, p)))
             .collect();
-        let mut w = BinWriter::create(path)?;
-        w.write_u64(snapshot.len() as u64)?;
-        for (id, p) in &snapshot {
-            w.write_string(id)?;
-            w.write_u64(p.count)?;
-            w.write_u64(p.model_fp)?;
-            w.write_u64(p.sum.len() as u64)?;
-            w.write_f64_slice(&p.sum)?;
+        // unique per (process, save): concurrent saves to one path must
+        // not scribble over each other's half-written temp file
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "registry".into());
+        let tmp = path.with_file_name(format!(".{name}.tmp.{}.{seq}", std::process::id()));
+        let write = write_snapshot_then_rename(&snapshot, &tmp, path);
+        if write.is_err() {
+            // best effort: never leave a half-written temp file behind
+            let _ = std::fs::remove_file(&tmp);
         }
-        w.finish()
+        write
     }
 
     /// Load a registry written by [`Registry::save`], distributing the
@@ -201,6 +214,42 @@ impl Registry {
         }
         Ok(reg)
     }
+}
+
+/// [`Registry::save`]'s write stage: serialize the snapshot into `tmp`
+/// and rename it over `path` — split out so the caller can clean up the
+/// temp file on any failure along the way.
+fn write_snapshot_then_rename(
+    snapshot: &[(String, SpeakerProfile)],
+    tmp: &Path,
+    path: &Path,
+) -> Result<()> {
+    let mut w = BinWriter::create(tmp)?;
+    w.write_u64(snapshot.len() as u64)?;
+    for (id, p) in snapshot {
+        w.write_string(id)?;
+        w.write_u64(p.count)?;
+        w.write_u64(p.model_fp)?;
+        w.write_u64(p.sum.len() as u64)?;
+        w.write_f64_slice(&p.sum)?;
+    }
+    // fsync before the rename: the swap is only crash-atomic if the
+    // temp file's data blocks reach stable storage before the rename
+    // is journaled
+    w.finish_synced()?;
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("rename {} into place", tmp.display()))?;
+    // best effort: persist the directory entry too, so the rename
+    // itself survives a power loss (failure here leaves the old,
+    // intact snapshot — not corruption — so it is not fatal)
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -352,6 +401,49 @@ mod tests {
         assert_eq!(back.len(), 2);
         assert_eq!(back.profile("a").unwrap(), reg.profile("a").unwrap());
         assert_eq!(back.profile("b").unwrap(), reg.profile("b").unwrap());
+    }
+
+    /// Satellite acceptance: `save` goes through a same-directory temp
+    /// file renamed into place — an interrupted save can no longer
+    /// truncate the only snapshot, an overwrite is all-or-nothing, and
+    /// no temp files are left behind.
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join("ivtv_registry_atomic_test");
+        // fresh dir: the leftover-file assertion below must see only
+        // what this test writes
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("reg.bin");
+
+        let reg = Registry::new(3);
+        reg.enroll("a", &[1.0, 2.0], FP).unwrap();
+        reg.save(&p).unwrap();
+
+        // overwrite with a bigger registry: the target is replaced wholesale
+        reg.enroll("b", &[3.0, 4.0], FP).unwrap();
+        reg.enroll("c", &[5.0, 6.0], FP).unwrap();
+        reg.save(&p).unwrap();
+        let back = Registry::load(&p, 2).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.profile("c").unwrap().sum, vec![5.0, 6.0]);
+
+        // nothing but the snapshot itself remains in the directory
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "reg.bin")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+
+        // a failed save (unwritable target directory) reports an error
+        // and leaves the existing snapshot untouched
+        let bad = dir.join("no_such_subdir_parent.bin");
+        std::fs::write(&bad, b"sentinel").unwrap();
+        let unwritable = bad.join("reg.bin"); // parent is a file → create fails
+        assert!(reg.save(&unwritable).is_err());
+        let still = Registry::load(&p, 2).unwrap();
+        assert_eq!(still.len(), 3, "failed save must not touch the good snapshot");
     }
 
     #[test]
