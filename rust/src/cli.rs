@@ -38,6 +38,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "verify" => commands::verify(&args),
         "serve-bench" => commands::serve_bench(&args),
         "cluster-bench" => commands::cluster_bench(&args),
+        "registry-recover" => commands::registry_recover(&args),
+        "registry-bench" => commands::registry_bench(&args),
         "smoke" => commands::smoke(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -69,7 +71,8 @@ COMMANDS:
   bundle     pack UBM+TVM+backend into work/bundle.bin for serving
   verify     online enroll/verify traffic vs a bundle (--work, --config,
              --speakers, --enroll-utts, --trials, --concurrency,
-             --save-registry PATH)
+             --save-registry PATH, --registry DIR for a durable
+             WAL-backed speaker store — see `[registry]` in the config)
   serve-bench  sustained verify load, micro-batched vs unbatched;
              writes BENCH_2.json (--requests, --concurrency, --speakers,
              --enroll-utts, --work | tiny in-process bundle, --out,
@@ -79,6 +82,14 @@ COMMANDS:
              --swap-mid-run, --stall-replica K, --live-enroll-every,
              --requests, --concurrency, --speakers, --enroll-utts,
              --work | tiny in-process bundle, --out)
+  registry-recover  open a durable registry dir, report what recovery
+             found (snapshot/replayed/torn tail), optionally compact
+             (--dir PATH, --shards, --sync, --compact-every, --compact)
+  registry-bench  crash/recovery drill: enroll synthetic speakers
+             through the WAL, kill persistence mid-stream, recover, and
+             audit for lost enrollments; writes BENCH_6.json
+             (--speakers, --dim, --shards, --sync, --compact-every,
+             --crash-at, --dir, --out)
   smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
 
 Flags not listed above: --artifacts DIR (default ./artifacts),

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, WalSync};
 use crate::frontend::synth::TrafficGen;
 use crate::metrics::Stopwatch;
 use crate::serve::bench::{
@@ -15,7 +15,13 @@ use crate::serve::cluster::bench::{
     cluster_bench_config, run_cluster_load, saturation_serve_config, write_bench5_json,
     ClusterBenchOpts, ClusterBenchReport,
 };
-use crate::serve::{Dispatcher, Engine, ModelBundle};
+use crate::serve::registry::bench::{
+    run_registry_bench, write_bench6_json, RegistryBenchOpts,
+};
+use crate::serve::registry::{FileStorage, RegistryStorage};
+use crate::serve::{
+    Dispatcher, DurableRegistry, DurableRegistryOptions, Engine, ModelBundle,
+};
 
 use super::Args;
 
@@ -97,6 +103,7 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
         "{name}: {}/{} requests completed @ {} clients in {:.2}s = {:.0} req/s | \
          p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | mean batch {:.2} | \
          shed {} timeout {} | queue depth max {} mean {:.1} | \
+         wal {} compactions {} torn {} | \
          score target {:.2} vs impostor {:.2}",
         r.completed_requests,
         r.requests,
@@ -111,6 +118,9 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
         r.timed_out_requests,
         r.queue_depth_max,
         r.queue_depth_mean,
+        r.wal_appends,
+        r.compactions,
+        r.torn_tail,
         r.target_mean,
         r.impostor_mean,
     );
@@ -118,6 +128,9 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
 
 /// `verify` — enroll/verify synthetic traffic against a trained bundle
 /// through the serving engine (the online counterpart of `eval`).
+/// `--registry DIR` (or `[registry] path` in the config) puts the
+/// speaker store on the durable WAL-backed backend: enrollments survive
+/// a crash and are recovered on the next run.
 pub fn verify(args: &Args) -> Result<()> {
     let cfg = match args.get("config") {
         Some(path) => Config::load(&path)?,
@@ -130,10 +143,29 @@ pub fn verify(args: &Args) -> Result<()> {
     let concurrency = args.get_parse_or("concurrency", 4usize)?;
     let seed = args.get_parse_or("seed", 7u64)?;
     let save_registry = args.get("save-registry");
+    let registry_dir = args.get("registry").or_else(|| cfg.registry.path.clone());
     args.finish()?;
 
     let bundle = ModelBundle::load_auto(&work, &cfg)?;
-    let engine = Engine::new(bundle, &cfg.serve)?;
+    let engine = match &registry_dir {
+        Some(dir) => {
+            let dopts =
+                DurableRegistryOptions::from_config(&cfg.registry, cfg.serve.registry_shards);
+            let durable = DurableRegistry::open(dir, &dopts)?;
+            let rec = durable.recovery();
+            println!(
+                "registry: durable at {dir} — recovered {} speakers \
+                 (snapshot seq {}, {} WAL records replayed{}) in {:.3}s",
+                rec.speakers,
+                rec.snapshot_seq,
+                rec.replayed,
+                if rec.torn_tail { ", torn tail truncated" } else { "" },
+                rec.wall_s,
+            );
+            Engine::with_registry(bundle, &cfg.serve, durable.handle())?
+        }
+        None => Engine::new(bundle, &cfg.serve)?,
+    };
     let traffic = TrafficGen::new(&cfg.corpus, speakers, seed);
     let report = run_verify_load(
         &engine,
@@ -252,7 +284,8 @@ fn print_cluster_report(name: &str, r: &ClusterBenchReport) {
         "{name}: {} replicas ({}) | {}/{} requests completed in {:.2}s = {:.0} req/s | \
          p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | \
          failovers {} exhausted {} | engine shed {} timeouts {} | swaps {} | \
-         enrollments acked {} lost {} | score target {:.2} vs impostor {:.2}",
+         enrollments acked {} lost {} | wal {} compactions {} torn {} | \
+         score target {:.2} vs impostor {:.2}",
         r.replicas,
         r.route,
         r.completed,
@@ -269,6 +302,9 @@ fn print_cluster_report(name: &str, r: &ClusterBenchReport) {
         r.swaps,
         r.acked_enrollments,
         r.lost_enrollments,
+        r.wal_appends,
+        r.compactions,
+        r.torn_tail,
         r.target_mean,
         r.impostor_mean,
     );
@@ -395,5 +431,108 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
         ],
     )?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn parse_sync(args: &Args, default: WalSync) -> Result<WalSync> {
+    match args.get("sync") {
+        Some(s) => WalSync::parse(&s),
+        None => Ok(default),
+    }
+}
+
+/// `registry-recover` — open a durable registry directory, run
+/// recovery (snapshot + WAL replay, torn-tail truncation), and report
+/// what was found. `--compact` then folds the replayed WAL into a
+/// fresh snapshot, so the next open replays nothing. Exits nonzero on
+/// mid-log corruption — recovery refuses to guess past it.
+pub fn registry_recover(args: &Args) -> Result<()> {
+    let dir = args.require("dir")?;
+    let shards = args.get_parse_or("shards", 16usize)?;
+    let sync = parse_sync(args, WalSync::Always)?;
+    let compact_every = args.get_parse_or("compact-every", 10_000u64)?;
+    let do_compact = args.switch("compact");
+    args.finish()?;
+
+    let opts = DurableRegistryOptions { shards, wal: true, sync, compact_every };
+    let reg = DurableRegistry::open(&dir, &opts)?;
+    let rec = reg.recovery();
+    println!(
+        "registry-recover: {dir}\n\
+         snapshot: {} (covers WAL seq {})\n\
+         replayed: {} WAL records ({} already in the snapshot, skipped)\n\
+         torn tail: {}\n\
+         state: {} speakers, {} enrollments, recovered in {:.3}s",
+        if rec.snapshot_loaded { "loaded" } else { "none" },
+        rec.snapshot_seq,
+        rec.replayed,
+        rec.skipped,
+        if rec.torn_tail { "yes — truncated" } else { "no" },
+        rec.speakers,
+        rec.enrollments,
+        rec.wall_s,
+    );
+    if do_compact {
+        reg.compact()?;
+        println!("compacted: WAL folded into the snapshot");
+    }
+    Ok(())
+}
+
+/// `registry-bench` — the crash/recovery drill behind `BENCH_6.json`:
+/// enroll `--speakers` synthetic speakers through the WAL on the real
+/// file backend, kill persistence mid-append at `--crash-at` via the
+/// deterministic fault injector, reopen, and audit every acknowledged
+/// enrollment. A single lost acknowledgment fails the run — that is
+/// the guarantee the durable registry exists to keep.
+pub fn registry_bench(args: &Args) -> Result<()> {
+    let speakers = args.get_parse_or("speakers", 100_000usize)?;
+    let dim = args.get_parse_or("dim", 64usize)?;
+    let shards = args.get_parse_or("shards", 16usize)?;
+    let sync = parse_sync(args, WalSync::Always)?;
+    let compact_every = args.get_parse_or("compact-every", 20_000u64)?;
+    let crash_at = args.get_parse_or("crash-at", speakers / 2)?;
+    let dir = args.get_or("dir", "./work/registry-bench");
+    let out = args.get_or("out", "BENCH_6.json");
+    args.finish()?;
+
+    // the drill needs empty persistent state: a survivor from a prior
+    // run would replay into the audit and corrupt the counts
+    if std::path::Path::new(&dir).exists() {
+        std::fs::remove_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("wipe bench dir {dir}: {e}"))?;
+    }
+    let opts = RegistryBenchOpts { speakers, dim, shards, sync, compact_every, crash_at };
+    println!(
+        "registry-bench: {speakers} speakers (dim {dim}), sync {}, \
+         compact every {compact_every}, crash at enrollment {crash_at} — {dir}",
+        opts.sync,
+    );
+    let dir_for_factory = dir.clone();
+    let report = run_registry_bench(&opts, move || {
+        Ok(Box::new(FileStorage::open(&dir_for_factory)?) as Box<dyn RegistryStorage>)
+    })?;
+    println!(
+        "enroll: {:.0}/s volatile vs {:.0}/s durable ({:.2}x fsync overhead, sync {})",
+        report.mem_enroll_rps, report.wal_enroll_rps, report.fsync_overhead_x, report.wal_sync,
+    );
+    println!(
+        "crash: {} acked, {} recovered, {} lost | torn tail {} | \
+         {} replayed over {} compactions | recovery {:.3}s",
+        report.acked,
+        report.recovered,
+        report.lost,
+        report.torn_tail,
+        report.replayed,
+        report.compactions,
+        report.recovery_s,
+    );
+    write_bench6_json(&out, &report)?;
+    println!("wrote {out}");
+    anyhow::ensure!(
+        report.lost == 0,
+        "{} acknowledged enrollments lost after recovery — the durability guarantee is broken",
+        report.lost
+    );
     Ok(())
 }

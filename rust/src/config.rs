@@ -252,6 +252,61 @@ pub struct ServeConfig {
     pub precision: AlignPrecision,
 }
 
+/// WAL fsync policy of the durable speaker registry (`[registry] sync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalSync {
+    /// Fsync after every record — an acknowledged mutation is on stable
+    /// storage before the caller sees `Ok`.
+    Always,
+    /// Fsync after every N records — higher enrollment throughput, but
+    /// a crash may lose up to N-1 acknowledged-but-unsynced mutations.
+    EveryN(u64),
+}
+
+impl WalSync {
+    /// Parse the config/CLI spelling: `"always"`, or an integer ≥ 1
+    /// (where 1 is just `always`).
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "always" {
+            return Ok(Self::Always);
+        }
+        match s.parse::<u64>() {
+            Ok(0) => bail!("sync interval must be >= 1 (or \"always\"), got 0"),
+            Ok(1) => Ok(Self::Always),
+            Ok(n) => Ok(Self::EveryN(n)),
+            Err(_) => bail!("sync must be \"always\" or an integer >= 1, got `{s}`"),
+        }
+    }
+}
+
+impl std::fmt::Display for WalSync {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Always => f.write_str("always"),
+            Self::EveryN(n) => write!(f, "every-{n}"),
+        }
+    }
+}
+
+/// Durable speaker-registry parameters (`[registry]`,
+/// [`crate::serve::registry`]): storage location, WAL policy, and the
+/// compaction threshold.
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Directory holding `registry.wal` + `registry.snap`. `None`
+    /// (default) keeps the registry volatile — the pre-durability
+    /// behaviour.
+    pub path: Option<String>,
+    /// Write-ahead-log mutations (`false` = snapshot-only durability:
+    /// mutations after the last compaction die with the process).
+    pub wal: bool,
+    /// WAL fsync policy.
+    pub sync: WalSync,
+    /// Compact the WAL into a snapshot after this many records
+    /// (0 = never compact automatically).
+    pub compact_every: u64,
+}
+
 /// How the cluster dispatcher picks a replica for each request
 /// (`[cluster] route`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -366,6 +421,7 @@ pub struct Config {
     pub trials: TrialConfig,
     pub serve: ServeConfig,
     pub cluster: ClusterConfig,
+    pub registry: RegistryConfig,
 }
 
 impl Config {
@@ -429,6 +485,12 @@ impl Config {
                 max_failovers: 2,
                 drain_timeout_ms: 5_000,
                 overrides: Vec::new(),
+            },
+            registry: RegistryConfig {
+                path: None,
+                wal: true,
+                sync: WalSync::Always,
+                compact_every: 10_000,
             },
         }
     }
@@ -506,6 +568,38 @@ impl Config {
                 );
             }
         }
+        // `[registry]` durability knobs. `sync` accepts either spelling
+        // the TOML-subset parser produces: a bare integer (every-N) or
+        // the string "always".
+        let registry_sync = if doc.has("registry.sync") {
+            match doc.get_usize("registry.sync", 0) {
+                Ok(n) => WalSync::parse(&n.to_string()).context("registry.sync")?,
+                Err(_) => WalSync::parse(&doc.get_str("registry.sync", "")?)
+                    .context("registry.sync")?,
+            }
+        } else {
+            d.registry.sync
+        };
+        // a typo'd `[registry]` key would silently fall back to the
+        // default — surface it like the per-replica overrides above
+        for key in doc.keys_with_prefix("registry.") {
+            let field = &key["registry.".len()..];
+            if !matches!(field, "path" | "wal" | "sync" | "compact_every") {
+                bail!(
+                    "config key `{key}`: unknown [registry] field `{field}` \
+                     (supported: path, wal, sync, compact_every)"
+                );
+            }
+        }
+        let registry_path = doc.get_str("registry.path", "")?;
+        let registry = RegistryConfig {
+            path: if registry_path.is_empty() { None } else { Some(registry_path) },
+            wal: doc.get_bool("registry.wal", d.registry.wal)?,
+            sync: registry_sync,
+            compact_every: doc
+                .get_usize("registry.compact_every", d.registry.compact_every as usize)?
+                as u64,
+        };
         Ok(Self {
             corpus: CorpusConfig {
                 n_train_speakers: doc.get_usize("corpus.n_train_speakers", d.corpus.n_train_speakers)?,
@@ -575,6 +669,7 @@ impl Config {
                     as u64,
                 overrides,
             },
+            registry,
         })
     }
 
@@ -755,6 +850,49 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("leading zeros"), "{err:#}");
+    }
+
+    #[test]
+    fn registry_section_defaults_and_overrides() {
+        // defaults: volatile (no path), WAL on, sync always
+        let cfg = Config::from_doc(&Doc::parse("[tvm]\nrank = 16\n").unwrap()).unwrap();
+        assert_eq!(cfg.registry.path, None);
+        assert!(cfg.registry.wal);
+        assert_eq!(cfg.registry.sync, WalSync::Always);
+        assert_eq!(cfg.registry.compact_every, 10_000);
+
+        // full section, integer sync spelling
+        let cfg = Config::from_doc(
+            &Doc::parse(
+                "[registry]\npath = \"./work/registry\"\nwal = true\n\
+                 sync = 64\ncompact_every = 5000\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.registry.path.as_deref(), Some("./work/registry"));
+        assert_eq!(cfg.registry.sync, WalSync::EveryN(64));
+        assert_eq!(cfg.registry.compact_every, 5000);
+
+        // string sync spelling, and 1 normalizes to always
+        let cfg = Config::from_doc(
+            &Doc::parse("[registry]\nsync = \"always\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.registry.sync, WalSync::Always);
+        assert_eq!(WalSync::parse("1").unwrap(), WalSync::Always);
+        assert_eq!(WalSync::EveryN(8).to_string(), "every-8");
+
+        // bad values and typo'd keys are nameable errors, not silence
+        let err = Config::from_doc(&Doc::parse("[registry]\nsync = 0\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("registry.sync"), "{err:#}");
+        let err = Config::from_doc(&Doc::parse("[registry]\nsync = \"never\"\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("registry.sync"), "{err:#}");
+        let err = Config::from_doc(&Doc::parse("[registry]\nsink = 4\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown [registry] field"), "{err:#}");
     }
 
     #[test]

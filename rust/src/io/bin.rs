@@ -6,8 +6,12 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-const MAGIC: &[u8; 4] = b"IVTV";
-const VERSION: u32 = 1;
+/// Container magic every artifact in this repo shares. Crate-visible so
+/// format-aware readers (the registry snapshot codec) can recognise the
+/// container without going through a `BinReader`.
+pub(crate) const MAGIC: &[u8; 4] = b"IVTV";
+/// Container format version stamped after [`MAGIC`].
+pub(crate) const VERSION: u32 = 1;
 
 /// Buffered writer that stamps the container header on creation.
 pub struct BinWriter {

@@ -12,6 +12,7 @@ mod archive;
 
 pub use archive::{FeatArchive, PostArchive, Posting, Utterance, UttPosts};
 pub use bin::{BinReader, BinWriter};
+pub(crate) use bin::{MAGIC as CONTAINER_MAGIC, VERSION as CONTAINER_VERSION};
 
 use std::path::Path;
 

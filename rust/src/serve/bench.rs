@@ -168,6 +168,14 @@ pub struct ServeBenchReport {
     pub queue_depth_max: u64,
     /// Mean post-enqueue queue depth over admitted requests.
     pub queue_depth_mean: f64,
+    /// Registry WAL records appended during the run (0 on a volatile
+    /// registry).
+    pub wal_appends: u64,
+    /// Registry compactions (WAL → snapshot) completed during the run.
+    pub compactions: u64,
+    /// Torn WAL tails detected when the engine's registry was opened
+    /// (nonzero means this run started from a crash recovery).
+    pub torn_tail: u64,
     pub target_mean: f64,
     pub impostor_mean: f64,
 }
@@ -180,6 +188,7 @@ impl ServeBenchReport {
 \"throughput_rps\": {:.2}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \
 \"mean_ms\": {:.4}, \"max_ms\": {:.4}, \"mean_batch\": {:.3}, \
 \"shed\": {}, \"timeouts\": {}, \"queue_depth_max\": {}, \"queue_depth_mean\": {:.2}, \
+\"wal_appends\": {}, \"compactions\": {}, \"torn_tail\": {}, \
 \"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
             self.requests,
             self.completed_requests,
@@ -196,6 +205,9 @@ impl ServeBenchReport {
             self.timed_out_requests,
             self.queue_depth_max,
             self.queue_depth_mean,
+            self.wal_appends,
+            self.compactions,
+            self.torn_tail,
             self.target_mean,
             self.impostor_mean,
         )
@@ -313,6 +325,9 @@ pub fn run_verify_load(
         timed_out_requests: m.timed_out_requests,
         queue_depth_max: m.queue_depth.max,
         queue_depth_mean: m.queue_depth.mean,
+        wal_appends: m.durability.wal_appends,
+        compactions: m.durability.compactions,
+        torn_tail: m.durability.torn_tail,
         target_mean: if total.target_n > 0 {
             total.target_sum / total.target_n as f64
         } else {
@@ -399,6 +414,9 @@ mod tests {
             timed_out_requests: 1,
             queue_depth_max: 12,
             queue_depth_mean: 4.5,
+            wal_appends: 8,
+            compactions: 1,
+            torn_tail: 0,
             target_mean: 3.0,
             impostor_mean: -2.0,
         };
@@ -410,6 +428,9 @@ mod tests {
         assert!(frag.contains("\"timeouts\": 1"), "{frag}");
         assert!(frag.contains("\"queue_depth_max\": 12"), "{frag}");
         assert!(frag.contains("\"queue_depth_mean\": 4.50"), "{frag}");
+        assert!(frag.contains("\"wal_appends\": 8"), "{frag}");
+        assert!(frag.contains("\"compactions\": 1"), "{frag}");
+        assert!(frag.contains("\"torn_tail\": 0"), "{frag}");
 
         let dir = std::env::temp_dir().join("ivtv_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -121,6 +121,14 @@ pub struct ClusterBenchReport {
     /// Acked enrollments missing from the registry after the run —
     /// the rolling-swap acceptance requires exactly 0.
     pub lost_enrollments: i64,
+    /// Registry WAL records appended during the run (0 on a volatile
+    /// cluster registry).
+    pub wal_appends: u64,
+    /// Registry compactions (WAL → snapshot) completed during the run.
+    pub compactions: u64,
+    /// Torn WAL tails detected when the cluster registry was opened
+    /// (nonzero means the run started from a crash recovery).
+    pub torn_tail: u64,
     pub target_mean: f64,
     pub impostor_mean: f64,
 }
@@ -134,6 +142,7 @@ impl ClusterBenchReport {
 \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \
 \"failovers\": {}, \"exhausted\": {}, \"shed\": {}, \"timeouts\": {}, \"swaps\": {}, \
 \"acked_enrollments\": {}, \"lost_enrollments\": {}, \
+\"wal_appends\": {}, \"compactions\": {}, \"torn_tail\": {}, \
 \"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
             self.replicas,
             self.route,
@@ -152,6 +161,9 @@ impl ClusterBenchReport {
             self.swaps,
             self.acked_enrollments,
             self.lost_enrollments,
+            self.wal_appends,
+            self.compactions,
+            self.torn_tail,
             self.target_mean,
             self.impostor_mean,
         )
@@ -341,6 +353,9 @@ pub fn run_cluster_load(
         swaps: m.swaps,
         acked_enrollments: acked,
         lost_enrollments: acked as i64 - dispatcher.registry().total_enrollments() as i64,
+        wal_appends: m.durability.wal_appends,
+        compactions: m.durability.compactions,
+        torn_tail: m.durability.torn_tail,
         target_mean: if total.target_n > 0 {
             total.target_sum / total.target_n as f64
         } else {
@@ -464,6 +479,9 @@ mod tests {
             swaps: 1,
             acked_enrollments: 20,
             lost_enrollments: 0,
+            wal_appends: 20,
+            compactions: 0,
+            torn_tail: 0,
             target_mean: 3.0,
             impostor_mean: -2.0,
         };
@@ -474,6 +492,8 @@ mod tests {
         assert!(frag.contains("\"p99_ms\": 6.0000"), "{frag}");
         assert!(frag.contains("\"failovers\": 7"), "{frag}");
         assert!(frag.contains("\"lost_enrollments\": 0"), "{frag}");
+        assert!(frag.contains("\"wal_appends\": 20"), "{frag}");
+        assert!(frag.contains("\"torn_tail\": 0"), "{frag}");
 
         let dir = std::env::temp_dir().join("ivtv_bench5_json_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -34,7 +34,8 @@ use crate::gmm::AlignPrecision;
 use crate::linalg::Mat;
 use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::serve::{
-    Engine, EngineMetrics, ModelBundle, Registry, ServeError, ServeModel, VerifyOutcome,
+    DurabilityMetrics, Engine, EngineMetrics, ModelBundle, Registry, ServeError, ServeModel,
+    VerifyOutcome,
 };
 
 /// One replica slot: the engine (replaced wholesale by a rolling swap)
@@ -121,6 +122,10 @@ pub struct ClusterMetrics {
     /// (their replacements restart at zero).
     pub retired_shed: u64,
     pub retired_timeouts: u64,
+    /// Durability counters of the shared registry (zeros on a volatile
+    /// cluster). One registry, one WAL: these are cluster-wide however
+    /// many replicas routed the mutations.
+    pub durability: DurabilityMetrics,
     pub replicas: Vec<ReplicaMetrics>,
 }
 
@@ -203,6 +208,20 @@ impl Dispatcher {
     /// `[cluster.replicaN]` overrides applied.
     pub fn new(bundle: ModelBundle, serve: &ServeConfig, cluster: &ClusterConfig) -> Result<Self> {
         let registry = Arc::new(Registry::new(serve.registry_shards));
+        Self::with_registry(bundle, serve, cluster, registry)
+    }
+
+    /// Like [`Dispatcher::new`], but every replica shares the *given*
+    /// registry — typically a [`crate::serve::DurableRegistry`] handle,
+    /// so one WAL underlies the whole cluster: an enrollment routed to
+    /// any replica is logged once, immediately scorable everywhere, and
+    /// survives both rolling swaps and process crashes.
+    pub fn with_registry(
+        bundle: ModelBundle,
+        serve: &ServeConfig,
+        cluster: &ClusterConfig,
+        registry: Arc<Registry>,
+    ) -> Result<Self> {
         let n = cluster.replicas.max(1);
         let mut replicas = Vec::with_capacity(n);
         for id in 0..n {
@@ -476,6 +495,7 @@ impl Dispatcher {
             swaps: self.swaps.load(Ordering::Relaxed),
             retired_shed: self.retired_shed.load(Ordering::Relaxed),
             retired_timeouts: self.retired_timeouts.load(Ordering::Relaxed),
+            durability: self.registry.durability_metrics(),
             replicas: self
                 .replicas
                 .iter()
@@ -823,6 +843,75 @@ mod tests {
         let err = d.swap_bundle(shared_test_bundle().clone()).unwrap_err();
         assert!(err.to_string().contains("drained"), "{err}");
         assert_eq!(d.metrics().swaps, 0);
+    }
+
+    /// Durable cluster: every replica shares one [`DurableRegistry`]
+    /// handle, so enrollments routed to *different* replicas land in
+    /// the same WAL — and all of them survive a full cluster teardown
+    /// and reopen, after which a fresh cluster serves the recovered
+    /// profiles verbatim.
+    #[test]
+    fn cluster_on_durable_registry_survives_reopen() {
+        use crate::config::WalSync;
+        use crate::serve::registry::MemStorage;
+        use crate::serve::{DurableRegistry, DurableRegistryOptions};
+
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 4, 77);
+        let store = MemStorage::new();
+        let dopts = DurableRegistryOptions {
+            shards: 4,
+            wal: true,
+            sync: WalSync::Always,
+            compact_every: 0,
+        };
+        let durable =
+            DurableRegistry::with_storage(Box::new(store.clone()), &dopts).unwrap();
+        let d = Dispatcher::with_registry(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+            durable.handle(),
+        )
+        .unwrap();
+
+        // round robin spreads the four enrollments over both replicas;
+        // the shared WAL records all of them regardless of the route
+        let mut want = Vec::new();
+        for spk in 0..4 {
+            let id = traffic.speaker_id(spk);
+            d.enroll(&id, &traffic.utterance(spk, 0)).unwrap();
+            want.push((id.clone(), d.registry().profile(&id).unwrap()));
+        }
+        let m = d.metrics();
+        assert_eq!(m.durability.wal_appends, 4, "one WAL record per enrollment");
+        assert_eq!(m.durability.wal_synced, 4, "sync policy is `always`");
+        assert!(
+            m.replicas[0].engine.batched_requests > 0
+                && m.replicas[1].engine.batched_requests > 0,
+            "both replicas must have routed enrollments into the one WAL"
+        );
+        assert!(d.drain(Duration::from_secs(10)));
+        drop(d);
+        drop(durable);
+
+        // "process restart": recover from the shared storage alone,
+        // then serve the recovered profiles from a brand-new cluster
+        let back = DurableRegistry::with_storage(Box::new(store.clone()), &dopts).unwrap();
+        assert_eq!(back.recovery().replayed, 4);
+        for (id, profile) in &want {
+            assert_eq!(back.profile(id).as_ref(), Some(profile), "{id}");
+        }
+        let d2 = Dispatcher::with_registry(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+            back.handle(),
+        )
+        .unwrap();
+        let outcome = d2.verify(&want[0].0, &traffic.utterance(0, 0)).unwrap();
+        assert!(outcome.score.is_finite());
+        assert_eq!(d2.metrics().durability.replayed, 4);
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //!   a thread hung on a stalled worker);
 //! * [`Registry`] — sharded-lock speaker store with enrollment
 //!   averaging and `io`-format persistence (atomic snapshot writes);
+//!   [`DurableRegistry`] layers an enrollment write-ahead log and
+//!   crash-safe compaction underneath it ([`registry`]), behind the
+//!   pluggable [`registry::RegistryStorage`] backend trait with a
+//!   deterministic fault injector for crash drills;
 //! * [`cluster`] — N engine replicas behind one [`cluster::Dispatcher`]
 //!   sharing a single registry: load-aware routing, shed failover, and
 //!   rolling hot swaps (the multi-engine layer the single engine's
@@ -34,10 +38,13 @@ mod batcher;
 mod bundle;
 mod engine;
 mod error;
-mod registry;
+pub mod registry;
 
 pub use bundle::{ModelBundle, ServeModel};
 pub use cluster::{ClusterMetrics, Dispatcher, ReplicaMetrics};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
 pub use error::ServeError;
-pub use registry::{Registry, SpeakerProfile};
+pub use registry::{
+    DurabilityMetrics, DurableRegistry, DurableRegistryOptions, RecoveryReport, Registry,
+    SpeakerProfile,
+};

@@ -1,0 +1,302 @@
+//! Crash/recovery benchmark for the durable registry — the machinery
+//! behind the `registry-bench` CLI command and `BENCH_6.json`.
+//!
+//! Three phases:
+//!
+//! 1. **baseline** — enroll the whole synthetic population into a
+//!    volatile registry (pure in-memory rate, the fsync-free ceiling);
+//! 2. **durable + crash** — enroll the same population through the WAL
+//!    with a [`FaultInjector`] scripted to kill persistence mid-stream
+//!    (torn append, then the backend is dead), counting exactly which
+//!    enrollments were *acknowledged*;
+//! 3. **recover** — reopen on a fresh storage handle, time recovery,
+//!    and verify every acknowledged enrollment is present with exactly
+//!    the vector it enrolled. `lost > 0` fails the bench: that is the
+//!    headline guarantee.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::WalSync;
+use crate::metrics::Stopwatch;
+
+use super::durable::{DurableRegistry, DurableRegistryOptions};
+use super::storage::{FaultInjector, RegistryStorage};
+use super::Registry;
+
+/// Model fingerprint the synthetic enrollments carry.
+const BENCH_FP: u64 = 0x1_5EED;
+
+/// Crash/recovery bench parameters.
+#[derive(Debug, Clone)]
+pub struct RegistryBenchOpts {
+    /// Synthetic speakers to enroll (one utterance each).
+    pub speakers: usize,
+    /// I-vector dimension of each enrollment.
+    pub dim: usize,
+    /// Lock shards for the in-memory map.
+    pub shards: usize,
+    /// WAL sync policy under test.
+    pub sync: WalSync,
+    /// Compaction threshold (records between snapshots; 0 = never).
+    pub compact_every: u64,
+    /// Enrollment index at which persistence dies mid-append. Values at
+    /// or past `speakers` mean the crash never fires.
+    pub crash_at: usize,
+}
+
+impl Default for RegistryBenchOpts {
+    fn default() -> Self {
+        Self {
+            speakers: 100_000,
+            dim: 64,
+            shards: 16,
+            sync: WalSync::Always,
+            compact_every: 20_000,
+            crash_at: 50_000,
+        }
+    }
+}
+
+/// One crash/recovery run's results.
+#[derive(Debug, Clone)]
+pub struct RegistryBenchReport {
+    pub speakers: usize,
+    pub dim: usize,
+    /// Sync policy the run used (`always` / `every-N`).
+    pub wal_sync: String,
+    /// Volatile (no-WAL) enrollment rate — the fsync-free ceiling.
+    pub mem_enroll_rps: f64,
+    /// Durable enrollment rate up to the crash.
+    pub wal_enroll_rps: f64,
+    /// `mem_enroll_rps / wal_enroll_rps`: how much the WAL + sync
+    /// policy costs (1.0 = free).
+    pub fsync_overhead_x: f64,
+    /// Enrollments acknowledged before the injected crash.
+    pub acked: usize,
+    /// Acked enrollments found intact after recovery.
+    pub recovered: usize,
+    /// Acked enrollments missing or wrong after recovery — the number
+    /// the whole subsystem exists to keep at zero.
+    pub lost: usize,
+    /// The torn final record was detected at recovery (1 expected when
+    /// the crash fired mid-append).
+    pub torn_tail: u64,
+    /// WAL records replayed on top of the snapshot at recovery.
+    pub replayed: u64,
+    /// Compactions completed before the crash.
+    pub compactions: u64,
+    /// Wall-clock seconds to reopen + replay after the crash.
+    pub recovery_s: f64,
+}
+
+impl RegistryBenchReport {
+    /// One JSON object (no trailing newline) for the BENCH_6 report.
+    pub fn json_fragment(&self) -> String {
+        format!(
+            "{{\"speakers\": {}, \"dim\": {}, \"wal_sync\": \"{}\", \
+\"mem_enroll_rps\": {:.1}, \"wal_enroll_rps\": {:.1}, \"fsync_overhead_x\": {:.2}, \
+\"acked\": {}, \"recovered\": {}, \"lost\": {}, \"torn_tail\": {}, \
+\"replayed\": {}, \"compactions\": {}, \"recovery_s\": {:.6}}}",
+            self.speakers,
+            self.dim,
+            self.wal_sync,
+            self.mem_enroll_rps,
+            self.wal_enroll_rps,
+            self.fsync_overhead_x,
+            self.acked,
+            self.recovered,
+            self.lost,
+            self.torn_tail,
+            self.replayed,
+            self.compactions,
+            self.recovery_s,
+        )
+    }
+}
+
+/// Deterministic synthetic enrollment vector for speaker `i`.
+fn bench_vector(i: usize, dim: usize) -> Vec<f64> {
+    (0..dim).map(|j| ((i * 31 + j * 7) % 1000) as f64 / 1000.0).collect()
+}
+
+fn bench_id(i: usize) -> String {
+    format!("spk{i:06}")
+}
+
+/// Run the three-phase crash/recovery bench. `fresh_storage` must
+/// return a *new handle onto the same persistent state* each call —
+/// `FileStorage::open` on one directory, or clones of one
+/// [`super::MemStorage`] — because phase 3's recovery has to see
+/// exactly the bytes phase 2's dying instance persisted.
+pub fn run_registry_bench(
+    opts: &RegistryBenchOpts,
+    fresh_storage: impl Fn() -> Result<Box<dyn RegistryStorage>>,
+) -> Result<RegistryBenchReport> {
+    ensure!(opts.speakers >= 2, "registry bench needs at least 2 speakers");
+    ensure!(opts.dim >= 1, "registry bench needs dim >= 1");
+    let dopts = DurableRegistryOptions {
+        shards: opts.shards,
+        wal: true,
+        sync: opts.sync,
+        compact_every: opts.compact_every,
+    };
+
+    // phase 1: volatile baseline — the rate with no durability at all
+    let volatile = Registry::new(opts.shards);
+    let sw = Stopwatch::start();
+    for i in 0..opts.speakers {
+        volatile.enroll(&bench_id(i), &bench_vector(i, opts.dim), BENCH_FP)?;
+    }
+    let mem_wall = sw.elapsed_s().max(1e-9);
+    let mem_enroll_rps = opts.speakers as f64 / mem_wall;
+
+    // phase 2: durable enrollment with a scripted mid-stream crash.
+    // Append 0 is the WAL header, so enrollment `i` is append `i + 1`;
+    // the dying append persists a 9-byte torn prefix of its record.
+    let injected = FaultInjector::new(fresh_storage().context("open bench storage")?)
+        .crash_at_append(opts.crash_at as u64 + 1, 9);
+    let reg = DurableRegistry::with_storage(Box::new(injected), &dopts)
+        .context("open durable registry for the crash phase")?;
+    let sw = Stopwatch::start();
+    let mut acked = 0usize;
+    for i in 0..opts.speakers {
+        match reg.enroll(&bench_id(i), &bench_vector(i, opts.dim), BENCH_FP) {
+            Ok(_) => acked += 1,
+            Err(_) => break, // the injected crash: nothing after it acks
+        }
+    }
+    let wal_wall = sw.elapsed_s().max(1e-9);
+    let wal_enroll_rps = acked as f64 / wal_wall;
+    let compactions = reg.durability_metrics().compactions;
+    drop(reg);
+
+    // phase 3: recovery on a fresh handle — time it, then audit every
+    // acknowledged enrollment against what was enrolled
+    let sw = Stopwatch::start();
+    let back = DurableRegistry::with_storage(
+        fresh_storage().context("reopen bench storage")?,
+        &dopts,
+    )
+    .context("recover registry after the injected crash")?;
+    let recovery_s = sw.elapsed_s();
+    let mut recovered = 0usize;
+    for i in 0..acked {
+        match back.profile(&bench_id(i)) {
+            Some(p) if p.count == 1 && p.sum == bench_vector(i, opts.dim) => recovered += 1,
+            _ => {}
+        }
+    }
+    let m = back.durability_metrics();
+    Ok(RegistryBenchReport {
+        speakers: opts.speakers,
+        dim: opts.dim,
+        wal_sync: opts.sync.to_string(),
+        mem_enroll_rps,
+        wal_enroll_rps,
+        fsync_overhead_x: mem_enroll_rps / wal_enroll_rps.max(1e-9),
+        acked,
+        recovered,
+        lost: acked - recovered,
+        torn_tail: m.torn_tail,
+        replayed: m.replayed,
+        compactions,
+        recovery_s,
+    })
+}
+
+/// Write the `BENCH_6.json` crash/recovery report.
+pub fn write_bench6_json(path: impl AsRef<Path>, report: &RegistryBenchReport) -> Result<()> {
+    let body = format!(
+        "{{\n  \"issue\": 6,\n  \"registry_recovery\": {}\n}}\n",
+        report.json_fragment()
+    );
+    std::fs::write(&path, body).with_context(|| format!("write {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::storage::MemStorage;
+    use super::*;
+
+    #[test]
+    fn crash_bench_recovers_every_acked_enrollment() {
+        let store = MemStorage::new();
+        let opts = RegistryBenchOpts {
+            speakers: 400,
+            dim: 4,
+            shards: 8,
+            sync: WalSync::Always,
+            compact_every: 64,
+            crash_at: 150,
+        };
+        let store_for_factory = store.clone();
+        let report = run_registry_bench(&opts, move || {
+            Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>)
+        })
+        .unwrap();
+        assert_eq!(report.acked, 150, "enrollment `crash_at` must be the first failure");
+        assert_eq!(report.lost, 0, "acked-but-lost enrollments: the headline guarantee");
+        assert_eq!(report.recovered, 150);
+        assert_eq!(report.torn_tail, 1, "the 9-byte torn prefix must be detected");
+        assert_eq!(report.compactions, 2, "150 mutations at threshold 64");
+        // snapshot covers 128, the WAL replays 129..=150
+        assert_eq!(report.replayed, 22);
+        assert!(report.recovery_s >= 0.0);
+        assert!(report.mem_enroll_rps > 0.0 && report.wal_enroll_rps > 0.0);
+    }
+
+    #[test]
+    fn crash_past_the_population_means_everything_acks() {
+        let store = MemStorage::new();
+        let opts = RegistryBenchOpts {
+            speakers: 50,
+            dim: 3,
+            shards: 4,
+            sync: WalSync::EveryN(8),
+            compact_every: 0,
+            crash_at: 10_000, // never fires
+        };
+        let store_for_factory = store.clone();
+        let report = run_registry_bench(&opts, move || {
+            Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>)
+        })
+        .unwrap();
+        assert_eq!(report.acked, 50);
+        assert_eq!(report.lost, 0);
+        assert_eq!(report.torn_tail, 0, "no crash, no torn tail");
+        assert_eq!(report.wal_sync, "every-8");
+    }
+
+    #[test]
+    fn bench6_json_shape() {
+        let report = RegistryBenchReport {
+            speakers: 1000,
+            dim: 8,
+            wal_sync: "always".into(),
+            mem_enroll_rps: 50_000.0,
+            wal_enroll_rps: 9_000.0,
+            fsync_overhead_x: 5.56,
+            acked: 500,
+            recovered: 500,
+            lost: 0,
+            torn_tail: 1,
+            replayed: 100,
+            compactions: 2,
+            recovery_s: 0.012345,
+        };
+        let frag = report.json_fragment();
+        assert!(frag.contains("\"lost\": 0"), "{frag}");
+        assert!(frag.contains("\"wal_sync\": \"always\""), "{frag}");
+        assert!(frag.contains("\"fsync_overhead_x\": 5.56"), "{frag}");
+        let dir = std::env::temp_dir().join("ivtv_bench6_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_6.json");
+        write_bench6_json(&p, &report).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"issue\": 6"));
+        assert!(text.contains("\"registry_recovery\": {"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Byte-level helpers shared by the registry snapshot codec and the
+//! enrollment WAL: little-endian append helpers, a bounds-checked
+//! cursor (corrupt inputs become errors, never panics or huge
+//! allocations), and the CRC-32 both formats checksum with.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, ensure, Result};
+
+/// CRC-32 (IEEE 802.3 polynomial, the zlib/`cksum -o3` variant) over
+/// `bytes`. Table-driven; the table is built once per process.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64_slice(out: &mut Vec<u8>, xs: &[f64]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u32 length prefix + UTF-8 bytes (the `BinWriter::write_string`
+/// layout, so legacy snapshot records parse with the same cursor).
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub(crate) struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "unexpected end of data at byte {} (wanted {n} more, {} left) — truncated?",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        // `take` bounds the allocation: n*8 must already be present
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// u32-length-prefixed UTF-8 string (mirror of [`put_str`]).
+    pub(crate) fn str_u32(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "string length {n} implausible — corrupt data?");
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| anyhow::anyhow!("string is not UTF-8"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // sensitive to single-bit flips
+        assert_ne!(crc32(b"123456788"), crc32(b"123456789"));
+    }
+
+    #[test]
+    fn cursor_round_trips_and_bounds_checks() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 7);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_str(&mut buf, "spk");
+        put_f64_slice(&mut buf, &[1.5, -2.5]);
+        let mut c = Cur::new(&buf);
+        assert_eq!(c.u32().unwrap(), 7);
+        assert_eq!(c.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(c.str_u32().unwrap(), "spk");
+        assert_eq!(c.f64_vec(2).unwrap(), vec![1.5, -2.5]);
+        assert!(c.at_end());
+        // past the end: an error, never a panic
+        assert!(c.u8().is_err());
+        // absurd string length is rejected before allocating
+        let mut junk = Vec::new();
+        put_u32(&mut junk, u32::MAX);
+        assert!(Cur::new(&junk).str_u32().is_err());
+    }
+}

@@ -1,0 +1,729 @@
+//! The durable layer: WAL-state bookkeeping ([`Durability`]), recovery
+//! ([`DurableRegistry::open`] = snapshot + replay-only-newer), and the
+//! crash-guarantee test suite the fault injector drives.
+//!
+//! The contract callers get from a [`DurableRegistry`] handle:
+//!
+//! * an `Ok` from `enroll`/`remove` means the mutation's WAL record
+//!   reached storage under the configured sync policy **before** the
+//!   in-memory shards changed — acknowledged mutations survive a crash;
+//! * an `Err` means the registry (memory *and* log) is unchanged: a
+//!   failed append or fsync rolls the partial record back out of the
+//!   file, and if even that repair fails the durable path poisons
+//!   itself and refuses further mutations rather than risk mid-log
+//!   garbage;
+//! * recovery tolerates exactly the damage a crash can cause (a torn
+//!   final record — counted, truncated, replay continues) and refuses
+//!   everything a crash cannot (mid-log corruption is a typed error).
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{RegistryConfig, WalSync};
+
+use super::storage::{FileStorage, RegistryStorage};
+use super::wal::{self, WalOp, WalRecord};
+use super::{DurabilityMetrics, Registry, RegistryStoreError};
+
+/// How a [`DurableRegistry`] opens: shard count plus the `[registry]`
+/// durability knobs.
+#[derive(Debug, Clone)]
+pub struct DurableRegistryOptions {
+    /// Lock shards for the in-memory map (mirrors `[serve] registry_shards`).
+    pub shards: usize,
+    /// Write-ahead log mutations. With `false`, durability is
+    /// snapshot-only: compaction still runs on the mutation counter,
+    /// but anything after the last snapshot dies with the process.
+    pub wal: bool,
+    /// WAL fsync policy.
+    pub sync: WalSync,
+    /// Compact the WAL into a snapshot after this many records
+    /// (0 = never compact automatically).
+    pub compact_every: u64,
+}
+
+impl Default for DurableRegistryOptions {
+    fn default() -> Self {
+        Self { shards: 16, wal: true, sync: WalSync::Always, compact_every: 10_000 }
+    }
+}
+
+impl DurableRegistryOptions {
+    /// Build from the `[registry]` config section plus the `[serve]`
+    /// shard count.
+    pub fn from_config(cfg: &RegistryConfig, shards: usize) -> Self {
+        Self { shards, wal: cfg.wal, sync: cfg.sync, compact_every: cfg.compact_every }
+    }
+}
+
+/// Mutable WAL bookkeeping, guarded by the one durable-mutation lock.
+pub(super) struct WalState {
+    /// Sequence number the next record will carry (seqs start at 1).
+    pub(super) next_seq: u64,
+    /// Bytes of valid, applied log — the rollback point for a failed
+    /// append.
+    pub(super) wal_len: u64,
+    /// Appended records not yet fsynced (the every-N policy's counter).
+    pub(super) unsynced: u64,
+    /// Mutations since the last compaction (includes records replayed
+    /// from an existing WAL at open, so the file length still bounds
+    /// recovery time).
+    pub(super) since_compact: u64,
+    /// Set when a failed append/fsync could not be truncated back out;
+    /// every later durable mutation fails fast with
+    /// [`RegistryStoreError::WalPoisoned`].
+    pub(super) poisoned: bool,
+}
+
+/// The storage attachment of a durable registry: backend + policy +
+/// counters. Shared via `Arc` so `Registry` clones of the handle see
+/// one WAL.
+pub(super) struct Durability {
+    pub(super) storage: Box<dyn RegistryStorage>,
+    pub(super) wal_enabled: bool,
+    pub(super) sync: WalSync,
+    pub(super) compact_every: u64,
+    state: Mutex<WalState>,
+    pub(super) wal_appends: AtomicU64,
+    pub(super) wal_synced: AtomicU64,
+    pub(super) compactions: AtomicU64,
+    replayed: AtomicU64,
+    torn_tail: AtomicU64,
+}
+
+impl fmt::Debug for Durability {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Durability")
+            .field("storage", &self.storage.describe())
+            .field("wal_enabled", &self.wal_enabled)
+            .field("sync", &self.sync)
+            .field("appends", &self.wal_appends.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Durability {
+    /// Poison-tolerant state lock, same policy as the shard locks.
+    pub(super) fn lock_state(&self) -> MutexGuard<'_, WalState> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    pub(super) fn metrics(&self) -> DurabilityMetrics {
+        DurabilityMetrics {
+            wal_enabled: self.wal_enabled,
+            wal_appends: self.wal_appends.load(Ordering::Relaxed),
+            wal_synced: self.wal_synced.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            replayed: self.replayed.load(Ordering::Relaxed),
+            torn_tail: self.torn_tail.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Append `rec` to the WAL and make it as durable as the sync
+    /// policy promises. On any failure the file is restored to the
+    /// last known-good length (or the path is poisoned), so an `Err`
+    /// always means "nothing changed".
+    pub(super) fn log(&self, st: &mut WalState, rec: &WalRecord) -> Result<()> {
+        debug_assert_eq!(rec.seq, st.next_seq);
+        if !self.wal_enabled {
+            // snapshot-only mode: no record, but the sequence still
+            // advances so compacted snapshots stay ordered
+            st.next_seq += 1;
+            return Ok(());
+        }
+        if st.poisoned {
+            return Err(RegistryStoreError::WalPoisoned.into());
+        }
+        let buf = wal::encode_record(rec);
+        if let Err(e) = self.storage.append_wal(&buf) {
+            // a partial append would sit as garbage in front of later
+            // records and turn a torn *tail* into mid-log corruption —
+            // cut the file back to the last known-good byte
+            if self.storage.truncate_wal(st.wal_len).is_err() {
+                st.poisoned = true;
+            }
+            return Err(e.context("registry WAL append failed — the mutation was not applied"));
+        }
+        st.wal_len += buf.len() as u64;
+        st.unsynced += 1;
+        self.wal_appends.fetch_add(1, Ordering::Relaxed);
+        let must_sync = match self.sync {
+            WalSync::Always => true,
+            WalSync::EveryN(n) => st.unsynced >= n,
+        };
+        if must_sync {
+            if let Err(e) = self.storage.sync_wal() {
+                // durability cannot be promised: roll the record back
+                // out so the acked prefix stays exactly the synced one
+                st.wal_len -= buf.len() as u64;
+                st.unsynced -= 1;
+                if self.storage.truncate_wal(st.wal_len).is_err() {
+                    st.poisoned = true;
+                }
+                return Err(
+                    e.context("registry WAL fsync failed — the mutation was not applied")
+                );
+            }
+            self.wal_synced.fetch_add(1, Ordering::Relaxed);
+            st.unsynced = 0;
+        }
+        st.next_seq += 1;
+        Ok(())
+    }
+}
+
+/// What recovery found when the registry was opened.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// A snapshot existed and loaded.
+    pub snapshot_loaded: bool,
+    /// Last WAL sequence the snapshot covers (0 when none/legacy).
+    pub snapshot_seq: u64,
+    /// WAL records applied on top of the snapshot.
+    pub replayed: u64,
+    /// WAL records skipped as already covered by the snapshot.
+    pub skipped: u64,
+    /// A torn final record was found (tolerated and truncated).
+    pub torn_tail: bool,
+    /// Speakers enrolled after recovery.
+    pub speakers: usize,
+    /// Total enrollment utterances after recovery.
+    pub enrollments: u64,
+    /// Wall-clock recovery time.
+    pub wall_s: f64,
+}
+
+/// A [`Registry`] with storage attached: opening one **is** recovery.
+/// `Deref`s to [`Registry`], and [`DurableRegistry::handle`] yields the
+/// `Arc<Registry>` the engine/cluster constructors take — every replica
+/// sharing the handle shares the one WAL.
+pub struct DurableRegistry {
+    inner: Arc<Registry>,
+    report: RecoveryReport,
+}
+
+impl DurableRegistry {
+    /// Open (or create) the durable registry in `dir` with the real
+    /// file backend, running recovery if state exists.
+    pub fn open(dir: impl AsRef<Path>, opts: &DurableRegistryOptions) -> Result<Self> {
+        Self::with_storage(Box::new(FileStorage::open(dir)?), opts)
+    }
+
+    /// Open on any storage backend (the fault-injection suite and the
+    /// recovery bench pass [`super::MemStorage`] / [`super::FaultInjector`]).
+    ///
+    /// Recovery = load the snapshot (if any), replay WAL records with
+    /// seq beyond the snapshot's, tolerate-and-truncate a torn tail,
+    /// and refuse mid-log corruption with a typed error.
+    pub fn with_storage(
+        storage: Box<dyn RegistryStorage>,
+        opts: &DurableRegistryOptions,
+    ) -> Result<Self> {
+        let t0 = Instant::now();
+        let place = storage.describe();
+        let (reg, snapshot_seq, snapshot_loaded) = match storage
+            .read_snapshot()
+            .with_context(|| format!("read registry snapshot ({place})"))?
+        {
+            Some(bytes) => {
+                let (reg, seq) = Registry::decode_snapshot(&bytes, opts.shards)
+                    .with_context(|| format!("registry snapshot ({place})"))?;
+                (reg, seq, true)
+            }
+            None => (Registry::new(opts.shards), 0, false),
+        };
+        let wal_bytes =
+            storage.read_wal().with_context(|| format!("read registry WAL ({place})"))?;
+        let rep = wal::replay(&wal_bytes).with_context(|| format!("registry WAL ({place})"))?;
+        let mut replayed = 0u64;
+        let mut skipped = 0u64;
+        for rec in &rep.records {
+            if rec.seq <= snapshot_seq {
+                skipped += 1; // the snapshot already covers it
+                continue;
+            }
+            match &rec.op {
+                WalOp::Enroll { speaker, model_fp, ivector } => {
+                    reg.enroll_mem(speaker, ivector, *model_fp).with_context(|| {
+                        format!("replay WAL record seq {} ({place})", rec.seq)
+                    })?;
+                }
+                WalOp::Remove { speaker } => {
+                    reg.remove_mem(speaker);
+                }
+            }
+            replayed += 1;
+        }
+        // repair the file so appends resume on a clean prefix: chop any
+        // torn tail, and (re)write the header when even it was torn
+        let mut wal_len = rep.valid_len;
+        if (wal_bytes.len() as u64) > rep.valid_len {
+            storage
+                .truncate_wal(rep.valid_len)
+                .with_context(|| format!("truncate torn WAL tail ({place})"))?;
+        }
+        if opts.wal && wal_len < wal::HEADER_LEN {
+            storage
+                .append_wal(&wal::header())
+                .and_then(|()| storage.sync_wal())
+                .with_context(|| format!("initialize WAL header ({place})"))?;
+            wal_len = wal::HEADER_LEN;
+        }
+        let durability = Durability {
+            storage,
+            wal_enabled: opts.wal,
+            sync: opts.sync,
+            compact_every: opts.compact_every,
+            state: Mutex::new(WalState {
+                next_seq: rep.last_seq.max(snapshot_seq) + 1,
+                wal_len,
+                unsynced: 0,
+                since_compact: rep.records.len() as u64,
+                poisoned: false,
+            }),
+            wal_appends: AtomicU64::new(0),
+            wal_synced: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            replayed: AtomicU64::new(replayed),
+            torn_tail: AtomicU64::new(u64::from(rep.torn_tail)),
+        };
+        let inner = Arc::new(reg.with_durability(Arc::new(durability)));
+        let report = RecoveryReport {
+            snapshot_loaded,
+            snapshot_seq,
+            replayed,
+            skipped,
+            torn_tail: rep.torn_tail,
+            speakers: inner.len(),
+            enrollments: inner.total_enrollments(),
+            wall_s: t0.elapsed().as_secs_f64(),
+        };
+        Ok(Self { inner, report })
+    }
+
+    /// The shared handle engines and dispatchers take.
+    pub fn handle(&self) -> Arc<Registry> {
+        Arc::clone(&self.inner)
+    }
+
+    /// What recovery found at open.
+    pub fn recovery(&self) -> &RecoveryReport {
+        &self.report
+    }
+
+    /// Compact the WAL into a fresh snapshot now, regardless of the
+    /// threshold.
+    pub fn compact(&self) -> Result<()> {
+        self.inner.force_compact()
+    }
+}
+
+impl std::ops::Deref for DurableRegistry {
+    type Target = Registry;
+
+    fn deref(&self) -> &Registry {
+        &self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::storage::{Fault, FaultInjector, MemStorage};
+    use super::super::SpeakerProfile;
+    use super::*;
+
+    const FP: u64 = 11;
+
+    fn opts(compact_every: u64) -> DurableRegistryOptions {
+        DurableRegistryOptions { shards: 4, wal: true, sync: WalSync::Always, compact_every }
+    }
+
+    fn open_mem(store: &MemStorage, o: &DurableRegistryOptions) -> Result<DurableRegistry> {
+        DurableRegistry::with_storage(Box::new(store.clone()), o)
+    }
+
+    #[test]
+    fn mutations_survive_reopen_via_wal_replay_alone() {
+        let store = MemStorage::new();
+        let o = opts(0); // never compact: everything rides the WAL
+        let reg = open_mem(&store, &o).unwrap();
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        reg.enroll("alice", &[3.0, 4.0], FP).unwrap();
+        reg.enroll("bob", &[9.0, -1.0], FP).unwrap();
+        assert!(reg.remove("bob").unwrap());
+        // removing an absent speaker consumes no WAL record
+        assert!(!reg.remove("ghost").unwrap());
+        let m = reg.durability_metrics();
+        assert!(m.wal_enabled);
+        assert_eq!(m.wal_appends, 4);
+        assert_eq!(m.wal_synced, 4, "sync=always fsyncs every record");
+        drop(reg);
+
+        let back = open_mem(&store, &o).unwrap();
+        let r = back.recovery();
+        assert!(!r.snapshot_loaded);
+        assert_eq!(r.replayed, 4);
+        assert!(!r.torn_tail);
+        assert_eq!(back.len(), 1);
+        assert_eq!(
+            back.profile("alice").unwrap(),
+            SpeakerProfile { count: 2, sum: vec![4.0, 6.0], model_fp: FP }
+        );
+        assert!(back.profile("bob").is_none());
+    }
+
+    #[test]
+    fn compaction_threshold_snapshots_and_truncates_the_wal() {
+        let store = MemStorage::new();
+        let o = opts(10);
+        let reg = open_mem(&store, &o).unwrap();
+        for i in 0..25 {
+            reg.enroll(&format!("spk{i:02}"), &[i as f64], FP).unwrap();
+        }
+        let m = reg.durability_metrics();
+        assert_eq!(m.compactions, 2, "25 mutations at threshold 10");
+        assert!(store.snapshot_bytes().is_some());
+        // the WAL holds only the 5 post-compaction records
+        let live = wal::replay(&store.wal_bytes()).unwrap();
+        assert_eq!(live.records.len(), 5);
+        drop(reg);
+
+        let back = open_mem(&store, &o).unwrap();
+        let r = back.recovery();
+        assert!(r.snapshot_loaded);
+        assert_eq!(r.snapshot_seq, 20);
+        assert_eq!(r.replayed, 5);
+        assert_eq!(r.skipped, 0);
+        assert_eq!(back.len(), 25);
+        for i in 0..25 {
+            assert_eq!(back.profile(&format!("spk{i:02}")).unwrap().sum, vec![i as f64]);
+        }
+    }
+
+    #[test]
+    fn explicit_compact_then_crash_between_swap_and_truncate_is_safe() {
+        // compaction wrote the snapshot but "crashed" before the WAL
+        // truncate: recovery must skip the already-covered records
+        // instead of double-applying them
+        let store = MemStorage::new();
+        let o = opts(0);
+        let reg = open_mem(&store, &o).unwrap();
+        reg.enroll("a", &[1.0], FP).unwrap();
+        reg.enroll("a", &[2.0], FP).unwrap();
+        reg.compact().unwrap();
+        assert_eq!(reg.durability_metrics().compactions, 1);
+        drop(reg);
+        // resurrect the pre-truncate WAL: replace it with records 1..=2
+        // as if the truncate never happened
+        let mut bytes = wal::header();
+        for (seq, x) in [(1u64, 1.0f64), (2, 2.0)] {
+            bytes.extend_from_slice(&wal::encode_record(&WalRecord {
+                seq,
+                op: WalOp::Enroll { speaker: "a".into(), model_fp: FP, ivector: vec![x] },
+            }));
+        }
+        let resurrected = MemStorage::seeded(bytes, store.snapshot_bytes());
+        let back = open_mem(&resurrected, &o).unwrap();
+        let r = back.recovery();
+        assert_eq!(r.snapshot_seq, 2);
+        assert_eq!(r.skipped, 2, "snapshot-covered records must not replay");
+        assert_eq!(r.replayed, 0);
+        let p = back.profile("a").unwrap();
+        assert_eq!(p.count, 2);
+        assert_eq!(p.sum, vec![3.0], "double-applied records would make this 6.0");
+    }
+
+    /// The headline tentpole guarantee, end to end: enrollments
+    /// acknowledged before an injected crash are all present after
+    /// recovery, the torn tail is tolerated and counted, and the dead
+    /// path fails fast instead of lying.
+    #[test]
+    fn acked_enrollments_all_survive_an_injected_crash() {
+        let store = MemStorage::new();
+        let o = opts(25);
+        // append 0 is the WAL header; enrollment k is append k+1. Crash
+        // on the 42nd enrollment, persisting 7 bytes of its record.
+        let injected = FaultInjector::new(Box::new(store.clone())).crash_at_append(42, 7);
+        let reg = DurableRegistry::with_storage(Box::new(injected), &o).unwrap();
+        let mut acked: Vec<String> = Vec::new();
+        let mut failed = None;
+        for i in 0..200 {
+            let id = format!("spk{i:03}");
+            match reg.enroll(&id, &[i as f64, 0.5], FP) {
+                Ok(_) => acked.push(id),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+        let failed = failed.expect("the injected crash must fire");
+        assert!(failed.to_string().contains("not applied"), "{failed}");
+        assert_eq!(acked.len(), 41, "41 enrollments acked before the crash");
+        // the unacked enrollment did not half-apply to memory either
+        assert_eq!(reg.len(), 41);
+        // after the crash the durable path fails fast, never a silent ack
+        assert!(reg.enroll("late", &[1.0, 1.0], FP).is_err());
+        drop(reg);
+
+        // recovery on a fresh handle over what the dead process persisted
+        let back = open_mem(&store, &o).unwrap();
+        let r = back.recovery();
+        assert!(r.torn_tail, "the 7-byte partial record is a torn tail");
+        assert_eq!(back.durability_metrics().torn_tail, 1);
+        assert!(r.snapshot_loaded, "compaction ran at enrollment 25");
+        assert_eq!(r.snapshot_seq, 25);
+        assert_eq!(r.replayed, 16, "seqs 26..=41 ride the WAL");
+        assert_eq!(back.len(), acked.len(), "no acked enrollment lost, no phantom gained");
+        for (i, id) in acked.iter().enumerate() {
+            let p = back.profile(id).unwrap_or_else(|| panic!("acked `{id}` lost"));
+            assert_eq!(p.sum, vec![i as f64, 0.5], "acked `{id}` has wrong state");
+            assert_eq!(p.count, 1);
+        }
+        // and the recovered registry keeps taking durable mutations
+        back.enroll("after", &[4.0, 4.0], FP).unwrap();
+        assert_eq!(back.durability_metrics().wal_appends, 1);
+    }
+
+    #[test]
+    fn mid_log_corruption_refuses_recovery_with_a_typed_error() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        let reg = open_mem(&store, &o).unwrap();
+        for i in 0..10 {
+            reg.enroll(&format!("spk{i}"), &[i as f64], FP).unwrap();
+        }
+        drop(reg);
+        // read-side bit rot inside record 0's payload: op 0 is
+        // read_snapshot, op 1 is read_wal
+        let corrupted = FaultInjector::new(Box::new(store.clone()))
+            .fail_op(1, Fault::CorruptRead { offset: wal::HEADER_LEN as usize + 12, xor: 0x40 });
+        let err = DurableRegistry::with_storage(Box::new(corrupted), &o).unwrap_err();
+        match err.downcast_ref::<RegistryStoreError>() {
+            Some(RegistryStoreError::WalCorrupt { record, .. }) => assert_eq!(*record, 0),
+            other => panic!("expected WalCorrupt, got {other:?}: {err:#}"),
+        }
+        // the same bytes read clean recover fine — the rot was read-side
+        assert_eq!(open_mem(&store, &o).unwrap().len(), 10);
+    }
+
+    #[test]
+    fn enospc_fails_the_caller_but_the_registry_keeps_serving() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        // ops at open: read_snapshot, read_wal, append header, sync.
+        // Enrollment k is then ops 4+2k (append) and 5+2k (sync).
+        let injected = FaultInjector::new(Box::new(store.clone()))
+            .fail_op(6, Fault::Enospc); // the second enrollment's append
+        let reg = DurableRegistry::with_storage(Box::new(injected), &o).unwrap();
+        reg.enroll("a", &[1.0], FP).unwrap();
+        let err = reg.enroll("b", &[2.0], FP).unwrap_err();
+        assert!(err.to_string().contains("No space left"), "{err}");
+        // the failed enrollment left no trace in memory
+        assert!(reg.profile("b").is_none());
+        // and the path is NOT poisoned: the disk "recovered", later
+        // mutations flow again
+        reg.enroll("c", &[3.0], FP).unwrap();
+        drop(reg);
+        let back = open_mem(&store, &o).unwrap();
+        assert_eq!(back.speaker_ids(), vec!["a", "c"]);
+        assert!(!back.recovery().torn_tail, "ENOSPC persisted nothing — no torn tail");
+    }
+
+    #[test]
+    fn failed_fsync_rolls_the_record_back_out() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        let injected = FaultInjector::new(Box::new(store.clone()))
+            .fail_op(5, Fault::SyncFail); // the first enrollment's fsync
+        let reg = DurableRegistry::with_storage(Box::new(injected), &o).unwrap();
+        let err = reg.enroll("a", &[1.0], FP).unwrap_err();
+        assert!(err.to_string().contains("fsync"), "{err}");
+        assert!(reg.is_empty(), "an unsynced enrollment must not be acked or applied");
+        // the appended-then-unsyncable record was truncated back out
+        let rep = wal::replay(&store.wal_bytes()).unwrap();
+        assert!(rep.records.is_empty());
+        assert!(!rep.torn_tail);
+        // the path keeps working afterwards
+        reg.enroll("a", &[2.0], FP).unwrap();
+        drop(reg);
+        assert_eq!(open_mem(&store, &o).unwrap().profile("a").unwrap().sum, vec![2.0]);
+    }
+
+    #[test]
+    fn wal_truncation_sweep_through_storage_recovers_every_prefix() {
+        // satellite sweep, this time through the storage/recovery stack:
+        // build a real WAL, then hand recovery every possible prefix
+        let store = MemStorage::new();
+        let o = opts(0);
+        let reg = open_mem(&store, &o).unwrap();
+        let mut expect: Vec<(String, Vec<f64>)> = Vec::new();
+        for i in 0..6 {
+            let id = format!("spk{i}");
+            let iv = vec![i as f64, -(i as f64)];
+            reg.enroll(&id, &iv, FP).unwrap();
+            expect.push((id, iv));
+        }
+        drop(reg);
+        let bytes = store.wal_bytes();
+        for cut in 0..=bytes.len() {
+            let prefix = MemStorage::seeded(bytes[..cut].to_vec(), None);
+            let back = open_mem(&prefix, &o).unwrap_or_else(|e| {
+                panic!("prefix of {cut} bytes must recover, got: {e:#}")
+            });
+            // recovered speakers are exactly a prefix of the originals
+            let n = back.len();
+            assert!(n <= expect.len());
+            for (id, iv) in &expect[..n] {
+                let p = back
+                    .profile(id)
+                    .unwrap_or_else(|| panic!("cut {cut}: `{id}` missing from prefix"));
+                assert_eq!(&p.sum, iv, "cut {cut}: wrong profile for `{id}`");
+            }
+            for (id, _) in &expect[n..] {
+                assert!(back.profile(id).is_none(), "cut {cut}: phantom `{id}`");
+            }
+        }
+    }
+
+    #[test]
+    fn wal_bitflip_sweep_through_storage_never_loads_wrong_profiles() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        let reg = open_mem(&store, &o).unwrap();
+        let mut expect: Vec<(String, Vec<f64>)> = Vec::new();
+        for i in 0..4 {
+            let id = format!("spk{i}");
+            let iv = vec![0.5 + i as f64];
+            reg.enroll(&id, &iv, FP).unwrap();
+            expect.push((id, iv));
+        }
+        drop(reg);
+        let bytes = store.wal_bytes();
+        // sampled offsets (every 3rd byte) via the injector's read-side
+        // corruption, exercising the exact recovery entry path. Each
+        // iteration gets a freshly seeded store: recovery repairs torn
+        // tails in place, which must not bleed into the next flip.
+        for offset in (0..bytes.len()).step_by(3) {
+            let xor = 1u8 << (offset % 8);
+            let seeded = MemStorage::seeded(bytes.clone(), None);
+            let injected = FaultInjector::new(Box::new(seeded))
+                .fail_op(1, Fault::CorruptRead { offset, xor });
+            match DurableRegistry::with_storage(Box::new(injected), &o) {
+                Ok(back) => {
+                    // a tolerated flip may only drop a tail, never load
+                    // a wrong profile or invent a speaker
+                    let n = back.len();
+                    assert!(n <= expect.len(), "flip at {offset}: phantom speakers");
+                    for (id, iv) in &expect[..n] {
+                        let p = back.profile(id).unwrap_or_else(|| {
+                            panic!("flip at {offset}: `{id}` missing")
+                        });
+                        assert_eq!(&p.sum, iv, "flip at {offset}: wrong profile loaded");
+                    }
+                }
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<RegistryStoreError>().is_some(),
+                        "flip at {offset}: untyped error {e:#}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_n_sync_policy_batches_fsyncs() {
+        let store = MemStorage::new();
+        let o = DurableRegistryOptions {
+            shards: 2,
+            wal: true,
+            sync: WalSync::EveryN(4),
+            compact_every: 0,
+        };
+        let reg = open_mem(&store, &o).unwrap();
+        for i in 0..10 {
+            reg.enroll(&format!("s{i}"), &[1.0], FP).unwrap();
+        }
+        let m = reg.durability_metrics();
+        assert_eq!(m.wal_appends, 10);
+        assert_eq!(m.wal_synced, 2, "10 appends at every-4 → fsyncs at 4 and 8");
+    }
+
+    #[test]
+    fn snapshot_only_mode_survives_via_compaction() {
+        let store = MemStorage::new();
+        let o = DurableRegistryOptions {
+            shards: 2,
+            wal: false,
+            sync: WalSync::Always,
+            compact_every: 5,
+        };
+        let reg = open_mem(&store, &o).unwrap();
+        for i in 0..12 {
+            reg.enroll(&format!("s{i:02}"), &[i as f64], FP).unwrap();
+        }
+        let m = reg.durability_metrics();
+        assert!(!m.wal_enabled);
+        assert_eq!(m.wal_appends, 0, "wal=false must not append");
+        assert_eq!(m.compactions, 2);
+        drop(reg);
+        let back = open_mem(&store, &o).unwrap();
+        // mutations past the last compaction (10) died with the process
+        // — the documented snapshot-only tradeoff
+        assert_eq!(back.len(), 10);
+        assert!(back.recovery().snapshot_loaded);
+    }
+
+    #[test]
+    fn concurrent_durable_enrollments_are_not_lost() {
+        let store = MemStorage::new();
+        let o = opts(40);
+        let reg = Arc::new(open_mem(&store, &o).unwrap());
+        let threads = 4;
+        let per_thread = 50;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let reg = Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    reg.enroll("shared", &[1.0], FP).unwrap();
+                    reg.enroll(&format!("t{t}_s{i}"), &[i as f64], FP).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = (2 * threads * per_thread) as u64;
+        assert_eq!(reg.total_enrollments(), total);
+        drop(reg);
+        let back = open_mem(&store, &o).unwrap();
+        assert_eq!(back.total_enrollments(), total, "recovery must see every ack");
+        assert_eq!(back.profile("shared").unwrap().count, (threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn recover_on_file_storage_round_trips() {
+        // the same contract on the real backend
+        let dir = std::env::temp_dir().join("ivtv_registry_durable_file_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let o = opts(3);
+        let reg = DurableRegistry::open(&dir, &o).unwrap();
+        for i in 0..8 {
+            reg.enroll(&format!("spk{i}"), &[i as f64, 1.0], FP).unwrap();
+        }
+        assert!(reg.remove("spk3").unwrap());
+        drop(reg);
+        let back = DurableRegistry::open(&dir, &o).unwrap();
+        assert_eq!(back.len(), 7);
+        assert!(back.profile("spk3").is_none());
+        assert_eq!(back.profile("spk7").unwrap().sum, vec![7.0, 1.0]);
+        assert!(back.recovery().snapshot_loaded, "threshold 3 must have compacted");
+    }
+}

@@ -1,0 +1,899 @@
+//! Concurrent speaker registry: enrollment state behind sharded locks,
+//! with optional write-ahead durability layered underneath.
+//!
+//! Enrollment is *averaging*: a speaker's profile accumulates the sum
+//! of raw enrollment i-vectors and the count, and verification scores
+//! against the running mean (the standard multi-session enrollment
+//! recipe — scoring the averaged i-vector). Shards keep unrelated
+//! speakers off the same mutex so enroll/verify traffic scales with
+//! cores instead of serializing on one registry lock.
+//!
+//! Every profile carries the fingerprint of the model it was enrolled
+//! under ([`crate::serve::ModelBundle::fingerprint`]): i-vectors from
+//! different total-variability spaces are not comparable, so mixing
+//! model epochs in one profile — or scoring across them — is an error
+//! the engine surfaces instead of a silently meaningless score.
+//!
+//! # Durability
+//!
+//! A plain [`Registry::new`] registry is volatile. [`DurableRegistry`]
+//! ([`durable`]) attaches a [`storage::RegistryStorage`] backend and
+//! write-ahead-logs every mutation ([`wal`]) *before* applying it to
+//! the shards: an enrollment is acknowledged only once its WAL record
+//! is appended (and, under the `always` sync policy, fsynced). Past a
+//! configurable record threshold the WAL compacts into the crash-atomic
+//! snapshot; the snapshot carries the last WAL sequence it covers, so
+//! recovery is "load snapshot, replay only newer records".
+//!
+//! Lock order is fixed: **WAL state first, shard second** — mutations
+//! and compaction both take it, so durable mutations serialize on the
+//! WAL (they are fsync-bound anyway) and can never deadlock against a
+//! compaction that snapshots every shard. Volatile registries never
+//! touch the WAL lock and keep the fully sharded fast path.
+
+mod codec;
+pub mod bench;
+mod durable;
+pub mod storage;
+pub mod wal;
+
+pub use durable::{DurableRegistry, DurableRegistryOptions, RecoveryReport};
+pub use storage::{Fault, FaultInjector, FileStorage, MemStorage, RegistryStorage};
+
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use codec::Cur;
+use durable::{Durability, WalState};
+use wal::{WalOp, WalRecord};
+
+/// One lock shard.
+type Shard = Mutex<HashMap<String, SpeakerProfile>>;
+
+/// Poison-tolerant shard lock. A panic while a shard is held (a bug in
+/// the holder, or a caller's unwind crossing an enrollment) must not
+/// convert into a permanent shard-wide outage: every profile update is
+/// a running `(sum, count)` pair mutated in place, so the worst a
+/// mid-update unwind leaves behind is one speaker's partially-applied
+/// enrollment — strictly better than poisoning `lock().unwrap()` for
+/// every later caller of that shard.
+fn lock(shard: &Shard) -> MutexGuard<'_, HashMap<String, SpeakerProfile>> {
+    shard.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Accumulated enrollment state of one speaker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeakerProfile {
+    /// Number of enrollment utterances.
+    pub count: u64,
+    /// Sum of raw enrollment i-vectors (dim R).
+    pub sum: Vec<f64>,
+    /// Fingerprint of the model every enrollment used.
+    pub model_fp: u64,
+}
+
+impl SpeakerProfile {
+    /// The averaged enrollment i-vector. Zero-count profiles are
+    /// rejected at load and unreachable via enroll, so a zero here is
+    /// corruption — fail loudly in tests instead of silently returning
+    /// a bogus all-zeros mean.
+    pub fn mean(&self) -> Vec<f64> {
+        debug_assert!(self.count > 0, "zero-count profile: corrupt registry state");
+        let n = self.count as f64;
+        self.sum.iter().map(|&x| x / n).collect()
+    }
+}
+
+/// Typed persistence failures. These ride inside `anyhow::Error` (every
+/// entry point keeps its `Result` signature) and stay reachable through
+/// `Error::downcast_ref`, like [`crate::serve::ServeError`] on the
+/// request path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryStoreError {
+    /// A registry snapshot failed its checksum or structural
+    /// validation; nothing was loaded.
+    SnapshotCorrupt { detail: String },
+    /// The WAL is corrupt *before* its final record — bit rot or a
+    /// foreign writer, not a crash — so replay refuses to guess.
+    WalCorrupt { record: u64, offset: u64, detail: String },
+    /// An earlier storage failure could not be repaired in place;
+    /// durable mutations are refused until the registry is reopened
+    /// (recovery re-validates the log end to end).
+    WalPoisoned,
+}
+
+impl fmt::Display for RegistryStoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::SnapshotCorrupt { detail } => {
+                write!(f, "registry snapshot corrupt: {detail}")
+            }
+            Self::WalCorrupt { record, offset, detail } => {
+                write!(f, "registry WAL corrupt at record {record} (byte {offset}): {detail}")
+            }
+            Self::WalPoisoned => write!(
+                f,
+                "registry WAL is poisoned by an earlier unrepaired storage failure — \
+                 reopen the registry to recover"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RegistryStoreError {}
+
+/// Point-in-time durability counters, zeroed for volatile registries.
+/// Surfaced through `EngineMetrics`/`ClusterMetrics` and the bench
+/// reports so overload runs show whether persistence kept pace.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DurabilityMetrics {
+    /// True when mutations are write-ahead logged (not just volatile or
+    /// snapshot-only).
+    pub wal_enabled: bool,
+    /// Records appended to the WAL since open.
+    pub wal_appends: u64,
+    /// WAL fsyncs that completed (== appends under the `always` policy).
+    pub wal_synced: u64,
+    /// WAL-into-snapshot compactions completed.
+    pub compactions: u64,
+    /// Records replayed from the WAL at the last open.
+    pub replayed: u64,
+    /// Torn WAL tails tolerated at the last open (0 or 1).
+    pub torn_tail: u64,
+}
+
+/// Sharded concurrent speaker store.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Vec<Shard>,
+    /// Present on registries opened through [`DurableRegistry`]; every
+    /// mutation then WALs before touching a shard.
+    durability: Option<Arc<Durability>>,
+}
+
+// ---- snapshot format ----------------------------------------------------
+//
+// Both formats share the repo's container header (`IVTV` + version) so
+// a snapshot still looks like "one of our files" to generic tooling.
+//
+//   versioned: IVTV u32:1 | u64:SNAP_MAGIC u32:snap_version
+//              u32:crc32(payload) | payload
+//              payload = u64:last_wal_seq u64:n  n × record
+//   legacy:    IVTV u32:1 | u64:n  n × record
+//   record:    u32:id_len id u64:count u64:model_fp u64:dim dim×f64
+//
+// The discriminator is the first u64 after the container header: the
+// legacy format put the record count there, and no plausible count
+// collides with SNAP_MAGIC (~5.8e18) — a bound the legacy path enforces
+// explicitly, which is also what stops a bit-flipped magic (or a
+// foreign `IVTV` artifact, the pre-versioning failure mode) from being
+// misread as billions of records.
+
+/// `b"IVREGSNP"` as a little-endian u64.
+pub(crate) const SNAP_MAGIC: u64 = u64::from_le_bytes(*b"IVREGSNP");
+pub(crate) const SNAP_VERSION: u32 = 1;
+/// Minimal encoded record (empty id, dim 0): 4 + 8 + 8 + 8 bytes.
+const MIN_RECORD_BYTES: u64 = 28;
+
+impl Registry {
+    /// Create a volatile registry with `n_shards` lock shards (clamped
+    /// to ≥ 1).
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            shards: (0..n_shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            durability: None,
+        }
+    }
+
+    /// Attach the durable layer (consuming `self`: only
+    /// [`DurableRegistry`] construction does this, after recovery).
+    pub(crate) fn with_durability(mut self, d: Arc<Durability>) -> Self {
+        self.durability = Some(d);
+        self
+    }
+
+    fn shard(&self, speaker_id: &str) -> &Shard {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        speaker_id.hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    /// Add one enrollment i-vector to `speaker_id` (creating the
+    /// profile on first enrollment); returns the new utterance count.
+    /// Fails if the speaker already holds enrollments from a different
+    /// model epoch — averaging across total-variability spaces would
+    /// corrupt the profile — or if the i-vector dimension disagrees
+    /// with the existing profile. Both are *errors to that caller*,
+    /// never panics: a panic here would fire while the shard mutex is
+    /// held and cascade one malformed request into a shard-wide outage.
+    ///
+    /// On a durable registry the mutation is write-ahead logged first;
+    /// an `Ok` means the record reached the WAL under the configured
+    /// sync policy, and an `Err` means the registry state is unchanged.
+    pub fn enroll(&self, speaker_id: &str, ivector: &[f64], model_fp: u64) -> Result<u64> {
+        let Some(d) = &self.durability else {
+            return self.enroll_mem(speaker_id, ivector, model_fp);
+        };
+        // lock order: WAL state first, shard second (see module docs)
+        let mut st = d.lock_state();
+        let count = {
+            let mut shard = lock(self.shard(speaker_id));
+            // validate *before* logging: a rejected enrollment must
+            // reach neither the WAL nor the map
+            if let Some(profile) = shard.get(speaker_id) {
+                validate_enrollment(profile, speaker_id, ivector, model_fp)?;
+            }
+            let rec = WalRecord {
+                seq: st.next_seq,
+                op: WalOp::Enroll {
+                    speaker: speaker_id.to_string(),
+                    model_fp,
+                    ivector: ivector.to_vec(),
+                },
+            };
+            d.log(&mut st, &rec)?;
+            apply_enroll(&mut shard, speaker_id, ivector, model_fp)?
+        };
+        self.compact_if_due(d, &mut st);
+        Ok(count)
+    }
+
+    /// Memory-only enrollment: the volatile path, and WAL replay during
+    /// recovery (those records were already logged).
+    pub(crate) fn enroll_mem(
+        &self,
+        speaker_id: &str,
+        ivector: &[f64],
+        model_fp: u64,
+    ) -> Result<u64> {
+        let mut shard = lock(self.shard(speaker_id));
+        apply_enroll(&mut shard, speaker_id, ivector, model_fp)
+    }
+
+    /// Snapshot a speaker's profile (sum + count), if enrolled.
+    pub fn profile(&self, speaker_id: &str) -> Option<SpeakerProfile> {
+        lock(self.shard(speaker_id)).get(speaker_id).cloned()
+    }
+
+    /// Remove a speaker; returns whether it existed. On a durable
+    /// registry the removal is write-ahead logged first — an `Err`
+    /// means the speaker is still enrolled (and still durable).
+    pub fn remove(&self, speaker_id: &str) -> Result<bool> {
+        let Some(d) = &self.durability else {
+            return Ok(self.remove_mem(speaker_id));
+        };
+        let mut st = d.lock_state();
+        let removed = {
+            let mut shard = lock(self.shard(speaker_id));
+            if !shard.contains_key(speaker_id) {
+                false // nothing to log: absent speakers consume no WAL records
+            } else {
+                let rec = WalRecord {
+                    seq: st.next_seq,
+                    op: WalOp::Remove { speaker: speaker_id.to_string() },
+                };
+                d.log(&mut st, &rec)?;
+                shard.remove(speaker_id).is_some()
+            }
+        };
+        if removed {
+            self.compact_if_due(d, &mut st);
+        }
+        Ok(removed)
+    }
+
+    /// Memory-only removal (volatile path and WAL replay).
+    pub(crate) fn remove_mem(&self, speaker_id: &str) -> bool {
+        lock(self.shard(speaker_id)).remove(speaker_id).is_some()
+    }
+
+    /// Number of enrolled speakers.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| lock(s).len()).sum()
+    }
+
+    /// True when no speaker is enrolled.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total enrollment utterances across all speakers.
+    pub fn total_enrollments(&self) -> u64 {
+        self.shards.iter().map(|s| lock(s).values().map(|p| p.count).sum::<u64>()).sum()
+    }
+
+    /// All enrolled speaker ids, sorted (stable across shard layouts).
+    pub fn speaker_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| lock(s).keys().cloned().collect::<Vec<_>>())
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Durability counters; all-zero (and `wal_enabled: false`) for a
+    /// volatile registry.
+    pub fn durability_metrics(&self) -> DurabilityMetrics {
+        match &self.durability {
+            Some(d) => d.metrics(),
+            None => DurabilityMetrics::default(),
+        }
+    }
+
+    /// Every profile, sorted by id (deterministic files regardless of
+    /// shard count or enrollment order). Shard-at-a-time: concurrent
+    /// mutations on *other* shards can land mid-collection — callers
+    /// needing a consistent cut hold the WAL lock (compaction does).
+    fn collect_profiles(&self) -> Vec<(String, SpeakerProfile)> {
+        let mut all: Vec<(String, SpeakerProfile)> = Vec::new();
+        for s in &self.shards {
+            let shard = lock(s);
+            all.extend(shard.iter().map(|(id, p)| (id.clone(), p.clone())));
+        }
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+
+    /// Bump the mutation counter and compact once the threshold trips.
+    /// Infallible on purpose: the mutation that tripped it is already
+    /// durable in the WAL, so a failed compaction must not fail that
+    /// caller's ack — it resets the counter and retries a threshold
+    /// later.
+    fn compact_if_due(&self, d: &Durability, st: &mut WalState) {
+        st.since_compact += 1;
+        if d.compact_every == 0 || st.since_compact < d.compact_every {
+            return;
+        }
+        if let Err(e) = self.compact_locked(d, st) {
+            st.since_compact = 0;
+            eprintln!("[registry] WAL compaction failed (state is safe; will retry): {e:#}");
+        }
+    }
+
+    /// Snapshot every shard and truncate the WAL, under the held WAL
+    /// lock — no mutation can be between its append and its apply, so
+    /// the snapshot provably covers every logged record. A crash
+    /// between the swap and the truncate is safe: recovery skips WAL
+    /// records at or below the snapshot's sequence number.
+    pub(crate) fn compact_locked(&self, d: &Durability, st: &mut WalState) -> Result<()> {
+        let snapshot = self.collect_profiles();
+        let bytes = encode_snapshot(&snapshot, st.next_seq - 1);
+        d.storage.swap_snapshot(&bytes).context("swap registry snapshot")?;
+        if d.wal_enabled && st.wal_len > wal::HEADER_LEN {
+            d.storage.truncate_wal(wal::HEADER_LEN).context("truncate compacted WAL")?;
+            st.wal_len = wal::HEADER_LEN;
+            st.unsynced = 0;
+        }
+        st.since_compact = 0;
+        // a rebuilt-clean WAL clears an earlier failed tail repair
+        st.poisoned = false;
+        d.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Force a compaction now (the [`DurableRegistry::compact`] and
+    /// `registry-recover --compact` entry point).
+    pub(crate) fn force_compact(&self) -> Result<()> {
+        let Some(d) = &self.durability else {
+            bail!("registry has no durable storage attached");
+        };
+        let mut st = d.lock_state();
+        self.compact_locked(d, &mut st)
+    }
+
+    /// Persist all profiles to `path` as a versioned snapshot. The
+    /// write is **atomic at the file level**: bytes go to a fresh
+    /// same-directory temp file (`rename(2)` is only atomic within one
+    /// filesystem) fsynced and renamed into place — a crash mid-save
+    /// leaves the previous snapshot intact instead of a truncated file.
+    /// On a durable registry the WAL lock is held across collection so
+    /// the embedded sequence number agrees with the profiles.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let (snapshot, last_seq) = match &self.durability {
+            Some(d) => {
+                let st = d.lock_state();
+                (self.collect_profiles(), st.next_seq - 1)
+            }
+            None => (self.collect_profiles(), 0),
+        };
+        let bytes = encode_snapshot(&snapshot, last_seq);
+        storage::atomic_write_synced(path, &bytes)
+            .with_context(|| format!("save registry snapshot {}", path.display()))
+    }
+
+    /// Load a registry written by [`Registry::save`], distributing the
+    /// profiles over `n_shards` fresh shards. Accepts both the
+    /// versioned format (checksum-verified) and the legacy pre-magic
+    /// format via an explicit fallback. Every record is validated: a
+    /// zero enrollment count, a duplicate speaker id (silent
+    /// last-record-wins), or a non-finite sum (NaN/∞ would poison every
+    /// later verify score) all reject the file instead of loading
+    /// corrupt state.
+    pub fn load(path: impl AsRef<Path>, n_shards: usize) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("open registry snapshot {}", path.display()))?;
+        let (reg, _last_seq) = Self::decode_snapshot(&bytes, n_shards)
+            .with_context(|| format!("load registry snapshot {}", path.display()))?;
+        Ok(reg)
+    }
+
+    /// Decode a snapshot image; returns the registry and the last WAL
+    /// sequence number it covers (0 for legacy files). Every failure is
+    /// a typed [`RegistryStoreError::SnapshotCorrupt`].
+    pub(crate) fn decode_snapshot(bytes: &[u8], n_shards: usize) -> Result<(Self, u64)> {
+        Self::decode_snapshot_inner(bytes, n_shards).map_err(|e| {
+            anyhow::Error::new(RegistryStoreError::SnapshotCorrupt { detail: format!("{e:#}") })
+        })
+    }
+
+    fn decode_snapshot_inner(bytes: &[u8], n_shards: usize) -> Result<(Self, u64)> {
+        let mut c = Cur::new(bytes);
+        let magic = c.take(4)?;
+        ensure!(magic == crate::io::CONTAINER_MAGIC, "bad magic — not an ivector-tv file");
+        let container = c.u32()?;
+        ensure!(
+            container == crate::io::CONTAINER_VERSION,
+            "unsupported container version {container}"
+        );
+        let probe = c.u64()?;
+        let (last_seq, n) = if probe == SNAP_MAGIC {
+            let version = c.u32()?;
+            ensure!(version == SNAP_VERSION, "unsupported registry snapshot version {version}");
+            let crc = c.u32()?;
+            // checksum the whole payload before trusting any of it: a
+            // bit flip anywhere past this point is caught here, never
+            // loaded as a wrong profile
+            let payload = &bytes[c.pos()..];
+            ensure!(
+                codec::crc32(payload) == crc,
+                "snapshot checksum mismatch — corrupt registry file?"
+            );
+            (c.u64()?, c.u64()?)
+        } else {
+            // legacy pre-versioning snapshot: that u64 is the record
+            // count. No checksum to lean on, so bound it hard — this is
+            // what rejects foreign `IVTV` artifacts (or a bit-flipped
+            // magic) instead of looping on garbage records.
+            ensure!(
+                probe <= bytes.len() as u64 / MIN_RECORD_BYTES + 1,
+                "record count {probe} implausible — corrupt or foreign registry file?"
+            );
+            (0, probe)
+        };
+        let reg = Self::new(n_shards);
+        for _ in 0..n {
+            let (id, p) = read_profile_record(&mut c)?;
+            let mut shard = lock(reg.shard(&id));
+            if shard.insert(id.clone(), p).is_some() {
+                bail!("duplicate speaker `{id}` — corrupt registry file?");
+            }
+        }
+        ensure!(
+            c.at_end(),
+            "{} trailing bytes after the last record — corrupt registry file?",
+            c.remaining()
+        );
+        Ok((reg, last_seq))
+    }
+}
+
+/// The profile-level guards `enroll` promises, split out so the durable
+/// path can validate *before* appending to the WAL.
+fn validate_enrollment(
+    profile: &SpeakerProfile,
+    speaker_id: &str,
+    ivector: &[f64],
+    model_fp: u64,
+) -> Result<()> {
+    ensure!(
+        profile.model_fp == model_fp,
+        "speaker `{speaker_id}` was enrolled under a different model — \
+         remove and re-enroll after a bundle swap"
+    );
+    ensure!(
+        profile.sum.len() == ivector.len(),
+        "enrollment dim {} does not match speaker `{speaker_id}`'s existing profile \
+         dim {}",
+        ivector.len(),
+        profile.sum.len()
+    );
+    Ok(())
+}
+
+/// Apply one enrollment to a locked shard map (validating as it goes —
+/// the memory-only path arrives here without a prior
+/// [`validate_enrollment`]).
+fn apply_enroll(
+    shard: &mut HashMap<String, SpeakerProfile>,
+    speaker_id: &str,
+    ivector: &[f64],
+    model_fp: u64,
+) -> Result<u64> {
+    let profile = shard.entry(speaker_id.to_string()).or_insert_with(|| SpeakerProfile {
+        count: 0,
+        sum: vec![0.0; ivector.len()],
+        model_fp,
+    });
+    validate_enrollment(profile, speaker_id, ivector, model_fp)?;
+    for (s, &x) in profile.sum.iter_mut().zip(ivector) {
+        *s += x;
+    }
+    profile.count += 1;
+    Ok(profile.count)
+}
+
+/// One snapshot record (shared by both formats).
+fn read_profile_record(c: &mut Cur<'_>) -> Result<(String, SpeakerProfile)> {
+    let id = c.str_u32()?;
+    let count = c.u64()?;
+    let model_fp = c.u64()?;
+    let dim = c.u64()? as usize;
+    if count == 0 {
+        bail!("speaker `{id}` has zero enrollments — corrupt registry file?");
+    }
+    if dim > 1 << 20 {
+        bail!("i-vector dim {dim} implausible — corrupt registry file?");
+    }
+    let sum = c.f64_vec(dim)?;
+    if !sum.iter().all(|x| x.is_finite()) {
+        bail!("speaker `{id}` has a non-finite enrollment sum — corrupt registry file?");
+    }
+    Ok((id, SpeakerProfile { count, sum, model_fp }))
+}
+
+/// Serialize profiles as a versioned snapshot image covering WAL
+/// records up to `last_seq`.
+pub(crate) fn encode_snapshot(profiles: &[(String, SpeakerProfile)], last_seq: u64) -> Vec<u8> {
+    let mut payload = Vec::new();
+    codec::put_u64(&mut payload, last_seq);
+    codec::put_u64(&mut payload, profiles.len() as u64);
+    for (id, p) in profiles {
+        codec::put_str(&mut payload, id);
+        codec::put_u64(&mut payload, p.count);
+        codec::put_u64(&mut payload, p.model_fp);
+        codec::put_u64(&mut payload, p.sum.len() as u64);
+        codec::put_f64_slice(&mut payload, &p.sum);
+    }
+    let mut out = Vec::with_capacity(payload.len() + 24);
+    out.extend_from_slice(crate::io::CONTAINER_MAGIC);
+    codec::put_u32(&mut out, crate::io::CONTAINER_VERSION);
+    codec::put_u64(&mut out, SNAP_MAGIC);
+    codec::put_u32(&mut out, SNAP_VERSION);
+    codec::put_u32(&mut out, codec::crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::BinWriter;
+
+    const FP: u64 = 7;
+
+    #[test]
+    fn enrollment_averages() {
+        let reg = Registry::new(4);
+        assert!(reg.is_empty());
+        assert_eq!(reg.enroll("alice", &[1.0, 2.0], FP).unwrap(), 1);
+        assert_eq!(reg.enroll("alice", &[3.0, 4.0], FP).unwrap(), 2);
+        let p = reg.profile("alice").unwrap();
+        assert_eq!(p.count, 2);
+        assert_eq!(p.mean(), vec![2.0, 3.0]);
+        assert!(reg.profile("bob").is_none());
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.total_enrollments(), 2);
+        // a volatile registry reports zeroed durability counters
+        assert_eq!(reg.durability_metrics(), DurabilityMetrics::default());
+    }
+
+    #[test]
+    fn mixed_model_epochs_rejected() {
+        let reg = Registry::new(2);
+        reg.enroll("a", &[1.0], 1).unwrap();
+        let err = reg.enroll("a", &[1.0], 2).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // count unchanged by the rejected enrollment
+        assert_eq!(reg.profile("a").unwrap().count, 1);
+        // after removal the speaker can enroll under the new model
+        assert!(reg.remove("a").unwrap());
+        assert_eq!(reg.enroll("a", &[1.0], 2).unwrap(), 1);
+    }
+
+    #[test]
+    fn remove_and_ids() {
+        let reg = Registry::new(3);
+        for id in ["s2", "s0", "s1"] {
+            reg.enroll(id, &[1.0], FP).unwrap();
+        }
+        assert_eq!(reg.speaker_ids(), vec!["s0", "s1", "s2"]);
+        assert!(reg.remove("s1").unwrap());
+        assert!(!reg.remove("s1").unwrap());
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error_and_the_shard_survives() {
+        // satellite acceptance: a dimension-mismatched enrollment is an
+        // error to that caller, and the shard keeps serving everyone
+        let reg = Registry::new(1); // one shard: every id shares the lock
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        let err = reg.enroll("alice", &[1.0, 2.0, 3.0], FP).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        // profile untouched by the rejected enrollment
+        let p = reg.profile("alice").unwrap();
+        assert_eq!(p.count, 1);
+        assert_eq!(p.sum, vec![1.0, 2.0]);
+        // the same shard still takes enrollments — no poisoned lock
+        assert_eq!(reg.enroll("bob", &[0.5, 0.5], FP).unwrap(), 1);
+        assert_eq!(reg.enroll("alice", &[3.0, 4.0], FP).unwrap(), 2);
+    }
+
+    #[test]
+    fn poisoned_shard_lock_is_tolerated() {
+        // a panic while holding a shard mutex (a buggy holder) must not
+        // take the shard down for every later caller
+        let reg = Registry::new(1);
+        reg.enroll("alice", &[1.0], FP).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = reg.shard("alice").lock().unwrap();
+            panic!("holder bug");
+        }));
+        assert!(caught.is_err());
+        assert!(reg.shard("alice").is_poisoned(), "the mutex really was poisoned");
+        // every accessor keeps working through the poison
+        assert_eq!(reg.profile("alice").unwrap().count, 1);
+        assert_eq!(reg.enroll("alice", &[2.0], FP).unwrap(), 2);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.total_enrollments(), 2);
+        assert_eq!(reg.speaker_ids(), vec!["alice"]);
+        assert!(reg.remove("alice").unwrap());
+    }
+
+    /// Hand-write a **legacy** (pre-versioning) registry file from raw
+    /// records — exactly what `Registry::save` produced before the
+    /// magic + version header, so these tests double as the legacy
+    /// fallback's fixtures.
+    fn write_legacy_registry_file(
+        path: &std::path::Path,
+        records: &[(&str, u64, u64, &[f64])],
+    ) -> Result<()> {
+        let mut w = BinWriter::create(path)?;
+        w.write_u64(records.len() as u64)?;
+        for (id, count, fp, sum) in records {
+            w.write_string(id)?;
+            w.write_u64(*count)?;
+            w.write_u64(*fp)?;
+            w.write_u64(sum.len() as u64)?;
+            w.write_f64_slice(sum)?;
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn load_rejects_corrupt_records() {
+        let dir = std::env::temp_dir().join("ivtv_registry_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // zero-count profile: mean() would divide by zero
+        let p = dir.join("zero_count.bin");
+        write_legacy_registry_file(&p, &[("a", 0, FP, &[1.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("zero enrollments"), "{err}");
+        // the failure is typed all the way through the context chain
+        assert!(matches!(
+            err.downcast_ref::<RegistryStoreError>(),
+            Some(RegistryStoreError::SnapshotCorrupt { .. })
+        ));
+
+        // duplicate speaker ids: last record would silently win
+        let p = dir.join("dup.bin");
+        write_legacy_registry_file(&p, &[("a", 1, FP, &[1.0]), ("a", 2, FP, &[9.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("duplicate speaker"), "{err}");
+
+        // non-finite sums: NaN would poison every later verify score
+        let p = dir.join("nan.bin");
+        write_legacy_registry_file(&p, &[("a", 1, FP, &[f64::NAN, 1.0])]).unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let p = dir.join("inf.bin");
+        write_legacy_registry_file(&p, &[("a", 1, FP, &[f64::INFINITY])]).unwrap();
+        assert!(Registry::load(&p, 2).is_err());
+
+        // a well-formed legacy file with the same shapes still loads
+        let p = dir.join("ok.bin");
+        write_legacy_registry_file(&p, &[("a", 1, FP, &[1.0]), ("b", 2, FP, &[4.0])]).unwrap();
+        let reg = Registry::load(&p, 2).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.profile("b").unwrap().mean(), vec![2.0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let reg = Registry::new(5);
+        reg.enroll("a", &[1.0, -1.0], FP).unwrap();
+        reg.enroll("a", &[2.0, -2.0], FP).unwrap();
+        reg.enroll("b", &[0.5, 0.25], 9).unwrap();
+        let dir = std::env::temp_dir().join("ivtv_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("reg.bin");
+        reg.save(&p).unwrap();
+        // the file on disk is the *versioned* format now
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[8..16], &SNAP_MAGIC.to_le_bytes());
+        // reload into a *different* shard count
+        let back = Registry::load(&p, 2).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.profile("a").unwrap(), reg.profile("a").unwrap());
+        assert_eq!(back.profile("b").unwrap(), reg.profile("b").unwrap());
+    }
+
+    #[test]
+    fn legacy_snapshot_loads_through_the_fallback() {
+        // satellite acceptance: both formats round-trip through `load`
+        let dir = std::env::temp_dir().join("ivtv_registry_legacy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("legacy.bin");
+        write_legacy_registry_file(&p, &[("a", 2, FP, &[3.0, -1.0]), ("b", 1, 9, &[0.5])])
+            .unwrap();
+        let reg = Registry::load(&p, 4).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.profile("a").unwrap().mean(), vec![1.5, -0.5]);
+        assert_eq!(reg.profile("b").unwrap().model_fp, 9);
+        // and a re-save upgrades it to the versioned format
+        let p2 = dir.join("upgraded.bin");
+        reg.save(&p2).unwrap();
+        let bytes = std::fs::read(&p2).unwrap();
+        assert_eq!(&bytes[8..16], &SNAP_MAGIC.to_le_bytes());
+        let back = Registry::load(&p2, 2).unwrap();
+        assert_eq!(back.profile("a").unwrap(), reg.profile("a").unwrap());
+    }
+
+    #[test]
+    fn foreign_ivtv_artifact_is_rejected_not_misparsed() {
+        // the pre-versioning failure mode: any `IVTV` container (say, a
+        // model bundle) parsed its first u64 as a record count. The
+        // legacy fallback now bounds that count.
+        let dir = std::env::temp_dir().join("ivtv_registry_foreign_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("foreign.bin");
+        let mut w = BinWriter::create(&p).unwrap();
+        w.write_u64(u64::MAX / 2).unwrap(); // "record count": absurd
+        w.write_f64_slice(&[1.0; 16]).unwrap();
+        w.finish().unwrap();
+        let err = Registry::load(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn versioned_snapshot_carries_the_wal_seq() {
+        let reg = Registry::new(2);
+        reg.enroll("a", &[1.0], FP).unwrap();
+        let bytes = encode_snapshot(&reg.collect_profiles(), 42);
+        let (back, seq) = Registry::decode_snapshot(&bytes, 3).unwrap();
+        assert_eq!(seq, 42);
+        assert_eq!(back.profile("a").unwrap(), reg.profile("a").unwrap());
+    }
+
+    #[test]
+    fn snapshot_truncation_sweep_always_errors_typed() {
+        // satellite sweep: a versioned snapshot truncated at EVERY
+        // prefix length must error (typed), never panic, never load
+        let reg = Registry::new(2);
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        reg.enroll("bob", &[3.0], 9).unwrap();
+        reg.enroll("carol", &[4.0, 5.0], FP).unwrap();
+        let bytes = encode_snapshot(&reg.collect_profiles(), 3);
+        for cut in 0..bytes.len() {
+            let err = match Registry::decode_snapshot(&bytes[..cut], 2) {
+                Ok(_) => panic!("truncation at {cut} must not load"),
+                Err(e) => e,
+            };
+            assert!(
+                matches!(
+                    err.downcast_ref::<RegistryStoreError>(),
+                    Some(RegistryStoreError::SnapshotCorrupt { .. })
+                ),
+                "cut at {cut}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_bitflip_sweep_never_loads_wrong_profiles() {
+        // satellite sweep: flip bits at sampled offsets across the
+        // whole image — the checksum (or, for header bytes, the magic /
+        // version / count-bound checks) must reject every one
+        let reg = Registry::new(2);
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        reg.enroll("bob", &[-0.5, 0.25], FP).unwrap();
+        let bytes = encode_snapshot(&reg.collect_profiles(), 17);
+        for offset in 0..bytes.len() {
+            for bit in [0u8, 4, 7] {
+                let mut bad = bytes.clone();
+                bad[offset] ^= 1 << bit;
+                assert!(
+                    Registry::decode_snapshot(&bad, 2).is_err(),
+                    "flip at {offset} bit {bit} silently loaded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join("ivtv_registry_atomic_test");
+        // fresh dir: the leftover-file assertion below must see only
+        // what this test writes
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("reg.bin");
+
+        let reg = Registry::new(3);
+        reg.enroll("a", &[1.0, 2.0], FP).unwrap();
+        reg.save(&p).unwrap();
+
+        // overwrite with a bigger registry: the target is replaced wholesale
+        reg.enroll("b", &[3.0, 4.0], FP).unwrap();
+        reg.enroll("c", &[5.0, 6.0], FP).unwrap();
+        reg.save(&p).unwrap();
+        let back = Registry::load(&p, 2).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.profile("c").unwrap().sum, vec![5.0, 6.0]);
+
+        // nothing but the snapshot itself remains in the directory
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "reg.bin")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+
+        // a failed save (unwritable target directory) reports an error
+        // and leaves the existing snapshot untouched
+        let bad = dir.join("no_such_subdir_parent.bin");
+        std::fs::write(&bad, b"sentinel").unwrap();
+        let unwritable = bad.join("reg.bin"); // parent is a file → create fails
+        assert!(reg.save(&unwritable).is_err());
+        let still = Registry::load(&p, 2).unwrap();
+        assert_eq!(still.len(), 3, "failed save must not touch the good snapshot");
+    }
+
+    #[test]
+    fn concurrent_enrollments_are_not_lost() {
+        let reg = std::sync::Arc::new(Registry::new(8));
+        let threads = 8;
+        let per_thread = 200;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let reg = std::sync::Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    // contended speaker + a per-thread speaker
+                    reg.enroll("shared", &[1.0, 1.0], FP).unwrap();
+                    reg.enroll(&format!("spk{t}"), &[i as f64, 0.0], FP).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let shared = reg.profile("shared").unwrap();
+        assert_eq!(shared.count, (threads * per_thread) as u64);
+        // identical addends ⇒ the sum is exact regardless of order
+        assert_eq!(shared.mean(), vec![1.0, 1.0]);
+        assert_eq!(reg.len(), threads + 1);
+        assert_eq!(reg.total_enrollments(), (2 * threads * per_thread) as u64);
+    }
+}

@@ -1,0 +1,509 @@
+//! Pluggable registry persistence: the [`RegistryStorage`] trait, the
+//! real file backend, an in-memory backend (tests, benches), and the
+//! deterministic [`FaultInjector`] the crash-recovery suite scripts.
+//!
+//! The durable registry never touches the filesystem directly — every
+//! byte goes through this trait, which is what makes the fault
+//! injection honest: a scripted torn write or failed fsync exercises
+//! exactly the code paths a real one would.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+/// Byte-level persistence for one registry: an append-only WAL plus a
+/// single swappable snapshot. Implementations must be safe to call from
+/// concurrent threads; the durable layer already serializes mutations
+/// on its WAL lock, but reads and admin calls can overlap.
+pub trait RegistryStorage: Send + Sync {
+    /// Append raw bytes to the WAL. No durability is implied until
+    /// [`RegistryStorage::sync_wal`] returns.
+    fn append_wal(&self, buf: &[u8]) -> Result<()>;
+    /// Force all appended WAL bytes to stable storage.
+    fn sync_wal(&self) -> Result<()>;
+    /// The whole WAL as last written; empty when none exists yet.
+    fn read_wal(&self) -> Result<Vec<u8>>;
+    /// Truncate the WAL to `len` bytes (torn-tail repair, compaction).
+    fn truncate_wal(&self, len: u64) -> Result<()>;
+    /// The current snapshot bytes, if a snapshot has been written.
+    fn read_snapshot(&self) -> Result<Option<Vec<u8>>>;
+    /// Atomically replace the snapshot (write-aside + durable rename —
+    /// a crash mid-swap must leave the previous snapshot intact).
+    fn swap_snapshot(&self, bytes: &[u8]) -> Result<()>;
+    /// Human-readable location for error context and logs.
+    fn describe(&self) -> String;
+}
+
+/// Write `bytes` to `path` crash-atomically: fresh same-directory temp
+/// file → `fsync` → `rename(2)` → best-effort directory fsync. Shared
+/// by [`FileStorage::swap_snapshot`] and `Registry::save`.
+pub(crate) fn atomic_write_synced(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create directory {}", dir.display()))?;
+        }
+    }
+    // unique per (process, write): concurrent writers to one path must
+    // not scribble over each other's half-written temp file
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "registry".into());
+    let tmp = path.with_file_name(format!(".{name}.tmp.{}.{seq}", std::process::id()));
+    let write = (|| -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        // fsync before the rename: the swap is only crash-atomic if the
+        // temp file's data blocks reach stable storage before the
+        // rename is journaled
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} into place", tmp.display()))?;
+        // best effort: persist the directory entry too, so the rename
+        // itself survives a power loss (failure leaves the old, intact
+        // file — not corruption — so it is not fatal)
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
+    })();
+    if write.is_err() {
+        // never leave a half-written temp file behind
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write
+}
+
+/// The real backend: `registry.wal` + `registry.snap` inside one
+/// directory. The WAL append handle is opened once (`O_APPEND`) and
+/// cached; `O_APPEND` writes land at the current end of file even after
+/// an out-of-band truncate, so compaction never has to reopen it.
+pub struct FileStorage {
+    dir: PathBuf,
+    wal: Mutex<Option<std::fs::File>>,
+}
+
+impl FileStorage {
+    /// Open (creating the directory if needed).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create registry directory {}", dir.display()))?;
+        Ok(Self { dir, wal: Mutex::new(None) })
+    }
+
+    /// Path of the append-only WAL inside the directory.
+    pub fn wal_path(&self) -> PathBuf {
+        self.dir.join("registry.wal")
+    }
+
+    /// Path of the compacted snapshot inside the directory.
+    pub fn snapshot_path(&self) -> PathBuf {
+        self.dir.join("registry.snap")
+    }
+}
+
+impl RegistryStorage for FileStorage {
+    fn append_wal(&self, buf: &[u8]) -> Result<()> {
+        use std::io::Write;
+        let mut guard = self.wal.lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(self.wal_path())
+                .with_context(|| format!("open {} for append", self.wal_path().display()))?;
+            *guard = Some(f);
+        }
+        guard.as_mut().unwrap().write_all(buf).context("append to registry WAL")
+    }
+
+    fn sync_wal(&self) -> Result<()> {
+        let guard = self.wal.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.as_ref() {
+            Some(f) => f.sync_data().context("fsync registry WAL"),
+            None => Ok(()), // nothing appended through this handle yet
+        }
+    }
+
+    fn read_wal(&self) -> Result<Vec<u8>> {
+        match std::fs::read(self.wal_path()) {
+            Ok(b) => Ok(b),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(e).with_context(|| format!("read {}", self.wal_path().display())),
+        }
+    }
+
+    fn truncate_wal(&self, len: u64) -> Result<()> {
+        // hold the append-handle lock so a truncate cannot interleave
+        // with a concurrent append's write_all
+        let _guard = self.wal.lock().unwrap_or_else(|p| p.into_inner());
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(self.wal_path())
+            .with_context(|| format!("open {} for truncate", self.wal_path().display()))?;
+        f.set_len(len).context("truncate registry WAL")?;
+        f.sync_all().context("fsync truncated registry WAL")
+    }
+
+    fn read_snapshot(&self) -> Result<Option<Vec<u8>>> {
+        match std::fs::read(self.snapshot_path()) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("read {}", self.snapshot_path().display())),
+        }
+    }
+
+    fn swap_snapshot(&self, bytes: &[u8]) -> Result<()> {
+        atomic_write_synced(&self.snapshot_path(), bytes)
+    }
+
+    fn describe(&self) -> String {
+        format!("file:{}", self.dir.display())
+    }
+}
+
+/// In-memory backend whose clones share one store — "reopening after a
+/// crash" is a fresh [`MemStorage::clone`], exactly the bytes the dying
+/// instance managed to persist. Used by the fault-injection suite and
+/// the recovery bench's deterministic mode.
+#[derive(Clone, Default)]
+pub struct MemStorage {
+    inner: Arc<MemInner>,
+}
+
+#[derive(Default)]
+struct MemInner {
+    wal: Mutex<Vec<u8>>,
+    snap: Mutex<Option<Vec<u8>>>,
+}
+
+impl MemStorage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from exact preset bytes (the corruption sweeps construct
+    /// truncated/bit-flipped files directly).
+    pub fn seeded(wal: Vec<u8>, snap: Option<Vec<u8>>) -> Self {
+        Self { inner: Arc::new(MemInner { wal: Mutex::new(wal), snap: Mutex::new(snap) }) }
+    }
+
+    /// Current WAL bytes (test inspection).
+    pub fn wal_bytes(&self) -> Vec<u8> {
+        self.inner.wal.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Current snapshot bytes (test inspection).
+    pub fn snapshot_bytes(&self) -> Option<Vec<u8>> {
+        self.inner.snap.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+impl RegistryStorage for MemStorage {
+    fn append_wal(&self, buf: &[u8]) -> Result<()> {
+        self.inner.wal.lock().unwrap_or_else(|p| p.into_inner()).extend_from_slice(buf);
+        Ok(())
+    }
+
+    fn sync_wal(&self) -> Result<()> {
+        Ok(()) // memory is "durable" the moment it is written
+    }
+
+    fn read_wal(&self) -> Result<Vec<u8>> {
+        Ok(self.wal_bytes())
+    }
+
+    fn truncate_wal(&self, len: u64) -> Result<()> {
+        let mut wal = self.inner.wal.lock().unwrap_or_else(|p| p.into_inner());
+        let len = usize::try_from(len).unwrap_or(usize::MAX);
+        if len < wal.len() {
+            wal.truncate(len);
+        }
+        Ok(())
+    }
+
+    fn read_snapshot(&self) -> Result<Option<Vec<u8>>> {
+        Ok(self.snapshot_bytes())
+    }
+
+    fn swap_snapshot(&self, bytes: &[u8]) -> Result<()> {
+        *self.inner.snap.lock().unwrap_or_else(|p| p.into_inner()) = Some(bytes.to_vec());
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        "mem".into()
+    }
+}
+
+/// One scripted storage failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// The append persists only its first `keep` bytes, then errors —
+    /// a torn write (partial page, interrupted `write(2)`).
+    TornWrite { keep: usize },
+    /// The op fails up front, nothing reaches the backend (`ENOSPC`).
+    Enospc,
+    /// The fsync fails; bytes already appended may or may not be
+    /// durable.
+    SyncFail,
+    /// Torn write, then the backend is dead: every later operation
+    /// fails. A crashed process/disk — only a *fresh* storage handle
+    /// (recovery) can see the bytes again.
+    Crash { keep: usize },
+    /// The read succeeds but the byte at `offset` comes back XORed
+    /// with `xor` — read-side bit rot.
+    CorruptRead { offset: usize, xor: u8 },
+}
+
+#[derive(Default)]
+struct Plan {
+    /// Operations seen so far (every trait call counts).
+    op: u64,
+    /// Appends seen so far (appends only; sync-policy independent).
+    appends: u64,
+    faults: Vec<(u64, Fault)>,
+    crash_at_append: Option<(u64, usize)>,
+    dead: bool,
+}
+
+/// Deterministic fault-injecting wrapper around any backend. Faults are
+/// scripted at operation counts (every trait call increments the
+/// counter) or, for crash drills, at append counts — append numbering
+/// does not shift when the sync policy changes.
+pub struct FaultInjector {
+    inner: Box<dyn RegistryStorage>,
+    plan: Mutex<Plan>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn RegistryStorage>) -> Self {
+        Self { inner, plan: Mutex::new(Plan::default()) }
+    }
+
+    /// Schedule `fault` for the `op`-th storage operation (0-based).
+    pub fn fail_op(self, op: u64, fault: Fault) -> Self {
+        self.plan.lock().unwrap_or_else(|p| p.into_inner()).faults.push((op, fault));
+        self
+    }
+
+    /// Crash on the `n`-th WAL append (0-based, counting appends only):
+    /// persist `keep` bytes of it, then fail every later operation.
+    pub fn crash_at_append(self, n: u64, keep: usize) -> Self {
+        self.plan.lock().unwrap_or_else(|p| p.into_inner()).crash_at_append = Some((n, keep));
+        self
+    }
+
+    /// Operations observed so far (script calibration in tests).
+    pub fn ops(&self) -> u64 {
+        self.plan.lock().unwrap_or_else(|p| p.into_inner()).op
+    }
+
+    /// Count the op; return the fault scheduled for it, if any. Errors
+    /// immediately once the backend has "crashed".
+    fn next(&self, is_append: bool) -> Result<Option<Fault>> {
+        let mut plan = self.plan.lock().unwrap_or_else(|p| p.into_inner());
+        if plan.dead {
+            bail!("injected: storage backend is dead (crashed earlier in the script)");
+        }
+        let op = plan.op;
+        plan.op += 1;
+        let mut fault =
+            plan.faults.iter().find(|(at, _)| *at == op).map(|(_, f)| f.clone());
+        if is_append {
+            let append = plan.appends;
+            plan.appends += 1;
+            if let Some((at, keep)) = plan.crash_at_append {
+                if append == at {
+                    fault = Some(Fault::Crash { keep });
+                }
+            }
+        }
+        if matches!(fault, Some(Fault::Crash { .. })) {
+            plan.dead = true;
+        }
+        Ok(fault)
+    }
+}
+
+impl RegistryStorage for FaultInjector {
+    fn append_wal(&self, buf: &[u8]) -> Result<()> {
+        match self.next(true)? {
+            None => self.inner.append_wal(buf),
+            Some(Fault::TornWrite { keep }) | Some(Fault::Crash { keep }) => {
+                let keep = keep.min(buf.len());
+                if keep > 0 {
+                    // the torn prefix really lands in the backend — that
+                    // is the whole point of the drill
+                    let _ = self.inner.append_wal(&buf[..keep]);
+                }
+                bail!("injected: torn append ({keep} of {} bytes persisted)", buf.len())
+            }
+            Some(Fault::Enospc) => bail!("injected: No space left on device"),
+            Some(f) => bail!("injected: fault {f:?} scripted on append"),
+        }
+    }
+
+    fn sync_wal(&self) -> Result<()> {
+        match self.next(false)? {
+            None => self.inner.sync_wal(),
+            Some(Fault::SyncFail) => bail!("injected: fsync failed"),
+            Some(f) => bail!("injected: fault {f:?} scripted on sync"),
+        }
+    }
+
+    fn read_wal(&self) -> Result<Vec<u8>> {
+        match self.next(false)? {
+            None => self.inner.read_wal(),
+            Some(Fault::CorruptRead { offset, xor }) => {
+                let mut b = self.inner.read_wal()?;
+                if offset < b.len() {
+                    b[offset] ^= xor;
+                }
+                Ok(b)
+            }
+            Some(f) => bail!("injected: fault {f:?} scripted on read_wal"),
+        }
+    }
+
+    fn truncate_wal(&self, len: u64) -> Result<()> {
+        match self.next(false)? {
+            None => self.inner.truncate_wal(len),
+            Some(f) => bail!("injected: fault {f:?} scripted on truncate"),
+        }
+    }
+
+    fn read_snapshot(&self) -> Result<Option<Vec<u8>>> {
+        match self.next(false)? {
+            None => self.inner.read_snapshot(),
+            Some(Fault::CorruptRead { offset, xor }) => {
+                let mut b = self.inner.read_snapshot()?;
+                if let Some(bytes) = b.as_mut() {
+                    if offset < bytes.len() {
+                        bytes[offset] ^= xor;
+                    }
+                }
+                Ok(b)
+            }
+            Some(f) => bail!("injected: fault {f:?} scripted on read_snapshot"),
+        }
+    }
+
+    fn swap_snapshot(&self, bytes: &[u8]) -> Result<()> {
+        match self.next(false)? {
+            None => self.inner.swap_snapshot(bytes),
+            Some(f) => bail!("injected: fault {f:?} scripted on snapshot swap"),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("fault-injected({})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_storage_round_trips_and_truncates() {
+        let dir = std::env::temp_dir().join("ivtv_registry_storage_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = FileStorage::open(&dir).unwrap();
+        assert_eq!(s.read_wal().unwrap(), Vec::<u8>::new());
+        assert!(s.read_snapshot().unwrap().is_none());
+        s.append_wal(b"hello ").unwrap();
+        s.append_wal(b"world").unwrap();
+        s.sync_wal().unwrap();
+        assert_eq!(s.read_wal().unwrap(), b"hello world");
+        s.truncate_wal(5).unwrap();
+        assert_eq!(s.read_wal().unwrap(), b"hello");
+        // O_APPEND handle keeps appending at the *new* end after truncate
+        s.append_wal(b"!").unwrap();
+        assert_eq!(s.read_wal().unwrap(), b"hello!");
+        s.swap_snapshot(b"snap-v1").unwrap();
+        s.swap_snapshot(b"snap-v2").unwrap();
+        assert_eq!(s.read_snapshot().unwrap().unwrap(), b"snap-v2");
+        // the snapshot swap leaves no temp files behind
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "registry.wal" && n != "registry.snap")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        // a second handle on the same directory sees the same bytes
+        let s2 = FileStorage::open(&dir).unwrap();
+        assert_eq!(s2.read_wal().unwrap(), b"hello!");
+    }
+
+    #[test]
+    fn mem_storage_clones_share_the_store() {
+        let a = MemStorage::new();
+        let b = a.clone();
+        a.append_wal(b"abc").unwrap();
+        assert_eq!(b.read_wal().unwrap(), b"abc");
+        b.swap_snapshot(b"s").unwrap();
+        assert_eq!(a.read_snapshot().unwrap().unwrap(), b"s");
+    }
+
+    #[test]
+    fn injector_scripts_are_deterministic() {
+        let mem = MemStorage::new();
+        let inj = FaultInjector::new(Box::new(mem.clone()))
+            .fail_op(1, Fault::Enospc)
+            .fail_op(3, Fault::SyncFail);
+        inj.append_wal(b"ok0").unwrap(); // op 0
+        let e = inj.append_wal(b"gone").unwrap_err(); // op 1: ENOSPC
+        assert!(e.to_string().contains("No space left"), "{e}");
+        // nothing from the failed append reached the backend
+        assert_eq!(mem.wal_bytes(), b"ok0");
+        inj.append_wal(b"ok1").unwrap(); // op 2
+        assert!(inj.sync_wal().is_err()); // op 3: fsync fails
+        inj.sync_wal().unwrap(); // op 4
+        assert_eq!(inj.ops(), 5);
+    }
+
+    #[test]
+    fn crash_leaves_a_torn_prefix_then_kills_the_backend() {
+        let mem = MemStorage::new();
+        let inj = FaultInjector::new(Box::new(mem.clone())).crash_at_append(2, 3);
+        inj.append_wal(b"aaaa").unwrap();
+        // an interleaved sync must not shift append numbering
+        inj.sync_wal().unwrap();
+        inj.append_wal(b"bbbb").unwrap();
+        let e = inj.append_wal(b"cccccc").unwrap_err();
+        assert!(e.to_string().contains("torn append"), "{e}");
+        // 3 bytes of the dying write persisted — the torn tail
+        assert_eq!(mem.wal_bytes(), b"aaaabbbbccc");
+        // everything after the crash fails, reads included
+        assert!(inj.read_wal().is_err());
+        assert!(inj.sync_wal().is_err());
+        assert!(inj.swap_snapshot(b"x").is_err());
+        // but a *fresh* handle on the backend (recovery) sees the bytes
+        assert_eq!(mem.read_wal().unwrap(), b"aaaabbbbccc");
+    }
+
+    #[test]
+    fn corrupt_read_flips_exactly_one_byte() {
+        let mem = MemStorage::new();
+        mem.append_wal(b"\x00\x00\x00\x00").unwrap();
+        let inj = FaultInjector::new(Box::new(mem))
+            .fail_op(0, Fault::CorruptRead { offset: 2, xor: 0x80 });
+        assert_eq!(inj.read_wal().unwrap(), b"\x00\x00\x80\x00");
+        // the corruption was read-side only: the next read is clean
+        assert_eq!(inj.read_wal().unwrap(), b"\x00\x00\x00\x00");
+    }
+}

@@ -1,0 +1,352 @@
+//! The enrollment write-ahead log: length-prefixed, CRC-checksummed
+//! `Enroll`/`Remove` records behind an 8-byte `IVWL` header.
+//!
+//! On-disk layout (all little-endian):
+//!
+//! ```text
+//! "IVWL" u32:version                                  — file header
+//! u32:payload_len u32:crc32(payload) payload          — per record
+//! payload = u64:seq u8:op u32:id_len id
+//!           [op=Enroll: u64:model_fp u32:dim dim×f64] — record body
+//! ```
+//!
+//! Replay distinguishes the two ways a log goes bad:
+//!
+//! * **torn tail** — the *final* record is short or fails its CRC, with
+//!   no bytes after it. That is exactly what a crash mid-append leaves
+//!   behind; replay stops cleanly at the last intact record, reports
+//!   `torn_tail`, and the opener truncates the file there. Tolerated,
+//!   counted, never a panic.
+//! * **mid-log corruption** — a short length, bad CRC, or sequence
+//!   regression with more bytes *after* it. No crash produces that
+//!   (appends are sequential); it means bit rot or a foreign writer, so
+//!   replay refuses the whole log with a typed
+//!   [`RegistryStoreError::WalCorrupt`] rather than guess at state.
+
+use anyhow::{ensure, Result};
+
+use super::codec::{self, Cur};
+use super::RegistryStoreError;
+
+pub(crate) const WAL_MAGIC: &[u8; 4] = b"IVWL";
+pub(crate) const WAL_VERSION: u32 = 1;
+/// Bytes of the file header (`IVWL` + version).
+pub(crate) const HEADER_LEN: u64 = 8;
+/// Upper bound on one record's payload: a single enrollment i-vector is
+/// a few KB, so anything near this is corruption, not data.
+const MAX_RECORD: u32 = 1 << 24;
+
+const OP_ENROLL: u8 = 1;
+const OP_REMOVE: u8 = 2;
+
+/// One logged mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalOp {
+    Enroll { speaker: String, model_fp: u64, ivector: Vec<f64> },
+    Remove { speaker: String },
+}
+
+/// A mutation with its log sequence number (strictly increasing within
+/// one WAL; snapshots record the last seq they cover).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub op: WalOp,
+}
+
+/// The 8-byte file header.
+pub(crate) fn header() -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_LEN as usize);
+    h.extend_from_slice(WAL_MAGIC);
+    codec::put_u32(&mut h, WAL_VERSION);
+    h
+}
+
+/// Serialize one record (length prefix + CRC + payload).
+pub(crate) fn encode_record(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    codec::put_u64(&mut payload, rec.seq);
+    match &rec.op {
+        WalOp::Enroll { speaker, model_fp, ivector } => {
+            payload.push(OP_ENROLL);
+            codec::put_str(&mut payload, speaker);
+            codec::put_u64(&mut payload, *model_fp);
+            codec::put_u32(&mut payload, ivector.len() as u32);
+            codec::put_f64_slice(&mut payload, ivector);
+        }
+        WalOp::Remove { speaker } => {
+            payload.push(OP_REMOVE);
+            codec::put_str(&mut payload, speaker);
+        }
+    }
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    codec::put_u32(&mut out, payload.len() as u32);
+    codec::put_u32(&mut out, codec::crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// What [`replay`] recovered from a WAL's bytes.
+#[derive(Debug, Default)]
+pub struct WalReplay {
+    /// Intact records, in log order.
+    pub records: Vec<WalRecord>,
+    /// True when the log ended in a short or CRC-failing final record —
+    /// the signature of a crash mid-append.
+    pub torn_tail: bool,
+    /// Bytes of the valid prefix (header + intact records). Recovery
+    /// truncates the file here before appending again.
+    pub valid_len: u64,
+    /// Highest sequence number seen (0 when no records).
+    pub last_seq: u64,
+}
+
+fn corrupt(record: u64, offset: usize, detail: impl Into<String>) -> anyhow::Error {
+    RegistryStoreError::WalCorrupt { record, offset: offset as u64, detail: detail.into() }
+        .into()
+}
+
+/// Parse a WAL image: every intact record up to a clean EOF or a torn
+/// tail. Mid-log corruption is a typed error; a torn tail never is.
+pub(crate) fn replay(bytes: &[u8]) -> Result<WalReplay> {
+    let mut rep = WalReplay::default();
+    if (bytes.len() as u64) < HEADER_LEN {
+        // empty (fresh store) or header-torn: nothing to replay; the
+        // opener rewrites the header
+        rep.torn_tail = !bytes.is_empty();
+        return Ok(rep);
+    }
+    if &bytes[..4] != WAL_MAGIC {
+        return Err(corrupt(0, 0, "bad magic — not a registry WAL"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != WAL_VERSION {
+        return Err(corrupt(0, 4, format!("unsupported WAL version {version}")));
+    }
+    rep.valid_len = HEADER_LEN;
+    let mut pos = HEADER_LEN as usize;
+    let mut index = 0u64;
+    while pos < bytes.len() {
+        let rem = bytes.len() - pos;
+        if rem < 8 {
+            rep.torn_tail = true; // not even a record header made it out
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        let end = pos as u64 + 8 + u64::from(len);
+        if len > MAX_RECORD {
+            if end > bytes.len() as u64 {
+                rep.torn_tail = true; // garbage length in a torn header
+                break;
+            }
+            // an absurd length with real bytes behind it is bit rot,
+            // not a crash
+            return Err(corrupt(index, pos, format!("record length {len} implausible")));
+        }
+        if end > bytes.len() as u64 {
+            rep.torn_tail = true; // the record's bytes never all landed
+            break;
+        }
+        let end = end as usize;
+        let payload = &bytes[pos + 8..end];
+        if codec::crc32(payload) != crc {
+            if end == bytes.len() {
+                rep.torn_tail = true; // garbage final record from a crashed write
+                break;
+            }
+            return Err(corrupt(index, pos, "record checksum mismatch"));
+        }
+        let rec =
+            decode_payload(payload).map_err(|e| corrupt(index, pos, format!("{e:#}")))?;
+        if rec.seq <= rep.last_seq {
+            return Err(corrupt(
+                index,
+                pos,
+                format!("sequence {} does not advance past {}", rec.seq, rep.last_seq),
+            ));
+        }
+        rep.last_seq = rec.seq;
+        rep.records.push(rec);
+        pos = end;
+        rep.valid_len = pos as u64;
+        index += 1;
+    }
+    Ok(rep)
+}
+
+/// Decode a CRC-verified payload. A failure here means the bytes are
+/// exactly what some writer produced — a format bug or foreign writer,
+/// so the caller treats it as corruption, torn tail or not.
+fn decode_payload(payload: &[u8]) -> Result<WalRecord> {
+    let mut c = Cur::new(payload);
+    let seq = c.u64()?;
+    ensure!(seq > 0, "record sequence 0 is reserved");
+    let op = match c.u8()? {
+        OP_ENROLL => {
+            let speaker = c.str_u32()?;
+            let model_fp = c.u64()?;
+            let dim = c.u32()? as usize;
+            ensure!(dim <= 1 << 20, "i-vector dim {dim} implausible");
+            let ivector = c.f64_vec(dim)?;
+            WalOp::Enroll { speaker, model_fp, ivector }
+        }
+        OP_REMOVE => WalOp::Remove { speaker: c.str_u32()? },
+        other => anyhow::bail!("unknown op tag {other}"),
+    };
+    ensure!(c.at_end(), "{} trailing bytes in record payload", c.remaining());
+    Ok(WalRecord { seq, op })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord {
+                seq: 1,
+                op: WalOp::Enroll {
+                    speaker: "alice".into(),
+                    model_fp: 7,
+                    ivector: vec![1.0, -2.5, 0.125],
+                },
+            },
+            WalRecord { seq: 2, op: WalOp::Remove { speaker: "bob".into() } },
+            WalRecord {
+                seq: 5, // gaps are fine; only regressions are corrupt
+                op: WalOp::Enroll { speaker: "bob".into(), model_fp: 7, ivector: vec![4.0] },
+            },
+        ]
+    }
+
+    fn sample_wal() -> Vec<u8> {
+        let mut bytes = header();
+        for r in sample_records() {
+            bytes.extend_from_slice(&encode_record(&r));
+        }
+        bytes
+    }
+
+    #[test]
+    fn encode_replay_round_trip() {
+        let bytes = sample_wal();
+        let rep = replay(&bytes).unwrap();
+        assert_eq!(rep.records, sample_records());
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.valid_len, bytes.len() as u64);
+        assert_eq!(rep.last_seq, 5);
+    }
+
+    #[test]
+    fn empty_and_header_only_logs_are_clean() {
+        let rep = replay(&[]).unwrap();
+        assert!(rep.records.is_empty() && !rep.torn_tail && rep.valid_len == 0);
+        let rep = replay(&header()).unwrap();
+        assert!(rep.records.is_empty() && !rep.torn_tail);
+        assert_eq!(rep.valid_len, HEADER_LEN);
+    }
+
+    #[test]
+    fn every_truncation_is_a_tolerated_torn_tail() {
+        // satellite sweep (byte level): chop the log at every prefix
+        // length — replay must never panic, never error, and always
+        // return an exact prefix of the original records
+        let bytes = sample_wal();
+        let full = sample_records();
+        for cut in 0..bytes.len() {
+            let rep = replay(&bytes[..cut]).unwrap_or_else(|e| {
+                panic!("cut at {cut} must be a torn tail, got error: {e:#}")
+            });
+            assert!(
+                full.starts_with(&rep.records),
+                "cut at {cut}: recovered records are not a prefix"
+            );
+            assert!(rep.valid_len <= cut as u64);
+            // torn exactly when partial bytes dangle past the valid prefix
+            assert_eq!(
+                rep.torn_tail,
+                (rep.valid_len as usize) < cut,
+                "cut at {cut}: torn_tail disagrees with the dangling bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_are_torn_tail_or_typed_corruption_never_wrong_data() {
+        let bytes = sample_wal();
+        let full = sample_records();
+        for offset in 0..bytes.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = bytes.clone();
+                bad[offset] ^= 1 << bit;
+                match replay(&bad) {
+                    Ok(rep) => {
+                        // tolerated only as a torn *tail*: the surviving
+                        // records must be an exact prefix
+                        assert!(
+                            full.starts_with(&rep.records),
+                            "flip at {offset} bit {bit} loaded wrong records"
+                        );
+                        // the flipped byte is inside *some* record, so a
+                        // tolerated outcome must have dropped at least it
+                        assert!(rep.records.len() < full.len());
+                    }
+                    Err(e) => {
+                        let typed = e
+                            .downcast_ref::<RegistryStoreError>()
+                            .unwrap_or_else(|| panic!("untyped error for flip at {offset}: {e:#}"));
+                        assert!(matches!(typed, RegistryStoreError::WalCorrupt { .. }));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mid_log_corruption_is_rejected_with_record_and_offset() {
+        let mut bytes = sample_wal();
+        // flip a payload byte of the FIRST record — bytes follow it, so
+        // this must never be shrugged off as a torn tail
+        let flip_at = HEADER_LEN as usize + 8 + 2;
+        bytes[flip_at] ^= 0x10;
+        let err = replay(&bytes).unwrap_err();
+        match err.downcast_ref::<RegistryStoreError>() {
+            Some(RegistryStoreError::WalCorrupt { record, offset, detail }) => {
+                assert_eq!(*record, 0);
+                assert_eq!(*offset, HEADER_LEN);
+                assert!(detail.contains("checksum"), "{detail}");
+            }
+            other => panic!("expected WalCorrupt, got {other:?} / {err:#}"),
+        }
+        assert!(err.to_string().contains("registry WAL corrupt"), "{err}");
+    }
+
+    #[test]
+    fn sequence_regression_is_corruption() {
+        let mut bytes = header();
+        let r1 = WalRecord { seq: 3, op: WalOp::Remove { speaker: "a".into() } };
+        let r2 = WalRecord { seq: 3, op: WalOp::Remove { speaker: "b".into() } };
+        bytes.extend_from_slice(&encode_record(&r1));
+        bytes.extend_from_slice(&encode_record(&r2));
+        let err = replay(&bytes).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RegistryStoreError>(),
+                Some(RegistryStoreError::WalCorrupt { record: 1, .. })
+            ),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn foreign_magic_and_version_are_typed_errors() {
+        let mut bytes = sample_wal();
+        bytes[0] = b'X';
+        assert!(replay(&bytes).unwrap_err().downcast_ref::<RegistryStoreError>().is_some());
+        let mut bytes = sample_wal();
+        bytes[4] = 9; // version 9
+        let err = replay(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+}
