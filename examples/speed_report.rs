@@ -241,7 +241,8 @@ fn serving_bench_json(
     println!("\n== serving load replay ({requests} verify requests, {concurrency} clients) ==");
     let traffic = TrafficGen::new(&cfg.corpus, 8, 4242);
     let opts = ServeBenchOpts { speakers: 8, enroll_utts: 2, requests, concurrency };
-    let (batched, unbatched) = run_batched_vs_unbatched(bundle, &cfg.serve, &traffic, &opts)?;
+    let (batched, unbatched, obs) =
+        run_batched_vs_unbatched(bundle, &cfg.serve, &cfg.obs, &traffic, &opts)?;
     println!(
         "-> batched: {:.0} req/s (p50 {:.2} ms, p99 {:.2} ms, mean batch {:.2}); \
          unbatched: {:.0} req/s (p50 {:.2} ms, p99 {:.2} ms)",
@@ -261,6 +262,16 @@ fn serving_bench_json(
         batched.queue_depth_max,
         batched.queue_depth_mean,
     );
+    for (stage, s) in obs.stage_summaries() {
+        if s.count > 0 {
+            println!(
+                "-> stage {stage:<16} n {:>6}  p50 {:>8.3} ms  p99 {:>8.3} ms",
+                s.count,
+                s.p50_s * 1e3,
+                s.p99_s * 1e3,
+            );
+        }
+    }
     write_bench2_json("BENCH_2.json", &[("batched", &batched), ("unbatched", &unbatched)])?;
     println!("wrote BENCH_2.json");
     Ok(())
@@ -410,18 +421,27 @@ fn kernel_bench_json(
          estep {ups_batched:.2} utts/s vs {ups_scalar:.2} scalar ({estep_speedup:.2}x)"
     );
 
-    let json = format!(
-        "{{\n  \"issue\": 1,\n  \"dims\": {{\"C\": {c}, \"F\": {f}, \"R\": {r}, \
-\"frames\": {n_frames}, \"utts\": {n_utts}, \"top_k\": {top_k}}},\n  \
-\"alignment\": {{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
-\"frames_per_s_scalar\": {fps_scalar:.2}, \"frames_per_s_batched\": {fps_batched:.2}, \
-\"speedup\": {align_speedup:.3}}},\n  \
-\"estep\": {{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
-\"utts_per_s_scalar\": {ups_scalar:.4}, \"utts_per_s_batched\": {ups_batched:.4}, \
-\"speedup\": {estep_speedup:.3}}}\n}}\n",
-        align_scalar.median_s, align_batched.median_s, estep_scalar.median_s, estep_batched.median_s,
+    let dims = format!(
+        "{{\"C\": {c}, \"F\": {f}, \"R\": {r}, \"frames\": {n_frames}, \
+\"utts\": {n_utts}, \"top_k\": {top_k}}}"
     );
-    std::fs::write("BENCH_1.json", &json)?;
+    let alignment = format!(
+        "{{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
+\"frames_per_s_scalar\": {fps_scalar:.2}, \"frames_per_s_batched\": {fps_batched:.2}, \
+\"speedup\": {align_speedup:.3}}}",
+        align_scalar.median_s, align_batched.median_s,
+    );
+    let estep = format!(
+        "{{\"scalar_s\": {:.6}, \"batched_s\": {:.6}, \
+\"utts_per_s_scalar\": {ups_scalar:.4}, \"utts_per_s_batched\": {ups_batched:.4}, \
+\"speedup\": {estep_speedup:.3}}}",
+        estep_scalar.median_s, estep_batched.median_s,
+    );
+    ivector_tv::bench_util::write_bench_json(
+        "BENCH_1.json",
+        1,
+        &[("dims", dims), ("alignment", alignment), ("estep", estep)],
+    )?;
     println!("wrote BENCH_1.json");
     Ok(())
 }

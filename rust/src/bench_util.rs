@@ -75,6 +75,45 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Version stamp every `BENCH_*.json` document carries, so trend
+/// tooling can detect a shape change instead of misparsing it.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// Render one `BENCH_*.json` document: schema version, issue number,
+/// then the pre-rendered top-level sections in order. Every bench
+/// writer routes through here so the envelope stays uniform.
+pub fn bench_json_doc(issue: u32, sections: &[(&str, String)]) -> String {
+    let mut body =
+        format!("{{\n  \"schema_version\": {BENCH_SCHEMA_VERSION},\n  \"issue\": {issue}");
+    for (name, value) in sections {
+        body.push_str(&format!(",\n  \"{name}\": {value}"));
+    }
+    body.push_str("\n}\n");
+    body
+}
+
+/// Group named per-run fragments into one nested JSON object — the
+/// shape of the multi-variant sections (`serving`, `cluster`).
+pub fn variants_json(variants: &[(String, String)]) -> String {
+    let mut body = String::from("{\n");
+    for (i, (name, fragment)) in variants.iter().enumerate() {
+        body.push_str(&format!("    \"{name}\": {fragment}"));
+        body.push_str(if i + 1 < variants.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  }");
+    body
+}
+
+/// Write a `BENCH_*.json` document (see [`bench_json_doc`]).
+pub fn write_bench_json(
+    path: impl AsRef<std::path::Path>,
+    issue: u32,
+    sections: &[(&str, String)],
+) -> anyhow::Result<()> {
+    std::fs::write(&path, bench_json_doc(issue, sections))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.as_ref().display()))
+}
+
 /// One f32-vs-f64 alignment throughput comparison — both paths timed on
 /// the same UBM and the same frame block within one harness run, so
 /// the speedup is apples-to-apples. Shared by the `speed_report`
@@ -110,20 +149,20 @@ impl AlignPrecisionBench {
     /// The `BENCH_4.json` document (alignment frames/s for both
     /// precisions from the same run).
     pub fn json(&self) -> String {
-        format!(
-            "{{\n  \"issue\": 4,\n  \"dims\": {{\"C\": {}, \"F\": {}, \"top_k\": {}, \
-\"frames\": {}}},\n  \"alignment\": {{\"f64_s\": {:.6}, \"f32_s\": {:.6}, \
-\"frames_per_s_f64\": {:.2}, \"frames_per_s_f32\": {:.2}, \"f32_speedup\": {:.3}}}\n}}\n",
-            self.c,
-            self.f,
-            self.top_k,
-            self.frames,
+        let dims = format!(
+            "{{\"C\": {}, \"F\": {}, \"top_k\": {}, \"frames\": {}}}",
+            self.c, self.f, self.top_k, self.frames,
+        );
+        let alignment = format!(
+            "{{\"f64_s\": {:.6}, \"f32_s\": {:.6}, \"frames_per_s_f64\": {:.2}, \
+\"frames_per_s_f32\": {:.2}, \"f32_speedup\": {:.3}}}",
             self.f64_median_s,
             self.f32_median_s,
             self.frames_per_s_f64(),
             self.frames_per_s_f32(),
             self.f32_speedup(),
-        )
+        );
+        bench_json_doc(4, &[("dims", dims), ("alignment", alignment)])
     }
 }
 
@@ -196,6 +235,7 @@ mod tests {
         assert!((b.f32_speedup() - 2.0).abs() < 1e-12);
         assert!((b.frames_per_s_f32() - 4000.0).abs() < 1e-9);
         let json = b.json();
+        assert!(json.contains("\"schema_version\": 1"), "{json}");
         assert!(json.contains("\"issue\": 4"), "{json}");
         assert!(json.contains("\"frames_per_s_f64\": 2000.00"), "{json}");
         assert!(json.contains("\"frames_per_s_f32\": 4000.00"), "{json}");
@@ -206,5 +246,26 @@ mod tests {
         let p = dir.join("BENCH_4.json");
         write_bench4_json(&p, &b).unwrap();
         assert_eq!(std::fs::read_to_string(&p).unwrap(), json);
+    }
+
+    #[test]
+    fn bench_json_doc_envelope_is_uniform() {
+        let doc = bench_json_doc(
+            9,
+            &[
+                ("dims", "{\"C\": 2}".to_string()),
+                (
+                    "runs",
+                    variants_json(&[
+                        ("a".to_string(), "{\"x\": 1}".to_string()),
+                        ("b".to_string(), "{\"x\": 2}".to_string()),
+                    ]),
+                ),
+            ],
+        );
+        assert!(doc.starts_with("{\n  \"schema_version\": 1,\n  \"issue\": 9"), "{doc}");
+        assert!(doc.contains("\"dims\": {\"C\": 2}"), "{doc}");
+        assert!(doc.contains("    \"a\": {\"x\": 1},\n    \"b\": {\"x\": 2}\n  }"), "{doc}");
+        assert!(doc.ends_with("\n}\n"), "{doc}");
     }
 }

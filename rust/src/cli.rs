@@ -40,6 +40,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "cluster-bench" => commands::cluster_bench(&args),
         "registry-recover" => commands::registry_recover(&args),
         "registry-bench" => commands::registry_bench(&args),
+        "stats" => commands::stats(&args),
         "smoke" => commands::smoke(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -74,14 +75,16 @@ COMMANDS:
              --save-registry PATH, --registry DIR for a durable
              WAL-backed speaker store — see `[registry]` in the config)
   serve-bench  sustained verify load, micro-batched vs unbatched;
-             writes BENCH_2.json (--requests, --concurrency, --speakers,
-             --enroll-utts, --work | tiny in-process bundle, --out,
+             writes BENCH_2.json + an observability snapshot
+             (--requests, --concurrency, --speakers, --enroll-utts,
+             --work | tiny in-process bundle, --out, --obs-out,
              --batched-only)
   cluster-bench  1-vs-N replica scaling under a saturating load;
-             writes BENCH_5.json (--replicas, --route, --max-failovers,
+             writes BENCH_5.json + an observability snapshot
+             (--replicas, --route, --max-failovers,
              --swap-mid-run, --stall-replica K, --live-enroll-every,
              --requests, --concurrency, --speakers, --enroll-utts,
-             --work | tiny in-process bundle, --out)
+             --work | tiny in-process bundle, --out, --obs-out)
   registry-recover  open a durable registry dir, report what recovery
              found (snapshot/replayed/torn tail), optionally compact
              (--dir PATH, --shards, --sync, --compact-every, --compact)
@@ -90,6 +93,11 @@ COMMANDS:
              audit for lost enrollments; writes BENCH_6.json
              (--speakers, --dim, --shards, --sync, --compact-every,
              --crash-at, --dir, --out)
+  stats      read an observability snapshot (counters, per-stage
+             latency histograms, slow traces) written by the bench
+             commands' --obs-out; --check validates the schema and
+             the canonical metric set, exiting nonzero on drift
+             (--snapshot PATH, default OBS_SNAPSHOT.json)
   smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
 
 Flags not listed above: --artifacts DIR (default ./artifacts),

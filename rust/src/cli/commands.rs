@@ -2,11 +2,14 @@
 //! library: parse flags → load config → call into the pipeline stages
 //! (or, for the serving commands, into [`crate::serve`]).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{Config, WalSync};
 use crate::frontend::synth::TrafficGen;
-use crate::metrics::Stopwatch;
+use crate::metrics::{LatencySummary, Stopwatch};
+use crate::obs::{Json, ObsRegistry, RenderFormat};
 use crate::serve::bench::{
     run_batched_vs_unbatched, run_verify_load, tiny_serve_config, train_tiny_bundle,
     write_bench2_json, ServeBenchOpts, ServeBenchReport,
@@ -20,7 +23,7 @@ use crate::serve::registry::bench::{
 };
 use crate::serve::registry::{FileStorage, RegistryStorage};
 use crate::serve::{
-    Dispatcher, DurableRegistry, DurableRegistryOptions, Engine, ModelBundle,
+    Dispatcher, DurableRegistry, DurableRegistryOptions, Engine, ModelBundle, Registry,
 };
 
 use super::Args;
@@ -126,6 +129,33 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
     );
 }
 
+/// One aligned row per stage with traffic — the per-stage latency
+/// breakdown every serving command prints under its headline.
+fn print_stage_rows(stages: &[(&'static str, LatencySummary)]) {
+    for (stage, s) in stages {
+        if s.count > 0 {
+            println!(
+                "  stage {stage:<16} n {:>7}  p50 {:>9.3} ms  p95 {:>9.3} ms  \
+                 p99 {:>9.3} ms  max {:>9.3} ms",
+                s.count,
+                s.p50_s * 1e3,
+                s.p95_s * 1e3,
+                s.p99_s * 1e3,
+                s.max_s * 1e3,
+            );
+        }
+    }
+}
+
+/// Export the observability registry as the JSON snapshot `stats`
+/// reads (`--obs-out` on the serving bench commands).
+fn write_obs_snapshot(path: &str, obs: &ObsRegistry) -> Result<()> {
+    std::fs::write(path, obs.render(RenderFormat::Json))
+        .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// `verify` — enroll/verify synthetic traffic against a trained bundle
 /// through the serving engine (the online counterpart of `eval`).
 /// `--registry DIR` (or `[registry] path` in the config) puts the
@@ -147,11 +177,12 @@ pub fn verify(args: &Args) -> Result<()> {
     args.finish()?;
 
     let bundle = ModelBundle::load_auto(&work, &cfg)?;
+    let obs = Arc::new(ObsRegistry::new(&cfg.obs));
     let engine = match &registry_dir {
         Some(dir) => {
             let dopts =
                 DurableRegistryOptions::from_config(&cfg.registry, cfg.serve.registry_shards);
-            let durable = DurableRegistry::open(dir, &dopts)?;
+            let durable = DurableRegistry::open_obs(dir, &dopts, Some(Arc::clone(&obs)))?;
             let rec = durable.recovery();
             println!(
                 "registry: durable at {dir} — recovered {} speakers \
@@ -162,9 +193,14 @@ pub fn verify(args: &Args) -> Result<()> {
                 if rec.torn_tail { ", torn tail truncated" } else { "" },
                 rec.wall_s,
             );
-            Engine::with_registry(bundle, &cfg.serve, durable.handle())?
+            Engine::with_registry_obs(bundle, &cfg.serve, durable.handle(), Arc::clone(&obs))?
         }
-        None => Engine::new(bundle, &cfg.serve)?,
+        None => Engine::with_registry_obs(
+            bundle,
+            &cfg.serve,
+            Arc::new(Registry::new(cfg.serve.registry_shards)),
+            Arc::clone(&obs),
+        )?,
     };
     let traffic = TrafficGen::new(&cfg.corpus, speakers, seed);
     let report = run_verify_load(
@@ -173,6 +209,7 @@ pub fn verify(args: &Args) -> Result<()> {
         &ServeBenchOpts { speakers, enroll_utts, requests: trials, concurrency },
     )?;
     print_load_report("verify", &report);
+    print_stage_rows(&obs.stage_summaries());
     if let Some(path) = save_registry {
         engine.registry().save(&path)?;
         println!("registry: {} speakers -> {path}", engine.registry().len());
@@ -204,6 +241,7 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let seed = args.get_parse_or("seed", 42u64)?;
     let out = args.get_or("out", "BENCH_2.json");
     let bench4_out = args.get_or("bench4-out", "BENCH_4.json");
+    let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
     let batched_only = args.switch("batched-only");
     if let Some(p) = args.get("precision") {
         let p = crate::gmm::AlignPrecision::parse(&p)?;
@@ -260,22 +298,33 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let opts = ServeBenchOpts { speakers, enroll_utts, requests, concurrency };
 
     let mut reports: Vec<(&str, ServeBenchReport)> = Vec::new();
-    if batched_only {
-        let engine = Engine::new(bundle, &cfg.serve)?;
+    let obs = if batched_only {
+        let obs = Arc::new(ObsRegistry::new(&cfg.obs));
+        let engine = Engine::with_registry_obs(
+            bundle,
+            &cfg.serve,
+            Arc::new(Registry::new(cfg.serve.registry_shards)),
+            Arc::clone(&obs),
+        )?;
         let report = run_verify_load(&engine, &traffic, &opts)?;
         print_load_report("serve-bench[batched]", &report);
         reports.push(("batched", report));
+        obs
     } else {
-        let (batched, unbatched) = run_batched_vs_unbatched(bundle, &cfg.serve, &traffic, &opts)?;
+        let (batched, unbatched, obs) =
+            run_batched_vs_unbatched(bundle, &cfg.serve, &cfg.obs, &traffic, &opts)?;
         print_load_report("serve-bench[batched]", &batched);
         print_load_report("serve-bench[unbatched]", &unbatched);
         reports.push(("batched", batched));
         reports.push(("unbatched", unbatched));
-    }
+        obs
+    };
+    print_stage_rows(&reports[0].1.stages);
     let refs: Vec<(&str, &ServeBenchReport)> =
         reports.iter().map(|(name, r)| (*name, r)).collect();
     write_bench2_json(&out, &refs)?;
     println!("wrote {out}");
+    write_obs_snapshot(&obs_out, &obs)?;
     Ok(())
 }
 
@@ -352,6 +401,7 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
         })
         .transpose()?;
     let out = args.get_or("out", "BENCH_5.json");
+    let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
     args.finish()?;
     // fail the flag combination now — not after the multi-minute
     // baseline run has already been paid for
@@ -400,19 +450,33 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
     // swap — the clean denominator of the scaling ratio)
     let mut single = cfg.cluster.clone();
     single.replicas = 1;
-    let d1 = Dispatcher::new(bundle.clone(), &cfg.serve, &single)?;
+    let d1 = Dispatcher::with_registry_obs(
+        bundle.clone(),
+        &cfg.serve,
+        &single,
+        Arc::new(Registry::new(cfg.serve.registry_shards)),
+        Arc::new(ObsRegistry::new(&cfg.obs)),
+    )?;
     let r1 = run_cluster_load(&d1, &traffic, &base_opts, None)?;
     print_cluster_report("cluster-bench[1 replica]", &r1);
     drop(d1);
 
     // the cluster run, with the optional degraded-replica and
-    // rolling-swap drills
+    // rolling-swap drills — on its own obs registry so the exported
+    // snapshot measures this run, not the baseline
     let mut multi = cfg.cluster.clone();
     multi.replicas = replicas;
-    let dn = Dispatcher::new(bundle.clone(), &cfg.serve, &multi)?;
+    let dn = Dispatcher::with_registry_obs(
+        bundle.clone(),
+        &cfg.serve,
+        &multi,
+        Arc::new(Registry::new(cfg.serve.registry_shards)),
+        Arc::new(ObsRegistry::new(&cfg.obs)),
+    )?;
     let opts = ClusterBenchOpts { stall_replica, ..base_opts };
     let rn = run_cluster_load(&dn, &traffic, &opts, swap_mid_run.then_some(&bundle))?;
     print_cluster_report(&format!("cluster-bench[{replicas} replicas]"), &rn);
+    print_stage_rows(&rn.stages);
     if r1.throughput_rps > 0.0 {
         println!(
             "-> completed-throughput scaling: {:.2}x ({}-replica {:.0} req/s vs 1-replica {:.0})",
@@ -431,6 +495,7 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
         ],
     )?;
     println!("wrote {out}");
+    write_obs_snapshot(&obs_out, dn.obs())?;
     Ok(())
 }
 
@@ -509,9 +574,12 @@ pub fn registry_bench(args: &Args) -> Result<()> {
         opts.sync,
     );
     let dir_for_factory = dir.clone();
-    let report = run_registry_bench(&opts, move || {
-        Ok(Box::new(FileStorage::open(&dir_for_factory)?) as Box<dyn RegistryStorage>)
-    })?;
+    let obs = Arc::new(ObsRegistry::default());
+    let report = run_registry_bench(
+        &opts,
+        move || Ok(Box::new(FileStorage::open(&dir_for_factory)?) as Box<dyn RegistryStorage>),
+        Some(Arc::clone(&obs)),
+    )?;
     println!(
         "enroll: {:.0}/s volatile vs {:.0}/s durable ({:.2}x fsync overhead, sync {})",
         report.mem_enroll_rps, report.wal_enroll_rps, report.fsync_overhead_x, report.wal_sync,
@@ -527,6 +595,7 @@ pub fn registry_bench(args: &Args) -> Result<()> {
         report.compactions,
         report.recovery_s,
     );
+    print_stage_rows(&report.wal_stages);
     write_bench6_json(&out, &report)?;
     println!("wrote {out}");
     anyhow::ensure!(
@@ -534,5 +603,89 @@ pub fn registry_bench(args: &Args) -> Result<()> {
         "{} acknowledged enrollments lost after recovery — the durability guarantee is broken",
         report.lost
     );
+    Ok(())
+}
+
+/// `stats --snapshot PATH [--check]` — read an observability snapshot
+/// written by `serve-bench`/`cluster-bench --obs-out` and print its
+/// counters, gauges, histograms, and slow traces. `--check` first runs
+/// full validation (schema version, every canonical metric including
+/// all seven stage series, well-formed values and traces) and fails
+/// the process on any malformation — the CI gate on exporter drift.
+pub fn stats(args: &Args) -> Result<()> {
+    let path = args.get_or("snapshot", "OBS_SNAPSHOT.json");
+    let check = args.switch("check");
+    args.finish()?;
+
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("read snapshot {path}: {e}"))?;
+    if check {
+        crate::obs::validate_snapshot(&text)
+            .map_err(|e| anyhow::anyhow!("snapshot {path} failed validation: {e:#}"))?;
+        println!("stats: {path} valid (schema v1, all canonical metrics present)");
+    }
+    let doc = crate::obs::parse_json(&text)
+        .map_err(|e| anyhow::anyhow!("snapshot {path}: {e:#}"))?;
+
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("snapshot {path}: missing `metrics` object"))?;
+    let num = |m: &Json, key: &str| m.get(key).and_then(Json::as_num).unwrap_or(0.0);
+    println!("{path}: {} metric series", metrics.len());
+    for (key, m) in metrics {
+        match m.get("type").and_then(Json::as_str).unwrap_or("?") {
+            "counter" => println!("  {key:<64} {:>12.0}", num(m, "value")),
+            "gauge" => println!(
+                "  {key:<64} max {:>6.0}  mean {:>8.2}  (window max {:.0} mean {:.2})",
+                num(m, "max"),
+                num(m, "mean"),
+                num(m, "window_max"),
+                num(m, "window_mean"),
+            ),
+            "histogram" => println!(
+                "  {key:<64} n {:>7.0}  p50 {:>9.3} ms  p99 {:>9.3} ms  max {:>9.3} ms{}",
+                num(m, "count"),
+                num(m, "p50_s") * 1e3,
+                num(m, "p99_s") * 1e3,
+                num(m, "max_s") * 1e3,
+                if num(m, "invalid") > 0.0 {
+                    format!("  [invalid {}]", num(m, "invalid"))
+                } else {
+                    String::new()
+                },
+            ),
+            other => println!("  {key:<64} (unknown type `{other}`)"),
+        }
+    }
+
+    let traces = doc.get("slow_traces").and_then(Json::as_arr).unwrap_or(&[]);
+    println!("{} slow traces", traces.len());
+    for t in traces {
+        let hops = t
+            .get("hops")
+            .and_then(Json::as_arr)
+            .map(|h| {
+                h.iter()
+                    .filter_map(Json::as_num)
+                    .map(|r| format!("{r:.0}"))
+                    .collect::<Vec<_>>()
+                    .join("→")
+            })
+            .unwrap_or_default();
+        let stage_sum: f64 = t
+            .get("stages_ms")
+            .and_then(Json::as_obj)
+            .map(|s| s.iter().filter_map(|(_, v)| v.as_num()).sum())
+            .unwrap_or(0.0);
+        println!(
+            "  trace {:>5.0}  {:>9.3} ms total ({stage_sum:.3} ms in stages)  {}  \
+             failovers {:.0}  hops [{hops}]",
+            num(t, "id"),
+            num(t, "total_ms"),
+            t.get("outcome").and_then(Json::as_str).unwrap_or("?"),
+            num(t, "failovers"),
+        );
+    }
     Ok(())
 }

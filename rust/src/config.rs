@@ -307,6 +307,28 @@ pub struct RegistryConfig {
     pub compact_every: u64,
 }
 
+/// Observability parameters (`[obs]`, [`crate::obs`]): master switch,
+/// slow-trace threshold, and the trace-ring capacity.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Master switch. `false` turns the registry inert: counters stay
+    /// at zero, spans cost a clock read, traces are never minted.
+    pub enabled: bool,
+    /// Completed requests whose end-to-end latency reaches this many
+    /// milliseconds land in the slow-trace ring (0 = keep every
+    /// completed trace, the default — the ring then holds the most
+    /// recent `trace_ring` requests).
+    pub trace_threshold_ms: f64,
+    /// Slow-trace ring capacity (completed traces retained).
+    pub trace_ring: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { enabled: true, trace_threshold_ms: 0.0, trace_ring: 64 }
+    }
+}
+
 /// How the cluster dispatcher picks a replica for each request
 /// (`[cluster] route`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -422,6 +444,7 @@ pub struct Config {
     pub serve: ServeConfig,
     pub cluster: ClusterConfig,
     pub registry: RegistryConfig,
+    pub obs: ObsConfig,
 }
 
 impl Config {
@@ -492,6 +515,7 @@ impl Config {
                 sync: WalSync::Always,
                 compact_every: 10_000,
             },
+            obs: ObsConfig::default(),
         }
     }
 
@@ -591,6 +615,21 @@ impl Config {
                 );
             }
         }
+        // `[obs]` observability knobs, same typo discipline
+        for key in doc.keys_with_prefix("obs.") {
+            let field = &key["obs.".len()..];
+            if !matches!(field, "enabled" | "trace_threshold_ms" | "trace_ring") {
+                bail!(
+                    "config key `{key}`: unknown [obs] field `{field}` \
+                     (supported: enabled, trace_threshold_ms, trace_ring)"
+                );
+            }
+        }
+        let obs = ObsConfig {
+            enabled: doc.get_bool("obs.enabled", d.obs.enabled)?,
+            trace_threshold_ms: doc.get_f64("obs.trace_threshold_ms", d.obs.trace_threshold_ms)?,
+            trace_ring: doc.get_usize("obs.trace_ring", d.obs.trace_ring)?,
+        };
         let registry_path = doc.get_str("registry.path", "")?;
         let registry = RegistryConfig {
             path: if registry_path.is_empty() { None } else { Some(registry_path) },
@@ -670,6 +709,7 @@ impl Config {
                 overrides,
             },
             registry,
+            obs,
         })
     }
 
@@ -893,6 +933,31 @@ mod tests {
         let err = Config::from_doc(&Doc::parse("[registry]\nsink = 4\n").unwrap())
             .unwrap_err();
         assert!(err.to_string().contains("unknown [registry] field"), "{err:#}");
+    }
+
+    #[test]
+    fn obs_section_defaults_and_overrides() {
+        // defaults: on, keep every completed trace, 64-deep ring
+        let cfg = Config::from_doc(&Doc::parse("[tvm]\nrank = 16\n").unwrap()).unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.trace_threshold_ms, 0.0);
+        assert_eq!(cfg.obs.trace_ring, 64);
+
+        let cfg = Config::from_doc(
+            &Doc::parse(
+                "[obs]\nenabled = false\ntrace_threshold_ms = 2.5\ntrace_ring = 256\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.trace_threshold_ms, 2.5);
+        assert_eq!(cfg.obs.trace_ring, 256);
+
+        // typo'd keys are nameable errors, not silently-dead config
+        let err = Config::from_doc(&Doc::parse("[obs]\ntrace_rings = 8\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown [obs] field"), "{err:#}");
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod gmm;
 pub mod io;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

@@ -118,12 +118,17 @@ pub struct LatencyHistogram {
     count: AtomicU64,
     total_ns: AtomicU64,
     max_ns: AtomicU64,
+    invalid: AtomicU64,
 }
 
 /// Point-in-time summary of a [`LatencyHistogram`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencySummary {
     pub count: u64,
+    /// Rejected observations (non-finite or negative) — a nonzero value
+    /// means a caller is timing with a broken clock, not that requests
+    /// were instantaneous.
+    pub invalid: u64,
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -144,6 +149,7 @@ impl LatencyHistogram {
             count: AtomicU64::new(0),
             total_ns: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
+            invalid: AtomicU64::new(0),
         }
     }
 
@@ -167,12 +173,18 @@ impl LatencyHistogram {
         self.record(elapsed.as_secs_f64());
     }
 
-    /// Record one observation (seconds).
+    /// Record one observation (seconds). Non-finite or negative values
+    /// are counted in a dedicated `invalid` counter instead of being
+    /// clamped into bucket 0, where they would silently drag down every
+    /// quantile.
     pub fn record(&self, seconds: f64) {
-        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
-        self.buckets[Self::bucket_index(s)].fetch_add(1, Ordering::Relaxed);
+        if !(seconds.is_finite() && seconds >= 0.0) {
+            self.invalid.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.buckets[Self::bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        let ns = (s * 1e9) as u64;
+        let ns = (seconds * 1e9) as u64;
         self.total_ns.fetch_add(ns, Ordering::Relaxed);
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
@@ -180,6 +192,11 @@ impl LatencyHistogram {
     /// Number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Number of rejected (non-finite / negative) observations.
+    pub fn invalid(&self) -> u64 {
+        self.invalid.load(Ordering::Relaxed)
     }
 
     /// Quantile `q ∈ [0, 1]` as the upper edge of the covering bucket
@@ -215,6 +232,7 @@ impl LatencyHistogram {
         };
         LatencySummary {
             count,
+            invalid: self.invalid(),
             mean_s,
             p50_s: self.quantile(0.50),
             p95_s: self.quantile(0.95),
@@ -231,11 +249,18 @@ impl LatencyHistogram {
 /// recorded samples — the "how close to `queue_cap` does admission
 /// control run" statistic of the serving report. Lock-free like
 /// [`LatencyHistogram`]: three relaxed atomics per record.
+/// In addition to the lifetime stats, a second set of atomics tracks a
+/// *window* since the last [`DepthGauge::take_window`] call, so a
+/// long-running process can report recent queue pressure instead of a
+/// lifetime average that stops moving after the first million samples.
 #[derive(Debug, Default)]
 pub struct DepthGauge {
     max: AtomicU64,
     sum: AtomicU64,
     samples: AtomicU64,
+    win_max: AtomicU64,
+    win_sum: AtomicU64,
+    win_samples: AtomicU64,
 }
 
 /// Point-in-time summary of a [`DepthGauge`].
@@ -259,9 +284,12 @@ impl DepthGauge {
         self.max.fetch_max(depth, Ordering::Relaxed);
         self.sum.fetch_add(depth, Ordering::Relaxed);
         self.samples.fetch_add(1, Ordering::Relaxed);
+        self.win_max.fetch_max(depth, Ordering::Relaxed);
+        self.win_sum.fetch_add(depth, Ordering::Relaxed);
+        self.win_samples.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Max / mean snapshot.
+    /// Lifetime max / mean snapshot.
     pub fn summary(&self) -> DepthSummary {
         let samples = self.samples.load(Ordering::Relaxed);
         let mean = if samples == 0 {
@@ -270,6 +298,19 @@ impl DepthGauge {
             self.sum.load(Ordering::Relaxed) as f64 / samples as f64
         };
         DepthSummary { samples, max: self.max.load(Ordering::Relaxed), mean }
+    }
+
+    /// Stats since the previous `take_window` call, resetting the
+    /// window — back-to-back exports see disjoint intervals. The three
+    /// swaps are independent, so a record racing an export may split
+    /// its fields across two windows; that skews one export's mean by
+    /// at most one sample, which is fine for a monitoring read.
+    pub fn take_window(&self) -> DepthSummary {
+        let samples = self.win_samples.swap(0, Ordering::Relaxed);
+        let sum = self.win_sum.swap(0, Ordering::Relaxed);
+        let max = self.win_max.swap(0, Ordering::Relaxed);
+        let mean = if samples == 0 { 0.0 } else { sum as f64 / samples as f64 };
+        DepthSummary { samples, max, mean }
     }
 }
 
@@ -330,16 +371,23 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.summary().count, 0);
-        // out-of-range observations clamp to the edge buckets
+        // zero and huge values are in-range (clamped to edge buckets);
+        // negative / non-finite ones land in `invalid`, not bucket 0
         h.record(0.0);
         h.record(-1.0);
         h.record(1e6);
         h.record(f64::NAN);
-        assert_eq!(h.count(), 4);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.invalid(), 3);
         assert!(h.quantile(1.0) > 0.0);
+        let s = h.summary();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.invalid, 3);
         // the Duration convenience records like the f64 path
         h.record_duration(std::time::Duration::from_millis(2));
-        assert_eq!(h.count(), 5);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.invalid(), 3);
     }
 
     #[test]
@@ -353,6 +401,28 @@ mod tests {
         assert_eq!(s.samples, 4);
         assert_eq!(s.max, 4);
         assert!((s.mean - 2.0).abs() < 1e-12, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn depth_gauge_window_resets_on_read() {
+        let g = DepthGauge::new();
+        for d in [1, 4, 2, 1] {
+            g.record(d);
+        }
+        let w = g.take_window();
+        assert_eq!(w.samples, 4);
+        assert_eq!(w.max, 4);
+        assert!((w.mean - 2.0).abs() < 1e-12);
+        // the read reset the window; lifetime stats are untouched
+        assert_eq!(g.take_window(), DepthSummary { samples: 0, max: 0, mean: 0.0 });
+        assert_eq!(g.summary().samples, 4);
+        assert_eq!(g.summary().max, 4);
+        // new samples start a fresh window with its own (lower) max
+        g.record(2);
+        let w = g.take_window();
+        assert_eq!(w.samples, 1);
+        assert_eq!(w.max, 2);
+        assert_eq!(g.summary().max, 4, "lifetime max still reflects the old peak");
     }
 
     #[test]

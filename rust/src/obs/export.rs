@@ -1,0 +1,552 @@
+//! Exporters: Prometheus-style text exposition and a JSON snapshot,
+//! plus the dependency-free JSON parser/validator behind the `stats`
+//! CLI command (`--check` fails on a malformed snapshot or a missing
+//! canonical metric name — the guard against silent metric-rename
+//! drift).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::metrics::LatencySummary;
+
+use super::trace::TraceRecord;
+use super::{MetricSnapshot, SnapshotValue, Stage, STAGE_METRIC};
+
+/// Metric names every serving engine registers — present in any
+/// `serve-bench`/`cluster-bench` snapshot regardless of configuration.
+/// `stats --check` (and the CI obs job through it) fails if one is
+/// missing, so a rename has to touch this list to land.
+pub const CANONICAL_METRICS: &[&str] = &[
+    STAGE_METRIC,
+    "serve_extract_latency_seconds",
+    "serve_enroll_latency_seconds",
+    "serve_verify_latency_seconds",
+    "serve_batches_total",
+    "serve_batched_requests_total",
+    "serve_shed_total",
+    "serve_timeouts_total",
+    "serve_expired_jobs_total",
+    "serve_queue_depth",
+];
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// `{k="v",...}` with an optional extra pair appended; empty labels
+/// (and no extra) render as no braces at all.
+fn label_str(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str(&format!("{k}=\"{v}\""));
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            s.push(',');
+        }
+        s.push_str(&format!("{k}=\"{v}\""));
+    }
+    s.push('}');
+    s
+}
+
+/// Prometheus text exposition of a registry snapshot. Histograms render
+/// summary-style (`quantile` labels + `_count`/`_sum`/`_max`/
+/// `_invalid`), gauges as lifetime + windowed derived series.
+pub fn render_prometheus(metrics: &[MetricSnapshot]) -> String {
+    let mut out = String::new();
+    let mut prev_name = "";
+    for m in metrics {
+        let labels = &m.labels;
+        match &m.value {
+            SnapshotValue::Counter(v) => {
+                if m.name != prev_name {
+                    out.push_str(&format!("# TYPE {} counter\n", m.name));
+                }
+                out.push_str(&format!("{}{} {v}\n", m.name, label_str(labels, None)));
+            }
+            SnapshotValue::Gauge { lifetime, window } => {
+                if m.name != prev_name {
+                    out.push_str(&format!("# TYPE {} gauge\n", m.name));
+                }
+                let ls = label_str(labels, None);
+                out.push_str(&format!("{}_max{ls} {}\n", m.name, lifetime.max));
+                out.push_str(&format!("{}_mean{ls} {}\n", m.name, fmt_num(lifetime.mean)));
+                out.push_str(&format!("{}_samples{ls} {}\n", m.name, lifetime.samples));
+                out.push_str(&format!("{}_window_max{ls} {}\n", m.name, window.max));
+                out.push_str(&format!("{}_window_mean{ls} {}\n", m.name, fmt_num(window.mean)));
+                out.push_str(&format!("{}_window_samples{ls} {}\n", m.name, window.samples));
+            }
+            SnapshotValue::Histogram(s) => {
+                if m.name != prev_name {
+                    out.push_str(&format!("# TYPE {} summary\n", m.name));
+                }
+                for (q, v) in
+                    [("0.5", s.p50_s), ("0.95", s.p95_s), ("0.99", s.p99_s)]
+                {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        m.name,
+                        label_str(labels, Some(("quantile", q))),
+                        fmt_num(v)
+                    ));
+                }
+                let ls = label_str(labels, None);
+                out.push_str(&format!("{}_count{ls} {}\n", m.name, s.count));
+                out.push_str(&format!(
+                    "{}_sum{ls} {}\n",
+                    m.name,
+                    fmt_num(s.mean_s * s.count as f64)
+                ));
+                out.push_str(&format!("{}_max{ls} {}\n", m.name, fmt_num(s.max_s)));
+                out.push_str(&format!("{}_invalid{ls} {}\n", m.name, s.invalid));
+            }
+        }
+        prev_name = &m.name;
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON snapshot of a registry: `schema_version`, every instrument
+/// keyed by its canonical `name{labels}` string, and the slow-trace
+/// ring's contents.
+pub fn render_json(metrics: &[MetricSnapshot], traces: &[TraceRecord]) -> String {
+    let mut out = String::from("{\n  \"schema_version\": 1,\n  \"metrics\": {\n");
+    for (i, m) in metrics.iter().enumerate() {
+        let body = match &m.value {
+            SnapshotValue::Counter(v) => format!("{{\"type\": \"counter\", \"value\": {v}}}"),
+            SnapshotValue::Gauge { lifetime, window } => format!(
+                "{{\"type\": \"gauge\", \"max\": {}, \"mean\": {}, \"samples\": {}, \
+                 \"window_max\": {}, \"window_mean\": {}, \"window_samples\": {}}}",
+                lifetime.max,
+                fmt_num(lifetime.mean),
+                lifetime.samples,
+                window.max,
+                fmt_num(window.mean),
+                window.samples,
+            ),
+            SnapshotValue::Histogram(s) => format!(
+                "{{\"type\": \"histogram\", \"count\": {}, \"invalid\": {}, \
+                 \"mean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \"max_s\": {}}}",
+                s.count,
+                s.invalid,
+                fmt_num(s.mean_s),
+                fmt_num(s.p50_s),
+                fmt_num(s.p95_s),
+                fmt_num(s.p99_s),
+                fmt_num(s.max_s),
+            ),
+        };
+        out.push_str(&format!("    \"{}\": {body}", json_escape(&m.key)));
+        out.push_str(if i + 1 < metrics.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  },\n  \"slow_traces\": [\n");
+    for (i, t) in traces.iter().enumerate() {
+        let mut stages = String::new();
+        for (j, stage) in Stage::ALL.iter().enumerate() {
+            if j > 0 {
+                stages.push_str(", ");
+            }
+            stages.push_str(&format!(
+                "\"{}\": {}",
+                stage.as_str(),
+                fmt_num(t.stage_ns[j] as f64 / 1e6)
+            ));
+        }
+        let hops =
+            t.hops.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(", ");
+        out.push_str(&format!(
+            "    {{\"id\": {}, \"total_ms\": {}, \"outcome\": \"{}\", \"failovers\": {}, \
+             \"hops\": [{hops}], \"stages_ms\": {{{stages}}}}}",
+            t.id,
+            fmt_num(t.total_ns as f64 / 1e6),
+            t.outcome.as_str(),
+        ));
+        out.push_str(if i + 1 < traces.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// One [`LatencySummary`] as a millisecond-unit JSON object — the
+/// shared fragment behind the bench reports' per-stage breakdowns.
+pub fn latency_summary_json(s: &LatencySummary) -> String {
+    format!(
+        "{{\"count\": {}, \"invalid\": {}, \"mean_ms\": {:.4}, \"p50_ms\": {:.4}, \
+         \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \"max_ms\": {:.4}}}",
+        s.count,
+        s.invalid,
+        s.mean_s * 1e3,
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.p99_s * 1e3,
+        s.max_s * 1e3,
+    )
+}
+
+/// A parsed JSON value (dependency-free subset parser: objects keep
+/// insertion order, all numbers are `f64`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member lookup on an object; `None` for missing key or non-object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Self::Obj(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Self::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Self::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Self::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Self::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.i))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.peek()?;
+        ensure!(got == c, "expected `{}` at byte {}, got `{}`", c as char, self.i, got as char);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let tok = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number token");
+        let n: f64 = tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number `{tok}` at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self
+                .b
+                .get(self.i)
+                .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            ensure!(self.i + 4 <= self.b.len(), "short \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape `{hex}`"))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => bail!("unknown escape `\\{}`", other as char),
+                    }
+                }
+                c => {
+                    // re-walk multi-byte UTF-8 sequences intact
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let mut end = self.i;
+                        while end < self.b.len() && (self.b[end] & 0xC0) == 0x80 {
+                            end += 1;
+                        }
+                        out.push_str(
+                            std::str::from_utf8(&self.b[start..end])
+                                .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?,
+                        );
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                other => bail!("expected `,` or `]` at byte {}, got `{}`", self.i, other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            out.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                other => bail!("expected `,` or `}}` at byte {}, got `{}`", self.i, other as char),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (the subset the exporters emit, which is all
+/// of JSON minus exotic number forms).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    ensure!(p.i == p.b.len(), "trailing bytes after JSON value at byte {}", p.i);
+    Ok(v)
+}
+
+fn require_num(obj: &Json, key: &str, what: &str) -> Result<f64> {
+    obj.get(key)
+        .and_then(Json::as_num)
+        .with_context(|| format!("{what}: missing numeric field `{key}`"))
+}
+
+/// Validate an `ObsRegistry` JSON snapshot: schema version, every
+/// canonical metric name present (all seven stage series included),
+/// well-formed per-type fields, and a well-formed slow-trace list.
+pub fn validate_snapshot(text: &str) -> Result<()> {
+    let doc = parse_json(text).context("snapshot is not valid JSON")?;
+    let version = require_num(&doc, "schema_version", "snapshot")?;
+    ensure!(version == 1.0, "unsupported snapshot schema_version {version}");
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .context("snapshot: missing `metrics` object")?;
+
+    for name in CANONICAL_METRICS {
+        let prefixed = format!("{name}{{");
+        ensure!(
+            metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed)),
+            "canonical metric `{name}` missing from snapshot"
+        );
+    }
+    for stage in Stage::ALL {
+        let key = format!("{STAGE_METRIC}{{stage=\"{}\"}}", stage.as_str());
+        ensure!(
+            metrics.iter().any(|(k, _)| *k == key),
+            "stage series `{key}` missing from snapshot"
+        );
+    }
+    for (key, m) in metrics {
+        let ty = m
+            .get("type")
+            .and_then(Json::as_str)
+            .with_context(|| format!("metric `{key}`: missing `type`"))?;
+        match ty {
+            "counter" => {
+                require_num(m, "value", key)?;
+            }
+            "gauge" => {
+                for f in ["max", "mean", "samples", "window_max", "window_mean"] {
+                    require_num(m, f, key)?;
+                }
+            }
+            "histogram" => {
+                for f in ["count", "invalid", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"] {
+                    require_num(m, f, key)?;
+                }
+            }
+            other => bail!("metric `{key}`: unknown type `{other}`"),
+        }
+    }
+
+    let traces = doc
+        .get("slow_traces")
+        .and_then(Json::as_arr)
+        .context("snapshot: missing `slow_traces` array")?;
+    for t in traces {
+        require_num(t, "id", "slow trace")?;
+        require_num(t, "total_ms", "slow trace")?;
+        t.get("outcome").and_then(Json::as_str).context("slow trace: missing `outcome`")?;
+        t.get("hops").and_then(Json::as_arr).context("slow trace: missing `hops`")?;
+        let stages = t
+            .get("stages_ms")
+            .and_then(Json::as_obj)
+            .context("slow trace: missing `stages_ms`")?;
+        for stage in Stage::ALL {
+            ensure!(
+                stages.iter().any(|(k, _)| k == stage.as_str()),
+                "slow trace: missing stage `{}`",
+                stage.as_str()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_round_trips_the_basics() {
+        let v = parse_json(
+            r#"{"a": 1, "b": -2.5e-2, "s": "x\"y\\z\nw", "t": true, "n": null,
+                "arr": [1, 2, {"k": "v"}], "empty": {}, "ea": []}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_num(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_num(), Some(-0.025));
+        assert_eq!(v.get("s").unwrap().as_str(), Some("x\"y\\z\nw"));
+        assert_eq!(v.get("t"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("n"), Some(&Json::Null));
+        let arr = v.get("arr").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("k").unwrap().as_str(), Some("v"));
+        assert_eq!(v.get("empty").unwrap().as_obj().unwrap().len(), 0);
+        assert_eq!(v.get("ea").unwrap().as_arr().unwrap().len(), 0);
+
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2").is_err());
+        assert!(parse_json("{} trailing").is_err());
+        assert!(parse_json("{\"u\": \"caf\\u00e9 ünïcode\"}").is_ok());
+    }
+
+    #[test]
+    fn escaped_metric_keys_survive_the_round_trip() {
+        let key = "serve_stage_latency_seconds{stage=\"align\"}";
+        let doc = format!("{{\"{}\": 1}}", json_escape(key));
+        let v = parse_json(&doc).unwrap();
+        assert_eq!(v.as_obj().unwrap()[0].0, key);
+    }
+}

@@ -1,0 +1,651 @@
+//! Unified observability layer: metric registry, per-request stage
+//! tracing, slow-trace ring buffer, and exportable snapshots.
+//!
+//! Everything here is dependency-free and rides the lock-free
+//! primitives in [`crate::metrics`] ([`LatencyHistogram`],
+//! [`DepthGauge`]):
+//!
+//! - **[`ObsRegistry`]** — named, labeled counters/gauges/histograms
+//!   with one canonical name per counter in the system. Instruments
+//!   are cumulative; interval views come from diffing snapshots (plus
+//!   the gauge's built-in window), so there is no `snapshot_and_reset`
+//!   race to lose increments to.
+//! - **Stage tracing** — a request ID minted at admission rides the
+//!   request through `Dispatcher` → `Engine` → `MicroBatcher` →
+//!   `DurableRegistry`; span timers decompose p99 into the seven
+//!   [`Stage`]s (admit-wait, align, queue-wait, estep-batch,
+//!   backend-project, wal-append, wal-fsync).
+//! - **[`TraceRing`]** — the last N completed traces over a
+//!   configurable threshold, readable without stopping traffic.
+//! - **Exporters** — [`ObsRegistry::render`] emits Prometheus text or
+//!   a JSON snapshot (the `stats` CLI consumes the latter; the future
+//!   TCP front-end can serve either verbatim).
+//!
+//! The per-engine instruments carry an `engine="<instance>"` label and
+//! are deregistered when the engine drops, so a rolling swap replaces
+//! a replica's series instead of leaking a stale generation into every
+//! future export.
+
+mod clock;
+mod export;
+mod ring;
+mod trace;
+
+pub use clock::Clock;
+pub use export::{
+    latency_summary_json, parse_json, validate_snapshot, Json, CANONICAL_METRICS,
+};
+pub use ring::TraceRing;
+pub use trace::{
+    add_current_stage, current, enter, RequestTrace, TraceOutcome, TraceRecord, TraceScope,
+};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::ObsConfig;
+use crate::metrics::{DepthGauge, DepthSummary, LatencyHistogram, LatencySummary};
+
+/// Canonical name of the per-stage request latency series (labeled
+/// `stage="<name>"`).
+pub const STAGE_METRIC: &str = "serve_stage_latency_seconds";
+
+/// The named request-path stages every trace decomposes into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Waiting for micro-batch queue space at admission.
+    AdmitWait,
+    /// Frame alignment + Baum-Welch statistics on the request thread.
+    Align,
+    /// Admitted job waiting in the queue for a worker to pick it up.
+    QueueWait,
+    /// The batched E-step dispatch the request rode in.
+    EstepBatch,
+    /// LDA/PLDA projection + scoring of the extracted i-vector.
+    BackendProject,
+    /// Registry WAL record append.
+    WalAppend,
+    /// Registry WAL fsync.
+    WalFsync,
+}
+
+/// Number of [`Stage`] variants (the length of every per-stage array).
+pub const N_STAGES: usize = 7;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::AdmitWait,
+        Stage::Align,
+        Stage::QueueWait,
+        Stage::EstepBatch,
+        Stage::BackendProject,
+        Stage::WalAppend,
+        Stage::WalFsync,
+    ];
+
+    /// The snake_case label value (`stage="<this>"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::AdmitWait => "admit_wait",
+            Self::Align => "align",
+            Self::QueueWait => "queue_wait",
+            Self::EstepBatch => "estep_batch",
+            Self::BackendProject => "backend_project",
+            Self::WalAppend => "wal_append",
+            Self::WalFsync => "wal_fsync",
+        }
+    }
+
+    /// Index into per-stage arrays (declaration order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Handle onto a registered monotonic counter. Cheap to clone; all
+/// clones share the one atomic the registry exports.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Instrument {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<DepthGauge>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    kind: Instrument,
+}
+
+/// One instrument's state as frozen by [`ObsRegistry::snapshot`].
+pub struct MetricSnapshot {
+    /// Canonical `name{label="value",...}` key.
+    pub key: String,
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: SnapshotValue,
+}
+
+/// The typed payload of a [`MetricSnapshot`].
+pub enum SnapshotValue {
+    Counter(u64),
+    /// Lifetime plus windowed-since-last-snapshot gauge stats (reading
+    /// the window resets it — interval-delta semantics).
+    Gauge { lifetime: DepthSummary, window: DepthSummary },
+    Histogram(LatencySummary),
+}
+
+/// Export format selector for [`ObsRegistry::render`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RenderFormat {
+    Prometheus,
+    Json,
+}
+
+fn key_of(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::from(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{k}=\"{v}\""));
+    }
+    s.push('}');
+    s
+}
+
+/// The metric registry + trace machinery one serving process (or one
+/// engine/dispatcher under test) shares.
+pub struct ObsRegistry {
+    enabled: bool,
+    clock: Clock,
+    trace_threshold_ns: u64,
+    instruments: Mutex<BTreeMap<String, Entry>>,
+    stage_lat: [Arc<LatencyHistogram>; N_STAGES],
+    ring: TraceRing,
+    next_request_id: AtomicU64,
+    next_instance_id: AtomicU64,
+}
+
+impl std::fmt::Debug for ObsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsRegistry")
+            .field("enabled", &self.enabled)
+            .field("trace_threshold_ns", &self.trace_threshold_ns)
+            .field("ring_capacity", &self.ring.capacity())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Default for ObsRegistry {
+    fn default() -> Self {
+        Self::new(&ObsConfig::default())
+    }
+}
+
+impl ObsRegistry {
+    pub fn new(cfg: &ObsConfig) -> Self {
+        Self::with_clock(cfg, Clock::Real)
+    }
+
+    /// Registry on an explicit clock — tests inject [`Clock::mock`] for
+    /// deterministic span timings.
+    pub fn with_clock(cfg: &ObsConfig, clock: Clock) -> Self {
+        let mut map = BTreeMap::new();
+        let stage_lat = Stage::ALL.map(|s| {
+            let h = Arc::new(LatencyHistogram::new());
+            let labels = [("stage", s.as_str())];
+            map.insert(
+                key_of(STAGE_METRIC, &labels),
+                Entry {
+                    name: STAGE_METRIC.to_string(),
+                    labels: vec![("stage".to_string(), s.as_str().to_string())],
+                    kind: Instrument::Histogram(Arc::clone(&h)),
+                },
+            );
+            h
+        });
+        Self {
+            enabled: cfg.enabled,
+            clock,
+            trace_threshold_ns: (cfg.trace_threshold_ms.max(0.0) * 1e6) as u64,
+            instruments: Mutex::new(map),
+            stage_lat,
+            ring: TraceRing::new(cfg.trace_ring),
+            next_request_id: AtomicU64::new(0),
+            next_instance_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Monotonic per-registry instance id — engines take one to build
+    /// their `engine="<id>"` label, so a swapped-in replacement never
+    /// collides with the series of the engine it retired.
+    pub fn next_instance(&self) -> u64 {
+        self.next_instance_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Entry>> {
+        self.instruments.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Get-or-create a named counter. Re-requesting the same
+    /// name+labels returns a handle onto the same atomic.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = key_of(name, labels);
+        let mut m = self.lock();
+        if let Some(Entry { kind: Instrument::Counter(c), .. }) = m.get(&key) {
+            return Counter(Arc::clone(c));
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        m.insert(key, self.entry(name, labels, Instrument::Counter(Arc::clone(&c))));
+        Counter(c)
+    }
+
+    /// Get-or-create a named depth gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<DepthGauge> {
+        let key = key_of(name, labels);
+        let mut m = self.lock();
+        if let Some(Entry { kind: Instrument::Gauge(g), .. }) = m.get(&key) {
+            return Arc::clone(g);
+        }
+        let g = Arc::new(DepthGauge::new());
+        m.insert(key, self.entry(name, labels, Instrument::Gauge(Arc::clone(&g))));
+        g
+    }
+
+    /// Get-or-create a named latency histogram.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<LatencyHistogram> {
+        let key = key_of(name, labels);
+        let mut m = self.lock();
+        if let Some(Entry { kind: Instrument::Histogram(h), .. }) = m.get(&key) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(LatencyHistogram::new());
+        m.insert(key, self.entry(name, labels, Instrument::Histogram(Arc::clone(&h))));
+        h
+    }
+
+    fn entry(&self, name: &str, labels: &[(&str, &str)], kind: Instrument) -> Entry {
+        Entry {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            kind,
+        }
+    }
+
+    /// Drop every instrument carrying `label="value"` — how a retiring
+    /// engine removes its per-instance series from future exports.
+    pub fn remove_label(&self, label: &str, value: &str) {
+        self.lock().retain(|_, e| !e.labels.iter().any(|(k, v)| k == label && v == value));
+    }
+
+    /// Record `ns` into a stage's latency histogram (no trace
+    /// attribution — callers with a trace use [`ObsRegistry::span`] or
+    /// add to the trace themselves).
+    pub fn observe_stage_ns(&self, stage: Stage, ns: u64) {
+        if self.enabled {
+            self.stage_lat[stage.index()].record(ns as f64 / 1e9);
+        }
+    }
+
+    /// `(name, summary)` for all seven stage histograms, declaration
+    /// order — the bench reports' per-stage breakdown.
+    pub fn stage_summaries(&self) -> Vec<(&'static str, LatencySummary)> {
+        Stage::ALL
+            .iter()
+            .map(|s| (s.as_str(), self.stage_lat[s.index()].summary()))
+            .collect()
+    }
+
+    /// Start a span over `stage`: on drop it records into the stage
+    /// histogram and (when a request scope is installed on this
+    /// thread) into the current trace.
+    pub fn span(&self, stage: Stage) -> Span<'_> {
+        if !self.enabled {
+            return Span { obs: self, stage, start_ns: 0, trace: None, active: false };
+        }
+        Span {
+            obs: self,
+            stage,
+            start_ns: self.clock.now_ns(),
+            trace: trace::current(),
+            active: true,
+        }
+    }
+
+    /// Mint a new request trace (None when tracing is disabled). The
+    /// caller installs it with [`enter`] and finalizes it with
+    /// [`ObsRegistry::complete`].
+    pub fn mint(&self) -> Option<Arc<RequestTrace>> {
+        if !self.enabled {
+            return None;
+        }
+        let id = self.next_request_id.fetch_add(1, Ordering::Relaxed) + 1;
+        Some(Arc::new(RequestTrace::new(id, self.clock.now_ns())))
+    }
+
+    /// Finalize a minted trace: compute its end-to-end time and, if it
+    /// met the slow-trace threshold, freeze it into the ring.
+    pub fn complete(&self, trace: &Arc<RequestTrace>, outcome: TraceOutcome) {
+        let total_ns = self.clock.now_ns().saturating_sub(trace.start_ns);
+        if total_ns >= self.trace_threshold_ns {
+            self.ring.push(trace.to_record(total_ns, outcome));
+        }
+    }
+
+    /// The slow-trace ring's live contents, oldest first.
+    pub fn slow_traces(&self) -> Vec<TraceRecord> {
+        self.ring.snapshot().into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Freeze every instrument, sorted by canonical key. Gauge windows
+    /// reset on read (interval-delta semantics), so back-to-back
+    /// snapshots see disjoint windows.
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        self.lock()
+            .iter()
+            .map(|(key, e)| MetricSnapshot {
+                key: key.clone(),
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                value: match &e.kind {
+                    Instrument::Counter(c) => {
+                        SnapshotValue::Counter(c.load(Ordering::Relaxed))
+                    }
+                    Instrument::Gauge(g) => SnapshotValue::Gauge {
+                        lifetime: g.summary(),
+                        window: g.take_window(),
+                    },
+                    Instrument::Histogram(h) => SnapshotValue::Histogram(h.summary()),
+                },
+            })
+            .collect()
+    }
+
+    /// Render the full registry state — Prometheus text exposition or
+    /// the JSON snapshot (which also carries the slow-trace ring).
+    pub fn render(&self, format: RenderFormat) -> String {
+        let metrics = self.snapshot();
+        match format {
+            RenderFormat::Prometheus => export::render_prometheus(&metrics),
+            RenderFormat::Json => export::render_json(&metrics, &self.slow_traces()),
+        }
+    }
+}
+
+/// Live span timer from [`ObsRegistry::span`]; records on drop.
+#[must_use = "a span records its stage time when dropped"]
+pub struct Span<'a> {
+    obs: &'a ObsRegistry,
+    stage: Stage,
+    start_ns: u64,
+    trace: Option<Arc<RequestTrace>>,
+    active: bool,
+}
+
+impl Span<'_> {
+    /// End the span now (sugar over drop for explicit call sites).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let ns = self.obs.clock.now_ns().saturating_sub(self.start_ns);
+        self.obs.observe_stage_ns(self.stage, ns);
+        if let Some(t) = &self.trace {
+            t.add_stage(self.stage, ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_registry(threshold_ms: f64, ring: usize) -> (ObsRegistry, Arc<AtomicU64>) {
+        let (clock, t) = Clock::mock();
+        let cfg = ObsConfig { enabled: true, trace_threshold_ms: threshold_ms, trace_ring: ring };
+        (ObsRegistry::with_clock(&cfg, clock), t)
+    }
+
+    /// Satellite: deterministic span timing through the injectable mock
+    /// clock — the span's measured time is exactly the mock advance,
+    /// landing in both the stage histogram and the current trace.
+    #[test]
+    fn mock_clock_spans_are_deterministic() {
+        let (obs, t) = mock_registry(0.0, 8);
+        let trace = obs.mint().expect("tracing enabled");
+        let scope = enter(Arc::clone(&trace));
+
+        let span = obs.span(Stage::Align);
+        t.fetch_add(5_000_000, Ordering::Relaxed); // +5 ms
+        span.finish();
+
+        let span = obs.span(Stage::EstepBatch);
+        t.fetch_add(2_000_000, Ordering::Relaxed); // +2 ms
+        drop(span);
+
+        assert_eq!(trace.stage_ns(Stage::Align), 5_000_000);
+        assert_eq!(trace.stage_ns(Stage::EstepBatch), 2_000_000);
+        drop(scope);
+
+        t.fetch_add(1_000_000, Ordering::Relaxed); // +1 ms outside any stage
+        obs.complete(&trace, TraceOutcome::Ok);
+        let traces = obs.slow_traces();
+        assert_eq!(traces.len(), 1);
+        let r = &traces[0];
+        assert_eq!(r.id, trace.id);
+        assert_eq!(r.total_ns, 8_000_000);
+        assert_eq!(r.stage_sum_ns(), 7_000_000);
+        assert!(r.stage_sum_ns() <= r.total_ns);
+        assert_eq!(r.outcome, TraceOutcome::Ok);
+
+        let stages = obs.stage_summaries();
+        let align = stages.iter().find(|(n, _)| *n == "align").unwrap().1;
+        assert_eq!(align.count, 1);
+        // log-bucket quantile: the upper edge of the covering bucket
+        assert!(align.p50_s >= 0.005 && align.p50_s < 0.006, "{}", align.p50_s);
+        let estep = stages.iter().find(|(n, _)| *n == "estep_batch").unwrap().1;
+        assert_eq!(estep.count, 1);
+        assert!((estep.mean_s - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threshold_filters_fast_traces_out_of_the_ring() {
+        let (obs, t) = mock_registry(3.0, 8);
+        // 1 ms trace: below the 3 ms threshold
+        let fast = obs.mint().unwrap();
+        t.fetch_add(1_000_000, Ordering::Relaxed);
+        obs.complete(&fast, TraceOutcome::Ok);
+        assert!(obs.slow_traces().is_empty());
+        // 4 ms trace: recorded
+        let slow = obs.mint().unwrap();
+        t.fetch_add(4_000_000, Ordering::Relaxed);
+        obs.complete(&slow, TraceOutcome::Timeout);
+        let traces = obs.slow_traces();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].id, slow.id);
+        assert_eq!(traces[0].outcome, TraceOutcome::Timeout);
+        assert!(slow.id > fast.id, "request ids are minted monotonically");
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let cfg = ObsConfig { enabled: false, ..ObsConfig::default() };
+        let obs = ObsRegistry::new(&cfg);
+        assert!(obs.mint().is_none());
+        obs.span(Stage::Align).finish();
+        obs.observe_stage_ns(Stage::Align, 1_000_000);
+        assert_eq!(obs.stage_summaries()[Stage::Align.index()].1.count, 0);
+    }
+
+    #[test]
+    fn instruments_are_shared_by_name_and_removed_by_label() {
+        let obs = ObsRegistry::default();
+        let a = obs.counter("serve_shed_total", &[("engine", "0")]);
+        let b = obs.counter("serve_shed_total", &[("engine", "0")]);
+        a.add(2);
+        b.inc();
+        assert_eq!(a.get(), 3, "same name+labels shares one atomic");
+        let other = obs.counter("serve_shed_total", &[("engine", "1")]);
+        assert_eq!(other.get(), 0, "different labels are a different series");
+        let h = obs.histogram("serve_extract_latency_seconds", &[("engine", "0")]);
+        h.record(0.001);
+        let g = obs.gauge("serve_queue_depth", &[("engine", "0")]);
+        g.record(4);
+
+        let keys: Vec<String> = obs.snapshot().into_iter().map(|m| m.key).collect();
+        assert!(keys.contains(&"serve_shed_total{engine=\"0\"}".to_string()));
+        assert!(keys.contains(&"serve_extract_latency_seconds{engine=\"0\"}".to_string()));
+
+        obs.remove_label("engine", "0");
+        let keys: Vec<String> = obs.snapshot().into_iter().map(|m| m.key).collect();
+        assert!(!keys.iter().any(|k| k.contains("engine=\"0\"")), "{keys:?}");
+        assert!(keys.contains(&"serve_shed_total{engine=\"1\"}".to_string()));
+        // the seven stage series are construction-registered and stay
+        assert_eq!(keys.iter().filter(|k| k.starts_with(STAGE_METRIC)).count(), N_STAGES);
+    }
+
+    /// Satellite: exposition-format golden test — Prometheus text and
+    /// the JSON snapshot round-trip through the bundled parser and
+    /// validator.
+    #[test]
+    fn exposition_golden_round_trip() {
+        let (obs, t) = mock_registry(0.0, 8);
+        // one instrument of each kind, with known values
+        for name in [
+            "serve_extract_latency_seconds",
+            "serve_enroll_latency_seconds",
+            "serve_verify_latency_seconds",
+        ] {
+            let h = obs.histogram(name, &[("engine", "0")]);
+            h.record(0.002);
+            h.record(f64::NAN); // lands in `invalid`, not bucket 0
+        }
+        for name in [
+            "serve_batches_total",
+            "serve_batched_requests_total",
+            "serve_shed_total",
+            "serve_timeouts_total",
+            "serve_expired_jobs_total",
+        ] {
+            obs.counter(name, &[("engine", "0")]).add(3);
+        }
+        let g = obs.gauge("serve_queue_depth", &[("engine", "0")]);
+        g.record(2);
+        g.record(6);
+        let trace = obs.mint().unwrap();
+        trace.add_stage(Stage::Align, 2_000_000);
+        trace.add_hop(0);
+        trace.add_hop(1);
+        trace.record_failover();
+        obs.span(Stage::Align).finish();
+        t.fetch_add(2_500_000, Ordering::Relaxed);
+        obs.complete(&trace, TraceOutcome::Ok);
+
+        let prom = obs.render(RenderFormat::Prometheus);
+        assert!(prom.contains("# TYPE serve_shed_total counter"), "{prom}");
+        assert!(prom.contains("serve_shed_total{engine=\"0\"} 3"), "{prom}");
+        assert!(prom.contains("# TYPE serve_queue_depth gauge"), "{prom}");
+        assert!(prom.contains("serve_queue_depth_max{engine=\"0\"} 6"), "{prom}");
+        assert!(prom.contains("serve_queue_depth_window_max{engine=\"0\"} 6"), "{prom}");
+        assert!(prom.contains("# TYPE serve_extract_latency_seconds summary"), "{prom}");
+        assert!(
+            prom.contains("serve_extract_latency_seconds{engine=\"0\",quantile=\"0.5\"}"),
+            "{prom}"
+        );
+        assert!(prom.contains("serve_extract_latency_seconds_count{engine=\"0\"} 1"), "{prom}");
+        assert!(prom.contains("serve_extract_latency_seconds_invalid{engine=\"0\"} 1"), "{prom}");
+        assert!(
+            prom.contains(&format!("{STAGE_METRIC}{{stage=\"align\",quantile=\"0.99\"}}")),
+            "{prom}"
+        );
+
+        let json = obs.render(RenderFormat::Json);
+        validate_snapshot(&json).expect("snapshot validates");
+        let doc = parse_json(&json).unwrap();
+        let metrics = doc.get("metrics").unwrap();
+        let shed = metrics.get("serve_shed_total{engine=\"0\"}").unwrap();
+        assert_eq!(shed.get("value").unwrap().as_num(), Some(3.0));
+        let align = metrics
+            .get(&format!("{STAGE_METRIC}{{stage=\"align\"}}"))
+            .unwrap();
+        assert_eq!(align.get("count").unwrap().as_num(), Some(1.0));
+        let traces = doc.get("slow_traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].get("failovers").unwrap().as_num(), Some(1.0));
+        let hops = traces[0].get("hops").unwrap().as_arr().unwrap();
+        assert_eq!(hops.len(), 2, "both replica hops survive the export");
+        assert_eq!(
+            traces[0].get("stages_ms").unwrap().get("align").unwrap().as_num(),
+            Some(2.0)
+        );
+
+        // the gauge window reset on the first snapshot: a second export
+        // with no new samples shows an empty window, intact lifetime
+        let json2 = obs.render(RenderFormat::Json);
+        let doc2 = parse_json(&json2).unwrap();
+        let depth = doc2.get("metrics").unwrap().get("serve_queue_depth{engine=\"0\"}").unwrap();
+        assert_eq!(depth.get("window_samples").unwrap().as_num(), Some(0.0));
+        assert_eq!(depth.get("max").unwrap().as_num(), Some(6.0));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_and_renamed() {
+        assert!(validate_snapshot("not json").is_err());
+        assert!(validate_snapshot("{}").is_err());
+        // a full valid snapshot minus one canonical metric must fail
+        let obs = ObsRegistry::default();
+        let json = obs.render(RenderFormat::Json);
+        // bare registry lacks the engine-level canonical metrics
+        let err = validate_snapshot(&json).unwrap_err();
+        assert!(err.to_string().contains("canonical metric"), "{err:#}");
+        // with the engine set registered it validates...
+        for name in &CANONICAL_METRICS[4..9] {
+            obs.counter(name, &[("engine", "0")]);
+        }
+        for name in &CANONICAL_METRICS[1..4] {
+            obs.histogram(name, &[("engine", "0")]);
+        }
+        obs.gauge("serve_queue_depth", &[("engine", "0")]);
+        validate_snapshot(&obs.render(RenderFormat::Json)).unwrap();
+        // ...and a rename breaks it again
+        let renamed = obs
+            .render(RenderFormat::Json)
+            .replace("serve_shed_total", "serve_load_shed_total");
+        let err = validate_snapshot(&renamed).unwrap_err();
+        assert!(err.to_string().contains("serve_shed_total"), "{err:#}");
+    }
+}

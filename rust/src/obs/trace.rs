@@ -1,0 +1,242 @@
+//! Per-request stage tracing: a request ID minted at admission and a
+//! shared trace object that rides the request through the dispatcher,
+//! engine, micro-batcher, and durable registry.
+//!
+//! Propagation is by a thread-local *current trace* (the dispatcher or
+//! engine installs it with [`enter`] for the duration of the request
+//! closure) plus an explicit `Arc` captured into the micro-batch `Job`
+//! at submit time — worker threads attribute queue-wait and E-step time
+//! to the right request without any signature changes on the hot path.
+//! Stage timings are relaxed atomics, so a worker can still be writing
+//! an E-step span while the requester finalizes the trace: the record
+//! snapshots whatever has landed, which is exactly the time the caller
+//! observed.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::serve::ServeError;
+
+use super::{Stage, N_STAGES};
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<RequestTrace>>> = RefCell::new(None);
+}
+
+/// One in-flight request's trace: per-stage accumulated nanoseconds,
+/// the replicas it touched, and its failover count.
+#[derive(Debug)]
+pub struct RequestTrace {
+    /// Request ID minted at admission (unique per [`super::ObsRegistry`]).
+    pub id: u64,
+    pub(super) start_ns: u64,
+    stage_ns: [AtomicU64; N_STAGES],
+    hops: Mutex<Vec<usize>>,
+    failovers: AtomicU64,
+}
+
+impl RequestTrace {
+    pub(super) fn new(id: u64, start_ns: u64) -> Self {
+        Self {
+            id,
+            start_ns,
+            stage_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            hops: Mutex::new(Vec::new()),
+            failovers: AtomicU64::new(0),
+        }
+    }
+
+    /// Accumulate `ns` into a stage (a stage can fire more than once per
+    /// request — e.g. align re-runs on a failover hop).
+    pub fn add_stage(&self, stage: Stage, ns: u64) {
+        self.stage_ns[stage.index()].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds accumulated in `stage` so far.
+    pub fn stage_ns(&self, stage: Stage) -> u64 {
+        self.stage_ns[stage.index()].load(Ordering::Relaxed)
+    }
+
+    /// Record an attempt on replica `id` (in attempt order; a failover
+    /// leaves both the failed and the rescuing replica in the list).
+    pub fn add_hop(&self, replica: usize) {
+        self.hops.lock().unwrap_or_else(|p| p.into_inner()).push(replica);
+    }
+
+    /// Count one failover retry.
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Failover retries so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn to_record(&self, total_ns: u64, outcome: TraceOutcome) -> TraceRecord {
+        TraceRecord {
+            id: self.id,
+            total_ns,
+            stage_ns: std::array::from_fn(|i| self.stage_ns[i].load(Ordering::Relaxed)),
+            hops: self.hops.lock().unwrap_or_else(|p| p.into_inner()).clone(),
+            failovers: self.failovers(),
+            outcome,
+        }
+    }
+}
+
+/// How a traced request ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Completed with a result.
+    Ok,
+    /// Rejected without entering a queue (`Overloaded` / `ShuttingDown`).
+    Shed,
+    /// Admitted but missed its response deadline.
+    Timeout,
+    /// Hard failure (worker panic, validation error, ...).
+    Failed,
+}
+
+impl TraceOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Ok => "ok",
+            Self::Shed => "shed",
+            Self::Timeout => "timeout",
+            Self::Failed => "failed",
+        }
+    }
+
+    /// Classify a request result via the typed [`ServeError`] surface.
+    pub fn of<T>(r: &anyhow::Result<T>) -> Self {
+        match r {
+            Ok(_) => Self::Ok,
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Overloaded { .. }) | Some(ServeError::ShuttingDown) => Self::Shed,
+                Some(ServeError::Timeout { .. }) => Self::Timeout,
+                _ => Self::Failed,
+            },
+        }
+    }
+}
+
+/// A completed trace as frozen into the slow-trace ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub id: u64,
+    /// End-to-end nanoseconds from mint to completion.
+    pub total_ns: u64,
+    /// Per-stage accumulated nanoseconds (indexed by [`Stage::index`]).
+    pub stage_ns: [u64; N_STAGES],
+    /// Replica ids in attempt order (empty for a standalone engine).
+    pub hops: Vec<usize>,
+    pub failovers: u64,
+    pub outcome: TraceOutcome,
+}
+
+impl TraceRecord {
+    /// Sum of all stage timings — always ≤ `total_ns` for a request
+    /// whose stages are disjoint sub-intervals of its lifetime.
+    pub fn stage_sum_ns(&self) -> u64 {
+        self.stage_ns.iter().sum()
+    }
+}
+
+/// The thread's current trace, if a request scope is installed.
+pub fn current() -> Option<Arc<RequestTrace>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Install `trace` as the thread's current trace until the returned
+/// scope drops (restores whatever was current before — scopes nest).
+pub fn enter(trace: Arc<RequestTrace>) -> TraceScope {
+    let prev = CURRENT.with(|c| c.replace(Some(trace)));
+    TraceScope { prev }
+}
+
+/// Accumulate `ns` into the current trace's `stage`, if one is
+/// installed — the hook layers without a registry handle (the durable
+/// registry's WAL spans) use to stay attributable.
+pub fn add_current_stage(stage: Stage, ns: u64) {
+    CURRENT.with(|c| {
+        if let Some(t) = c.borrow().as_ref() {
+            t.add_stage(stage, ns);
+        }
+    });
+}
+
+/// Guard restoring the previously-current trace on drop.
+#[must_use = "dropping the scope immediately uninstalls the trace"]
+pub struct TraceScope {
+    prev: Option<Arc<RequestTrace>>,
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        assert!(current().is_none());
+        let a = Arc::new(RequestTrace::new(1, 0));
+        let b = Arc::new(RequestTrace::new(2, 0));
+        {
+            let _sa = enter(Arc::clone(&a));
+            assert_eq!(current().unwrap().id, 1);
+            {
+                let _sb = enter(Arc::clone(&b));
+                assert_eq!(current().unwrap().id, 2);
+                add_current_stage(Stage::Align, 50);
+            }
+            assert_eq!(current().unwrap().id, 1);
+        }
+        assert!(current().is_none());
+        assert_eq!(b.stage_ns(Stage::Align), 50);
+        assert_eq!(a.stage_ns(Stage::Align), 0);
+    }
+
+    #[test]
+    fn record_snapshots_stages_hops_failovers() {
+        let t = RequestTrace::new(7, 100);
+        t.add_stage(Stage::AdmitWait, 10);
+        t.add_stage(Stage::EstepBatch, 30);
+        t.add_stage(Stage::EstepBatch, 5);
+        t.add_hop(0);
+        t.add_hop(2);
+        t.record_failover();
+        let r = t.to_record(100, TraceOutcome::Ok);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.stage_ns[Stage::AdmitWait.index()], 10);
+        assert_eq!(r.stage_ns[Stage::EstepBatch.index()], 35);
+        assert_eq!(r.hops, vec![0, 2]);
+        assert_eq!(r.failovers, 1);
+        assert_eq!(r.stage_sum_ns(), 45);
+        assert!(r.stage_sum_ns() <= r.total_ns);
+    }
+
+    #[test]
+    fn outcome_classification() {
+        use std::time::Duration;
+        let ok: anyhow::Result<u32> = Ok(1);
+        assert_eq!(TraceOutcome::of(&ok), TraceOutcome::Ok);
+        let shed: anyhow::Result<u32> =
+            Err(ServeError::Overloaded { waited: Duration::ZERO }.into());
+        assert_eq!(TraceOutcome::of(&shed), TraceOutcome::Shed);
+        let drain: anyhow::Result<u32> = Err(ServeError::ShuttingDown.into());
+        assert_eq!(TraceOutcome::of(&drain), TraceOutcome::Shed);
+        let to: anyhow::Result<u32> = Err(ServeError::Timeout { waited: Duration::ZERO }.into());
+        assert_eq!(TraceOutcome::of(&to), TraceOutcome::Timeout);
+        let hard: anyhow::Result<u32> = Err(anyhow::anyhow!("boom"));
+        assert_eq!(TraceOutcome::of(&hard), TraceOutcome::Failed);
+        assert_eq!(TraceOutcome::Timeout.as_str(), "timeout");
+    }
+}

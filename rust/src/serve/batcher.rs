@@ -27,7 +27,7 @@
 //! at the epoch boundary instead of mixing models.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -36,6 +36,7 @@ use anyhow::Result;
 
 use crate::ivector::{estep_batch_cpu, EstepWorkspace, UttStats};
 use crate::metrics::{DepthGauge, DepthSummary};
+use crate::obs::{self, Counter, ObsRegistry, RequestTrace, Stage};
 
 use super::bundle::ServeModel;
 use super::error::ServeError;
@@ -57,6 +58,10 @@ struct Job {
     /// its receiver, so workers purge the job instead of burning a
     /// batch slot on dead work.
     expires: Instant,
+    /// The submitting thread's current request trace (if tracing is on)
+    /// — captured at submit so worker threads can attribute queue-wait
+    /// and E-step time to the right request.
+    trace: Option<Arc<RequestTrace>>,
 }
 
 struct Shared {
@@ -78,17 +83,20 @@ struct Shared {
     /// overload/timeout tests and the cluster bench's deliberate-stall
     /// harness pivot on. Never set by the production request path.
     stalled: AtomicBool,
-    /// Dispatched batch count (metrics).
-    batches: AtomicU64,
-    /// Requests that flowed through batches (metrics).
-    requests: AtomicU64,
-    /// Requests shed at admission (queue full past the submit deadline).
-    shed: AtomicU64,
+    /// The observability registry the counters below live in (also the
+    /// sink for the queue-wait / estep-batch stage histograms).
+    obs: Arc<ObsRegistry>,
+    /// Dispatched batch count (`serve_batches_total`).
+    batches: Counter,
+    /// Requests that flowed through batches (`serve_batched_requests_total`).
+    requests: Counter,
+    /// Requests shed at admission (`serve_shed_total`).
+    shed: Counter,
     /// Queued jobs purged because their caller's request deadline
-    /// passed before a worker reached them.
-    expired: AtomicU64,
-    /// Post-push queue depth per admitted request.
-    depth: DepthGauge,
+    /// passed before a worker reached them (`serve_expired_jobs_total`).
+    expired: Counter,
+    /// Post-push queue depth per admitted request (`serve_queue_depth`).
+    depth: Arc<DepthGauge>,
 }
 
 /// RAII announcement of an in-flight request (created before the
@@ -119,8 +127,19 @@ pub(crate) struct MicroBatcher {
 }
 
 impl MicroBatcher {
-    pub fn new(batch_utts: usize, flush: Duration, workers: usize, queue_cap: usize) -> Self {
+    /// `obs` is the registry the batcher's counters and stage
+    /// histograms live in; `label` is the owning engine's instance
+    /// label (the instruments register as `name{engine="<label>"}`).
+    pub fn new(
+        batch_utts: usize,
+        flush: Duration,
+        workers: usize,
+        queue_cap: usize,
+        obs: Arc<ObsRegistry>,
+        label: &str,
+    ) -> Self {
         let queue_cap = queue_cap.max(1);
+        let labels = [("engine", label)];
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -133,11 +152,12 @@ impl MicroBatcher {
             queue_cap,
             inbound: AtomicUsize::new(0),
             stalled: AtomicBool::new(false),
-            batches: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            expired: AtomicU64::new(0),
-            depth: DepthGauge::new(),
+            batches: obs.counter("serve_batches_total", &labels),
+            requests: obs.counter("serve_batched_requests_total", &labels),
+            shed: obs.counter("serve_shed_total", &labels),
+            expired: obs.counter("serve_expired_jobs_total", &labels),
+            depth: obs.gauge("serve_queue_depth", &labels),
+            obs,
         });
         let workers = (0..workers.max(1))
             .map(|_| {
@@ -225,7 +245,7 @@ impl MicroBatcher {
             let now = Instant::now();
             if now >= submit_deadline {
                 drop(q);
-                shared.shed.fetch_add(1, Ordering::Relaxed);
+                shared.shed.inc();
                 return Err(ServeError::Overloaded { waited: now - start }.into());
             }
             // bounded wait: a worker's post-drain notify_all wakes us,
@@ -233,7 +253,14 @@ impl MicroBatcher {
             // missed wakeup can only cost the deadline, never a hang
             q = shared.cv.wait_timeout(q, submit_deadline - now).unwrap().0;
         }
-        q.push_back(Job { stats, model, resp, enqueued: Instant::now(), expires });
+        q.push_back(Job {
+            stats,
+            model,
+            resp,
+            enqueued: Instant::now(),
+            expires,
+            trace: obs::current(),
+        });
         shared.depth.record(q.len() as u64);
         drop(q);
         shared.cv.notify_all();
@@ -242,23 +269,23 @@ impl MicroBatcher {
 
     /// Batches dispatched so far.
     pub fn dispatched_batches(&self) -> u64 {
-        self.shared.batches.load(Ordering::Relaxed)
+        self.shared.batches.get()
     }
 
     /// Requests that flowed through dispatched batches.
     pub fn batched_requests(&self) -> u64 {
-        self.shared.requests.load(Ordering::Relaxed)
+        self.shared.requests.get()
     }
 
     /// Requests shed at admission (typed `Overloaded` rejections).
     pub fn shed_requests(&self) -> u64 {
-        self.shared.shed.load(Ordering::Relaxed)
+        self.shared.shed.get()
     }
 
     /// Queued jobs purged because their caller's deadline passed before
     /// a worker reached them.
     pub fn expired_jobs(&self) -> u64 {
-        self.shared.expired.load(Ordering::Relaxed)
+        self.shared.expired.get()
     }
 
     /// Queue-depth statistics over admitted requests.
@@ -364,6 +391,16 @@ fn worker_loop(shared: &Shared) {
         if batch.is_empty() {
             continue;
         }
+        // queue-wait ends here: the jobs are out of the queue and about
+        // to dispatch as one batch
+        let drained = Instant::now();
+        for job in &batch {
+            let ns = drained.saturating_duration_since(job.enqueued).as_nanos() as u64;
+            shared.obs.observe_stage_ns(Stage::QueueWait, ns);
+            if let Some(t) = &job.trace {
+                t.add_stage(Stage::QueueWait, ns);
+            }
+        }
         // a panicking batch (e.g. non-finite statistics blowing up the
         // E-step) must not kill the worker: catch it, drop the jobs —
         // their response senders close, so each waiting request gets an
@@ -393,7 +430,7 @@ fn purge_expired(q: &mut VecDeque<Job>, shared: &Shared) {
     q.retain(|job| now < job.expires);
     let removed = (before - q.len()) as u64;
     if removed > 0 {
-        shared.expired.fetch_add(removed, Ordering::Relaxed);
+        shared.expired.add(removed);
     }
 }
 
@@ -415,10 +452,18 @@ fn run_batch(
         *ws_rank = r;
     }
     let refs: Vec<&UttStats> = batch.iter().map(|j| &j.stats).collect();
+    let started = Instant::now();
     let phi = estep_batch_cpu(&refs, &model.consts, ws.as_mut().unwrap(), None);
-    shared.batches.fetch_add(1, Ordering::Relaxed);
-    shared.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    // one histogram sample per dispatch; every rider's trace carries the
+    // full batch time (that is the latency the request actually paid)
+    let estep_ns = started.elapsed().as_nanos() as u64;
+    shared.obs.observe_stage_ns(Stage::EstepBatch, estep_ns);
+    shared.batches.inc();
+    shared.requests.add(batch.len() as u64);
     for (u, job) in batch.iter().enumerate() {
+        if let Some(t) = &job.trace {
+            t.add_stage(Stage::EstepBatch, estep_ns);
+        }
         let mut ivector = phi.row(u).to_vec();
         for (x, p) in ivector.iter_mut().zip(&model.consts.prior_mean) {
             *x -= p;

@@ -5,20 +5,24 @@
 //! `BENCH_2.json` serving section.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::backend::{Backend, BackendOpts};
-use crate::config::Config;
+use crate::bench_util::{variants_json, write_bench_json};
+use crate::config::{Config, ObsConfig};
 use crate::coordinator::{align_archive_cpu_prec, stats_from_posts, ComputePath, TrainSetup};
 use crate::exec::default_workers;
 use crate::frontend::synth::{generate_corpus, TrafficGen};
 use crate::ivector::{extract_cpu, Formulation, TrainVariant, UttStats};
 use crate::metrics::{LatencySummary, Stopwatch};
+use crate::obs::{latency_summary_json, ObsRegistry};
 
 use super::bundle::ModelBundle;
 use super::engine::Engine;
 use super::error::ServeError;
+use super::registry::Registry;
 
 /// A scaled-down config whose full offline recipe trains in seconds —
 /// the "tiny-config engine" of the serving benchmarks and tests.
@@ -178,18 +182,27 @@ pub struct ServeBenchReport {
     pub torn_tail: u64,
     pub target_mean: f64,
     pub impostor_mean: f64,
+    /// Per-stage latency summaries (admit-wait, align, queue-wait,
+    /// E-step, …) from the engine's [`ObsRegistry`] — where a slow
+    /// p99 actually went.
+    pub stages: Vec<(&'static str, LatencySummary)>,
 }
 
 impl ServeBenchReport {
     /// One JSON object (no trailing newline) for the BENCH_2 report.
     pub fn json_fragment(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|(name, s)| format!("\"{name}\": {}", latency_summary_json(s)))
+            .collect();
         format!(
             "{{\"requests\": {}, \"completed\": {}, \"concurrency\": {}, \"wall_s\": {:.6}, \
 \"throughput_rps\": {:.2}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \
 \"mean_ms\": {:.4}, \"max_ms\": {:.4}, \"mean_batch\": {:.3}, \
 \"shed\": {}, \"timeouts\": {}, \"queue_depth_max\": {}, \"queue_depth_mean\": {:.2}, \
 \"wal_appends\": {}, \"compactions\": {}, \"torn_tail\": {}, \
-\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
+\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}, \"stages\": {{{}}}}}",
             self.requests,
             self.completed_requests,
             self.concurrency,
@@ -210,6 +223,7 @@ impl ServeBenchReport {
             self.torn_tail,
             self.target_mean,
             self.impostor_mean,
+            stages.join(", "),
         )
     }
 }
@@ -338,29 +352,46 @@ pub fn run_verify_load(
         } else {
             0.0
         },
+        stages: engine.obs().stage_summaries(),
     })
 }
 
 /// Run the same load twice — once through `serve_cfg` (micro-batching
 /// on) and once through a `batch_utts = 1` twin — the comparison the
 /// `serve-bench` CLI and the `speed_report` example both report.
+///
+/// Each engine gets its own [`ObsRegistry`] built from `obs_cfg` so
+/// the two variants' stage histograms stay separate; the batched
+/// engine's registry is returned for snapshot export (`--obs-out`).
 pub fn run_batched_vs_unbatched(
     bundle: ModelBundle,
     serve_cfg: &crate::config::ServeConfig,
+    obs_cfg: &ObsConfig,
     traffic: &TrafficGen,
     opts: &ServeBenchOpts,
-) -> Result<(ServeBenchReport, ServeBenchReport)> {
+) -> Result<(ServeBenchReport, ServeBenchReport, Arc<ObsRegistry>)> {
+    let obs = Arc::new(ObsRegistry::new(obs_cfg));
     let batched = {
-        let engine = Engine::new(bundle.clone(), serve_cfg)?;
+        let engine = Engine::with_registry_obs(
+            bundle.clone(),
+            serve_cfg,
+            Arc::new(Registry::new(serve_cfg.registry_shards)),
+            Arc::clone(&obs),
+        )?;
         run_verify_load(&engine, traffic, opts)?
     };
     let unbatched = {
         let mut solo = serve_cfg.clone();
         solo.batch_utts = 1;
-        let engine = Engine::new(bundle, &solo)?;
+        let engine = Engine::with_registry_obs(
+            bundle,
+            &solo,
+            Arc::new(Registry::new(solo.registry_shards)),
+            Arc::new(ObsRegistry::new(obs_cfg)),
+        )?;
         run_verify_load(&engine, traffic, opts)?
     };
-    Ok((batched, unbatched))
+    Ok((batched, unbatched, obs))
 }
 
 /// Write the `BENCH_2.json` serving report from named load runs.
@@ -368,15 +399,9 @@ pub fn write_bench2_json(
     path: impl AsRef<Path>,
     variants: &[(&str, &ServeBenchReport)],
 ) -> Result<()> {
-    let mut body = String::from("{\n  \"issue\": 2,\n  \"serving\": {\n");
-    for (i, (name, report)) in variants.iter().enumerate() {
-        body.push_str(&format!("    \"{name}\": {}", report.json_fragment()));
-        body.push_str(if i + 1 < variants.len() { ",\n" } else { "\n" });
-    }
-    body.push_str("  }\n}\n");
-    std::fs::write(&path, body)
-        .with_context(|| format!("write {}", path.as_ref().display()))?;
-    Ok(())
+    let runs: Vec<(String, String)> =
+        variants.iter().map(|(name, r)| (name.to_string(), r.json_fragment())).collect();
+    write_bench_json(path, 2, &[("serving", variants_json(&runs))])
 }
 
 #[cfg(test)]
@@ -393,6 +418,7 @@ mod tests {
             throughput_rps: 200.0,
             verify: LatencySummary {
                 count: 100,
+                invalid: 0,
                 mean_s: 0.002,
                 p50_s: 0.0015,
                 p95_s: 0.004,
@@ -401,6 +427,7 @@ mod tests {
             },
             enroll: LatencySummary {
                 count: 8,
+                invalid: 0,
                 mean_s: 0.002,
                 p50_s: 0.0015,
                 p95_s: 0.004,
@@ -419,6 +446,18 @@ mod tests {
             torn_tail: 0,
             target_mean: 3.0,
             impostor_mean: -2.0,
+            stages: vec![(
+                "align",
+                LatencySummary {
+                    count: 100,
+                    invalid: 0,
+                    mean_s: 0.001,
+                    p50_s: 0.001,
+                    p95_s: 0.002,
+                    p99_s: 0.003,
+                    max_s: 0.004,
+                },
+            )],
         };
         let frag = report.json_fragment();
         assert!(frag.contains("\"p99_ms\": 6.0000"), "{frag}");
@@ -431,12 +470,15 @@ mod tests {
         assert!(frag.contains("\"wal_appends\": 8"), "{frag}");
         assert!(frag.contains("\"compactions\": 1"), "{frag}");
         assert!(frag.contains("\"torn_tail\": 0"), "{frag}");
+        assert!(frag.contains("\"stages\": {\"align\": {\"count\": 100"), "{frag}");
+        assert!(frag.contains("\"p99_ms\": 3.0000"), "{frag}");
 
         let dir = std::env::temp_dir().join("ivtv_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("BENCH_2.json");
         write_bench2_json(&p, &[("batched", &report), ("unbatched", &report)]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"schema_version\": 1"));
         assert!(text.contains("\"issue\": 2"));
         assert!(text.contains("\"batched\": {"));
         assert!(text.contains("\"unbatched\": {"));

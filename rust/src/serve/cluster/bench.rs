@@ -19,9 +19,11 @@ use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::bench_util::{variants_json, write_bench_json};
 use crate::config::{Config, ServeConfig};
 use crate::frontend::synth::TrafficGen;
 use crate::metrics::{LatencySummary, Stopwatch};
+use crate::obs::latency_summary_json;
 use crate::serve::bench::{tiny_serve_config, trial_plan};
 use crate::serve::{ModelBundle, ServeError};
 
@@ -131,11 +133,20 @@ pub struct ClusterBenchReport {
     pub torn_tail: u64,
     pub target_mean: f64,
     pub impostor_mean: f64,
+    /// Per-stage latency summaries (admit-wait, align, queue-wait,
+    /// E-step, WAL append/fsync, …) from the dispatcher's shared
+    /// [`crate::obs::ObsRegistry`] — failover hops included.
+    pub stages: Vec<(&'static str, LatencySummary)>,
 }
 
 impl ClusterBenchReport {
     /// One JSON object (no trailing newline) for the BENCH_5 report.
     pub fn json_fragment(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|(name, s)| format!("\"{name}\": {}", latency_summary_json(s)))
+            .collect();
         format!(
             "{{\"replicas\": {}, \"route\": \"{}\", \"requests\": {}, \"completed\": {}, \
 \"rejected\": {}, \"wall_s\": {:.6}, \"throughput_rps\": {:.2}, \
@@ -143,7 +154,7 @@ impl ClusterBenchReport {
 \"failovers\": {}, \"exhausted\": {}, \"shed\": {}, \"timeouts\": {}, \"swaps\": {}, \
 \"acked_enrollments\": {}, \"lost_enrollments\": {}, \
 \"wal_appends\": {}, \"compactions\": {}, \"torn_tail\": {}, \
-\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}}}",
+\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}, \"stages\": {{{}}}}}",
             self.replicas,
             self.route,
             self.requests,
@@ -166,6 +177,7 @@ impl ClusterBenchReport {
             self.torn_tail,
             self.target_mean,
             self.impostor_mean,
+            stages.join(", "),
         )
     }
 }
@@ -366,6 +378,7 @@ pub fn run_cluster_load(
         } else {
             0.0
         },
+        stages: dispatcher.obs().stage_summaries(),
     })
 }
 
@@ -375,15 +388,9 @@ pub fn write_bench5_json(
     path: impl AsRef<std::path::Path>,
     variants: &[(String, &ClusterBenchReport)],
 ) -> Result<()> {
-    let mut body = String::from("{\n  \"issue\": 5,\n  \"cluster\": {\n");
-    for (i, (name, report)) in variants.iter().enumerate() {
-        body.push_str(&format!("    \"{name}\": {}", report.json_fragment()));
-        body.push_str(if i + 1 < variants.len() { ",\n" } else { "\n" });
-    }
-    body.push_str("  }\n}\n");
-    std::fs::write(&path, body)
-        .with_context(|| format!("write {}", path.as_ref().display()))?;
-    Ok(())
+    let runs: Vec<(String, String)> =
+        variants.iter().map(|(name, r)| (name.clone(), r.json_fragment())).collect();
+    write_bench_json(path, 5, &[("cluster", variants_json(&runs))])
 }
 
 #[cfg(test)]
@@ -466,6 +473,7 @@ mod tests {
             throughput_rps: 180.0,
             verify: LatencySummary {
                 count: 90,
+                invalid: 0,
                 mean_s: 0.002,
                 p50_s: 0.0015,
                 p95_s: 0.004,
@@ -484,6 +492,18 @@ mod tests {
             torn_tail: 0,
             target_mean: 3.0,
             impostor_mean: -2.0,
+            stages: vec![(
+                "estep_batch",
+                LatencySummary {
+                    count: 90,
+                    invalid: 0,
+                    mean_s: 0.001,
+                    p50_s: 0.001,
+                    p95_s: 0.002,
+                    p99_s: 0.003,
+                    max_s: 0.004,
+                },
+            )],
         };
         let frag = report.json_fragment();
         assert!(frag.contains("\"replicas\": 2"), "{frag}");
@@ -494,6 +514,7 @@ mod tests {
         assert!(frag.contains("\"lost_enrollments\": 0"), "{frag}");
         assert!(frag.contains("\"wal_appends\": 20"), "{frag}");
         assert!(frag.contains("\"torn_tail\": 0"), "{frag}");
+        assert!(frag.contains("\"stages\": {\"estep_batch\": {\"count\": 90"), "{frag}");
 
         let dir = std::env::temp_dir().join("ivtv_bench5_json_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -504,6 +525,7 @@ mod tests {
         )
         .unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"schema_version\": 1"));
         assert!(text.contains("\"issue\": 5"));
         assert!(text.contains("\"replicas_1\": {"));
         assert!(text.contains("\"replicas_2\": {"));

@@ -23,7 +23,7 @@
 //!   (finish queued batches, join workers), resume routing — so the
 //!   rest of the cluster keeps serving throughout a model push.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -33,6 +33,7 @@ use crate::config::{ClusterConfig, RoutePolicy, ServeConfig};
 use crate::gmm::AlignPrecision;
 use crate::linalg::Mat;
 use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::obs::{self, Counter, ObsRegistry, RequestTrace, TraceOutcome};
 use crate::serve::{
     DurabilityMetrics, Engine, EngineMetrics, ModelBundle, Registry, ServeError, ServeModel,
     VerifyOutcome,
@@ -184,21 +185,26 @@ pub struct Dispatcher {
     /// Set by [`Dispatcher::drain`]; terminal — a retired cluster
     /// refuses further swaps instead of resurrecting worker pools.
     retired: AtomicBool,
+    /// The cluster-wide observability registry: shared with every
+    /// replica engine (labeled per-engine series) and the home of the
+    /// unlabeled `cluster_*` counters below, which therefore persist
+    /// across rolling swaps by construction.
+    obs: Arc<ObsRegistry>,
     /// Shed/timeout counts carried over from engines retired by rolling
     /// swaps (a swap rebuilds the engine with zeroed counters; without
     /// this the cluster totals would silently forget everything before
     /// the last swap).
-    retired_shed: AtomicU64,
-    retired_timeouts: AtomicU64,
+    retired_shed: Counter,
+    retired_timeouts: Counter,
     /// Round-robin cursor.
     rr: AtomicUsize,
-    routed: AtomicU64,
-    failovers: AtomicU64,
-    exhausted: AtomicU64,
-    swaps: AtomicU64,
-    extract_lat: LatencyHistogram,
-    enroll_lat: LatencyHistogram,
-    verify_lat: LatencyHistogram,
+    routed: Counter,
+    failovers: Counter,
+    exhausted: Counter,
+    swaps: Counter,
+    extract_lat: Arc<LatencyHistogram>,
+    enroll_lat: Arc<LatencyHistogram>,
+    verify_lat: Arc<LatencyHistogram>,
 }
 
 impl Dispatcher {
@@ -222,11 +228,30 @@ impl Dispatcher {
         cluster: &ClusterConfig,
         registry: Arc<Registry>,
     ) -> Result<Self> {
+        Self::with_registry_obs(bundle, serve, cluster, registry, Arc::new(ObsRegistry::default()))
+    }
+
+    /// Like [`Dispatcher::with_registry`] with an externally-owned
+    /// observability registry — every replica engine registers its
+    /// labeled instruments into it, so one snapshot covers the whole
+    /// cluster plus the dispatcher's own `cluster_*` series.
+    pub fn with_registry_obs(
+        bundle: ModelBundle,
+        serve: &ServeConfig,
+        cluster: &ClusterConfig,
+        registry: Arc<Registry>,
+        obs: Arc<ObsRegistry>,
+    ) -> Result<Self> {
         let n = cluster.replicas.max(1);
         let mut replicas = Vec::with_capacity(n);
         for id in 0..n {
             let cfg = cluster.replica_serve_cfg(serve, id);
-            let engine = Engine::with_registry(bundle.clone(), &cfg, Arc::clone(&registry))?;
+            let engine = Engine::with_registry_obs(
+                bundle.clone(),
+                &cfg,
+                Arc::clone(&registry),
+                Arc::clone(&obs),
+            )?;
             replicas.push(Replica {
                 id,
                 engine: RwLock::new(Arc::new(engine)),
@@ -245,17 +270,23 @@ impl Dispatcher {
             cluster_cfg: cluster.clone(),
             swap_lock: Mutex::new(()),
             retired: AtomicBool::new(false),
-            retired_shed: AtomicU64::new(0),
-            retired_timeouts: AtomicU64::new(0),
+            retired_shed: obs.counter("cluster_retired_shed_total", &[]),
+            retired_timeouts: obs.counter("cluster_retired_timeouts_total", &[]),
             rr: AtomicUsize::new(0),
-            routed: AtomicU64::new(0),
-            failovers: AtomicU64::new(0),
-            exhausted: AtomicU64::new(0),
-            swaps: AtomicU64::new(0),
-            extract_lat: LatencyHistogram::new(),
-            enroll_lat: LatencyHistogram::new(),
-            verify_lat: LatencyHistogram::new(),
+            routed: obs.counter("cluster_routed_total", &[]),
+            failovers: obs.counter("cluster_failovers_total", &[]),
+            exhausted: obs.counter("cluster_exhausted_total", &[]),
+            swaps: obs.counter("cluster_swaps_total", &[]),
+            extract_lat: obs.histogram("cluster_extract_latency_seconds", &[]),
+            enroll_lat: obs.histogram("cluster_enroll_latency_seconds", &[]),
+            verify_lat: obs.histogram("cluster_verify_latency_seconds", &[]),
+            obs,
         })
+    }
+
+    /// The observability registry the cluster reports into.
+    pub fn obs(&self) -> &Arc<ObsRegistry> {
+        &self.obs
     }
 
     /// Number of replicas.
@@ -320,8 +351,27 @@ impl Dispatcher {
     /// deadline, and a hard error (unknown speaker, model mismatch,
     /// worker failure) would fail identically anywhere.
     fn dispatch<T>(&self, f: impl Fn(&Engine) -> Result<T>) -> Result<T> {
+        // the trace spans the whole failover loop: hops, retries, and
+        // the engines' stage spans (which join this thread's scope) all
+        // accumulate into one record, so a rescued request shows every
+        // replica it touched
+        let trace = self.obs.mint();
+        let scope = trace.as_ref().map(|t| obs::enter(Arc::clone(t)));
+        let r = self.dispatch_attempts(trace.as_deref(), f);
+        drop(scope);
+        if let Some(t) = &trace {
+            self.obs.complete(t, TraceOutcome::of(&r));
+        }
+        r
+    }
+
+    fn dispatch_attempts<T>(
+        &self,
+        trace: Option<&RequestTrace>,
+        f: impl Fn(&Engine) -> Result<T>,
+    ) -> Result<T> {
         let deadline = Instant::now() + self.request_timeout;
-        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.routed.inc();
         let mut tried: Vec<usize> = Vec::with_capacity(2);
         let mut last: Option<anyhow::Error> = None;
         for attempt in 0..=self.max_failovers {
@@ -329,6 +379,9 @@ impl Dispatcher {
             let replica = &self.replicas[id];
             let engine = replica.engine();
             let _flight = Flight::begin(&replica.in_flight);
+            if let Some(t) = trace {
+                t.add_hop(id);
+            }
             match f(&engine) {
                 Ok(v) => return Ok(v),
                 Err(e) => {
@@ -354,10 +407,13 @@ impl Dispatcher {
                         // still retriable, but the budget (attempts,
                         // replicas, or time) is spent: the caller sees
                         // the last rejection
-                        self.exhausted.fetch_add(1, Ordering::Relaxed);
+                        self.exhausted.inc();
                         break;
                     }
-                    self.failovers.fetch_add(1, Ordering::Relaxed);
+                    self.failovers.inc();
+                    if let Some(t) = trace {
+                        t.record_failover();
+                    }
                 }
             }
         }
@@ -419,10 +475,11 @@ impl Dispatcher {
         );
         for replica in &self.replicas {
             let cfg = self.cluster_cfg.replica_serve_cfg(&self.serve_cfg, replica.id);
-            let next = Arc::new(Engine::with_registry(
+            let next = Arc::new(Engine::with_registry_obs(
                 bundle.clone(),
                 &cfg,
                 Arc::clone(&self.registry),
+                Arc::clone(&self.obs),
             )?);
             replica.admitting.store(false, Ordering::Release);
             let old = {
@@ -448,11 +505,10 @@ impl Dispatcher {
             // still waiting on the old engine can time out after this
             // read; that residue is the one count this can miss.)
             let old_metrics = old.metrics();
-            self.retired_shed.fetch_add(old_metrics.shed_requests, Ordering::Relaxed);
-            self.retired_timeouts
-                .fetch_add(old_metrics.timed_out_requests, Ordering::Relaxed);
+            self.retired_shed.add(old_metrics.shed_requests);
+            self.retired_timeouts.add(old_metrics.timed_out_requests);
         }
-        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.swaps.inc();
         Ok(())
     }
 
@@ -489,12 +545,12 @@ impl Dispatcher {
             extract: self.extract_lat.summary(),
             enroll: self.enroll_lat.summary(),
             verify: self.verify_lat.summary(),
-            routed: self.routed.load(Ordering::Relaxed),
-            failovers: self.failovers.load(Ordering::Relaxed),
-            exhausted: self.exhausted.load(Ordering::Relaxed),
-            swaps: self.swaps.load(Ordering::Relaxed),
-            retired_shed: self.retired_shed.load(Ordering::Relaxed),
-            retired_timeouts: self.retired_timeouts.load(Ordering::Relaxed),
+            routed: self.routed.get(),
+            failovers: self.failovers.get(),
+            exhausted: self.exhausted.get(),
+            swaps: self.swaps.get(),
+            retired_shed: self.retired_shed.get(),
+            retired_timeouts: self.retired_timeouts.get(),
             durability: self.registry.durability_metrics(),
             replicas: self
                 .replicas
@@ -657,6 +713,80 @@ mod tests {
 
     fn engine_of(d: &Dispatcher, id: usize) -> Arc<Engine> {
         d.replicas[id].engine()
+    }
+
+    /// Tentpole acceptance: a failover-rescued request's trace lands in
+    /// the slow-trace ring showing *both* replica hops (the shedding one
+    /// and the rescuing one) plus the retry count.
+    #[test]
+    fn failover_trace_lands_in_ring_with_both_hops() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 91);
+        let mut serve = serve_opts();
+        serve.queue_cap = 1;
+        serve.submit_timeout_ms = 120;
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve,
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+        )
+        .unwrap();
+
+        // freeze replica 0 and park a direct request in its queue so
+        // every dispatcher request routed there sheds deterministically
+        d.stall_replica(0, true);
+        let stalled_engine = engine_of(&d, 0);
+        let filler_feats = traffic.utterance(0, 99);
+        std::thread::scope(|scope| {
+            let filler = {
+                let engine = Arc::clone(&stalled_engine);
+                let feats = &filler_feats;
+                scope.spawn(move || engine.extract(feats))
+            };
+            let t0 = Instant::now();
+            while stalled_engine.queue_len() != 1 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "filler never queued");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+
+            // round robin alternates 0,1,0,1: two requests shed on the
+            // stalled replica and get rescued by replica 1
+            for k in 0..4u64 {
+                d.extract(&traffic.utterance((k % 2) as usize, k)).unwrap();
+            }
+
+            let traces = d.obs().slow_traces();
+            let rescued: Vec<_> = traces.iter().filter(|t| t.failovers >= 1).collect();
+            assert_eq!(rescued.len(), 2, "two requests hit the stalled replica: {traces:?}");
+            for t in &rescued {
+                assert_eq!(t.hops, vec![0, 1], "failed hop then rescuing hop: {t:?}");
+                assert_eq!(t.outcome, TraceOutcome::Ok, "{t:?}");
+                assert_eq!(t.failovers, 1, "{t:?}");
+                assert!(
+                    t.stage_sum_ns() <= t.total_ns,
+                    "stage sum {} vs end-to-end {}",
+                    t.stage_sum_ns(),
+                    t.total_ns
+                );
+                // the rescue rode a real batch: alignment (run on both
+                // hops) and E-step time are attributed to this request
+                assert!(t.stage_ns[crate::obs::Stage::Align.index()] > 0, "{t:?}");
+                assert!(t.stage_ns[crate::obs::Stage::EstepBatch.index()] > 0, "{t:?}");
+            }
+            let direct: Vec<_> = traces.iter().filter(|t| t.failovers == 0).collect();
+            assert_eq!(direct.len(), 2);
+            for t in &direct {
+                assert_eq!(t.hops, vec![1], "healthy replica served first try: {t:?}");
+            }
+
+            d.stall_replica(0, false);
+            filler.join().unwrap().unwrap();
+        });
+        // after the thaw, the parked request's own engine-minted trace
+        // completed too — a direct engine call records no replica hops
+        let all = d.obs().slow_traces();
+        assert_eq!(all.len(), 5);
+        assert!(all.iter().any(|t| t.hops.is_empty()), "{all:?}");
     }
 
     /// Satellite acceptance: a rolling swap under concurrent

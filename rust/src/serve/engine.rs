@@ -18,7 +18,7 @@
 //! request thread forever). Shed/timeout counts and queue-depth stats
 //! are part of [`EngineMetrics`].
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, RecvTimeoutError};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
@@ -28,6 +28,7 @@ use anyhow::{anyhow, Result};
 use crate::config::ServeConfig;
 use crate::linalg::Mat;
 use crate::metrics::{DepthSummary, LatencyHistogram, LatencySummary};
+use crate::obs::{self, Counter, ObsRegistry, Stage, TraceOutcome};
 
 use super::batcher::MicroBatcher;
 use super::bundle::{ModelBundle, ServeModel};
@@ -108,11 +109,20 @@ pub struct Engine {
     /// Alignment scoring precision handed to each `ServeModel`
     /// (`[align] precision`; hot swaps inherit it).
     precision: crate::gmm::AlignPrecision,
-    /// Requests that missed their response deadline.
-    timeouts: AtomicU64,
-    extract_lat: LatencyHistogram,
-    enroll_lat: LatencyHistogram,
-    verify_lat: LatencyHistogram,
+    /// The observability registry every engine instrument lives in —
+    /// shared with the micro-batcher, and with sibling replicas when a
+    /// cluster dispatcher owns the engines.
+    obs: Arc<ObsRegistry>,
+    /// This engine's `engine="<label>"` instrument label; Drop
+    /// deregisters the labeled series so a swapped-out replica stops
+    /// appearing in exports.
+    obs_label: String,
+    /// Requests that missed their response deadline
+    /// (`serve_timeouts_total`).
+    timeouts: Counter,
+    extract_lat: Arc<LatencyHistogram>,
+    enroll_lat: Arc<LatencyHistogram>,
+    verify_lat: Arc<LatencyHistogram>,
     started: Instant,
 }
 
@@ -135,7 +145,22 @@ impl Engine {
         opts: &ServeConfig,
         registry: Arc<Registry>,
     ) -> Result<Self> {
+        Self::with_registry_obs(bundle, opts, registry, Arc::new(ObsRegistry::default()))
+    }
+
+    /// [`Engine::with_registry`] with an externally-owned observability
+    /// registry — the cluster dispatcher passes one shared registry to
+    /// every replica so the whole fleet exports through a single
+    /// snapshot; a standalone engine gets a private default.
+    pub fn with_registry_obs(
+        bundle: ModelBundle,
+        opts: &ServeConfig,
+        registry: Arc<Registry>,
+        obs: Arc<ObsRegistry>,
+    ) -> Result<Self> {
         bundle.check_backend_dims()?;
+        let obs_label = obs.next_instance().to_string();
+        let labels = [("engine", obs_label.as_str())];
         Ok(Self {
             model: RwLock::new(Arc::new(ServeModel::with_options(
                 bundle,
@@ -148,18 +173,27 @@ impl Engine {
                 Duration::from_micros(opts.flush_us),
                 opts.workers,
                 opts.queue_cap,
+                Arc::clone(&obs),
+                &obs_label,
             ),
             draining: AtomicBool::new(false),
             submit_timeout: Duration::from_millis(opts.submit_timeout_ms.max(1)),
             request_timeout: Duration::from_millis(opts.request_timeout_ms.max(1)),
             scratch_pool: opts.scratch_pool,
             precision: opts.precision,
-            timeouts: AtomicU64::new(0),
-            extract_lat: LatencyHistogram::new(),
-            enroll_lat: LatencyHistogram::new(),
-            verify_lat: LatencyHistogram::new(),
+            timeouts: obs.counter("serve_timeouts_total", &labels),
+            extract_lat: obs.histogram("serve_extract_latency_seconds", &labels),
+            enroll_lat: obs.histogram("serve_enroll_latency_seconds", &labels),
+            verify_lat: obs.histogram("serve_verify_latency_seconds", &labels),
+            obs,
+            obs_label,
             started: Instant::now(),
         })
+    }
+
+    /// The observability registry this engine reports into.
+    pub fn obs(&self) -> &Arc<ObsRegistry> {
+        &self.obs
     }
 
     /// Snapshot the current model.
@@ -240,20 +274,26 @@ impl Engine {
         // announce before the loader work so batch workers know a
         // co-rider is on the way and hold sub-size batches for it
         let token = self.batcher.begin_request();
+        let align_span = self.obs.span(Stage::Align);
         let stats = model.utt_stats(feats);
+        align_span.finish();
         // the admission budget starts *after* the loader work:
         // submit_timeout bounds the wait for queue space, so a long
         // utterance's alignment must not eat the budget and turn every
         // transiently-full queue into an instant shed
         let submit_deadline = (Instant::now() + self.submit_timeout).min(request_deadline);
         let (tx, rx) = sync_channel(1);
-        self.batcher.submit(stats, Arc::clone(model), tx, submit_deadline, request_deadline)?;
+        let admit_span = self.obs.span(Stage::AdmitWait);
+        let admitted =
+            self.batcher.submit(stats, Arc::clone(model), tx, submit_deadline, request_deadline);
+        admit_span.finish();
+        admitted?;
         drop(token); // queued: no longer "on the way"
         let remaining = request_deadline.saturating_duration_since(Instant::now());
         match rx.recv_timeout(remaining) {
             Ok(ivector) => Ok(ivector),
             Err(RecvTimeoutError::Timeout) => {
-                self.timeouts.fetch_add(1, Ordering::Relaxed);
+                self.timeouts.inc();
                 Err(ServeError::Timeout { waited: t0.elapsed() }.into())
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -261,7 +301,7 @@ impl Engine {
                 // classify by the deadline, so overload is reported as a
                 // timeout and never masquerades as a broken worker
                 if Instant::now() >= request_deadline {
-                    self.timeouts.fetch_add(1, Ordering::Relaxed);
+                    self.timeouts.inc();
                     Err(ServeError::Timeout { waited: t0.elapsed() }.into())
                 } else {
                     Err(ServeError::WorkerFailed.into())
@@ -270,13 +310,33 @@ impl Engine {
         }
     }
 
+    /// Run a request closure under a freshly-minted trace, unless the
+    /// caller (a cluster dispatcher) already installed one on this
+    /// thread — then the request joins the existing trace so failover
+    /// hops accumulate into a single record.
+    fn traced<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        if obs::current().is_some() {
+            return f();
+        }
+        let Some(trace) = self.obs.mint() else {
+            return f();
+        };
+        let scope = obs::enter(Arc::clone(&trace));
+        let r = f();
+        drop(scope);
+        self.obs.complete(&trace, TraceOutcome::of(&r));
+        r
+    }
+
     /// Extract one i-vector for a feature matrix (frames × dim).
     pub fn extract(&self, feats: &Mat) -> Result<Vec<f64>> {
-        let t0 = Instant::now();
-        let model = self.model();
-        let iv = self.extract_with(&model, feats)?;
-        self.extract_lat.record(t0.elapsed().as_secs_f64());
-        Ok(iv)
+        self.traced(|| {
+            let t0 = Instant::now();
+            let model = self.model();
+            let iv = self.extract_with(&model, feats)?;
+            self.extract_lat.record(t0.elapsed().as_secs_f64());
+            Ok(iv)
+        })
     }
 
     /// Enroll one utterance for a speaker (averaged with any previous
@@ -284,12 +344,14 @@ impl Engine {
     /// profile is tagged with the model fingerprint, so enrollments
     /// never mix models across a hot swap.
     pub fn enroll(&self, speaker_id: &str, feats: &Mat) -> Result<u64> {
-        let t0 = Instant::now();
-        let model = self.model();
-        let iv = self.extract_with(&model, feats)?;
-        let count = self.registry.enroll(speaker_id, &iv, model.fingerprint)?;
-        self.enroll_lat.record(t0.elapsed().as_secs_f64());
-        Ok(count)
+        self.traced(|| {
+            let t0 = Instant::now();
+            let model = self.model();
+            let iv = self.extract_with(&model, feats)?;
+            let count = self.registry.enroll(speaker_id, &iv, model.fingerprint)?;
+            self.enroll_lat.record(t0.elapsed().as_secs_f64());
+            Ok(count)
+        })
     }
 
     /// Verify an utterance against an enrolled speaker. Refuses to
@@ -298,21 +360,25 @@ impl Engine {
     /// spaces are not comparable, so the mismatch is an error rather
     /// than a plausible-looking meaningless score.
     pub fn verify(&self, speaker_id: &str, feats: &Mat) -> Result<VerifyOutcome> {
-        let t0 = Instant::now();
-        let model = self.model();
-        let profile = self
-            .registry
-            .profile(speaker_id)
-            .ok_or_else(|| anyhow!("speaker `{speaker_id}` is not enrolled"))?;
-        anyhow::ensure!(
-            profile.model_fp == model.fingerprint,
-            "speaker `{speaker_id}` was enrolled under a different model — \
-             re-enroll after the bundle swap"
-        );
-        let iv = self.extract_with(&model, feats)?;
-        let score = model.score(&profile.mean(), &iv);
-        self.verify_lat.record(t0.elapsed().as_secs_f64());
-        Ok(VerifyOutcome { score, enrolled_utts: profile.count })
+        self.traced(|| {
+            let t0 = Instant::now();
+            let model = self.model();
+            let profile = self
+                .registry
+                .profile(speaker_id)
+                .ok_or_else(|| anyhow!("speaker `{speaker_id}` is not enrolled"))?;
+            anyhow::ensure!(
+                profile.model_fp == model.fingerprint,
+                "speaker `{speaker_id}` was enrolled under a different model — \
+                 re-enroll after the bundle swap"
+            );
+            let iv = self.extract_with(&model, feats)?;
+            let project_span = self.obs.span(Stage::BackendProject);
+            let score = model.score(&profile.mean(), &iv);
+            project_span.finish();
+            self.verify_lat.record(t0.elapsed().as_secs_f64());
+            Ok(VerifyOutcome { score, enrolled_utts: profile.count })
+        })
     }
 
     /// Counters snapshot.
@@ -326,7 +392,7 @@ impl Engine {
             dispatched_batches: self.batcher.dispatched_batches(),
             batched_requests: self.batcher.batched_requests(),
             shed_requests: self.batcher.shed_requests(),
-            timed_out_requests: self.timeouts.load(Ordering::Relaxed),
+            timed_out_requests: self.timeouts.get(),
             expired_jobs: self.batcher.expired_jobs(),
             queue_depth: self.batcher.queue_depth(),
             queue_len: self.batcher.queue_len(),
@@ -346,6 +412,11 @@ impl Drop for Engine {
     /// drop joins any straggler unconditionally right after.
     fn drop(&mut self) {
         self.drain(Duration::from_secs(5));
+        // retire this instance's labeled series: a rolling swap must not
+        // leak one generation of engine instruments per swap into every
+        // future export (the counters themselves stay alive through the
+        // handles any in-flight reader still holds)
+        self.obs.remove_label("engine", &self.obs_label);
     }
 }
 
@@ -835,6 +906,60 @@ mod tests {
             report.target_mean,
             report.impostor_mean
         );
+    }
+
+    /// Tentpole acceptance: per-stage latency histograms and per-request
+    /// traces cover the serving path — every verify leaves align /
+    /// admit-wait / queue-wait / estep / backend-project samples, and
+    /// each completed trace's stage sum is bounded by its end-to-end
+    /// latency.
+    #[test]
+    fn stage_histograms_and_traces_cover_the_request_path() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 35);
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 300, 2)).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        for k in 1..5 {
+            engine.verify(&id, &traffic.utterance(0, k)).unwrap();
+        }
+
+        let stages = engine.obs().stage_summaries();
+        let get = |name: &str| stages.iter().find(|(n, _)| *n == name).unwrap().1;
+        // 1 enroll + 4 verifies = 5 extractions through the full path
+        assert_eq!(get("align").count, 5);
+        assert_eq!(get("admit_wait").count, 5);
+        assert_eq!(get("queue_wait").count, 5);
+        let estep = get("estep_batch");
+        assert!(estep.count >= 1 && estep.count <= 5, "batches {}", estep.count);
+        assert_eq!(get("backend_project").count, 4, "one projection per verify");
+        // volatile registry: no WAL stages on this path
+        assert_eq!(get("wal_append").count, 0);
+
+        // default threshold (0 ms) keeps every completed trace
+        let traces = engine.obs().slow_traces();
+        assert_eq!(traces.len(), 5);
+        for t in &traces {
+            assert_eq!(t.outcome, TraceOutcome::Ok);
+            assert!(t.hops.is_empty(), "standalone engine records no replica hops");
+            assert!(t.stage_ns[Stage::Align.index()] > 0, "align time must land: {t:?}");
+            assert!(t.stage_ns[Stage::EstepBatch.index()] > 0, "estep time must land: {t:?}");
+            assert!(
+                t.stage_sum_ns() <= t.total_ns,
+                "stage sum {} exceeds end-to-end {} for {t:?}",
+                t.stage_sum_ns(),
+                t.total_ns
+            );
+        }
+        // request ids are unique and monotone in completion order here
+        for w in traces.windows(2) {
+            assert!(w[1].id > w[0].id);
+        }
+
+        // the whole thing exports: snapshot validates with all canonical
+        // names present (the engine registered every one of them)
+        let json = engine.obs().render(crate::obs::RenderFormat::Json);
+        crate::obs::validate_snapshot(&json).expect("engine snapshot validates");
     }
 
     /// Satellite acceptance: `drain` finishes in-flight work, joins the

@@ -31,6 +31,11 @@
 //! * [`bench`] — the load-replay harness behind `serve-bench` and the
 //!   `BENCH_2.json` serving report (its cluster sibling lives in
 //!   [`cluster::bench`] and writes `BENCH_5.json`).
+//!
+//! Every layer reports through [`crate::obs`]: canonical named
+//! counters/histograms, per-request stage traces (admit-wait → align →
+//! queue-wait → E-step → scoring, plus WAL append/fsync on durable
+//! enrollments), and the slow-trace ring the `stats` CLI command reads.
 
 pub mod bench;
 pub mod cluster;

@@ -15,11 +15,14 @@
 //!    headline guarantee.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::bench_util::write_bench_json;
 use crate::config::WalSync;
-use crate::metrics::Stopwatch;
+use crate::metrics::{LatencySummary, Stopwatch};
+use crate::obs::{latency_summary_json, ObsRegistry, Stage};
 
 use super::durable::{DurableRegistry, DurableRegistryOptions};
 use super::storage::{FaultInjector, RegistryStorage};
@@ -89,16 +92,24 @@ pub struct RegistryBenchReport {
     pub compactions: u64,
     /// Wall-clock seconds to reopen + replay after the crash.
     pub recovery_s: f64,
+    /// WAL append/fsync latency summaries from the attached
+    /// [`ObsRegistry`] (empty when the bench ran without one).
+    pub wal_stages: Vec<(&'static str, LatencySummary)>,
 }
 
 impl RegistryBenchReport {
     /// One JSON object (no trailing newline) for the BENCH_6 report.
     pub fn json_fragment(&self) -> String {
+        let stages: Vec<String> = self
+            .wal_stages
+            .iter()
+            .map(|(name, s)| format!("\"{name}\": {}", latency_summary_json(s)))
+            .collect();
         format!(
             "{{\"speakers\": {}, \"dim\": {}, \"wal_sync\": \"{}\", \
 \"mem_enroll_rps\": {:.1}, \"wal_enroll_rps\": {:.1}, \"fsync_overhead_x\": {:.2}, \
 \"acked\": {}, \"recovered\": {}, \"lost\": {}, \"torn_tail\": {}, \
-\"replayed\": {}, \"compactions\": {}, \"recovery_s\": {:.6}}}",
+\"replayed\": {}, \"compactions\": {}, \"recovery_s\": {:.6}, \"stages\": {{{}}}}}",
             self.speakers,
             self.dim,
             self.wal_sync,
@@ -112,6 +123,7 @@ impl RegistryBenchReport {
             self.replayed,
             self.compactions,
             self.recovery_s,
+            stages.join(", "),
         )
     }
 }
@@ -133,6 +145,7 @@ fn bench_id(i: usize) -> String {
 pub fn run_registry_bench(
     opts: &RegistryBenchOpts,
     fresh_storage: impl Fn() -> Result<Box<dyn RegistryStorage>>,
+    obs: Option<Arc<ObsRegistry>>,
 ) -> Result<RegistryBenchReport> {
     ensure!(opts.speakers >= 2, "registry bench needs at least 2 speakers");
     ensure!(opts.dim >= 1, "registry bench needs dim >= 1");
@@ -157,7 +170,7 @@ pub fn run_registry_bench(
     // the dying append persists a 9-byte torn prefix of its record.
     let injected = FaultInjector::new(fresh_storage().context("open bench storage")?)
         .crash_at_append(opts.crash_at as u64 + 1, 9);
-    let reg = DurableRegistry::with_storage(Box::new(injected), &dopts)
+    let reg = DurableRegistry::with_storage_obs(Box::new(injected), &dopts, obs.clone())
         .context("open durable registry for the crash phase")?;
     let sw = Stopwatch::start();
     let mut acked = 0usize;
@@ -175,9 +188,10 @@ pub fn run_registry_bench(
     // phase 3: recovery on a fresh handle — time it, then audit every
     // acknowledged enrollment against what was enrolled
     let sw = Stopwatch::start();
-    let back = DurableRegistry::with_storage(
+    let back = DurableRegistry::with_storage_obs(
         fresh_storage().context("reopen bench storage")?,
         &dopts,
+        obs.clone(),
     )
     .context("recover registry after the injected crash")?;
     let recovery_s = sw.elapsed_s();
@@ -203,17 +217,22 @@ pub fn run_registry_bench(
         replayed: m.replayed,
         compactions,
         recovery_s,
+        wal_stages: match &obs {
+            Some(o) => o
+                .stage_summaries()
+                .into_iter()
+                .filter(|(name, _)| {
+                    *name == Stage::WalAppend.as_str() || *name == Stage::WalFsync.as_str()
+                })
+                .collect(),
+            None => Vec::new(),
+        },
     })
 }
 
 /// Write the `BENCH_6.json` crash/recovery report.
 pub fn write_bench6_json(path: impl AsRef<Path>, report: &RegistryBenchReport) -> Result<()> {
-    let body = format!(
-        "{{\n  \"issue\": 6,\n  \"registry_recovery\": {}\n}}\n",
-        report.json_fragment()
-    );
-    std::fs::write(&path, body).with_context(|| format!("write {}", path.as_ref().display()))?;
-    Ok(())
+    write_bench_json(path, 6, &[("registry_recovery", report.json_fragment())])
 }
 
 #[cfg(test)]
@@ -233,11 +252,20 @@ mod tests {
             crash_at: 150,
         };
         let store_for_factory = store.clone();
-        let report = run_registry_bench(&opts, move || {
-            Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>)
-        })
+        let obs = Arc::new(ObsRegistry::default());
+        let report = run_registry_bench(
+            &opts,
+            move || Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>),
+            Some(Arc::clone(&obs)),
+        )
         .unwrap();
         assert_eq!(report.acked, 150, "enrollment `crash_at` must be the first failure");
+        // the attached obs registry timed the WAL work per stage
+        assert_eq!(report.wal_stages.len(), 2);
+        assert_eq!(report.wal_stages[0].0, "wal_append");
+        assert_eq!(report.wal_stages[1].0, "wal_fsync");
+        assert!(report.wal_stages[0].1.count >= 150, "{:?}", report.wal_stages);
+        assert!(report.json_fragment().contains("\"stages\": {\"wal_append\": {"));
         assert_eq!(report.lost, 0, "acked-but-lost enrollments: the headline guarantee");
         assert_eq!(report.recovered, 150);
         assert_eq!(report.torn_tail, 1, "the 9-byte torn prefix must be detected");
@@ -260,14 +288,17 @@ mod tests {
             crash_at: 10_000, // never fires
         };
         let store_for_factory = store.clone();
-        let report = run_registry_bench(&opts, move || {
-            Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>)
-        })
+        let report = run_registry_bench(
+            &opts,
+            move || Ok(Box::new(store_for_factory.clone()) as Box<dyn RegistryStorage>),
+            None,
+        )
         .unwrap();
         assert_eq!(report.acked, 50);
         assert_eq!(report.lost, 0);
         assert_eq!(report.torn_tail, 0, "no crash, no torn tail");
         assert_eq!(report.wal_sync, "every-8");
+        assert!(report.wal_stages.is_empty(), "no obs registry, no stage summaries");
     }
 
     #[test]
@@ -286,6 +317,7 @@ mod tests {
             replayed: 100,
             compactions: 2,
             recovery_s: 0.012345,
+            wal_stages: Vec::new(),
         };
         let frag = report.json_fragment();
         assert!(frag.contains("\"lost\": 0"), "{frag}");
@@ -296,6 +328,7 @@ mod tests {
         let p = dir.join("BENCH_6.json");
         write_bench6_json(&p, &report).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"schema_version\": 1"));
         assert!(text.contains("\"issue\": 6"));
         assert!(text.contains("\"registry_recovery\": {"));
     }

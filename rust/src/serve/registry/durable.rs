@@ -18,13 +18,13 @@
 
 use std::fmt;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::{RegistryConfig, WalSync};
+use crate::obs::{self, Counter, ObsRegistry, Stage};
 
 use super::storage::{FileStorage, RegistryStorage};
 use super::wal::{self, WalOp, WalRecord};
@@ -89,11 +89,17 @@ pub(super) struct Durability {
     pub(super) sync: WalSync,
     pub(super) compact_every: u64,
     state: Mutex<WalState>,
-    pub(super) wal_appends: AtomicU64,
-    pub(super) wal_synced: AtomicU64,
-    pub(super) compactions: AtomicU64,
-    replayed: AtomicU64,
-    torn_tail: AtomicU64,
+    /// When an [`ObsRegistry`] is attached the counters below are its
+    /// canonical `registry_*_total` series (cumulative across reopens
+    /// that share the registry); otherwise they are standalone and
+    /// zeroed per open, preserving the historical
+    /// [`DurabilityMetrics`] semantics.
+    obs: Option<Arc<ObsRegistry>>,
+    pub(super) wal_appends: Counter,
+    pub(super) wal_synced: Counter,
+    pub(super) compactions: Counter,
+    replayed: Counter,
+    torn_tail: Counter,
 }
 
 impl fmt::Debug for Durability {
@@ -102,7 +108,7 @@ impl fmt::Debug for Durability {
             .field("storage", &self.storage.describe())
             .field("wal_enabled", &self.wal_enabled)
             .field("sync", &self.sync)
-            .field("appends", &self.wal_appends.load(Ordering::Relaxed))
+            .field("appends", &self.wal_appends.get())
             .finish()
     }
 }
@@ -116,12 +122,24 @@ impl Durability {
     pub(super) fn metrics(&self) -> DurabilityMetrics {
         DurabilityMetrics {
             wal_enabled: self.wal_enabled,
-            wal_appends: self.wal_appends.load(Ordering::Relaxed),
-            wal_synced: self.wal_synced.load(Ordering::Relaxed),
-            compactions: self.compactions.load(Ordering::Relaxed),
-            replayed: self.replayed.load(Ordering::Relaxed),
-            torn_tail: self.torn_tail.load(Ordering::Relaxed),
+            wal_appends: self.wal_appends.get(),
+            wal_synced: self.wal_synced.get(),
+            compactions: self.compactions.get(),
+            replayed: self.replayed.get(),
+            torn_tail: self.torn_tail.get(),
         }
+    }
+
+    /// Attribute `ns` of WAL work to the per-stage histograms and the
+    /// in-flight request trace (an enrollment routed through an engine
+    /// carries one). Timing only — this must never touch the storage
+    /// trait, because the fault-injection suite addresses storage
+    /// operations by absolute index.
+    fn observe_stage(&self, stage: Stage, ns: u64) {
+        if let Some(o) = &self.obs {
+            o.observe_stage_ns(stage, ns);
+        }
+        obs::add_current_stage(stage, ns);
     }
 
     /// Append `rec` to the WAL and make it as durable as the sync
@@ -140,7 +158,10 @@ impl Durability {
             return Err(RegistryStoreError::WalPoisoned.into());
         }
         let buf = wal::encode_record(rec);
-        if let Err(e) = self.storage.append_wal(&buf) {
+        let append_t0 = Instant::now();
+        let appended = self.storage.append_wal(&buf);
+        self.observe_stage(Stage::WalAppend, append_t0.elapsed().as_nanos() as u64);
+        if let Err(e) = appended {
             // a partial append would sit as garbage in front of later
             // records and turn a torn *tail* into mid-log corruption —
             // cut the file back to the last known-good byte
@@ -151,13 +172,16 @@ impl Durability {
         }
         st.wal_len += buf.len() as u64;
         st.unsynced += 1;
-        self.wal_appends.fetch_add(1, Ordering::Relaxed);
+        self.wal_appends.inc();
         let must_sync = match self.sync {
             WalSync::Always => true,
             WalSync::EveryN(n) => st.unsynced >= n,
         };
         if must_sync {
-            if let Err(e) = self.storage.sync_wal() {
+            let sync_t0 = Instant::now();
+            let synced = self.storage.sync_wal();
+            self.observe_stage(Stage::WalFsync, sync_t0.elapsed().as_nanos() as u64);
+            if let Err(e) = synced {
                 // durability cannot be promised: roll the record back
                 // out so the acked prefix stays exactly the synced one
                 st.wal_len -= buf.len() as u64;
@@ -169,7 +193,7 @@ impl Durability {
                     e.context("registry WAL fsync failed — the mutation was not applied")
                 );
             }
-            self.wal_synced.fetch_add(1, Ordering::Relaxed);
+            self.wal_synced.inc();
             st.unsynced = 0;
         }
         st.next_seq += 1;
@@ -214,6 +238,18 @@ impl DurableRegistry {
         Self::with_storage(Box::new(FileStorage::open(dir)?), opts)
     }
 
+    /// [`DurableRegistry::open`] with an [`ObsRegistry`] attached: the
+    /// durability counters become its canonical `registry_*_total`
+    /// series and WAL append/fsync latencies feed the per-stage
+    /// histograms and in-flight request traces.
+    pub fn open_obs(
+        dir: impl AsRef<Path>,
+        opts: &DurableRegistryOptions,
+        obs: Option<Arc<ObsRegistry>>,
+    ) -> Result<Self> {
+        Self::with_storage_obs(Box::new(FileStorage::open(dir)?), opts, obs)
+    }
+
     /// Open on any storage backend (the fault-injection suite and the
     /// recovery bench pass [`super::MemStorage`] / [`super::FaultInjector`]).
     ///
@@ -223,6 +259,16 @@ impl DurableRegistry {
     pub fn with_storage(
         storage: Box<dyn RegistryStorage>,
         opts: &DurableRegistryOptions,
+    ) -> Result<Self> {
+        Self::with_storage_obs(storage, opts, None)
+    }
+
+    /// [`DurableRegistry::with_storage`] with an optional
+    /// [`ObsRegistry`] (see [`DurableRegistry::open_obs`]).
+    pub fn with_storage_obs(
+        storage: Box<dyn RegistryStorage>,
+        opts: &DurableRegistryOptions,
+        obs: Option<Arc<ObsRegistry>>,
     ) -> Result<Self> {
         let t0 = Instant::now();
         let place = storage.describe();
@@ -274,6 +320,20 @@ impl DurableRegistry {
                 .with_context(|| format!("initialize WAL header ({place})"))?;
             wal_len = wal::HEADER_LEN;
         }
+        // with an obs registry the counters are the shared canonical
+        // series; standalone counters keep per-open semantics otherwise
+        let counter = |name: &'static str| match &obs {
+            Some(o) => o.counter(name, &[]),
+            None => Counter::default(),
+        };
+        let wal_appends = counter("registry_wal_appends_total");
+        let wal_synced = counter("registry_wal_synced_total");
+        let compactions = counter("registry_compactions_total");
+        let replayed_counter = counter("registry_replayed_total");
+        replayed_counter.add(replayed);
+        let torn_counter = counter("registry_torn_tail_total");
+        torn_counter.add(u64::from(rep.torn_tail));
+        drop(counter);
         let durability = Durability {
             storage,
             wal_enabled: opts.wal,
@@ -286,11 +346,12 @@ impl DurableRegistry {
                 since_compact: rep.records.len() as u64,
                 poisoned: false,
             }),
-            wal_appends: AtomicU64::new(0),
-            wal_synced: AtomicU64::new(0),
-            compactions: AtomicU64::new(0),
-            replayed: AtomicU64::new(replayed),
-            torn_tail: AtomicU64::new(u64::from(rep.torn_tail)),
+            wal_appends,
+            wal_synced,
+            compactions,
+            replayed: replayed_counter,
+            torn_tail: torn_counter,
+            obs,
         };
         let inner = Arc::new(reg.with_durability(Arc::new(durability)));
         let report = RecoveryReport {
@@ -706,6 +767,35 @@ mod tests {
         let back = open_mem(&store, &o).unwrap();
         assert_eq!(back.total_enrollments(), total, "recovery must see every ack");
         assert_eq!(back.profile("shared").unwrap().count, (threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn obs_attachment_feeds_canonical_counters_and_wal_stages() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        let obs = Arc::new(ObsRegistry::default());
+        let reg =
+            DurableRegistry::with_storage_obs(Box::new(store.clone()), &o, Some(Arc::clone(&obs)))
+                .unwrap();
+        reg.enroll("alice", &[1.0], FP).unwrap();
+        reg.enroll("bob", &[2.0], FP).unwrap();
+        assert_eq!(obs.counter("registry_wal_appends_total", &[]).get(), 2);
+        assert_eq!(obs.counter("registry_wal_synced_total", &[]).get(), 2);
+        let stages: std::collections::HashMap<_, _> =
+            obs.stage_summaries().into_iter().collect();
+        assert_eq!(stages["wal_append"].count, 2);
+        assert_eq!(stages["wal_fsync"].count, 2, "sync=always times every fsync");
+        assert_eq!(stages["align"].count, 0, "serving stages stay untouched");
+        drop(reg);
+
+        // reopening against the same obs registry accumulates onto the
+        // one canonical series instead of minting a duplicate
+        let back =
+            DurableRegistry::with_storage_obs(Box::new(store.clone()), &o, Some(Arc::clone(&obs)))
+                .unwrap();
+        assert_eq!(obs.counter("registry_replayed_total", &[]).get(), 2);
+        assert_eq!(back.durability_metrics().replayed, 2);
+        assert_eq!(back.len(), 2);
     }
 
     #[test]

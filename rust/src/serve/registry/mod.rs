@@ -44,7 +44,6 @@ use std::collections::HashMap;
 use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::path::Path;
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -375,7 +374,7 @@ impl Registry {
         st.since_compact = 0;
         // a rebuilt-clean WAL clears an earlier failed tail repair
         st.poisoned = false;
-        d.compactions.fetch_add(1, Ordering::Relaxed);
+        d.compactions.inc();
         Ok(())
     }
 
