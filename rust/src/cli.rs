@@ -78,7 +78,11 @@ COMMANDS:
              writes BENCH_2.json + an observability snapshot
              (--requests, --concurrency, --speakers, --enroll-utts,
              --work | tiny in-process bundle, --out, --obs-out,
-             --batched-only)
+             --batched-only); --streaming replays chunk-fed sessions
+             with early-exit thresholds vs a one-shot baseline and
+             writes BENCH_8.json instead (--chunk-frames,
+             --accept-score, --reject-score — unset thresholds are
+             calibrated from oracle probe trials)
   cluster-bench  1-vs-N replica scaling under a saturating load;
              writes BENCH_5.json + an observability snapshot
              (--replicas, --route, --max-failovers,

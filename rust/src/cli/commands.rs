@@ -11,8 +11,9 @@ use crate::frontend::synth::TrafficGen;
 use crate::metrics::{LatencySummary, Stopwatch};
 use crate::obs::{Json, ObsRegistry, RenderFormat};
 use crate::serve::bench::{
-    run_batched_vs_unbatched, run_verify_load, tiny_serve_config, train_tiny_bundle,
-    write_bench2_json, ServeBenchOpts, ServeBenchReport,
+    run_batched_vs_unbatched, run_streaming_vs_oneshot, run_verify_load, tiny_serve_config,
+    train_tiny_bundle, write_bench2_json, write_bench8_json, ServeBenchOpts, ServeBenchReport,
+    StreamBenchOpts, StreamBenchReport,
 };
 use crate::serve::cluster::bench::{
     cluster_bench_config, run_cluster_load, saturation_serve_config, write_bench5_json,
@@ -129,6 +130,30 @@ fn print_load_report(name: &str, r: &ServeBenchReport) {
     );
 }
 
+fn print_stream_report(name: &str, r: &StreamBenchReport) {
+    println!(
+        "{name}: {}/{} sessions decided @ {} clients in {:.2}s = {:.0} decisions/s | \
+         frames/decision {:.1} of {:.1} offered ({:.0}% early exits) | \
+         thresholds accept {:.2} reject {:.2} | evicted {} shed {} rejected {} | \
+         score target {:.2} vs impostor {:.2}",
+        r.decided,
+        r.requests,
+        r.concurrency,
+        r.wall_s,
+        r.decisions_per_s,
+        r.mean_frames_per_decision,
+        r.mean_frames_available,
+        r.early_exit_rate * 100.0,
+        r.accept_score,
+        r.reject_score,
+        r.evictions,
+        r.shed,
+        r.rejected,
+        r.target_mean,
+        r.impostor_mean,
+    );
+}
+
 /// One aligned row per stage with traffic — the per-stage latency
 /// breakdown every serving command prints under its headline.
 fn print_stage_rows(stages: &[(&'static str, LatencySummary)]) {
@@ -224,6 +249,12 @@ pub fn verify(args: &Args) -> Result<()> {
 /// `--precision {f32,f64}` overrides `[align] precision` so the two
 /// alignment paths can be A/B'd under the same load harness (all
 /// shed/timeout/queue-depth counters stay in the report).
+///
+/// `--streaming` switches to chunk-fed verification sessions with
+/// early-exit thresholds (calibrated from oracle probes unless
+/// `--accept-score`/`--reject-score` pin them; `--chunk-frames` sets
+/// the feed granularity) next to a one-shot baseline over the same
+/// trial plan, and writes `BENCH_8.json` instead.
 pub fn serve_bench(args: &Args) -> Result<()> {
     let work = args.get("work");
     // precedence: explicit --config; else the default pipeline config
@@ -239,7 +270,19 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let speakers = args.get_parse_or("speakers", 8usize)?;
     let enroll_utts = args.get_parse_or("enroll-utts", 2usize)?;
     let seed = args.get_parse_or("seed", 42u64)?;
-    let out = args.get_or("out", "BENCH_2.json");
+    let streaming = args.switch("streaming");
+    let chunk_frames = args.get_parse_or("chunk-frames", 20usize)?;
+    let accept_score = args
+        .get("accept-score")
+        .map(|s| s.parse::<f64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad --accept-score: {e}"))?;
+    let reject_score = args
+        .get("reject-score")
+        .map(|s| s.parse::<f64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad --reject-score: {e}"))?;
+    let out = args.get_or("out", if streaming { "BENCH_8.json" } else { "BENCH_2.json" });
     let bench4_out = args.get_or("bench4-out", "BENCH_4.json");
     let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
     let batched_only = args.switch("batched-only");
@@ -267,6 +310,27 @@ pub fn serve_bench(args: &Args) -> Result<()> {
         cfg.serve.precision,
     );
     let traffic = TrafficGen::new(&cfg.corpus, speakers, seed ^ 0xBEEF);
+
+    if streaming {
+        let sopts = StreamBenchOpts {
+            speakers,
+            enroll_utts,
+            requests,
+            concurrency,
+            chunk_frames,
+            accept_score,
+            reject_score,
+        };
+        let (stream, oneshot, obs) =
+            run_streaming_vs_oneshot(bundle, &cfg.serve, &cfg.obs, &traffic, &sopts)?;
+        print_stream_report("serve-bench[streaming]", &stream);
+        print_load_report("serve-bench[oneshot]", &oneshot);
+        print_stage_rows(&stream.stages);
+        write_bench8_json(&out, &stream, &oneshot)?;
+        println!("wrote {out}");
+        write_obs_snapshot(&obs_out, &obs)?;
+        return Ok(());
+    }
 
     // kernel-level f32-vs-f64 alignment comparison on this bundle's UBM
     // (same harness run as the load replay) → BENCH_4.json
@@ -610,7 +674,7 @@ pub fn registry_bench(args: &Args) -> Result<()> {
 /// written by `serve-bench`/`cluster-bench --obs-out` and print its
 /// counters, gauges, histograms, and slow traces. `--check` first runs
 /// full validation (schema version, every canonical metric including
-/// all seven stage series, well-formed values and traces) and fails
+/// every per-stage series, well-formed values and traces) and fails
 /// the process on any malformation — the CI gate on exporter drift.
 pub fn stats(args: &Args) -> Result<()> {
     let path = args.get_or("snapshot", "OBS_SNAPSHOT.json");

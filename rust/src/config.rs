@@ -250,6 +250,49 @@ pub struct ServeConfig {
     /// serving); an explicit `[serve] precision` key overrides it for
     /// serving only — e.g. f64 training artifacts served at f32.
     pub precision: AlignPrecision,
+    /// Streaming-session knobs (`[session]` section; rides along so a
+    /// cluster replica inherits them through `replica_serve_cfg`).
+    pub session: SessionConfig,
+}
+
+/// Streaming-session parameters (`[session]`,
+/// [`crate::serve::session`]): table capacity, idle eviction, and the
+/// early-exit decision thresholds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionConfig {
+    /// Bound on live sessions per engine; an open past it is shed with
+    /// a typed `SessionLimit` error (admission control for the state
+    /// the table pins: partial stats + a model snapshot per session).
+    pub max_sessions: usize,
+    /// Idle deadline in milliseconds: a session with no feed/score
+    /// activity for this long is reclaimed by the eviction sweep and
+    /// subsequent ops fail typed (`SessionExpired`).
+    pub idle_ms: u64,
+    /// Lock shards of the session table.
+    pub shards: usize,
+    /// Early exit never fires before this many accumulated frames —
+    /// partial-stat scores on a handful of frames are noise, not
+    /// evidence.
+    pub min_frames: usize,
+    /// Early-accept threshold: a feed whose interim score reaches this
+    /// finalizes the session immediately (`None` disables).
+    pub accept_score: Option<f64>,
+    /// Early-reject threshold: a feed whose interim score falls at or
+    /// below this finalizes the session immediately (`None` disables).
+    pub reject_score: Option<f64>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            max_sessions: 1024,
+            idle_ms: 30_000,
+            shards: 16,
+            min_frames: 60,
+            accept_score: None,
+            reject_score: None,
+        }
+    }
 }
 
 /// WAL fsync policy of the durable speaker registry (`[registry] sync`).
@@ -501,6 +544,7 @@ impl Config {
                 request_timeout_ms: 10_000,
                 scratch_pool: 8,
                 precision: AlignPrecision::F64,
+                session: SessionConfig::default(),
             },
             cluster: ClusterConfig {
                 replicas: 2,
@@ -630,6 +674,38 @@ impl Config {
             trace_threshold_ms: doc.get_f64("obs.trace_threshold_ms", d.obs.trace_threshold_ms)?,
             trace_ring: doc.get_usize("obs.trace_ring", d.obs.trace_ring)?,
         };
+        // `[session]` streaming knobs, same typo discipline
+        for key in doc.keys_with_prefix("session.") {
+            let field = &key["session.".len()..];
+            if !matches!(
+                field,
+                "max_sessions" | "idle_ms" | "shards" | "min_frames" | "accept_score"
+                    | "reject_score"
+            ) {
+                bail!(
+                    "config key `{key}`: unknown [session] field `{field}` (supported: \
+                     max_sessions, idle_ms, shards, min_frames, accept_score, reject_score)"
+                );
+            }
+        }
+        let ds = &d.serve.session;
+        let session = SessionConfig {
+            max_sessions: doc.get_usize("session.max_sessions", ds.max_sessions)?.max(1),
+            idle_ms: doc.get_usize("session.idle_ms", ds.idle_ms as usize)? as u64,
+            shards: doc.get_usize("session.shards", ds.shards)?.max(1),
+            min_frames: doc.get_usize("session.min_frames", ds.min_frames)?,
+            // absent = disabled: a threshold has no meaningful default
+            accept_score: if doc.has("session.accept_score") {
+                Some(doc.get_f64("session.accept_score", 0.0)?)
+            } else {
+                ds.accept_score
+            },
+            reject_score: if doc.has("session.reject_score") {
+                Some(doc.get_f64("session.reject_score", 0.0)?)
+            } else {
+                ds.reject_score
+            },
+        };
         let registry_path = doc.get_str("registry.path", "")?;
         let registry = RegistryConfig {
             path: if registry_path.is_empty() { None } else { Some(registry_path) },
@@ -698,6 +774,7 @@ impl Config {
                     as u64,
                 scratch_pool: doc.get_usize("serve.scratch_pool", d.serve.scratch_pool)?,
                 precision: serve_precision,
+                session,
             },
             cluster: ClusterConfig {
                 replicas,
@@ -958,6 +1035,50 @@ mod tests {
         let err = Config::from_doc(&Doc::parse("[obs]\ntrace_rings = 8\n").unwrap())
             .unwrap_err();
         assert!(err.to_string().contains("unknown [obs] field"), "{err:#}");
+    }
+
+    #[test]
+    fn session_section_defaults_and_overrides() {
+        // defaults: 1024-session table, 30 s idle, thresholds disabled
+        let cfg = Config::from_doc(&Doc::parse("[tvm]\nrank = 16\n").unwrap()).unwrap();
+        assert_eq!(cfg.serve.session.max_sessions, 1024);
+        assert_eq!(cfg.serve.session.idle_ms, 30_000);
+        assert_eq!(cfg.serve.session.shards, 16);
+        assert_eq!(cfg.serve.session.min_frames, 60);
+        assert_eq!(cfg.serve.session.accept_score, None);
+        assert_eq!(cfg.serve.session.reject_score, None);
+
+        let cfg = Config::from_doc(
+            &Doc::parse(
+                "[session]\nmax_sessions = 8\nidle_ms = 500\nshards = 2\n\
+                 min_frames = 40\naccept_score = 3.5\nreject_score = -1.25\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.session.max_sessions, 8);
+        assert_eq!(cfg.serve.session.idle_ms, 500);
+        assert_eq!(cfg.serve.session.shards, 2);
+        assert_eq!(cfg.serve.session.min_frames, 40);
+        assert_eq!(cfg.serve.session.accept_score, Some(3.5));
+        assert_eq!(cfg.serve.session.reject_score, Some(-1.25));
+
+        // the session knobs ride [serve] through per-replica derivation
+        let derived = cfg.cluster.replica_serve_cfg(&cfg.serve, 0);
+        assert_eq!(derived.session, cfg.serve.session);
+
+        // degenerate capacities are clamped, not honored
+        let cfg = Config::from_doc(
+            &Doc::parse("[session]\nmax_sessions = 0\nshards = 0\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.session.max_sessions, 1);
+        assert_eq!(cfg.serve.session.shards, 1);
+
+        // typo'd keys are nameable errors, not silently-dead config
+        let err = Config::from_doc(&Doc::parse("[session]\nidle_secs = 30\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown [session] field"), "{err:#}");
     }
 
     #[test]

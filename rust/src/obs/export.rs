@@ -26,6 +26,12 @@ pub const CANONICAL_METRICS: &[&str] = &[
     "serve_timeouts_total",
     "serve_expired_jobs_total",
     "serve_queue_depth",
+    // appended after the gauge so the earlier indices stay stable
+    "serve_worker_panics_total",
+    "serve_sessions_opened_total",
+    "serve_session_early_exits_total",
+    "serve_session_evictions_total",
+    "serve_session_shed_total",
 ];
 
 fn fmt_num(v: f64) -> String {
@@ -411,6 +417,13 @@ impl<'a> Parser<'a> {
         loop {
             self.skip_ws();
             let key = self.string()?;
+            // last-wins duplicate keys would let one metric series
+            // silently shadow another in a snapshot — reject instead
+            ensure!(
+                !out.iter().any(|(k, _): &(String, Json)| *k == key),
+                "duplicate object key `{key}` at byte {}",
+                self.i
+            );
             self.expect(b':')?;
             out.push((key, self.value()?));
             match self.peek()? {
@@ -442,7 +455,7 @@ fn require_num(obj: &Json, key: &str, what: &str) -> Result<f64> {
 }
 
 /// Validate an `ObsRegistry` JSON snapshot: schema version, every
-/// canonical metric name present (all seven stage series included),
+/// canonical metric name present (every per-stage series included),
 /// well-formed per-type fields, and a well-formed slow-trace list.
 pub fn validate_snapshot(text: &str) -> Result<()> {
     let doc = parse_json(text).context("snapshot is not valid JSON")?;
@@ -540,6 +553,26 @@ mod tests {
         assert!(parse_json("[1, 2").is_err());
         assert!(parse_json("{} trailing").is_err());
         assert!(parse_json("{\"u\": \"caf\\u00e9 ünïcode\"}").is_ok());
+    }
+
+    /// Satellite regression: the subset parser used to accept duplicate
+    /// object keys (last-wins). A duplicated metric key must now be a
+    /// typed parse error at every nesting depth.
+    #[test]
+    fn json_parser_rejects_duplicate_object_keys() {
+        let err = parse_json("{\"a\": 1, \"a\": 2}").unwrap_err();
+        assert!(err.to_string().contains("duplicate object key `a`"), "{err:#}");
+        // nested objects are checked too
+        let err = parse_json("{\"m\": {\"x\": 1, \"x\": 1}}").unwrap_err();
+        assert!(err.to_string().contains("duplicate object key `x`"), "{err:#}");
+        // distinct keys and duplicate *values* remain fine
+        assert!(parse_json("{\"a\": 1, \"b\": 1, \"c\": {\"a\": 1}}").is_ok());
+        // validate_snapshot surfaces the same typed error
+        let err = validate_snapshot(
+            "{\"schema_version\": 1, \"schema_version\": 1, \"metrics\": {}, \"slow_traces\": []}",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate object key"), "{err:#}");
     }
 
     #[test]

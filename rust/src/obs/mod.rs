@@ -12,9 +12,10 @@
 //!   race to lose increments to.
 //! - **Stage tracing** — a request ID minted at admission rides the
 //!   request through `Dispatcher` → `Engine` → `MicroBatcher` →
-//!   `DurableRegistry`; span timers decompose p99 into the seven
+//!   `DurableRegistry`; span timers decompose p99 into the nine
 //!   [`Stage`]s (admit-wait, align, queue-wait, estep-batch,
-//!   backend-project, wal-append, wal-fsync).
+//!   backend-project, wal-append, wal-fsync, session-feed,
+//!   session-score).
 //! - **[`TraceRing`]** — the last N completed traces over a
 //!   configurable threshold, readable without stopping traffic.
 //! - **Exporters** — [`ObsRegistry::render`] emits Prometheus text or
@@ -68,10 +69,14 @@ pub enum Stage {
     WalAppend,
     /// Registry WAL fsync.
     WalFsync,
+    /// Streaming session: chunk alignment + stat absorption on feed.
+    SessionFeed,
+    /// Streaming session: partial-stat finalize + batched score.
+    SessionScore,
 }
 
 /// Number of [`Stage`] variants (the length of every per-stage array).
-pub const N_STAGES: usize = 7;
+pub const N_STAGES: usize = 9;
 
 impl Stage {
     pub const ALL: [Stage; N_STAGES] = [
@@ -82,6 +87,8 @@ impl Stage {
         Stage::BackendProject,
         Stage::WalAppend,
         Stage::WalFsync,
+        Stage::SessionFeed,
+        Stage::SessionScore,
     ];
 
     /// The snake_case label value (`stage="<this>"`).
@@ -94,6 +101,8 @@ impl Stage {
             Self::BackendProject => "backend_project",
             Self::WalAppend => "wal_append",
             Self::WalFsync => "wal_fsync",
+            Self::SessionFeed => "session_feed",
+            Self::SessionScore => "session_score",
         }
     }
 
@@ -317,7 +326,7 @@ impl ObsRegistry {
         }
     }
 
-    /// `(name, summary)` for all seven stage histograms, declaration
+    /// `(name, summary)` for all nine stage histograms, declaration
     /// order — the bench reports' per-stage breakdown.
     pub fn stage_summaries(&self) -> Vec<(&'static str, LatencySummary)> {
         Stage::ALL
@@ -534,7 +543,7 @@ mod tests {
         let keys: Vec<String> = obs.snapshot().into_iter().map(|m| m.key).collect();
         assert!(!keys.iter().any(|k| k.contains("engine=\"0\"")), "{keys:?}");
         assert!(keys.contains(&"serve_shed_total{engine=\"1\"}".to_string()));
-        // the seven stage series are construction-registered and stay
+        // the per-stage series are construction-registered and stay
         assert_eq!(keys.iter().filter(|k| k.starts_with(STAGE_METRIC)).count(), N_STAGES);
     }
 
@@ -632,8 +641,9 @@ mod tests {
         // bare registry lacks the engine-level canonical metrics
         let err = validate_snapshot(&json).unwrap_err();
         assert!(err.to_string().contains("canonical metric"), "{err:#}");
-        // with the engine set registered it validates...
-        for name in &CANONICAL_METRICS[4..9] {
+        // with the engine set registered it validates... (the counters
+        // straddle the queue-depth gauge at index 9, hence two slices)
+        for name in CANONICAL_METRICS[4..9].iter().chain(&CANONICAL_METRICS[10..]) {
             obs.counter(name, &[("engine", "0")]);
         }
         for name in &CANONICAL_METRICS[1..4] {

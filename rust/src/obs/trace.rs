@@ -114,7 +114,9 @@ impl TraceOutcome {
         match r {
             Ok(_) => Self::Ok,
             Err(e) => match e.downcast_ref::<ServeError>() {
-                Some(ServeError::Overloaded { .. }) | Some(ServeError::ShuttingDown) => Self::Shed,
+                Some(ServeError::Overloaded { .. })
+                | Some(ServeError::ShuttingDown)
+                | Some(ServeError::SessionLimit { .. }) => Self::Shed,
                 Some(ServeError::Timeout { .. }) => Self::Timeout,
                 _ => Self::Failed,
             },
@@ -235,6 +237,11 @@ mod tests {
         assert_eq!(TraceOutcome::of(&drain), TraceOutcome::Shed);
         let to: anyhow::Result<u32> = Err(ServeError::Timeout { waited: Duration::ZERO }.into());
         assert_eq!(TraceOutcome::of(&to), TraceOutcome::Timeout);
+        let session_shed: anyhow::Result<u32> =
+            Err(ServeError::SessionLimit { live: 8 }.into());
+        assert_eq!(TraceOutcome::of(&session_shed), TraceOutcome::Shed);
+        let gone: anyhow::Result<u32> = Err(ServeError::SessionExpired.into());
+        assert_eq!(TraceOutcome::of(&gone), TraceOutcome::Failed);
         let hard: anyhow::Result<u32> = Err(anyhow::anyhow!("boom"));
         assert_eq!(TraceOutcome::of(&hard), TraceOutcome::Failed);
         assert_eq!(TraceOutcome::Timeout.as_str(), "timeout");

@@ -95,6 +95,11 @@ struct Shared {
     /// Queued jobs purged because their caller's request deadline
     /// passed before a worker reached them (`serve_expired_jobs_total`).
     expired: Counter,
+    /// Worker threads whose join reported a panic
+    /// (`serve_worker_panics_total`). The in-loop `catch_unwind` keeps a
+    /// poisoned *batch* from killing its worker, so a panicking *join*
+    /// means the loop itself died — pool capacity silently shrank.
+    worker_panics: Counter,
     /// Post-push queue depth per admitted request (`serve_queue_depth`).
     depth: Arc<DepthGauge>,
 }
@@ -156,6 +161,7 @@ impl MicroBatcher {
             requests: obs.counter("serve_batched_requests_total", &labels),
             shed: obs.counter("serve_shed_total", &labels),
             expired: obs.counter("serve_expired_jobs_total", &labels),
+            worker_panics: obs.counter("serve_worker_panics_total", &labels),
             depth: obs.gauge("serve_queue_depth", &labels),
             obs,
         });
@@ -187,7 +193,11 @@ impl MicroBatcher {
             self.workers.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         loop {
             while let Some(i) = workers.iter().position(|h| h.is_finished()) {
-                let _ = workers.swap_remove(i).join();
+                // a worker that died panicking (outside the per-batch
+                // catch_unwind) silently shrank the pool — surface it
+                if workers.swap_remove(i).join().is_err() {
+                    self.shared.worker_panics.inc();
+                }
             }
             if workers.is_empty() {
                 return true;
@@ -203,7 +213,9 @@ impl MicroBatcher {
                 }
                 None => {
                     let h = workers.pop().unwrap();
-                    let _ = h.join();
+                    if h.join().is_err() {
+                        self.shared.worker_panics.inc();
+                    }
                 }
             }
         }
@@ -286,6 +298,12 @@ impl MicroBatcher {
     /// a worker reached them.
     pub fn expired_jobs(&self) -> u64 {
         self.shared.expired.get()
+    }
+
+    /// Worker threads found dead-by-panic at join time (the drop-path
+    /// drain used to swallow these).
+    pub fn worker_panics(&self) -> u64 {
+        self.shared.worker_panics.get()
     }
 
     /// Queue-depth statistics over admitted requests.

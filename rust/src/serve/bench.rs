@@ -3,6 +3,12 @@
 //! concurrency, and report latency/throughput — the machinery behind
 //! the `serve-bench` CLI command and the `speed_report` example's
 //! `BENCH_2.json` serving section.
+//!
+//! The streaming half ([`run_streaming_vs_oneshot`]) replays the same
+//! trial plan through chunk-fed sessions with calibrated early-exit
+//! thresholds and writes the `BENCH_8.json` comparison: mean frames
+//! consumed per verify decision against the one-shot baseline that
+//! must always ingest the whole utterance.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,13 +22,15 @@ use crate::coordinator::{align_archive_cpu_prec, stats_from_posts, ComputePath, 
 use crate::exec::default_workers;
 use crate::frontend::synth::{generate_corpus, TrafficGen};
 use crate::ivector::{extract_cpu, Formulation, TrainVariant, UttStats};
+use crate::linalg::Mat;
 use crate::metrics::{LatencySummary, Stopwatch};
 use crate::obs::{latency_summary_json, ObsRegistry};
 
-use super::bundle::ModelBundle;
+use super::bundle::{ModelBundle, ServeModel};
 use super::engine::Engine;
 use super::error::ServeError;
 use super::registry::Registry;
+use super::session::FeedOutcome;
 
 /// A scaled-down config whose full offline recipe trains in seconds —
 /// the "tiny-config engine" of the serving benchmarks and tests.
@@ -394,6 +402,399 @@ pub fn run_batched_vs_unbatched(
     Ok((batched, unbatched, obs))
 }
 
+/// Streaming-session load parameters (the `serve-bench --streaming`
+/// mode).
+#[derive(Debug, Clone)]
+pub struct StreamBenchOpts {
+    /// Speakers enrolled before the load phase.
+    pub speakers: usize,
+    /// Enrollment utterances per speaker.
+    pub enroll_utts: usize,
+    /// Streaming verification sessions replayed (the same alternating
+    /// target/impostor [`trial_plan`] as the one-shot load).
+    pub requests: usize,
+    /// Concurrent client threads.
+    pub concurrency: usize,
+    /// Frames per `session_feed` chunk.
+    pub chunk_frames: usize,
+    /// Early-exit thresholds. `None` = calibrate from serial oracle
+    /// probe trials ([`calibrate_thresholds`]).
+    pub accept_score: Option<f64>,
+    pub reject_score: Option<f64>,
+}
+
+/// One streaming load run's results.
+#[derive(Debug, Clone)]
+pub struct StreamBenchReport {
+    /// Sessions attempted.
+    pub requests: usize,
+    /// Sessions that reached a verification decision — by early exit
+    /// or by the close-time score.
+    pub decided: usize,
+    /// Sessions lost to typed backpressure (shed opens, overload or
+    /// timeout on the scoring path, idle eviction) — counted, never a
+    /// hard failure.
+    pub rejected: usize,
+    pub concurrency: usize,
+    pub chunk_frames: usize,
+    pub wall_s: f64,
+    pub decisions_per_s: f64,
+    /// The headline: mean frames consumed per decision. Early exits
+    /// stop listening mid-utterance, so under calibrated thresholds
+    /// this lands below [`StreamBenchReport::mean_frames_available`].
+    pub mean_frames_per_decision: f64,
+    /// Mean frames the full utterances offered — exactly what the
+    /// one-shot path must ingest for the same trials.
+    pub mean_frames_available: f64,
+    /// Decisions delivered by the early-exit policy (client view; the
+    /// engine's `session_early_exits` counter tells the same story).
+    pub early_exits: usize,
+    /// `early_exits / decided`.
+    pub early_exit_rate: f64,
+    /// The thresholds the run actually used (calibrated or explicit).
+    pub accept_score: f64,
+    pub reject_score: f64,
+    pub sessions_opened: u64,
+    /// Engine-side idle evictions during the run.
+    pub evictions: u64,
+    /// Engine-side shed session opens (typed `SessionLimit`).
+    pub shed: u64,
+    pub target_mean: f64,
+    pub impostor_mean: f64,
+    /// Per-stage latency summaries, now including `session_feed` and
+    /// `session_score`.
+    pub stages: Vec<(&'static str, LatencySummary)>,
+}
+
+impl StreamBenchReport {
+    /// One JSON object (no trailing newline) for the BENCH_8 report.
+    pub fn json_fragment(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|(name, s)| format!("\"{name}\": {}", latency_summary_json(s)))
+            .collect();
+        format!(
+            "{{\"requests\": {}, \"decided\": {}, \"rejected\": {}, \"concurrency\": {}, \
+\"chunk_frames\": {}, \"wall_s\": {:.6}, \"decisions_per_s\": {:.2}, \
+\"mean_frames_per_decision\": {:.2}, \"mean_frames_available\": {:.2}, \
+\"early_exits\": {}, \"early_exit_rate\": {:.4}, \
+\"accept_score\": {:.4}, \"reject_score\": {:.4}, \
+\"sessions_opened\": {}, \"evictions\": {}, \"shed\": {}, \
+\"target_mean_score\": {:.4}, \"impostor_mean_score\": {:.4}, \"stages\": {{{}}}}}",
+            self.requests,
+            self.decided,
+            self.rejected,
+            self.concurrency,
+            self.chunk_frames,
+            self.wall_s,
+            self.decisions_per_s,
+            self.mean_frames_per_decision,
+            self.mean_frames_available,
+            self.early_exits,
+            self.early_exit_rate,
+            self.accept_score,
+            self.reject_score,
+            self.sessions_opened,
+            self.evictions,
+            self.shed,
+            self.target_mean,
+            self.impostor_mean,
+            stages.join(", "),
+        )
+    }
+}
+
+/// Copy rows `[lo, hi)` of an utterance into a standalone chunk — the
+/// shape a streaming client hands `session_feed`.
+pub(crate) fn chunk_rows(feats: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, feats.cols(), |t, j| feats.get(lo + t, j))
+}
+
+/// Calibrate early-exit thresholds from serial-oracle probe trials:
+/// accept fires at `impostor_mean + 0.75·gap`, reject at `+0.25·gap`
+/// (gap = target mean − impostor mean). Both sit strictly inside the
+/// score gap, so confident trials exit as soon as `min_frames` allows
+/// while genuinely ambiguous ones run to the end of the utterance.
+pub fn calibrate_thresholds(
+    bundle: &ModelBundle,
+    traffic: &TrafficGen,
+    n_spk: usize,
+    enroll_utts: usize,
+    probes: usize,
+) -> (f64, f64) {
+    let oracle = ServeModel::new(bundle.clone());
+    let enroll_utts = enroll_utts.max(1);
+    let means: Vec<Vec<f64>> = (0..n_spk)
+        .map(|s| {
+            let mut sum = vec![0.0; oracle.rank()];
+            for k in 0..enroll_utts {
+                let iv = oracle.extract_serial(&traffic.utterance(s, k as u64));
+                for (a, x) in sum.iter_mut().zip(&iv) {
+                    *a += x;
+                }
+            }
+            sum.iter().map(|&x| x / enroll_utts as f64).collect()
+        })
+        .collect();
+    let (mut t_sum, mut t_n, mut i_sum, mut i_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for i in 0..probes.max(2) {
+        let (claimed, actual, target) = trial_plan(i, n_spk);
+        // probe keys live between the enrollment keys and the load keys
+        let iv = oracle.extract_serial(&traffic.utterance(actual, 500 + i as u64));
+        let score = oracle.score(&means[claimed], &iv);
+        if target {
+            t_sum += score;
+            t_n += 1;
+        } else {
+            i_sum += score;
+            i_n += 1;
+        }
+    }
+    let tm = t_sum / t_n.max(1) as f64;
+    let im = i_sum / i_n.max(1) as f64;
+    let gap = tm - im;
+    (im + 0.75 * gap, im + 0.25 * gap)
+}
+
+/// True for the typed errors a streaming client under load absorbs and
+/// counts: admission sheds and deadline misses on the scoring path,
+/// session-table sheds at open, and idle eviction mid-session. Anything
+/// else is a harness failure and aborts the run.
+fn typed_backpressure(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<ServeError>(),
+        Some(
+            ServeError::Overloaded { .. }
+                | ServeError::Timeout { .. }
+                | ServeError::SessionLimit { .. }
+                | ServeError::SessionExpired
+        )
+    )
+}
+
+/// Drive one session to a decision: open, feed fixed-size chunks until
+/// the early-exit policy fires, and close for the final score when it
+/// never does. Returns `(score, frames_consumed, early_exit)`, or
+/// `None` on typed backpressure (the engine's idle sweep reclaims any
+/// session abandoned mid-feed).
+fn drive_session(
+    engine: &Engine,
+    speaker: &str,
+    feats: &Mat,
+    chunk_frames: usize,
+) -> Result<Option<(f64, usize, bool)>> {
+    let sid = match engine.session_open(speaker) {
+        Ok(s) => s,
+        Err(e) if typed_backpressure(&e) => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let rows = feats.rows();
+    let mut lo = 0;
+    while lo < rows {
+        let hi = (lo + chunk_frames).min(rows);
+        match engine.session_feed(sid, &chunk_rows(feats, lo, hi)) {
+            Ok(FeedOutcome::Pending { .. }) => {}
+            Ok(FeedOutcome::Decided { score, frames, .. }) => {
+                return Ok(Some((score, frames, true)))
+            }
+            Err(e) if typed_backpressure(&e) => return Ok(None),
+            Err(e) => return Err(e),
+        }
+        lo = hi;
+    }
+    match engine.session_close(sid) {
+        Ok(out) => Ok(Some((out.score, rows, false))),
+        Err(e) if typed_backpressure(&e) => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+/// Per-client accumulator of a streaming run.
+#[derive(Debug, Default, Clone, Copy)]
+struct StreamAcc {
+    frames_consumed: u64,
+    frames_available: u64,
+    decided: usize,
+    early_exits: usize,
+    rejected: usize,
+    target_sum: f64,
+    target_n: usize,
+    impostor_sum: f64,
+    impostor_n: usize,
+}
+
+/// Enroll `opts.speakers`, then replay `opts.requests` streaming
+/// sessions from `opts.concurrency` client threads — the chunk-fed
+/// twin of [`run_verify_load`], over the same [`trial_plan`]. The
+/// engine must already carry the early-exit thresholds in its
+/// `[session]` config; they are passed in again only for the report.
+pub fn run_streaming_load(
+    engine: &Engine,
+    traffic: &TrafficGen,
+    opts: &StreamBenchOpts,
+    accept_score: f64,
+    reject_score: f64,
+) -> Result<StreamBenchReport> {
+    let n_spk = opts.speakers.min(traffic.n_speakers());
+    anyhow::ensure!(
+        n_spk >= 2,
+        "streaming load needs at least 2 speakers for impostor trials (got {n_spk})"
+    );
+    for s in 0..n_spk {
+        let id = traffic.speaker_id(s);
+        for k in 0..opts.enroll_utts.max(1) {
+            engine.enroll(&id, &traffic.utterance(s, k as u64))?;
+        }
+    }
+    let chunk_frames = opts.chunk_frames.max(1);
+    let sw = Stopwatch::start();
+    let concurrency = opts.concurrency.max(1);
+    let partials: Result<Vec<StreamAcc>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|c| {
+                scope.spawn(move || -> Result<StreamAcc> {
+                    let mut acc = StreamAcc::default();
+                    let mut i = c;
+                    while i < opts.requests {
+                        let (claimed, actual, target) = trial_plan(i, n_spk);
+                        // session keys live past both the enrollment
+                        // keys and the one-shot load's 1_000+ keys
+                        let feats = traffic.utterance(actual, 10_000 + i as u64);
+                        acc.frames_available += feats.rows() as u64;
+                        let id = traffic.speaker_id(claimed);
+                        match drive_session(engine, &id, &feats, chunk_frames)? {
+                            Some((score, frames, early)) => {
+                                acc.decided += 1;
+                                acc.frames_consumed += frames as u64;
+                                if early {
+                                    acc.early_exits += 1;
+                                }
+                                if target {
+                                    acc.target_sum += score;
+                                    acc.target_n += 1;
+                                } else {
+                                    acc.impostor_sum += score;
+                                    acc.impostor_n += 1;
+                                }
+                            }
+                            None => acc.rejected += 1,
+                        }
+                        i += concurrency;
+                    }
+                    Ok(acc)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let partials = partials.context("streaming load failed")?;
+    let wall_s = sw.elapsed_s();
+
+    let mut t = StreamAcc::default();
+    for p in partials {
+        t.frames_consumed += p.frames_consumed;
+        t.frames_available += p.frames_available;
+        t.decided += p.decided;
+        t.early_exits += p.early_exits;
+        t.rejected += p.rejected;
+        t.target_sum += p.target_sum;
+        t.target_n += p.target_n;
+        t.impostor_sum += p.impostor_sum;
+        t.impostor_n += p.impostor_n;
+    }
+    if t.rejected > 0 {
+        println!(
+            "streaming load: {} of {} sessions lost to typed backpressure",
+            t.rejected, opts.requests
+        );
+    }
+    let m = engine.metrics();
+    Ok(StreamBenchReport {
+        requests: opts.requests,
+        decided: t.decided,
+        rejected: t.rejected,
+        concurrency,
+        chunk_frames,
+        wall_s,
+        decisions_per_s: if wall_s > 0.0 { t.decided as f64 / wall_s } else { f64::INFINITY },
+        mean_frames_per_decision: t.frames_consumed as f64 / t.decided.max(1) as f64,
+        mean_frames_available: t.frames_available as f64 / opts.requests.max(1) as f64,
+        early_exits: t.early_exits,
+        early_exit_rate: t.early_exits as f64 / t.decided.max(1) as f64,
+        accept_score,
+        reject_score,
+        sessions_opened: m.sessions_opened,
+        evictions: m.session_evictions,
+        shed: m.session_shed,
+        target_mean: if t.target_n > 0 { t.target_sum / t.target_n as f64 } else { 0.0 },
+        impostor_mean: if t.impostor_n > 0 { t.impostor_sum / t.impostor_n as f64 } else { 0.0 },
+        stages: engine.obs().stage_summaries(),
+    })
+}
+
+/// Run the streaming-session load and the one-shot baseline on twin
+/// engines over the same traffic source — the `serve-bench --streaming`
+/// comparison. Thresholds come from the opts when given, otherwise
+/// from [`calibrate_thresholds`]; the streaming engine's registry is
+/// returned for snapshot export (`--obs-out`).
+pub fn run_streaming_vs_oneshot(
+    bundle: ModelBundle,
+    serve_cfg: &crate::config::ServeConfig,
+    obs_cfg: &ObsConfig,
+    traffic: &TrafficGen,
+    opts: &StreamBenchOpts,
+) -> Result<(StreamBenchReport, ServeBenchReport, Arc<ObsRegistry>)> {
+    let n_spk = opts.speakers.min(traffic.n_speakers()).max(2);
+    let (auto_accept, auto_reject) =
+        calibrate_thresholds(&bundle, traffic, n_spk, opts.enroll_utts, 32);
+    let accept = opts.accept_score.unwrap_or(auto_accept);
+    let reject = opts.reject_score.unwrap_or(auto_reject);
+    let mut streaming_cfg = serve_cfg.clone();
+    streaming_cfg.session.accept_score = Some(accept);
+    streaming_cfg.session.reject_score = Some(reject);
+    let obs = Arc::new(ObsRegistry::new(obs_cfg));
+    let streaming = {
+        let engine = Engine::with_registry_obs(
+            bundle.clone(),
+            &streaming_cfg,
+            Arc::new(Registry::new(streaming_cfg.registry_shards)),
+            Arc::clone(&obs),
+        )?;
+        run_streaming_load(&engine, traffic, opts, accept, reject)?
+    };
+    let oneshot = {
+        let engine = Engine::with_registry_obs(
+            bundle,
+            serve_cfg,
+            Arc::new(Registry::new(serve_cfg.registry_shards)),
+            Arc::new(ObsRegistry::new(obs_cfg)),
+        )?;
+        let base = ServeBenchOpts {
+            speakers: opts.speakers,
+            enroll_utts: opts.enroll_utts,
+            requests: opts.requests,
+            concurrency: opts.concurrency,
+        };
+        run_verify_load(&engine, traffic, &base)?
+    };
+    Ok((streaming, oneshot, obs))
+}
+
+/// Write the `BENCH_8.json` streaming report: the session run next to
+/// its one-shot baseline over the same trial plan.
+pub fn write_bench8_json(
+    path: impl AsRef<Path>,
+    streaming: &StreamBenchReport,
+    oneshot: &ServeBenchReport,
+) -> Result<()> {
+    let runs = vec![
+        ("streaming".to_string(), streaming.json_fragment()),
+        ("oneshot".to_string(), oneshot.json_fragment()),
+    ];
+    write_bench_json(path, 8, &[("sessions", variants_json(&runs))])
+}
+
 /// Write the `BENCH_2.json` serving report from named load runs.
 pub fn write_bench2_json(
     path: impl AsRef<Path>,
@@ -482,5 +883,68 @@ mod tests {
         assert!(text.contains("\"issue\": 2"));
         assert!(text.contains("\"batched\": {"));
         assert!(text.contains("\"unbatched\": {"));
+    }
+
+    /// Streaming acceptance on the shared bundle: every session is
+    /// accounted for (decided or typed-rejected, no hard failures),
+    /// calibrated early exits fire, and the mean frames consumed per
+    /// decision lands below what the one-shot path must ingest for the
+    /// exact same trials.
+    #[test]
+    fn session_streaming_load_decides_on_fewer_frames_than_oneshot() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 4, 33);
+        let opts = StreamBenchOpts {
+            speakers: 4,
+            enroll_utts: 2,
+            requests: 24,
+            concurrency: 4,
+            chunk_frames: 20,
+            accept_score: None,
+            reject_score: None,
+        };
+        let (streaming, oneshot, obs) = run_streaming_vs_oneshot(
+            shared_test_bundle().clone(),
+            &cfg.serve,
+            &cfg.obs,
+            &traffic,
+            &opts,
+        )
+        .unwrap();
+
+        assert_eq!(streaming.decided + streaming.rejected, opts.requests);
+        assert_eq!(streaming.rejected, 0, "a roomy engine must not shed: {streaming:?}");
+        assert_eq!(streaming.sessions_opened, opts.requests as u64);
+        assert_eq!(streaming.evictions, 0);
+        assert_eq!(streaming.shed, 0);
+        assert!(streaming.accept_score > streaming.reject_score, "{streaming:?}");
+        assert!(streaming.early_exits > 0, "calibrated thresholds must fire: {streaming:?}");
+        assert!(
+            streaming.mean_frames_per_decision < streaming.mean_frames_available,
+            "early exits must save frames: {streaming:?}"
+        );
+        // the separation the thresholds were calibrated from holds on
+        // the streamed (often partial-stat) scores too
+        assert!(streaming.target_mean > streaming.impostor_mean, "{streaming:?}");
+        assert_eq!(oneshot.requests, opts.requests);
+
+        // the streaming engine's obs registry carries the session
+        // stages and validates as a snapshot
+        let stages = &streaming.stages;
+        let feed = stages.iter().find(|(n, _)| *n == "session_feed").unwrap();
+        assert!(feed.1.count >= opts.requests as u64, "one span per chunk fed: {stages:?}");
+        let json = obs.render(crate::obs::RenderFormat::Json);
+        crate::obs::validate_snapshot(&json).expect("streaming snapshot validates");
+
+        let dir = std::env::temp_dir().join("ivtv_bench8_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_8.json");
+        write_bench8_json(&p, &streaming, &oneshot).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"issue\": 8"), "{text}");
+        assert!(text.contains("\"streaming\": {"), "{text}");
+        assert!(text.contains("\"oneshot\": {"), "{text}");
+        assert!(text.contains("\"mean_frames_per_decision\""), "{text}");
+        assert!(text.contains("\"early_exit_rate\""), "{text}");
     }
 }

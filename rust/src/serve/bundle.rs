@@ -290,6 +290,32 @@ impl ModelPack {
     }
 }
 
+/// Incremental Baum-Welch accumulator — the chunk-feedable half of the
+/// former one-shot `utt_stats` path, and the per-session state of the
+/// streaming layer. Feature chunks are aligned and absorbed as they
+/// arrive ([`ServeModel::absorb`]); the partial zeroth/first-order
+/// statistics can be finalized into an [`UttStats`] (and an i-vector)
+/// at any instant.
+#[derive(Debug, Clone)]
+pub struct StatAccum {
+    /// Running raw statistics (merged exactly, chunk by chunk).
+    bw: BwStats,
+    /// Feature frames absorbed so far.
+    frames: usize,
+}
+
+impl StatAccum {
+    /// Feature frames absorbed so far (the early-exit frame budget).
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// Total posterior occupancy Σ_c n_c absorbed so far.
+    pub fn total_occupancy(&self) -> f64 {
+        self.bw.total_count()
+    }
+}
+
 /// An immutable bundle plus its derived per-bundle constants, shared as
 /// `Arc<ServeModel>` between request threads and batch workers. Built
 /// once per (hot-)load; the batched E-step constants are the serving
@@ -359,13 +385,34 @@ impl ServeModel {
         self.scratch.stats()
     }
 
-    /// The request-thread "loader" stage: align the utterance with the
-    /// batched CPU aligner and accumulate its Baum-Welch statistics —
-    /// the fixed-size representation the micro-batched E-step consumes
-    /// (identical to the offline `extract` stage's per-utterance path).
-    /// Aligner scratch is checked out of the model's pool and returned
-    /// after alignment, so steady-state traffic allocates nothing here.
-    pub fn utt_stats(&self, feats: &Mat) -> UttStats {
+    /// Fresh chunk-feedable accumulator shaped for this model — the
+    /// streaming entry point ([`ServeModel::absorb`] feeds it).
+    pub fn stat_accum(&self) -> StatAccum {
+        StatAccum {
+            bw: BwStats::zeros(self.bundle.diag.num_components(), self.pack.feat_dim(), false),
+            frames: 0,
+        }
+    }
+
+    /// Align one feature chunk and fold its Baum-Welch statistics into
+    /// `acc`. Alignment is frame-local (the aligner's internal BLOCK
+    /// grouping only batches GEMMs — per-frame posteriors never depend
+    /// on neighbouring frames) and [`BwStats::merge`] is exactly
+    /// additive, so absorbing an utterance in chunks of any size yields
+    /// the same statistics as one [`ServeModel::utt_stats`] call — the
+    /// invariant the chunked-equivalence suite pins down. Aligner
+    /// scratch is checked out of the model's pool and returned after
+    /// alignment, so steady-state streaming allocates nothing here.
+    pub fn absorb(&self, acc: &mut StatAccum, chunk: &Mat) {
+        assert_eq!(
+            acc.bw.n.len(),
+            self.bundle.diag.num_components(),
+            "accumulator belongs to a different model"
+        );
+        if chunk.rows() == 0 {
+            return;
+        }
+        assert_eq!(chunk.cols(), self.pack.feat_dim(), "chunk feature dim mismatch");
         let scratch = self.scratch.checkout(
             self.pack.precision(),
             self.pack.feat_dim(),
@@ -387,10 +434,40 @@ impl ServeModel {
                 scratch,
             ),
         };
-        let posts = aligner.align_utterance(feats);
+        let posts = aligner.align_utterance(chunk);
         self.scratch.checkin(aligner.into_scratch());
-        let bw = BwStats::accumulate(feats, &posts, self.bundle.diag.num_components(), false);
-        UttStats::from_bw(&bw, &self.bundle.tvm)
+        let bw = BwStats::accumulate(chunk, &posts, self.bundle.diag.num_components(), false);
+        acc.bw.merge(&bw);
+        acc.frames += chunk.rows();
+    }
+
+    /// Finalize an accumulator's partial statistics into the
+    /// fixed-size [`UttStats`] the E-step consumes — valid at any
+    /// instant (formulation centering is linear in the raw stats, so a
+    /// partial finalize is exact for the frames absorbed so far).
+    pub fn finalize_accum(&self, acc: &StatAccum) -> UttStats {
+        UttStats::from_bw(&acc.bw, &self.bundle.tvm)
+    }
+
+    /// Single-threaded i-vector from an accumulator's partial stats
+    /// (no batcher) — the streaming mirror of
+    /// [`ServeModel::extract_serial`]. An empty accumulator yields the
+    /// zero i-vector (posterior = prior).
+    pub fn extract_from_accum(&self, acc: &StatAccum) -> Vec<f64> {
+        let stats = self.finalize_accum(acc);
+        extract_cpu(&self.bundle.tvm, std::slice::from_ref(&stats), 1).row(0).to_vec()
+    }
+
+    /// The request-thread "loader" stage: align the utterance with the
+    /// batched CPU aligner and accumulate its Baum-Welch statistics —
+    /// the fixed-size representation the micro-batched E-step consumes
+    /// (identical to the offline `extract` stage's per-utterance path).
+    /// Thin wrapper over the chunk-feedable path: one absorb of the
+    /// whole utterance, then finalize.
+    pub fn utt_stats(&self, feats: &Mat) -> UttStats {
+        let mut acc = self.stat_accum();
+        self.absorb(&mut acc, feats);
+        self.finalize_accum(&acc)
     }
 
     /// Single-threaded oracle extraction (no batcher): exactly the
@@ -512,6 +589,89 @@ mod tests {
         }
         let (created, reused) = model.scratch_stats();
         assert_eq!((created, reused), (3, 0));
+    }
+
+    /// Satellite: chunked accumulation is exact. 1/3/7-frame chunks, a
+    /// chunk size straddling the aligner's 128-frame BLOCK seam, and
+    /// both alignment precisions all reproduce the one-shot stats and
+    /// i-vector ≤ 1e-10 (alignment is frame-local; merging is additive).
+    #[test]
+    fn chunked_absorb_matches_one_shot_exactly() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let world = super::super::bench::tiny_traffic(&cfg, 2, 47);
+        // a long utterance so chunk boundaries fall both inside and
+        // across the aligner's internal 128-frame GEMM blocks
+        let base = world.utterance(0, 0);
+        let long = Mat::from_fn(300, base.cols(), |t, j| base.get(t % base.rows(), j));
+        for precision in [AlignPrecision::F64, AlignPrecision::F32] {
+            let model = ServeModel::with_options(bundle.clone(), 4, precision);
+            let oracle_stats = model.utt_stats(&long);
+            let oracle_iv = model.extract_serial(&long);
+            for chunk in [1usize, 3, 7, 100, 128] {
+                let mut acc = model.stat_accum();
+                let mut t = 0;
+                while t < long.rows() {
+                    let hi = (t + chunk).min(long.rows());
+                    let part = Mat::from_fn(hi - t, long.cols(), |r, j| long.get(t + r, j));
+                    model.absorb(&mut acc, &part);
+                    t = hi;
+                }
+                assert_eq!(acc.frames(), long.rows());
+                let stats = model.finalize_accum(&acc);
+                for (c, (a, b)) in stats.n.iter().zip(&oracle_stats.n).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                        "{precision:?} chunk {chunk}: n[{c}] {a} vs {b}"
+                    );
+                }
+                assert!(
+                    stats.f.approx_eq(&oracle_stats.f, 1e-10 * (1.0 + oracle_stats.f.max_abs())),
+                    "{precision:?} chunk {chunk}: f deviates by {}",
+                    stats.f.sub(&oracle_stats.f).max_abs()
+                );
+                let iv = model.extract_from_accum(&acc);
+                for (j, (a, b)) in iv.iter().zip(&oracle_iv).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                        "{precision:?} chunk {chunk}: iv[{j}] {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A mid-stream finalize is exact for the frames absorbed so far:
+    /// the partial i-vector equals the one-shot i-vector of the prefix.
+    #[test]
+    fn chunked_partial_finalize_matches_prefix_one_shot() {
+        let cfg = tiny_serve_config();
+        let bundle = train_tiny_bundle(&cfg, 5).unwrap();
+        let model = ServeModel::new(bundle);
+        let world = super::super::bench::tiny_traffic(&cfg, 1, 53);
+        let utt = world.utterance(0, 2);
+        let cut = utt.rows() / 2;
+        let prefix = Mat::from_fn(cut, utt.cols(), |t, j| utt.get(t, j));
+        let suffix = Mat::from_fn(utt.rows() - cut, utt.cols(), |t, j| utt.get(cut + t, j));
+
+        let mut acc = model.stat_accum();
+        model.absorb(&mut acc, &prefix);
+        let mid_iv = model.extract_from_accum(&acc);
+        let oracle_mid = model.extract_serial(&prefix);
+        for (a, b) in mid_iv.iter().zip(&oracle_mid) {
+            assert!((a - b).abs() <= 1e-10 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // absorbing the rest converges on the full-utterance i-vector
+        model.absorb(&mut acc, &suffix);
+        assert_eq!(acc.frames(), utt.rows());
+        let full_iv = model.extract_from_accum(&acc);
+        let oracle_full = model.extract_serial(&utt);
+        for (a, b) in full_iv.iter().zip(&oracle_full) {
+            assert!((a - b).abs() <= 1e-10 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // an empty accumulator is the prior: the zero i-vector
+        let empty = model.extract_from_accum(&model.stat_accum());
+        assert!(empty.iter().all(|x| x.abs() < 1e-10));
     }
 
     #[test]

@@ -411,6 +411,7 @@ mod tests {
             request_timeout_ms: 60_000,
             scratch_pool: 4,
             precision: AlignPrecision::F64,
+            session: crate::config::SessionConfig::default(),
         }
     }
 

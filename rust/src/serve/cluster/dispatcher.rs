@@ -21,10 +21,19 @@
 //!   one at a time — stop routing to the replica, install a fresh
 //!   engine on the shared registry, [`Engine::drain`] the retired one
 //!   (finish queued batches, join workers), resume routing — so the
-//!   rest of the cluster keeps serving throughout a model push.
+//!   rest of the cluster keeps serving throughout a model push;
+//! * **session affinity** ([`Dispatcher::session_open`]): a streaming
+//!   session's partial statistics live on exactly one replica's pinned
+//!   model snapshot, so the dispatcher routes every later
+//!   `session_feed`/`session_score`/`session_close` back to the engine
+//!   that opened it — never failing over mid-session. When a rolling
+//!   swap (or drain) retires that engine, the next touch comes back as
+//!   a typed [`ServeError::SessionSwapped`] instead of a silent rescore
+//!   against a different bundle.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -35,8 +44,8 @@ use crate::linalg::Mat;
 use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::obs::{self, Counter, ObsRegistry, RequestTrace, TraceOutcome};
 use crate::serve::{
-    DurabilityMetrics, Engine, EngineMetrics, ModelBundle, Registry, ServeError, ServeModel,
-    VerifyOutcome,
+    DurabilityMetrics, Engine, EngineMetrics, FeedOutcome, ModelBundle, Registry, ServeError,
+    ServeModel, VerifyOutcome,
 };
 
 /// One replica slot: the engine (replaced wholesale by a rolling swap)
@@ -84,6 +93,34 @@ impl Drop for Flight<'_> {
     }
 }
 
+/// Where a streaming session's partial statistics actually live: one
+/// engine on one replica. The dispatcher mints its own session ids so
+/// a client handle stays meaningful across the cluster, and keeps only
+/// a [`Weak`] engine reference — a rolling swap dropping the retired
+/// engine is exactly the signal that the session died with it.
+struct ClusterSession {
+    replica: usize,
+    /// The id the pinned engine knows the session by.
+    engine_session: u64,
+    /// The engine that opened the session. Touch-time liveness check:
+    /// upgrade AND pointer-compare against the replica's current slot,
+    /// so a session can never silently continue on a swapped-in engine
+    /// (whose accumulator for this id simply does not exist).
+    engine: Weak<Engine>,
+}
+
+/// True when the engine says the session is gone on *its* side
+/// (expired, finalized, or unknown) — the cluster entry is then dead
+/// weight and gets dropped too.
+fn session_is_dead(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<ServeError>(),
+        Some(
+            ServeError::SessionExpired | ServeError::SessionClosed | ServeError::SessionNotFound
+        )
+    )
+}
+
 /// Point-in-time snapshot of one replica.
 #[derive(Debug, Clone)]
 pub struct ReplicaMetrics {
@@ -119,6 +156,12 @@ pub struct ClusterMetrics {
     pub exhausted: u64,
     /// Completed rolling swaps.
     pub swaps: u64,
+    /// Streaming sessions opened across the cluster's whole life.
+    pub sessions_opened: u64,
+    /// Sessions found dead on touch because a rolling swap (or drain)
+    /// retired their pinned engine — each surfaced to the caller as a
+    /// typed `SessionSwapped`, never a silent rescore elsewhere.
+    pub sessions_closed_by_swap: u64,
     /// Sheds/timeouts folded in from engines retired by those swaps
     /// (their replacements restart at zero).
     pub retired_shed: u64,
@@ -196,6 +239,14 @@ pub struct Dispatcher {
     /// the last swap).
     retired_shed: Counter,
     retired_timeouts: Counter,
+    /// Streaming sessions by dispatcher-minted id → the replica engine
+    /// pinned at open. Entries are dropped on close/early-exit, on an
+    /// engine-side eviction, or lazily on the first touch after a swap
+    /// retired the pinned engine.
+    sessions: Mutex<HashMap<u64, ClusterSession>>,
+    next_session: AtomicU64,
+    sessions_opened: Counter,
+    sessions_closed_by_swap: Counter,
     /// Round-robin cursor.
     rr: AtomicUsize,
     routed: Counter,
@@ -272,6 +323,10 @@ impl Dispatcher {
             retired: AtomicBool::new(false),
             retired_shed: obs.counter("cluster_retired_shed_total", &[]),
             retired_timeouts: obs.counter("cluster_retired_timeouts_total", &[]),
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(0),
+            sessions_opened: obs.counter("cluster_sessions_opened_total", &[]),
+            sessions_closed_by_swap: obs.counter("cluster_sessions_closed_by_swap_total", &[]),
             rr: AtomicUsize::new(0),
             routed: obs.counter("cluster_routed_total", &[]),
             failovers: obs.counter("cluster_failovers_total", &[]),
@@ -340,6 +395,103 @@ impl Dispatcher {
         Ok(out)
     }
 
+    /// Open a streaming session for an enrolled speaker somewhere in
+    /// the cluster (the first attempt follows the routing policy; a
+    /// typed rejection fails over like any request, since nothing was
+    /// created) and pin it to the replica that accepted: the returned
+    /// id is dispatcher-minted, and every later `session_*` call goes
+    /// back to that exact engine — partial statistics never migrate.
+    pub fn session_open(&self, speaker_id: &str) -> Result<u64> {
+        let cid = self.dispatch_full(|id, engine| {
+            let engine_session = engine.session_open(speaker_id)?;
+            let cid = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+            self.sessions.lock().unwrap_or_else(|p| p.into_inner()).insert(
+                cid,
+                ClusterSession { replica: id, engine_session, engine: Arc::downgrade(engine) },
+            );
+            Ok(cid)
+        })?;
+        self.sessions_opened.inc();
+        Ok(cid)
+    }
+
+    /// Feed a chunk to a session on its pinned replica. No failover:
+    /// if a rolling swap retired the pinned engine this comes back as
+    /// a typed [`ServeError::SessionSwapped`] — rescoring the partial
+    /// stats on another replica is impossible (they live over there)
+    /// and pretending otherwise would mix model spaces silently.
+    pub fn session_feed(&self, id: u64, chunk: &Mat) -> Result<FeedOutcome> {
+        let (rid, engine, sid) = self.session_route(id)?;
+        let _flight = Flight::begin(&self.replicas[rid].in_flight);
+        let out = engine.session_feed(sid, chunk);
+        match &out {
+            // an early-exit decision finalized the engine-side session
+            Ok(FeedOutcome::Decided { .. }) => self.forget(id),
+            Err(e) if session_is_dead(e) => self.forget(id),
+            _ => {}
+        }
+        out
+    }
+
+    /// Score a session's accumulated statistics without closing it —
+    /// on its pinned replica, same no-failover contract as
+    /// [`Dispatcher::session_feed`].
+    pub fn session_score(&self, id: u64) -> Result<VerifyOutcome> {
+        let (rid, engine, sid) = self.session_route(id)?;
+        let _flight = Flight::begin(&self.replicas[rid].in_flight);
+        let out = engine.session_score(sid);
+        if let Err(e) = &out {
+            if session_is_dead(e) {
+                self.forget(id);
+            }
+        }
+        out
+    }
+
+    /// Final score and close, on the pinned replica. The cluster entry
+    /// is dropped whatever the engine answered — there is nothing left
+    /// to route to afterwards.
+    pub fn session_close(&self, id: u64) -> Result<VerifyOutcome> {
+        let (rid, engine, sid) = self.session_route(id)?;
+        let _flight = Flight::begin(&self.replicas[rid].in_flight);
+        let out = engine.session_close(sid);
+        self.forget(id);
+        out
+    }
+
+    /// Sessions the dispatcher is still routing (engine-side evictions
+    /// and swap casualties leave until their next touch reaps them).
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// Resolve a session id to its pinned engine — and reap it typed
+    /// if the engine is gone. The liveness check is both halves: the
+    /// [`Weak`] must still upgrade (a swap dropping the retired engine
+    /// kills it) *and* the upgraded `Arc` must still be the replica's
+    /// current slot (an in-flight clone keeping the retired engine
+    /// alive must not masquerade as live routing).
+    fn session_route(&self, id: u64) -> Result<(usize, Arc<Engine>, u64)> {
+        let mut map = self.sessions.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(s) = map.get(&id) else {
+            return Err(ServeError::SessionNotFound.into());
+        };
+        let live =
+            s.engine.upgrade().filter(|e| Arc::ptr_eq(e, &self.replicas[s.replica].engine()));
+        match live {
+            Some(engine) => Ok((s.replica, engine, s.engine_session)),
+            None => {
+                map.remove(&id);
+                self.sessions_closed_by_swap.inc();
+                Err(ServeError::SessionSwapped.into())
+            }
+        }
+    }
+
+    fn forget(&self, id: u64) {
+        self.sessions.lock().unwrap_or_else(|p| p.into_inner()).remove(&id);
+    }
+
     /// The routed request core: pick a replica, run the operation, and
     /// on a typed retriable rejection (`Overloaded` from admission
     /// control, `ShuttingDown` from a draining replica) retry on the
@@ -351,6 +503,14 @@ impl Dispatcher {
     /// deadline, and a hard error (unknown speaker, model mismatch,
     /// worker failure) would fail identically anywhere.
     fn dispatch<T>(&self, f: impl Fn(&Engine) -> Result<T>) -> Result<T> {
+        self.dispatch_full(move |_, engine| f(engine))
+    }
+
+    /// Like [`Dispatcher::dispatch`], but the operation also sees which
+    /// replica it landed on and the engine `Arc` itself — what
+    /// [`Dispatcher::session_open`] needs to pin the session where it
+    /// was created.
+    fn dispatch_full<T>(&self, f: impl Fn(usize, &Arc<Engine>) -> Result<T>) -> Result<T> {
         // the trace spans the whole failover loop: hops, retries, and
         // the engines' stage spans (which join this thread's scope) all
         // accumulate into one record, so a rescued request shows every
@@ -368,7 +528,7 @@ impl Dispatcher {
     fn dispatch_attempts<T>(
         &self,
         trace: Option<&RequestTrace>,
-        f: impl Fn(&Engine) -> Result<T>,
+        f: impl Fn(usize, &Arc<Engine>) -> Result<T>,
     ) -> Result<T> {
         let deadline = Instant::now() + self.request_timeout;
         self.routed.inc();
@@ -382,7 +542,7 @@ impl Dispatcher {
             if let Some(t) = trace {
                 t.add_hop(id);
             }
-            match f(&engine) {
+            match f(id, &engine) {
                 Ok(v) => return Ok(v),
                 Err(e) => {
                     let serve_err = e.downcast_ref::<ServeError>();
@@ -466,6 +626,12 @@ impl Dispatcher {
     ///
     /// A bundle whose backend disagrees with its extractor is rejected
     /// up front — before any replica is touched.
+    ///
+    /// Streaming sessions pinned to a retired engine die with it (their
+    /// partial statistics lived in that engine's table); the dispatcher
+    /// reaps each one on its next touch with a typed
+    /// [`ServeError::SessionSwapped`], so callers reopen instead of
+    /// silently rescoring against the new bundle.
     pub fn swap_bundle(&self, bundle: ModelBundle) -> Result<()> {
         bundle.check_backend_dims()?;
         let _serialized = self.swap_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
@@ -549,6 +715,8 @@ impl Dispatcher {
             failovers: self.failovers.get(),
             exhausted: self.exhausted.get(),
             swaps: self.swaps.get(),
+            sessions_opened: self.sessions_opened.get(),
+            sessions_closed_by_swap: self.sessions_closed_by_swap.get(),
             retired_shed: self.retired_shed.get(),
             retired_timeouts: self.retired_timeouts.get(),
             durability: self.registry.durability_metrics(),
@@ -591,6 +759,7 @@ mod tests {
             request_timeout_ms: 60_000,
             scratch_pool: 4,
             precision: AlignPrecision::F64,
+            session: crate::config::SessionConfig::default(),
         }
     }
 
@@ -1042,6 +1211,115 @@ mod tests {
         let outcome = d2.verify(&want[0].0, &traffic.utterance(0, 0)).unwrap();
         assert!(outcome.score.is_finite());
         assert_eq!(d2.metrics().durability.replayed, 4);
+    }
+
+    fn chunk(utt: &Mat, lo: usize, hi: usize) -> Mat {
+        Mat::from_fn(hi - lo, utt.cols(), |t, j| utt.get(lo + t, j))
+    }
+
+    /// Satellite acceptance: session affinity pins a streaming session
+    /// to its opening replica across interleaved one-shot traffic (the
+    /// chunked score still matches the serial oracle exactly), a
+    /// rolling swap closes pinned sessions *typed* — never a silent
+    /// rescore on the swapped-in engine — and no enrollment is lost.
+    #[test]
+    fn session_affinity_pins_replica_and_swap_closes_typed() {
+        let cfg = tiny_serve_config();
+        let bundle = shared_test_bundle().clone();
+        let oracle = ServeModel::new(bundle.clone());
+        let traffic = tiny_traffic(&cfg, 2, 41);
+        let d = Dispatcher::new(
+            bundle.clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+        )
+        .unwrap();
+        let spk = traffic.speaker_id(0);
+        let enroll_utts = 2usize;
+        for k in 0..enroll_utts {
+            d.enroll(&spk, &traffic.utterance(0, k as u64)).unwrap();
+        }
+
+        let s1 = d.session_open(&spk).unwrap();
+        let s2 = d.session_open(&spk).unwrap();
+        assert_eq!(d.live_sessions(), 2);
+
+        // feed s1 the whole probe utterance in small chunks, with
+        // one-shot extractions interleaved so the round-robin router
+        // keeps cycling replicas — affinity must not care
+        let utt = traffic.utterance(0, 100);
+        let mut lo = 0;
+        while lo < utt.rows() {
+            let hi = (lo + 17).min(utt.rows());
+            let out = d.session_feed(s1, &chunk(&utt, lo, hi)).unwrap();
+            assert!(matches!(out, FeedOutcome::Pending { .. }), "{out:?}");
+            d.extract(&traffic.utterance(1, lo as u64)).unwrap();
+            lo = hi;
+        }
+        let interim = d.session_score(s1).unwrap();
+        let closed = d.session_close(s1).unwrap();
+
+        // chunked-session score == one-shot oracle on the same frames
+        let mut sum = vec![0.0; oracle.rank()];
+        for k in 0..enroll_utts {
+            let iv = oracle.extract_serial(&traffic.utterance(0, k as u64));
+            for (s, x) in sum.iter_mut().zip(&iv) {
+                *s += x;
+            }
+        }
+        let mean: Vec<f64> = sum.iter().map(|&x| x / enroll_utts as f64).collect();
+        let want = oracle.score(&mean, &oracle.extract_serial(&utt));
+        for (label, got) in [("interim", interim.score), ("close", closed.score)] {
+            assert!(
+                (got - want).abs() <= 1e-10 * (1.0 + want.abs()),
+                "{label}: {got} vs oracle {want}"
+            );
+        }
+        // the closed session is gone cluster-wide, typed on re-touch
+        let err = d.session_close(s1).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionNotFound)),
+            "{err}"
+        );
+
+        // the rolling swap retires s2's pinned engine: even a
+        // value-identical bundle cannot save it — the partial stats
+        // died with the engine — so the next touch is typed, the entry
+        // is reaped, and a later touch says NotFound
+        d.swap_bundle(bundle.clone()).unwrap();
+        let err = d.session_feed(s2, &chunk(&utt, 0, 17)).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionSwapped)),
+            "{err}"
+        );
+        let err = d.session_score(s2).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionNotFound)),
+            "{err}"
+        );
+        let m = d.metrics();
+        assert_eq!(m.sessions_opened, 2);
+        assert_eq!(m.sessions_closed_by_swap, 1);
+        assert_eq!(m.swaps, 1);
+        assert_eq!(d.live_sessions(), 0);
+
+        // zero lost enrollments, and fresh sessions open on the new
+        // engines and score identically (fingerprints match)
+        assert_eq!(d.registry().profile(&spk).unwrap().count, enroll_utts as u64);
+        let s3 = d.session_open(&spk).unwrap();
+        let mut lo = 0;
+        while lo < utt.rows() {
+            let hi = (lo + 29).min(utt.rows());
+            d.session_feed(s3, &chunk(&utt, lo, hi)).unwrap();
+            lo = hi;
+        }
+        let rescored = d.session_close(s3).unwrap();
+        assert!(
+            (rescored.score - want).abs() <= 1e-10 * (1.0 + want.abs()),
+            "{} vs oracle {want}",
+            rescored.score
+        );
+        assert_eq!(d.metrics().sessions_opened, 3);
     }
 
     #[test]

@@ -25,15 +25,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::ServeConfig;
+use crate::config::{ServeConfig, SessionConfig};
+use crate::ivector::UttStats;
 use crate::linalg::Mat;
 use crate::metrics::{DepthSummary, LatencyHistogram, LatencySummary};
 use crate::obs::{self, Counter, ObsRegistry, Stage, TraceOutcome};
 
-use super::batcher::MicroBatcher;
+use super::batcher::{MicroBatcher, RequestToken};
 use super::bundle::{ModelBundle, ServeModel};
 use super::error::ServeError;
 use super::registry::{DurabilityMetrics, Registry};
+use super::session::{self, CloseReason, FeedOutcome, SessionManager, SessionState};
 
 /// One verification result.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,6 +67,19 @@ pub struct EngineMetrics {
     pub queue_depth: DepthSummary,
     /// Jobs queued right now (admitted, not yet dispatched).
     pub queue_len: usize,
+    /// Batch workers found dead-by-panic at join — the drop-path drain
+    /// used to swallow these, silently shrinking the pool.
+    pub worker_panics: u64,
+    /// Streaming sessions opened ([`Engine::session_open`]).
+    pub sessions_opened: u64,
+    /// Sessions finalized early by the score-threshold policy.
+    pub session_early_exits: u64,
+    /// Sessions reclaimed by the idle-deadline eviction sweep.
+    pub session_evictions: u64,
+    /// Session opens shed at the table's capacity bound.
+    pub session_shed: u64,
+    /// Live sessions right now.
+    pub live_sessions: usize,
     /// Aligner-scratch pool counters of the *current* model snapshot
     /// (fresh allocations, pooled reuses); reset by a hot swap.
     pub scratch_created: u64,
@@ -117,6 +132,12 @@ pub struct Engine {
     /// deregisters the labeled series so a swapped-out replica stops
     /// appearing in exports.
     obs_label: String,
+    /// Streaming-session table (admission, idle eviction, counters);
+    /// the session *ops* live on the engine because they need the
+    /// registry, the batcher, and the obs spans.
+    sessions: SessionManager,
+    /// Early-exit policy + table shape (`[session]`).
+    session_cfg: SessionConfig,
     /// Requests that missed their response deadline
     /// (`serve_timeouts_total`).
     timeouts: Counter,
@@ -181,6 +202,8 @@ impl Engine {
             request_timeout: Duration::from_millis(opts.request_timeout_ms.max(1)),
             scratch_pool: opts.scratch_pool,
             precision: opts.precision,
+            sessions: SessionManager::new(&opts.session, &obs, &obs_label),
+            session_cfg: opts.session.clone(),
             timeouts: obs.counter("serve_timeouts_total", &labels),
             extract_lat: obs.histogram("serve_extract_latency_seconds", &labels),
             enroll_lat: obs.histogram("serve_enroll_latency_seconds", &labels),
@@ -270,13 +293,31 @@ impl Engine {
             return Err(ServeError::ShuttingDown.into());
         }
         let t0 = Instant::now();
-        let request_deadline = t0 + self.request_timeout;
         // announce before the loader work so batch workers know a
         // co-rider is on the way and hold sub-size batches for it
         let token = self.batcher.begin_request();
         let align_span = self.obs.span(Stage::Align);
         let stats = model.utt_stats(feats);
         align_span.finish();
+        self.submit_stats(model, stats, t0, token)
+    }
+
+    /// Submit precomputed Baum-Welch statistics into the micro-batcher
+    /// and await the batched i-vector — the lower half of
+    /// [`Engine::extract_with`], shared with the session ops: a
+    /// session's partial-stat jobs ride the same model-coherent batches
+    /// as one-shot requests (its pinned snapshot simply splits the
+    /// batch at the epoch boundary after a swap). `t0` anchors the
+    /// request deadline; `token` is the co-rider announcement made
+    /// before the caller's loader work.
+    fn submit_stats(
+        &self,
+        model: &Arc<ServeModel>,
+        stats: UttStats,
+        t0: Instant,
+        token: RequestToken<'_>,
+    ) -> Result<Vec<f64>> {
+        let request_deadline = t0 + self.request_timeout;
         // the admission budget starts *after* the loader work:
         // submit_timeout bounds the wait for queue space, so a long
         // utterance's alignment must not eat the budget and turn every
@@ -381,6 +422,154 @@ impl Engine {
         })
     }
 
+    /// Open a streaming session for an enrolled speaker, pinning the
+    /// current model snapshot: every later feed aligns and every score
+    /// finalizes against that snapshot, so a hot swap mid-session can
+    /// never mix total-variability spaces. Sheds typed
+    /// ([`ServeError::SessionLimit`]) at the table's capacity bound.
+    pub fn session_open(&self, speaker_id: &str) -> Result<u64> {
+        self.traced(|| {
+            if self.draining.load(Ordering::Acquire) {
+                return Err(ServeError::ShuttingDown.into());
+            }
+            // opportunistic eviction on the open path keeps the table
+            // honest without a background thread (a pointer walk over
+            // ≤ max_sessions entries)
+            self.sessions.sweep();
+            let model = self.model();
+            let profile = self
+                .registry
+                .profile(speaker_id)
+                .ok_or_else(|| anyhow!("speaker `{speaker_id}` is not enrolled"))?;
+            anyhow::ensure!(
+                profile.model_fp == model.fingerprint,
+                "speaker `{speaker_id}` was enrolled under a different model — \
+                 re-enroll after the bundle swap"
+            );
+            self.sessions.open(speaker_id.to_string(), model)
+        })
+    }
+
+    /// Feed one chunk of frames into a session: chunk alignment + stat
+    /// absorption on the caller's thread (the streaming loader stage).
+    /// With an early-exit threshold configured and `min_frames`
+    /// reached, the interim partial-stat score is taken through the
+    /// batcher and may finalize the session right here
+    /// ([`FeedOutcome::Decided`]).
+    pub fn session_feed(&self, id: u64, chunk: &Mat) -> Result<FeedOutcome> {
+        self.traced(|| {
+            if self.draining.load(Ordering::Acquire) {
+                return Err(ServeError::ShuttingDown.into());
+            }
+            let sess = self.checkout_session(id)?;
+            let mut st = sess.lock().unwrap();
+            let feed_span = self.obs.span(Stage::SessionFeed);
+            {
+                let SessionState { model, accum, .. } = &mut *st;
+                model.absorb(accum, chunk);
+            }
+            feed_span.finish();
+            st.last_active = Instant::now();
+            let frames = st.frames();
+            let p = &self.session_cfg;
+            if (p.accept_score.is_some() || p.reject_score.is_some()) && frames >= p.min_frames
+            {
+                let (score, _) = self.score_session_state(&mut st)?;
+                if let Some(accepted) = session::early_exit_decision(p, frames, score) {
+                    drop(st);
+                    self.sessions.close(id, CloseReason::EarlyExit);
+                    return Ok(FeedOutcome::Decided { score, frames, accepted });
+                }
+            }
+            Ok(FeedOutcome::Pending { frames })
+        })
+    }
+
+    /// Score a session's accumulated stats *now*, without closing it —
+    /// the caller can keep feeding and score again. Exact for the
+    /// frames absorbed so far (a mid-stream finalize equals the
+    /// one-shot score of the same prefix).
+    pub fn session_score(&self, id: u64) -> Result<VerifyOutcome> {
+        self.traced(|| {
+            if self.draining.load(Ordering::Acquire) {
+                return Err(ServeError::ShuttingDown.into());
+            }
+            let sess = self.checkout_session(id)?;
+            let mut st = sess.lock().unwrap();
+            let (score, enrolled_utts) = self.score_session_state(&mut st)?;
+            Ok(VerifyOutcome { score, enrolled_utts })
+        })
+    }
+
+    /// Final score + close: the utterance ended without an early exit.
+    /// Later ops on the id fail typed ([`ServeError::SessionClosed`]).
+    pub fn session_close(&self, id: u64) -> Result<VerifyOutcome> {
+        self.traced(|| {
+            if self.draining.load(Ordering::Acquire) {
+                return Err(ServeError::ShuttingDown.into());
+            }
+            let sess = self.checkout_session(id)?;
+            let mut st = sess.lock().unwrap();
+            let (score, enrolled_utts) = self.score_session_state(&mut st)?;
+            drop(st);
+            self.sessions.close(id, CloseReason::Done);
+            Ok(VerifyOutcome { score, enrolled_utts })
+        })
+    }
+
+    /// The session table (sweep control, live count, counters).
+    pub fn sessions(&self) -> &SessionManager {
+        &self.sessions
+    }
+
+    /// Look up a live session, applying the idle deadline lazily: an
+    /// expired-but-unswept session is reclaimed here instead of served.
+    fn checkout_session(&self, id: u64) -> Result<Arc<std::sync::Mutex<SessionState>>> {
+        let sess = self.sessions.lookup(id)?;
+        let expired = {
+            let st = sess.lock().unwrap();
+            st.last_active.elapsed() >= self.sessions.idle_deadline()
+        };
+        if expired {
+            self.sessions.close(id, CloseReason::Expired);
+            return Err(ServeError::SessionExpired.into());
+        }
+        Ok(sess)
+    }
+
+    /// Score a session's partial stats against its claimed speaker's
+    /// profile on the *pinned* model — shared by `session_score`,
+    /// `session_close`, and early-exit feeds. The caller holds the
+    /// session lock, so concurrent feeds to the same session serialize
+    /// behind the score.
+    fn score_session_state(&self, st: &mut SessionState) -> Result<(f64, u64)> {
+        let profile = self
+            .registry
+            .profile(&st.speaker)
+            .ok_or_else(|| anyhow!("speaker `{}` is no longer enrolled", st.speaker))?;
+        // the profile must belong to the *session's* space, not the
+        // engine's current one: a swap leaves the session scorable as
+        // long as the profile still carries the pinned fingerprint
+        anyhow::ensure!(
+            profile.model_fp == st.model.fingerprint,
+            "speaker `{}` was re-enrolled under a different model than this session \
+             pinned at open — close the session and reopen",
+            st.speaker
+        );
+        let t0 = Instant::now();
+        let token = self.batcher.begin_request();
+        let score_span = self.obs.span(Stage::SessionScore);
+        let stats = st.model.finalize_accum(&st.accum);
+        score_span.finish();
+        let model = Arc::clone(&st.model);
+        let iv = self.submit_stats(&model, stats, t0, token)?;
+        let project_span = self.obs.span(Stage::BackendProject);
+        let score = model.score(&profile.mean(), &iv);
+        project_span.finish();
+        st.last_active = Instant::now();
+        Ok((score, profile.count))
+    }
+
     /// Counters snapshot.
     pub fn metrics(&self) -> EngineMetrics {
         let (scratch_created, scratch_reused) = self.model().scratch_stats();
@@ -394,6 +583,12 @@ impl Engine {
             shed_requests: self.batcher.shed_requests(),
             timed_out_requests: self.timeouts.get(),
             expired_jobs: self.batcher.expired_jobs(),
+            worker_panics: self.batcher.worker_panics(),
+            sessions_opened: self.sessions.opened(),
+            session_early_exits: self.sessions.early_exits(),
+            session_evictions: self.sessions.evictions(),
+            session_shed: self.sessions.shed_opens(),
+            live_sessions: self.sessions.live(),
             queue_depth: self.batcher.queue_depth(),
             queue_len: self.batcher.queue_len(),
             scratch_created,
@@ -442,7 +637,13 @@ mod tests {
             request_timeout_ms: 60_000,
             scratch_pool: 4,
             precision: crate::gmm::AlignPrecision::F64,
+            session: SessionConfig::default(),
         }
+    }
+
+    /// Copy `utt` rows `[lo, hi)` into a fresh chunk matrix.
+    fn chunk_of(utt: &Mat, lo: usize, hi: usize) -> Mat {
+        Mat::from_fn(hi - lo, utt.cols(), |t, j| utt.get(lo + t, j))
     }
 
     #[test]
@@ -1060,5 +1261,234 @@ mod tests {
         // and the recovered profile verifies against the same bundle
         engine.verify(&id, &traffic.utterance(0, 9)).unwrap();
         assert_eq!(engine.metrics().durability.replayed, 2);
+    }
+
+    /// Tentpole acceptance (engine level): an utterance fed chunk by
+    /// chunk through a session scores identically (≤ 1e-10) to the
+    /// one-shot `verify` of the same frames, the session stages land in
+    /// the obs layer, and a closed session answers typed.
+    #[test]
+    fn session_feed_and_score_match_one_shot_verify() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 71);
+        let engine = Engine::new(shared_bundle().clone(), &opts(4, 300, 2)).unwrap();
+        let id = traffic.speaker_id(0);
+        for k in 0..2 {
+            engine.enroll(&id, &traffic.utterance(0, k)).unwrap();
+        }
+        let utt = traffic.utterance(0, 50);
+        let want = engine.verify(&id, &utt).unwrap();
+
+        let sid = engine.session_open(&id).unwrap();
+        let mut fed = 0;
+        let mut lo = 0;
+        while lo < utt.rows() {
+            let hi = (lo + 23).min(utt.rows());
+            match engine.session_feed(sid, &chunk_of(&utt, lo, hi)).unwrap() {
+                FeedOutcome::Pending { frames } => fed = frames,
+                FeedOutcome::Decided { .. } => panic!("no early-exit thresholds configured"),
+            }
+            lo = hi;
+        }
+        assert_eq!(fed, utt.rows());
+
+        // interim score (session stays open) and final close both match
+        let interim = engine.session_score(sid).unwrap();
+        assert!(
+            (interim.score - want.score).abs() <= 1e-10 * (1.0 + want.score.abs()),
+            "streaming {} vs one-shot {}",
+            interim.score,
+            want.score
+        );
+        assert_eq!(interim.enrolled_utts, 2);
+        let fin = engine.session_close(sid).unwrap();
+        assert!((fin.score - want.score).abs() <= 1e-10 * (1.0 + want.score.abs()));
+
+        // the tombstone answers typed; an unknown id stays distinct
+        let err = engine.session_feed(sid, &chunk_of(&utt, 0, 5)).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionClosed)),
+            "{err}"
+        );
+        let err = engine.session_score(987_654).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionNotFound)),
+            "{err}"
+        );
+
+        // the streaming stages land next to the one-shot ones
+        let stages = engine.obs().stage_summaries();
+        let get = |name: &str| stages.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert!(get("session_feed").count >= 3, "one sample per fed chunk");
+        assert_eq!(get("session_score").count, 2, "interim + close");
+        let m = engine.metrics();
+        assert_eq!(m.sessions_opened, 1);
+        assert_eq!(m.live_sessions, 0);
+        assert_eq!(m.session_early_exits, 0);
+        // and the whole thing still exports a valid snapshot
+        let json = engine.obs().render(crate::obs::RenderFormat::Json);
+        crate::obs::validate_snapshot(&json).expect("session-bearing snapshot validates");
+    }
+
+    /// Tentpole acceptance (early exit): a confident interim score
+    /// finalizes the session mid-utterance, consuming fewer frames than
+    /// the full utterance; the decision and the counters are typed and
+    /// exact, and the reject threshold fires symmetrically.
+    #[test]
+    fn session_early_exit_decides_before_utterance_end() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 83);
+        let mut o = opts(4, 300, 2);
+        o.session.min_frames = 30;
+        // a threshold every score clears: the decision must fire on the
+        // first feed at/past min_frames, deterministically
+        o.session.accept_score = Some(-1e9);
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        let utt = traffic.utterance(0, 40);
+        assert!(utt.rows() >= 60, "tiny corpus guarantees ≥ 60 frames");
+
+        let sid = engine.session_open(&id).unwrap();
+        let mut decided = None;
+        let mut lo = 0;
+        while lo < utt.rows() {
+            let hi = (lo + 20).min(utt.rows());
+            match engine.session_feed(sid, &chunk_of(&utt, lo, hi)).unwrap() {
+                FeedOutcome::Pending { frames } => assert!(frames < 30, "must decide at 30+"),
+                FeedOutcome::Decided { score, frames, accepted } => {
+                    decided = Some((score, frames, accepted));
+                    break;
+                }
+            }
+            lo = hi;
+        }
+        let (_, frames, accepted) = decided.expect("the accept threshold must fire");
+        assert!(accepted);
+        assert_eq!(frames, 40, "two 20-frame chunks reach min_frames=30");
+        assert!(frames < utt.rows(), "early exit must beat the utterance end");
+        // the decision closed the session
+        let err = engine.session_score(sid).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionClosed)),
+            "{err}"
+        );
+        let m = engine.metrics();
+        assert_eq!(m.session_early_exits, 1);
+        assert_eq!(m.live_sessions, 0);
+
+        // the reject threshold fires the other way
+        let mut o = opts(4, 300, 2);
+        o.session.min_frames = 30;
+        o.session.reject_score = Some(1e9);
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        let sid = engine.session_open(&id).unwrap();
+        engine.session_feed(sid, &chunk_of(&utt, 0, 20)).unwrap();
+        match engine.session_feed(sid, &chunk_of(&utt, 20, 40)).unwrap() {
+            FeedOutcome::Decided { accepted, frames, .. } => {
+                assert!(!accepted);
+                assert_eq!(frames, 40);
+            }
+            other => panic!("reject threshold must decide, got {other:?}"),
+        }
+        assert_eq!(engine.metrics().session_early_exits, 1);
+    }
+
+    /// Satellite acceptance (session-vs-swap, engine half): a hot swap
+    /// mid-session leaves the session scoring on its pinned
+    /// fingerprint — same score before and after the swap — while
+    /// one-shot requests move to the new model; a re-enrollment under
+    /// the new model turns later session scores into a typed refusal,
+    /// never a cross-space score.
+    #[test]
+    fn session_pins_model_across_hot_swap() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 29);
+        let bundle = shared_bundle().clone();
+        let engine = Engine::new(bundle.clone(), &opts(4, 300, 2)).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        let utt = traffic.utterance(0, 10);
+
+        let sid = engine.session_open(&id).unwrap();
+        engine.session_feed(sid, &chunk_of(&utt, 0, utt.rows() / 2)).unwrap();
+        let before = engine.session_score(sid).unwrap().score;
+
+        // a retrained-model stand-in: same dims, different parameters
+        let mut other = bundle;
+        *other.tvm.t[0].get_mut(0, 0) += 0.5;
+        engine.swap_bundle(other).unwrap();
+
+        // one-shot verify now refuses the stale profile...
+        let err = engine.verify(&id, &utt).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // ...but the session keeps feeding and scoring on its pinned
+        // snapshot: the mid-stream score is byte-stable across the swap
+        let after = engine.session_score(sid).unwrap().score;
+        assert_eq!(before, after, "pinned session score must not move on swap");
+        engine.session_feed(sid, &chunk_of(&utt, utt.rows() / 2, utt.rows())).unwrap();
+        engine.session_close(sid).unwrap();
+
+        // a new session can't open against the stale profile...
+        let err = engine.session_open(&id).unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
+        // ...and once the speaker re-enrolls under the new model, an
+        // old-space session (pinned pre-swap) is refused typed — two
+        // total-variability spaces never meet in one score
+        let engine2 = Engine::new(shared_bundle().clone(), &opts(4, 300, 2)).unwrap();
+        engine2.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+        let sid2 = engine2.session_open(&id).unwrap();
+        engine2.session_feed(sid2, &chunk_of(&utt, 0, 30)).unwrap();
+        let mut other = shared_bundle().clone();
+        *other.tvm.t[0].get_mut(0, 0) -= 0.25;
+        engine2.swap_bundle(other).unwrap();
+        engine2.registry().remove(&id).unwrap();
+        engine2.enroll(&id, &traffic.utterance(0, 1)).unwrap();
+        let err = engine2.session_score(sid2).unwrap_err();
+        assert!(err.to_string().contains("re-enrolled"), "{err}");
+    }
+
+    /// Admission and idle eviction are typed: the table bound sheds
+    /// opens with `SessionLimit` (a rejection, like a queue shed), and
+    /// an idled session is reclaimed — lazily on touch or by the sweep
+    /// — surfacing as `SessionExpired` with the eviction counted.
+    #[test]
+    fn session_limit_sheds_and_idle_sessions_evict_typed() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 2, 37);
+        let mut o = opts(4, 300, 2);
+        o.session.max_sessions = 1;
+        o.session.idle_ms = 40;
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+
+        let sid = engine.session_open(&id).unwrap();
+        let err = engine.session_open(&id).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(typed, ServeError::SessionLimit { live: 1 }), "{typed:?}");
+        assert!(typed.is_rejection());
+        assert_eq!(engine.metrics().session_shed, 1);
+
+        // past the idle deadline the next touch reclaims it typed
+        std::thread::sleep(Duration::from_millis(60));
+        let err = engine.session_feed(sid, &traffic.utterance(0, 1)).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionExpired)),
+            "{err}"
+        );
+        let m = engine.metrics();
+        assert_eq!(m.session_evictions, 1);
+        assert_eq!(m.live_sessions, 0);
+
+        // the freed slot admits again, and the open-path sweep reclaims
+        // an idled session without any touch
+        let sid2 = engine.session_open(&id).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let sid3 = engine.session_open(&id).expect("sweep on open frees the slot");
+        assert_ne!(sid2, sid3);
+        assert_eq!(engine.metrics().session_evictions, 2);
+        engine.session_close(sid3).unwrap();
     }
 }

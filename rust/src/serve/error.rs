@@ -37,6 +37,27 @@ pub enum ServeError {
     /// The worker dropped the response channel — the request's batch
     /// dispatch panicked (e.g. non-finite statistics).
     WorkerFailed,
+    /// Streaming-session admission shed: the session table is at its
+    /// configured capacity. Like [`Self::Overloaded`], nothing was
+    /// created — but the caller should back off, not failover (a
+    /// session opened elsewhere would still count against the cluster).
+    SessionLimit {
+        /// Live sessions at the instant the open was refused.
+        live: usize,
+    },
+    /// The session id was never issued here (or its tombstone already
+    /// aged out of the table).
+    SessionNotFound,
+    /// The session sat idle past its deadline and the eviction sweep
+    /// reclaimed it; its accumulated stats are gone.
+    SessionExpired,
+    /// The session was already finalized — by an explicit close or an
+    /// early-exit decision — and cannot accept further ops.
+    SessionClosed,
+    /// The session's pinned replica was swapped or retired; the cluster
+    /// closes it typed instead of silently rescoring partial stats
+    /// against a different total-variability space.
+    SessionSwapped,
 }
 
 impl fmt::Display for ServeError {
@@ -56,6 +77,15 @@ impl fmt::Display for ServeError {
             Self::WorkerFailed => {
                 write!(f, "serving worker dropped the response (batch dispatch failed)")
             }
+            Self::SessionLimit { live } => {
+                write!(f, "session table full ({live} live sessions) — open shed")
+            }
+            Self::SessionNotFound => write!(f, "unknown session id"),
+            Self::SessionExpired => write!(f, "session evicted after its idle deadline"),
+            Self::SessionClosed => write!(f, "session already finalized"),
+            Self::SessionSwapped => {
+                write!(f, "session's pinned replica was swapped out — reopen to continue")
+            }
         }
     }
 }
@@ -63,11 +93,14 @@ impl fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 impl ServeError {
-    /// True for the two deadline-driven rejections (shed or timed out)
-    /// — the "engine is saturated, not broken" failures a load harness
-    /// counts rather than propagates.
+    /// True for the capacity-driven rejections (queue shed, timed out,
+    /// or session-table full) — the "engine is saturated, not broken"
+    /// failures a load harness counts rather than propagates.
     pub fn is_rejection(&self) -> bool {
-        matches!(self, Self::Overloaded { .. } | Self::Timeout { .. })
+        matches!(
+            self,
+            Self::Overloaded { .. } | Self::Timeout { .. } | Self::SessionLimit { .. }
+        )
     }
 
     /// True when retrying the request elsewhere is safe *and* useful:
@@ -75,7 +108,10 @@ impl ServeError {
     /// admission; `ShuttingDown` was refused by a draining engine), so
     /// another replica can still serve it within the original deadline.
     /// `Timeout` is deliberately not retriable — its deadline is
-    /// already spent — and hard failures would fail anywhere.
+    /// already spent — hard failures would fail anywhere, and no
+    /// session variant is retriable: a session's partial stats live on
+    /// exactly one replica's pinned model, so "elsewhere" cannot
+    /// continue it (the caller must reopen instead).
     pub fn is_retriable(&self) -> bool {
         matches!(self, Self::Overloaded { .. } | Self::ShuttingDown)
     }
@@ -102,6 +138,27 @@ mod tests {
         assert!(ServeError::ShuttingDown.is_retriable());
         assert!(!to.is_retriable());
         assert!(!ServeError::WorkerFailed.is_retriable());
+    }
+
+    #[test]
+    fn session_variants_classify_as_non_retriable() {
+        let full = ServeError::SessionLimit { live: 1024 };
+        assert!(full.to_string().contains("1024 live"));
+        // a full session table is counted like a queue shed...
+        assert!(full.is_rejection());
+        // ...but never failed over: a session opened elsewhere still
+        // counts against the cluster, and feeds are replica-pinned
+        assert!(!full.is_retriable());
+        for e in [
+            ServeError::SessionNotFound,
+            ServeError::SessionExpired,
+            ServeError::SessionClosed,
+            ServeError::SessionSwapped,
+        ] {
+            assert!(!e.is_rejection(), "{e} must propagate, not be counted as load");
+            assert!(!e.is_retriable(), "{e} must not retry onto a different bundle");
+            assert!(!e.to_string().is_empty());
+        }
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //!   sharing a single registry: load-aware routing, shed failover, and
 //!   rolling hot swaps (the multi-engine layer the single engine's
 //!   typed rejections were designed for);
+//! * [`session`] — streaming verification sessions: a [`StatAccum`]
+//!   grown chunk by chunk against a model snapshot pinned at open,
+//!   scored at any instant from partial stats (the same batched E-step
+//!   path), with idle eviction, bounded admission, and configurable
+//!   early-exit thresholds that decide before the utterance ends;
 //! * [`bench`] — the load-replay harness behind `serve-bench` and the
 //!   `BENCH_2.json` serving report (its cluster sibling lives in
 //!   [`cluster::bench`] and writes `BENCH_5.json`).
@@ -44,11 +49,13 @@ mod bundle;
 mod engine;
 mod error;
 pub mod registry;
+pub mod session;
 
-pub use bundle::{ModelBundle, ServeModel};
+pub use bundle::{ModelBundle, ServeModel, StatAccum};
 pub use cluster::{ClusterMetrics, Dispatcher, ReplicaMetrics};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
 pub use error::ServeError;
+pub use session::{CloseReason, FeedOutcome, SessionManager};
 pub use registry::{
     DurabilityMetrics, DurableRegistry, DurableRegistryOptions, RecoveryReport, Registry,
     SpeakerProfile,

@@ -1,0 +1,415 @@
+//! Streaming verification sessions: per-caller incremental stat
+//! accumulation with bounded admission and idle-deadline eviction.
+//!
+//! A session pins one model snapshot at open and grows a [`StatAccum`]
+//! chunk by chunk — the paper's "alignment is cheap enough to run while
+//! the speaker is still talking" observation turned into a serving
+//! primitive. The manager here owns only the *state*: a sharded table
+//! of sessions, a live-count admission bound (a session pins partial
+//! stats plus an `Arc<ServeModel>`, so the table is memory admission
+//! control, not bookkeeping), and the eviction sweep. The *ops* —
+//! `open`/`feed`/`score`/`close`, which need the registry, the
+//! micro-batcher, and the obs spans — live on
+//! [`crate::serve::Engine`]; the cluster dispatcher adds the affinity
+//! layer on top.
+//!
+//! Lifecycle is a one-way street: `Live` → `Closed(reason)`. A closed
+//! session leaves a tombstone so later ops fail with the *typed* reason
+//! ([`crate::serve::ServeError::SessionExpired`] vs
+//! [`crate::serve::ServeError::SessionClosed`]) instead of a generic
+//! "not found"; tombstones age out after two idle periods. Lock order
+//! is always shard → session, and the sweep uses `try_lock` on session
+//! state — a locked session is mid-op, which is the definition of "not
+//! idle".
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::SessionConfig;
+use crate::obs::{Counter, ObsRegistry};
+
+use super::bundle::{ServeModel, StatAccum};
+use super::error::ServeError;
+
+/// Why a session stopped accepting ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Explicit close: the utterance ended and the final score was taken.
+    Done,
+    /// The idle-deadline sweep (or a lazy expiry check) reclaimed it.
+    Expired,
+    /// The early-exit policy finalized it before the utterance ended.
+    EarlyExit,
+}
+
+/// What one `session_feed` produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FeedOutcome {
+    /// Chunk absorbed; no decision yet.
+    Pending {
+        /// Total frames accumulated so far.
+        frames: usize,
+    },
+    /// The early-exit policy fired: the session is closed and this is
+    /// its final verification decision.
+    Decided {
+        /// The deciding PLDA score.
+        score: f64,
+        /// Frames consumed to reach the decision.
+        frames: usize,
+        /// True = the accept threshold fired, false = the reject one.
+        accepted: bool,
+    },
+}
+
+/// One live session's mutable state, behind its own mutex so concurrent
+/// feeds to the *same* session serialize without blocking the shard.
+pub struct SessionState {
+    /// Partial zeroth/first-order stats, grown per feed.
+    pub(crate) accum: StatAccum,
+    /// The model snapshot pinned at open: every feed aligns and every
+    /// score finalizes against *this* snapshot, so a hot swap mid-
+    /// session can never mix total-variability spaces.
+    pub(crate) model: Arc<ServeModel>,
+    /// The claimed speaker (profile looked up fresh at each score).
+    pub(crate) speaker: String,
+    /// Refreshed by every op; the idle sweep measures from here.
+    pub(crate) last_active: Instant,
+}
+
+impl SessionState {
+    /// Frames accumulated so far.
+    pub fn frames(&self) -> usize {
+        self.accum.frames()
+    }
+
+    /// The pinned model's fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        self.model.fingerprint
+    }
+}
+
+enum Entry {
+    Live(Arc<Mutex<SessionState>>),
+    /// Tombstone: ops on a finalized/evicted id must fail typed, not as
+    /// "not found". GC'd by the sweep after two idle periods.
+    Closed { reason: CloseReason, at: Instant },
+}
+
+/// Sharded session table with bounded admission and idle eviction.
+pub struct SessionManager {
+    shards: Vec<Mutex<HashMap<u64, Entry>>>,
+    /// Live (non-tombstone) sessions across all shards — the admission
+    /// signal, maintained by open/close so admission never scans shards.
+    live: AtomicUsize,
+    next_id: AtomicU64,
+    max_sessions: usize,
+    idle: Duration,
+    /// Sessions opened (`serve_sessions_opened_total`).
+    opened: Counter,
+    /// Early-exit finalizations (`serve_session_early_exits_total`).
+    early_exits: Counter,
+    /// Idle-deadline evictions (`serve_session_evictions_total`).
+    evictions: Counter,
+    /// Opens shed at the table bound (`serve_session_shed_total`).
+    shed: Counter,
+}
+
+impl SessionManager {
+    /// `obs`/`label` place the session counters next to the owning
+    /// engine's other instruments (`name{engine="<label>"}`).
+    pub fn new(cfg: &SessionConfig, obs: &ObsRegistry, label: &str) -> Self {
+        let labels = [("engine", label)];
+        Self {
+            shards: (0..cfg.shards.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            live: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+            max_sessions: cfg.max_sessions.max(1),
+            idle: Duration::from_millis(cfg.idle_ms.max(1)),
+            opened: obs.counter("serve_sessions_opened_total", &labels),
+            early_exits: obs.counter("serve_session_early_exits_total", &labels),
+            evictions: obs.counter("serve_session_evictions_total", &labels),
+            shed: obs.counter("serve_session_shed_total", &labels),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<HashMap<u64, Entry>> {
+        &self.shards[(id as usize) % self.shards.len()]
+    }
+
+    /// The configured idle deadline.
+    pub fn idle_deadline(&self) -> Duration {
+        self.idle
+    }
+
+    /// Live sessions right now.
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Admit and create a session pinned to `model`, or shed typed
+    /// ([`ServeError::SessionLimit`]) at the capacity bound.
+    pub fn open(&self, speaker: String, model: Arc<ServeModel>) -> Result<u64> {
+        // reserve the slot CAS-style so two racing opens cannot both
+        // squeeze past the bound
+        let mut n = self.live.load(Ordering::Acquire);
+        loop {
+            if n >= self.max_sessions {
+                self.shed.inc();
+                return Err(ServeError::SessionLimit { live: n }.into());
+            }
+            match self.live.compare_exchange(n, n + 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => break,
+                Err(cur) => n = cur,
+            }
+        }
+        let accum = model.stat_accum();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let state =
+            SessionState { accum, model, speaker, last_active: Instant::now() };
+        self.shard(id).lock().unwrap().insert(id, Entry::Live(Arc::new(Mutex::new(state))));
+        self.opened.inc();
+        Ok(id)
+    }
+
+    /// The live state behind `id`, or the typed reason it is gone.
+    pub fn lookup(&self, id: u64) -> Result<Arc<Mutex<SessionState>>> {
+        match self.shard(id).lock().unwrap().get(&id) {
+            Some(Entry::Live(s)) => Ok(Arc::clone(s)),
+            Some(Entry::Closed { reason: CloseReason::Expired, .. }) => {
+                Err(ServeError::SessionExpired.into())
+            }
+            Some(Entry::Closed { .. }) => Err(ServeError::SessionClosed.into()),
+            None => Err(ServeError::SessionNotFound.into()),
+        }
+    }
+
+    /// Transition `id` Live → Closed(`reason`). Returns false if the
+    /// session was already closed or never existed (two racing
+    /// early-exit feeds: exactly one counts the close). A feed that
+    /// raced past a concurrent close may still absorb into the orphaned
+    /// state — harmless, it is dropped with the state.
+    pub fn close(&self, id: u64, reason: CloseReason) -> bool {
+        let mut shard = self.shard(id).lock().unwrap();
+        if !matches!(shard.get(&id), Some(Entry::Live(_))) {
+            return false;
+        }
+        shard.insert(id, Entry::Closed { reason, at: Instant::now() });
+        self.live.fetch_sub(1, Ordering::AcqRel);
+        match reason {
+            CloseReason::Expired => self.evictions.inc(),
+            CloseReason::EarlyExit => self.early_exits.inc(),
+            CloseReason::Done => {}
+        }
+        true
+    }
+
+    /// Idle-deadline eviction plus tombstone GC. Cheap at the table's
+    /// scale (a pointer walk per shard), so the engine runs it
+    /// opportunistically on every open; returns the evicted count.
+    pub fn sweep(&self) -> usize {
+        let now = Instant::now();
+        let mut evicted = 0;
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            shard.retain(|_, e| match e {
+                Entry::Closed { at, .. } => now.saturating_duration_since(*at) < self.idle * 2,
+                Entry::Live(_) => true,
+            });
+            let mut expired: Vec<u64> = Vec::new();
+            for (id, e) in shard.iter() {
+                if let Entry::Live(s) = e {
+                    // a locked session is mid-op — not idle by definition
+                    if let Ok(st) = s.try_lock() {
+                        if now.saturating_duration_since(st.last_active) >= self.idle {
+                            expired.push(*id);
+                        }
+                    }
+                }
+            }
+            for id in expired {
+                shard.insert(id, Entry::Closed { reason: CloseReason::Expired, at: now });
+                self.live.fetch_sub(1, Ordering::AcqRel);
+                self.evictions.inc();
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Sessions opened so far.
+    pub fn opened(&self) -> u64 {
+        self.opened.get()
+    }
+
+    /// Early-exit finalizations so far.
+    pub fn early_exits(&self) -> u64 {
+        self.early_exits.get()
+    }
+
+    /// Idle-deadline evictions so far (sweep + lazy expiry).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.get()
+    }
+
+    /// Opens shed at the capacity bound so far.
+    pub fn shed_opens(&self) -> u64 {
+        self.shed.get()
+    }
+}
+
+/// The early-exit decision: `Some(accepted)` once a threshold fires,
+/// `None` while the evidence is still inconclusive. Never fires below
+/// `min_frames` — a partial-stat score on a handful of frames is noise.
+pub fn early_exit_decision(cfg: &SessionConfig, frames: usize, score: f64) -> Option<bool> {
+    if frames < cfg.min_frames {
+        return None;
+    }
+    if let Some(t) = cfg.accept_score {
+        if score >= t {
+            return Some(true);
+        }
+    }
+    if let Some(t) = cfg.reject_score {
+        if score <= t {
+            return Some(false);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bench::shared_test_bundle;
+    use super::*;
+
+    fn model() -> Arc<ServeModel> {
+        Arc::new(ServeModel::new(shared_test_bundle().clone()))
+    }
+
+    fn mgr(max_sessions: usize, idle_ms: u64) -> SessionManager {
+        let cfg = SessionConfig { max_sessions, idle_ms, shards: 4, ..Default::default() };
+        SessionManager::new(&cfg, &ObsRegistry::default(), "t")
+    }
+
+    #[test]
+    fn session_admission_sheds_typed_at_the_bound() {
+        let m = mgr(2, 60_000);
+        let a = m.open("spk-a".into(), model()).unwrap();
+        let b = m.open("spk-b".into(), model()).unwrap();
+        assert_ne!(a, b, "ids are unique");
+        assert_eq!(m.live(), 2);
+
+        let err = m.open("spk-c".into(), model()).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(typed, ServeError::SessionLimit { live: 2 }), "{typed:?}");
+        assert!(typed.is_rejection(), "a full table is load, not breakage");
+        assert_eq!(m.shed_opens(), 1);
+
+        // closing frees the slot; the tombstone answers typed
+        assert!(m.close(a, CloseReason::Done));
+        assert_eq!(m.live(), 1);
+        m.open("spk-c".into(), model()).unwrap();
+        let err = m.lookup(a).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionClosed)),
+            "{err}"
+        );
+        let err = m.lookup(9_999).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionNotFound)),
+            "{err}"
+        );
+        assert_eq!(m.opened(), 3);
+    }
+
+    #[test]
+    fn session_close_counts_each_reason_exactly_once() {
+        let m = mgr(8, 60_000);
+        let a = m.open("a".into(), model()).unwrap();
+        let b = m.open("b".into(), model()).unwrap();
+        let c = m.open("c".into(), model()).unwrap();
+        assert!(m.close(a, CloseReason::Done));
+        assert!(m.close(b, CloseReason::EarlyExit));
+        assert!(m.close(c, CloseReason::Expired));
+        // a second close of any kind is a no-op, not a double count
+        assert!(!m.close(b, CloseReason::EarlyExit));
+        assert!(!m.close(c, CloseReason::Done));
+        assert_eq!(m.early_exits(), 1);
+        assert_eq!(m.evictions(), 1);
+        assert_eq!(m.live(), 0);
+    }
+
+    #[test]
+    fn session_sweep_evicts_idle_and_ages_out_tombstones() {
+        let m = mgr(8, 40);
+        let stale = m.open("stale".into(), model()).unwrap();
+        let fresh = m.open("fresh".into(), model()).unwrap();
+        std::thread::sleep(Duration::from_millis(55));
+        // one session stays active (an op refreshes last_active)...
+        m.lookup(fresh).unwrap().lock().unwrap().last_active = Instant::now();
+        // ...the other idles past the deadline and is reclaimed
+        assert_eq!(m.sweep(), 1);
+        assert_eq!(m.live(), 1);
+        assert_eq!(m.evictions(), 1);
+        let err = m.lookup(stale).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionExpired)),
+            "{err}"
+        );
+        m.lookup(fresh).expect("the refreshed session survives the sweep");
+
+        // a mid-op (locked) session is never evicted, however old its
+        // last_active stamp looks from outside
+        {
+            let s = m.lookup(fresh).unwrap();
+            let mut st = s.lock().unwrap();
+            st.last_active = Instant::now() - Duration::from_millis(500);
+            assert_eq!(m.sweep(), 0, "locked session must be skipped");
+            st.last_active = Instant::now();
+        }
+
+        // tombstones age out after two idle periods → typed NotFound
+        std::thread::sleep(Duration::from_millis(90));
+        m.lookup(fresh).unwrap().lock().unwrap().last_active = Instant::now();
+        m.sweep();
+        let err = m.lookup(stale).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionNotFound)),
+            "aged-out tombstone: {err}"
+        );
+    }
+
+    #[test]
+    fn early_exit_policy_respects_min_frames_and_thresholds() {
+        let cfg = SessionConfig {
+            min_frames: 50,
+            accept_score: Some(2.0),
+            reject_score: Some(-1.0),
+            ..Default::default()
+        };
+        // below min_frames nothing fires, however confident the score
+        assert_eq!(early_exit_decision(&cfg, 10, 99.0), None);
+        assert_eq!(early_exit_decision(&cfg, 49, -99.0), None);
+        // at/above it, thresholds decide; the gap stays pending
+        assert_eq!(early_exit_decision(&cfg, 50, 2.0), Some(true));
+        assert_eq!(early_exit_decision(&cfg, 50, -1.0), Some(false));
+        assert_eq!(early_exit_decision(&cfg, 120, 0.5), None);
+        // disabled thresholds never fire
+        let off = SessionConfig { min_frames: 0, ..Default::default() };
+        assert_eq!(early_exit_decision(&off, 1_000, 99.0), None);
+        // accept-only config cannot reject
+        let acc = SessionConfig {
+            min_frames: 0,
+            accept_score: Some(1.0),
+            reject_score: None,
+            ..Default::default()
+        };
+        assert_eq!(early_exit_decision(&acc, 100, -99.0), None);
+        assert_eq!(early_exit_decision(&acc, 100, 1.5), Some(true));
+    }
+}
