@@ -38,6 +38,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "verify" => commands::verify(&args),
         "serve-bench" => commands::serve_bench(&args),
         "cluster-bench" => commands::cluster_bench(&args),
+        "chaos-bench" => commands::chaos_bench(&args),
         "registry-recover" => commands::registry_recover(&args),
         "registry-bench" => commands::registry_bench(&args),
         "stats" => commands::stats(&args),
@@ -89,6 +90,15 @@ COMMANDS:
              --swap-mid-run, --stall-replica K, --live-enroll-every,
              --requests, --concurrency, --speakers, --enroll-utts,
              --work | tiny in-process bundle, --out, --obs-out)
+  chaos-bench  deterministic self-healing drill: scripted replica
+             stall + WAL poisoning mid-load; the faulty replica must
+             quarantine, rebuild, and return to serving, the registry
+             must degrade read-only and repair, and zero acked
+             enrollments may be lost — non-zero exit otherwise; writes
+             BENCH_9.json + an observability snapshot (--replicas,
+             --faulty-replica, --stall-at, --wal-fault-at, --tick-ms,
+             --settle-ms, --requests, --concurrency, --speakers,
+             --enroll-utts, --live-enroll-every, --out, --obs-out)
   registry-recover  open a durable registry dir, report what recovery
              found (snapshot/replayed/torn tail), optionally compact
              (--dir PATH, --shards, --sync, --compact-every, --compact)

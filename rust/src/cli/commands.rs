@@ -19,10 +19,14 @@ use crate::serve::cluster::bench::{
     cluster_bench_config, run_cluster_load, saturation_serve_config, write_bench5_json,
     ClusterBenchOpts, ClusterBenchReport,
 };
+use crate::serve::cluster::chaos::{
+    chaos_health_config, chaos_serve_config, poisoning_storage, run_chaos_drill,
+    write_bench9_json, ChaosOpts,
+};
 use crate::serve::registry::bench::{
     run_registry_bench, write_bench6_json, RegistryBenchOpts,
 };
-use crate::serve::registry::{FileStorage, RegistryStorage};
+use crate::serve::registry::{FileStorage, MemStorage, RegistryStorage};
 use crate::serve::{
     Dispatcher, DurableRegistry, DurableRegistryOptions, Engine, ModelBundle, Registry,
 };
@@ -560,6 +564,176 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
     )?;
     println!("wrote {out}");
     write_obs_snapshot(&obs_out, dn.obs())?;
+    Ok(())
+}
+
+/// `chaos-bench` — the deterministic self-healing drill behind
+/// `BENCH_9.json`: replay a verify load (live enrollments riding
+/// along) against an N-replica cluster over a WAL-backed registry,
+/// with two scripted faults — at `--stall-at` attempted requests one
+/// replica's workers freeze (and are never thawed: the supervisor's
+/// quarantine → rebuild → probe cycle is the only cure), and at
+/// `--wal-fault-at` durable mutations the registry storage fails an
+/// append plus its rollback, poisoning the WAL into degraded
+/// read-only mode until the supervisor repairs it. The run **fails**
+/// (non-zero exit) on any hard error, any acked-but-lost enrollment,
+/// or if either incident is not healed by run end — this command is a
+/// CI gate, not just a report. Without an explicit `--config` the
+/// engines run the deliberately-fragile [`chaos_serve_config`] /
+/// [`chaos_health_config`] shape so the whole incident fits in
+/// seconds.
+pub fn chaos_bench(args: &Args) -> Result<()> {
+    let work = args.get("work");
+    let explicit_cfg = args.get("config");
+    // the tiny corpus, not cluster-bench's compute-heavy rank-64 one:
+    // the drill's 250 ms request deadline must be generous for a
+    // *healthy* replica, so the only deadline-blowing replica is the
+    // scripted stalled one — otherwise healthy replicas would feed
+    // their own fault budgets and the incident would not be scripted
+    let mut cfg = match (&explicit_cfg, &work) {
+        (Some(path), _) => Config::load(path)?,
+        (None, Some(_)) => Config::default_scaled(),
+        (None, None) => tiny_serve_config(),
+    };
+    let requests = args.get_parse_or("requests", 600usize)?;
+    let concurrency = args.get_parse_or("concurrency", 8usize)?;
+    let speakers = args.get_parse_or("speakers", 6usize)?;
+    let enroll_utts = args.get_parse_or("enroll-utts", 2usize)?;
+    let live_enroll_every = args.get_parse_or("live-enroll-every", 8usize)?;
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let replicas = args.get_parse_or("replicas", cfg.cluster.replicas.max(2))?.max(2);
+    let faulty_replica = args.get_parse_or("faulty-replica", 0usize)?;
+    let stall_at = args.get_parse_or("stall-at", (requests / 6).max(1))?;
+    // default: the WAL fault lands a few live enrollments past the
+    // deterministic up-front batch
+    let up_front = (speakers * enroll_utts.max(1)) as u64;
+    let wal_fault_at = args.get_parse_or("wal-fault-at", up_front + 4)?;
+    let tick_ms = args.get_parse_or("tick-ms", 5u64)?;
+    let settle_ms = args.get_parse_or("settle-ms", 15_000u64)?;
+    let out = args.get_or("out", "BENCH_9.json");
+    let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
+    args.finish()?;
+    anyhow::ensure!(
+        faulty_replica < replicas,
+        "--faulty-replica {faulty_replica} out of range (cluster has {replicas} replicas)"
+    );
+
+    if explicit_cfg.is_none() {
+        cfg.serve = chaos_serve_config(&cfg.serve);
+        cfg.cluster.health = chaos_health_config();
+        println!(
+            "chaos-bench: fragile engine shape (workers {}, queue_cap {}, request \
+             deadline {} ms; fault budget {}, cooldown {} ms) — pass --config to override",
+            cfg.serve.workers,
+            cfg.serve.queue_cap,
+            cfg.serve.request_timeout_ms,
+            cfg.cluster.health.fault_budget,
+            cfg.cluster.health.cooldown_ms,
+        );
+    }
+    cfg.cluster.replicas = replicas;
+
+    let sw = Stopwatch::start();
+    let bundle = match &work {
+        Some(w) => ModelBundle::load_auto(w, &cfg)?,
+        None => {
+            println!("chaos-bench: no --work given — training a tiny in-process bundle");
+            train_tiny_bundle(&cfg, seed)?
+        }
+    };
+    println!(
+        "bundle ready in {:.1}s (C={} F={} R={})",
+        sw.elapsed_s(),
+        bundle.tvm.num_components(),
+        bundle.tvm.feat_dim(),
+        bundle.tvm.rank(),
+    );
+    let traffic = TrafficGen::new(&cfg.corpus, speakers, seed ^ 0xC4A0);
+
+    let obs = Arc::new(ObsRegistry::new(&cfg.obs));
+    let store = MemStorage::new();
+    let durable = DurableRegistry::with_storage_obs(
+        Box::new(poisoning_storage(&store, wal_fault_at)),
+        &DurableRegistryOptions {
+            shards: cfg.serve.registry_shards,
+            wal: true,
+            sync: WalSync::Always,
+            compact_every: 0,
+        },
+        Some(obs.clone()),
+    )?;
+    let d = Dispatcher::with_registry_obs(
+        bundle,
+        &cfg.serve,
+        &cfg.cluster,
+        durable.handle(),
+        obs,
+    )?;
+
+    let opts = ChaosOpts {
+        speakers,
+        enroll_utts,
+        requests,
+        concurrency,
+        live_enroll_every,
+        faulty_replica,
+        stall_at,
+        tick_ms,
+        settle_ms,
+    };
+    println!(
+        "chaos-bench: {replicas} replicas, {requests} requests x{concurrency} — \
+         stalling replica {faulty_replica} at request {stall_at}, poisoning the WAL \
+         at mutation {wal_fault_at}"
+    );
+    let report = run_chaos_drill(&d, &traffic, &opts)?;
+
+    println!(
+        "chaos-bench: {} completed, {} shed/timed out, {} enrolls refused in degraded \
+         mode over {:.2}s",
+        report.completed, report.rejected, report.degraded_enrolls, report.wall_s,
+    );
+    println!(
+        "  replica incident: quarantined +{:.3}s, serving again +{:.3}s \
+         (quarantines {}, probes {}, self-heals {}, failovers {})",
+        report.time_to_quarantine_s,
+        report.time_to_recover_s,
+        report.quarantines,
+        report.probes,
+        report.self_heals,
+        report.failovers,
+    );
+    println!(
+        "  registry incident: WAL poisoned={} repaired={} (repair took {:.3}s)",
+        report.registry_poisoned, report.registry_repaired, report.time_to_repair_wal_s,
+    );
+    println!(
+        "  verify p99: {:.1} ms inside the incident window vs {:.1} ms steady-state",
+        report.incident_p99_ms, report.steady_p99_ms,
+    );
+    println!(
+        "  audit: {} acked enrollments, {} lost",
+        report.acked_enrollments, report.lost_enrollments,
+    );
+
+    // the gates: this command exists to fail CI when self-healing breaks
+    anyhow::ensure!(
+        report.lost_enrollments == 0,
+        "AUDIT FAILED: {} acked enrollments missing from the registry",
+        report.lost_enrollments
+    );
+    anyhow::ensure!(
+        report.quarantines >= 1 && report.self_heals >= 1 && report.replica_restored,
+        "faulty replica was not quarantined and restored: {report:?}"
+    );
+    anyhow::ensure!(
+        report.registry_poisoned && report.registry_repaired,
+        "WAL incident did not complete its degrade/repair cycle: {report:?}"
+    );
+
+    write_bench9_json(&out, &report)?;
+    println!("wrote {out}");
+    write_obs_snapshot(&obs_out, d.obs())?;
     Ok(())
 }
 

@@ -432,6 +432,45 @@ impl ReplicaOverride {
     }
 }
 
+/// Replica health supervision knobs (`[cluster.health]`,
+/// [`crate::serve::cluster::health`]): the sliding error-budget window
+/// and circuit-breaker timings of the self-healing supervisor tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthConfig {
+    /// Master switch; `false` makes the tracker inert (every replica
+    /// reports healthy and the supervisor never quarantines, rebuilds,
+    /// or probes).
+    pub enabled: bool,
+    /// Sliding error-budget window, in milliseconds.
+    pub window_ms: u64,
+    /// Hard faults (request timeouts + worker panics + hard errors)
+    /// inside the window that quarantine a replica; half the budget
+    /// only degrades it.
+    pub fault_budget: u64,
+    /// Admission sheds inside the window that mark a replica degraded.
+    /// Sheds alone never quarantine — a saturated replica is busy, not
+    /// broken.
+    pub shed_budget: u64,
+    /// Circuit-breaker cooldown after a quarantined engine is rebuilt,
+    /// in milliseconds, before the half-open canary probe runs.
+    pub cooldown_ms: u64,
+    /// Frames in the canary probe utterance the half-open state sends.
+    pub probe_frames: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            window_ms: 2_000,
+            fault_budget: 5,
+            shed_budget: 256,
+            cooldown_ms: 250,
+            probe_frames: 16,
+        }
+    }
+}
+
 /// Multi-engine cluster parameters (`[cluster]`,
 /// [`crate::serve::cluster`]): replica count, routing policy, shed
 /// failover budget, and the per-replica drain bound of a rolling swap.
@@ -453,6 +492,8 @@ pub struct ClusterConfig {
     /// Per-replica overrides, indexed by replica id; missing/default
     /// entries inherit `[serve]` unchanged.
     pub overrides: Vec<ReplicaOverride>,
+    /// Replica health supervision (`[cluster.health]`).
+    pub health: HealthConfig,
 }
 
 impl ClusterConfig {
@@ -552,6 +593,7 @@ impl Config {
                 max_failovers: 2,
                 drain_timeout_ms: 5_000,
                 overrides: Vec::new(),
+                health: HealthConfig::default(),
             },
             registry: RegistryConfig {
                 path: None,
@@ -636,6 +678,34 @@ impl Config {
                 );
             }
         }
+        // `[cluster.health]` supervision knobs, same typo discipline as
+        // the other sections
+        for key in doc.keys_with_prefix("cluster.health.") {
+            let field = &key["cluster.health.".len()..];
+            if !matches!(
+                field,
+                "enabled" | "window_ms" | "fault_budget" | "shed_budget" | "cooldown_ms"
+                    | "probe_frames"
+            ) {
+                bail!(
+                    "config key `{key}`: unknown [cluster.health] field `{field}` (supported: \
+                     enabled, window_ms, fault_budget, shed_budget, cooldown_ms, probe_frames)"
+                );
+            }
+        }
+        let dh = &d.cluster.health;
+        let health = HealthConfig {
+            enabled: doc.get_bool("cluster.health.enabled", dh.enabled)?,
+            window_ms: doc.get_usize("cluster.health.window_ms", dh.window_ms as usize)? as u64,
+            fault_budget: doc
+                .get_usize("cluster.health.fault_budget", dh.fault_budget as usize)?
+                as u64,
+            shed_budget: doc.get_usize("cluster.health.shed_budget", dh.shed_budget as usize)?
+                as u64,
+            cooldown_ms: doc.get_usize("cluster.health.cooldown_ms", dh.cooldown_ms as usize)?
+                as u64,
+            probe_frames: doc.get_usize("cluster.health.probe_frames", dh.probe_frames)?,
+        };
         // `[registry]` durability knobs. `sync` accepts either spelling
         // the TOML-subset parser produces: a bare integer (every-N) or
         // the string "always".
@@ -784,6 +854,7 @@ impl Config {
                     .get_usize("cluster.drain_timeout_ms", d.cluster.drain_timeout_ms as usize)?
                     as u64,
                 overrides,
+                health,
             },
             registry,
             obs,
@@ -829,6 +900,31 @@ mod tests {
         assert_eq!(cfg.tvm.top_k, 20); // default preserved
         assert_eq!(cfg.feat_dim(), 24);
         assert_eq!(cfg.serve.batch_utts, 32); // serve defaults preserved
+        assert_eq!(cfg.cluster.health, HealthConfig::default());
+    }
+
+    #[test]
+    fn cluster_health_section_overrides() {
+        let doc = Doc::parse(
+            "[cluster.health]\nenabled = false\nwindow_ms = 500\nfault_budget = 9\n\
+             shed_budget = 32\ncooldown_ms = 75\nprobe_frames = 8\n",
+        )
+        .unwrap();
+        let h = Config::from_doc(&doc).unwrap().cluster.health;
+        assert!(!h.enabled);
+        assert_eq!(h.window_ms, 500);
+        assert_eq!(h.fault_budget, 9);
+        assert_eq!(h.shed_budget, 32);
+        assert_eq!(h.cooldown_ms, 75);
+        assert_eq!(h.probe_frames, 8);
+    }
+
+    #[test]
+    fn cluster_health_unknown_key_is_an_error() {
+        let doc = Doc::parse("[cluster.health]\nwindow = 500\n").unwrap();
+        let err = Config::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("cluster.health.window"), "{err}");
+        assert!(err.contains("window_ms"), "{err}");
     }
 
     #[test]

@@ -34,6 +34,23 @@ pub const CANONICAL_METRICS: &[&str] = &[
     "serve_session_shed_total",
 ];
 
+/// Metric names every cluster dispatcher registers on top of the
+/// engine canon: routing/failover counters, the self-healing
+/// supervisor counters, and the per-replica health gauge. Enforced by
+/// [`validate_snapshot`] only when the snapshot *is* a cluster
+/// snapshot — detected by the presence of `cluster_routed_total` — so
+/// single-engine `serve-bench` snapshots stay valid unchanged.
+pub const CANONICAL_CLUSTER_METRICS: &[&str] = &[
+    "cluster_routed_total",
+    "cluster_failovers_total",
+    "cluster_exhausted_total",
+    "cluster_swaps_total",
+    "cluster_quarantines_total",
+    "cluster_probes_total",
+    "cluster_self_heals_total",
+    "cluster_replica_health",
+];
+
 fn fmt_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
@@ -472,6 +489,18 @@ pub fn validate_snapshot(text: &str) -> Result<()> {
             metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed)),
             "canonical metric `{name}` missing from snapshot"
         );
+    }
+    // a cluster snapshot — the dispatcher's routing counter is the
+    // sentinel — must also carry the full cluster canon, including the
+    // self-healing counters and the per-replica health gauge
+    if metrics.iter().any(|(k, _)| k == "cluster_routed_total") {
+        for name in CANONICAL_CLUSTER_METRICS {
+            let prefixed = format!("{name}{{");
+            ensure!(
+                metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed)),
+                "cluster canonical metric `{name}` missing from snapshot"
+            );
+        }
     }
     for stage in Stage::ALL {
         let key = format!("{STAGE_METRIC}{{stage=\"{}\"}}", stage.as_str());

@@ -34,7 +34,8 @@ mod trace;
 
 pub use clock::Clock;
 pub use export::{
-    latency_summary_json, parse_json, validate_snapshot, Json, CANONICAL_METRICS,
+    latency_summary_json, parse_json, validate_snapshot, Json, CANONICAL_CLUSTER_METRICS,
+    CANONICAL_METRICS,
 };
 pub use ring::TraceRing;
 pub use trace::{
@@ -657,5 +658,41 @@ mod tests {
             .replace("serve_shed_total", "serve_load_shed_total");
         let err = validate_snapshot(&renamed).unwrap_err();
         assert!(err.to_string().contains("serve_shed_total"), "{err:#}");
+    }
+
+    #[test]
+    fn validator_enforces_cluster_canon_only_on_cluster_snapshots() {
+        // an engine-only snapshot needs no cluster metrics at all
+        let obs = ObsRegistry::default();
+        for name in CANONICAL_METRICS[4..9].iter().chain(&CANONICAL_METRICS[10..]) {
+            obs.counter(name, &[("engine", "0")]);
+        }
+        for name in &CANONICAL_METRICS[1..4] {
+            obs.histogram(name, &[("engine", "0")]);
+        }
+        obs.gauge("serve_queue_depth", &[("engine", "0")]);
+        validate_snapshot(&obs.render(RenderFormat::Json)).unwrap();
+
+        // the routing-counter sentinel alone flips the snapshot into a
+        // cluster snapshot — the rest of the cluster canon (including
+        // the self-healing counters) becomes required
+        obs.counter("cluster_routed_total", &[]);
+        let err = validate_snapshot(&obs.render(RenderFormat::Json)).unwrap_err();
+        assert!(err.to_string().contains("cluster canonical metric"), "{err:#}");
+
+        // the full canon — with the health gauge labeled per replica,
+        // as the dispatcher registers it — validates
+        for name in &CANONICAL_CLUSTER_METRICS[1..7] {
+            obs.counter(name, &[]);
+        }
+        obs.gauge("cluster_replica_health", &[("replica", "0")]);
+        validate_snapshot(&obs.render(RenderFormat::Json)).unwrap();
+
+        // a renamed supervisor counter breaks it again
+        let renamed = obs
+            .render(RenderFormat::Json)
+            .replace("cluster_self_heals_total", "cluster_heals_total");
+        let err = validate_snapshot(&renamed).unwrap_err();
+        assert!(err.to_string().contains("cluster_self_heals_total"), "{err:#}");
     }
 }

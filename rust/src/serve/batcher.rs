@@ -27,7 +27,7 @@
 //! at the epoch boundary instead of mixing models.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -102,6 +102,10 @@ struct Shared {
     worker_panics: Counter,
     /// Post-push queue depth per admitted request (`serve_queue_depth`).
     depth: Arc<DepthGauge>,
+    /// Scripted fault hook: panic the next N batch dispatches inside
+    /// the worker's catch_unwind (the chaos drill's deterministic
+    /// stand-in for a poisoned batch); 0 in normal operation.
+    panic_next: AtomicU64,
 }
 
 /// RAII announcement of an in-flight request (created before the
@@ -163,6 +167,7 @@ impl MicroBatcher {
             expired: obs.counter("serve_expired_jobs_total", &labels),
             worker_panics: obs.counter("serve_worker_panics_total", &labels),
             depth: obs.gauge("serve_queue_depth", &labels),
+            panic_next: AtomicU64::new(0),
             obs,
         });
         let workers = (0..workers.max(1))
@@ -325,6 +330,17 @@ impl MicroBatcher {
         self.shared.stalled.store(stalled, Ordering::Release);
         self.shared.cv.notify_all();
     }
+
+    /// Fault hook: panic the next `n` batch dispatches inside the
+    /// worker's catch_unwind — each scripted panic drops one assembled
+    /// batch, so every rider's response sender closes and the waiting
+    /// requests error out exactly like a poisoned batch. Additive;
+    /// consumed one dispatch at a time. Compiled in every build for the
+    /// same reason as [`MicroBatcher::set_stalled`]: the chaos drill is
+    /// a real binary.
+    pub fn panic_next_batches(&self, n: u64) {
+        self.shared.panic_next.fetch_add(n, Ordering::AcqRel);
+    }
 }
 
 impl Drop for MicroBatcher {
@@ -459,6 +475,15 @@ fn run_batch(
     ws_rank: &mut usize,
     batch: &[Job],
 ) {
+    // scripted fault hook: blow this dispatch up inside the caller's
+    // catch_unwind (see `panic_next_batches`)
+    if shared
+        .panic_next
+        .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+        .is_ok()
+    {
+        panic!("scripted batch panic (chaos drill)");
+    }
     let model = &batch[0].model;
     let r = model.consts.r;
     let rebuild = match ws.as_ref() {

@@ -428,6 +428,7 @@ mod tests {
             max_failovers: 2,
             drain_timeout_ms: 5_000,
             overrides: Vec::new(),
+            health: crate::config::HealthConfig::default(),
         };
         let d = Dispatcher::new(bundle.clone(), &roomy_serve(), &cluster).unwrap();
         let opts = ClusterBenchOpts {

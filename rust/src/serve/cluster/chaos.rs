@@ -1,0 +1,630 @@
+//! Deterministic chaos drill: a scripted fault schedule against a live
+//! cluster — the machinery behind the `chaos-bench` CLI command and the
+//! `BENCH_9.json` incident report.
+//!
+//! Where [`super::bench`] measures a cluster under *load*, this module
+//! measures it under *failure*. The schedule is deterministic by
+//! construction, so the drill is a regression test, not a dice roll:
+//!
+//! * at an exact attempted-request count, one replica's worker pool is
+//!   frozen — and never thawed by the harness. The only cure is the
+//!   supervisor ([`Dispatcher::tick`]) noticing the timeout burst,
+//!   quarantining the replica, rebuilding its engine from the current
+//!   bundle, and restoring it behind a canary probe;
+//! * at an exact WAL mutation count, the registry's storage fails an
+//!   append *and* its rollback truncate ([`poisoning_storage`]) — the
+//!   one-two punch that poisons the WAL. The registry degrades to
+//!   read-only (verifies keep serving, enrolls fail typed
+//!   [`RegistryStoreError::WalPoisoned`]) until the supervisor tick
+//!   repairs it by rebuilding storage from the intact in-memory state.
+//!
+//! Throughout, client threads keep offering verify + live-enroll
+//! traffic and record per-request latency against the run clock, so
+//! the report can quote the p99 *inside the incident window* next to
+//! the steady-state p99. Hard failures abort the drill: a passing run
+//! means every request either scored, was shed typed, or (enrolls
+//! during the poisoned window) failed with the documented degraded-mode
+//! error — and the post-run audit found every acked enrollment in the
+//! registry.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::bench_util::write_bench_json;
+use crate::frontend::synth::TrafficGen;
+use crate::metrics::Stopwatch;
+use crate::serve::bench::trial_plan;
+use crate::serve::registry::{Fault, FaultInjector, MemStorage, RegistryStoreError};
+use crate::serve::ServeError;
+
+use super::{Dispatcher, HealthState};
+
+/// Chaos drill parameters. All counts are exact — the schedule replays
+/// identically for a fixed traffic seed and config.
+#[derive(Debug, Clone)]
+pub struct ChaosOpts {
+    /// Speakers enrolled up front, before any fault fires.
+    pub speakers: usize,
+    /// Enrollment utterances per up-front speaker.
+    pub enroll_utts: usize,
+    /// Verify requests replayed by the client pool.
+    pub requests: usize,
+    /// Concurrent client threads.
+    pub concurrency: usize,
+    /// Each client enrolls one utterance for its own live speaker every
+    /// this-many of its verify requests (0 disables) — the mutation
+    /// stream the WAL fault lands in.
+    pub live_enroll_every: usize,
+    /// The replica the stall hits.
+    pub faulty_replica: usize,
+    /// Freeze the faulty replica's workers once this many verify
+    /// requests have been attempted. The harness never thaws it — the
+    /// supervisor's quarantine → rebuild → probe cycle is the only fix.
+    pub stall_at: usize,
+    /// Supervisor tick period.
+    pub tick_ms: u64,
+    /// Give the supervisor this long after the load phase to finish
+    /// healing (quarantine, rebuild, probe, registry repair) before the
+    /// drill declares failure.
+    pub settle_ms: u64,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> Self {
+        Self {
+            speakers: 4,
+            enroll_utts: 2,
+            requests: 400,
+            concurrency: 8,
+            live_enroll_every: 10,
+            faulty_replica: 0,
+            stall_at: 40,
+            tick_ms: 5,
+            settle_ms: 10_000,
+        }
+    }
+}
+
+/// The engine shape the drill runs without an explicit `--config`:
+/// one worker behind a shallow queue with a tight admission budget,
+/// and a request deadline short enough that a stalled replica's queued
+/// requests time out — feeding the fault budget — in tens of
+/// milliseconds, not seconds. Everything else inherits `base`.
+pub fn chaos_serve_config(base: &crate::config::ServeConfig) -> crate::config::ServeConfig {
+    crate::config::ServeConfig {
+        batch_utts: 4,
+        flush_us: 300,
+        workers: 1,
+        queue_cap: 8,
+        submit_timeout_ms: 5,
+        request_timeout_ms: 250,
+        ..base.clone()
+    }
+}
+
+/// Fast-cycle health knobs for the drill: a fault budget the stalled
+/// replica's queued-request timeouts blow within one deadline, an
+/// effectively-unlimited shed budget (the drill *wants* failover
+/// sheds), and a cooldown short enough that quarantine → rebuild →
+/// probe → healthy completes while the load is still running.
+pub fn chaos_health_config() -> crate::config::HealthConfig {
+    crate::config::HealthConfig {
+        enabled: true,
+        window_ms: 2_000,
+        fault_budget: 5,
+        shed_budget: 1_000_000,
+        cooldown_ms: 100,
+        probe_frames: 16,
+    }
+}
+
+/// Wrap `store` so the `at_mutation`-th durable mutation (0-based,
+/// counting every WAL append across up-front and live enrollments)
+/// fails its append **and** the rollback truncate that follows —
+/// exactly the sequence that poisons the WAL and flips the registry
+/// into degraded read-only mode.
+///
+/// Storage op numbering on an empty store with `wal: true`: open costs
+/// ops 0–3 (read snapshot, read WAL, append header, sync header), then
+/// mutation `k` is ops `4 + 2k` (append) and `5 + 2k` (sync). The
+/// durable-mutation lock is held across each append+sync pair, so the
+/// numbering is deterministic however many clients race.
+pub fn poisoning_storage(store: &MemStorage, at_mutation: u64) -> FaultInjector {
+    FaultInjector::new(Box::new(store.clone()))
+        .fail_op(4 + 2 * at_mutation, Fault::Enospc)
+        .fail_op(5 + 2 * at_mutation, Fault::Enospc)
+}
+
+/// The incident timeline, all offsets in seconds from the drill clock.
+#[derive(Debug, Clone, Copy, Default)]
+struct Timeline {
+    stall: Option<f64>,
+    quarantine: Option<f64>,
+    recover: Option<f64>,
+    poisoned: Option<f64>,
+    repaired: Option<f64>,
+}
+
+/// One chaos drill's results.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub replicas: usize,
+    pub requests: usize,
+    /// Requests that produced a score.
+    pub completed: usize,
+    /// Typed rejections absorbed (sheds + timeouts, mostly from the
+    /// stalled replica before its quarantine).
+    pub rejected: usize,
+    /// Enrolls refused typed while the WAL was poisoned (plus the one
+    /// injected-fault trigger) — the degraded-mode residue, never a
+    /// hard failure.
+    pub degraded_enrolls: u64,
+    pub wall_s: f64,
+    /// Stall injection → the supervisor publishing `Quarantined`.
+    pub time_to_quarantine_s: f64,
+    /// Stall injection → the canary probe restoring `Healthy`.
+    pub time_to_recover_s: f64,
+    /// WAL poisoning → the supervisor's registry repair.
+    pub time_to_repair_wal_s: f64,
+    /// Client-side verify p99 inside the incident window
+    /// (stall → recover), in milliseconds.
+    pub incident_p99_ms: f64,
+    /// Client-side verify p99 outside the incident window.
+    pub steady_p99_ms: f64,
+    pub quarantines: u64,
+    pub probes: u64,
+    pub self_heals: u64,
+    pub failovers: u64,
+    pub exhausted: u64,
+    /// Enrollments acknowledged to a client (up-front + live).
+    pub acked_enrollments: u64,
+    /// Acked enrollments missing from the registry after the run —
+    /// the audit the drill exists for; must be 0.
+    pub lost_enrollments: i64,
+    /// The WAL fault really fired (the drill observed the poisoned
+    /// state).
+    pub registry_poisoned: bool,
+    /// The registry left degraded mode before the run ended.
+    pub registry_repaired: bool,
+    /// The faulty replica was serving (`Healthy`) at run end.
+    pub replica_restored: bool,
+}
+
+impl ChaosReport {
+    /// One JSON object (no trailing newline) for the BENCH_9 report.
+    pub fn json_fragment(&self) -> String {
+        format!(
+            "{{\"replicas\": {}, \"requests\": {}, \"completed\": {}, \"rejected\": {}, \
+\"degraded_enrolls\": {}, \"wall_s\": {:.6}, \
+\"time_to_quarantine_s\": {:.6}, \"time_to_recover_s\": {:.6}, \
+\"time_to_repair_wal_s\": {:.6}, \
+\"incident_p99_ms\": {:.4}, \"steady_p99_ms\": {:.4}, \
+\"quarantines\": {}, \"probes\": {}, \"self_heals\": {}, \
+\"failovers\": {}, \"exhausted\": {}, \
+\"acked_enrollments\": {}, \"lost_enrollments\": {}, \
+\"registry_poisoned\": {}, \"registry_repaired\": {}, \"replica_restored\": {}}}",
+            self.replicas,
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.degraded_enrolls,
+            self.wall_s,
+            self.time_to_quarantine_s,
+            self.time_to_recover_s,
+            self.time_to_repair_wal_s,
+            self.incident_p99_ms,
+            self.steady_p99_ms,
+            self.quarantines,
+            self.probes,
+            self.self_heals,
+            self.failovers,
+            self.exhausted,
+            self.acked_enrollments,
+            self.lost_enrollments,
+            self.registry_poisoned,
+            self.registry_repaired,
+            self.replica_restored,
+        )
+    }
+}
+
+/// A drill client absorbs exactly two failure shapes without aborting:
+/// the saturation rejections every load harness counts, and — on the
+/// enroll path only — the degraded-mode refusals the WAL fault is
+/// scripted to cause (the typed `WalPoisoned` plus the one injected
+/// storage error that triggered the poisoning).
+fn is_counted_rejection(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<ServeError>()
+        .is_some_and(|s| s.is_rejection() || s.is_retriable_stateless())
+}
+
+fn is_degraded_enroll(e: &anyhow::Error) -> bool {
+    matches!(e.downcast_ref::<RegistryStoreError>(), Some(RegistryStoreError::WalPoisoned))
+        // the poisoning mutation itself surfaces the injected storage
+        // fault (ENOSPC) to its caller, before the flag is readable
+        || format!("{e:#}").contains("injected")
+}
+
+fn p99_ms(lat_s: &mut [f64]) -> f64 {
+    if lat_s.is_empty() {
+        return 0.0;
+    }
+    lat_s.sort_by(f64::total_cmp);
+    let idx = ((lat_s.len() as f64 * 0.99).ceil() as usize).clamp(1, lat_s.len()) - 1;
+    lat_s[idx] * 1e3
+}
+
+/// Run the drill: up-front enrolls, then `opts.requests` verifies with
+/// live enrolls interleaved, a scripted stall at
+/// `opts.stall_at` attempted requests, and whatever storage faults the
+/// caller pre-scheduled (see [`poisoning_storage`]) — while a
+/// supervisor thread ticks the dispatcher every `opts.tick_ms` and the
+/// harness stamps every incident transition against one clock.
+///
+/// `Err` means a hard failure: an untyped error, a lost enrollment, or
+/// an incident the supervisor failed to heal within `opts.settle_ms`
+/// after the load phase.
+pub fn run_chaos_drill(
+    dispatcher: &Dispatcher,
+    traffic: &TrafficGen,
+    opts: &ChaosOpts,
+) -> Result<ChaosReport> {
+    let n_spk = opts.speakers.min(traffic.n_speakers());
+    ensure!(n_spk >= 2, "chaos drill needs at least 2 speakers (got {n_spk})");
+    ensure!(
+        opts.faulty_replica < dispatcher.replicas(),
+        "faulty replica {} out of range ({} replicas)",
+        opts.faulty_replica,
+        dispatcher.replicas()
+    );
+    ensure!(
+        dispatcher.replicas() >= 2,
+        "the drill needs a healthy replica to fail over to (got {})",
+        dispatcher.replicas()
+    );
+
+    // phase 0: enroll on a healthy cluster
+    for s in 0..n_spk {
+        let id = traffic.speaker_id(s);
+        for k in 0..opts.enroll_utts.max(1) {
+            dispatcher.enroll(&id, &traffic.utterance(s, k as u64))?;
+        }
+    }
+    let acked = AtomicU64::new((n_spk * opts.enroll_utts.max(1)) as u64);
+    let degraded = AtomicU64::new(0);
+    let attempted = AtomicUsize::new(0);
+    let done = AtomicBool::new(false);
+    // (completion offset s, latency s) per scored verify
+    let latencies: Mutex<Vec<(f64, f64)>> = Mutex::new(Vec::new());
+    let timeline: Mutex<Timeline> = Mutex::new(Timeline::default());
+    let sw = Stopwatch::start();
+
+    let partials: Result<Vec<usize>> = std::thread::scope(|scope| {
+        // the supervisor: injects the scripted stall at its exact
+        // request count, then ticks the self-healing loop and stamps
+        // every observed transition of the faulty replica + registry
+        let supervisor = {
+            let dispatcher = &dispatcher;
+            let attempted = &attempted;
+            let done = &done;
+            let timeline = &timeline;
+            let sw = &sw;
+            scope.spawn(move || {
+                let fid = opts.faulty_replica;
+                loop {
+                    {
+                        let mut tl = timeline.lock().unwrap();
+                        if tl.stall.is_none()
+                            && attempted.load(Ordering::Relaxed) >= opts.stall_at
+                        {
+                            dispatcher.stall_replica(fid, true);
+                            tl.stall = Some(sw.elapsed_s());
+                        }
+                        // observe the poisoned flag BEFORE the tick:
+                        // the tick repairs it, and a poisoning the very
+                        // next tick fixes must still make the timeline
+                        if dispatcher.registry().is_poisoned() && tl.poisoned.is_none() {
+                            tl.poisoned = Some(sw.elapsed_s());
+                        }
+                    }
+                    dispatcher.tick();
+                    {
+                        let mut tl = timeline.lock().unwrap();
+                        let now = sw.elapsed_s();
+                        match dispatcher.health_state(fid) {
+                            HealthState::Quarantined if tl.quarantine.is_none() => {
+                                tl.quarantine = Some(now);
+                            }
+                            HealthState::Healthy
+                                if tl.quarantine.is_some() && tl.recover.is_none() =>
+                            {
+                                tl.recover = Some(now);
+                            }
+                            _ => {}
+                        }
+                        if tl.poisoned.is_some()
+                            && tl.repaired.is_none()
+                            && !dispatcher.registry().is_poisoned()
+                        {
+                            tl.repaired = Some(now);
+                        }
+                    }
+                    if done.load(Ordering::Relaxed) {
+                        let tl = *timeline.lock().unwrap();
+                        let healed = tl.stall.is_none()
+                            || (tl.recover.is_some()
+                                && (tl.poisoned.is_none() == tl.repaired.is_none()));
+                        if healed || sw.elapsed_s() * 1e3
+                            > opts.settle_ms as f64 + tl.stall.unwrap_or(0.0) * 1e3
+                        {
+                            return;
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(opts.tick_ms.max(1)));
+                }
+            })
+        };
+        let handles: Vec<_> = (0..opts.concurrency.max(1))
+            .map(|c| {
+                let dispatcher = &dispatcher;
+                let traffic = &traffic;
+                let attempted = &attempted;
+                let acked = &acked;
+                let degraded = &degraded;
+                let latencies = &latencies;
+                let sw = &sw;
+                scope.spawn(move || -> Result<usize> {
+                    let concurrency = opts.concurrency.max(1);
+                    let mut completed = 0usize;
+                    let mut i = c;
+                    while i < opts.requests {
+                        attempted.fetch_add(1, Ordering::Relaxed);
+                        let (claimed, actual, _target) = trial_plan(i, n_spk);
+                        let feats = traffic.utterance(actual, 1_000 + i as u64);
+                        let t0 = sw.elapsed_s();
+                        match dispatcher.verify(&traffic.speaker_id(claimed), &feats) {
+                            Ok(_) => {
+                                let t1 = sw.elapsed_s();
+                                latencies.lock().unwrap().push((t1, t1 - t0));
+                                completed += 1;
+                            }
+                            Err(e) if is_counted_rejection(&e) => {}
+                            Err(e) => return Err(e.context(format!("verify {i}"))),
+                        }
+                        if opts.live_enroll_every > 0
+                            && (i / concurrency) % opts.live_enroll_every == 0
+                        {
+                            let id = format!("live{c:03}");
+                            let feats = traffic.utterance(c % n_spk, 50_000 + i as u64);
+                            match dispatcher.enroll(&id, &feats) {
+                                Ok(_) => {
+                                    acked.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) if is_degraded_enroll(&e) => {
+                                    degraded.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) if is_counted_rejection(&e) => {}
+                                Err(e) => return Err(e.context(format!("live enroll {i}"))),
+                            }
+                        }
+                        i += concurrency;
+                    }
+                    Ok(completed)
+                })
+            })
+            .collect();
+        // join every client BEFORE signalling the supervisor: a
+        // short-circuiting collect on a hard error would leave `done`
+        // unset and the scope deadlocked on the supervisor loop
+        let mut results = Vec::with_capacity(handles.len());
+        for h in handles {
+            results.push(h.join().expect("client thread panicked"));
+        }
+        done.store(true, Ordering::Relaxed);
+        supervisor.join().expect("supervisor thread panicked");
+        results.into_iter().collect()
+    });
+    let wall_s = sw.elapsed_s();
+    let completed: usize = partials.context("chaos drill load failed")?.iter().sum();
+
+    let tl = *timeline.lock().unwrap();
+    let stall = tl.stall.context("the scripted stall never fired — raise `requests`")?;
+    let m = dispatcher.metrics();
+    let acked = acked.load(Ordering::Relaxed);
+    let lost = acked as i64 - dispatcher.registry().total_enrollments() as i64;
+
+    // split client latencies at the incident window
+    let (mut incident, mut steady): (Vec<f64>, Vec<f64>) = (Vec::new(), Vec::new());
+    let recover = tl.recover.unwrap_or(wall_s);
+    for (t, lat) in latencies.lock().unwrap().iter() {
+        if *t >= stall && *t <= recover {
+            incident.push(*lat);
+        } else {
+            steady.push(*lat);
+        }
+    }
+
+    Ok(ChaosReport {
+        replicas: dispatcher.replicas(),
+        requests: opts.requests,
+        completed,
+        rejected: opts.requests - completed,
+        degraded_enrolls: degraded.load(Ordering::Relaxed),
+        wall_s,
+        time_to_quarantine_s: tl.quarantine.map_or(-1.0, |t| t - stall),
+        time_to_recover_s: tl.recover.map_or(-1.0, |t| t - stall),
+        time_to_repair_wal_s: match (tl.poisoned, tl.repaired) {
+            (Some(p), Some(r)) => r - p,
+            _ => -1.0,
+        },
+        incident_p99_ms: p99_ms(&mut incident),
+        steady_p99_ms: p99_ms(&mut steady),
+        quarantines: m.quarantines,
+        probes: m.probes,
+        self_heals: m.self_heals,
+        failovers: m.failovers,
+        exhausted: m.exhausted,
+        acked_enrollments: acked,
+        lost_enrollments: lost,
+        registry_poisoned: tl.poisoned.is_some(),
+        registry_repaired: tl.poisoned.is_some() && tl.repaired.is_some(),
+        replica_restored: dispatcher.health_state(opts.faulty_replica) == HealthState::Healthy,
+    })
+}
+
+/// Write the `BENCH_9.json` chaos report.
+pub fn write_bench9_json(path: impl AsRef<std::path::Path>, report: &ChaosReport) -> Result<()> {
+    write_bench_json(path, 9, &[("chaos", report.json_fragment())])
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::config::{ClusterConfig, RoutePolicy, WalSync};
+    use crate::obs::ObsRegistry;
+    use crate::serve::bench::{shared_test_bundle, tiny_serve_config, tiny_traffic};
+    use crate::serve::{DurableRegistry, DurableRegistryOptions};
+
+    fn chaos_cluster() -> ClusterConfig {
+        ClusterConfig {
+            replicas: 2,
+            route: RoutePolicy::RoundRobin,
+            max_failovers: 2,
+            drain_timeout_ms: 1_000,
+            overrides: Vec::new(),
+            health: chaos_health_config(),
+        }
+    }
+
+    /// The end-to-end drill the chaos CI job gates on: scripted stall +
+    /// WAL poisoning mid-run, zero hard failures, zero lost acked
+    /// enrollments, the faulty replica quarantined then restored, the
+    /// registry degraded then repaired — all timed.
+    #[test]
+    fn scripted_stall_and_wal_fault_self_heal_end_to_end() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 4, 177);
+        let opts = ChaosOpts {
+            speakers: 4,
+            enroll_utts: 2,
+            requests: 240,
+            concurrency: 8,
+            live_enroll_every: 6,
+            faulty_replica: 0,
+            stall_at: 30,
+            tick_ms: 5,
+            settle_ms: 15_000,
+        };
+        // the WAL fault lands a few live enrollments past the up-front
+        // batch (mutation index counts all appends: 8 up-front + k)
+        let store = MemStorage::new();
+        let injected = poisoning_storage(&store, 12);
+        let durable = DurableRegistry::with_storage(
+            Box::new(injected),
+            &DurableRegistryOptions {
+                shards: 4,
+                wal: true,
+                sync: WalSync::Always,
+                compact_every: 0,
+            },
+        )
+        .unwrap();
+        let d = Dispatcher::with_registry_obs(
+            shared_test_bundle().clone(),
+            &chaos_serve_config(&cfg.serve),
+            &chaos_cluster(),
+            durable.handle(),
+            Arc::new(ObsRegistry::default()),
+        )
+        .unwrap();
+
+        let report = run_chaos_drill(&d, &traffic, &opts).unwrap();
+
+        // the stall incident: quarantined, rebuilt, probed, restored
+        assert!(report.time_to_quarantine_s >= 0.0, "{report:?}");
+        assert!(report.time_to_recover_s >= report.time_to_quarantine_s, "{report:?}");
+        assert!(report.quarantines >= 1, "{report:?}");
+        assert!(report.self_heals >= 1, "{report:?}");
+        assert!(report.probes >= 1, "{report:?}");
+        assert!(report.replica_restored, "{report:?}");
+
+        // the WAL incident: poisoned, degraded typed, repaired
+        assert!(report.registry_poisoned, "the scripted WAL fault must have fired");
+        assert!(report.registry_repaired, "{report:?}");
+        assert!(report.time_to_repair_wal_s >= 0.0, "{report:?}");
+        assert!(report.degraded_enrolls >= 1, "{report:?}");
+
+        // the audit: zero hard failures (we got a report at all), zero
+        // acked-but-lost enrollments, and the cluster still serves
+        assert_eq!(report.lost_enrollments, 0, "{report:?}");
+        assert!(report.completed > 0, "{report:?}");
+        d.verify(&traffic.speaker_id(0), &traffic.utterance(0, 9_999)).unwrap();
+        durable.reopen().unwrap(); // healthy: no-op
+
+        // post-run restart audit: every acked enrollment recovers from
+        // the rebuilt storage alone
+        let total = d.registry().total_enrollments();
+        drop(d);
+        drop(durable);
+        let back = DurableRegistry::with_storage(
+            Box::new(store.clone()),
+            &DurableRegistryOptions {
+                shards: 4,
+                wal: true,
+                sync: WalSync::Always,
+                compact_every: 0,
+            },
+        )
+        .unwrap();
+        assert_eq!(back.total_enrollments(), total, "acked enrollments survive restart");
+        assert_eq!(back.total_enrollments(), report.acked_enrollments);
+    }
+
+    #[test]
+    fn bench9_json_shape() {
+        let report = ChaosReport {
+            replicas: 2,
+            requests: 400,
+            completed: 380,
+            rejected: 20,
+            degraded_enrolls: 3,
+            wall_s: 2.5,
+            time_to_quarantine_s: 0.31,
+            time_to_recover_s: 0.44,
+            time_to_repair_wal_s: 0.01,
+            incident_p99_ms: 240.0,
+            steady_p99_ms: 6.5,
+            quarantines: 1,
+            probes: 1,
+            self_heals: 1,
+            failovers: 12,
+            exhausted: 8,
+            acked_enrollments: 40,
+            lost_enrollments: 0,
+            registry_poisoned: true,
+            registry_repaired: true,
+            replica_restored: true,
+        };
+        let frag = report.json_fragment();
+        assert!(frag.contains("\"time_to_quarantine_s\": 0.310000"), "{frag}");
+        assert!(frag.contains("\"time_to_recover_s\": 0.440000"), "{frag}");
+        assert!(frag.contains("\"incident_p99_ms\": 240.0000"), "{frag}");
+        assert!(frag.contains("\"lost_enrollments\": 0"), "{frag}");
+        assert!(frag.contains("\"registry_repaired\": true"), "{frag}");
+        assert!(frag.contains("\"replica_restored\": true"), "{frag}");
+
+        let dir = std::env::temp_dir().join("ivtv_bench9_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_9.json");
+        write_bench9_json(&p, &report).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"schema_version\": 1"));
+        assert!(text.contains("\"issue\": 9"));
+        assert!(text.contains("\"chaos\": {"));
+    }
+}

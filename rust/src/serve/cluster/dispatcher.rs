@@ -29,7 +29,17 @@
 //!   that opened it — never failing over mid-session. When a rolling
 //!   swap (or drain) retires that engine, the next touch comes back as
 //!   a typed [`ServeError::SessionSwapped`] instead of a silent rescore
-//!   against a different bundle.
+//!   against a different bundle;
+//! * **self-healing supervision** ([`Dispatcher::tick`], backed by
+//!   [`super::health`]): each tick samples every replica's failure
+//!   counters into the per-replica health state machine, excludes
+//!   quarantined replicas from routing (with a last-replica-standing
+//!   escape hatch so a fully-quarantined cluster sheds typed errors
+//!   instead of deadlocking), rebuilds a quarantined replica's engine
+//!   from the current bundle via the same install + drain machinery a
+//!   rolling swap uses, and restores it through a circuit-breaker
+//!   half-open canary probe. The tick also sweeps idle streaming
+//!   sessions and attempts recovery of a WAL-poisoned registry.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -41,8 +51,9 @@ use anyhow::{anyhow, Result};
 use crate::config::{ClusterConfig, RoutePolicy, ServeConfig};
 use crate::gmm::AlignPrecision;
 use crate::linalg::Mat;
-use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::metrics::{DepthGauge, LatencyHistogram, LatencySummary};
 use crate::obs::{self, Counter, ObsRegistry, RequestTrace, TraceOutcome};
+use crate::serve::cluster::health::{HealthAction, HealthSample, HealthState, HealthTracker};
 use crate::serve::{
     DurabilityMetrics, Engine, EngineMetrics, FeedOutcome, ModelBundle, Registry, ServeError,
     ServeModel, VerifyOutcome,
@@ -62,6 +73,14 @@ struct Replica {
     /// Cleared while a rolling swap is rebuilding this replica; the
     /// router skips non-admitting replicas whenever any other is up.
     admitting: AtomicBool,
+    /// Hard failures the dispatcher itself observed from this replica
+    /// (today: `WorkerFailed`, i.e. a panicked batch dispatch). Client
+    /// mistakes — unknown speaker, bad dims — fail identically on any
+    /// replica and are deliberately *not* counted: they say nothing
+    /// about this replica's health. Cumulative; zeroed when a
+    /// self-heal rebuild replaces the engine (whose counters restart
+    /// from zero too).
+    hard_errors: AtomicU64,
 }
 
 impl Replica {
@@ -132,6 +151,9 @@ pub struct ReplicaMetrics {
     /// The alignment precision this replica currently serves at
     /// (per-replica overrides make this heterogeneous).
     pub precision: AlignPrecision,
+    /// Supervision state: quarantined replicas are excluded from
+    /// routing until a rebuild + canary probe restores them.
+    pub health: HealthState,
     /// The replica engine's own counters. Reset by a rolling swap (the
     /// engine is rebuilt); cluster-level counters persist across swaps.
     pub engine: EngineMetrics,
@@ -166,6 +188,13 @@ pub struct ClusterMetrics {
     /// (their replacements restart at zero).
     pub retired_shed: u64,
     pub retired_timeouts: u64,
+    /// Replicas quarantined by the health supervisor (state-entry
+    /// edges, so one incident counts once however long it lasts).
+    pub quarantines: u64,
+    /// Half-open canary probes sent to quarantined replicas.
+    pub probes: u64,
+    /// Quarantined engines rebuilt from the current bundle.
+    pub self_heals: u64,
     /// Durability counters of the shared registry (zeros on a volatile
     /// cluster). One registry, one WAL: these are cluster-wide however
     /// many replicas routed the mutations.
@@ -256,6 +285,20 @@ pub struct Dispatcher {
     extract_lat: Arc<LatencyHistogram>,
     enroll_lat: Arc<LatencyHistogram>,
     verify_lat: Arc<LatencyHistogram>,
+    /// The bundle currently rolled out, kept so a self-heal rebuild
+    /// installs the *current* model — including one swapped in after
+    /// construction — not the one the cluster booted with.
+    bundle: Mutex<ModelBundle>,
+    /// Per-replica error budgets, quarantine, and half-open probes.
+    /// The request path reads only its lock-free published state.
+    health: HealthTracker,
+    quarantines: Counter,
+    probes: Counter,
+    self_heals: Counter,
+    /// Published health level per replica (0 healthy / 1 degraded /
+    /// 2 quarantined), labeled by replica id, so an exported snapshot
+    /// shows which replica an incident hit.
+    health_gauges: Vec<Arc<DepthGauge>>,
 }
 
 impl Dispatcher {
@@ -308,8 +351,13 @@ impl Dispatcher {
                 engine: RwLock::new(Arc::new(engine)),
                 in_flight: AtomicUsize::new(0),
                 admitting: AtomicBool::new(true),
+                hard_errors: AtomicU64::new(0),
             });
         }
+        let health = HealthTracker::new(&cluster.health, n);
+        let health_gauges: Vec<Arc<DepthGauge>> = (0..n)
+            .map(|id| obs.gauge("cluster_replica_health", &[("replica", &id.to_string())]))
+            .collect();
         Ok(Self {
             replicas,
             registry,
@@ -335,6 +383,12 @@ impl Dispatcher {
             extract_lat: obs.histogram("cluster_extract_latency_seconds", &[]),
             enroll_lat: obs.histogram("cluster_enroll_latency_seconds", &[]),
             verify_lat: obs.histogram("cluster_verify_latency_seconds", &[]),
+            bundle: Mutex::new(bundle),
+            health,
+            quarantines: obs.counter("cluster_quarantines_total", &[]),
+            probes: obs.counter("cluster_probes_total", &[]),
+            self_heals: obs.counter("cluster_self_heals_total", &[]),
+            health_gauges,
             obs,
         })
     }
@@ -402,7 +456,7 @@ impl Dispatcher {
     /// id is dispatcher-minted, and every later `session_*` call goes
     /// back to that exact engine — partial statistics never migrate.
     pub fn session_open(&self, speaker_id: &str) -> Result<u64> {
-        let cid = self.dispatch_full(|id, engine| {
+        let cid = self.dispatch_full(false, |id, engine| {
             let engine_session = engine.session_open(speaker_id)?;
             let cid = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
             self.sessions.lock().unwrap_or_else(|p| p.into_inner()).insert(
@@ -498,26 +552,38 @@ impl Dispatcher {
     /// least-loaded untried replica — bounded by `max_failovers`, and
     /// launched only while the original request window has time left
     /// (each attempt then carries the engine's own deadlines; see the
-    /// `request_timeout` field note for the worst-case bound). Anything
-    /// else propagates as-is: a `Timeout` request has already spent its
-    /// deadline, and a hard error (unknown speaker, model mismatch,
-    /// worker failure) would fail identically anywhere.
+    /// `request_timeout` field note for the worst-case bound). Stateless
+    /// requests (everything routed through here: extract, enroll,
+    /// verify) additionally retry `WorkerFailed` — nothing was applied
+    /// before the worker dropped the response, so replay is safe, and
+    /// the health tracker charges the panicking replica. Anything else
+    /// propagates as-is: a `Timeout` request has already spent its
+    /// deadline, and the remaining hard errors (unknown speaker, model
+    /// mismatch) would fail identically anywhere.
     fn dispatch<T>(&self, f: impl Fn(&Engine) -> Result<T>) -> Result<T> {
-        self.dispatch_full(move |_, engine| f(engine))
+        self.dispatch_full(true, move |_, engine| f(engine))
     }
 
     /// Like [`Dispatcher::dispatch`], but the operation also sees which
     /// replica it landed on and the engine `Arc` itself — what
     /// [`Dispatcher::session_open`] needs to pin the session where it
-    /// was created.
-    fn dispatch_full<T>(&self, f: impl Fn(usize, &Arc<Engine>) -> Result<T>) -> Result<T> {
+    /// was created. `stateless` selects the failover set:
+    /// [`ServeError::is_retriable_stateless`] for replayable requests,
+    /// [`ServeError::is_retriable`] for session opens (a `WorkerFailed`
+    /// open could in principle retry too, but opens do no batch work —
+    /// keeping them on the narrow set keeps the contract simple).
+    fn dispatch_full<T>(
+        &self,
+        stateless: bool,
+        f: impl Fn(usize, &Arc<Engine>) -> Result<T>,
+    ) -> Result<T> {
         // the trace spans the whole failover loop: hops, retries, and
         // the engines' stage spans (which join this thread's scope) all
         // accumulate into one record, so a rescued request shows every
         // replica it touched
         let trace = self.obs.mint();
         let scope = trace.as_ref().map(|t| obs::enter(Arc::clone(t)));
-        let r = self.dispatch_attempts(trace.as_deref(), f);
+        let r = self.dispatch_attempts(stateless, trace.as_deref(), f);
         drop(scope);
         if let Some(t) = &trace {
             self.obs.complete(t, TraceOutcome::of(&r));
@@ -527,6 +593,7 @@ impl Dispatcher {
 
     fn dispatch_attempts<T>(
         &self,
+        stateless: bool,
         trace: Option<&RequestTrace>,
         f: impl Fn(usize, &Arc<Engine>) -> Result<T>,
     ) -> Result<T> {
@@ -546,7 +613,15 @@ impl Dispatcher {
                 Ok(v) => return Ok(v),
                 Err(e) => {
                     let serve_err = e.downcast_ref::<ServeError>();
-                    let retriable = serve_err.is_some_and(ServeError::is_retriable);
+                    let retriable = serve_err.is_some_and(|s| {
+                        if stateless { s.is_retriable_stateless() } else { s.is_retriable() }
+                    });
+                    // the one typed failure that indicts the replica
+                    // itself rather than the request or the cluster's
+                    // load: charge it to the replica's error budget
+                    if matches!(serve_err, Some(ServeError::WorkerFailed)) {
+                        replica.hard_errors.fetch_add(1, Ordering::Relaxed);
+                    }
                     // `Overloaded` disqualifies the replica for this
                     // request (its queue is full). `ShuttingDown` does
                     // not: the engine the request held was retiring,
@@ -582,19 +657,31 @@ impl Dispatcher {
 
     /// Choose a replica not in `tried`: by the configured policy for a
     /// request's first attempt, always least-loaded for failover
-    /// retries. Prefers admitting replicas; when none admit (a rolling
-    /// swap on a small cluster) it falls back to any untried replica —
-    /// the engine itself then answers with a typed error the failover
-    /// loop understands, rather than the router inventing its own.
+    /// retries. Quarantined replicas are excluded outright; among the
+    /// routable it prefers admitting ones, falling back (a rolling swap
+    /// on a small cluster) to any routable untried replica — the engine
+    /// itself then answers with a typed error the failover loop
+    /// understands, rather than the router inventing its own. Last
+    /// resort, when *every* untried replica is quarantined: route
+    /// anyway. A fully-quarantined cluster must still answer — a
+    /// quarantined engine sheds typed errors the caller can branch on,
+    /// where an empty pool would deadlock the request into an untyped
+    /// "no replica" failure after zero attempts.
     fn pick(&self, tried: &[usize], primary: bool) -> Option<usize> {
         let untried = |r: &&Replica| !tried.contains(&r.id);
+        let routable = |r: &&Replica| self.health.is_routable(r.id);
         let mut pool: Vec<&Replica> = self
             .replicas
             .iter()
             .filter(untried)
+            .filter(routable)
             .filter(|r| r.admitting.load(Ordering::Acquire))
             .collect();
         if pool.is_empty() {
+            pool = self.replicas.iter().filter(untried).filter(routable).collect();
+        }
+        if pool.is_empty() {
+            // last-replica-standing escape hatch
             pool = self.replicas.iter().filter(untried).collect();
         }
         if pool.is_empty() {
@@ -674,6 +761,8 @@ impl Dispatcher {
             self.retired_shed.add(old_metrics.shed_requests);
             self.retired_timeouts.add(old_metrics.timed_out_requests);
         }
+        // self-heal rebuilds must install what is serving *now*
+        *self.bundle.lock().unwrap_or_else(|poisoned| poisoned.into_inner()) = bundle;
         self.swaps.inc();
         Ok(())
     }
@@ -705,6 +794,146 @@ impl Dispatcher {
         self.replicas[id].engine().stall_workers(stalled);
     }
 
+    /// Script the next `n` batch dispatches on replica `id` to panic —
+    /// the chaos drill's deterministic worker-crash injector (each
+    /// panicked batch surfaces as typed `WorkerFailed` to its callers).
+    /// Crate-only, like [`Dispatcher::stall_replica`].
+    pub(crate) fn panic_replica(&self, id: usize, n: u64) {
+        self.replicas[id].engine().panic_next_batches(n);
+    }
+
+    /// The supervisor's current view of one replica (tests, bench
+    /// reporting; the request path reads the same published state).
+    pub fn health_state(&self, id: usize) -> HealthState {
+        self.health.state(id)
+    }
+
+    /// One supervision pass — the self-healing heartbeat. Run it
+    /// periodically from an operator thread (the chaos harness ticks
+    /// every few milliseconds; production would tick ~once a second).
+    /// Each pass, per replica:
+    ///
+    /// 1. sweep idle streaming sessions (the engine-side eviction that
+    ///    otherwise only runs lazily on touches),
+    /// 2. feed the replica's cumulative failure counters to the health
+    ///    tracker and publish the health gauge,
+    /// 3. on a fresh quarantine *or* a pending one, rebuild the engine
+    ///    from the current bundle (the breaker opens),
+    /// 4. once a rebuilt replica's cooldown expires, send one canary
+    ///    probe (half-open) and restore it on success — a failed canary
+    ///    re-opens the breaker and the next tick rebuilds again;
+    ///
+    /// then attempt recovery of a WAL-poisoned registry, so degraded
+    /// read-only mode ends without operator intervention when the
+    /// fault was transient.
+    pub fn tick(&self) {
+        for replica in &self.replicas {
+            let engine = replica.engine();
+            engine.sessions().sweep();
+            let m = engine.metrics();
+            let sample = HealthSample {
+                sheds: m.shed_requests,
+                timeouts: m.timed_out_requests,
+                worker_panics: m.worker_panics,
+                hard_errors: replica.hard_errors.load(Ordering::Relaxed),
+            };
+            let out = self.health.observe(replica.id, Instant::now(), sample);
+            self.health_gauges[replica.id].record(u64::from(out.state.level()));
+            if out.changed && out.state == HealthState::Quarantined {
+                self.quarantines.inc();
+                eprintln!(
+                    "[cluster] replica {}: quarantined (error budget exhausted) — \
+                     rebuilding its engine",
+                    replica.id
+                );
+            }
+            match out.action {
+                HealthAction::None => {}
+                HealthAction::Rebuild => match self.rebuild_replica(replica) {
+                    Ok(()) => {
+                        self.self_heals.inc();
+                        self.health.healed(replica.id, Instant::now());
+                    }
+                    Err(e) => eprintln!(
+                        "[cluster] replica {}: self-heal rebuild failed ({e}); \
+                         retrying next tick",
+                        replica.id
+                    ),
+                },
+                HealthAction::Probe => {
+                    self.probes.inc();
+                    let ok = self.probe(&replica.engine());
+                    if self.health.probe_result(replica.id, ok, Instant::now()) {
+                        eprintln!(
+                            "[cluster] replica {}: canary passed — restored to routing",
+                            replica.id
+                        );
+                    }
+                }
+            }
+        }
+        if self.registry.is_poisoned() && self.registry.repair().is_ok() {
+            eprintln!("[cluster] registry: WAL repaired — enrollments accepted again");
+        }
+    }
+
+    /// Replace a quarantined replica's engine with a fresh one built
+    /// from the *current* bundle — the single-replica version of the
+    /// install + drain sequence [`Dispatcher::swap_bundle`] rolls
+    /// through the cluster, so in-flight requests either finish on
+    /// their snapshot or come back typed and fail over. A stalled
+    /// engine drains cleanly here: shutdown wakes its parked workers
+    /// regardless of the stall flag, and queued jobs' response channels
+    /// drop (typed `WorkerFailed` to any caller still waiting).
+    fn rebuild_replica(&self, replica: &Replica) -> Result<()> {
+        let bundle = self.bundle.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).clone();
+        let _serialized = self.swap_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        anyhow::ensure!(
+            !self.retired.load(Ordering::Acquire),
+            "cluster has been drained — a self-heal would resurrect a retired replica"
+        );
+        let cfg = self.cluster_cfg.replica_serve_cfg(&self.serve_cfg, replica.id);
+        let next = Arc::new(Engine::with_registry_obs(
+            bundle,
+            &cfg,
+            Arc::clone(&self.registry),
+            Arc::clone(&self.obs),
+        )?);
+        replica.admitting.store(false, Ordering::Release);
+        let old = {
+            let mut slot = replica.engine.write().unwrap_or_else(|poisoned| poisoned.into_inner());
+            std::mem::replace(&mut *slot, next)
+        };
+        replica.admitting.store(true, Ordering::Release);
+        if !old.drain(self.drain_timeout) {
+            eprintln!(
+                "[cluster] replica {}: quarantined engine exceeded {:?} draining — \
+                 it retires when its last batch ends",
+                replica.id, self.drain_timeout
+            );
+        }
+        let old_metrics = old.metrics();
+        self.retired_shed.add(old_metrics.shed_requests);
+        self.retired_timeouts.add(old_metrics.timed_out_requests);
+        // the fresh engine restarts every counter at zero and `healed`
+        // resets the tracker's baseline to match — this atomic must
+        // reset too, or the next tick's delta would see a phantom
+        // burst and re-quarantine the healthy replacement
+        replica.hard_errors.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The half-open canary: one synthetic extraction through the
+    /// replica's full serving path — admission, micro-batching, worker
+    /// dispatch. Deterministic content, because the probe judges the
+    /// engine's plumbing, not the model's output.
+    fn probe(&self, engine: &Engine) -> bool {
+        let frames = self.cluster_cfg.health.probe_frames.max(1);
+        let dim = engine.model().bundle.tvm.feat_dim();
+        let feats = Mat::from_fn(frames, dim, |t, j| ((t * 31 + j * 7) % 13) as f64 * 0.1 - 0.6);
+        engine.extract(&feats).is_ok()
+    }
+
     /// Cluster counters plus the per-replica breakdown.
     pub fn metrics(&self) -> ClusterMetrics {
         ClusterMetrics {
@@ -719,6 +948,9 @@ impl Dispatcher {
             sessions_closed_by_swap: self.sessions_closed_by_swap.get(),
             retired_shed: self.retired_shed.get(),
             retired_timeouts: self.retired_timeouts.get(),
+            quarantines: self.quarantines.get(),
+            probes: self.probes.get(),
+            self_heals: self.self_heals.get(),
             durability: self.registry.durability_metrics(),
             replicas: self
                 .replicas
@@ -730,6 +962,7 @@ impl Dispatcher {
                         admitting: r.admitting.load(Ordering::Acquire),
                         in_flight: r.in_flight.load(Ordering::Acquire),
                         precision: engine.model().precision(),
+                        health: self.health.state(r.id),
                         engine: engine.metrics(),
                     }
                 })
@@ -770,6 +1003,7 @@ mod tests {
             max_failovers: 2,
             drain_timeout_ms: 5_000,
             overrides: Vec::new(),
+            health: crate::config::HealthConfig::default(),
         }
     }
 
@@ -1341,5 +1575,179 @@ mod tests {
         assert_eq!(m.swaps, 0);
         assert!(m.replicas.iter().all(|r| r.admitting));
         d.extract(&traffic.utterance(0, 0)).unwrap();
+    }
+
+    /// A health config tuned for tests: tight fault budget, short
+    /// cooldown, a window long enough that nothing expires mid-test.
+    fn test_health(fault_budget: u64, cooldown_ms: u64) -> crate::config::HealthConfig {
+        crate::config::HealthConfig {
+            enabled: true,
+            window_ms: 60_000,
+            fault_budget,
+            shed_budget: 1_000_000,
+            cooldown_ms,
+            probe_frames: 16,
+        }
+    }
+
+    /// Satellite acceptance: a panicked batch (typed `WorkerFailed`)
+    /// fails a *stateless* request over to the healthy replica instead
+    /// of surfacing to the caller, is charged to the faulty replica,
+    /// and — one panic being under budget — does not quarantine it.
+    #[test]
+    fn worker_failure_fails_over_statelessly() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 61);
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve_opts(),
+            &cluster_opts(2, RoutePolicy::LeastDepth),
+        )
+        .unwrap();
+        // least-depth on an idle cluster deterministically picks
+        // replica 0 first; its next batch is scripted to panic
+        d.panic_replica(0, 1);
+        let got = d.extract(&traffic.utterance(0, 0)).unwrap();
+        let want = d.replica_model(1).extract_serial(&traffic.utterance(0, 0));
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        let m = d.metrics();
+        assert_eq!(m.routed, 1);
+        assert_eq!(m.failovers, 1, "the panicked attempt must have been retried");
+        assert_eq!(m.exhausted, 0);
+        assert_eq!(m.replicas[0].engine.worker_panics, 1);
+        // one fault is far under the default budget: still routable
+        d.tick();
+        assert_eq!(d.health_state(0), HealthState::Healthy);
+    }
+
+    /// Tentpole acceptance: the full breaker cycle. A replica whose
+    /// batches keep panicking exhausts its error budget, is
+    /// quarantined off the routing set, gets its engine rebuilt by the
+    /// supervisor tick, and after the cooldown a canary probe restores
+    /// it — all while the healthy replica keeps every request whole.
+    #[test]
+    fn quarantine_rebuild_probe_cycle_restores_a_panicking_replica() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 67);
+        let mut cluster = cluster_opts(2, RoutePolicy::LeastDepth);
+        cluster.health = test_health(3, 40);
+        let d =
+            Dispatcher::new(shared_test_bundle().clone(), &serve_opts(), &cluster).unwrap();
+
+        // every batch on replica 0 panics for the next 8 dispatches;
+        // each request sheds typed WorkerFailed there and is rescued
+        d.panic_replica(0, 8);
+        for k in 0..4u64 {
+            d.extract(&traffic.utterance(0, k)).unwrap();
+        }
+        let m = d.metrics();
+        assert_eq!(m.failovers, 4);
+        assert_eq!(m.exhausted, 0);
+
+        // the supervisor notices: budget blown → quarantine + rebuild
+        // in one tick (the breaker opens and the engine is replaced)
+        d.tick();
+        assert_eq!(d.health_state(0), HealthState::Quarantined);
+        let m = d.metrics();
+        assert_eq!(m.quarantines, 1);
+        assert_eq!(m.self_heals, 1, "the rebuild runs in the same tick");
+        assert_eq!(m.replicas[0].health, HealthState::Quarantined);
+        // the rebuilt engine starts with zeroed counters
+        assert_eq!(m.replicas[0].engine.worker_panics, 0);
+
+        // during cooldown the replica stays out of the routing set:
+        // requests all land on replica 1
+        let routed_before = d.metrics().replicas[1].engine.batched_requests;
+        for k in 0..3u64 {
+            d.extract(&traffic.utterance(0, 10 + k)).unwrap();
+        }
+        let m = d.metrics();
+        assert_eq!(m.replicas[1].engine.batched_requests, routed_before + 3);
+        assert_eq!(m.failovers, 4, "no new failovers: the router skipped the quarantine");
+
+        // cooldown expires → half-open: one canary probe through the
+        // fresh engine's full batch path restores the replica
+        std::thread::sleep(Duration::from_millis(60));
+        d.tick();
+        assert_eq!(d.health_state(0), HealthState::Healthy);
+        let m = d.metrics();
+        assert_eq!(m.probes, 1);
+        assert_eq!(m.quarantines, 1, "one incident, counted once");
+
+        // and it serves again, bit-exactly
+        let feats = traffic.utterance(0, 50);
+        let got = d.extract(&feats).unwrap();
+        let want = d.replica_model(0).extract_serial(&feats);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-10 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    /// Escape hatch: a cluster whose *every* replica is quarantined
+    /// still answers — typed — rather than deadlocking on an empty
+    /// routing pool. (Single replica: quarantined, mid-cooldown.)
+    #[test]
+    fn fully_quarantined_cluster_still_answers() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 71);
+        let mut cluster = cluster_opts(1, RoutePolicy::LeastDepth);
+        // cooldown far past the test: the replica stays quarantined
+        cluster.health = test_health(2, 600_000);
+        let d =
+            Dispatcher::new(shared_test_bundle().clone(), &serve_opts(), &cluster).unwrap();
+
+        d.panic_replica(0, 3);
+        for k in 0..3u64 {
+            // sole replica: the typed WorkerFailed propagates (the
+            // failover loop has nowhere to go and reports exhausted)
+            let err = d.extract(&traffic.utterance(0, k)).unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<ServeError>(), Some(ServeError::WorkerFailed)),
+                "{err}"
+            );
+        }
+        assert_eq!(d.metrics().exhausted, 3);
+        d.tick();
+        assert_eq!(d.health_state(0), HealthState::Quarantined);
+        assert_eq!(d.metrics().self_heals, 1);
+
+        // quarantined — but it is the last replica standing, so the
+        // escape hatch still routes to it; the rebuilt engine answers
+        d.extract(&traffic.utterance(0, 9)).unwrap();
+        assert_eq!(d.health_state(0), HealthState::Quarantined, "no probe ran: mid-cooldown");
+    }
+
+    /// Satellite acceptance: the supervisor tick sweeps idle streaming
+    /// sessions, so eviction happens on the heartbeat — not only
+    /// lazily when some later touch happens to collide.
+    #[test]
+    fn tick_sweeps_idle_sessions() {
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 73);
+        let mut serve = serve_opts();
+        serve.session.idle_ms = 25;
+        let d = Dispatcher::new(
+            shared_test_bundle().clone(),
+            &serve,
+            &cluster_opts(2, RoutePolicy::RoundRobin),
+        )
+        .unwrap();
+        let spk = traffic.speaker_id(0);
+        d.enroll(&spk, &traffic.utterance(0, 0)).unwrap();
+        let sid = d.session_open(&spk).unwrap();
+
+        std::thread::sleep(Duration::from_millis(40));
+        d.tick();
+
+        // the engine-side session is gone before any touch: the next
+        // op comes back typed Expired (not a stale partial score)
+        let err = d.session_score(sid).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::SessionExpired)),
+            "{err}"
+        );
+        assert_eq!(d.live_sessions(), 0, "the dead entry was reaped on touch");
     }
 }

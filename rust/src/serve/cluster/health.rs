@@ -1,0 +1,447 @@
+//! Per-replica health supervision: the cluster's circuit breaker.
+//!
+//! Every supervisor tick the [`Dispatcher`](super::Dispatcher) samples
+//! the failure signals each replica already emits — admission sheds,
+//! request timeouts, worker panics, and dispatcher-observed hard
+//! errors — and feeds the cumulative counters to a [`HealthTracker`].
+//! The tracker turns them into per-tick deltas, keeps a sliding
+//! error-budget window, and drives a three-state machine per replica:
+//!
+//! ```text
+//!            faults ≥ ⌈budget/2⌉           faults ≥ budget
+//!            or sheds ≥ shed_budget
+//!   Healthy ──────────────────────▶ Degraded ─────────────▶ Quarantined
+//!      ▲                               │  faults ≥ budget        │
+//!      │                               └──────────────────────────┤
+//!      │        canary probe OK                 rebuild engine,   │
+//!      └────────────────────────────────────────cooldown, probe ◀─┘
+//! ```
+//!
+//! *Degraded* is advisory — the replica keeps routing (sheds are a
+//! weak signal: a healthy replica at saturation sheds constantly, so
+//! sheds alone can never quarantine). *Quarantined* removes the
+//! replica from routing and asks the supervisor for repair actions:
+//! first [`HealthAction::Rebuild`] (replace the engine from the
+//! current bundle via the rolling-swap machinery), then — after the
+//! circuit-breaker cooldown — [`HealthAction::Probe`] (one canary
+//! extraction in half-open state decides restore-vs-stay-quarantined).
+//!
+//! All transitions happen in [`HealthTracker::observe`] /
+//! [`HealthTracker::probe_result`] with an explicit `now`, so the
+//! state machine is deterministic under test. The published state
+//! lives in lock-free atomics so the routing hot path
+//! ([`HealthTracker::is_routable`]) never takes the per-replica lock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::config::HealthConfig;
+
+/// One replica's health classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Inside the error budget; routed normally.
+    Healthy,
+    /// Burning budget (or shedding hard) but still serving; routed,
+    /// surfaced to operators via the `cluster_replica_health` gauge.
+    Degraded,
+    /// Out of budget: excluded from routing while the supervisor
+    /// rebuilds and probes it.
+    Quarantined,
+}
+
+impl HealthState {
+    /// Stable lowercase name (metrics labels, reports, logs).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Quarantined => "quarantined",
+        }
+    }
+
+    /// Severity level exported on the health gauge (0/1/2).
+    pub fn level(&self) -> u8 {
+        match self {
+            Self::Healthy => 0,
+            Self::Degraded => 1,
+            Self::Quarantined => 2,
+        }
+    }
+}
+
+/// Cumulative failure counters for one replica, sampled once per
+/// supervisor tick (the tracker diffs consecutive samples itself).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthSample {
+    /// Admission sheds (engine `shed_requests`).
+    pub sheds: u64,
+    /// Deadline expiries (engine `timed_out_requests`).
+    pub timeouts: u64,
+    /// Batch-worker panics caught by the micro-batcher.
+    pub worker_panics: u64,
+    /// Hard errors the dispatcher saw from this replica (e.g.
+    /// `WorkerFailed`).
+    pub hard_errors: u64,
+}
+
+/// What the supervisor should do to a replica after a tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthAction {
+    /// Nothing — healthy, degraded-but-serving, or cooling down.
+    None,
+    /// Quarantined with a suspect engine: rebuild it from the current
+    /// bundle, then call [`HealthTracker::healed`].
+    Rebuild,
+    /// Rebuilt and cooled down: send one canary request, then call
+    /// [`HealthTracker::probe_result`].
+    Probe,
+}
+
+/// Result of one [`HealthTracker::observe`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct TickOutcome {
+    pub state: HealthState,
+    /// The state changed on this tick (quarantine entries are counted
+    /// off this edge).
+    pub changed: bool,
+    pub action: HealthAction,
+}
+
+/// Per-replica bookkeeping behind the lock: last cumulative sample,
+/// the sliding (timestamp, faults, sheds) window, and the
+/// circuit-breaker sub-state while quarantined.
+#[derive(Debug)]
+struct ReplicaHealth {
+    state: HealthState,
+    prev: HealthSample,
+    window: VecDeque<(Instant, u64, u64)>,
+    /// The quarantined engine has been rebuilt (set by `healed`);
+    /// false means the supervisor still owes a rebuild.
+    healed: bool,
+    /// Half-open gate: probes may run once `now` passes this.
+    cooldown_until: Option<Instant>,
+}
+
+impl ReplicaHealth {
+    fn new() -> Self {
+        Self {
+            state: HealthState::Healthy,
+            prev: HealthSample::default(),
+            window: VecDeque::new(),
+            healed: false,
+            cooldown_until: None,
+        }
+    }
+}
+
+/// Sliding-window error-budget tracker for every replica in a cluster.
+#[derive(Debug)]
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    replicas: Vec<Mutex<ReplicaHealth>>,
+    /// Published `HealthState::level` per replica — the lock-free view
+    /// the routing hot path reads.
+    published: Vec<AtomicU8>,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: &HealthConfig, replicas: usize) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            replicas: (0..replicas).map(|_| Mutex::new(ReplicaHealth::new())).collect(),
+            published: (0..replicas).map(|_| AtomicU8::new(0)).collect(),
+        }
+    }
+
+    /// Poison-tolerant per-replica lock, same policy as the registry
+    /// shard locks.
+    fn lock(&self, id: usize) -> MutexGuard<'_, ReplicaHealth> {
+        self.replicas[id].lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn publish(&self, id: usize, state: HealthState) {
+        self.published[id].store(state.level(), Ordering::Release);
+    }
+
+    /// Supervision disabled entirely (`[cluster.health] enabled = false`)?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Lock-free routing check: everything short of quarantine routes.
+    pub fn is_routable(&self, id: usize) -> bool {
+        self.published[id].load(Ordering::Acquire) < HealthState::Quarantined.level()
+    }
+
+    /// Current state of one replica (reports/metrics; reads the
+    /// published atomic, not the lock).
+    pub fn state(&self, id: usize) -> HealthState {
+        match self.published[id].load(Ordering::Acquire) {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Quarantined,
+        }
+    }
+
+    /// Feed one replica's cumulative failure counters at time `now`;
+    /// returns the post-tick state plus the repair action the
+    /// supervisor owes. All healthy↔degraded↔quarantined transitions
+    /// happen here (probe verdicts land in [`Self::probe_result`]).
+    pub fn observe(&self, id: usize, now: Instant, sample: HealthSample) -> TickOutcome {
+        if !self.cfg.enabled {
+            return TickOutcome {
+                state: HealthState::Healthy,
+                changed: false,
+                action: HealthAction::None,
+            };
+        }
+        let mut rh = self.lock(id);
+        // cumulative → per-tick deltas; saturating so an engine rebuild
+        // (counters reset to zero) can never look like activity
+        let faults = sample
+            .timeouts
+            .saturating_sub(rh.prev.timeouts)
+            .saturating_add(sample.worker_panics.saturating_sub(rh.prev.worker_panics))
+            .saturating_add(sample.hard_errors.saturating_sub(rh.prev.hard_errors));
+        let sheds = sample.sheds.saturating_sub(rh.prev.sheds);
+        rh.prev = sample;
+        if faults > 0 || sheds > 0 {
+            rh.window.push_back((now, faults, sheds));
+        }
+        let horizon = Duration::from_millis(self.cfg.window_ms);
+        while let Some((t, _, _)) = rh.window.front() {
+            if now.saturating_duration_since(*t) > horizon {
+                rh.window.pop_front();
+            } else {
+                break;
+            }
+        }
+        let (win_faults, win_sheds) = rh
+            .window
+            .iter()
+            .fold((0u64, 0u64), |(f, s), (_, df, ds)| (f + df, s + ds));
+
+        let mut changed = false;
+        if rh.state != HealthState::Quarantined {
+            // sheds alone only ever degrade — quarantine needs faults
+            let next = if win_faults >= self.cfg.fault_budget.max(1) {
+                HealthState::Quarantined
+            } else if win_faults >= (self.cfg.fault_budget.max(1) + 1) / 2
+                || win_sheds >= self.cfg.shed_budget.max(1)
+            {
+                HealthState::Degraded
+            } else {
+                HealthState::Healthy
+            };
+            changed = next != rh.state;
+            if changed && next == HealthState::Quarantined {
+                // the breaker opens: the engine is suspect until the
+                // supervisor rebuilds it
+                rh.healed = false;
+                rh.cooldown_until = None;
+            }
+            rh.state = next;
+        }
+        let action = match rh.state {
+            HealthState::Quarantined if !rh.healed => HealthAction::Rebuild,
+            HealthState::Quarantined => match rh.cooldown_until {
+                Some(t) if now >= t => HealthAction::Probe,
+                _ => HealthAction::None,
+            },
+            _ => HealthAction::None,
+        };
+        self.publish(id, rh.state);
+        TickOutcome { state: rh.state, changed, action }
+    }
+
+    /// The supervisor rebuilt the quarantined replica's engine: arm the
+    /// half-open cooldown and forget the dead engine's counters (the
+    /// fresh engine restarts them from zero, and the caller resets its
+    /// own hard-error count to match).
+    pub fn healed(&self, id: usize, now: Instant) {
+        let mut rh = self.lock(id);
+        rh.healed = true;
+        rh.cooldown_until = Some(now + Duration::from_millis(self.cfg.cooldown_ms));
+        rh.prev = HealthSample::default();
+        rh.window.clear();
+    }
+
+    /// Verdict of the half-open canary probe. Success closes the
+    /// breaker (replica back to `Healthy`, routable immediately);
+    /// failure re-opens it — the engine is suspect again, so the next
+    /// tick rebuilds before another cooldown+probe round. Returns
+    /// `true` when the replica was restored.
+    pub fn probe_result(&self, id: usize, ok: bool, now: Instant) -> bool {
+        let mut rh = self.lock(id);
+        if rh.state != HealthState::Quarantined {
+            return false;
+        }
+        if ok {
+            rh.state = HealthState::Healthy;
+            rh.window.clear();
+            rh.cooldown_until = None;
+            self.publish(id, rh.state);
+            true
+        } else {
+            rh.healed = false;
+            rh.cooldown_until = Some(now + Duration::from_millis(self.cfg.cooldown_ms));
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            enabled: true,
+            window_ms: 1_000,
+            fault_budget: 4,
+            shed_budget: 100,
+            cooldown_ms: 250,
+            probe_frames: 16,
+        }
+    }
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn healthy_replica_stays_healthy_under_clean_samples() {
+        let t = HealthTracker::new(&cfg(), 2);
+        let t0 = Instant::now();
+        for k in 0..5 {
+            let out = t.observe(0, t0 + ms(100 * k), HealthSample::default());
+            assert_eq!(out.state, HealthState::Healthy);
+            assert!(!out.changed);
+            assert_eq!(out.action, HealthAction::None);
+        }
+        assert!(t.is_routable(0));
+        assert!(t.is_routable(1));
+    }
+
+    #[test]
+    fn fault_budget_quarantines_and_requests_rebuild() {
+        let t = HealthTracker::new(&cfg(), 1);
+        let t0 = Instant::now();
+        t.observe(0, t0, HealthSample::default());
+        // half the budget: degraded, still routable
+        let out =
+            t.observe(0, t0 + ms(100), HealthSample { timeouts: 2, ..Default::default() });
+        assert_eq!(out.state, HealthState::Degraded);
+        assert!(out.changed);
+        assert!(t.is_routable(0));
+        // budget blown (2 more timeouts + 1 panic + 1 hard error = 6 ≥ 4)
+        let out = t.observe(
+            0,
+            t0 + ms(200),
+            HealthSample { timeouts: 4, worker_panics: 1, hard_errors: 1, sheds: 3 },
+        );
+        assert_eq!(out.state, HealthState::Quarantined);
+        assert!(out.changed);
+        assert_eq!(out.action, HealthAction::Rebuild);
+        assert!(!t.is_routable(0));
+        // still quarantined, rebuild still owed, no double "changed"
+        let out = t.observe(
+            0,
+            t0 + ms(300),
+            HealthSample { timeouts: 4, worker_panics: 1, hard_errors: 1, sheds: 3 },
+        );
+        assert!(!out.changed);
+        assert_eq!(out.action, HealthAction::Rebuild);
+    }
+
+    #[test]
+    fn sheds_alone_degrade_but_never_quarantine() {
+        let t = HealthTracker::new(&cfg(), 1);
+        let t0 = Instant::now();
+        t.observe(0, t0, HealthSample::default());
+        let out = t.observe(
+            0,
+            t0 + ms(100),
+            HealthSample { sheds: 1_000_000, ..Default::default() },
+        );
+        assert_eq!(out.state, HealthState::Degraded);
+        assert!(t.is_routable(0), "a saturated-but-correct replica keeps routing");
+        let out = t.observe(
+            0,
+            t0 + ms(200),
+            HealthSample { sheds: 2_000_000, ..Default::default() },
+        );
+        assert_eq!(out.state, HealthState::Degraded);
+        assert_ne!(out.action, HealthAction::Rebuild);
+    }
+
+    #[test]
+    fn window_expiry_recovers_a_degraded_replica() {
+        let t = HealthTracker::new(&cfg(), 1);
+        let t0 = Instant::now();
+        t.observe(0, t0, HealthSample::default());
+        let s = HealthSample { timeouts: 2, ..Default::default() };
+        assert_eq!(t.observe(0, t0 + ms(100), s).state, HealthState::Degraded);
+        // same cumulative counters, 1.2 s later: the burst has aged out
+        let out = t.observe(0, t0 + ms(1_300), s);
+        assert_eq!(out.state, HealthState::Healthy);
+        assert!(out.changed);
+    }
+
+    #[test]
+    fn quarantine_heal_cooldown_probe_restore_cycle() {
+        let t = HealthTracker::new(&cfg(), 1);
+        let t0 = Instant::now();
+        t.observe(0, t0, HealthSample::default());
+        let bad = HealthSample { timeouts: 10, ..Default::default() };
+        let out = t.observe(0, t0 + ms(100), bad);
+        assert_eq!(out.action, HealthAction::Rebuild);
+        // supervisor rebuilds; the fresh engine's counters are zero —
+        // the zeroed next sample must not underflow or re-trip
+        t.healed(0, t0 + ms(110));
+        let out = t.observe(0, t0 + ms(120), HealthSample::default());
+        assert_eq!(out.state, HealthState::Quarantined);
+        assert_eq!(out.action, HealthAction::None, "still cooling down");
+        // cooldown (250 ms) elapsed → half-open probe
+        let out = t.observe(0, t0 + ms(400), HealthSample::default());
+        assert_eq!(out.action, HealthAction::Probe);
+        assert!(t.probe_result(0, true, t0 + ms(410)));
+        assert_eq!(t.state(0), HealthState::Healthy);
+        assert!(t.is_routable(0));
+        // restored replica re-quarantines on a fresh budget blow
+        let out =
+            t.observe(0, t0 + ms(500), HealthSample { timeouts: 10, ..Default::default() });
+        assert_eq!(out.state, HealthState::Quarantined);
+        assert!(out.changed);
+    }
+
+    #[test]
+    fn failed_probe_reopens_the_breaker_and_rebuilds_again() {
+        let t = HealthTracker::new(&cfg(), 1);
+        let t0 = Instant::now();
+        t.observe(0, t0, HealthSample::default());
+        t.observe(0, t0 + ms(100), HealthSample { timeouts: 10, ..Default::default() });
+        t.healed(0, t0 + ms(110));
+        let out = t.observe(0, t0 + ms(400), HealthSample::default());
+        assert_eq!(out.action, HealthAction::Probe);
+        assert!(!t.probe_result(0, false, t0 + ms(410)));
+        assert!(!t.is_routable(0));
+        // the probe failed on the *rebuilt* engine: suspect again, so
+        // the supervisor owes another rebuild before the next probe
+        let out = t.observe(0, t0 + ms(420), HealthSample::default());
+        assert_eq!(out.action, HealthAction::Rebuild);
+    }
+
+    #[test]
+    fn disabled_tracker_is_inert() {
+        let t = HealthTracker::new(&HealthConfig { enabled: false, ..cfg() }, 1);
+        let t0 = Instant::now();
+        let out = t.observe(0, t0, HealthSample { timeouts: 1_000, ..Default::default() });
+        assert_eq!(out.state, HealthState::Healthy);
+        assert_eq!(out.action, HealthAction::None);
+        assert!(t.is_routable(0));
+    }
+}

@@ -23,13 +23,26 @@
 //!   f32/f64 today, the accel backend when that serving path lands —
 //!   let heterogeneous bundles serve side by side for live A/B of
 //!   extractor variants;
+//! * **self-healing supervision** ([`health`]) — per-replica error
+//!   budgets over a sliding window drive a `Healthy → Degraded →
+//!   Quarantined` state machine with a circuit-breaker half-open
+//!   probe; [`Dispatcher::tick`] excludes quarantined replicas from
+//!   routing, rebuilds their engines from the current bundle, and
+//!   restores them behind a canary request;
 //! * [`ClusterMetrics`] — cluster-level latency histograms and routing
 //!   counters over a per-replica [`crate::serve::EngineMetrics`]
 //!   breakdown;
 //! * [`bench`] — the saturation load harness behind `cluster-bench`
-//!   and the `BENCH_5.json` 1-vs-N scaling report.
+//!   and the `BENCH_5.json` 1-vs-N scaling report;
+//! * [`chaos`] — the deterministic fault-schedule drill behind
+//!   `chaos-bench` and the `BENCH_9.json` incident report: scripted
+//!   worker panics, stalls, and WAL faults at exact request counts,
+//!   with time-to-quarantine / time-to-recover measured live.
 
 pub mod bench;
+pub mod chaos;
 mod dispatcher;
+pub mod health;
 
 pub use dispatcher::{ClusterMetrics, Dispatcher, ReplicaMetrics};
+pub use health::{HealthSample, HealthState, HealthTracker};

@@ -281,6 +281,13 @@ impl Engine {
         self.batcher.set_stalled(stalled);
     }
 
+    /// Fault hook: panic this engine's next `n` batch dispatches (the
+    /// chaos drill's deterministic worker-failure injection — each one
+    /// surfaces to the waiting callers as [`ServeError::WorkerFailed`]).
+    pub(crate) fn panic_next_batches(&self, n: u64) {
+        self.batcher.panic_next_batches(n);
+    }
+
     /// Extraction against an explicit snapshot — the shared inner path.
     /// Deadline-bounded end to end: admission sheds past the submit
     /// deadline, and a stalled worker surfaces as a typed timeout

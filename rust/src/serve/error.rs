@@ -6,8 +6,13 @@
 //! exactly that: it retries [`ServeError::Overloaded`] and
 //! [`ServeError::ShuttingDown`] on another replica (the shed-failover
 //! path), treats [`ServeError::Timeout`] as a lost request (the
-//! deadline is already spent — retrying would double it), and
-//! propagates [`ServeError::WorkerFailed`] for paging. The variants
+//! deadline is already spent — retrying would double it), and fails
+//! *stateless* requests (extract/enroll/verify) over on
+//! [`ServeError::WorkerFailed`] too — a panicked batch on one replica
+//! is no reason to fail the caller while healthy replicas sit idle,
+//! and the health supervisor quarantines the panicking replica off the
+//! routing set. Session calls never retry `WorkerFailed`: partial
+//! stats are replica-pinned. The variants
 //! ride inside `anyhow::Error` (every engine entry point keeps its
 //! `Result` signature) and stay reachable through
 //! `Error::downcast_ref`, even under added context.
@@ -115,6 +120,19 @@ impl ServeError {
     pub fn is_retriable(&self) -> bool {
         matches!(self, Self::Overloaded { .. } | Self::ShuttingDown)
     }
+
+    /// The failover set for *stateless* requests (extract, enroll,
+    /// verify): everything in [`Self::is_retriable`] plus
+    /// [`Self::WorkerFailed`]. A worker that dropped the response
+    /// channel did so before any side effect — an enrollment's
+    /// registry write happens only after extraction succeeds — so
+    /// replaying the request on another replica cannot double-apply
+    /// anything. Session operations must keep using
+    /// [`Self::is_retriable`]: their partial stats live on one
+    /// replica's pinned model and cannot move.
+    pub fn is_retriable_stateless(&self) -> bool {
+        self.is_retriable() || matches!(self, Self::WorkerFailed)
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +156,12 @@ mod tests {
         assert!(ServeError::ShuttingDown.is_retriable());
         assert!(!to.is_retriable());
         assert!(!ServeError::WorkerFailed.is_retriable());
+        // stateless requests widen the set by exactly WorkerFailed:
+        // nothing was applied before the drop, so replay is safe
+        assert!(shed.is_retriable_stateless());
+        assert!(ServeError::ShuttingDown.is_retriable_stateless());
+        assert!(ServeError::WorkerFailed.is_retriable_stateless());
+        assert!(!to.is_retriable_stateless(), "a spent deadline stays spent");
     }
 
     #[test]
@@ -157,6 +181,10 @@ mod tests {
         ] {
             assert!(!e.is_rejection(), "{e} must propagate, not be counted as load");
             assert!(!e.is_retriable(), "{e} must not retry onto a different bundle");
+            assert!(
+                !e.is_retriable_stateless(),
+                "{e}: the stateless set must not leak session variants"
+            );
             assert!(!e.to_string().is_empty());
         }
     }

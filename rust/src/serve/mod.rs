@@ -25,9 +25,13 @@
 //!   pluggable [`registry::RegistryStorage`] backend trait with a
 //!   deterministic fault injector for crash drills;
 //! * [`cluster`] — N engine replicas behind one [`cluster::Dispatcher`]
-//!   sharing a single registry: load-aware routing, shed failover, and
-//!   rolling hot swaps (the multi-engine layer the single engine's
-//!   typed rejections were designed for);
+//!   sharing a single registry: load-aware routing, shed failover,
+//!   rolling hot swaps, and self-healing supervision
+//!   ([`cluster::health`]): per-replica error budgets quarantine a
+//!   failing replica off the routing set, rebuild its engine, and
+//!   restore it behind a circuit-breaker canary probe — while a
+//!   WAL-poisoned registry degrades to read-only (verifies keep
+//!   serving, enrolls fail typed) until repaired;
 //! * [`session`] — streaming verification sessions: a [`StatAccum`]
 //!   grown chunk by chunk against a model snapshot pinned at open,
 //!   scored at any instant from partial stats (the same batched E-step
@@ -52,7 +56,7 @@ pub mod registry;
 pub mod session;
 
 pub use bundle::{ModelBundle, ServeModel, StatAccum};
-pub use cluster::{ClusterMetrics, Dispatcher, ReplicaMetrics};
+pub use cluster::{ClusterMetrics, Dispatcher, HealthState, ReplicaMetrics};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
 pub use error::ServeError;
 pub use session::{CloseReason, FeedOutcome, SessionManager};

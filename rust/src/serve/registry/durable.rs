@@ -382,6 +382,22 @@ impl DurableRegistry {
     pub fn compact(&self) -> Result<()> {
         self.inner.force_compact()
     }
+
+    /// End degraded read-only mode after a WAL poisoning, without
+    /// tearing the registry (or the engines holding its handle) down:
+    /// rebuild durable storage from the intact in-memory profiles —
+    /// snapshot every shard, truncate the WAL, clear the poison flag.
+    /// `Ok` when the registry is healthy again (no-op if it never
+    /// degraded); `Err` when storage is still failing, in which case
+    /// the registry stays degraded (verifies serve, mutations fail
+    /// typed [`RegistryStoreError::WalPoisoned`]) and the call is safe
+    /// to retry. Nothing enrolled before the poisoning — and nothing
+    /// *acked* during it, since degraded mode acks no mutation — can
+    /// be lost: the snapshot is cut from the same in-memory state that
+    /// served reads throughout.
+    pub fn reopen(&self) -> Result<()> {
+        self.inner.repair()
+    }
 }
 
 impl std::ops::Deref for DurableRegistry {
@@ -614,6 +630,85 @@ mod tests {
         reg.enroll("a", &[2.0], FP).unwrap();
         drop(reg);
         assert_eq!(open_mem(&store, &o).unwrap().profile("a").unwrap().sum, vec![2.0]);
+    }
+
+    /// Satellite acceptance: degraded read-only mode. A failed append
+    /// whose rollback truncate *also* fails poisons the WAL; from then
+    /// on mutations fail fast with typed `WalPoisoned` while reads keep
+    /// serving the intact in-memory profiles. [`DurableRegistry::reopen`]
+    /// rebuilds storage from memory and clears the poison without
+    /// tearing the registry down — and the post-recovery audit shows
+    /// zero acked-but-lost enrollments across a real restart.
+    #[test]
+    fn poisoned_wal_degrades_to_read_only_and_reopen_recovers() {
+        let store = MemStorage::new();
+        let o = opts(0);
+        // ops at open: read_snapshot, read_wal, append header, sync.
+        // Enrollment k is ops 4+2k (append) and 5+2k (sync); a failed
+        // append's rollback truncate is the injector's next op.
+        let injected = FaultInjector::new(Box::new(store.clone()))
+            .fail_op(8, Fault::Enospc) // enrollment 2's append
+            .fail_op(9, Fault::Enospc); // ...and its rollback truncate
+        let reg = DurableRegistry::with_storage(Box::new(injected), &o).unwrap();
+        reg.enroll("alice", &[1.0, 2.0], FP).unwrap();
+        reg.enroll("bob", &[3.0, 4.0], FP).unwrap();
+        let acked = 2u64;
+        assert!(!reg.is_poisoned());
+
+        // the append fails AND the rollback fails: garbage may sit at
+        // the WAL tail, so the path poisons itself
+        let err = reg.enroll("carol", &[5.0, 6.0], FP).unwrap_err();
+        assert!(err.to_string().contains("No space left"), "{err}");
+        assert!(reg.is_poisoned(), "a failed rollback must poison the WAL");
+
+        // degraded mode: every mutation fails fast and typed...
+        for attempt in 0..2 {
+            let err = reg.enroll("dave", &[7.0], FP).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<RegistryStoreError>(),
+                    Some(RegistryStoreError::WalPoisoned)
+                ),
+                "attempt {attempt}: {err}"
+            );
+        }
+        let err = reg.remove("alice").unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<RegistryStoreError>(),
+                Some(RegistryStoreError::WalPoisoned)
+            ),
+            "{err}"
+        );
+        // ...while reads keep serving the intact in-memory state
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.profile("alice").unwrap().sum, vec![1.0, 2.0]);
+        assert_eq!(reg.profile("bob").unwrap().sum, vec![3.0, 4.0]);
+        assert!(reg.profile("carol").is_none(), "the failed enrollment left no trace");
+        assert!(reg.profile("dave").is_none(), "degraded-mode enrolls left no trace");
+
+        // reopen: snapshot the in-memory profiles, truncate the WAL,
+        // clear the poison — mutations flow again
+        reg.reopen().unwrap();
+        assert!(!reg.is_poisoned());
+        assert_eq!(reg.durability_metrics().compactions, 1);
+        reg.enroll("carol", &[5.0, 6.0], FP).unwrap();
+        assert_eq!(reg.total_enrollments(), acked + 1);
+        // reopen on a healthy registry is a no-op Ok
+        reg.reopen().unwrap();
+
+        // audit across a real restart: every acked enrollment (before
+        // the incident and after recovery) is durable; nothing acked
+        // during degraded mode because nothing was acked at all
+        drop(reg);
+        let back = open_mem(&store, &o).unwrap();
+        assert_eq!(back.speaker_ids(), vec!["alice", "bob", "carol"]);
+        assert_eq!(
+            back.total_enrollments(),
+            acked + 1,
+            "zero acked-but-lost enrollments after the poison/recover cycle"
+        );
+        assert_eq!(back.recovery().replayed, 1, "only carol rode the rebuilt WAL");
     }
 
     #[test]

@@ -327,6 +327,36 @@ impl Registry {
         }
     }
 
+    /// True while the WAL is poisoned — the degraded read-only mode: a
+    /// mutation's append (or its rollback) failed, so further mutations
+    /// are refused with typed [`RegistryStoreError::WalPoisoned`]
+    /// while reads (verify, profile lookups) keep serving from the
+    /// intact in-memory state. Always false on a volatile registry.
+    pub fn is_poisoned(&self) -> bool {
+        match &self.durability {
+            Some(d) => d.lock_state().poisoned,
+            None => false,
+        }
+    }
+
+    /// Attempt recovery from the poisoned state by rebuilding durable
+    /// storage from the intact in-memory profiles: snapshot every
+    /// shard, truncate the WAL, clear the poison flag. No-op `Ok` when
+    /// the registry is not poisoned; `Err` (still poisoned, still
+    /// read-only-degraded, safe to retry) when storage keeps failing.
+    /// This is what [`DurableRegistry::reopen`] and the cluster
+    /// supervisor tick call.
+    pub fn repair(&self) -> Result<()> {
+        let Some(d) = &self.durability else {
+            return Ok(());
+        };
+        let mut st = d.lock_state();
+        if !st.poisoned {
+            return Ok(());
+        }
+        self.compact_locked(d, &mut st)
+    }
+
     /// Every profile, sorted by id (deterministic files regardless of
     /// shard count or enrollment order). Shard-at-a-time: concurrent
     /// mutations on *other* shards can land mid-collection — callers
