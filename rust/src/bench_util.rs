@@ -114,6 +114,68 @@ pub fn write_bench_json(
         .map_err(|e| anyhow::anyhow!("write {}: {e}", path.as_ref().display()))
 }
 
+/// The p50/p95/p99 of one latency series in milliseconds — the shared
+/// shape between a live [`crate::metrics::LatencySummary`] and a series
+/// parsed back out of an exported snapshot, so drift can be computed
+/// over either.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyTriple {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LatencyTriple {
+    pub fn from_summary(s: &crate::metrics::LatencySummary) -> Self {
+        Self { p50_ms: s.p50_s * 1e3, p95_ms: s.p95_s * 1e3, p99_ms: s.p99_s * 1e3 }
+    }
+}
+
+fn drift_pct(old: f64, new: f64) -> f64 {
+    if old > 0.0 {
+        (new - old) / old * 100.0
+    } else {
+        0.0
+    }
+}
+
+/// Percentile drift between two latency series as a JSON fragment:
+/// `{"p50_ms": {"old": .., "new": .., "delta_pct": ..}, ...}`. The one
+/// comparison shape shared by `stats --diff` and the replayer's
+/// `BENCH_10.json` per-stage drift section — ad-hoc per-bench deltas
+/// route through here.
+pub fn latency_drift_json(old: &LatencyTriple, new: &LatencyTriple) -> String {
+    let field = |name: &str, o: f64, n: f64| {
+        format!(
+            "\"{name}\": {{\"old\": {o:.4}, \"new\": {n:.4}, \"delta_pct\": {:.2}}}",
+            drift_pct(o, n)
+        )
+    };
+    format!(
+        "{{{}, {}, {}}}",
+        field("p50_ms", old.p50_ms, new.p50_ms),
+        field("p95_ms", old.p95_ms, new.p95_ms),
+        field("p99_ms", old.p99_ms, new.p99_ms),
+    )
+}
+
+/// One aligned human-readable drift row (the `stats --diff` rendering).
+pub fn latency_drift_row(name: &str, old: &LatencyTriple, new: &LatencyTriple) -> String {
+    format!(
+        "{name:<52} p50 {:>9.3} → {:>9.3} ms ({:+7.2}%)  p95 {:>9.3} → {:>9.3} ms ({:+7.2}%)  \
+         p99 {:>9.3} → {:>9.3} ms ({:+7.2}%)",
+        old.p50_ms,
+        new.p50_ms,
+        drift_pct(old.p50_ms, new.p50_ms),
+        old.p95_ms,
+        new.p95_ms,
+        drift_pct(old.p95_ms, new.p95_ms),
+        old.p99_ms,
+        new.p99_ms,
+        drift_pct(old.p99_ms, new.p99_ms),
+    )
+}
+
 /// One f32-vs-f64 alignment throughput comparison — both paths timed on
 /// the same UBM and the same frame block within one harness run, so
 /// the speedup is apples-to-apples. Shared by the `speed_report`
@@ -246,6 +308,22 @@ mod tests {
         let p = dir.join("BENCH_4.json");
         write_bench4_json(&p, &b).unwrap();
         assert_eq!(std::fs::read_to_string(&p).unwrap(), json);
+    }
+
+    #[test]
+    fn latency_drift_shapes_and_percentages() {
+        let old = LatencyTriple { p50_ms: 2.0, p95_ms: 10.0, p99_ms: 20.0 };
+        let new = LatencyTriple { p50_ms: 3.0, p95_ms: 5.0, p99_ms: 20.0 };
+        let json = latency_drift_json(&old, &new);
+        assert!(json.contains("\"p50_ms\": {\"old\": 2.0000, \"new\": 3.0000, \"delta_pct\": 50.00}"), "{json}");
+        assert!(json.contains("\"p95_ms\": {\"old\": 10.0000, \"new\": 5.0000, \"delta_pct\": -50.00}"), "{json}");
+        assert!(json.contains("\"delta_pct\": 0.00}"), "{json}");
+        // a zero baseline must not divide by zero
+        let z = LatencyTriple { p50_ms: 0.0, p95_ms: 0.0, p99_ms: 0.0 };
+        assert!(latency_drift_json(&z, &new).contains("\"delta_pct\": 0.00"));
+        let row = latency_drift_row("serve_verify_latency_seconds", &old, &new);
+        assert!(row.contains("serve_verify_latency_seconds"), "{row}");
+        assert!(row.contains("+50.00%"), "{row}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "verify" => commands::verify(&args),
         "serve-bench" => commands::serve_bench(&args),
         "cluster-bench" => commands::cluster_bench(&args),
+        "replay" => commands::replay(&args),
         "chaos-bench" => commands::chaos_bench(&args),
         "registry-recover" => commands::registry_recover(&args),
         "registry-bench" => commands::registry_bench(&args),
@@ -83,13 +84,25 @@ COMMANDS:
              with early-exit thresholds vs a one-shot baseline and
              writes BENCH_8.json instead (--chunk-frames,
              --accept-score, --reject-score — unset thresholds are
-             calibrated from oracle probe trials)
+             calibrated from oracle probe trials); --capture-out PATH
+             records the load into a flight-recorder corpus (implies
+             --batched-only; sampling via the [capture] config section)
   cluster-bench  1-vs-N replica scaling under a saturating load;
              writes BENCH_5.json + an observability snapshot
              (--replicas, --route, --max-failovers,
              --swap-mid-run, --stall-replica K, --live-enroll-every,
              --requests, --concurrency, --speakers, --enroll-utts,
-             --work | tiny in-process bundle, --out, --obs-out)
+             --work | tiny in-process bundle, --out, --obs-out);
+             --capture-out PATH records the N-replica run's routed
+             requests (failover hops included) into a capture corpus
+  replay     re-issue a captured corpus against a fresh engine and
+             verify it reproduces what production recorded: same
+             bundle → every verify score within --tolerance (1e-10)
+             and every outcome class equal, else nonzero exit; writes
+             BENCH_10.json with capture-on/off overhead + per-stage
+             latency drift (--capture PATH, --work | same-seed tiny
+             bundle, --seed, --max-speed, --tolerance, --out,
+             --obs-out)
   chaos-bench  deterministic self-healing drill: scripted replica
              stall + WAL poisoning mid-load; the faulty replica must
              quarantine, rebuild, and return to serving, the registry
@@ -111,7 +124,9 @@ COMMANDS:
              latency histograms, slow traces) written by the bench
              commands' --obs-out; --check validates the schema and
              the canonical metric set, exiting nonzero on drift
-             (--snapshot PATH, default OBS_SNAPSHOT.json)
+             (--snapshot PATH, default OBS_SNAPSHOT.json);
+             --diff OLD.json compares OLD against --snapshot —
+             counters as deltas, histograms as p50/p95/p99 drift
   smoke      compile+run an HLO artifact with zero inputs (--hlo PATH)
 
 Flags not listed above: --artifacts DIR (default ./artifacts),

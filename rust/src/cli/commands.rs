@@ -6,10 +6,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::bench_util::{latency_drift_row, write_bench_json, LatencyTriple};
 use crate::config::{Config, WalSync};
 use crate::frontend::synth::TrafficGen;
 use crate::metrics::{LatencySummary, Stopwatch};
 use crate::obs::{Json, ObsRegistry, RenderFormat};
+use crate::serve::capture::{
+    replay_corpus, run_capture_overhead, CaptureLog, CaptureSummary, Recorder, RecorderOptions,
+    ReplayOptions,
+};
 use crate::serve::bench::{
     run_batched_vs_unbatched, run_streaming_vs_oneshot, run_verify_load, tiny_serve_config,
     train_tiny_bundle, write_bench2_json, write_bench8_json, ServeBenchOpts, ServeBenchReport,
@@ -185,6 +190,31 @@ fn write_obs_snapshot(path: &str, obs: &ObsRegistry) -> Result<()> {
     Ok(())
 }
 
+/// Report what a closed capture session amounted to. A write failure
+/// fails the run — a silently truncated corpus must not gate CI — and
+/// drops are printed, never hidden (they mean the corpus under-samples
+/// the traffic, which a `policy = "all"` replay needs to know).
+fn finish_capture(
+    path: &str,
+    policy: crate::config::SamplePolicy,
+    summary: &CaptureSummary,
+) -> Result<()> {
+    if let Some(err) = &summary.write_error {
+        anyhow::bail!("capture {path}: write failed after {} records: {err}", summary.records);
+    }
+    println!(
+        "capture: {} records ({} bytes) -> {path} [policy {policy}]{}",
+        summary.records,
+        summary.bytes,
+        if summary.dropped > 0 {
+            format!("  dropped {} on queue overflow", summary.dropped)
+        } else {
+            String::new()
+        },
+    );
+    Ok(())
+}
+
 /// `verify` — enroll/verify synthetic traffic against a trained bundle
 /// through the serving engine (the online counterpart of `eval`).
 /// `--registry DIR` (or `[registry] path` in the config) puts the
@@ -289,13 +319,28 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let out = args.get_or("out", if streaming { "BENCH_8.json" } else { "BENCH_2.json" });
     let bench4_out = args.get_or("bench4-out", "BENCH_4.json");
     let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
-    let batched_only = args.switch("batched-only");
+    let mut batched_only = args.switch("batched-only");
+    let capture_out = args.get("capture-out");
     if let Some(p) = args.get("precision") {
         let p = crate::gmm::AlignPrecision::parse(&p)?;
         cfg.align.precision = p;
         cfg.serve.precision = p;
     }
     args.finish()?;
+    if capture_out.is_some() {
+        anyhow::ensure!(
+            cfg.capture.enabled,
+            "--capture-out given but [capture] enabled = false — refusing to write an \
+             empty corpus"
+        );
+        anyhow::ensure!(!streaming, "--capture-out records one-shot requests, not sessions");
+        if !batched_only {
+            // a replay corpus must hold each request exactly once — the
+            // batched-vs-unbatched A/B would record the load twice
+            println!("serve-bench: --capture-out implies --batched-only");
+            batched_only = true;
+        }
+    }
 
     let sw = Stopwatch::start();
     let bundle = match &work {
@@ -368,13 +413,27 @@ pub fn serve_bench(args: &Args) -> Result<()> {
     let mut reports: Vec<(&str, ServeBenchReport)> = Vec::new();
     let obs = if batched_only {
         let obs = Arc::new(ObsRegistry::new(&cfg.obs));
+        let bundle_fp = bundle.fingerprint();
         let engine = Engine::with_registry_obs(
             bundle,
             &cfg.serve,
             Arc::new(Registry::new(cfg.serve.registry_shards)),
             Arc::clone(&obs),
         )?;
+        let recorder = match &capture_out {
+            Some(path) => {
+                let log = CaptureLog::create_at_path(path, bundle_fp)?;
+                let rec = Recorder::new(log, &RecorderOptions::from_config(&cfg), &obs);
+                engine.set_recorder(Some(Arc::clone(&rec)));
+                Some(rec)
+            }
+            None => None,
+        };
         let report = run_verify_load(&engine, &traffic, &opts)?;
+        if let (Some(rec), Some(path)) = (&recorder, &capture_out) {
+            engine.set_recorder(None);
+            finish_capture(path, cfg.capture.policy, &rec.close())?;
+        }
         print_load_report("serve-bench[batched]", &report);
         reports.push(("batched", report));
         obs
@@ -470,6 +529,7 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
         .transpose()?;
     let out = args.get_or("out", "BENCH_5.json");
     let obs_out = args.get_or("obs-out", "OBS_SNAPSHOT.json");
+    let capture_out = args.get("capture-out");
     args.finish()?;
     // fail the flag combination now — not after the multi-minute
     // baseline run has already been paid for
@@ -479,6 +539,10 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
             "--stall-replica {id} out of range (cluster run has {replicas} replicas)"
         );
     }
+    anyhow::ensure!(
+        capture_out.is_none() || cfg.capture.enabled,
+        "--capture-out given but [capture] enabled = false — refusing to write an empty corpus"
+    );
 
     if explicit_cfg.is_none() {
         cfg.serve = saturation_serve_config(&cfg.serve);
@@ -541,8 +605,23 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
         Arc::new(Registry::new(cfg.serve.registry_shards)),
         Arc::new(ObsRegistry::new(&cfg.obs)),
     )?;
+    // capture rides the N-replica run only (the scaling headline): one
+    // corpus, each routed request recorded once with its failover hops
+    let recorder = match &capture_out {
+        Some(path) => {
+            let log = CaptureLog::create_at_path(path, bundle.fingerprint())?;
+            let rec = Recorder::new(log, &RecorderOptions::from_config(&cfg), dn.obs());
+            dn.set_recorder(Some(Arc::clone(&rec)));
+            Some(rec)
+        }
+        None => None,
+    };
     let opts = ClusterBenchOpts { stall_replica, ..base_opts };
     let rn = run_cluster_load(&dn, &traffic, &opts, swap_mid_run.then_some(&bundle))?;
+    if let (Some(rec), Some(path)) = (&recorder, &capture_out) {
+        dn.set_recorder(None);
+        finish_capture(path, cfg.capture.policy, &rec.close())?;
+    }
     print_cluster_report(&format!("cluster-bench[{replicas} replicas]"), &rn);
     print_stage_rows(&rn.stages);
     if r1.throughput_rps > 0.0 {
@@ -564,6 +643,143 @@ pub fn cluster_bench(args: &Args) -> Result<()> {
     )?;
     println!("wrote {out}");
     write_obs_snapshot(&obs_out, dn.obs())?;
+    Ok(())
+}
+
+/// `replay` — re-issue a captured corpus (`--capture`, written by
+/// `serve-bench`/`cluster-bench` `--capture-out`) through a fresh
+/// engine and hold the answers to what production recorded. Against
+/// the same bundle (same `--work` dir, or the same-seed tiny
+/// in-process bundle) every recorded verify score must reproduce to
+/// `--tolerance` (default 1e-10) and every outcome class must match —
+/// any mismatch exits nonzero, which is what makes this a CI gate and
+/// not a smoke test. Under a *different* bundle only outcome classes
+/// are compared (scores from different total-variability spaces are
+/// incomparable). Also measures capture-on vs capture-off throughput
+/// on the same corpus and the per-stage captured-vs-replayed latency
+/// drift, and writes the whole comparison to `BENCH_10.json`.
+/// `--max-speed` drops the original inter-arrival spacing.
+pub fn replay(args: &Args) -> Result<()> {
+    let capture = args.require("capture")?;
+    let work = args.get("work");
+    let mut cfg = match (args.get("config"), &work) {
+        (Some(path), _) => Config::load(&path)?,
+        (None, Some(_)) => Config::default_scaled(),
+        (None, None) => tiny_serve_config(),
+    };
+    let seed = args.get_parse_or("seed", 42u64)?;
+    let max_speed = args.switch("max-speed");
+    let tolerance = args.get_parse_or("tolerance", 1e-10f64)?;
+    let out = args.get_or("out", "BENCH_10.json");
+    let obs_out = args.get("obs-out");
+    if let Some(p) = args.get("precision") {
+        let p = crate::gmm::AlignPrecision::parse(&p)?;
+        cfg.align.precision = p;
+        cfg.serve.precision = p;
+    }
+    args.finish()?;
+
+    let corpus = CaptureLog::load_path(&capture)?;
+    println!(
+        "replay: {} records from {capture} (bundle fingerprint {:016x}{})",
+        corpus.records.len(),
+        corpus.fingerprint,
+        if corpus.torn_tail { ", torn tail truncated" } else { "" },
+    );
+
+    let sw = Stopwatch::start();
+    let bundle = match &work {
+        Some(w) => ModelBundle::load_auto(w, &cfg)?,
+        None => {
+            // the same deterministic training serve-bench uses: the
+            // same seed reproduces the same bundle, fingerprint and all
+            println!("replay: no --work given — training the tiny in-process bundle (seed {seed})");
+            train_tiny_bundle(&cfg, seed)?
+        }
+    };
+    println!("bundle ready in {:.1}s", sw.elapsed_s());
+
+    // a fresh engine on a fresh obs registry: the corpus carries its
+    // own enrollments, and the stage histograms must measure only the
+    // replay
+    let obs = Arc::new(ObsRegistry::new(&cfg.obs));
+    let engine = Engine::with_registry_obs(
+        bundle,
+        &cfg.serve,
+        Arc::new(Registry::new(cfg.serve.registry_shards)),
+        Arc::clone(&obs),
+    )?;
+
+    let report = replay_corpus(&corpus, &engine, &ReplayOptions { max_speed, tolerance })?;
+    if !report.fingerprint_match {
+        println!(
+            "replay: serving bundle differs from the corpus's — outcome classes compared, \
+             scores not checked"
+        );
+    }
+    println!(
+        "replay: {}/{} re-issued in {:.2}s ({}) | {} scores checked, max delta {:.3e} | \
+         outcomes ok {} shed {} timeout {} failed {}",
+        report.replayed,
+        report.total,
+        report.wall_s,
+        if max_speed { "max speed" } else { "original inter-arrival timing" },
+        report.score_checked,
+        report.max_score_delta,
+        report.replayed_outcomes[0],
+        report.replayed_outcomes[1],
+        report.replayed_outcomes[2],
+        report.replayed_outcomes[3],
+    );
+    for d in &report.stage_drift {
+        println!(
+            "  {}",
+            latency_drift_row(
+                d.stage.as_str(),
+                &LatencyTriple::from_summary(&d.captured),
+                &LatencyTriple::from_summary(&d.replayed),
+            )
+        );
+    }
+
+    // after the verification pass (re-enrollment keeps profile means
+    // intact but would inflate the counts the pass above checked)
+    let overhead = run_capture_overhead(&corpus, &engine)?;
+    println!(
+        "-> capture overhead: {:.0} req/s off vs {:.0} on ({:+.2}%) | \
+         {} records captured, {} dropped",
+        overhead.off_rps(),
+        overhead.on_rps(),
+        overhead.overhead_pct,
+        overhead.captured_records,
+        overhead.capture_dropped,
+    );
+
+    write_bench_json(
+        &out,
+        10,
+        &[
+            ("replay", report.json_fragment()),
+            ("stage_drift", report.drift_json()),
+            ("capture_overhead", overhead.json_fragment()),
+        ],
+    )?;
+    println!("wrote {out}");
+    if let Some(path) = obs_out {
+        write_obs_snapshot(&path, &obs)?;
+    }
+    anyhow::ensure!(
+        report.mismatches() == 0,
+        "replay found {} mismatch(es) ({} score, {} outcome) — the serving path no longer \
+         reproduces the captured corpus",
+        report.mismatches(),
+        report.score_mismatches,
+        report.outcome_mismatches,
+    );
+    println!(
+        "replay OK: outcome classes match; {} scores reproduced within {tolerance:e}",
+        report.score_checked,
+    );
     Ok(())
 }
 
@@ -853,6 +1069,7 @@ pub fn registry_bench(args: &Args) -> Result<()> {
 pub fn stats(args: &Args) -> Result<()> {
     let path = args.get_or("snapshot", "OBS_SNAPSHOT.json");
     let check = args.switch("check");
+    let diff = args.get("diff");
     args.finish()?;
 
     let text = std::fs::read_to_string(&path)
@@ -870,6 +1087,74 @@ pub fn stats(args: &Args) -> Result<()> {
         .and_then(Json::as_obj)
         .ok_or_else(|| anyhow::anyhow!("snapshot {path}: missing `metrics` object"))?;
     let num = |m: &Json, key: &str| m.get(key).and_then(Json::as_num).unwrap_or(0.0);
+
+    // `--diff OLD.json` compares an older snapshot against `--snapshot`
+    // (the newer one): counters as deltas, histograms as p50/p95/p99
+    // drift through the same helper the replayer's BENCH_10.json uses.
+    if let Some(old_path) = diff {
+        let old_text = std::fs::read_to_string(&old_path)
+            .map_err(|e| anyhow::anyhow!("read snapshot {old_path}: {e}"))?;
+        let old_doc = crate::obs::parse_json(&old_text)
+            .map_err(|e| anyhow::anyhow!("snapshot {old_path}: {e:#}"))?;
+        let old_metrics = old_doc
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("snapshot {old_path}: missing `metrics` object"))?;
+        let triple = |m: &Json| LatencyTriple {
+            p50_ms: num(m, "p50_s") * 1e3,
+            p95_ms: num(m, "p95_s") * 1e3,
+            p99_ms: num(m, "p99_s") * 1e3,
+        };
+        println!("diff: {old_path} → {path}");
+        for (key, m) in metrics {
+            let old_m = old_metrics.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+            match m.get("type").and_then(Json::as_str).unwrap_or("?") {
+                "counter" => {
+                    let old_v = old_m.map_or(0.0, |o| num(o, "value"));
+                    let new_v = num(m, "value");
+                    if new_v != old_v || old_m.is_none() {
+                        println!(
+                            "  {key:<52} {old_v:>12.0} → {new_v:>12.0}  ({:+.0}){}",
+                            new_v - old_v,
+                            if old_m.is_none() { "  [new series]" } else { "" },
+                        );
+                    }
+                }
+                "histogram" => {
+                    let old_n = old_m.map_or(0.0, |o| num(o, "count"));
+                    if num(m, "count") > 0.0 || old_n > 0.0 {
+                        println!(
+                            "  {}",
+                            latency_drift_row(
+                                key,
+                                &old_m.map(triple).unwrap_or(LatencyTriple {
+                                    p50_ms: 0.0,
+                                    p95_ms: 0.0,
+                                    p99_ms: 0.0,
+                                }),
+                                &triple(m),
+                            )
+                        );
+                    }
+                }
+                "gauge" => {
+                    let old_v = old_m.map_or(0.0, |o| num(o, "mean"));
+                    let new_v = num(m, "mean");
+                    if new_v != old_v {
+                        println!("  {key:<52} mean {old_v:>8.2} → {new_v:>8.2}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (key, _) in old_metrics {
+            if !metrics.iter().any(|(k, _)| k == key) {
+                println!("  {key:<52} [series removed]");
+            }
+        }
+        return Ok(());
+    }
+
     println!("{path}: {} metric series", metrics.len());
     for (key, m) in metrics {
         match m.get("type").and_then(Json::as_str).unwrap_or("?") {

@@ -410,6 +410,92 @@ impl std::fmt::Display for RoutePolicy {
     }
 }
 
+/// Which finished requests the flight recorder samples into the
+/// capture log (`[capture] policy`, [`crate::serve::capture`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplePolicy {
+    /// Every request — the replayable-corpus setting: only a complete
+    /// capture can reproduce registry state (enrollment counts) on
+    /// replay.
+    All,
+    /// One in N (deterministic modulo over an admission counter).
+    Rate(u32),
+    /// Only requests at least as slow as the obs layer's
+    /// `trace_threshold_ms` — the same knob that feeds the slow-trace
+    /// ring feeds the corpus.
+    SlowOnly,
+    /// Only requests whose outcome is not `ok` (shed / timeout /
+    /// failed) — a black box that records incidents.
+    ErrorsOnly,
+}
+
+impl SamplePolicy {
+    /// Parse the config/CLI spelling: `"all"`, `"slow_only"`,
+    /// `"errors_only"`, or `"rate N"` / `"rate 1/N"` (one in N).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "all" => return Ok(Self::All),
+            "slow_only" => return Ok(Self::SlowOnly),
+            "errors_only" => return Ok(Self::ErrorsOnly),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("rate") {
+            let rest = rest.trim().trim_start_matches("1/");
+            if let Ok(n) = rest.parse::<u32>() {
+                if n >= 1 {
+                    return Ok(Self::Rate(n));
+                }
+            }
+        }
+        bail!(
+            "capture policy must be \"all\", \"slow_only\", \"errors_only\", \
+             or \"rate N\" (one in N, N >= 1), got `{s}`"
+        )
+    }
+
+    /// The config/CLI spelling (round-trips through [`Self::parse`]).
+    pub fn as_str(&self) -> String {
+        match self {
+            Self::All => "all".into(),
+            Self::Rate(n) => format!("rate 1/{n}"),
+            Self::SlowOnly => "slow_only".into(),
+            Self::ErrorsOnly => "errors_only".into(),
+        }
+    }
+}
+
+impl std::fmt::Display for SamplePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.as_str())
+    }
+}
+
+/// Flight-recorder parameters (`[capture]`,
+/// [`crate::serve::capture`]): the sampling policy and the bounds of
+/// the never-blocking background writer. The capture *destination* is
+/// per-run (`--capture-out`), not config; the `slow_only` cutoff rides
+/// `[obs] trace_threshold_ms` and the recorded deadline rides
+/// `[serve] request_timeout_ms`.
+#[derive(Debug, Clone)]
+pub struct CaptureConfig {
+    /// Master switch: `false` makes `--capture-out` a typed refusal
+    /// instead of a silently empty corpus.
+    pub enabled: bool,
+    /// Which finished requests enter the corpus.
+    pub policy: SamplePolicy,
+    /// Bounded channel depth between request threads and the capture
+    /// writer — overflow drops records (counted), never blocks.
+    pub queue: usize,
+    /// Fsync the capture log every this many records (and at close).
+    pub sync_every: u64,
+}
+
+impl Default for CaptureConfig {
+    fn default() -> Self {
+        Self { enabled: true, policy: SamplePolicy::All, queue: 1024, sync_every: 64 }
+    }
+}
+
 /// Per-replica deviations from the shared `[serve]` engine shape
 /// (`[cluster.replicaN]` subsections) — how heterogeneous bundles serve
 /// side by side: e.g. replica 0 at f64 for bit-stable scoring, replica
@@ -529,6 +615,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub registry: RegistryConfig,
     pub obs: ObsConfig,
+    pub capture: CaptureConfig,
 }
 
 impl Config {
@@ -602,6 +689,7 @@ impl Config {
                 compact_every: 10_000,
             },
             obs: ObsConfig::default(),
+            capture: CaptureConfig::default(),
         }
     }
 
@@ -744,6 +832,26 @@ impl Config {
             trace_threshold_ms: doc.get_f64("obs.trace_threshold_ms", d.obs.trace_threshold_ms)?,
             trace_ring: doc.get_usize("obs.trace_ring", d.obs.trace_ring)?,
         };
+        // `[capture]` flight-recorder knobs, same typo discipline
+        for key in doc.keys_with_prefix("capture.") {
+            let field = &key["capture.".len()..];
+            if !matches!(field, "enabled" | "policy" | "queue" | "sync_every") {
+                bail!(
+                    "config key `{key}`: unknown [capture] field `{field}` \
+                     (supported: enabled, policy, queue, sync_every)"
+                );
+            }
+        }
+        let capture = CaptureConfig {
+            enabled: doc.get_bool("capture.enabled", d.capture.enabled)?,
+            policy: SamplePolicy::parse(
+                &doc.get_str("capture.policy", &d.capture.policy.as_str())?,
+            )
+            .context("capture.policy")?,
+            queue: doc.get_usize("capture.queue", d.capture.queue)?.max(1),
+            sync_every: doc.get_usize("capture.sync_every", d.capture.sync_every as usize)?.max(1)
+                as u64,
+        };
         // `[session]` streaming knobs, same typo discipline
         for key in doc.keys_with_prefix("session.") {
             let field = &key["session.".len()..];
@@ -858,6 +966,7 @@ impl Config {
             },
             registry,
             obs,
+            capture,
         })
     }
 
@@ -1175,6 +1284,44 @@ mod tests {
         let err = Config::from_doc(&Doc::parse("[session]\nidle_secs = 30\n").unwrap())
             .unwrap_err();
         assert!(err.to_string().contains("unknown [session] field"), "{err:#}");
+    }
+
+    #[test]
+    fn capture_section_parses_and_rejects_typos() {
+        // defaults: enabled, full capture
+        let cfg = Config::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert!(cfg.capture.enabled);
+        assert_eq!(cfg.capture.policy, SamplePolicy::All);
+
+        let cfg = Config::from_doc(
+            &Doc::parse(
+                "[capture]\nenabled = true\npolicy = \"rate 8\"\nqueue = 64\nsync_every = 16\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.capture.policy, SamplePolicy::Rate(8));
+        assert_eq!(cfg.capture.queue, 64);
+        assert_eq!(cfg.capture.sync_every, 16);
+
+        // every policy spelling round-trips through as_str
+        for p in [
+            SamplePolicy::All,
+            SamplePolicy::Rate(3),
+            SamplePolicy::SlowOnly,
+            SamplePolicy::ErrorsOnly,
+        ] {
+            assert_eq!(SamplePolicy::parse(&p.as_str()).unwrap(), p);
+        }
+
+        let err = Config::from_doc(&Doc::parse("[capture]\npolicy = \"most\"\n").unwrap())
+            .unwrap_err();
+        // the parse error rides behind the `capture.policy` context, so
+        // check the full chain
+        assert!(format!("{err:#}").contains("capture policy must be"), "{err:#}");
+        let err = Config::from_doc(&Doc::parse("[capture]\nqueue_len = 9\n").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown [capture] field"), "{err:#}");
     }
 
     #[test]

@@ -51,6 +51,19 @@ pub const CANONICAL_CLUSTER_METRICS: &[&str] = &[
     "cluster_replica_health",
 ];
 
+/// Metric names a capture-enabled run registers on top of the engine
+/// canon. Same sentinel trick as the cluster canon: enforced only when
+/// the snapshot *is* a capture snapshot — detected by the presence of
+/// `capture_records_total` — so capture-less snapshots stay valid
+/// unchanged. (`replay_mismatches_total` is registered by the replayer
+/// and shape-validated like any other series, but not required here: a
+/// capture session and a replay session are different runs.)
+pub const CANONICAL_CAPTURE_METRICS: &[&str] = &[
+    "capture_records_total",
+    "capture_bytes_total",
+    "capture_dropped_total",
+];
+
 fn fmt_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
@@ -474,6 +487,13 @@ fn require_num(obj: &Json, key: &str, what: &str) -> Result<f64> {
 /// Validate an `ObsRegistry` JSON snapshot: schema version, every
 /// canonical metric name present (every per-stage series included),
 /// well-formed per-type fields, and a well-formed slow-trace list.
+///
+/// Metric-level problems accumulate: one failing run reports *every*
+/// missing canonical name and malformed series in a single pass, not
+/// just the first — chasing a rename sweep one `--check` cycle at a
+/// time was the motivating papercut. Structural problems (not JSON, no
+/// `metrics` object) still fail immediately; there is nothing left to
+/// accumulate over.
 pub fn validate_snapshot(text: &str) -> Result<()> {
     let doc = parse_json(text).context("snapshot is not valid JSON")?;
     let version = require_num(&doc, "schema_version", "snapshot")?;
@@ -483,53 +503,74 @@ pub fn validate_snapshot(text: &str) -> Result<()> {
         .and_then(Json::as_obj)
         .context("snapshot: missing `metrics` object")?;
 
-    for name in CANONICAL_METRICS {
+    let mut problems: Vec<String> = Vec::new();
+    let present = |name: &str| {
         let prefixed = format!("{name}{{");
-        ensure!(
-            metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed)),
-            "canonical metric `{name}` missing from snapshot"
-        );
+        metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed))
+    };
+    for name in CANONICAL_METRICS {
+        if !present(name) {
+            problems.push(format!("canonical metric `{name}` missing from snapshot"));
+        }
     }
     // a cluster snapshot — the dispatcher's routing counter is the
     // sentinel — must also carry the full cluster canon, including the
     // self-healing counters and the per-replica health gauge
-    if metrics.iter().any(|(k, _)| k == "cluster_routed_total") {
+    if present("cluster_routed_total") {
         for name in CANONICAL_CLUSTER_METRICS {
-            let prefixed = format!("{name}{{");
-            ensure!(
-                metrics.iter().any(|(k, _)| k == name || k.starts_with(&prefixed)),
-                "cluster canonical metric `{name}` missing from snapshot"
-            );
+            if !present(name) {
+                problems.push(format!(
+                    "cluster canonical metric `{name}` missing from snapshot"
+                ));
+            }
+        }
+    }
+    // same trick for capture: the record counter is the sentinel, so
+    // capture-less snapshots stay valid while a capture-enabled run
+    // must export its whole counter set
+    if present("capture_records_total") {
+        for name in CANONICAL_CAPTURE_METRICS {
+            if !present(name) {
+                problems.push(format!(
+                    "capture canonical metric `{name}` missing from snapshot"
+                ));
+            }
         }
     }
     for stage in Stage::ALL {
         let key = format!("{STAGE_METRIC}{{stage=\"{}\"}}", stage.as_str());
-        ensure!(
-            metrics.iter().any(|(k, _)| *k == key),
-            "stage series `{key}` missing from snapshot"
-        );
+        if !metrics.iter().any(|(k, _)| *k == key) {
+            problems.push(format!("stage series `{key}` missing from snapshot"));
+        }
     }
     for (key, m) in metrics {
-        let ty = m
-            .get("type")
-            .and_then(Json::as_str)
-            .with_context(|| format!("metric `{key}`: missing `type`"))?;
-        match ty {
-            "counter" => {
-                require_num(m, "value", key)?;
+        let fields: &[&str] = match m.get("type").and_then(Json::as_str) {
+            Some("counter") => &["value"],
+            Some("gauge") => &["max", "mean", "samples", "window_max", "window_mean"],
+            Some("histogram") => {
+                &["count", "invalid", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"]
             }
-            "gauge" => {
-                for f in ["max", "mean", "samples", "window_max", "window_mean"] {
-                    require_num(m, f, key)?;
-                }
+            Some(other) => {
+                problems.push(format!("metric `{key}`: unknown type `{other}`"));
+                continue;
             }
-            "histogram" => {
-                for f in ["count", "invalid", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"] {
-                    require_num(m, f, key)?;
-                }
+            None => {
+                problems.push(format!("metric `{key}`: missing `type`"));
+                continue;
             }
-            other => bail!("metric `{key}`: unknown type `{other}`"),
+        };
+        for f in fields {
+            if let Err(e) = require_num(m, f, key) {
+                problems.push(format!("{e:#}"));
+            }
         }
+    }
+    if !problems.is_empty() {
+        bail!(
+            "snapshot failed validation with {} problem(s):\n  - {}",
+            problems.len(),
+            problems.join("\n  - ")
+        );
     }
 
     let traces = doc
@@ -602,6 +643,58 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("duplicate object key"), "{err:#}");
+    }
+
+    /// Satellite: one failing `--check` reports every problem at once —
+    /// all missing canonical names and every malformed series — instead
+    /// of surfacing them one re-run at a time.
+    #[test]
+    fn validator_reports_all_problems_in_one_pass() {
+        let err = validate_snapshot(
+            "{\"schema_version\": 1, \
+              \"metrics\": {\"oddball\": {\"type\": \"teapot\"}}, \
+              \"slow_traces\": []}",
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        // every engine canonical metric is reported missing...
+        for name in CANONICAL_METRICS {
+            assert!(msg.contains(name), "missing `{name}` not reported: {msg}");
+        }
+        // ...alongside the unknown-type series, in the same error
+        assert!(msg.contains("unknown type `teapot`"), "{msg}");
+        let n = CANONICAL_METRICS.len() + Stage::ALL.len() + 1;
+        assert!(msg.contains(&format!("{n} problem(s)")), "{msg}");
+    }
+
+    /// Satellite: the capture canon rides the `capture_records_total`
+    /// sentinel exactly like the cluster canon rides
+    /// `cluster_routed_total` — capture-less snapshots stay valid.
+    #[test]
+    fn capture_sentinel_gates_the_capture_canon() {
+        let obs = super::super::ObsRegistry::default();
+        for name in &CANONICAL_METRICS[1..4] {
+            obs.histogram(name, &[("engine", "0")]);
+        }
+        for name in CANONICAL_METRICS[4..9].iter().chain(&CANONICAL_METRICS[10..]) {
+            obs.counter(name, &[("engine", "0")]);
+        }
+        obs.gauge("serve_queue_depth", &[("engine", "0")]);
+        // capture-less: valid without any capture series
+        validate_snapshot(&obs.render(super::super::RenderFormat::Json)).unwrap();
+
+        // the sentinel alone makes the rest of the capture canon
+        // required — and both gaps are reported in one pass
+        obs.counter("capture_records_total", &[]);
+        let err =
+            validate_snapshot(&obs.render(super::super::RenderFormat::Json)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("capture canonical metric `capture_bytes_total`"), "{msg}");
+        assert!(msg.contains("capture canonical metric `capture_dropped_total`"), "{msg}");
+
+        obs.counter("capture_bytes_total", &[]);
+        obs.counter("capture_dropped_total", &[]);
+        validate_snapshot(&obs.render(super::super::RenderFormat::Json)).unwrap();
     }
 
     #[test]

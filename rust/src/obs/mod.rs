@@ -34,8 +34,8 @@ mod trace;
 
 pub use clock::Clock;
 pub use export::{
-    latency_summary_json, parse_json, validate_snapshot, Json, CANONICAL_CLUSTER_METRICS,
-    CANONICAL_METRICS,
+    latency_summary_json, parse_json, validate_snapshot, Json, CANONICAL_CAPTURE_METRICS,
+    CANONICAL_CLUSTER_METRICS, CANONICAL_METRICS,
 };
 pub use ring::TraceRing;
 pub use trace::{

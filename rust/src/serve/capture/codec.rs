@@ -1,0 +1,530 @@
+//! Capture-log wire format: length-prefixed, CRC-checksummed,
+//! seq-numbered request records behind a 20-byte `IVCL` header that
+//! pins the bundle fingerprint the traffic was captured under.
+//!
+//! On-disk layout (all little-endian):
+//!
+//! ```text
+//! "IVCL" u32:version u64:bundle_fp u32:crc32(first 16)   — file header
+//! u32:payload_len u32:crc32(payload) payload             — per record
+//! payload = u64:seq u8:kind u32:id_len id
+//!           u32:rows u32:cols rows×cols×f64              — features
+//!           u64:arrival_offset_ns u64:deadline_ms
+//!           u8:outcome u8:has_score [f64:score]
+//!           u8:n_spans n_spans×(u8:stage u64:ns)         — trace spans
+//! ```
+//!
+//! Replay inherits `registry/wal.rs`'s two-way split exactly: a short or
+//! CRC-failing **final** record is a torn tail (a crash mid-append —
+//! tolerated, counted, never a panic), while the same damage with bytes
+//! after it is mid-log corruption and refuses the whole log with a
+//! typed [`CaptureError::Corrupt`]. The header carries its own CRC so a
+//! bit-flipped bundle fingerprint can never silently pass the replayer's
+//! same-bundle check.
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::Mat;
+use crate::obs::{Stage, TraceOutcome};
+use crate::serve::registry::codec::{self, Cur};
+
+pub(crate) const CAPTURE_MAGIC: &[u8; 4] = b"IVCL";
+pub(crate) const CAPTURE_VERSION: u32 = 1;
+/// Bytes of the file header (`IVCL` + version + fingerprint + CRC).
+pub(crate) const HEADER_LEN: u64 = 20;
+/// Upper bound on one record's payload. A captured utterance is frames
+/// × feature-dim f64s — tens of KB at production dims — so anything
+/// near 16 MB is corruption, not data.
+const MAX_RECORD: u32 = 1 << 24;
+
+const KIND_EXTRACT: u8 = 0;
+const KIND_ENROLL: u8 = 1;
+const KIND_VERIFY: u8 = 2;
+
+/// The capture log went bad in a way that is *not* a torn tail.
+#[derive(Debug)]
+pub enum CaptureError {
+    /// Mid-log damage: bad magic/version, a failed header or record
+    /// checksum with bytes after it, or a sequence regression.
+    Corrupt { record: u64, offset: u64, detail: String },
+    /// The replayer refused to score: the serving bundle's fingerprint
+    /// does not match the one the corpus was captured under.
+    BundleMismatch { captured: u64, serving: u64 },
+}
+
+impl fmt::Display for CaptureError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Corrupt { record, offset, detail } => write!(
+                f,
+                "capture log corrupt at record {record} (byte offset {offset}): {detail}"
+            ),
+            Self::BundleMismatch { captured, serving } => write!(
+                f,
+                "capture bundle mismatch: corpus captured under fingerprint \
+                 {captured:#018x}, serving bundle is {serving:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CaptureError {}
+
+/// What kind of request a record holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    Extract,
+    Enroll,
+    Verify,
+}
+
+impl RequestKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Extract => "extract",
+            Self::Enroll => "enroll",
+            Self::Verify => "verify",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Self::Extract => KIND_EXTRACT,
+            Self::Enroll => KIND_ENROLL,
+            Self::Verify => KIND_VERIFY,
+        }
+    }
+}
+
+/// One captured request: everything needed to re-issue it and to check
+/// the re-issued result against what production answered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureRecord {
+    /// Log sequence number (strictly increasing within one log; 0 is
+    /// reserved — [`super::CaptureLog`] assigns on append).
+    pub seq: u64,
+    pub kind: RequestKind,
+    /// Claimed speaker id (empty for extract).
+    pub speaker: String,
+    /// Feature frames, flattened row-major.
+    pub rows: u32,
+    pub cols: u32,
+    pub feats: Vec<f64>,
+    /// Nanoseconds since the recorder's capture epoch when the request
+    /// arrived — one monotonic clock for the whole corpus, so replay
+    /// can reproduce original inter-arrival timing.
+    pub arrival_offset_ns: u64,
+    /// The deadline the request ran under, in milliseconds.
+    pub deadline_ms: u64,
+    /// How the request ended, in the obs layer's outcome classes.
+    pub outcome: TraceOutcome,
+    /// Verify score / enroll count, when the request produced one.
+    pub score: Option<f64>,
+    /// Per-stage span durations lifted from the request's trace.
+    pub spans: Vec<(Stage, u64)>,
+}
+
+impl CaptureRecord {
+    /// The captured features as the engine's matrix type.
+    pub fn mat(&self) -> Mat {
+        Mat::from_vec(self.feats.clone(), self.rows as usize, self.cols as usize)
+    }
+}
+
+fn outcome_tag(o: TraceOutcome) -> u8 {
+    match o {
+        TraceOutcome::Ok => 0,
+        TraceOutcome::Shed => 1,
+        TraceOutcome::Timeout => 2,
+        TraceOutcome::Failed => 3,
+    }
+}
+
+fn outcome_from_tag(tag: u8) -> Result<TraceOutcome> {
+    Ok(match tag {
+        0 => TraceOutcome::Ok,
+        1 => TraceOutcome::Shed,
+        2 => TraceOutcome::Timeout,
+        3 => TraceOutcome::Failed,
+        other => anyhow::bail!("unknown outcome tag {other}"),
+    })
+}
+
+/// The 20-byte file header for a corpus captured under `bundle_fp`.
+pub(crate) fn header(bundle_fp: u64) -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_LEN as usize);
+    h.extend_from_slice(CAPTURE_MAGIC);
+    codec::put_u32(&mut h, CAPTURE_VERSION);
+    codec::put_u64(&mut h, bundle_fp);
+    let crc = codec::crc32(&h);
+    codec::put_u32(&mut h, crc);
+    h
+}
+
+/// Serialize one record (length prefix + CRC + payload).
+pub(crate) fn encode_record(rec: &CaptureRecord) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64 + rec.feats.len() * 8);
+    codec::put_u64(&mut payload, rec.seq);
+    payload.push(rec.kind.tag());
+    codec::put_str(&mut payload, &rec.speaker);
+    codec::put_u32(&mut payload, rec.rows);
+    codec::put_u32(&mut payload, rec.cols);
+    codec::put_f64_slice(&mut payload, &rec.feats);
+    codec::put_u64(&mut payload, rec.arrival_offset_ns);
+    codec::put_u64(&mut payload, rec.deadline_ms);
+    payload.push(outcome_tag(rec.outcome));
+    match rec.score {
+        Some(s) => {
+            payload.push(1);
+            codec::put_f64_slice(&mut payload, &[s]);
+        }
+        None => payload.push(0),
+    }
+    payload.push(rec.spans.len() as u8);
+    for (stage, ns) in &rec.spans {
+        payload.push(stage.index() as u8);
+        codec::put_u64(&mut payload, *ns);
+    }
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    codec::put_u32(&mut out, payload.len() as u32);
+    codec::put_u32(&mut out, codec::crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// What [`replay_log`] recovered from a capture log's bytes.
+#[derive(Debug, Default)]
+pub struct CaptureReplay {
+    /// Bundle fingerprint from the header (0 when the header never
+    /// landed — an empty or header-torn log).
+    pub fingerprint: u64,
+    /// Intact records, in capture order.
+    pub records: Vec<CaptureRecord>,
+    /// True when the log ended in a short or CRC-failing final record —
+    /// the signature of a crash mid-append.
+    pub torn_tail: bool,
+    /// Bytes of the valid prefix (header + intact records).
+    pub valid_len: u64,
+    /// Highest sequence number seen (0 when no records).
+    pub last_seq: u64,
+}
+
+fn corrupt(record: u64, offset: usize, detail: impl Into<String>) -> anyhow::Error {
+    CaptureError::Corrupt { record, offset: offset as u64, detail: detail.into() }.into()
+}
+
+/// Parse a capture-log image: every intact record up to a clean EOF or
+/// a torn tail. Mid-log corruption is a typed error; a torn tail never
+/// is.
+pub(crate) fn replay_log(bytes: &[u8]) -> Result<CaptureReplay> {
+    let mut rep = CaptureReplay::default();
+    if (bytes.len() as u64) < HEADER_LEN {
+        // empty (fresh log) or header-torn: nothing to replay
+        rep.torn_tail = !bytes.is_empty();
+        return Ok(rep);
+    }
+    if &bytes[..4] != CAPTURE_MAGIC {
+        return Err(corrupt(0, 0, "bad magic — not a capture log"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != CAPTURE_VERSION {
+        return Err(corrupt(0, 4, format!("unsupported capture version {version}")));
+    }
+    let header_crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    if codec::crc32(&bytes[..16]) != header_crc {
+        // a damaged fingerprint must never silently pass the replayer's
+        // same-bundle check, so the header carries its own CRC
+        return Err(corrupt(0, 16, "header checksum mismatch"));
+    }
+    rep.fingerprint = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    rep.valid_len = HEADER_LEN;
+    let mut pos = HEADER_LEN as usize;
+    let mut index = 0u64;
+    while pos < bytes.len() {
+        let rem = bytes.len() - pos;
+        if rem < 8 {
+            rep.torn_tail = true; // not even a record header made it out
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        let end = pos as u64 + 8 + u64::from(len);
+        if len > MAX_RECORD {
+            if end > bytes.len() as u64 {
+                rep.torn_tail = true; // garbage length in a torn header
+                break;
+            }
+            return Err(corrupt(index, pos, format!("record length {len} implausible")));
+        }
+        if end > bytes.len() as u64 {
+            rep.torn_tail = true; // the record's bytes never all landed
+            break;
+        }
+        let end = end as usize;
+        let payload = &bytes[pos + 8..end];
+        if codec::crc32(payload) != crc {
+            if end == bytes.len() {
+                rep.torn_tail = true; // garbage final record from a crashed write
+                break;
+            }
+            return Err(corrupt(index, pos, "record checksum mismatch"));
+        }
+        let rec =
+            decode_payload(payload).map_err(|e| corrupt(index, pos, format!("{e:#}")))?;
+        if rec.seq <= rep.last_seq {
+            return Err(corrupt(
+                index,
+                pos,
+                format!("sequence {} does not advance past {}", rec.seq, rep.last_seq),
+            ));
+        }
+        rep.last_seq = rec.seq;
+        rep.records.push(rec);
+        pos = end;
+        rep.valid_len = pos as u64;
+        index += 1;
+    }
+    Ok(rep)
+}
+
+/// Decode a CRC-verified payload. A failure here means the bytes are
+/// exactly what some writer produced — a format bug or foreign writer —
+/// so the caller treats it as corruption, torn tail or not.
+fn decode_payload(payload: &[u8]) -> Result<CaptureRecord> {
+    let mut c = Cur::new(payload);
+    let seq = c.u64()?;
+    ensure!(seq > 0, "record sequence 0 is reserved");
+    let kind = match c.u8()? {
+        KIND_EXTRACT => RequestKind::Extract,
+        KIND_ENROLL => RequestKind::Enroll,
+        KIND_VERIFY => RequestKind::Verify,
+        other => anyhow::bail!("unknown request kind tag {other}"),
+    };
+    let speaker = c.str_u32()?;
+    let rows = c.u32()?;
+    let cols = c.u32()?;
+    let n = (rows as usize)
+        .checked_mul(cols as usize)
+        .filter(|&n| n <= (MAX_RECORD as usize) / 8)
+        .ok_or_else(|| anyhow::anyhow!("feature block {rows}x{cols} implausible"))?;
+    let feats = c.f64_vec(n)?;
+    let arrival_offset_ns = c.u64()?;
+    let deadline_ms = c.u64()?;
+    let outcome = outcome_from_tag(c.u8()?)?;
+    let score = match c.u8()? {
+        0 => None,
+        1 => Some(c.f64_vec(1)?[0]),
+        other => anyhow::bail!("bad score-presence tag {other}"),
+    };
+    let n_spans = c.u8()? as usize;
+    let mut spans = Vec::with_capacity(n_spans);
+    for _ in 0..n_spans {
+        let idx = c.u8()? as usize;
+        let stage = *Stage::ALL
+            .get(idx)
+            .ok_or_else(|| anyhow::anyhow!("unknown stage index {idx}"))?;
+        spans.push((stage, c.u64()?));
+    }
+    ensure!(c.at_end(), "{} trailing bytes in record payload", c.remaining());
+    Ok(CaptureRecord {
+        seq,
+        kind,
+        speaker,
+        rows,
+        cols,
+        feats,
+        arrival_offset_ns,
+        deadline_ms,
+        outcome,
+        score,
+        spans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<CaptureRecord> {
+        vec![
+            CaptureRecord {
+                seq: 1,
+                kind: RequestKind::Enroll,
+                speaker: "spk_0".into(),
+                rows: 2,
+                cols: 3,
+                feats: vec![1.0, -2.5, 0.125, 4.0, 0.0, -1.0],
+                arrival_offset_ns: 10,
+                deadline_ms: 250,
+                outcome: TraceOutcome::Ok,
+                score: Some(1.0),
+                spans: vec![(Stage::Align, 1234), (Stage::EstepBatch, 98765)],
+            },
+            CaptureRecord {
+                seq: 2,
+                kind: RequestKind::Verify,
+                speaker: "spk_0".into(),
+                rows: 1,
+                cols: 3,
+                feats: vec![0.5, 0.25, -0.75],
+                arrival_offset_ns: 2_000_000,
+                deadline_ms: 250,
+                outcome: TraceOutcome::Ok,
+                score: Some(-3.75),
+                spans: vec![(Stage::BackendProject, 42)],
+            },
+            CaptureRecord {
+                seq: 5, // gaps are fine; only regressions are corrupt
+                kind: RequestKind::Verify,
+                speaker: "spk_1".into(),
+                rows: 1,
+                cols: 3,
+                feats: vec![9.0, 8.0, 7.0],
+                arrival_offset_ns: 3_500_000,
+                deadline_ms: 250,
+                outcome: TraceOutcome::Shed,
+                score: None,
+                spans: vec![],
+            },
+        ]
+    }
+
+    fn sample_log() -> Vec<u8> {
+        let mut bytes = header(0xDEAD_BEEF_F00D_CAFE);
+        for r in sample_records() {
+            bytes.extend_from_slice(&encode_record(&r));
+        }
+        bytes
+    }
+
+    #[test]
+    fn capture_encode_replay_round_trip() {
+        let bytes = sample_log();
+        let rep = replay_log(&bytes).unwrap();
+        assert_eq!(rep.records, sample_records());
+        assert_eq!(rep.fingerprint, 0xDEAD_BEEF_F00D_CAFE);
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.valid_len, bytes.len() as u64);
+        assert_eq!(rep.last_seq, 5);
+    }
+
+    #[test]
+    fn capture_empty_and_header_only_logs_are_clean() {
+        let rep = replay_log(&[]).unwrap();
+        assert!(rep.records.is_empty() && !rep.torn_tail && rep.valid_len == 0);
+        let rep = replay_log(&header(7)).unwrap();
+        assert!(rep.records.is_empty() && !rep.torn_tail);
+        assert_eq!(rep.fingerprint, 7);
+        assert_eq!(rep.valid_len, HEADER_LEN);
+    }
+
+    #[test]
+    fn capture_every_truncation_is_a_tolerated_torn_tail() {
+        // the satellite sweep, byte level: chop the log at every prefix
+        // length — replay must never panic, never error, and always
+        // return an exact prefix of the original records
+        let bytes = sample_log();
+        let full = sample_records();
+        for cut in 0..bytes.len() {
+            let rep = replay_log(&bytes[..cut]).unwrap_or_else(|e| {
+                panic!("cut at {cut} must be a torn tail, got error: {e:#}")
+            });
+            assert!(
+                full.starts_with(&rep.records),
+                "cut at {cut}: recovered records are not a prefix"
+            );
+            assert!(rep.valid_len <= cut as u64);
+            // torn exactly when partial bytes dangle past the valid prefix
+            assert_eq!(
+                rep.torn_tail,
+                (rep.valid_len as usize) < cut,
+                "cut at {cut}: torn_tail disagrees with the dangling bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn capture_bit_flips_are_torn_tail_or_typed_corruption_never_wrong_data() {
+        let bytes = sample_log();
+        let full = sample_records();
+        for offset in 0..bytes.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = bytes.clone();
+                bad[offset] ^= 1 << bit;
+                match replay_log(&bad) {
+                    Ok(rep) => {
+                        // tolerated only as a torn *tail*: the surviving
+                        // records must be an exact prefix, and the header
+                        // (including the bundle fingerprint) must be the
+                        // original — header flips are always typed errors
+                        assert!(
+                            full.starts_with(&rep.records),
+                            "flip at {offset} bit {bit} loaded wrong records"
+                        );
+                        assert!(rep.records.len() < full.len());
+                        assert_eq!(rep.fingerprint, 0xDEAD_BEEF_F00D_CAFE);
+                    }
+                    Err(e) => {
+                        let typed = e.downcast_ref::<CaptureError>().unwrap_or_else(|| {
+                            panic!("untyped error for flip at {offset}: {e:#}")
+                        });
+                        assert!(matches!(typed, CaptureError::Corrupt { .. }));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capture_flipped_fingerprint_is_a_typed_error_not_a_wrong_bundle() {
+        let mut bytes = sample_log();
+        bytes[8] ^= 0x01; // low byte of the fingerprint
+        let err = replay_log(&bytes).unwrap_err();
+        match err.downcast_ref::<CaptureError>() {
+            Some(CaptureError::Corrupt { record, offset, detail }) => {
+                assert_eq!(*record, 0);
+                assert_eq!(*offset, 16);
+                assert!(detail.contains("header checksum"), "{detail}");
+            }
+            other => panic!("expected Corrupt, got {other:?} / {err:#}"),
+        }
+    }
+
+    #[test]
+    fn capture_mid_log_corruption_is_rejected_with_record_and_offset() {
+        let mut bytes = sample_log();
+        // flip a payload byte of the FIRST record — bytes follow it, so
+        // this must never be shrugged off as a torn tail
+        let flip_at = HEADER_LEN as usize + 8 + 2;
+        bytes[flip_at] ^= 0x10;
+        let err = replay_log(&bytes).unwrap_err();
+        match err.downcast_ref::<CaptureError>() {
+            Some(CaptureError::Corrupt { record, offset, detail }) => {
+                assert_eq!(*record, 0);
+                assert_eq!(*offset, HEADER_LEN);
+                assert!(detail.contains("checksum"), "{detail}");
+            }
+            other => panic!("expected Corrupt, got {other:?} / {err:#}"),
+        }
+    }
+
+    #[test]
+    fn capture_sequence_regression_is_corruption() {
+        let mut rec_a = sample_records().remove(1);
+        rec_a.seq = 3;
+        let rec_b = rec_a.clone(); // same seq twice
+        let mut bytes = header(1);
+        bytes.extend_from_slice(&encode_record(&rec_a));
+        bytes.extend_from_slice(&encode_record(&rec_b));
+        let err = replay_log(&bytes).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<CaptureError>(),
+                Some(CaptureError::Corrupt { record: 1, .. })
+            ),
+            "{err:#}"
+        );
+    }
+}

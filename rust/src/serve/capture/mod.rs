@@ -1,0 +1,259 @@
+//! Flight recorder: deterministic traffic capture and regression
+//! replay for the serving stack.
+//!
+//! Three pieces, layered like the durable registry:
+//!
+//! * [`CaptureLog`] ([`codec`]) — a durable, append-only corpus of
+//!   request records (kind, speaker, features, arrival offset on one
+//!   capture-epoch clock, deadline, typed outcome, per-stage trace
+//!   spans), length-prefixed + CRC-checksummed + seq-numbered behind a
+//!   fingerprint-pinned `IVCL` header. Written over the existing
+//!   [`RegistryStorage`] trait, so the same file backend and the same
+//!   deterministic `FaultInjector` the registry WAL uses apply here.
+//!   Replay is torn-tail-tolerant exactly like `registry/wal.rs`: a
+//!   crash mid-append costs at most the final record, never the corpus.
+//! * [`Recorder`] ([`recorder`]) — the tap. Hooked at `Engine`
+//!   admission and `Dispatcher::dispatch_full`, it samples finished
+//!   requests (`all` / `rate 1/N` / `slow_only` riding the obs trace
+//!   threshold / `errors_only`) onto a **bounded** channel drained by a
+//!   background writer thread. Capture can never block or slow a
+//!   request thread: a full queue drops the record and counts it
+//!   (`capture_dropped_total`) — never silently, never by waiting.
+//! * [`Replayer`] ([`replay`]) — re-issues a captured corpus through a
+//!   fresh engine at original inter-arrival timing or flat out,
+//!   verifies scores to 1e-10 against the recorded outcomes when the
+//!   bundle fingerprint matches, and diffs outcome classes + per-stage
+//!   latency distributions against the capture.
+//!
+//! Together they close the observe half of the ROADMAP's "traffic
+//! capture → replay → continuous retraining" loop: captured corpora are
+//! deterministic regression load for candidate re-trained extractors.
+
+mod codec;
+mod recorder;
+mod replay;
+
+pub use codec::{CaptureError, CaptureRecord, CaptureReplay, RequestKind};
+pub use recorder::{CaptureSummary, Recorder, RecorderOptions, SamplePolicy};
+pub use replay::{
+    replay_corpus, run_capture_overhead, CaptureOverhead, ReplayOptions, ReplayReport,
+    StageDrift,
+};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::registry::{FileStorage, RegistryStorage};
+
+/// Durable sink for one capture session: owns the storage backend,
+/// assigns sequence numbers, and tracks what actually landed.
+///
+/// A write failure (ENOSPC, a scripted fault) permanently latches the
+/// log dead: appending past a failed write would leave mid-log garbage
+/// that replay must refuse wholesale, so the log refuses to append
+/// instead — the recorder counts the refusals as drops.
+pub struct CaptureLog {
+    storage: Box<dyn RegistryStorage>,
+    fingerprint: u64,
+    next_seq: u64,
+    records: u64,
+    bytes: u64,
+    dead: bool,
+}
+
+impl CaptureLog {
+    /// Start a fresh capture over `storage` for a bundle with the given
+    /// fingerprint. Truncates any previous log and writes the header.
+    pub fn create(storage: Box<dyn RegistryStorage>, fingerprint: u64) -> Result<Self> {
+        storage.truncate_wal(0).context("reset capture log")?;
+        let header = codec::header(fingerprint);
+        storage.append_wal(&header).context("write capture header")?;
+        storage.sync_wal().context("sync capture header")?;
+        Ok(Self {
+            storage,
+            fingerprint,
+            next_seq: 1,
+            records: 0,
+            bytes: header.len() as u64,
+            dead: false,
+        })
+    }
+
+    /// Start a fresh capture at a file path (the `--capture-out`
+    /// spelling): the parent directory becomes a [`FileStorage`] with
+    /// the file's own name, so a registry in the same directory is
+    /// never clobbered.
+    pub fn create_at_path(path: impl AsRef<Path>, fingerprint: u64) -> Result<Self> {
+        let path = path.as_ref();
+        let (dir, name) = split_path(path)?;
+        let storage = FileStorage::open_named(dir, name.clone(), format!("{name}.snap"))?;
+        Self::create(Box::new(storage), fingerprint)
+    }
+
+    /// Append one record, assigning the next sequence number. Returns
+    /// the framed byte length on success.
+    pub fn append(&mut self, mut rec: CaptureRecord) -> Result<u64> {
+        anyhow::ensure!(!self.dead, "capture log is dead after a failed write");
+        rec.seq = self.next_seq;
+        let bytes = codec::encode_record(&rec);
+        if let Err(e) = self.storage.append_wal(&bytes) {
+            self.dead = true;
+            return Err(e.context("append capture record"));
+        }
+        self.next_seq += 1;
+        self.records += 1;
+        self.bytes += bytes.len() as u64;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Force appended records to stable storage.
+    pub fn sync(&self) -> Result<()> {
+        self.storage.sync_wal().context("sync capture log")
+    }
+
+    /// Records appended so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Bytes written so far (header included).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// The bundle fingerprint this capture is pinned to.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Replay a capture log out of any storage backend.
+    pub fn load(storage: &dyn RegistryStorage) -> Result<CaptureReplay> {
+        let bytes = storage.read_wal().context("read capture log")?;
+        codec::replay_log(&bytes)
+    }
+
+    /// Replay a capture log from a file path.
+    pub fn load_path(path: impl AsRef<Path>) -> Result<CaptureReplay> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read capture log {}", path.display()))?;
+        codec::replay_log(&bytes)
+    }
+}
+
+fn split_path(path: &Path) -> Result<(std::path::PathBuf, String)> {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .filter(|n| !n.is_empty())
+        .with_context(|| format!("capture path {} has no file name", path.display()))?;
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    Ok((dir, name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceOutcome;
+    use crate::serve::registry::{Fault, FaultInjector, MemStorage};
+
+    fn rec(speaker: &str) -> CaptureRecord {
+        CaptureRecord {
+            seq: 0, // assigned by the log
+            kind: RequestKind::Verify,
+            speaker: speaker.into(),
+            rows: 1,
+            cols: 2,
+            feats: vec![0.5, -0.5],
+            arrival_offset_ns: 99,
+            deadline_ms: 250,
+            outcome: TraceOutcome::Ok,
+            score: Some(2.5),
+            spans: vec![],
+        }
+    }
+
+    #[test]
+    fn capture_log_round_trip_over_mem_storage() {
+        let store = MemStorage::new();
+        let mut log = CaptureLog::create(Box::new(store.clone()), 42).unwrap();
+        log.append(rec("a")).unwrap();
+        log.append(rec("b")).unwrap();
+        log.sync().unwrap();
+        assert_eq!(log.records(), 2);
+
+        let rep = CaptureLog::load(&store).unwrap();
+        assert_eq!(rep.fingerprint, 42);
+        assert_eq!(rep.records.len(), 2);
+        assert_eq!(rep.records[0].seq, 1);
+        assert_eq!(rep.records[1].seq, 2);
+        assert_eq!(rep.records[1].speaker, "b");
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.valid_len, log.bytes());
+    }
+
+    #[test]
+    fn capture_log_create_truncates_a_previous_session() {
+        let store = MemStorage::new();
+        let mut log = CaptureLog::create(Box::new(store.clone()), 1).unwrap();
+        log.append(rec("old")).unwrap();
+        drop(log);
+        // a new session under a new bundle starts clean
+        let log = CaptureLog::create(Box::new(store.clone()), 2).unwrap();
+        drop(log);
+        let rep = CaptureLog::load(&store).unwrap();
+        assert_eq!(rep.fingerprint, 2);
+        assert!(rep.records.is_empty());
+    }
+
+    #[test]
+    fn capture_log_latches_dead_after_a_scripted_write_fault() {
+        // the registry's deterministic fault injector applies verbatim:
+        // storage op 4 (truncate, header append, sync, first record) is
+        // the second record's append — script an ENOSPC there
+        let store = MemStorage::new();
+        let inj = FaultInjector::new(Box::new(store.clone())).fail_op(4, Fault::Enospc);
+        let mut log = CaptureLog::create(Box::new(inj), 7).unwrap();
+        log.append(rec("a")).unwrap();
+        assert!(log.append(rec("b")).is_err(), "scripted ENOSPC must surface");
+        // the log is latched: appending past a failed write would leave
+        // mid-log garbage, so it must refuse
+        assert!(log.append(rec("c")).is_err());
+        assert_eq!(log.records(), 1);
+        let rep = CaptureLog::load(&store).unwrap();
+        assert_eq!(rep.records.len(), 1);
+        assert_eq!(rep.records[0].speaker, "a");
+    }
+
+    #[test]
+    fn capture_log_torn_write_recovers_to_the_intact_prefix() {
+        let store = MemStorage::new();
+        let inj =
+            FaultInjector::new(Box::new(store.clone())).fail_op(4, Fault::TornWrite { keep: 5 });
+        let mut log = CaptureLog::create(Box::new(inj), 7).unwrap();
+        log.append(rec("a")).unwrap();
+        let _ = log.append(rec("b")); // torn: only 5 bytes land
+        let rep = CaptureLog::load(&store).unwrap();
+        assert!(rep.torn_tail);
+        assert_eq!(rep.records.len(), 1);
+        assert_eq!(rep.records[0].speaker, "a");
+    }
+
+    #[test]
+    fn capture_log_file_path_round_trip() {
+        let dir = std::env::temp_dir().join(format!("ivcap-{}", std::process::id()));
+        let path = dir.join("traffic.capture");
+        let mut log = CaptureLog::create_at_path(&path, 11).unwrap();
+        log.append(rec("x")).unwrap();
+        log.sync().unwrap();
+        drop(log);
+        let rep = CaptureLog::load_path(&path).unwrap();
+        assert_eq!(rep.fingerprint, 11);
+        assert_eq!(rep.records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,425 @@
+//! The capture tap: samples finished requests onto a bounded channel
+//! drained by a background writer thread that owns the [`CaptureLog`].
+//!
+//! The cardinal rule is that capture must never block or slow a request
+//! thread. Everything on the hot path is a policy check, a record
+//! build, and a `try_send`; when the writer falls behind and the
+//! channel fills, the record is dropped and `capture_dropped_total`
+//! counts it — an overloaded recorder degrades the *corpus*, never the
+//! traffic. Write failures latch the log dead (see [`CaptureLog`]) and
+//! surface the same way: as counted drops plus a summary error, not as
+//! request-path errors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::linalg::Mat;
+use crate::obs::{Counter, ObsRegistry, RequestTrace, Stage, TraceOutcome};
+
+use super::codec::{CaptureRecord, RequestKind};
+use super::CaptureLog;
+
+// the sampling policy is config vocabulary (`[capture] policy`), so it
+// lives with the other parseable knobs and is re-exported from here
+pub use crate::config::SamplePolicy;
+
+/// Construction knobs (the `[capture]` config section maps onto this).
+#[derive(Debug, Clone)]
+pub struct RecorderOptions {
+    pub policy: SamplePolicy,
+    /// Bounded channel depth between request threads and the writer.
+    pub queue: usize,
+    /// Fsync the log every this many appended records (and at close).
+    pub sync_every: u64,
+    /// `slow_only` cutoff, in milliseconds (ride `[obs]
+    /// trace_threshold_ms` when wiring from config).
+    pub slow_threshold_ms: f64,
+    /// The request deadline the captured traffic ran under, stamped
+    /// into every record so replay can reproduce it.
+    pub deadline_ms: u64,
+}
+
+impl Default for RecorderOptions {
+    fn default() -> Self {
+        Self {
+            policy: SamplePolicy::All,
+            queue: 1024,
+            sync_every: 64,
+            slow_threshold_ms: 0.0,
+            deadline_ms: 0,
+        }
+    }
+}
+
+impl RecorderOptions {
+    /// Assemble from the full config: the `[capture]` shape plus the
+    /// two knobs it rides — `[obs] trace_threshold_ms` (the `slow_only`
+    /// cutoff) and `[serve] request_timeout_ms` (the deadline stamped
+    /// into every record so replay knows the window traffic ran under).
+    pub fn from_config(cfg: &crate::config::Config) -> Self {
+        Self {
+            policy: cfg.capture.policy,
+            queue: cfg.capture.queue,
+            sync_every: cfg.capture.sync_every,
+            slow_threshold_ms: cfg.obs.trace_threshold_ms,
+            deadline_ms: cfg.serve.request_timeout_ms,
+        }
+    }
+}
+
+/// What a capture session amounted to, reported by [`Recorder::close`].
+#[derive(Debug, Clone)]
+pub struct CaptureSummary {
+    /// Records durably appended to the log.
+    pub records: u64,
+    /// Bytes appended (header included).
+    pub bytes: u64,
+    /// Sampled records that never reached the log: queue overflow or
+    /// appends refused after a write failure.
+    pub dropped: u64,
+    /// First write/sync failure the writer hit, if any.
+    pub write_error: Option<String>,
+}
+
+/// The request-path tap. Shared (`Arc`) between the engine/dispatcher
+/// hook and the owner that eventually calls [`Recorder::close`].
+pub struct Recorder {
+    policy: SamplePolicy,
+    slow_threshold: Duration,
+    deadline_ms: u64,
+    /// All arrival offsets are measured on this one clock.
+    epoch: Instant,
+    /// Requests offered to the sampler (drives `Rate`).
+    seen: AtomicU64,
+    tx: Mutex<Option<SyncSender<CaptureRecord>>>,
+    writer: Mutex<Option<JoinHandle<(Option<String>, u64)>>>,
+    records: Counter,
+    bytes: Counter,
+    dropped: Counter,
+}
+
+impl Recorder {
+    /// Spawn the background writer over a freshly created log and
+    /// register the capture counters on `obs`.
+    pub fn new(log: CaptureLog, opts: &RecorderOptions, obs: &ObsRegistry) -> Arc<Self> {
+        let records = obs.counter("capture_records_total", &[]);
+        let bytes = obs.counter("capture_bytes_total", &[]);
+        let dropped = obs.counter("capture_dropped_total", &[]);
+        let (tx, rx) = sync_channel::<CaptureRecord>(opts.queue.max(1));
+        let writer = {
+            let records = records.clone();
+            let bytes = bytes.clone();
+            let dropped = dropped.clone();
+            let sync_every = opts.sync_every.max(1);
+            std::thread::Builder::new()
+                .name("capture-writer".into())
+                .spawn(move || {
+                    let mut log = log;
+                    let mut write_error: Option<String> = None;
+                    let mut since_sync = 0u64;
+                    while let Ok(rec) = rx.recv() {
+                        match log.append(rec) {
+                            Ok(n) => {
+                                records.inc();
+                                bytes.add(n);
+                                since_sync += 1;
+                                if since_sync >= sync_every {
+                                    since_sync = 0;
+                                    if let Err(e) = log.sync() {
+                                        write_error.get_or_insert(format!("{e:#}"));
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                // the log latches dead after the first
+                                // failure, so every later append lands
+                                // here cheaply — counted, never silent
+                                dropped.inc();
+                                write_error.get_or_insert(format!("{e:#}"));
+                            }
+                        }
+                    }
+                    if let Err(e) = log.sync() {
+                        write_error.get_or_insert(format!("{e:#}"));
+                    }
+                    (write_error, log.bytes())
+                })
+                .expect("spawn capture writer")
+        };
+        Arc::new(Self {
+            policy: opts.policy,
+            slow_threshold: Duration::from_nanos(
+                (opts.slow_threshold_ms.max(0.0) * 1e6) as u64,
+            ),
+            deadline_ms: opts.deadline_ms,
+            epoch: Instant::now(),
+            seen: AtomicU64::new(0),
+            tx: Mutex::new(Some(tx)),
+            writer: Mutex::new(Some(writer)),
+            records,
+            bytes,
+            dropped,
+        })
+    }
+
+    /// Offer one finished request. Non-blocking: the worst case is a
+    /// policy check plus a failed `try_send` (counted as a drop).
+    ///
+    /// `elapsed` is the request's wall time as measured at the hook
+    /// site; the arrival offset is derived from it so replay reproduces
+    /// admission-time spacing, not completion-time spacing. `trace` is
+    /// the request's obs trace when one was minted — its per-stage
+    /// spans ride along into the record.
+    pub fn observe(
+        &self,
+        kind: RequestKind,
+        speaker: &str,
+        feats: &Mat,
+        outcome: TraceOutcome,
+        score: Option<f64>,
+        elapsed: Duration,
+        trace: Option<&RequestTrace>,
+    ) {
+        let seen = self.seen.fetch_add(1, Ordering::Relaxed);
+        let sampled = match self.policy {
+            SamplePolicy::All => true,
+            SamplePolicy::Rate(n) => n <= 1 || seen % u64::from(n) == 0,
+            SamplePolicy::SlowOnly => elapsed >= self.slow_threshold,
+            SamplePolicy::ErrorsOnly => outcome != TraceOutcome::Ok,
+        };
+        if !sampled {
+            return;
+        }
+        let spans: Vec<(Stage, u64)> = match trace {
+            Some(t) => Stage::ALL
+                .iter()
+                .filter_map(|&s| {
+                    let ns = t.stage_ns(s);
+                    (ns > 0).then_some((s, ns))
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let rec = CaptureRecord {
+            seq: 0, // the log assigns on append
+            kind,
+            speaker: speaker.to_string(),
+            rows: feats.rows() as u32,
+            cols: feats.cols() as u32,
+            feats: feats.as_slice().to_vec(),
+            arrival_offset_ns: self
+                .epoch
+                .elapsed()
+                .saturating_sub(elapsed)
+                .as_nanos()
+                .min(u128::from(u64::MAX)) as u64,
+            deadline_ms: self.deadline_ms,
+            outcome,
+            score,
+            spans,
+        };
+        let guard = self.tx.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.as_ref() {
+            Some(tx) if tx.try_send(rec).is_ok() => {}
+            // full queue, or the session is already closed
+            _ => self.dropped.inc(),
+        }
+    }
+
+    /// End the session: stop accepting records, drain the queue, final
+    /// fsync, and report what landed. Idempotent.
+    pub fn close(&self) -> CaptureSummary {
+        let tx = self.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+        drop(tx); // writer's recv loop ends once the queue drains
+        let handle = self.writer.lock().unwrap_or_else(|p| p.into_inner()).take();
+        let write_error = match handle.map(|h| h.join()) {
+            Some(Ok((err, _bytes))) => err,
+            Some(Err(_)) => Some("capture writer panicked".into()),
+            None => None,
+        };
+        CaptureSummary {
+            records: self.records.get(),
+            bytes: self.bytes.get(),
+            dropped: self.dropped.get(),
+            write_error,
+        }
+    }
+}
+
+impl Drop for Recorder {
+    fn drop(&mut self) {
+        // best effort: a forgotten close still drains and fsyncs
+        let _ = self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Result;
+    use crate::serve::registry::{MemStorage, RegistryStorage};
+
+    fn feats() -> Mat {
+        Mat::from_vec(vec![0.25, -0.5, 1.0, 2.0], 2, 2)
+    }
+
+    fn recorder_over(
+        store: MemStorage,
+        opts: RecorderOptions,
+    ) -> (Arc<Recorder>, ObsRegistry) {
+        let obs = ObsRegistry::default();
+        let log = CaptureLog::create(Box::new(store), 9).unwrap();
+        let rec = Recorder::new(log, &opts, &obs);
+        (rec, obs)
+    }
+
+    fn observe_ok(rec: &Recorder, elapsed_ms: u64, outcome: TraceOutcome) {
+        rec.observe(
+            RequestKind::Verify,
+            "spk",
+            &feats(),
+            outcome,
+            Some(1.5),
+            Duration::from_millis(elapsed_ms),
+            None,
+        );
+    }
+
+    #[test]
+    fn capture_rate_policy_samples_one_in_n() {
+        let store = MemStorage::new();
+        let (rec, _obs) = recorder_over(
+            store.clone(),
+            RecorderOptions { policy: SamplePolicy::Rate(3), ..Default::default() },
+        );
+        for _ in 0..9 {
+            observe_ok(&rec, 1, TraceOutcome::Ok);
+        }
+        let summary = rec.close();
+        assert_eq!(summary.records, 3);
+        assert_eq!(summary.dropped, 0);
+        assert!(summary.write_error.is_none());
+        let loaded = CaptureLog::load(&store).unwrap();
+        assert_eq!(loaded.records.len(), 3);
+    }
+
+    #[test]
+    fn capture_slow_only_policy_rides_the_trace_threshold() {
+        let store = MemStorage::new();
+        let (rec, _obs) = recorder_over(
+            store.clone(),
+            RecorderOptions {
+                policy: SamplePolicy::SlowOnly,
+                slow_threshold_ms: 5.0,
+                ..Default::default()
+            },
+        );
+        observe_ok(&rec, 1, TraceOutcome::Ok); // fast: skipped
+        observe_ok(&rec, 10, TraceOutcome::Ok); // slow: captured
+        let summary = rec.close();
+        assert_eq!(summary.records, 1);
+    }
+
+    #[test]
+    fn capture_errors_only_policy_records_typed_outcomes() {
+        let store = MemStorage::new();
+        let (rec, _obs) = recorder_over(
+            store.clone(),
+            RecorderOptions { policy: SamplePolicy::ErrorsOnly, ..Default::default() },
+        );
+        observe_ok(&rec, 1, TraceOutcome::Ok); // skipped
+        observe_ok(&rec, 1, TraceOutcome::Shed);
+        observe_ok(&rec, 1, TraceOutcome::Timeout);
+        let summary = rec.close();
+        assert_eq!(summary.records, 2);
+        let loaded = CaptureLog::load(&store).unwrap();
+        let outcomes: Vec<_> = loaded.records.iter().map(|r| r.outcome).collect();
+        assert_eq!(outcomes, vec![TraceOutcome::Shed, TraceOutcome::Timeout]);
+    }
+
+    /// A backend whose appends stall — the writer thread gets stuck so
+    /// the bounded queue genuinely fills.
+    struct SlowStorage {
+        inner: MemStorage,
+        delay: Duration,
+    }
+
+    impl RegistryStorage for SlowStorage {
+        fn append_wal(&self, buf: &[u8]) -> Result<()> {
+            std::thread::sleep(self.delay);
+            self.inner.append_wal(buf)
+        }
+        fn sync_wal(&self) -> Result<()> {
+            self.inner.sync_wal()
+        }
+        fn read_wal(&self) -> Result<Vec<u8>> {
+            self.inner.read_wal()
+        }
+        fn truncate_wal(&self, len: u64) -> Result<()> {
+            self.inner.truncate_wal(len)
+        }
+        fn read_snapshot(&self) -> Result<Option<Vec<u8>>> {
+            self.inner.read_snapshot()
+        }
+        fn swap_snapshot(&self, bytes: &[u8]) -> Result<()> {
+            self.inner.swap_snapshot(bytes)
+        }
+        fn describe(&self) -> String {
+            "slow-mem".into()
+        }
+    }
+
+    #[test]
+    fn capture_overflow_drops_are_counted_never_blocking() {
+        // writer stuck on a 300ms append, queue of 1: most of a fast
+        // burst must be dropped — and every observe must return
+        // immediately rather than wait for the writer
+        let store = MemStorage::new();
+        let slow = SlowStorage { inner: store.clone(), delay: Duration::from_millis(300) };
+        let obs = ObsRegistry::default();
+        // header append stalls too, so give create its one delay first
+        let log = CaptureLog::create(Box::new(slow), 9).unwrap();
+        let rec = Recorder::new(
+            log,
+            &RecorderOptions { queue: 1, ..Default::default() },
+            &obs,
+        );
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            observe_ok(&rec, 0, TraceOutcome::Ok);
+        }
+        let offered = t0.elapsed();
+        assert!(
+            offered < Duration::from_millis(200),
+            "observe must never block on the writer (10 calls took {offered:?})"
+        );
+        let summary = rec.close();
+        assert_eq!(summary.records + summary.dropped, 10, "{summary:?}");
+        assert!(summary.dropped > 0, "queue of 1 under a stalled writer must drop");
+        // accounting matches the durable log exactly
+        let loaded = CaptureLog::load(&store).unwrap();
+        assert_eq!(loaded.records.len() as u64, summary.records);
+    }
+
+    #[test]
+    fn capture_write_failures_surface_as_drops_and_summary_error() {
+        use crate::serve::registry::{Fault, FaultInjector};
+        let store = MemStorage::new();
+        // ops 0..=2 are create (truncate, header, sync); op 3 = first
+        // record append fails with ENOSPC and latches the log dead
+        let inj = FaultInjector::new(Box::new(store.clone())).fail_op(3, Fault::Enospc);
+        let obs = ObsRegistry::default();
+        let log = CaptureLog::create(Box::new(inj), 9).unwrap();
+        let rec = Recorder::new(log, &RecorderOptions::default(), &obs);
+        observe_ok(&rec, 1, TraceOutcome::Ok);
+        observe_ok(&rec, 1, TraceOutcome::Ok);
+        let summary = rec.close();
+        assert_eq!(summary.records, 0);
+        assert_eq!(summary.dropped, 2);
+        let err = summary.write_error.expect("ENOSPC must be reported");
+        assert!(err.contains("No space left"), "{err}");
+    }
+}

@@ -1,0 +1,346 @@
+//! Regression replay: re-issue a captured corpus through a fresh
+//! engine and hold the answers to what production recorded.
+//!
+//! Determinism is what makes this a gate instead of a smoke test: the
+//! serve path's batched extraction is batch-composition-independent
+//! (property-tested to 1e-10 against the scalar oracle since PR 1), a
+//! speaker's profile is the running mean of its enrollment i-vectors,
+//! and a capture preserves arrival order — so replaying enrolls and
+//! verifies in sequence against the *same* bundle must reproduce every
+//! verify score to 1e-10. A drifted kernel, a broken registry mean, or
+//! a changed backend shows up as a counted mismatch
+//! (`replay_mismatches_total`) and a nonzero exit in CI.
+//!
+//! Outcome classes are compared too (ok/shed/timeout/failed): a corpus
+//! captured under overload replays its shed decisions as data, and a
+//! clean corpus must stay clean. Per-stage latency distributions are
+//! diffed via the shared [`crate::bench_util::latency_drift_json`]
+//! helper — the capture carries each request's spans, the replay's obs
+//! registry provides the fresh ones.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::bench_util::{latency_drift_json, LatencyTriple};
+use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::obs::{Stage, TraceOutcome};
+use crate::serve::registry::MemStorage;
+use crate::serve::Engine;
+
+use super::codec::{CaptureRecord, CaptureReplay, RequestKind};
+use super::recorder::{Recorder, RecorderOptions};
+use super::CaptureLog;
+
+/// Replay knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Re-issue flat out instead of at original inter-arrival timing.
+    pub max_speed: bool,
+    /// Score agreement bound (absolute). The acceptance bar is 1e-10.
+    pub tolerance: f64,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        Self { max_speed: false, tolerance: 1e-10 }
+    }
+}
+
+/// One stage's captured-vs-replayed latency distributions.
+#[derive(Debug, Clone)]
+pub struct StageDrift {
+    pub stage: Stage,
+    pub captured: LatencySummary,
+    pub replayed: LatencySummary,
+}
+
+/// What a replay pass found.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Records in the corpus.
+    pub total: usize,
+    /// Records re-issued (all of them; the corpus is the workload).
+    pub replayed: usize,
+    /// Whether the serving bundle's fingerprint matched the corpus's —
+    /// scores are only checked when it did.
+    pub fingerprint_match: bool,
+    /// Replayed requests whose recorded counterpart carried a score and
+    /// completed ok on both sides.
+    pub score_checked: usize,
+    /// Score deltas above tolerance.
+    pub score_mismatches: u64,
+    /// Largest |replayed − recorded| score delta seen.
+    pub max_score_delta: f64,
+    /// Requests whose outcome class changed (ok/shed/timeout/failed).
+    pub outcome_mismatches: u64,
+    /// Outcome-class counts in the corpus, indexed ok/shed/timeout/failed.
+    pub captured_outcomes: [u64; 4],
+    /// Outcome-class counts of the replay, same indexing.
+    pub replayed_outcomes: [u64; 4],
+    /// Replay wall time.
+    pub wall_s: f64,
+    /// Captured-vs-replayed latency distributions for every stage that
+    /// has samples on either side.
+    pub stage_drift: Vec<StageDrift>,
+}
+
+impl ReplayReport {
+    /// Total mismatches — the CI gate exits nonzero when this is > 0.
+    pub fn mismatches(&self) -> u64 {
+        self.score_mismatches + self.outcome_mismatches
+    }
+
+    fn outcomes_json(counts: &[u64; 4]) -> String {
+        format!(
+            "{{\"ok\": {}, \"shed\": {}, \"timeout\": {}, \"failed\": {}}}",
+            counts[0], counts[1], counts[2], counts[3]
+        )
+    }
+
+    /// The `replay` section of `BENCH_10.json`.
+    pub fn json_fragment(&self) -> String {
+        format!(
+            "{{\"total\": {}, \"replayed\": {}, \"fingerprint_match\": {}, \
+             \"score_checked\": {}, \"score_mismatches\": {}, \"max_score_delta\": {:e}, \
+             \"outcome_mismatches\": {}, \"mismatches\": {}, \"wall_s\": {:.4}, \
+             \"replay_rps\": {:.2}, \"captured_outcomes\": {}, \"replayed_outcomes\": {}}}",
+            self.total,
+            self.replayed,
+            self.fingerprint_match,
+            self.score_checked,
+            self.score_mismatches,
+            self.max_score_delta,
+            self.outcome_mismatches,
+            self.mismatches(),
+            self.wall_s,
+            if self.wall_s > 0.0 { self.replayed as f64 / self.wall_s } else { 0.0 },
+            Self::outcomes_json(&self.captured_outcomes),
+            Self::outcomes_json(&self.replayed_outcomes),
+        )
+    }
+
+    /// The `stage_drift` section of `BENCH_10.json`: per-stage
+    /// p50/p95/p99 old→new through the shared drift helper.
+    pub fn drift_json(&self) -> String {
+        let mut body = String::from("{");
+        for (i, d) in self.stage_drift.iter().enumerate() {
+            if i > 0 {
+                body.push_str(", ");
+            }
+            body.push_str(&format!(
+                "\"{}\": {}",
+                d.stage.as_str(),
+                latency_drift_json(
+                    &LatencyTriple::from_summary(&d.captured),
+                    &LatencyTriple::from_summary(&d.replayed),
+                )
+            ));
+        }
+        body.push('}');
+        body
+    }
+}
+
+fn outcome_index(o: TraceOutcome) -> usize {
+    match o {
+        TraceOutcome::Ok => 0,
+        TraceOutcome::Shed => 1,
+        TraceOutcome::Timeout => 2,
+        TraceOutcome::Failed => 3,
+    }
+}
+
+/// Re-issue one record; every serve error is an *outcome*, not a
+/// replay failure.
+fn issue(engine: &Engine, rec: &CaptureRecord) -> (TraceOutcome, Option<f64>) {
+    let feats = rec.mat();
+    match rec.kind {
+        RequestKind::Extract => {
+            let r = engine.extract(&feats);
+            (TraceOutcome::of(&r), None)
+        }
+        RequestKind::Enroll => {
+            let r = engine.enroll(&rec.speaker, &feats);
+            let score = r.as_ref().ok().map(|&count| count as f64);
+            (TraceOutcome::of(&r), score)
+        }
+        RequestKind::Verify => {
+            let r = engine.verify(&rec.speaker, &feats);
+            let score = r.as_ref().ok().map(|out| out.score);
+            (TraceOutcome::of(&r), score)
+        }
+    }
+}
+
+/// Replay `corpus` through `engine`, verifying scores against the
+/// recorded outcomes when the bundle fingerprint matches and diffing
+/// outcome classes + per-stage latency distributions.
+///
+/// The engine should be fresh (empty registry, private obs registry):
+/// the corpus carries its own enrollments, and the stage-drift
+/// comparison reads the engine's obs stage histograms as "the replay's
+/// distribution". Mismatches also increment `replay_mismatches_total`
+/// on the engine's obs registry.
+pub fn replay_corpus(
+    corpus: &CaptureReplay,
+    engine: &Engine,
+    opts: &ReplayOptions,
+) -> Result<ReplayReport> {
+    let fingerprint_match = corpus.fingerprint == engine.model().fingerprint;
+    let mismatches_counter = engine.obs().counter("replay_mismatches_total", &[]);
+    let mut report = ReplayReport {
+        total: corpus.records.len(),
+        replayed: 0,
+        fingerprint_match,
+        score_checked: 0,
+        score_mismatches: 0,
+        max_score_delta: 0.0,
+        outcome_mismatches: 0,
+        captured_outcomes: [0; 4],
+        replayed_outcomes: [0; 4],
+        wall_s: 0.0,
+        stage_drift: Vec::new(),
+    };
+
+    let epoch = Instant::now();
+    let base_offset = corpus.records.first().map_or(0, |r| r.arrival_offset_ns);
+    for rec in &corpus.records {
+        if !opts.max_speed {
+            // reproduce inter-arrival spacing relative to the first
+            // record, not the recorder's epoch (which includes however
+            // long the capture session idled before traffic)
+            let target = Duration::from_nanos(rec.arrival_offset_ns.saturating_sub(base_offset));
+            let elapsed = epoch.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        let (outcome, score) = issue(engine, rec);
+        report.replayed += 1;
+        report.captured_outcomes[outcome_index(rec.outcome)] += 1;
+        report.replayed_outcomes[outcome_index(outcome)] += 1;
+        if outcome != rec.outcome {
+            report.outcome_mismatches += 1;
+            mismatches_counter.inc();
+        }
+        if fingerprint_match && outcome == TraceOutcome::Ok && rec.outcome == TraceOutcome::Ok
+        {
+            if let (Some(got), Some(want)) = (score, rec.score) {
+                report.score_checked += 1;
+                let delta = (got - want).abs();
+                if delta > report.max_score_delta {
+                    report.max_score_delta = delta;
+                }
+                if delta > opts.tolerance {
+                    report.score_mismatches += 1;
+                    mismatches_counter.inc();
+                }
+            }
+        }
+    }
+    report.wall_s = epoch.elapsed().as_secs_f64();
+
+    // captured per-stage distributions, rebuilt from the recorded spans
+    let captured_hists: Vec<LatencyHistogram> =
+        (0..Stage::ALL.len()).map(|_| LatencyHistogram::new()).collect();
+    for rec in &corpus.records {
+        for (stage, ns) in &rec.spans {
+            captured_hists[stage.index()].record(*ns as f64 / 1e9);
+        }
+    }
+    let replayed = engine.obs().stage_summaries();
+    for stage in Stage::ALL {
+        let captured = captured_hists[stage.index()].summary();
+        let (_, replayed) = replayed[stage.index()];
+        if captured.count > 0 || replayed.count > 0 {
+            report.stage_drift.push(StageDrift { stage, captured, replayed });
+        }
+    }
+    Ok(report)
+}
+
+/// What a capture-on vs capture-off throughput comparison measured.
+#[derive(Debug, Clone)]
+pub struct CaptureOverhead {
+    pub requests: usize,
+    pub off_wall_s: f64,
+    pub on_wall_s: f64,
+    /// (on − off) / off, in percent — the cost of recording everything.
+    pub overhead_pct: f64,
+    /// Records the capture-on pass durably logged.
+    pub captured_records: u64,
+    /// Records the capture-on pass dropped on queue overflow.
+    pub capture_dropped: u64,
+}
+
+impl CaptureOverhead {
+    pub fn off_rps(&self) -> f64 {
+        if self.off_wall_s > 0.0 { self.requests as f64 / self.off_wall_s } else { 0.0 }
+    }
+
+    pub fn on_rps(&self) -> f64 {
+        if self.on_wall_s > 0.0 { self.requests as f64 / self.on_wall_s } else { 0.0 }
+    }
+
+    /// The `capture_overhead` section of `BENCH_10.json`.
+    pub fn json_fragment(&self) -> String {
+        format!(
+            "{{\"requests\": {}, \"capture_off_wall_s\": {:.4}, \"capture_on_wall_s\": {:.4}, \
+             \"capture_off_rps\": {:.2}, \"capture_on_rps\": {:.2}, \"overhead_pct\": {:.2}, \
+             \"captured_records\": {}, \"capture_dropped\": {}}}",
+            self.requests,
+            self.off_wall_s,
+            self.on_wall_s,
+            self.off_rps(),
+            self.on_rps(),
+            self.overhead_pct,
+            self.captured_records,
+            self.capture_dropped,
+        )
+    }
+}
+
+/// Drive the corpus through `engine` twice at max speed — once bare,
+/// once with an in-memory recorder capturing everything — and report
+/// the throughput delta. Run this *after* the verification pass: it
+/// re-enrolls the corpus's speakers (harmless for score math — a
+/// profile mean is invariant under whole-set re-enrollment — but it
+/// would inflate the enroll counts a verification pass checks).
+pub fn run_capture_overhead(corpus: &CaptureReplay, engine: &Engine) -> Result<CaptureOverhead> {
+    let n = corpus.records.len();
+    // capture-off
+    let t0 = Instant::now();
+    for rec in &corpus.records {
+        let _ = issue(engine, rec);
+    }
+    let off_wall_s = t0.elapsed().as_secs_f64();
+
+    // capture-on: everything, through the real recorder machinery over
+    // memory-backed storage
+    let log = CaptureLog::create(Box::new(MemStorage::new()), corpus.fingerprint)
+        .context("create overhead capture log")?;
+    let recorder = Recorder::new(log, &RecorderOptions::default(), engine.obs());
+    engine.set_recorder(Some(Arc::clone(&recorder)));
+    let t0 = Instant::now();
+    for rec in &corpus.records {
+        let _ = issue(engine, rec);
+    }
+    let on_wall_s = t0.elapsed().as_secs_f64();
+    engine.set_recorder(None);
+    let summary = recorder.close();
+
+    Ok(CaptureOverhead {
+        requests: n,
+        off_wall_s,
+        on_wall_s,
+        overhead_pct: if off_wall_s > 0.0 {
+            (on_wall_s - off_wall_s) / off_wall_s * 100.0
+        } else {
+            0.0
+        },
+        captured_records: summary.records,
+        capture_dropped: summary.dropped,
+    })
+}

@@ -53,6 +53,7 @@ use crate::gmm::AlignPrecision;
 use crate::linalg::Mat;
 use crate::metrics::{DepthGauge, LatencyHistogram, LatencySummary};
 use crate::obs::{self, Counter, ObsRegistry, RequestTrace, TraceOutcome};
+use crate::serve::capture::{Recorder, RequestKind};
 use crate::serve::cluster::health::{HealthAction, HealthSample, HealthState, HealthTracker};
 use crate::serve::{
     DurabilityMetrics, Engine, EngineMetrics, FeedOutcome, ModelBundle, Registry, ServeError,
@@ -299,6 +300,12 @@ pub struct Dispatcher {
     /// 2 quarantined), labeled by replica id, so an exported snapshot
     /// shows which replica an incident hit.
     health_gauges: Vec<Arc<DepthGauge>>,
+    /// Optional flight recorder: each routed request (the whole
+    /// failover loop, not per-hop) is offered to the capture log after
+    /// completion, off the request's critical path. Cluster-level
+    /// capture replaces engine-level capture — the replica engines see
+    /// a trace already installed and skip their own offer.
+    recorder: RwLock<Option<Arc<Recorder>>>,
 }
 
 impl Dispatcher {
@@ -389,8 +396,17 @@ impl Dispatcher {
             probes: obs.counter("cluster_probes_total", &[]),
             self_heals: obs.counter("cluster_self_heals_total", &[]),
             health_gauges,
+            recorder: RwLock::new(None),
             obs,
         })
+    }
+
+    /// Attach (or detach, with `None`) a flight recorder. Every routed
+    /// request — with its full failover span set — is offered to the
+    /// capture queue after completion; a slow or full sink drops
+    /// records (counted), never blocks a request thread.
+    pub fn set_recorder(&self, rec: Option<Arc<Recorder>>) {
+        *self.recorder.write().unwrap_or_else(|p| p.into_inner()) = rec;
     }
 
     /// The observability registry the cluster reports into.
@@ -427,7 +443,9 @@ impl Dispatcher {
     /// Route one extraction across the cluster (failover included).
     pub fn extract(&self, feats: &Mat) -> Result<Vec<f64>> {
         let t0 = Instant::now();
-        let iv = self.dispatch(|engine| engine.extract(feats))?;
+        let iv = self.dispatch_recorded(RequestKind::Extract, "", feats, |_| None, |engine| {
+            engine.extract(feats)
+        })?;
         self.extract_lat.record_duration(t0.elapsed());
         Ok(iv)
     }
@@ -436,7 +454,13 @@ impl Dispatcher {
     /// so the resulting profile is scorable on every replica at once.
     pub fn enroll(&self, speaker_id: &str, feats: &Mat) -> Result<u64> {
         let t0 = Instant::now();
-        let count = self.dispatch(|engine| engine.enroll(speaker_id, feats))?;
+        let count = self.dispatch_recorded(
+            RequestKind::Enroll,
+            speaker_id,
+            feats,
+            |count| Some(*count as f64),
+            |engine| engine.enroll(speaker_id, feats),
+        )?;
         self.enroll_lat.record_duration(t0.elapsed());
         Ok(count)
     }
@@ -444,7 +468,13 @@ impl Dispatcher {
     /// Route one verification across the cluster.
     pub fn verify(&self, speaker_id: &str, feats: &Mat) -> Result<VerifyOutcome> {
         let t0 = Instant::now();
-        let out = self.dispatch(|engine| engine.verify(speaker_id, feats))?;
+        let out = self.dispatch_recorded(
+            RequestKind::Verify,
+            speaker_id,
+            feats,
+            |out| Some(out.score),
+            |engine| engine.verify(speaker_id, feats),
+        )?;
         self.verify_lat.record_duration(t0.elapsed());
         Ok(out)
     }
@@ -562,6 +592,43 @@ impl Dispatcher {
     /// mismatch) would fail identically anywhere.
     fn dispatch<T>(&self, f: impl Fn(&Engine) -> Result<T>) -> Result<T> {
         self.dispatch_full(true, move |_, engine| f(engine))
+    }
+
+    /// [`Dispatcher::dispatch`] plus an offer to the attached flight
+    /// recorder (if any): one capture record per *routed request*, so
+    /// a rescued request appears once with its failover hops in the
+    /// span set, not once per attempt. The capture outcome is the
+    /// caller-visible one — what a replayed cluster must reproduce.
+    fn dispatch_recorded<T>(
+        &self,
+        kind: RequestKind,
+        speaker: &str,
+        feats: &Mat,
+        score_of: impl Fn(&T) -> Option<f64>,
+        f: impl Fn(&Engine) -> Result<T>,
+    ) -> Result<T> {
+        let rec = self.recorder.read().unwrap_or_else(|p| p.into_inner()).clone();
+        let trace = self.obs.mint();
+        let t0 = Instant::now();
+        let scope = trace.as_ref().map(|t| obs::enter(Arc::clone(t)));
+        let r = self.dispatch_attempts(true, trace.as_deref(), move |_, engine| f(engine));
+        drop(scope);
+        if let Some(t) = &trace {
+            self.obs.complete(t, TraceOutcome::of(&r));
+        }
+        if let Some(rec) = rec {
+            let score = r.as_ref().ok().and_then(&score_of);
+            rec.observe(
+                kind,
+                speaker,
+                feats,
+                TraceOutcome::of(&r),
+                score,
+                t0.elapsed(),
+                trace.as_deref(),
+            );
+        }
+        r
     }
 
     /// Like [`Dispatcher::dispatch`], but the operation also sees which

@@ -33,6 +33,7 @@ use crate::obs::{self, Counter, ObsRegistry, Stage, TraceOutcome};
 
 use super::batcher::{MicroBatcher, RequestToken};
 use super::bundle::{ModelBundle, ServeModel};
+use super::capture::{Recorder, RequestKind};
 use super::error::ServeError;
 use super::registry::{DurabilityMetrics, Registry};
 use super::session::{self, CloseReason, FeedOutcome, SessionManager, SessionState};
@@ -138,6 +139,11 @@ pub struct Engine {
     sessions: SessionManager,
     /// Early-exit policy + table shape (`[session]`).
     session_cfg: SessionConfig,
+    /// Optional flight recorder: when set, every one-shot request this
+    /// engine handles *directly* (not via a cluster dispatcher — those
+    /// are captured once, at the dispatcher) is offered to the capture
+    /// log after completion, off the request's critical path.
+    recorder: RwLock<Option<Arc<Recorder>>>,
     /// Requests that missed their response deadline
     /// (`serve_timeouts_total`).
     timeouts: Counter,
@@ -204,6 +210,7 @@ impl Engine {
             precision: opts.precision,
             sessions: SessionManager::new(&opts.session, &obs, &obs_label),
             session_cfg: opts.session.clone(),
+            recorder: RwLock::new(None),
             timeouts: obs.counter("serve_timeouts_total", &labels),
             extract_lat: obs.histogram("serve_extract_latency_seconds", &labels),
             enroll_lat: obs.histogram("serve_enroll_latency_seconds", &labels),
@@ -217,6 +224,14 @@ impl Engine {
     /// The observability registry this engine reports into.
     pub fn obs(&self) -> &Arc<ObsRegistry> {
         &self.obs
+    }
+
+    /// Attach (or detach, with `None`) a flight recorder. Captures
+    /// happen after a request completes and go through a bounded
+    /// channel, so a slow capture sink can drop records but can never
+    /// block or slow the request thread.
+    pub fn set_recorder(&self, rec: Option<Arc<Recorder>>) {
+        *self.recorder.write().unwrap() = rec;
     }
 
     /// Snapshot the current model.
@@ -376,9 +391,55 @@ impl Engine {
         r
     }
 
+    /// [`Engine::traced`] plus an offer to the attached flight
+    /// recorder (if any). Dispatcher-driven requests (a trace already
+    /// installed on this thread) skip capture here — the dispatcher
+    /// records them once, with the full cross-replica span set.
+    /// Capture still works with tracing disabled: the record simply
+    /// carries no per-stage spans.
+    fn traced_cap<T>(
+        &self,
+        kind: RequestKind,
+        speaker: &str,
+        feats: &Mat,
+        score_of: impl Fn(&T) -> Option<f64>,
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        if obs::current().is_some() {
+            return f();
+        }
+        let rec = self.recorder.read().unwrap().clone();
+        let Some(trace) = self.obs.mint() else {
+            let Some(rec) = rec else { return f() };
+            let t0 = Instant::now();
+            let r = f();
+            let score = r.as_ref().ok().and_then(&score_of);
+            rec.observe(kind, speaker, feats, TraceOutcome::of(&r), score, t0.elapsed(), None);
+            return r;
+        };
+        let t0 = Instant::now();
+        let scope = obs::enter(Arc::clone(&trace));
+        let r = f();
+        drop(scope);
+        self.obs.complete(&trace, TraceOutcome::of(&r));
+        if let Some(rec) = rec {
+            let score = r.as_ref().ok().and_then(&score_of);
+            rec.observe(
+                kind,
+                speaker,
+                feats,
+                TraceOutcome::of(&r),
+                score,
+                t0.elapsed(),
+                Some(&trace),
+            );
+        }
+        r
+    }
+
     /// Extract one i-vector for a feature matrix (frames × dim).
     pub fn extract(&self, feats: &Mat) -> Result<Vec<f64>> {
-        self.traced(|| {
+        self.traced_cap(RequestKind::Extract, "", feats, |_| None, || {
             let t0 = Instant::now();
             let model = self.model();
             let iv = self.extract_with(&model, feats)?;
@@ -392,14 +453,20 @@ impl Engine {
     /// profile is tagged with the model fingerprint, so enrollments
     /// never mix models across a hot swap.
     pub fn enroll(&self, speaker_id: &str, feats: &Mat) -> Result<u64> {
-        self.traced(|| {
-            let t0 = Instant::now();
-            let model = self.model();
-            let iv = self.extract_with(&model, feats)?;
-            let count = self.registry.enroll(speaker_id, &iv, model.fingerprint)?;
-            self.enroll_lat.record(t0.elapsed().as_secs_f64());
-            Ok(count)
-        })
+        self.traced_cap(
+            RequestKind::Enroll,
+            speaker_id,
+            feats,
+            |count| Some(*count as f64),
+            || {
+                let t0 = Instant::now();
+                let model = self.model();
+                let iv = self.extract_with(&model, feats)?;
+                let count = self.registry.enroll(speaker_id, &iv, model.fingerprint)?;
+                self.enroll_lat.record(t0.elapsed().as_secs_f64());
+                Ok(count)
+            },
+        )
     }
 
     /// Verify an utterance against an enrolled speaker. Refuses to
@@ -408,7 +475,7 @@ impl Engine {
     /// spaces are not comparable, so the mismatch is an error rather
     /// than a plausible-looking meaningless score.
     pub fn verify(&self, speaker_id: &str, feats: &Mat) -> Result<VerifyOutcome> {
-        self.traced(|| {
+        self.traced_cap(RequestKind::Verify, speaker_id, feats, |out| Some(out.score), || {
             let t0 = Instant::now();
             let model = self.model();
             let profile = self
@@ -1497,5 +1564,79 @@ mod tests {
         assert_ne!(sid2, sid3);
         assert_eq!(engine.metrics().session_evictions, 2);
         engine.session_close(sid3).unwrap();
+    }
+
+    /// Satellite acceptance (capture under overload): with workers
+    /// stalled and the queue saturated, shed and timed-out requests
+    /// land in the capture log with their *typed* outcome — the
+    /// corpus records what the engine actually did under pressure,
+    /// not just the happy path — and the recorder offer never blocks
+    /// admission: shed threads return on the submit deadline, not the
+    /// capture sink's schedule.
+    #[test]
+    fn capture_records_typed_outcomes_under_overload_without_blocking() {
+        use super::super::capture::{CaptureLog, RecorderOptions};
+        use super::super::registry::MemStorage;
+
+        let cfg = tiny_serve_config();
+        let traffic = tiny_traffic(&cfg, 1, 41);
+        let mut o = opts(2, 200, 1);
+        o.queue_cap = 1;
+        o.submit_timeout_ms = 20;
+        o.request_timeout_ms = 300;
+        let engine = Engine::new(shared_bundle().clone(), &o).unwrap();
+        let id = traffic.speaker_id(0);
+        engine.enroll(&id, &traffic.utterance(0, 0)).unwrap();
+
+        let store = MemStorage::new();
+        let log = CaptureLog::create(Box::new(store.clone()), engine.model().fingerprint)
+            .unwrap();
+        let recorder = Recorder::new(log, &RecorderOptions::default(), engine.obs());
+        engine.set_recorder(Some(Arc::clone(&recorder)));
+
+        engine.stall_workers(true);
+        let n = 6;
+        let results: Vec<(bool, Duration)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let engine = &engine;
+                    let traffic = &traffic;
+                    let id = &id;
+                    scope.spawn(move || {
+                        let t0 = Instant::now();
+                        let r = engine.verify(id, &traffic.utterance(0, i as u64 + 1));
+                        (r.is_err(), t0.elapsed())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        engine.stall_workers(false);
+        engine.set_recorder(None);
+        let summary = recorder.close();
+
+        // every request failed typed under the stall; the sheds came
+        // back on the admission deadline (20 ms + generous slack) —
+        // capture added no synchronous work to the request thread
+        assert!(results.iter().all(|(failed, _)| *failed));
+        let fast = results.iter().filter(|(_, d)| *d < Duration::from_millis(200)).count();
+        assert!(fast >= n - 1, "expected ≥{} shed fast, got {fast}", n - 1);
+        assert_eq!(summary.dropped, 0, "roomy queue: nothing should drop");
+        assert!(summary.write_error.is_none(), "{:?}", summary.write_error);
+
+        let replay = CaptureLog::load(&store).unwrap();
+        assert!(!replay.torn_tail);
+        assert!(replay
+            .records
+            .iter()
+            .any(|r| r.kind == RequestKind::Enroll && r.outcome == TraceOutcome::Ok));
+        let verifies: Vec<_> =
+            replay.records.iter().filter(|r| r.kind == RequestKind::Verify).collect();
+        assert_eq!(verifies.len(), n, "all overloaded verifies captured");
+        assert!(verifies.iter().all(|r| r.outcome != TraceOutcome::Ok && r.score.is_none()));
+        assert!(
+            verifies.iter().any(|r| r.outcome == TraceOutcome::Shed),
+            "queue cap 1 with {n} concurrent verifies must shed some typed"
+        );
     }
 }

@@ -39,7 +39,13 @@
 //!   early-exit thresholds that decide before the utterance ends;
 //! * [`bench`] — the load-replay harness behind `serve-bench` and the
 //!   `BENCH_2.json` serving report (its cluster sibling lives in
-//!   [`cluster::bench`] and writes `BENCH_5.json`).
+//!   [`cluster::bench`] and writes `BENCH_5.json`);
+//! * [`capture`] — the flight recorder: a durable, checksummed capture
+//!   log of live requests (sampled at the engine or dispatcher, never
+//!   on the request's critical path) and the deterministic replayer
+//!   that re-issues a captured corpus against a fresh engine, verifies
+//!   scores to 1e-10 when the bundle fingerprint matches, and writes
+//!   the `BENCH_10.json` regression report.
 //!
 //! Every layer reports through [`crate::obs`]: canonical named
 //! counters/histograms, per-request stage traces (admit-wait → align →
@@ -47,6 +53,7 @@
 //! enrollments), and the slow-trace ring the `stats` CLI command reads.
 
 pub mod bench;
+pub mod capture;
 pub mod cluster;
 mod batcher;
 mod bundle;
@@ -56,6 +63,7 @@ pub mod registry;
 pub mod session;
 
 pub use bundle::{ModelBundle, ServeModel, StatAccum};
+pub use capture::{CaptureLog, CaptureRecord, CaptureSummary, Recorder, RecorderOptions};
 pub use cluster::{ClusterMetrics, Dispatcher, HealthState, ReplicaMetrics};
 pub use engine::{Engine, EngineMetrics, VerifyOutcome};
 pub use error::ServeError;

@@ -31,7 +31,7 @@
 //! compaction that snapshots every shard. Volatile registries never
 //! touch the WAL lock and keep the fully sharded fast path.
 
-mod codec;
+pub(crate) mod codec;
 pub mod bench;
 mod durable;
 pub mod storage;

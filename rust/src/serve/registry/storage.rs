@@ -89,28 +89,51 @@ pub(crate) fn atomic_write_synced(path: &Path, bytes: &[u8]) -> Result<()> {
 /// directory. The WAL append handle is opened once (`O_APPEND`) and
 /// cached; `O_APPEND` writes land at the current end of file even after
 /// an out-of-band truncate, so compaction never has to reopen it.
+///
+/// Other append-only logs (the capture flight recorder) reuse this
+/// backend under their own file names via [`FileStorage::open_named`],
+/// so one durability implementation — and one fault-injection surface —
+/// covers every log the serving stack writes.
 pub struct FileStorage {
     dir: PathBuf,
+    wal_name: String,
+    snap_name: String,
     wal: Mutex<Option<std::fs::File>>,
 }
 
 impl FileStorage {
     /// Open (creating the directory if needed).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_named(dir, "registry.wal", "registry.snap")
+    }
+
+    /// Open with explicit file names inside `dir` — lets non-registry
+    /// logs (e.g. the capture log) share the backend without colliding
+    /// with a registry living in the same directory.
+    pub fn open_named(
+        dir: impl AsRef<Path>,
+        wal_name: impl Into<String>,
+        snap_name: impl Into<String>,
+    ) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
-            .with_context(|| format!("create registry directory {}", dir.display()))?;
-        Ok(Self { dir, wal: Mutex::new(None) })
+            .with_context(|| format!("create storage directory {}", dir.display()))?;
+        Ok(Self {
+            dir,
+            wal_name: wal_name.into(),
+            snap_name: snap_name.into(),
+            wal: Mutex::new(None),
+        })
     }
 
     /// Path of the append-only WAL inside the directory.
     pub fn wal_path(&self) -> PathBuf {
-        self.dir.join("registry.wal")
+        self.dir.join(&self.wal_name)
     }
 
     /// Path of the compacted snapshot inside the directory.
     pub fn snapshot_path(&self) -> PathBuf {
-        self.dir.join("registry.snap")
+        self.dir.join(&self.snap_name)
     }
 }
 
